@@ -1,0 +1,69 @@
+//! The §8 distributed setting: start the determinant service, run a
+//! client workload against it, and report the network overhead —
+//! the `O(n² + network_overhead)` term, measured.
+//!
+//! ```bash
+//! cargo run --release --example det_service
+//! ```
+
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use raddet::matrix::gen;
+use raddet::service::{Client, Server};
+use raddet::testkit::TestRng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // Server on an ephemeral port (in-process, loopback).
+    let coord = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Auto,
+        ..Default::default()
+    })?;
+    let handle = Server::new(coord).start("127.0.0.1:0")?;
+    let addr = handle.addr().to_string();
+    println!("service up on {addr}");
+
+    // Local coordinator for the no-network baseline.
+    let local = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Auto,
+        ..Default::default()
+    })?;
+
+    let mut client = Client::connect(&addr)?;
+    client.ping()?;
+
+    println!("\n{:<10} {:>12} {:>14} {:>14} {:>12}", "shape", "terms", "local", "via service", "overhead");
+    for (m, n) in [(3usize, 12usize), (4, 16), (5, 18), (6, 20)] {
+        let a = gen::uniform(&mut TestRng::from_seed((m * n) as u64), m, n, -1.0, 1.0);
+
+        // Warm both paths once: the first request per (m, batch) bucket
+        // pays the one-time XLA compile (the coordinator caches the
+        // dispatcher afterwards) — steady-state latency is what the §8
+        // network-overhead question is about.
+        let _ = local.radic_det(&a)?;
+        let _ = client.det(&a)?;
+
+        let t0 = Instant::now();
+        let want = local.radic_det(&a)?;
+        let local_time = t0.elapsed();
+
+        let reply = client.det(&a)?;
+        assert!(
+            (reply.det - want.det).abs() < 1e-9 * want.det.abs().max(1.0),
+            "service result diverged"
+        );
+        let overhead = reply.round_trip.saturating_sub(local_time);
+        println!(
+            "{:<10} {:>12} {:>14?} {:>14?} {:>12?}",
+            format!("{m}×{n}"),
+            reply.terms,
+            local_time,
+            reply.round_trip,
+            overhead
+        );
+    }
+
+    client.quit();
+    println!("\nrequests served: {}", handle.requests());
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: compute a Radić determinant through the full stack and
+//! cross-check every engine against the exact integer reference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::linalg::{radic_det_exact, radic_det_seq};
+use raddet::matrix::gen;
+use raddet::testkit::TestRng;
+
+fn main() -> anyhow::Result<()> {
+    // A 5×12 integer matrix: small enough to print, big enough to be
+    // non-trivial (C(12,5) = 792 Radić terms).
+    let ai = gen::integer(&mut TestRng::from_seed(2015), 5, 12, -9, 9);
+    let a = ai.map(|x| x as f64);
+    println!("matrix (5×12, integer entries):");
+    for r in 0..ai.rows() {
+        println!("  {:?}", ai.row(r));
+    }
+
+    // Ground truth: exact integer enumeration (Bareiss, no rounding).
+    let exact = radic_det_exact(&ai)?;
+    println!("\nexact integer Radić det  = {exact}");
+
+    // Sequential float baseline.
+    let seq = radic_det_seq(&a)?;
+    println!("sequential (LU, Neumaier) = {seq:.6}");
+
+    // Parallel, CPU engine.
+    let cpu = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        ..Default::default()
+    })?;
+    let out = cpu.radic_det(&a)?;
+    println!(
+        "parallel cpu-lu           = {:.6}   [{}]",
+        out.det,
+        out.metrics.render()
+    );
+
+    // Parallel, XLA engine (AOT JAX/Pallas artifact via PJRT) — the
+    // three-layer path. Auto falls back to CPU if artifacts are absent.
+    let xla = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Auto,
+        ..Default::default()
+    })?;
+    let out = xla.radic_det(&a)?;
+    println!(
+        "parallel {}        = {:.6}   [{}]",
+        out.engine,
+        out.det,
+        out.metrics.render()
+    );
+
+    let err = (out.det - exact as f64).abs() / (exact as f64).abs().max(1.0);
+    println!("\nrelative error vs exact: {err:.3e}");
+    assert!(err < 1e-9, "engines disagree with the exact reference");
+    println!("all engines agree ✓");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT pipeline: lower the L2 graph to HLO *text* artifacts for the rust
+runtime.
+
+Interchange format is HLO text, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized per (m, B, dtype) bucket; the manifest is
+a TSV (not JSON — no serde offline on the rust side, and TSV keeps the
+parser trivial):
+
+    name  m  batch  dtype  file
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import make_fn  # noqa: E402
+
+# (m, B) buckets shipped by `make artifacts`. m values cover the paper's
+# running example (m=5, n=8) plus the bench sweep; B=64 suits low-latency
+# service batches, B=256 the throughput path.
+BUCKETS = [(m, b) for m in (2, 3, 4, 5, 6, 8) for b in (64, 256)]
+DTYPES = {"f64": jnp.float64, "f32": jnp.float32}
+# f32 only for m=4: enough to prove the dtype axis without doubling
+# artifact count.
+F32_MS = (4,)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(m: int, batch: int, dtype_name: str) -> str:
+    dtype = DTYPES[dtype_name]
+    subs = jax.ShapeDtypeStruct((batch, m, m), dtype)
+    signs = jax.ShapeDtypeStruct((batch,), dtype)
+    lowered = jax.jit(make_fn()).lower(subs, signs)
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for m, batch in BUCKETS:
+        dtypes = ["f64"] + (["f32"] if m in F32_MS else [])
+        for dtype_name in dtypes:
+            name = f"radic_partial_m{m}_b{batch}_{dtype_name}"
+            fname = f"{name}.hlo.txt"
+            text = lower_bucket(m, batch, dtype_name)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            rows.append((name, m, batch, dtype_name, fname))
+            print(f"  wrote {fname} ({len(text)} chars)")
+    # Manifest last: its presence marks a complete artifact set (make
+    # uses it as the stamp file).
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("name\tm\tbatch\tdtype\tfile\n")
+        for row in rows:
+            f.write("\t".join(str(c) for c in row) + "\n")
+    print(f"wrote manifest.tsv ({len(rows)} artifacts)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

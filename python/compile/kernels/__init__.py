@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for raddet.
+
+`batched_det` is the compute hot-spot: determinants of a batch of m x m
+column-submatrices (the inner engine that plays the role of ref [7]'s
+O(m) parallel square-matrix determinant in the paper's PRAM analysis).
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and
+CPU-deployment) path; the TPU mapping is documented in DESIGN.md
+SS Hardware-Adaptation.
+"""
+
+from .batched_det import batched_det, DEFAULT_TILE  # noqa: F401

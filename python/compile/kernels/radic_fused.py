@@ -1,0 +1,57 @@
+"""Fusion ablation kernel: batched determinant *and* the signed partial
+sum inside one Pallas call.
+
+The shipped artifact (`model.radic_partial`) computes dets in the kernel
+and the sign-dot in plain XLA ops, trusting XLA to fuse. This variant
+moves the reduction into the kernel itself so the per-grid-step partial
+is accumulated in VMEM and only a scalar per tile leaves the kernel —
+on real TPU this trades an HBM round-trip of the dets vector for a tiny
+cross-tile reduction. `python/tests/test_fused.py` proves the two
+variants are numerically identical; DESIGN.md §Perf discusses when each
+wins (the unfused variant is shipped because the coordinator *wants*
+the per-lane dets for introspection and the dets vector is small).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .batched_det import DEFAULT_TILE, _det_block
+
+
+def _fused_kernel(subs_ref, signs_ref, partials_ref, dets_ref, *, m, dtype):
+    dets = _det_block(subs_ref[...], m, dtype)
+    dets_ref[...] = dets
+    # Per-tile signed partial: one scalar per grid step.
+    partials_ref[...] = jnp.sum(dets * signs_ref[...])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def radic_partial_fused(subs, signs, tile=DEFAULT_TILE):
+    """(partial_sum, dets) with the sign-dot fused into the kernel."""
+    b, m, m2 = subs.shape
+    assert m == m2
+    tb = min(tile, b)
+    assert b % tb == 0
+    dtype = subs.dtype
+    grid = b // tb
+    partials, dets = pl.pallas_call(
+        functools.partial(_fused_kernel, m=m, dtype=dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tb, m, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), dtype),
+            jax.ShapeDtypeStruct((b,), dtype),
+        ],
+        interpret=True,
+    )(subs, signs)
+    return jnp.sum(partials), dets

@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the L2 graph.
+
+Three independent references:
+
+  * ``det_ref``        — jnp.linalg.det on the batch (LAPACK-backed).
+  * ``det_unrolled``   — a from-scratch unrolled LU det in plain jnp,
+                         structurally independent of both the kernel and
+                         LAPACK (catches convention bugs the other two
+                         could share).
+  * ``radic_det_ref``  — full Radic determinant (Definition 3) by explicit
+                         itertools enumeration; the end-to-end oracle for
+                         the L2 graph and the cross-language sign-convention
+                         anchor for the rust tests.
+"""
+
+import itertools
+
+import jax.numpy as jnp
+
+
+def det_ref(subs):
+    """LAPACK-backed batched determinant, (B, m, m) -> (B,)."""
+    return jnp.linalg.det(subs)
+
+
+def det_unrolled(subs):
+    """From-scratch batched LU det in plain jnp (partial pivoting).
+
+    Mirrors the algorithm of the Pallas kernel but is written against
+    jnp.take_along_axis / explicit index arithmetic rather than one-hot
+    selects, so a bug in the kernel's select trickery cannot hide here.
+    """
+    b, m, _ = subs.shape
+    x = subs
+    det = jnp.ones((b,), subs.dtype)
+    rows = jnp.arange(m)
+    for k in range(m):
+        mag = jnp.where(rows[None, :] >= k, jnp.abs(x[:, :, k]), -1.0)
+        p = jnp.argmax(mag, axis=1)
+        # Swap permutation: position k reads row p, position p reads row k.
+        perm = jnp.tile(rows[None, :], (b, 1))
+        perm = perm.at[:, k].set(p)
+        perm = jnp.where((rows[None, :] == p[:, None]) & (rows[None, :] != k), k, perm)
+        x = jnp.take_along_axis(x, perm[:, :, None], axis=1)
+        det = det * jnp.where(p == k, 1.0, -1.0).astype(subs.dtype)
+        piv = x[:, k, k]
+        det = det * piv
+        safe = jnp.where(piv == 0, 1.0, piv).astype(subs.dtype)
+        f = jnp.where(rows[None, :] > k, x[:, :, k] / safe[:, None], 0.0).astype(subs.dtype)
+        x = x - f[:, :, None] * x[:, k, :][:, None, :]
+    return det
+
+
+def radic_sign(cols_1based, m):
+    """(-1)^(r+s) with r = m(m+1)/2, s = sum of 1-based column indices."""
+    r = m * (m + 1) // 2
+    s = sum(cols_1based)
+    return -1.0 if (r + s) % 2 else 1.0
+
+
+def radic_det_ref(a):
+    """Radic's Definition 3 by brute-force enumeration. a: (m, n), m <= n."""
+    m, n = a.shape
+    if m > n:
+        return jnp.zeros((), a.dtype)
+    total = jnp.zeros((), a.dtype)
+    for combo in itertools.combinations(range(n), m):
+        sub = a[:, list(combo)]
+        sign = radic_sign([c + 1 for c in combo], m)
+        total = total + sign * jnp.linalg.det(sub)
+    return total
+
+
+def radic_partial_ref(subs, signs):
+    """Reference for the L2 graph output pair."""
+    dets = det_ref(subs)
+    return jnp.sum(dets * signs), dets

@@ -1,0 +1,37 @@
+"""Layer-2 JAX graph: one Radic partial sum over a batch of submatrices.
+
+The AOT artifact computes, for a worker-supplied batch,
+
+    radic_partial(subs[B, m, m], signs[B]) -> (sum_b signs[b] * det(subs[b]),
+                                               dets[B])
+
+The rust coordinator (L3) gathers the column-submatrices and computes the
+(-1)^(r+s) signs — both are O(B*m^2) memcpy/parity work — so this graph
+depends only on (m, B, dtype), never on n. Padding lanes are sent as
+identity matrices with sign 0 and thus contribute exactly 0 to the sum.
+
+`dets` is returned alongside the partial so the coordinator can expose
+per-submatrix determinants (service introspection, retrieval app) without
+a second artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.batched_det import batched_det, DEFAULT_TILE
+
+
+def radic_partial(subs, signs, *, tile=DEFAULT_TILE):
+    """Signed partial sum of batched determinants (the L2 entry point)."""
+    dets = batched_det(subs, tile=tile)
+    partial = jnp.sum(dets * signs)
+    return partial, dets
+
+
+def make_fn(tile=DEFAULT_TILE):
+    """Return a tuple-returning closure suitable for jax.jit(...).lower."""
+
+    def fn(subs, signs):
+        return radic_partial(subs, signs, tile=tile)
+
+    return fn

@@ -1,0 +1,5 @@
+"""Enable x64 before any test imports jax-dependent modules."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

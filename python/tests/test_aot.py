@@ -1,0 +1,60 @@
+"""AOT pipeline sanity: lowering is deterministic, text-format, and the
+manifest covers every shipped bucket."""
+
+import os
+
+import pytest
+
+from compile.aot import BUCKETS, DTYPES, F32_MS, lower_bucket
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowering_is_hlo_text():
+    text = lower_bucket(3, 64, "f64")
+    assert text.startswith("HloModule")
+    assert "f64[64,3,3]" in text
+    assert "f64[64]" in text
+
+
+def test_lowering_deterministic():
+    assert lower_bucket(2, 64, "f64") == lower_bucket(2, 64, "f64")
+
+
+def test_f32_bucket_dtype():
+    text = lower_bucket(4, 64, "f32")
+    assert "f32[64,4,4]" in text
+    assert "f64" not in text.split("entry_computation_layout")[1].split("\n")[0]
+
+
+def test_output_is_pair():
+    """Entry layout must be (scalar partial, per-lane dets) tuple."""
+    text = lower_bucket(5, 64, "f64")
+    header = text.split("\n", 1)[0]
+    assert "->(f64[],f64[64]" in header.replace(" ", "")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.tsv")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_complete():
+    with open(os.path.join(ART, "manifest.tsv")) as f:
+        lines = f.read().strip().split("\n")
+    assert lines[0] == "name\tm\tbatch\tdtype\tfile"
+    rows = [l.split("\t") for l in lines[1:]]
+    names = {r[0] for r in rows}
+    for m, b in BUCKETS:
+        assert f"radic_partial_m{m}_b{b}_f64" in names
+        if m in F32_MS:
+            assert f"radic_partial_m{m}_b{b}_f32" in names
+    for r in rows:
+        path = os.path.join(ART, r[4])
+        assert os.path.exists(path), f"missing artifact file {r[4]}"
+        with open(path) as f:
+            assert f.read(9) == "HloModule"
+
+
+def test_unknown_dtype_rejected():
+    with pytest.raises(KeyError):
+        lower_bucket(3, 64, "f16")

@@ -1,0 +1,64 @@
+//! Bench: sequential vs coordinator crossover — at what job size does
+//! the parallel machinery (threads, batching, chunk setup) amortize?
+//!
+//! The paper's §7 concedes that parallelism has overhead (“in most
+//! cases, increasing the number of processors does not increase
+//! productivity”); this bench locates that boundary on this testbed.
+
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::combin::combination_count;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::linalg::radic_det_seq;
+use raddet::matrix::gen;
+use raddet::testkit::TestRng;
+
+fn main() {
+    let cfg = BenchConfig { samples: 8, ..Default::default() };
+    println!("## sequential vs coordinator crossover (cpu-lu)\n");
+
+    let workers = std::thread::available_parallelism().map_or(2, |p| p.get()).max(2);
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 256,
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut table = Table::new(&[
+        "m", "n", "terms", "sequential", "coordinator", "ratio",
+    ]);
+    // Sweep job sizes from trivial to ~1M terms.
+    for &(m, n) in &[
+        (3usize, 8usize), // 56
+        (3, 12),          // 220
+        (4, 14),          // 1001
+        (4, 18),          // 3060
+        (5, 20),          // 15504
+        (5, 24),          // 42504
+        (6, 24),          // 134596
+        (6, 28),          // 376740
+        (7, 28),          // 1184040
+    ] {
+        let a = gen::uniform(&mut TestRng::from_seed((m * 100 + n) as u64), m, n, -1.0, 1.0);
+        let terms = combination_count(n as u64, m as u64).unwrap();
+
+        let seq = bench(&cfg, || radic_det_seq(&a).unwrap());
+        let par = bench(&cfg, || coord.radic_det(&a).unwrap().det);
+
+        table.row(&[
+            m.to_string(),
+            n.to_string(),
+            terms.to_string(),
+            fmt_time(seq.median),
+            fmt_time(par.median),
+            format!("{:.2}×", seq.median / par.median),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\n(ratio > 1 ⇒ coordinator wins; with {workers} workers on this testbed the\n\
+         crossover marks where thread+batch setup amortizes)"
+    );
+}

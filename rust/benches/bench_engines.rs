@@ -1,0 +1,105 @@
+//! Bench: determinant engines head-to-head — per-batch latency and
+//! terms/second for the pure-rust LU engine vs the AOT JAX/Pallas
+//! graph on PJRT, across the shipped m-buckets, plus the inner
+//! square-det algorithms (LU vs Laplace vs Bareiss) for context.
+//!
+//! Note on expectations: the Pallas kernel was lowered with
+//! `interpret=True` (the CPU PJRT plugin cannot run Mosaic custom
+//! calls), so the XLA numbers here measure *graph dispatch + interpret
+//! overhead*, not TPU performance — the structural (VMEM/roofline)
+//! analysis lives in DESIGN.md §Perf.
+
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::coordinator::batcher::BatchBuilder;
+use raddet::coordinator::engine::{CpuEngine, DetEngine};
+use raddet::linalg::{det_bareiss, det_laplace, det_lu};
+use raddet::matrix::gen;
+use raddet::runtime::{resolve_artifact_dir, Dtype, Manifest, XlaSession};
+use raddet::testkit::TestRng;
+
+fn main() {
+    let cfg = BenchConfig { samples: 12, ..Default::default() };
+
+    println!("## inner square-determinant algorithms (per det, m×m)\n");
+    let mut t0 = Table::new(&["m", "LU", "Laplace", "Bareiss(exact)"]);
+    let mut rng = TestRng::from_seed(1);
+    for m in [2usize, 4, 6, 8] {
+        let a = gen::uniform(&mut rng, m, m, -1.0, 1.0);
+        let ai = gen::integer(&mut rng, m, m, -9, 9);
+        let lu = bench(&cfg, || det_lu(a.data(), m));
+        let lap = if m <= 8 {
+            bench(&cfg, || det_laplace(a.data(), m)).median
+        } else {
+            f64::NAN
+        };
+        let bar = bench(&cfg, || det_bareiss(ai.data(), m).unwrap());
+        t0.row(&[
+            m.to_string(),
+            fmt_time(lu.median),
+            fmt_time(lap),
+            fmt_time(bar.median),
+        ]);
+    }
+    print!("{}", t0.render());
+
+    println!("\n## batched engines (batch=256 lanes incl. padding)\n");
+    let manifest = resolve_artifact_dir(None).map(|d| Manifest::load(&d).unwrap());
+    if manifest.is_none() {
+        eprintln!("(artifacts not built — xla rows skipped)");
+    }
+    let session = manifest.as_ref().map(|_| XlaSession::cpu().unwrap());
+
+    let mut t1 = Table::new(&[
+        "m", "engine", "batch", "per batch", "Mterms/s",
+    ]);
+    for m in [2usize, 4, 6, 8] {
+        // A shared workload: ~full batch of gathered submatrices.
+        let n = m + 8;
+        let a = gen::uniform(&mut TestRng::from_seed(m as u64), m, n, -1.0, 1.0);
+        let mut builder = BatchBuilder::new(m, 256);
+        let mut cols: Vec<u32> = (1..=m as u32).collect();
+        while !builder.is_full() {
+            builder.push(&a, &cols);
+            if !raddet::combin::successor(&mut cols, n as u64) {
+                break;
+            }
+        }
+        let (subs, signs, _) = builder.finalize();
+        let (subs, signs) = (subs.to_vec(), signs.to_vec());
+
+        let mut cpu = CpuEngine::new(m, 256);
+        // Clone per sample: the engine consumes the batch in place (the
+        // clone cost is reported separately below the table).
+        let mut scratch = subs.clone();
+        let s = bench(&cfg, || {
+            scratch.copy_from_slice(&subs);
+            cpu.run_batch(&mut scratch, &signs).unwrap().partial
+        });
+        t1.row(&[
+            m.to_string(),
+            "cpu-lu".into(),
+            "256".into(),
+            fmt_time(s.median),
+            format!("{:.2}", 256.0 / s.median / 1e6),
+        ]);
+
+        if let (Some(man), Some(sess)) = (&manifest, &session) {
+            let spec = man.find(m, Dtype::F64, 256).unwrap();
+            let exe = sess.load(spec).unwrap();
+            // exe.batch() may be 256; resize buffers if a smaller bucket
+            // was chosen.
+            if exe.batch() == 256 {
+                let s = bench(&cfg, || exe.run(&subs, &signs).unwrap().partial);
+                t1.row(&[
+                    m.to_string(),
+                    "xla-pjrt".into(),
+                    "256".into(),
+                    fmt_time(s.median),
+                    format!("{:.2}", 256.0 / s.median / 1e6),
+                ]);
+            }
+        }
+    }
+    print!("{}", t1.render());
+    println!("\n(xla = interpret-mode Pallas via PJRT: measures dispatch overhead, not TPU perf)");
+}

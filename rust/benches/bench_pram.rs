@@ -1,0 +1,33 @@
+//! Bench: the §6 complexity table, measured on the PRAM cost-model
+//! simulator — CRCW/CREW/EREW critical-path steps across a problem
+//! sweep, plus the O(n²) flatness fit.
+
+use raddet::bench::{bench, fmt_time, BenchConfig};
+use raddet::pram::{analysis, section6_table, MemPolicy, PramMachine};
+
+fn main() {
+    println!("## §6 PRAM complexity table (measured critical-path steps)\n");
+    let problems = [(8u64, 5u64), (12, 6), (16, 8), (20, 10), (24, 12), (28, 14)];
+    let rows = section6_table(&problems).unwrap();
+    print!("{}", analysis::render(&rows));
+
+    println!("\n## O(n²) fit (EREW, m = n/2) — time/n² must stay flat\n");
+    for n in [8u64, 12, 16, 20, 24, 28, 32] {
+        let r = PramMachine::new(MemPolicy::Erew).simulate(n, n / 2).unwrap();
+        println!(
+            "n={n:<3} C={:<14.3e} time={:<7} time/n² = {:.3}",
+            r.groups as f64,
+            r.time(),
+            r.time() as f64 / (n * n) as f64
+        );
+    }
+
+    println!("\n## simulator throughput (it measures real unrank walks)\n");
+    let cfg = BenchConfig { samples: 8, ..Default::default() };
+    for &(n, m) in &[(16u64, 8u64), (24, 12)] {
+        let s = bench(&cfg, || {
+            PramMachine::new(MemPolicy::Crew).simulate(n, m).unwrap().time()
+        });
+        println!("simulate({n},{m}): {}", fmt_time(s.median));
+    }
+}

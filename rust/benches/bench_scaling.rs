@@ -1,0 +1,98 @@
+//! Bench: strong scaling of the §5 parallel decomposition — wall-clock
+//! speedup/efficiency vs worker count, static vs work-stealing.
+//!
+//! TESTBED NOTE: this container exposes **1 CPU core**, so thread-level
+//! speedup is hardware-gated at ~1× (threads time-slice one core). The
+//! mechanical claims are still validated here — exact work cover,
+//! worker-count-independent results, balance — while the *complexity*
+//! side of the paper's parallel claim is reproduced on the PRAM
+//! simulator (bench_pram), per DESIGN.md §2 substitution 1.
+
+use raddet::bench::{fmt_time, Table};
+use raddet::combin::combination_count;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::matrix::gen;
+use raddet::testkit::TestRng;
+
+fn run(workers: usize, schedule: Schedule, a: &raddet::matrix::MatF64) -> (f64, f64, f64) {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        engine: EngineKind::Cpu,
+        schedule,
+        batch: 256,
+        ..Default::default()
+    })
+    .unwrap();
+    // Best-of-3 to damp scheduler noise.
+    let mut best = f64::MAX;
+    let mut det = 0.0;
+    let mut balance = 1.0;
+    for _ in 0..3 {
+        let out = coord.radic_det(a).unwrap();
+        let secs = out.metrics.elapsed.as_secs_f64();
+        if secs < best {
+            best = secs;
+            det = out.det;
+            balance = out.metrics.balance();
+        }
+    }
+    (best, det, balance)
+}
+
+fn main() {
+    let (m, n) = (6usize, 24usize);
+    let total = combination_count(n as u64, m as u64).unwrap();
+    println!(
+        "## strong scaling — {m}×{n} ({total} terms), cpu-lu engine\n"
+    );
+    println!(
+        "(testbed: {} hardware core(s) — see note in the bench source)\n",
+        std::thread::available_parallelism().map_or(1, |p| p.get())
+    );
+    let a = gen::uniform(&mut TestRng::from_seed(99), m, n, -1.0, 1.0);
+
+    let (t1, base_det, _) = run(1, Schedule::Static, &a);
+    let mut table = Table::new(&[
+        "workers", "schedule", "time", "speedup", "efficiency", "balance", "agree",
+    ]);
+    for &w in &[1usize, 2, 4, 8] {
+        for (schedule, name) in [
+            (Schedule::Static, "static"),
+            (Schedule::WorkStealing { grain: 2048 }, "steal"),
+        ] {
+            let (t, det, balance) = run(w, schedule, &a);
+            let agree = (det - base_det).abs() < 1e-9 * base_det.abs().max(1.0);
+            assert!(agree, "worker count changed the result");
+            table.row(&[
+                w.to_string(),
+                name.into(),
+                fmt_time(t),
+                format!("{:.2}×", t1 / t),
+                format!("{:.0}%", 100.0 * t1 / t / w as f64),
+                format!("{balance:.2}"),
+                "✓".into(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+
+    println!("\n## granularity ablation (work-stealing grain, 4 workers)\n");
+    let mut t2 = Table::new(&["grain", "time", "chunks claimed"]);
+    for grain in [64u64, 512, 4096, 32768] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 4,
+            engine: EngineKind::Cpu,
+            schedule: Schedule::WorkStealing { grain },
+            batch: 256,
+            ..Default::default()
+        })
+        .unwrap();
+        let out = coord.radic_det(&a).unwrap();
+        t2.row(&[
+            grain.to_string(),
+            fmt_time(out.metrics.elapsed.as_secs_f64()),
+            out.metrics.total().chunks.to_string(),
+        ]);
+    }
+    print!("{}", t2.render());
+}

@@ -1,0 +1,59 @@
+//! Bench: the §6/§8 `network_overhead` term — determinant latency
+//! in-process vs through the TCP service (loopback), per job size.
+
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::combin::combination_count;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use raddet::matrix::gen;
+use raddet::service::{Client, Server};
+use raddet::testkit::TestRng;
+
+fn main() {
+    let cfg = BenchConfig { samples: 10, ..Default::default() };
+    let mk = || {
+        Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            engine: EngineKind::Cpu,
+            batch: 256,
+            ..Default::default()
+        })
+        .unwrap()
+    };
+
+    let handle = Server::new(mk()).start("127.0.0.1:0").unwrap();
+    let addr = handle.addr().to_string();
+    let local = mk();
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    println!("## service overhead (loopback TCP, line protocol)\n");
+    let mut table = Table::new(&[
+        "shape", "terms", "payload", "in-process", "via service", "overhead", "overhead/req",
+    ]);
+    for &(m, n) in &[(2usize, 8usize), (3, 12), (4, 16), (5, 18), (6, 20)] {
+        let a = gen::uniform(&mut TestRng::from_seed((m + n) as u64), m, n, -1.0, 1.0);
+        let terms = combination_count(n as u64, m as u64).unwrap();
+        let payload = raddet::service::Request::Det(a.clone()).encode().len();
+
+        let inproc = bench(&cfg, || local.radic_det(&a).unwrap().det);
+        let served = bench(&cfg, || client.det(&a).unwrap().det);
+        let overhead = served.median - inproc.median;
+
+        table.row(&[
+            format!("{m}×{n}"),
+            terms.to_string(),
+            format!("{payload} B"),
+            fmt_time(inproc.median),
+            fmt_time(served.median),
+            fmt_time(overhead.max(0.0)),
+            format!("{:.0}%", 100.0 * overhead.max(0.0) / served.median),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\n(the paper's O(n² + network_overhead): overhead is flat per request —\n\
+         dominated by serialization + loopback RTT, amortized as jobs grow)"
+    );
+    client.quit();
+    handle.stop();
+}

@@ -1,0 +1,102 @@
+//! Bench: the paper's core complexity claim — unranking one dictionary
+//! element costs O(m·(n−m)), independent of C(n,m).
+//!
+//! Sweeps (m, n−m), measures ns per unrank at random ranks, and prints
+//! the fitted cost per unit of m·(n−m), which must stay flat while
+//! C(n,m) grows by orders of magnitude. Also compares the per-element
+//! cost of the §5 chunk walk (one unrank + successors) against
+//! unranking every element — the reason granularity chunks exist.
+
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::combin::{combination_count, unrank_into, CombinationStream, PascalTable};
+use raddet::testkit::TestRng;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!("## bench_unrank — O(m(n−m)) per element\n");
+
+    let mut table = Table::new(&[
+        "n", "m", "m(n−m)", "C(n,m)", "ns/unrank", "ns per m(n−m)",
+    ]);
+    let sweep: &[(u64, u64)] = &[
+        (16, 8),
+        (24, 12),
+        (32, 8),
+        (32, 16),
+        (48, 24),
+        (64, 16),
+        (64, 32),
+        (96, 48),
+        (128, 16),
+        (120, 60), // C(120,60) ≈ 1e35 — near the u128 ceiling
+    ];
+    for &(n, m) in sweep {
+        let total = combination_count(n, m).unwrap();
+        let ptable = PascalTable::new(n, m).unwrap();
+        let mut rng = TestRng::from_seed(n * 1000 + m);
+        // Pre-draw ranks so RNG cost stays out of the loop.
+        let ranks: Vec<u128> = (0..256).map(|_| rng.u128_below(total)).collect();
+        let mut buf = vec![0u32; m as usize];
+        let mut i = 0;
+        let stats = bench(&cfg, || {
+            i = (i + 1) % ranks.len();
+            unrank_into(&ptable, ranks[i], &mut buf).unwrap();
+            buf[0]
+        });
+        let ns = stats.median * 1e9;
+        let work = (m * (n - m)) as f64;
+        table.row(&[
+            n.to_string(),
+            m.to_string(),
+            format!("{}", m * (n - m)),
+            format!("{total:.2e}"),
+            format!("{ns:.0}"),
+            format!("{:.2}", ns / work),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\n(the last column flat ⇒ O(m(n−m)) confirmed; C(n,m) spans ~20 orders)\n");
+
+    // Chunk-walk amortization: per-element cost of stream vs unrank-all.
+    println!("## §5 chunk walk: successor amortization\n");
+    let mut t2 = Table::new(&["n", "m", "chunk", "ns/elem (stream)", "ns/elem (unrank-all)", "ratio"]);
+    for &(n, m, chunk) in &[(32u64, 8u64, 4096u128), (64, 16, 4096), (96, 24, 4096)] {
+        let ptable = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap();
+        let start = total / 3;
+
+        let stream_stats = bench(&BenchConfig { samples: 10, ..cfg }, || {
+            let mut s = CombinationStream::new(&ptable, start, chunk).unwrap();
+            let mut acc = 0u32;
+            while let Some(c) = s.next_ref() {
+                acc ^= c[0];
+            }
+            acc
+        });
+        let mut buf = vec![0u32; m as usize];
+        let unrank_stats = bench(&BenchConfig { samples: 10, ..cfg }, || {
+            let mut acc = 0u32;
+            for q in start..start + chunk {
+                unrank_into(&ptable, q, &mut buf).unwrap();
+                acc ^= buf[0];
+            }
+            acc
+        });
+        let per_stream = stream_stats.median / chunk as f64;
+        let per_unrank = unrank_stats.median / chunk as f64;
+        t2.row(&[
+            n.to_string(),
+            m.to_string(),
+            chunk.to_string(),
+            format!("{:.1}", per_stream * 1e9),
+            format!("{:.1}", per_unrank * 1e9),
+            format!("{:.1}×", per_unrank / per_stream),
+        ]);
+    }
+    print!("{}", t2.render());
+    println!("\ntable-build cost (paid once per job):");
+    for &(n, m) in &[(64u64, 32u64), (128, 64)] {
+        let s = bench(&cfg, || PascalTable::new(n, m).unwrap().at(0, 0));
+        println!("  PascalTable::new({n},{m}): {}", fmt_time(s.median));
+    }
+}

@@ -1,0 +1,10 @@
+//! Application layer — the paper's motivating use-case.
+//!
+//! §1/§7 motivate the whole effort with machine vision: “the
+//! determinant of non-square matrix is used in retrieving images with
+//! different sizes” (refs \[8\], [20–23]). [`retrieval`] implements that
+//! pipeline end-to-end on synthetic images.
+
+pub mod retrieval;
+
+pub use retrieval::{ImageStore, RadicSignature, SyntheticImage};

@@ -1,0 +1,173 @@
+//! Criterion-lite — the in-crate benchmark harness (criterion is not
+//! available offline; see DESIGN.md §2 substitution 3).
+//!
+//! the bench runner runs warmup + timed samples of a closure and reports
+//! robust statistics ([`stats`]); [`Table`] renders aligned markdown so
+//! every bench binary prints rows that paste directly into
+//! EXPERIMENTS.md.
+
+pub mod stats;
+
+pub use stats::Stats;
+
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup: u32,
+    /// Measured samples.
+    pub samples: u32,
+    /// Minimum total measured time; samples are added until reached.
+    pub min_time: Duration,
+    /// Hard cap on measurement time per benchmark.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            samples: 20,
+            min_time: Duration::from_millis(200),
+            max_time: Duration::from_secs(20),
+        }
+    }
+}
+
+/// A quick config for slow end-to-end benches.
+impl BenchConfig {
+    /// Few samples, generous cap — end-to-end jobs.
+    pub fn slow() -> Self {
+        Self {
+            warmup: 1,
+            samples: 5,
+            min_time: Duration::from_millis(50),
+            max_time: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Run one benchmark: `f` is called per sample and may return a value
+/// (black-boxed to defeat DCE). Returns per-sample durations.
+pub fn bench<T, F: FnMut() -> T>(cfg: &BenchConfig, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup {
+        std::hint::black_box(f());
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.samples as usize);
+    while (samples.len() < cfg.samples as usize || started.elapsed() < cfg.min_time)
+        && started.elapsed() < cfg.max_time
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 4 * cfg.samples as usize {
+            break; // enough statistics even if min_time not reached
+        }
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Aligned markdown table builder for bench output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as aligned markdown.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..cols {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig {
+            warmup: 1,
+            samples: 5,
+            min_time: Duration::from_millis(1),
+            max_time: Duration::from_secs(5),
+        };
+        let mut count = 0u64;
+        let stats = bench(&cfg, || {
+            count += 1;
+            count
+        });
+        assert!(stats.n >= 5);
+        assert!(stats.median >= 0.0);
+        assert!(count >= 6, "warmup + samples");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| name   | value |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Robust sample statistics for the bench harness.
+
+/// Summary statistics over timing samples (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    /// Sample count.
+    pub n: usize,
+    /// Median.
+    pub median: f64,
+    /// Mean.
+    pub mean: f64,
+    /// 10th percentile.
+    pub p10: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+}
+
+impl Stats {
+    /// Compute from raw samples.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+        let n = s.len();
+        let median = percentile_sorted(&s, 50.0);
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).expect("finite devs"));
+        Self {
+            n,
+            median,
+            mean,
+            p10: percentile_sorted(&s, 10.0),
+            p90: percentile_sorted(&s, 90.0),
+            min: s[0],
+            max: s[n - 1],
+            mad: percentile_sorted(&devs, 50.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 10.0), 1.0);
+    }
+
+    #[test]
+    fn unordered_input_ok() {
+        let s = Stats::from_samples(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let s = Stats::from_samples(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn robust_to_outlier() {
+        let s = Stats::from_samples(&[1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(s.median, 1.0);
+        assert!(s.mean > 10.0, "mean is dragged, median is not");
+    }
+}

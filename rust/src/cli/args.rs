@@ -1,0 +1,140 @@
+//! Minimal flag parser (clap is unavailable offline).
+//!
+//! Grammar: `raddet <command> [--key value]… [--flag]…`. Values never
+//! start with `--`; unknown keys are an error so typos fail loudly.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional token).
+    pub command: String,
+    /// `--key value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Config("missing command (try `raddet help`)".into()))?;
+        if args.command.starts_with("--") {
+            return Err(Error::Config(format!(
+                "expected a command before {:?}",
+                args.command
+            )));
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected positional {tok:?}")));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().expect("peeked");
+                    if args.options.insert(key.to_string(), v.clone()).is_some() {
+                        return Err(Error::Config(format!("duplicate option --{key}")));
+                    }
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    /// Option value (string).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Parsed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad value for --{key}: {v:?}"))),
+        }
+    }
+
+    /// Required parsed option.
+    pub fn require_parse<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| Error::Config(format!("missing required --{key}")))?;
+        v.parse()
+            .map_err(|_| Error::Config(format!("bad value for --{key}: {v:?}")))
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Reject options/flags outside the allowed set (typo guard).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown option --{k} for `{}` (allowed: {})",
+                    self.command,
+                    allowed.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = Args::parse(&sv(&["det", "--rows", "3", "--cols", "9", "--exact"])).unwrap();
+        assert_eq!(a.command, "det");
+        assert_eq!(a.get("rows"), Some("3"));
+        assert_eq!(a.get_parse::<usize>("cols", 0).unwrap(), 9);
+        assert!(a.has_flag("exact"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(&sv(&["det"])).unwrap();
+        assert_eq!(a.get_parse::<usize>("workers", 4).unwrap(), 4);
+        assert!(a.require_parse::<usize>("rows").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Args::parse(&sv(&[])).is_err());
+        assert!(Args::parse(&sv(&["--det"])).is_err());
+        assert!(Args::parse(&sv(&["det", "stray"])).is_err());
+        assert!(Args::parse(&sv(&["det", "--a", "1", "--a", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_guard() {
+        let a = Args::parse(&sv(&["det", "--rows", "3"])).unwrap();
+        assert!(a.check_known(&["rows", "cols"]).is_ok());
+        assert!(a.check_known(&["cols"]).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = Args::parse(&sv(&["gen", "--lo", "-5"])).unwrap();
+        assert_eq!(a.get_parse::<i64>("lo", 0).unwrap(), -5);
+    }
+}

@@ -1,0 +1,327 @@
+//! The `raddet` command-line interface.
+//!
+//! ```text
+//! raddet det       --rows M --cols N [--seed S | --csv F] [--engine auto|cpu|xla]
+//!                  [--workers K] [--batch B] [--schedule static|steal] [--exact]
+//! raddet unrank    --n N --m M --q Q [--trace]
+//! raddet rank      --n N --cols 2,5,6,7,8
+//! raddet table     --n N --m M            # paper Table 1 / Table 3
+//! raddet table2                           # paper Table 2 (n=8, m=5)
+//! raddet pram      --n N --m M            # §6 complexity table
+//! raddet scaling   --rows M --cols N [--max-workers K] [--engine …]
+//! raddet serve     --port P [--workers K] [--engine …]
+//! raddet query     --addr HOST:PORT --csv F [--exact]
+//! raddet retrieve  [--images K] [--query I] [--noise E]
+//! raddet help
+//! ```
+
+pub mod args;
+
+use crate::apps::retrieval::{ImageStore, SyntheticImage};
+use crate::combin::{rank as rank_fn, unrank_traced, PascalTable};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use crate::matrix::{gen, io as mio};
+use crate::pram::{analysis, section6_table};
+use crate::service::{Client, Server};
+use crate::testkit::TestRng;
+use crate::{Error, Result};
+use args::Args;
+
+/// Entry point: parse, dispatch, map errors to exit codes.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("raddet: {e}");
+            match e {
+                Error::Config(_) => 2,
+                _ => 1,
+            }
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{}", HELP);
+        return Ok(());
+    }
+    let a = Args::parse(argv)?;
+    match a.command.as_str() {
+        "det" => cmd_det(&a),
+        "unrank" => cmd_unrank(&a),
+        "rank" => cmd_rank(&a),
+        "table" => cmd_table(&a),
+        "table2" => cmd_table2(&a),
+        "pram" => cmd_pram(&a),
+        "scaling" => cmd_scaling(&a),
+        "serve" => cmd_serve(&a),
+        "query" => cmd_query(&a),
+        "retrieve" => cmd_retrieve(&a),
+        other => Err(Error::Config(format!(
+            "unknown command {other:?} (try `raddet help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "raddet — parallel Radić determinant of non-square matrices\n\
+(Abdollahi et al., IJDPS 2015 — see README.md)\n\n\
+commands:\n\
+  det       compute det of a random --rows×--cols matrix (or --csv FILE)\n\
+  unrank    q-th dictionary-order combination (--trace for Example-1 style)\n\
+  rank      rank of an ascending sequence (--cols 2,5,6,7,8)\n\
+  table     Pascal weight table (paper Table 1/3) for --n/--m\n\
+  table2    all 56 five-member subsets of {1..8} (paper Table 2)\n\
+  pram      §6 PRAM complexity table for --n/--m\n\
+  scaling   strong-scaling study on this machine\n\
+  serve     TCP determinant service (--port)\n\
+  query     send a --csv matrix to a running service (--addr)\n\
+  retrieve  image-retrieval demo (paper's machine-vision motivation)\n\
+  help      this text\n";
+
+fn build_coordinator(a: &Args) -> Result<Coordinator> {
+    let engine = match a.get("engine").unwrap_or("auto") {
+        "auto" => EngineKind::Auto,
+        "cpu" => EngineKind::Cpu,
+        "xla" => EngineKind::Xla,
+        other => return Err(Error::Config(format!("bad --engine {other:?}"))),
+    };
+    let schedule = match a.get("schedule").unwrap_or("static") {
+        "static" => Schedule::Static,
+        "steal" => Schedule::WorkStealing { grain: a.get_parse("grain", 1024u64)? },
+        other => return Err(Error::Config(format!("bad --schedule {other:?}"))),
+    };
+    Coordinator::new(CoordinatorConfig {
+        workers: a.get_parse("workers", 0usize)?,
+        batch: a.get_parse("batch", 256usize)?,
+        engine,
+        schedule,
+        artifact_dir: a.get("artifacts").map(Into::into),
+        xla_executors: a.get_parse("executors", 2usize)?,
+        ..Default::default()
+    })
+}
+
+const COORD_OPTS: [&str; 8] = [
+    "engine", "schedule", "grain", "workers", "batch", "artifacts", "executors", "seed",
+];
+
+fn cmd_det(a: &Args) -> Result<()> {
+    a.check_known(
+        &[&COORD_OPTS[..], &["rows", "cols", "csv", "exact", "lo", "hi", "compare"]].concat(),
+    )?;
+    let coord = build_coordinator(a)?;
+    let mat = match a.get("csv") {
+        Some(path) => mio::read_csv_file(std::path::Path::new(path))?,
+        None => {
+            let rows: usize = a.require_parse("rows")?;
+            let cols: usize = a.require_parse("cols")?;
+            let seed: u64 = a.get_parse("seed", 42u64)?;
+            gen::uniform(
+                &mut TestRng::from_seed(seed),
+                rows,
+                cols,
+                a.get_parse("lo", -1.0)?,
+                a.get_parse("hi", 1.0)?,
+            )
+        }
+    };
+    if a.has_flag("exact") {
+        let ai = mat.map(|x| x.round() as i64);
+        let det = coord.radic_det_exact(&ai)?;
+        println!("radic_det_exact = {det}");
+        return Ok(());
+    }
+    let out = coord.radic_det(&mat)?;
+    println!("radic_det = {:.12e}", out.det);
+    println!(
+        "  shape = {}×{}   terms = {}   engine = {}",
+        mat.rows(),
+        mat.cols(),
+        out.terms,
+        out.engine
+    );
+    println!("  {}", out.metrics.render());
+    if a.has_flag("compare") {
+        // §8: the alternative non-square determinant definitions.
+        use crate::linalg::{block_sum_det, cauchy_binet_sum, gram_det};
+        println!("\nalternative definitions (§8 comparison):");
+        println!("  gram (√det AAᵀ)     = {:.12e}", gram_det(&mat)?);
+        let cb = cauchy_binet_sum(&mat)?;
+        println!("  Σ det²  (Cauchy–Binet) = {:.12e}", cb);
+        println!("  det(AAᵀ) cross-check   = {:.12e}", gram_det(&mat)?.powi(2));
+        println!("  block-sum ([11]/[13])  = {:.12e}", block_sum_det(&mat)?);
+    }
+    Ok(())
+}
+
+fn cmd_unrank(a: &Args) -> Result<()> {
+    a.check_known(&["n", "m", "q", "trace"])?;
+    let n: u64 = a.require_parse("n")?;
+    let m: u64 = a.require_parse("m")?;
+    let q: u128 = a.require_parse("q")?;
+    let (b, stages) = unrank_traced(n, m, q)?;
+    if a.has_flag("trace") {
+        println!("unranking q={q} for n={n}, m={m} (combinatorial addition):");
+        println!("  B := First Member = {:?}", (1..=m as u32).collect::<Vec<_>>());
+        for (i, s) in stages.iter().enumerate() {
+            println!(
+                "  stage {}: row j={}, from col {}, {} step(s), Sum={}  q: {} → {}  B := {:?}",
+                i + 1,
+                s.row_j,
+                s.col_start,
+                s.steps_p,
+                s.sum,
+                s.q_before,
+                s.q_after,
+                s.b_after
+            );
+        }
+    }
+    println!("B_{q} = {b:?}");
+    Ok(())
+}
+
+fn cmd_rank(a: &Args) -> Result<()> {
+    a.check_known(&["n", "cols"])?;
+    let n: u64 = a.require_parse("n")?;
+    let cols_str = a
+        .get("cols")
+        .ok_or_else(|| Error::Config("missing --cols".into()))?;
+    let cols = cols_str
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u32>()
+                .map_err(|e| Error::Config(format!("bad column {t:?}: {e}")))
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    println!("rank({cols:?}) = {}", rank_fn(n, &cols)?);
+    Ok(())
+}
+
+fn cmd_table(a: &Args) -> Result<()> {
+    a.check_known(&["n", "m"])?;
+    let n: u64 = a.require_parse("n")?;
+    let m: u64 = a.require_parse("m")?;
+    print!("{}", PascalTable::new(n, m)?.render());
+    Ok(())
+}
+
+fn cmd_table2(a: &Args) -> Result<()> {
+    a.check_known(&[])?;
+    let table = PascalTable::new(8, 5)?;
+    let stream = crate::combin::CombinationStream::new(&table, 0, 56)?;
+    println!("Table 2: the 56 five-member subsets of {{1..8}} in dictionary order");
+    for (q, c) in stream.enumerate() {
+        println!("  B{q:<3} {c:?}");
+    }
+    Ok(())
+}
+
+fn cmd_pram(a: &Args) -> Result<()> {
+    a.check_known(&["n", "m"])?;
+    let n: u64 = a.get_parse("n", 16u64)?;
+    let m: u64 = a.get_parse("m", 8u64)?;
+    let rows = section6_table(&[(n, m)])?;
+    print!("{}", analysis::render(&rows));
+    Ok(())
+}
+
+fn cmd_scaling(a: &Args) -> Result<()> {
+    a.check_known(&[&COORD_OPTS[..], &["rows", "cols", "max-workers"]].concat())?;
+    let rows: usize = a.get_parse("rows", 5usize)?;
+    let cols: usize = a.get_parse("cols", 20usize)?;
+    let max_workers: usize = a.get_parse(
+        "max-workers",
+        std::thread::available_parallelism().map_or(8, |p| p.get()),
+    )?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+    let mat = gen::uniform(&mut TestRng::from_seed(seed), rows, cols, -1.0, 1.0);
+
+    println!("strong scaling: {rows}×{cols} (C = {} terms)", {
+        crate::combin::combination_count(cols as u64, rows as u64)?
+    });
+    let mut t1 = None;
+    let mut table = crate::bench::Table::new(&["workers", "time", "speedup", "efficiency"]);
+    let mut w = 1;
+    while w <= max_workers {
+        let mut argsv = a.clone();
+        argsv.options.insert("workers".into(), w.to_string());
+        let coord = build_coordinator(&argsv)?;
+        let out = coord.radic_det(&mat)?;
+        let secs = out.metrics.elapsed.as_secs_f64();
+        let t1v = *t1.get_or_insert(secs);
+        table.row(&[
+            w.to_string(),
+            crate::bench::fmt_time(secs),
+            format!("{:.2}×", t1v / secs),
+            format!("{:.0}%", 100.0 * t1v / secs / w as f64),
+        ]);
+        w *= 2;
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    a.check_known(&[&COORD_OPTS[..], &["port", "host"]].concat())?;
+    let port: u16 = a.get_parse("port", 7171u16)?;
+    let host = a.get("host").unwrap_or("127.0.0.1");
+    let coord = build_coordinator(a)?;
+    let handle = Server::new(coord).start(&format!("{host}:{port}"))?;
+    println!("raddet service listening on {}", handle.addr());
+    println!("protocol: DET m n v1,v2,… | EXACT m n i1,… | PING | QUIT");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_query(a: &Args) -> Result<()> {
+    a.check_known(&["addr", "csv", "exact"])?;
+    let addr = a.get("addr").unwrap_or("127.0.0.1:7171");
+    let path = a
+        .get("csv")
+        .ok_or_else(|| Error::Config("missing --csv".into()))?;
+    let mat = mio::read_csv_file(std::path::Path::new(path))?;
+    let mut client = Client::connect(addr)?;
+    if a.has_flag("exact") {
+        let ai = mat.map(|x| x.round() as i64);
+        println!("radic_det_exact = {}", client.det_exact(&ai)?);
+    } else {
+        let reply = client.det(&mat)?;
+        println!(
+            "radic_det = {:.12e}   terms = {}   server = {} µs   round-trip = {:?}",
+            reply.det, reply.terms, reply.server_micros, reply.round_trip
+        );
+    }
+    client.quit();
+    Ok(())
+}
+
+fn cmd_retrieve(a: &Args) -> Result<()> {
+    a.check_known(&[&COORD_OPTS[..], &["images", "query", "noise", "top"]].concat())?;
+    let images: u64 = a.get_parse("images", 8u64)?;
+    let query: u64 = a.get_parse("query", 3u64)?;
+    let noise: f64 = a.get_parse("noise", 0.02)?;
+    let top: usize = a.get_parse("top", 3usize)?;
+    let coord = build_coordinator(a)?;
+
+    let mut store = ImageStore::new();
+    println!("indexing {images} synthetic images (different sizes)…");
+    for seed in 0..images {
+        // Vary sizes so the feature matrices have different widths.
+        let h = 24 + (seed as usize % 3) * 8;
+        let w = 32 + (seed as usize % 4) * 10;
+        let img = SyntheticImage::generate(seed, h, w);
+        store.add(&format!("img{seed} ({h}×{w})"), &img, &coord)?;
+    }
+    let probe = SyntheticImage::generate(query, 40, 44)
+        .noisy(&mut TestRng::from_seed(12345), noise);
+    println!("querying with a noisy, re-sized copy of img{query}…");
+    for (i, (label, dist)) in store.query(&probe, &coord, top)?.iter().enumerate() {
+        println!("  #{} {label}   distance {dist:.4}", i + 1);
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Checked `u128` binomial coefficients and cached Pascal structures.
+//!
+//! Rank arithmetic throughout the crate is `u128`; every binomial is
+//! computed with overflow checks so a too-large job fails loudly
+//! ([`crate::Error::BinomialOverflow`]) instead of wrapping.
+
+use crate::{Error, Result};
+
+/// `C(n, k)` with overflow checking.
+///
+/// Multiplicative evaluation `C(n,k) = Π_{i=1..k} (n−k+i)/i`, keeping the
+/// running product exact at every step (the partial product after the
+/// `i`-th factor is `C(n−k+i, i)`, an integer).
+pub fn binom_checked(n: u64, k: u64) -> Result<u128> {
+    if k > n {
+        return Ok(0);
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 1..=k {
+        let num = (n - k + i) as u128;
+        // acc * num cannot be reordered: acc*num is always divisible by i.
+        acc = acc
+            .checked_mul(num)
+            .ok_or(Error::BinomialOverflow { n, k })?
+            / i as u128;
+    }
+    Ok(acc)
+}
+
+/// `C(n, k)`, panicking on overflow (convenience for small arguments).
+pub fn binom(n: u64, k: u64) -> u128 {
+    binom_checked(n, k).expect("binomial overflow")
+}
+
+/// The per-place *weights* of the paper's §4: `w_t = C(n−t, m−t)` for
+/// `t = 1..m` — “the last column of Table 1”. `w_t` is the number of
+/// combinations that keep places `1..t` at the First Member and advance
+/// place `t` by one.
+#[derive(Clone, Debug)]
+pub struct PascalWeights {
+    n: u64,
+    m: u64,
+    weights: Vec<u128>,
+}
+
+impl PascalWeights {
+    /// Build the weight vector for an `(n, m)` problem.
+    pub fn new(n: u64, m: u64) -> Result<Self> {
+        if m > n {
+            return Err(Error::Combinatorics(format!("m={m} > n={n}")));
+        }
+        let weights = (1..=m)
+            .map(|t| binom_checked(n - t, m - t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { n, m, weights })
+    }
+
+    /// Weight of place `t` (1-based), i.e. `C(n−t, m−t)`.
+    pub fn weight(&self, t: u64) -> u128 {
+        self.weights[(t - 1) as usize]
+    }
+
+    /// All weights, place 1 first.
+    pub fn as_slice(&self) -> &[u128] {
+        &self.weights
+    }
+
+    /// Problem size `n`.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Subset size `m`.
+    pub fn m(&self) -> u64 {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::for_all;
+
+    #[test]
+    fn small_values() {
+        assert_eq!(binom(0, 0), 1);
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(5, 5), 1);
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(8, 5), 56);
+        assert_eq!(binom(52, 5), 2_598_960);
+        assert_eq!(binom(3, 7), 0);
+    }
+
+    #[test]
+    fn symmetry_and_recurrence() {
+        for_all("pascal identities", 300, |rng| {
+            let n = rng.u64_below(60);
+            let k = rng.u64_below(n + 1);
+            assert_eq!(binom(n, k), binom(n, n - k), "symmetry C({n},{k})");
+            if n >= 1 && k >= 1 {
+                assert_eq!(
+                    binom(n, k),
+                    binom(n - 1, k - 1) + binom(n - 1, k),
+                    "recurrence C({n},{k})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn row_sums_are_powers_of_two() {
+        for n in 0..30u64 {
+            let sum: u128 = (0..=n).map(|k| binom(n, k)).sum();
+            assert_eq!(sum, 1u128 << n);
+        }
+    }
+
+    #[test]
+    fn hockey_stick_theorem1() {
+        // Theorem 1's telescoping: Σ_{j=m−1..n−1} C(j, m−1) = C(n, m).
+        for n in 1..25u64 {
+            for m in 1..=n {
+                let sum: u128 = (m - 1..n).map(|j| binom(j, m - 1)).sum();
+                assert_eq!(sum, binom(n, m), "hockey stick n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_detected() {
+        assert!(matches!(
+            binom_checked(300, 150),
+            Err(Error::BinomialOverflow { .. })
+        ));
+        // The multiplicative evaluation keeps intermediates ≤ result·n,
+        // so anything up to ~C(120,60) ≈ 1e35 is comfortably in range.
+        assert_eq!(
+            binom_checked(120, 60).unwrap(),
+            96_614_908_840_363_322_603_893_139_521_372_656u128
+        );
+    }
+
+    #[test]
+    fn weights_match_paper_example() {
+        // m=5, n=8 (Example 1): C(7,4), C(6,3), C(5,2), C(4,1), C(3,0).
+        let w = PascalWeights::new(8, 5).unwrap();
+        assert_eq!(w.as_slice(), &[35, 20, 10, 4, 1]);
+        assert_eq!(w.weight(1), 35);
+        assert_eq!(w.weight(5), 1);
+    }
+
+    #[test]
+    fn weights_last_place_is_one() {
+        for_all("w_m = C(n−m,0) = 1", 100, |rng| {
+            let (n, m) = crate::testkit::arb_nm(rng, 40);
+            let w = PascalWeights::new(n, m).unwrap();
+            assert_eq!(w.weight(m), 1);
+        });
+    }
+}

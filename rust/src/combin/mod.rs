@@ -1,0 +1,129 @@
+//! Combinatorics substrate — the paper's §3–§5 algorithms.
+//!
+//! Everything operates on *m-combinations of {1..n} in dictionary
+//! (lexicographic) order* — the paper's “ascending sequences” (Def. 1)
+//! under “dictionary order” (Def. 2). Ranks are `u128` and run from `0`
+//! (the *First Member* `[1,2,…,m]`) to `C(n,m)−1` (`[n−m+1,…,n]`).
+//!
+//! * [`binomial`] — checked `u128` binomials + cached Pascal rows.
+//! * [`pascal`] — the paper's Table 1 / Table 3 weight tables
+//!   `A(j,i) = C(i+j, j)`.
+//! * [`mod@unrank`] — §4 “combinatorial addition”: rank → combination in
+//!   `O(m(n−m))`, with an optional step trace (Example 1), plus an
+//!   independently-derived cross-check unranker.
+//! * [`mod@rank`] — the inverse mapping (not in the paper; needed to verify
+//!   Theorem 2 bijectivity).
+//! * [`mod@successor`] — §5 in-place next-combination (“dictionary
+//!   sequence” pseudo-code).
+//! * [`stream`] — chunk walker: one unrank, then successors (how each
+//!   processor traverses its granularity chunk).
+//! * [`partition`] — §5 granularity partitioning of `[0, C(n,m))` into
+//!   `k` contiguous chunks.
+
+pub mod binomial;
+pub mod partition;
+pub mod pascal;
+pub mod rank;
+pub mod stream;
+pub mod successor;
+pub mod unrank;
+
+pub use binomial::{binom, binom_checked, PascalWeights};
+pub use partition::{partition_ranks, partition_total, Chunk};
+pub use pascal::PascalTable;
+pub use rank::rank;
+pub use stream::CombinationStream;
+pub use successor::{first_member, last_member, successor};
+pub use unrank::{unrank, unrank_into, unrank_lex, unrank_traced, TraceStage};
+
+use crate::{Error, Result};
+
+/// Validate an `(n, m)` problem and return `C(n,m)`.
+pub fn combination_count(n: u64, m: u64) -> Result<u128> {
+    if m == 0 {
+        return Err(Error::Combinatorics(format!(
+            "m must be ≥ 1 (got m={m}, n={n})"
+        )));
+    }
+    if m > n {
+        return Err(Error::Combinatorics(format!(
+            "need m ≤ n for enumeration (got m={m} > n={n})"
+        )));
+    }
+    binom_checked(n, m)
+}
+
+/// Radić's sign `(−1)^(r+s)` for a 1-based ascending column selection.
+///
+/// `r = m(m+1)/2` and `s = Σ jᵢ`; only the parity matters, so this is
+/// two sums and a bit test. Mirrored by `radic_sign` in
+/// `python/compile/kernels/ref.py` (cross-language anchor tests pin the
+/// convention on both sides).
+#[inline]
+pub fn radic_sign(cols: &[u32]) -> f64 {
+    let m = cols.len() as u64;
+    let r = m * (m + 1) / 2;
+    let s: u64 = cols.iter().map(|&c| c as u64).sum();
+    if (r + s) % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Is `cols` a valid ascending sequence over `{1..n}` (Def. 1)?
+pub fn is_ascending(cols: &[u32], n: u64) -> bool {
+    !cols.is_empty()
+        && cols.windows(2).all(|w| w[0] < w[1])
+        && cols[0] >= 1
+        && (*cols.last().unwrap() as u64) <= n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_validates_args() {
+        assert!(combination_count(8, 5).is_ok());
+        assert_eq!(combination_count(8, 5).unwrap(), 56);
+        assert!(combination_count(3, 4).is_err());
+        assert!(combination_count(3, 0).is_err());
+        assert_eq!(combination_count(5, 5).unwrap(), 1);
+    }
+
+    #[test]
+    fn sign_anchor_m1() {
+        // m=1: r=1, s=j ⇒ sign alternates +,−,+,… from j=1? r+s = 1+1=2 even.
+        assert_eq!(radic_sign(&[1]), 1.0);
+        assert_eq!(radic_sign(&[2]), -1.0);
+        assert_eq!(radic_sign(&[3]), 1.0);
+    }
+
+    #[test]
+    fn sign_anchor_m2() {
+        // r=3: [1,2]→s=3 even sum ⇒ +; [1,3]→s=4 odd ⇒ −; [2,3]→s=5 ⇒ +.
+        assert_eq!(radic_sign(&[1, 2]), 1.0);
+        assert_eq!(radic_sign(&[1, 3]), -1.0);
+        assert_eq!(radic_sign(&[2, 3]), 1.0);
+    }
+
+    #[test]
+    fn square_case_sign_is_positive() {
+        // m=n: s = r ⇒ (−1)^(2r) = +1, Radić reduces to the plain det.
+        for m in 1..10u32 {
+            let cols: Vec<u32> = (1..=m).collect();
+            assert_eq!(radic_sign(&cols), 1.0);
+        }
+    }
+
+    #[test]
+    fn ascending_checks() {
+        assert!(is_ascending(&[1, 3, 7], 8));
+        assert!(!is_ascending(&[1, 3, 3], 8));
+        assert!(!is_ascending(&[3, 1], 8));
+        assert!(!is_ascending(&[1, 9], 8));
+        assert!(!is_ascending(&[], 8));
+        assert!(!is_ascending(&[0, 1], 8));
+    }
+}

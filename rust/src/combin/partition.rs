@@ -1,0 +1,115 @@
+//! §5 — granularity partitioning.
+//!
+//! “If the number of processors is k, the number of granularities will be
+//! C(n,m)/k”: processor `p` owns the contiguous rank range
+//! `[p·⌈T/k⌉ …)` (the paper assumes `k | T`; we distribute the remainder
+//! over the leading chunks so the cover is exact for every `T, k`).
+
+use super::combination_count;
+use crate::Result;
+
+/// A contiguous rank range owned by one processor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// First rank in the chunk.
+    pub start: u128,
+    /// Number of ranks in the chunk (may be 0 when k > T).
+    pub len: u128,
+}
+
+impl Chunk {
+    /// One-past-the-end rank.
+    pub fn end(&self) -> u128 {
+        self.start + self.len
+    }
+}
+
+/// Split `[0, C(n,m))` into `k` contiguous chunks (paper §5 granularity).
+///
+/// The first `T mod k` chunks get one extra element; chunks are returned
+/// in rank order and exactly cover the range with no overlap.
+pub fn partition_ranks(n: u64, m: u64, k: usize) -> Result<Vec<Chunk>> {
+    let total = combination_count(n, m)?;
+    Ok(partition_total(total, k))
+}
+
+/// Partition an explicit total (used by the coordinator once it has
+/// validated the job).
+pub fn partition_total(total: u128, k: usize) -> Vec<Chunk> {
+    assert!(k >= 1, "need at least one processor");
+    let k128 = k as u128;
+    let base = total / k128;
+    let extra = total % k128;
+    let mut chunks = Vec::with_capacity(k);
+    let mut start = 0u128;
+    for p in 0..k128 {
+        let len = base + u128::from(p < extra);
+        chunks.push(Chunk { start, len });
+        start += len;
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{for_all, TestRng};
+
+    fn assert_exact_cover(total: u128, chunks: &[Chunk]) {
+        let mut cursor = 0u128;
+        for c in chunks {
+            assert_eq!(c.start, cursor, "gap or overlap at {cursor}");
+            cursor = c.end();
+        }
+        assert_eq!(cursor, total, "chunks must cover the full range");
+    }
+
+    #[test]
+    fn paper_example_divisible() {
+        // C(8,5) = 56 over k=8: all chunks length 7 (the paper's exact case).
+        let chunks = partition_ranks(8, 5, 8).unwrap();
+        assert_eq!(chunks.len(), 8);
+        assert!(chunks.iter().all(|c| c.len == 7));
+        assert_exact_cover(56, &chunks);
+    }
+
+    #[test]
+    fn remainder_distributed() {
+        let chunks = partition_total(10, 3);
+        assert_eq!(
+            chunks,
+            vec![
+                Chunk { start: 0, len: 4 },
+                Chunk { start: 4, len: 3 },
+                Chunk { start: 7, len: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn more_processors_than_work() {
+        let chunks = partition_total(2, 5);
+        assert_exact_cover(2, &chunks);
+        assert_eq!(chunks.iter().filter(|c| c.len > 0).count(), 2);
+    }
+
+    #[test]
+    fn single_processor_owns_everything() {
+        let chunks = partition_total(56, 1);
+        assert_eq!(chunks, vec![Chunk { start: 0, len: 56 }]);
+    }
+
+    #[test]
+    fn property_exact_cover_and_balance() {
+        for_all("partition cover/balance", 300, |rng: &mut TestRng| {
+            let total = rng.u128_below(1_000_000) ;
+            let k = 1 + rng.usize_below(64);
+            let chunks = partition_total(total, k);
+            assert_eq!(chunks.len(), k);
+            assert_exact_cover(total, &chunks);
+            let min = chunks.iter().map(|c| c.len).min().unwrap();
+            let max = chunks.iter().map(|c| c.len).max().unwrap();
+            assert!(max - min <= 1, "±1 balance (got {min}..{max})");
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! The paper's Table 1 / Table 3: the Pascal weight table
+//! `A(j, i) = C(i+j, j)` for rows `j = 0..m−1` and columns
+//! `i = 0..n−m` (the paper prints columns `1..n−m`; we keep column 0
+//! (`A(j,0) = 1`) because the unranking walk terminates there).
+//!
+//! Row `j` holds the step weights for changing the last `j+1` places of a
+//! combination; the right-most column is the per-place weight vector of
+//! [`super::binomial::PascalWeights`].
+
+use super::binomial::binom_checked;
+use crate::Result;
+
+/// Dense Pascal weight table for an `(n, m)` problem.
+#[derive(Clone, Debug)]
+pub struct PascalTable {
+    n: u64,
+    m: u64,
+    cols: usize,
+    /// Row-major `A[j][i] = C(i+j, j)`, rows `0..m`, cols `0..=n−m`.
+    data: Vec<u128>,
+}
+
+impl PascalTable {
+    /// Build the table via the Pascal recurrence (row-major, additions
+    /// only — the same construction as the first loop nest of the
+    /// paper's Fig. 1 pseudo-code).
+    pub fn new(n: u64, m: u64) -> Result<Self> {
+        assert!(m >= 1 && m <= n, "PascalTable requires 1 ≤ m ≤ n");
+        let cols = (n - m) as usize + 1;
+        let rows = m as usize;
+        let mut data = vec![0u128; rows * cols];
+        // Row 0: A(0, i) = C(i, 0) = 1.
+        for i in 0..cols {
+            data[i] = 1;
+        }
+        // Column 0: A(j, 0) = C(j, j) = 1.
+        for j in 0..rows {
+            data[j * cols] = 1;
+        }
+        for j in 1..rows {
+            for i in 1..cols {
+                let v = data[(j - 1) * cols + i].checked_add(data[j * cols + i - 1]);
+                match v {
+                    Some(v) => data[j * cols + i] = v,
+                    None => {
+                        // Fall back to the checked closed form to produce
+                        // the canonical overflow error.
+                        binom_checked((i + j) as u64, j as u64)?;
+                        unreachable!("checked_add failed but binom_checked passed");
+                    }
+                }
+            }
+        }
+        Ok(Self { n, m, cols, data })
+    }
+
+    /// `A(j, i) = C(i+j, j)`.
+    #[inline]
+    pub fn at(&self, j: u64, i: u64) -> u128 {
+        debug_assert!(j < self.m && (i as usize) < self.cols);
+        self.data[j as usize * self.cols + i as usize]
+    }
+
+    /// Number of columns (`n − m + 1`, including column 0).
+    pub fn cols(&self) -> u64 {
+        self.cols as u64
+    }
+
+    /// Number of rows (`m`).
+    pub fn rows(&self) -> u64 {
+        self.m
+    }
+
+    /// Problem size `n`.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Subset size `m`.
+    pub fn m(&self) -> u64 {
+        self.m
+    }
+
+    /// Render the table in the paper's Table 1 layout (rows `j`, columns
+    /// `i = 1..n−m`, entries `C(i+j, j)`), for the `table` CLI command.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Pascal weight table A(j,i) = C(i+j, j)  (n={}, m={})\n",
+            self.n, self.m
+        ));
+        out.push_str("      ");
+        for i in 1..self.cols as u64 {
+            out.push_str(&format!("{:>12}", format!("i={i}")));
+        }
+        out.push('\n');
+        for j in 0..self.m {
+            out.push_str(&format!("j={j:<4}"));
+            for i in 1..self.cols as u64 {
+                out.push_str(&format!("{:>12}", self.at(j, i)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::binomial::binom;
+
+    #[test]
+    fn entries_match_closed_form() {
+        let t = PascalTable::new(12, 5).unwrap();
+        for j in 0..5u64 {
+            for i in 0..=7u64 {
+                assert_eq!(t.at(j, i), binom(i + j, j), "A({j},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_table3_m5_n8() {
+        // Table 1/3 for m=5, n=8: last column must be the weight vector
+        // C(n−1..., reading bottom-up: row j=4, col 3 = C(7,4) = 35.
+        let t = PascalTable::new(8, 5).unwrap();
+        assert_eq!(t.at(4, 3), 35); // C(7,4)
+        assert_eq!(t.at(3, 3), 20); // C(6,3)
+        assert_eq!(t.at(2, 3), 10); // C(5,2)
+        assert_eq!(t.at(1, 3), 4); // C(4,1)
+        assert_eq!(t.at(0, 3), 1); // C(3,0)
+        // Example 1's second stage reads A(3,2) = C(5,3) = 10 and its
+        // left neighbour A(3,1) = C(4,3) = 4.
+        assert_eq!(t.at(3, 2), 10);
+        assert_eq!(t.at(3, 1), 4);
+    }
+
+    #[test]
+    fn square_case_single_column() {
+        let t = PascalTable::new(6, 6).unwrap();
+        assert_eq!(t.cols(), 1);
+        for j in 0..6 {
+            assert_eq!(t.at(j, 0), 1);
+        }
+    }
+
+    #[test]
+    fn render_contains_header_and_values() {
+        let t = PascalTable::new(8, 5).unwrap();
+        let s = t.render();
+        assert!(s.contains("n=8, m=5"));
+        assert!(s.contains("35"));
+        assert!(s.contains("j=4"));
+    }
+}

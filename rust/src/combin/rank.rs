@@ -1,0 +1,71 @@
+//! Ranking — the inverse of §4's unranking.
+//!
+//! Not given in the paper, but required to *verify* Theorem 2 (the
+//! combinatorial addition is a bijection onto dictionary order) and used
+//! by the coordinator to locate a combination inside a granularity chunk.
+
+use super::binomial::binom_checked;
+use super::{combination_count, is_ascending};
+use crate::{Error, Result};
+
+/// Dictionary-order rank of an ascending sequence over `{1..n}`.
+///
+/// `rank(c) = Σ_t Σ_{v=prev+1}^{c_t−1} C(n−v, m−t)` — for each place,
+/// count the combinations whose prefix is smaller.
+pub fn rank(n: u64, cols: &[u32]) -> Result<u128> {
+    let m = cols.len() as u64;
+    combination_count(n, m)?; // validates m ≥ 1, m ≤ n
+    if !is_ascending(cols, n) {
+        return Err(Error::Combinatorics(format!(
+            "not an ascending sequence over {{1..{n}}}: {cols:?}"
+        )));
+    }
+    let mut r: u128 = 0;
+    let mut prev = 0u64;
+    for (t, &c) in cols.iter().enumerate() {
+        let t = t as u64 + 1;
+        for v in prev + 1..c as u64 {
+            r += binom_checked(n - v, m - t)?;
+        }
+        prev = c as u64;
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::unrank::unrank;
+    use super::*;
+
+    #[test]
+    fn anchors() {
+        assert_eq!(rank(8, &[1, 2, 3, 4, 5]).unwrap(), 0);
+        assert_eq!(rank(8, &[4, 5, 6, 7, 8]).unwrap(), 55);
+        // Example 1.
+        assert_eq!(rank(8, &[2, 5, 6, 7, 8]).unwrap(), 49);
+        // Table 2 spot checks: B₁₁ = [1,2,4,5,7], B₃₅ = [2,3,4,5,6].
+        assert_eq!(rank(8, &[1, 2, 4, 5, 7]).unwrap(), 11);
+        assert_eq!(rank(8, &[2, 3, 4, 5, 6]).unwrap(), 35);
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_small() {
+        for n in 1..=9u64 {
+            for m in 1..=n {
+                let total = super::combination_count(n, m).unwrap();
+                for q in 0..total {
+                    let c = unrank(n, m, q).unwrap();
+                    assert_eq!(rank(n, &c).unwrap(), q, "n={n} m={m} q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(rank(8, &[3, 2]).is_err());
+        assert!(rank(8, &[1, 9]).is_err());
+        assert!(rank(8, &[]).is_err());
+        assert!(rank(2, &[1, 2, 2]).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Chunk walker: unrank once, then successor — exactly how a §5
+//! processor traverses its granularity chunk.
+//!
+//! The hot path is [`CombinationStream::next_ref`], a lending-style
+//! iterator that yields `&[u32]` into an internal buffer (no per-element
+//! allocation). A conventional [`Iterator`] adapter ([`IntoIterator`]
+//! yielding `Vec<u32>`) exists for tests and casual use.
+
+use super::pascal::PascalTable;
+use super::successor::successor;
+use super::unrank::unrank_into;
+use crate::Result;
+
+/// Streaming enumerator of a contiguous rank range `[start, start+len)`.
+#[derive(Clone, Debug)]
+pub struct CombinationStream {
+    n: u64,
+    buf: Vec<u32>,
+    remaining: u128,
+    /// True until the first `next_ref` call (the buffer already holds the
+    /// unranked chunk start).
+    fresh: bool,
+}
+
+impl CombinationStream {
+    /// Open a stream over `[start, start+len)` for an `(n, m)` problem.
+    ///
+    /// Pays the single `O(m(n−m))` unranking cost up front; every
+    /// subsequent element is an amortized-O(1) successor step.
+    pub fn new(table: &PascalTable, start: u128, len: u128) -> Result<Self> {
+        let m = table.m();
+        let mut buf = vec![0u32; m as usize];
+        if len > 0 {
+            unrank_into(table, start, &mut buf)?;
+        }
+        Ok(Self {
+            n: table.n(),
+            buf,
+            remaining: len,
+            fresh: true,
+        })
+    }
+
+    /// Next combination, or `None` when the chunk is exhausted.
+    #[inline]
+    pub fn next_ref(&mut self) -> Option<&[u32]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if self.fresh {
+            self.fresh = false;
+        } else {
+            let advanced = successor(&mut self.buf, self.n);
+            debug_assert!(advanced, "chunk length exceeded the enumeration");
+        }
+        self.remaining -= 1;
+        Some(&self.buf)
+    }
+
+    /// Elements not yet yielded.
+    pub fn remaining(&self) -> u128 {
+        self.remaining
+    }
+}
+
+impl Iterator for CombinationStream {
+    type Item = Vec<u32>;
+
+    fn next(&mut self) -> Option<Vec<u32>> {
+        self.next_ref().map(|c| c.to_vec())
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = self.remaining.min(usize::MAX as u128) as usize;
+        (r, Some(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::{combination_count, partition_total, unrank};
+
+    #[test]
+    fn full_stream_matches_unrank() {
+        let table = PascalTable::new(8, 5).unwrap();
+        let stream = CombinationStream::new(&table, 0, 56).unwrap();
+        for (q, c) in stream.enumerate() {
+            assert_eq!(c, unrank(8, 5, q as u128).unwrap());
+        }
+    }
+
+    #[test]
+    fn mid_chunk_stream() {
+        let table = PascalTable::new(9, 4).unwrap();
+        let stream = CombinationStream::new(&table, 40, 20).unwrap();
+        let got: Vec<_> = stream.collect();
+        assert_eq!(got.len(), 20);
+        for (i, c) in got.iter().enumerate() {
+            assert_eq!(*c, unrank(9, 4, 40 + i as u128).unwrap());
+        }
+    }
+
+    #[test]
+    fn empty_chunk_yields_nothing() {
+        let table = PascalTable::new(8, 5).unwrap();
+        let mut stream = CombinationStream::new(&table, 10, 0).unwrap();
+        assert!(stream.next_ref().is_none());
+    }
+
+    #[test]
+    fn chunks_concatenate_to_full_enumeration() {
+        // The §5 work split: k workers' streams, concatenated, must equal
+        // the full dictionary order exactly.
+        let (n, m, k) = (10u64, 4u64, 7usize);
+        let total = combination_count(n, m).unwrap();
+        let table = PascalTable::new(n, m).unwrap();
+        let mut all = Vec::new();
+        for chunk in partition_total(total, k) {
+            let stream = CombinationStream::new(&table, chunk.start, chunk.len).unwrap();
+            all.extend(stream);
+        }
+        assert_eq!(all.len() as u128, total);
+        for (q, c) in all.iter().enumerate() {
+            assert_eq!(*c, unrank(n, m, q as u128).unwrap());
+        }
+    }
+
+    #[test]
+    fn size_hint_exact() {
+        let table = PascalTable::new(8, 5).unwrap();
+        let stream = CombinationStream::new(&table, 0, 56).unwrap();
+        assert_eq!(stream.size_hint(), (56, Some(56)));
+    }
+}

@@ -1,0 +1,104 @@
+//! §5 — in-place successor in dictionary order.
+//!
+//! Each processor unranks its chunk start **once**, then walks the chunk
+//! with this successor (the paper's second “Figure 1: dictionary
+//! sequence” pseudo-code, de-garbled): find the right-most place below
+//! its maximum, increment it, and reset the tail to a consecutive run.
+//! Amortized O(1) per step — the paper relies on this so the `O(m(n−m))`
+//! unranking cost is paid once per chunk, not per element.
+
+/// First Member `[1, 2, …, m]` (rank 0).
+pub fn first_member(m: u64) -> Vec<u32> {
+    (1..=m as u32).collect()
+}
+
+/// Last member `[n−m+1, …, n]` (rank `C(n,m)−1`).
+pub fn last_member(n: u64, m: u64) -> Vec<u32> {
+    ((n - m + 1) as u32..=n as u32).collect()
+}
+
+/// Advance `cols` to its dictionary successor over `{1..n}` in place.
+///
+/// Returns `false` (leaving `cols` untouched) when `cols` is already the
+/// last member. The place-`t` maximum is `n − m + t` (1-based `t`): the
+/// paper's “the value of the (m−1)ᵗʰ place cannot exceed n−1”.
+pub fn successor(cols: &mut [u32], n: u64) -> bool {
+    let m = cols.len();
+    debug_assert!(m >= 1 && m as u64 <= n);
+    // Right-most place strictly below its maximum.
+    let mut t = m;
+    while t >= 1 && cols[t - 1] as u64 == n - (m - t) as u64 {
+        t -= 1;
+    }
+    if t == 0 {
+        return false;
+    }
+    cols[t - 1] += 1;
+    for h in t..m {
+        cols[h] = cols[h - 1] + 1;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::{combination_count, is_ascending, unrank};
+
+    #[test]
+    fn first_steps_n8_m5() {
+        // Table 2's first column: B₀..B₄.
+        let mut b = first_member(5);
+        assert_eq!(b, vec![1, 2, 3, 4, 5]);
+        assert!(successor(&mut b, 8));
+        assert_eq!(b, vec![1, 2, 3, 4, 6]);
+        assert!(successor(&mut b, 8));
+        assert_eq!(b, vec![1, 2, 3, 4, 7]);
+        assert!(successor(&mut b, 8));
+        assert_eq!(b, vec![1, 2, 3, 4, 8]);
+        assert!(successor(&mut b, 8));
+        assert_eq!(b, vec![1, 2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn carry_across_places() {
+        // B₁₉ = [1,2,6,7,8] → B₂₀ = [1,3,4,5,6] (triple carry).
+        let mut b = vec![1, 2, 6, 7, 8];
+        assert!(successor(&mut b, 8));
+        assert_eq!(b, vec![1, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn last_member_has_no_successor() {
+        let mut b = last_member(8, 5);
+        assert_eq!(b, vec![4, 5, 6, 7, 8]);
+        assert!(!successor(&mut b, 8));
+        assert_eq!(b, vec![4, 5, 6, 7, 8], "unchanged at the end");
+    }
+
+    #[test]
+    fn chain_visits_all_in_order() {
+        for n in 1..=10u64 {
+            for m in 1..=n {
+                let total = combination_count(n, m).unwrap();
+                let mut b = first_member(m);
+                let mut count = 1u128;
+                loop {
+                    assert!(is_ascending(&b, n));
+                    assert_eq!(b, unrank(n, m, count - 1).unwrap(), "n={n} m={m}");
+                    if !successor(&mut b, n) {
+                        break;
+                    }
+                    count += 1;
+                }
+                assert_eq!(count, total, "n={n} m={m} chain length");
+            }
+        }
+    }
+
+    #[test]
+    fn m_equals_n_single_element() {
+        let mut b = first_member(4);
+        assert!(!successor(&mut b, 4));
+    }
+}

@@ -1,0 +1,276 @@
+//! §4 — computing an arbitrary element of the dictionary order.
+//!
+//! [`unrank_into`] is a faithful implementation of the paper's
+//! *combinatorial addition* (Fig. 1 pseudo-code + the Example 1
+//! narrative): starting from the First Member `[1..m]`, repeatedly
+//! walk **left** along a row of the Pascal weight table
+//! `A(j,i) = C(i+j,j)`, subtracting the accumulated weight from `q` and
+//! advancing the last `j+1` places. Each stage touches one row, moving
+//! `p` columns left; the total work over all stages is bounded by the
+//! table width, giving the paper's `O(m·(n−m))` (table build) +
+//! `O(m + (n−m))` (walk) per element.
+//!
+//! Two transcription notes versus the printed pseudo-code (which is
+//! garbled in the PDF — see DESIGN.md §2):
+//!
+//! 1. The reset of the places *after* `m−j` must be to a **consecutive
+//!    run** (`B(h+1) = B(h) + 1`), not `+ p`; the Example 1 narrative
+//!    (`[2,3,4,5,6]` → `[2,5,6,7,8]`, “two units are added to the last four
+//!    places”) only works with `+1`, and Theorem 2's second case resets
+//!    the tail to `m−k+1, m−k+2, …` — consecutive.
+//! 2. The paper's final `B(m) = B(m) + q` line is the degenerate `j = 0`
+//!    row walk (all table entries 1); the loop below handles it
+//!    uniformly.
+//!
+//! [`unrank_lex`] is an *independently derived* greedy unranker (count
+//! how many combinations each candidate first-element skips) used as a
+//! cross-check; `rust/tests/combin_props.rs` proves the two agree
+//! exhaustively for every `(n ≤ 14, m, q)` and on random large cases.
+
+use super::pascal::PascalTable;
+use super::{binomial::binom_checked, combination_count};
+use crate::{Error, Result};
+
+/// One stage of the combinatorial-addition walk (for `--trace`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceStage {
+    /// Row of the Pascal table walked (the paper's `j`).
+    pub row_j: u64,
+    /// Column the walk started from.
+    pub col_start: u64,
+    /// Number of leftward steps taken (the paper's `p`).
+    pub steps_p: u64,
+    /// Total weight subtracted from `q` this stage.
+    pub sum: u128,
+    /// `q` before the stage.
+    pub q_before: u128,
+    /// `q` after the stage.
+    pub q_after: u128,
+    /// Combination after applying the stage.
+    pub b_after: Vec<u32>,
+}
+
+/// Unrank `q` into a caller-provided buffer (hot path — no allocation).
+///
+/// `out.len()` must equal `table.m()`. `q` must be `< C(n,m)`.
+pub fn unrank_into(table: &PascalTable, q: u128, out: &mut [u32]) -> Result<()> {
+    unrank_impl(table, q, out, &mut None)
+}
+
+/// Unrank with a stage-by-stage trace (reproduces the paper's Example 1).
+pub fn unrank_traced(n: u64, m: u64, q: u128) -> Result<(Vec<u32>, Vec<TraceStage>)> {
+    combination_count(n, m)?; // validate before the table asserts
+    let table = PascalTable::new(n, m)?;
+    let mut out = vec![0u32; m as usize];
+    let mut trace = Some(Vec::new());
+    unrank_impl(&table, q, &mut out, &mut trace)?;
+    Ok((out, trace.unwrap()))
+}
+
+/// Convenience allocating wrapper: the `q`-th m-combination of `{1..n}`.
+pub fn unrank(n: u64, m: u64, q: u128) -> Result<Vec<u32>> {
+    combination_count(n, m)?; // validate before the table asserts
+    let table = PascalTable::new(n, m)?;
+    let mut out = vec![0u32; m as usize];
+    unrank_into(&table, q, &mut out)?;
+    Ok(out)
+}
+
+fn unrank_impl(
+    table: &PascalTable,
+    q: u128,
+    out: &mut [u32],
+    trace: &mut Option<Vec<TraceStage>>,
+) -> Result<()> {
+    let m = table.m();
+    let n = table.n();
+    if out.len() != m as usize {
+        return Err(Error::Shape(format!(
+            "unrank buffer has len {}, expected m={m}",
+            out.len()
+        )));
+    }
+    let total = combination_count(n, m)?;
+    if q >= total {
+        return Err(Error::Combinatorics(format!(
+            "rank q={q} out of range [0, C({n},{m}) = {total})"
+        )));
+    }
+
+    // First Member [1, 2, …, m].
+    for (t, slot) in out.iter_mut().enumerate() {
+        *slot = t as u32 + 1;
+    }
+
+    let mut q = q;
+    // Rightmost usable column of the weight table (the paper's `k`).
+    let mut col = n - m;
+
+    while q > 0 {
+        // Scan for the deepest row whose entry at `col` still fits in q
+        // (the paper's `While A(j,k) ≤ q: j++ … j−−`). Row j exists for
+        // every q ≥ 1 because A(0, col) = 1.
+        let mut j = 0u64;
+        while j + 1 < m && table.at(j + 1, col) <= q {
+            j += 1;
+        }
+
+        // Walk left along row j accumulating weights (`Sum`, `p`).
+        let mut sum: u128 = 0;
+        let mut p: u64 = 0;
+        let mut i = col as i64;
+        while i >= 0 {
+            let w = table.at(j, i as u64);
+            if sum + w > q {
+                break;
+            }
+            sum += w;
+            p += 1;
+            i -= 1;
+        }
+        debug_assert!(p >= 1, "scan guaranteed A(j,col) ≤ q");
+
+        // Advance place m−j by p and reset the tail to a consecutive run
+        // (transcription note 1 above).
+        let lead = (m - 1 - j) as usize; // 0-based index of place m−j
+        out[lead] += p as u32;
+        for h in lead + 1..m as usize {
+            out[h] = out[h - 1] + 1;
+        }
+
+        q -= sum;
+        let col_start = col;
+        col -= p;
+
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceStage {
+                row_j: j,
+                col_start,
+                steps_p: p,
+                sum,
+                q_before: q + sum,
+                q_after: q,
+                b_after: out.to_vec(),
+            });
+        }
+    }
+    debug_assert!(
+        super::is_ascending(out, n),
+        "unrank produced non-ascending {out:?}"
+    );
+    Ok(())
+}
+
+/// Independently derived lexicographic unranker (cross-check oracle).
+///
+/// Greedy over places: candidate value `v` for place `t` owns a block of
+/// `C(n−v, m−t)` combinations; skip whole blocks until `q` lands inside.
+pub fn unrank_lex(n: u64, m: u64, q: u128) -> Result<Vec<u32>> {
+    let total = combination_count(n, m)?;
+    if q >= total {
+        return Err(Error::Combinatorics(format!(
+            "rank q={q} out of range [0, C({n},{m}) = {total})"
+        )));
+    }
+    let mut out = Vec::with_capacity(m as usize);
+    let mut r = q;
+    let mut v = 1u64;
+    for t in 1..=m {
+        loop {
+            let block = binom_checked(n - v, m - t)?;
+            if r < block {
+                break;
+            }
+            r -= block;
+            v += 1;
+        }
+        out.push(v as u32);
+        v += 1;
+    }
+    debug_assert_eq!(r, 0);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_and_last_member() {
+        assert_eq!(unrank(8, 5, 0).unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(unrank(8, 5, 55).unwrap(), vec![4, 5, 6, 7, 8]);
+        assert_eq!(unrank_lex(8, 5, 0).unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(unrank_lex(8, 5, 55).unwrap(), vec![4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn example_1_q49() {
+        // Paper §4 Example 1: q=49, n=8, m=5 ⇒ B₄₉ = `[2,5,6,7,8]`.
+        assert_eq!(unrank(8, 5, 49).unwrap(), vec![2, 5, 6, 7, 8]);
+        assert_eq!(unrank_lex(8, 5, 49).unwrap(), vec![2, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn example_1_trace_matches_narrative() {
+        let (b, trace) = unrank_traced(8, 5, 49).unwrap();
+        assert_eq!(b, vec![2, 5, 6, 7, 8]);
+        assert_eq!(trace.len(), 2, "Example 1 finishes in two stages");
+        // Stage 1: row j=4, one step (p=1), Sum = C(7,4) = 35, q 49→14,
+        // intermediate sequence `[2,3,4,5,6]`.
+        assert_eq!(trace[0].row_j, 4);
+        assert_eq!(trace[0].steps_p, 1);
+        assert_eq!(trace[0].sum, 35);
+        assert_eq!(trace[0].q_after, 14);
+        assert_eq!(trace[0].b_after, vec![2, 3, 4, 5, 6]);
+        // Stage 2: row j=3 from column n−m−p = 2, two steps,
+        // Sum = C(5,3)+C(4,3) = 14, q → 0.
+        assert_eq!(trace[1].row_j, 3);
+        assert_eq!(trace[1].col_start, 2);
+        assert_eq!(trace[1].steps_p, 2);
+        assert_eq!(trace[1].sum, 14);
+        assert_eq!(trace[1].q_after, 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(unrank(8, 5, 56).is_err());
+        assert!(unrank_lex(8, 5, 56).is_err());
+        assert!(unrank(3, 5, 0).is_err());
+    }
+
+    #[test]
+    fn square_case_has_single_element() {
+        assert_eq!(unrank(5, 5, 0).unwrap(), vec![1, 2, 3, 4, 5]);
+        assert!(unrank(5, 5, 1).is_err());
+    }
+
+    #[test]
+    fn m_equals_one() {
+        for q in 0..8u128 {
+            assert_eq!(unrank(8, 1, q).unwrap(), vec![q as u32 + 1]);
+        }
+    }
+
+    #[test]
+    fn buffer_shape_checked() {
+        let t = PascalTable::new(8, 5).unwrap();
+        let mut buf = vec![0u32; 4];
+        assert!(unrank_into(&t, 0, &mut buf).is_err());
+    }
+
+    #[test]
+    fn paper_vs_lex_exhaustive_small() {
+        for n in 1..=10u64 {
+            for m in 1..=n {
+                let total = combination_count(n, m).unwrap();
+                for q in 0..total {
+                    assert_eq!(
+                        unrank(n, m, q).unwrap(),
+                        unrank_lex(n, m, q).unwrap(),
+                        "n={n} m={m} q={q}"
+                    );
+                }
+            }
+        }
+    }
+}

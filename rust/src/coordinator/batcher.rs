@@ -1,0 +1,198 @@
+//! Batch assembly: gathers column-submatrices + Radić signs into the
+//! fixed-size buffers the AOT artifact expects.
+//!
+//! Padding contract (shared with `python/compile/model.py`): unfilled
+//! lanes hold the **identity matrix with sign 0**, so they contribute
+//! exactly 0 to the partial sum and a harmless 1.0 to the dets vector.
+//!
+//! Perf note (EXPERIMENTS.md §Perf iteration 2): padding is applied
+//! *lazily* by [`BatchBuilder::finalize`] — only the tail lanes of the
+//! final short batch are written. The original eager `clear()` repadded
+//! the whole 256-lane buffer (≈ 150 KiB for m=8) on every batch, which
+//! showed up as ~8% of job time.
+
+use crate::combin::radic_sign;
+use crate::matrix::MatF64;
+
+/// Reusable fixed-size batch buffer.
+#[derive(Clone, Debug)]
+pub struct BatchBuilder {
+    m: usize,
+    batch: usize,
+    subs: Vec<f64>,
+    signs: Vec<f64>,
+    live: usize,
+}
+
+impl BatchBuilder {
+    /// New builder for `(m, batch)`, fully padded.
+    pub fn new(m: usize, batch: usize) -> Self {
+        assert!(m >= 1 && batch >= 1);
+        let mut b = Self {
+            m,
+            batch,
+            subs: vec![0.0; batch * m * m],
+            signs: vec![0.0; batch],
+            live: 0,
+        };
+        b.pad_tail(0);
+        b
+    }
+
+    /// Write identity/0-sign padding into lanes `from..batch`.
+    fn pad_tail(&mut self, from: usize) {
+        let (m, mm) = (self.m, self.m * self.m);
+        for lane in from..self.batch {
+            let buf = &mut self.subs[lane * mm..(lane + 1) * mm];
+            buf.fill(0.0);
+            for d in 0..m {
+                buf[d * m + d] = 1.0;
+            }
+            self.signs[lane] = 0.0;
+        }
+    }
+
+    /// Reset to empty. O(1) — stale lane contents are overwritten by
+    /// subsequent `push`es and masked by `finalize`.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.live = 0;
+    }
+
+    /// Gather `a[:, cols]` into the next lane. Panics if full
+    /// (callers check [`Self::is_full`]).
+    #[inline]
+    pub fn push(&mut self, a: &MatF64, cols: &[u32]) {
+        assert!(self.live < self.batch, "batch overflow");
+        debug_assert_eq!(cols.len(), self.m);
+        let mm = self.m * self.m;
+        let lane = &mut self.subs[self.live * mm..(self.live + 1) * mm];
+        a.gather_cols_into(cols, lane);
+        self.signs[self.live] = radic_sign(cols);
+        self.live += 1;
+    }
+
+    /// Pad the tail (if any) and hand out the engine buffers.
+    ///
+    /// `subs` is mutable so in-place engines (LU) can eliminate without
+    /// a scratch copy; the contents are consumed — call [`Self::clear`]
+    /// before reuse.
+    pub fn finalize(&mut self) -> (&mut [f64], &[f64], usize) {
+        if self.live < self.batch {
+            self.pad_tail(self.live);
+        }
+        (&mut self.subs, &self.signs, self.live)
+    }
+
+    /// Lanes currently filled.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// True when no lane is free.
+    pub fn is_full(&self) -> bool {
+        self.live == self.batch
+    }
+
+    /// True when no lane is filled.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Batch capacity.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Submatrix order.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Read-only view of the raw buffers (tests/diagnostics; call
+    /// [`Self::finalize`] first if padding must be in place).
+    pub fn buffers(&self) -> (&[f64], &[f64], usize) {
+        (&self.subs, &self.signs, self.live)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::det_lu;
+    use crate::matrix::Mat;
+
+    fn sample() -> MatF64 {
+        Mat::from_rows(&[vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]])
+    }
+
+    #[test]
+    fn fresh_builder_is_identity_padded() {
+        let b = BatchBuilder::new(3, 4);
+        let (subs, signs, live) = b.buffers();
+        assert_eq!(live, 0);
+        assert!(signs.iter().all(|&s| s == 0.0));
+        for lane in 0..4 {
+            let lane_buf = &subs[lane * 9..(lane + 1) * 9];
+            assert_eq!(det_lu(lane_buf, 3), 1.0, "identity lane");
+        }
+    }
+
+    #[test]
+    fn push_gathers_and_signs() {
+        let a = sample();
+        let mut b = BatchBuilder::new(2, 3);
+        b.push(&a, &[1, 2]); // s=3, r=3 ⇒ +1
+        b.push(&a, &[1, 3]); // s=4 ⇒ −1
+        let (subs, signs, live) = b.buffers();
+        assert_eq!(live, 2);
+        assert_eq!(&subs[0..4], &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(&subs[4..8], &[1.0, 3.0, 5.0, 7.0]);
+        assert_eq!(&signs[..2], &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn finalize_pads_only_the_tail() {
+        let a = sample();
+        let mut b = BatchBuilder::new(2, 4);
+        b.push(&a, &[2, 4]);
+        let (subs, signs, live) = b.finalize();
+        assert_eq!(live, 1);
+        assert_eq!(&subs[0..4], &[2.0, 4.0, 6.0, 8.0], "live lane untouched");
+        for lane in 1..4 {
+            assert_eq!(&subs[lane * 4..lane * 4 + 4], &[1.0, 0.0, 0.0, 1.0]);
+            assert_eq!(signs[lane], 0.0);
+        }
+    }
+
+    #[test]
+    fn clear_then_refill_masks_stale_lanes() {
+        let a = sample();
+        let mut b = BatchBuilder::new(2, 3);
+        b.push(&a, &[1, 2]);
+        b.push(&a, &[1, 3]);
+        b.push(&a, &[1, 4]);
+        // Engines may scribble on the buffer (in-place LU).
+        b.finalize().0.fill(7.7);
+        b.clear();
+        assert!(b.is_empty());
+        b.push(&a, &[3, 4]);
+        let (subs, signs, live) = b.finalize();
+        assert_eq!(live, 1);
+        assert_eq!(&subs[0..4], &[3.0, 4.0, 7.0, 8.0]);
+        // Stale lanes 1..3 are re-padded, signs zeroed.
+        for lane in 1..3 {
+            assert_eq!(&subs[lane * 4..lane * 4 + 4], &[1.0, 0.0, 0.0, 1.0]);
+            assert_eq!(signs[lane], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch overflow")]
+    fn overflow_panics() {
+        let a = sample();
+        let mut b = BatchBuilder::new(2, 1);
+        b.push(&a, &[1, 2]);
+        b.push(&a, &[1, 3]);
+    }
+}

@@ -1,0 +1,136 @@
+//! XLA dispatch — executor threads that own PJRT sessions.
+//!
+//! `PjRtClient` is not `Send`, so XLA execution happens on dedicated
+//! executor threads, each of which creates its own CPU client and
+//! compiles the artifact once. Workers interact through
+//! [`XlaEngineHandle`], a [`DetEngine`] that ships padded batch buffers
+//! over an mpsc channel and blocks on the reply — the same
+//! router/batcher shape a serving coordinator uses.
+
+use super::engine::DetEngine;
+use crate::runtime::{ArtifactSpec, BatchResult, XlaSession};
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One in-flight batch: buffers plus the reply slot.
+struct Job {
+    subs: Vec<f64>,
+    signs: Vec<f64>,
+    reply: mpsc::SyncSender<Result<BatchResult>>,
+}
+
+/// Pool of XLA executor threads sharing one job queue.
+///
+/// Owned behind an `Arc` in the coordinator's per-bucket cache; the
+/// executors stay warm across jobs and wind down when the dispatcher is
+/// dropped (the queue sender closes, each executor's `recv` errors out,
+/// and `Drop` joins the threads).
+pub struct XlaDispatcher {
+    tx: Option<mpsc::Sender<Job>>,
+    m: usize,
+    batch: usize,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl XlaDispatcher {
+    /// Spawn `executors` threads, each compiling `spec` on its own
+    /// client. Fails fast if the first executor cannot compile
+    /// (artifact missing/corrupt) rather than erroring per batch.
+    pub fn start(spec: &ArtifactSpec, executors: usize) -> Result<Self> {
+        assert!(executors >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::with_capacity(executors);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for _ in 0..executors {
+            let rx = Arc::clone(&rx);
+            let spec = spec.clone();
+            let ready = ready_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                let exe = match XlaSession::cpu().and_then(|s| s.load(&spec)) {
+                    Ok(exe) => {
+                        let _ = ready.send(Ok(()));
+                        exe
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // Hold the lock only while dequeueing.
+                    let job = { rx.lock().expect("queue poisoned").recv() };
+                    let Ok(job) = job else { break }; // dispatcher dropped
+                    let result = exe.run(&job.subs, &job.signs);
+                    let _ = job.reply.send(result);
+                }
+            }));
+        }
+        drop(ready_tx);
+        // All executors must come up.
+        for _ in 0..executors {
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Xla("executor thread died during startup".into()))??;
+        }
+        Ok(Self { tx: Some(tx), m: spec.m, batch: spec.batch, threads })
+    }
+
+    /// A worker-side engine handle feeding this dispatcher.
+    pub fn handle(&self) -> XlaEngineHandle {
+        XlaEngineHandle {
+            tx: self.tx.as_ref().expect("live dispatcher").clone(),
+            m: self.m,
+            batch: self.batch,
+        }
+    }
+}
+
+impl Drop for XlaDispatcher {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Worker-side [`DetEngine`] that proxies to the dispatcher.
+pub struct XlaEngineHandle {
+    tx: mpsc::Sender<Job>,
+    m: usize,
+    batch: usize,
+}
+
+impl DetEngine for XlaEngineHandle {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job {
+                subs: subs.to_vec(),
+                signs: signs.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Xla("dispatcher is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Xla("executor dropped the batch".into()))?
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+// Exercised by rust/tests/runtime_xla.rs and coordinator_e2e.rs (needs
+// compiled artifacts).

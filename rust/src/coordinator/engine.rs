@@ -1,0 +1,113 @@
+//! Determinant engines — the pluggable inner loop of the coordinator.
+//!
+//! [`CpuEngine`] evaluates batches with the in-crate LU (same pivoting
+//! policy as the Pallas kernel, so Cpu and Xla agree to rounding).
+//! [`super::dispatch::XlaEngineHandle`] is the XLA-backed implementation;
+//! both implement [`DetEngine`], which is what workers program against.
+
+use crate::linalg::{det_lu_inplace, NeumaierSum};
+use crate::runtime::BatchResult;
+use crate::Result;
+
+/// A batched signed-determinant evaluator.
+///
+/// `run_batch` receives *padded* buffers (`subs`: `(batch, m, m)`
+/// row-major; `signs`: `(batch,)` with zeros on padding lanes) and
+/// returns the signed partial sum plus per-lane dets. `subs` is mutable
+/// and **consumed**: in-place engines (LU) eliminate directly in the
+/// batch buffer instead of copying each lane to scratch
+/// (EXPERIMENTS.md §Perf iteration 3).
+pub trait DetEngine {
+    /// Submatrix order the engine is specialized for.
+    fn m(&self) -> usize;
+    /// Batch size the engine expects.
+    fn batch(&self) -> usize;
+    /// Evaluate one (padded) batch, destroying `subs`.
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult>;
+    /// Engine label for metrics/CLI output.
+    fn label(&self) -> &'static str;
+}
+
+/// Pure-rust LU engine (no artifacts required).
+pub struct CpuEngine {
+    m: usize,
+    batch: usize,
+}
+
+impl CpuEngine {
+    /// New engine for `(m, batch)`.
+    pub fn new(m: usize, batch: usize) -> Self {
+        Self { m, batch }
+    }
+}
+
+impl DetEngine for CpuEngine {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult> {
+        let (m, mm) = (self.m, self.m * self.m);
+        debug_assert_eq!(subs.len(), self.batch * mm);
+        debug_assert_eq!(signs.len(), self.batch);
+        let mut dets = Vec::with_capacity(self.batch);
+        let mut acc = NeumaierSum::new();
+        for (lane, chunk) in subs.chunks_exact_mut(mm).enumerate() {
+            let det = det_lu_inplace(chunk, m);
+            dets.push(det);
+            let s = signs[lane];
+            if s != 0.0 {
+                acc.add(s * det);
+            }
+        }
+        Ok(BatchResult { partial: acc.value(), dets })
+    }
+
+    fn label(&self) -> &'static str {
+        "cpu-lu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchBuilder;
+    use crate::matrix::{gen, Mat};
+    use crate::testkit::TestRng;
+
+    #[test]
+    fn cpu_engine_signed_sum() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let mut b = BatchBuilder::new(2, 4);
+        for cols in [[1u32, 2], [1, 3], [2, 3]] {
+            b.push(&a, &cols);
+        }
+        let (subs, signs, _) = b.finalize();
+        let signs = signs.to_vec();
+        let mut eng = CpuEngine::new(2, 4);
+        let out = eng.run_batch(subs, &signs).unwrap();
+        // +D12 − D13 + D23 = −3 + 6 − 3 = 0.
+        assert!(out.partial.abs() < 1e-12, "partial {}", out.partial);
+        assert_eq!(out.dets.len(), 4);
+        assert_eq!(out.dets[3], 1.0, "identity padding lane");
+    }
+
+    #[test]
+    fn padding_lanes_do_not_contribute() {
+        let a = gen::uniform(&mut TestRng::from_seed(3), 3, 5, -1.0, 1.0);
+        let mut partial = BatchBuilder::new(3, 8);
+        for cols in [[1u32, 2, 3], [1, 2, 4], [1, 2, 5]] {
+            partial.push(&a, &cols);
+        }
+        let mut eng = CpuEngine::new(3, 8);
+        let (s1, g1, _) = partial.finalize();
+        let g1 = g1.to_vec();
+        let r1 = eng.run_batch(s1, &g1).unwrap();
+        let manual: f64 = r1.dets.iter().zip(&g1).map(|(d, s)| d * s).sum();
+        assert!((r1.partial - manual).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,124 @@
+//! Lightweight metrics: per-worker counters aggregated into a job
+//! summary (printed by the CLI and consumed by the benches).
+
+use std::time::Duration;
+
+/// Counters collected by one worker over one job.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerMetrics {
+    /// Combinations (Radić terms) processed.
+    pub terms: u64,
+    /// Batches submitted to the engine.
+    pub batches: u64,
+    /// Chunks claimed from the scheduler.
+    pub chunks: u64,
+    /// Time enumerating + gathering (the paper's parallel part).
+    pub gather_time: Duration,
+    /// Time inside the engine (ref \[7\]'s inner determinant).
+    pub engine_time: Duration,
+}
+
+impl WorkerMetrics {
+    /// Fold another worker's counters in.
+    pub fn merge(&mut self, other: &WorkerMetrics) {
+        self.terms += other.terms;
+        self.batches += other.batches;
+        self.chunks += other.chunks;
+        self.gather_time += other.gather_time;
+        self.engine_time += other.engine_time;
+    }
+}
+
+/// Aggregated job metrics.
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    /// Per-worker snapshots (index = worker id).
+    pub workers: Vec<WorkerMetrics>,
+    /// Wall-clock for the whole job.
+    pub elapsed: Duration,
+}
+
+impl JobMetrics {
+    /// Sum across workers.
+    pub fn total(&self) -> WorkerMetrics {
+        let mut t = WorkerMetrics::default();
+        for w in &self.workers {
+            t.merge(w);
+        }
+        t
+    }
+
+    /// Terms per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        let terms = self.total().terms as f64;
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            terms / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Load-balance ratio: min/max worker terms (1.0 = perfectly even).
+    pub fn balance(&self) -> f64 {
+        let active: Vec<u64> = self
+            .workers
+            .iter()
+            .map(|w| w.terms)
+            .filter(|&t| t > 0)
+            .collect();
+        match (active.iter().min(), active.iter().max()) {
+            (Some(&min), Some(&max)) if max > 0 => min as f64 / max as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Human-readable one-job report.
+    pub fn render(&self) -> String {
+        let t = self.total();
+        format!(
+            "terms={} batches={} chunks={} workers={} elapsed={:?} throughput={:.0}/s balance={:.2}",
+            t.terms,
+            t.batches,
+            t.chunks,
+            self.workers.len(),
+            self.elapsed,
+            self.throughput(),
+            self.balance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_total() {
+        let a = WorkerMetrics { terms: 10, batches: 2, chunks: 1, ..Default::default() };
+        let b = WorkerMetrics { terms: 30, batches: 4, chunks: 1, ..Default::default() };
+        let jm = JobMetrics { workers: vec![a, b], elapsed: Duration::from_secs(2) };
+        let t = jm.total();
+        assert_eq!(t.terms, 40);
+        assert_eq!(t.batches, 6);
+        assert_eq!(jm.throughput(), 20.0);
+        assert!((jm.balance() - 10.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balance_ignores_idle_workers() {
+        let a = WorkerMetrics { terms: 5, ..Default::default() };
+        let idle = WorkerMetrics::default();
+        let jm = JobMetrics { workers: vec![a, idle], elapsed: Duration::ZERO };
+        assert_eq!(jm.balance(), 1.0);
+    }
+
+    #[test]
+    fn render_mentions_terms() {
+        let jm = JobMetrics {
+            workers: vec![WorkerMetrics { terms: 7, ..Default::default() }],
+            elapsed: Duration::from_millis(10),
+        };
+        assert!(jm.render().contains("terms=7"));
+    }
+}

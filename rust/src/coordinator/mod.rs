@@ -1,0 +1,452 @@
+//! L3 coordinator — the paper's §5 parallel algorithm as a system.
+//!
+//! A job (`radic_det`) is planned as `C(n,m)` dictionary-order ranks,
+//! partitioned across workers ([`scheduler`]), each of which unranks its
+//! chunk start once ([`crate::combin::CombinationStream`]), gathers
+//! column-submatrices + Radić signs into fixed batches ([`batcher`]),
+//! and evaluates them on a pluggable engine ([`engine`]): pure-rust LU
+//! or the AOT-compiled JAX/Pallas graph via PJRT ([`dispatch`]).
+//! Worker partial sums are Neumaier-compensated and merged
+//! deterministically in worker order.
+
+pub mod batcher;
+pub mod dispatch;
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+
+pub use batcher::BatchBuilder;
+pub use engine::{CpuEngine, DetEngine};
+pub use metrics::{JobMetrics, WorkerMetrics};
+pub use scheduler::{JobSchedule, Schedule};
+
+use crate::combin::{combination_count, PascalTable};
+use crate::linalg::{det_bareiss, NeumaierSum};
+use crate::matrix::{MatF64, MatI64};
+use crate::runtime::{resolve_artifact_dir, Dtype, Manifest};
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Which determinant engine evaluates batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// XLA if an artifact bucket exists for `m`, else CPU.
+    Auto,
+    /// Pure-rust LU.
+    Cpu,
+    /// AOT JAX/Pallas graph via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads (0 ⇒ available parallelism).
+    pub workers: usize,
+    /// Preferred batch size (the XLA engine snaps to the closest
+    /// artifact bucket ≤ this).
+    pub batch: usize,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Scheduling policy.
+    pub schedule: Schedule,
+    /// Artifact directory override.
+    pub artifact_dir: Option<PathBuf>,
+    /// XLA executor threads (PJRT sessions).
+    pub xla_executors: usize,
+    /// Refuse jobs with more terms than this.
+    pub term_cap: u128,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            batch: 256,
+            engine: EngineKind::Auto,
+            schedule: Schedule::Static,
+            artifact_dir: None,
+            xla_executors: 2,
+            term_cap: 1 << 36,
+        }
+    }
+}
+
+/// Result of one Radić determinant job.
+#[derive(Clone, Debug)]
+pub struct RadicOutput {
+    /// The determinant.
+    pub det: f64,
+    /// Number of Radić terms evaluated.
+    pub terms: u128,
+    /// Engine label actually used.
+    pub engine: &'static str,
+    /// Aggregated metrics.
+    pub metrics: JobMetrics,
+}
+
+/// The L3 coordinator. Cheap to construct; one instance serves many jobs.
+///
+/// XLA dispatchers (PJRT sessions + compiled executables) are cached per
+/// `(m, batch)` bucket and reused across jobs — compilation happens once
+/// per bucket per coordinator, not per request (EXPERIMENTS.md §Perf
+/// iteration 4: ~0.7 s saved on every small XLA job after the first).
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    manifest: Option<Manifest>,
+    dispatchers: std::sync::Mutex<std::collections::HashMap<(usize, usize), std::sync::Arc<dispatch::XlaDispatcher>>>,
+}
+
+impl Coordinator {
+    /// Build a coordinator. The artifact manifest is loaded lazily-
+    /// tolerantly: absence is only an error if a job later *requires*
+    /// the XLA engine.
+    pub fn new(cfg: CoordinatorConfig) -> Result<Self> {
+        let manifest = resolve_artifact_dir(cfg.artifact_dir.as_deref())
+            .map(|dir| Manifest::load(&dir))
+            .transpose()?;
+        if matches!(cfg.engine, EngineKind::Xla) && manifest.is_none() {
+            return Err(Error::Artifact(
+                "EngineKind::Xla requires artifacts — run `make artifacts`".into(),
+            ));
+        }
+        Ok(Self {
+            cfg,
+            manifest,
+            dispatchers: std::sync::Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Effective worker count.
+    pub fn workers(&self) -> usize {
+        if self.cfg.workers > 0 {
+            self.cfg.workers
+        } else {
+            std::thread::available_parallelism().map_or(4, |p| p.get())
+        }
+    }
+
+    /// Configuration in use.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Loaded manifest (if any).
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Parallel Radić determinant (Definition 3) of an `m×n` matrix.
+    pub fn radic_det(&self, a: &MatF64) -> Result<RadicOutput> {
+        let (m, n) = (a.rows(), a.cols());
+        if m > n {
+            // Definition 3: det(A) = 0 when m > n — no enumeration.
+            return Ok(RadicOutput {
+                det: 0.0,
+                terms: 0,
+                engine: "none",
+                metrics: JobMetrics::default(),
+            });
+        }
+        let total = combination_count(n as u64, m as u64)?;
+        if total > self.cfg.term_cap {
+            return Err(Error::JobTooLarge {
+                n: n as u64,
+                m: m as u64,
+                total,
+                cap: self.cfg.term_cap,
+            });
+        }
+
+        // Engine selection.
+        let use_xla = match self.cfg.engine {
+            EngineKind::Cpu => false,
+            EngineKind::Xla => true,
+            EngineKind::Auto => self
+                .manifest
+                .as_ref()
+                .map(|man| man.find(m, Dtype::F64, self.cfg.batch).is_ok())
+                .unwrap_or(false),
+        };
+
+        let workers = self.workers();
+        let started = Instant::now();
+        let (label, batch, dispatcher) = if use_xla {
+            let man = self.manifest.as_ref().ok_or_else(|| {
+                Error::Artifact("XLA engine requested but no manifest loaded".into())
+            })?;
+            let spec = man.find(m, Dtype::F64, self.cfg.batch)?;
+            // Reuse (or build) the cached dispatcher for this bucket.
+            let d = {
+                let mut cache = self.dispatchers.lock().expect("dispatcher cache poisoned");
+                match cache.entry((spec.m, spec.batch)) {
+                    std::collections::hash_map::Entry::Occupied(e) => std::sync::Arc::clone(e.get()),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let d = std::sync::Arc::new(dispatch::XlaDispatcher::start(
+                            spec,
+                            self.cfg.xla_executors.max(1),
+                        )?);
+                        e.insert(std::sync::Arc::clone(&d));
+                        d
+                    }
+                }
+            };
+            ("xla-pjrt", spec.batch, Some(d))
+        } else {
+            ("cpu-lu", self.cfg.batch.max(1), None)
+        };
+
+        // Per-worker engines (built up front; moved into threads).
+        let engines: Vec<Box<dyn DetEngine + Send>> = (0..workers)
+            .map(|_| -> Box<dyn DetEngine + Send> {
+                match &dispatcher {
+                    Some(d) => Box::new(d.handle()),
+                    None => Box::new(CpuEngine::new(m, batch)),
+                }
+            })
+            .collect();
+
+        let table = PascalTable::new(n as u64, m as u64)?;
+        let job = JobSchedule::new(self.cfg.schedule, total, workers);
+
+        let results: Vec<Result<(NeumaierSum, WorkerMetrics)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for (w, eng) in engines.into_iter().enumerate() {
+                    let table = &table;
+                    let job = &job;
+                    handles.push(scope.spawn(move || worker_loop(w, eng, a, table, job)));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker panicked"))
+                    .collect()
+            });
+
+        drop(dispatcher); // cached — executor threads stay warm
+
+        // Deterministic merge in worker order.
+        let mut sum = NeumaierSum::new();
+        let mut jm = JobMetrics::default();
+        for r in results {
+            let (partial, wm) = r?;
+            sum.merge(&partial);
+            jm.workers.push(wm);
+        }
+        jm.elapsed = started.elapsed();
+        Ok(RadicOutput { det: sum.value(), terms: total, engine: label, metrics: jm })
+    }
+
+    /// Parallel *exact* Radić determinant for integer matrices
+    /// (Bareiss inner engine, `i128` partials, overflow-checked).
+    pub fn radic_det_exact(&self, a: &MatI64) -> Result<i128> {
+        let (m, n) = (a.rows(), a.cols());
+        if m > n {
+            return Ok(0);
+        }
+        let total = combination_count(n as u64, m as u64)?;
+        if total > self.cfg.term_cap {
+            return Err(Error::JobTooLarge {
+                n: n as u64,
+                m: m as u64,
+                total,
+                cap: self.cfg.term_cap,
+            });
+        }
+        let workers = self.workers();
+        let table = PascalTable::new(n as u64, m as u64)?;
+        let job = JobSchedule::new(self.cfg.schedule, total, workers);
+        let partials: Vec<Result<i128>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let table = &table;
+                let job = &job;
+                handles.push(scope.spawn(move || exact_worker_loop(w, a, table, job)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect()
+        });
+        let mut acc: i128 = 0;
+        for p in partials {
+            acc = acc
+                .checked_add(p?)
+                .ok_or(Error::ExactOverflow("radic sum"))?;
+        }
+        Ok(acc)
+    }
+}
+
+/// One worker: claim chunks, stream combinations, batch, evaluate.
+fn worker_loop(
+    w: usize,
+    mut eng: Box<dyn DetEngine + Send>,
+    a: &MatF64,
+    table: &PascalTable,
+    job: &JobSchedule,
+) -> Result<(NeumaierSum, WorkerMetrics)> {
+    let m = a.rows();
+    let mut builder = BatchBuilder::new(m, eng.batch());
+    let mut acc = NeumaierSum::new();
+    let mut wm = WorkerMetrics::default();
+    let mut src = job.source(w);
+
+    let flush =
+        |builder: &mut BatchBuilder, acc: &mut NeumaierSum, wm: &mut WorkerMetrics, eng: &mut Box<dyn DetEngine + Send>| -> Result<()> {
+            if builder.is_empty() {
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let out = {
+                // finalize() hands back disjoint field borrows
+                // (mutable subs for in-place LU, shared signs).
+                let (subs, signs, _) = builder.finalize();
+                eng.run_batch(subs, signs)?
+            };
+            wm.engine_time += t0.elapsed();
+            wm.batches += 1;
+            acc.add(out.partial);
+            builder.clear();
+            Ok(())
+        };
+
+    while let Some(chunk) = src.next_chunk() {
+        wm.chunks += 1;
+        let mut stream = crate::combin::CombinationStream::new(table, chunk.start, chunk.len)?;
+        // Timing is chunk-granular: a per-term Instant::now() pair costs
+        // more than the gather itself (measured ~40% of job time on the
+        // baseline — see EXPERIMENTS.md §Perf).
+        let mut t0 = Instant::now();
+        while let Some(cols) = stream.next_ref() {
+            builder.push(a, cols);
+            wm.terms += 1;
+            if builder.is_full() {
+                wm.gather_time += t0.elapsed();
+                flush(&mut builder, &mut acc, &mut wm, &mut eng)?;
+                t0 = Instant::now();
+            }
+        }
+        wm.gather_time += t0.elapsed();
+    }
+    flush(&mut builder, &mut acc, &mut wm, &mut eng)?;
+    Ok((acc, wm))
+}
+
+/// Exact-path worker: Bareiss per combination, `i128` partial.
+fn exact_worker_loop(
+    w: usize,
+    a: &MatI64,
+    table: &PascalTable,
+    job: &JobSchedule,
+) -> Result<i128> {
+    let m = a.rows();
+    let mut scratch = vec![0i64; m * m];
+    let mut acc: i128 = 0;
+    let mut src = job.source(w);
+    while let Some(chunk) = src.next_chunk() {
+        let mut stream = crate::combin::CombinationStream::new(table, chunk.start, chunk.len)?;
+        while let Some(cols) = stream.next_ref() {
+            a.gather_cols_into(cols, &mut scratch);
+            let det = det_bareiss(&scratch, m)?;
+            let signed = if crate::combin::radic_sign(cols) > 0.0 { det } else { -det };
+            acc = acc
+                .checked_add(signed)
+                .ok_or(Error::ExactOverflow("radic sum"))?;
+        }
+    }
+    let _ = w;
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{radic_det_exact, radic_det_seq};
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn cpu_coord(workers: usize, schedule: Schedule) -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            workers,
+            engine: EngineKind::Cpu,
+            schedule,
+            batch: 32,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_static() {
+        let a = gen::uniform(&mut TestRng::from_seed(1), 4, 12, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        for workers in [1, 2, 5] {
+            let out = cpu_coord(workers, Schedule::Static).radic_det(&a).unwrap();
+            assert_eq!(out.terms, 495);
+            assert!(
+                (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+                "workers={workers}: {} vs {seq}",
+                out.det
+            );
+            assert_eq!(out.metrics.total().terms, 495);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_stealing() {
+        let a = gen::uniform(&mut TestRng::from_seed(2), 3, 14, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        let out = cpu_coord(4, Schedule::WorkStealing { grain: 17 })
+            .radic_det(&a)
+            .unwrap();
+        assert!((out.det - seq).abs() < 1e-9 * seq.abs().max(1.0));
+        assert_eq!(out.metrics.total().terms, 364); // C(14,3)
+    }
+
+    #[test]
+    fn m_greater_than_n_short_circuits() {
+        let a = gen::uniform(&mut TestRng::from_seed(3), 5, 3, -1.0, 1.0);
+        let out = cpu_coord(2, Schedule::Static).radic_det(&a).unwrap();
+        assert_eq!(out.det, 0.0);
+        assert_eq!(out.terms, 0);
+    }
+
+    #[test]
+    fn term_cap_enforced() {
+        let mut cfg = CoordinatorConfig {
+            engine: EngineKind::Cpu,
+            term_cap: 100,
+            ..Default::default()
+        };
+        cfg.workers = 2;
+        let coord = Coordinator::new(cfg).unwrap();
+        let a = gen::uniform(&mut TestRng::from_seed(4), 4, 12, -1.0, 1.0);
+        assert!(matches!(
+            coord.radic_det(&a),
+            Err(Error::JobTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn exact_parallel_matches_sequential() {
+        let a = gen::integer(&mut TestRng::from_seed(5), 3, 9, -7, 7);
+        let seq = radic_det_exact(&a).unwrap();
+        for workers in [1, 3] {
+            let got = cpu_coord(workers, Schedule::Static)
+                .radic_det_exact(&a)
+                .unwrap();
+            assert_eq!(got, seq, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn square_case_is_plain_det() {
+        let a = gen::uniform(&mut TestRng::from_seed(6), 5, 5, -2.0, 2.0);
+        let out = cpu_coord(3, Schedule::Static).radic_det(&a).unwrap();
+        let plain = crate::linalg::det_lu(a.data(), 5);
+        assert!((out.det - plain).abs() < 1e-10 * plain.abs().max(1.0));
+        assert_eq!(out.terms, 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Work distribution across workers.
+//!
+//! * [`Schedule::Static`] — the paper's §5 granularity: `C(n,m)/k`
+//!   contiguous ranks per processor, fixed up front.
+//! * [`Schedule::WorkStealing`] — an ablation the paper doesn't have:
+//!   workers claim fixed-size rank blocks from a shared atomic cursor,
+//!   which rides out load imbalance (e.g. one worker descheduled) at the
+//!   cost of one atomic RMW per block. `benches/bench_scaling.rs`
+//!   compares the two.
+
+use crate::combin::{partition_total, Chunk};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// One contiguous chunk per worker (paper §5).
+    Static,
+    /// Shared cursor over blocks of `grain` ranks.
+    WorkStealing {
+        /// Ranks claimed per cursor increment (typically a few batches).
+        grain: u64,
+    },
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Schedule::Static
+    }
+}
+
+/// A source of rank chunks for one worker.
+pub enum WorkSource<'a> {
+    /// The worker's single static chunk.
+    Fixed(Option<Chunk>),
+    /// Shared-cursor claimer.
+    Stealing { cursor: &'a AtomicU64, total: u64, grain: u64 },
+}
+
+impl WorkSource<'_> {
+    /// Claim the next chunk, or `None` when the job is exhausted.
+    pub fn next_chunk(&mut self) -> Option<Chunk> {
+        match self {
+            WorkSource::Fixed(slot) => slot.take().filter(|c| c.len > 0),
+            WorkSource::Stealing { cursor, total, grain } => {
+                let start = cursor.fetch_add(*grain, Ordering::Relaxed);
+                if start >= *total {
+                    return None;
+                }
+                let len = (*grain).min(*total - start);
+                Some(Chunk { start: start as u128, len: len as u128 })
+            }
+        }
+    }
+}
+
+/// Per-job scheduler state shared by all workers.
+pub struct JobSchedule {
+    schedule: Schedule,
+    chunks: Vec<Chunk>,
+    cursor: AtomicU64,
+    total: u64,
+}
+
+impl JobSchedule {
+    /// Plan a job of `total` ranks over `workers` workers.
+    ///
+    /// `total` must fit u64 for work-stealing (the coordinator's term
+    /// cap guarantees this long before the cursor would saturate).
+    pub fn new(schedule: Schedule, total: u128, workers: usize) -> Self {
+        let chunks = match schedule {
+            Schedule::Static => partition_total(total, workers),
+            Schedule::WorkStealing { .. } => Vec::new(),
+        };
+        Self {
+            schedule,
+            chunks,
+            cursor: AtomicU64::new(0),
+            total: u64::try_from(total).expect("term cap keeps totals in u64"),
+        }
+    }
+
+    /// The work source for worker `w`.
+    pub fn source(&self, w: usize) -> WorkSource<'_> {
+        match self.schedule {
+            Schedule::Static => WorkSource::Fixed(self.chunks.get(w).copied()),
+            Schedule::WorkStealing { grain } => WorkSource::Stealing {
+                cursor: &self.cursor,
+                total: self.total,
+                grain: grain.max(1),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(mut src: WorkSource<'_>) -> Vec<Chunk> {
+        let mut v = Vec::new();
+        while let Some(c) = src.next_chunk() {
+            v.push(c);
+        }
+        v
+    }
+
+    #[test]
+    fn static_one_chunk_per_worker() {
+        let js = JobSchedule::new(Schedule::Static, 10, 3);
+        let all: Vec<Chunk> = (0..3).flat_map(|w| drain(js.source(w))).collect();
+        let covered: u128 = all.iter().map(|c| c.len).sum();
+        assert_eq!(covered, 10);
+        assert_eq!(all.len(), 3);
+    }
+
+    #[test]
+    fn static_extra_workers_idle() {
+        let js = JobSchedule::new(Schedule::Static, 2, 5);
+        let nonempty = (0..5).filter(|&w| !drain(js.source(w)).is_empty()).count();
+        assert_eq!(nonempty, 2);
+    }
+
+    #[test]
+    fn stealing_covers_exactly_once() {
+        let js = JobSchedule::new(Schedule::WorkStealing { grain: 3 }, 10, 4);
+        // Sequentially drain from several sources; chunks must tile [0,10).
+        let mut all: Vec<Chunk> = (0..4).flat_map(|w| drain(js.source(w))).collect();
+        all.sort_by_key(|c| c.start);
+        let mut cursor = 0u128;
+        for c in &all {
+            assert_eq!(c.start, cursor);
+            cursor = c.end();
+        }
+        assert_eq!(cursor, 10);
+    }
+
+    #[test]
+    fn stealing_concurrent_no_overlap() {
+        let js = std::sync::Arc::new(JobSchedule::new(
+            Schedule::WorkStealing { grain: 7 },
+            100_000,
+            8,
+        ));
+        let mut handles = Vec::new();
+        for w in 0..8 {
+            let js = std::sync::Arc::clone(&js);
+            handles.push(std::thread::spawn(move || {
+                let mut src = js.source(w);
+                let mut claimed = Vec::new();
+                while let Some(c) = src.next_chunk() {
+                    claimed.push(c);
+                }
+                claimed
+            }));
+        }
+        let mut all: Vec<Chunk> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_by_key(|c| c.start);
+        let mut cursor = 0u128;
+        for c in &all {
+            assert_eq!(c.start, cursor, "overlap/gap at {cursor}");
+            cursor = c.end();
+        }
+        assert_eq!(cursor, 100_000);
+    }
+}

@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+/// Unified error for all raddet subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Combinatorial argument out of range (e.g. `m > n`, rank ≥ C(n,m)).
+    #[error("combinatorics: {0}")]
+    Combinatorics(String),
+
+    /// Binomial/rank arithmetic would overflow u128.
+    #[error("binomial overflow: C({n},{k}) exceeds u128")]
+    BinomialOverflow { n: u64, k: u64 },
+
+    /// Job too large for enumeration (guard, see DESIGN.md §5).
+    #[error("job too large: C({n},{m}) = {total} exceeds the enumeration cap {cap}")]
+    JobTooLarge { n: u64, m: u64, total: u128, cap: u128 },
+
+    /// Matrix shape problem.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Artifact manifest / file problem.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// No artifact bucket matches the request.
+    #[error("no artifact for m={m} dtype={dtype}; available: {available}")]
+    NoArtifact { m: usize, dtype: &'static str, available: String },
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Exact (integer) arithmetic overflow.
+    #[error("exact arithmetic overflow in {0}")]
+    ExactOverflow(&'static str),
+
+    /// Service protocol violation.
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    /// I/O error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Configuration error (CLI or coordinator).
+    #[error("config: {0}")]
+    Config(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,72 @@
+//! # raddet — parallel Radić determinant of non-square matrices
+//!
+//! A reproduction of *“An Efficient Parallel Algorithm for Computing
+//! Determinant of Non-Square Matrices Based on Radić's Definition”*
+//! (Abdollahi, Jafari, Bayat, Amiri, Fathy — IJDPS 6(4), 2015).
+//!
+//! Radić's determinant of an `m×n` matrix (`m ≤ n`) is a signed sum over
+//! all `C(n,m)` ascending column selections:
+//!
+//! ```text
+//! det(A) = Σ_{1≤j1<…<jm≤n} (−1)^(r+s) · det(A[:, {j1…jm}])
+//! r = m(m+1)/2,   s = j1+…+jm
+//! ```
+//!
+//! The paper's contribution is an **unranking algorithm** (“combinatorial
+//! addition”) that computes the `q`-th column combination in dictionary
+//! order directly in `O(m·(n−m))`, removing the sequential dependency
+//! between terms and making the sum embarrassingly parallel.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * [`combin`] — the paper's §4/§5 algorithms: binomial tables, Pascal
+//!   weight tables (Table 1/3), unranking (Fig. 1), ranking, successor
+//!   generation, rank-range partitioning (granularity chunks).
+//! * [`matrix`], [`linalg`] — substrates: dense matrices, deterministic
+//!   generators, LU / Bareiss / Laplace determinants, and the sequential
+//!   Radić reference implementation.
+//! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes batched determinant
+//!   graphs. Python never runs on this path.
+//! * [`coordinator`] — the L3 system: engines, batcher, scheduler
+//!   (static granularity per §5 + work-stealing extension), worker pool,
+//!   compensated reduction, metrics.
+//! * [`pram`] — CRCW/CREW/EREW cost-model simulator reproducing the §6
+//!   complexity table.
+//! * [`service`] — TCP determinant service (the §8 “network overhead”
+//!   future-work study).
+//! * [`apps`] — the paper's motivating application: image retrieval with
+//!   a non-square determinant similarity kernel (refs \[8\], [20–23]).
+//! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
+//!   criterion / proptest / clap (offline environment, see DESIGN.md §2).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+//! use raddet::matrix::Mat;
+//!
+//! let a = Mat::from_rows(&[
+//!     vec![1.0, 2.0, 3.0],
+//!     vec![4.0, 5.0, 6.0],
+//! ]);
+//! let cfg = CoordinatorConfig::default();
+//! let coord = Coordinator::new(cfg).unwrap();
+//! let out = coord.radic_det(&a).unwrap();
+//! println!("det = {}", out.det);
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod combin;
+pub mod coordinator;
+pub mod error;
+pub mod linalg;
+pub mod matrix;
+pub mod pram;
+pub mod runtime;
+pub mod service;
+pub mod testkit;
+
+pub use error::{Error, Result};

@@ -1,0 +1,200 @@
+//! Alternative non-square determinant definitions — the paper's §8
+//! future work (“there are other definitions for determinant of
+//! non-square matrices … can be investigated whether they can be
+//! parallelized or not and be compared with the proposed algorithm”).
+//!
+//! Implemented comparators:
+//!
+//! * [`gram_det`] — the volume definition `√det(A·Aᵀ)`: always
+//!   non-negative, rotation-invariant, O(m²n + m³) — *no enumeration at
+//!   all*, but loses sign and all column-selection structure.
+//! * [`cauchy_binet_sum`] — `Σ_J det(A[:,J])²` over all `C(n,m)`
+//!   selections. The **Cauchy–Binet theorem** says this equals
+//!   `det(A·Aᵀ)` exactly, which gives an independent end-to-end oracle
+//!   for the enumeration + gather + determinant pipeline: two utterly
+//!   different computations must agree to rounding.
+//! * [`block_sum_det`] — the “divide into square blocks” family
+//!   (\[11\] Joshi, \[13\] Arunkumar et al., criticized by the paper's
+//!   ref \[19\] for losing data): sum of determinants of the ⌊n/m⌋
+//!   disjoint column blocks. O(n·m²) but blind to cross-block structure
+//!   (`tests::block_definition_loses_information` demonstrates the
+//!   information loss concretely).
+//!
+//! Parallelization comparison (per §8): `gram_det` is a dense matmul —
+//! trivially parallel but not enumeration-shaped; `cauchy_binet_sum`
+//! parallelizes with *exactly* the paper's §5 machinery (it is the same
+//! sum with `sign ≡ +1` and squared terms); `block_sum_det` is `n/m`
+//! independent dets. Only Radić's definition needs — and rewards — the
+//! unranking contribution.
+
+use super::accum::NeumaierSum;
+use super::lu::det_lu_inplace;
+use crate::combin::{combination_count, first_member, successor};
+use crate::matrix::MatF64;
+use crate::{Error, Result};
+
+/// Gram (volume) determinant: `√det(A·Aᵀ)` for `m ≤ n`.
+pub fn gram_det(a: &MatF64) -> Result<f64> {
+    let (m, n) = (a.rows(), a.cols());
+    if m > n {
+        return Ok(0.0);
+    }
+    // G = A·Aᵀ (m×m, symmetric PSD).
+    let mut g = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in i..m {
+            let dot: f64 = a.row(i).iter().zip(a.row(j)).map(|(x, y)| x * y).sum();
+            g[i * m + j] = dot;
+            g[j * m + i] = dot;
+        }
+    }
+    let det = det_lu_inplace(&mut g, m);
+    // PSD ⇒ det ≥ 0 up to rounding.
+    Ok(det.max(0.0).sqrt())
+}
+
+/// Cauchy–Binet sum: `Σ_J det(A[:,J])²` by full dictionary-order
+/// enumeration (the same §5 walk as the Radić evaluator).
+pub fn cauchy_binet_sum(a: &MatF64) -> Result<f64> {
+    let (m, n) = (a.rows(), a.cols());
+    if m > n {
+        return Ok(0.0);
+    }
+    let total = combination_count(n as u64, m as u64)?;
+    if total > super::radic::SEQ_TERM_CAP {
+        return Err(Error::JobTooLarge {
+            n: n as u64,
+            m: m as u64,
+            total,
+            cap: super::radic::SEQ_TERM_CAP,
+        });
+    }
+    let mut cols = first_member(m as u64);
+    let mut scratch = vec![0.0f64; m * m];
+    let mut acc = NeumaierSum::new();
+    loop {
+        a.gather_cols_into(&cols, &mut scratch);
+        let det = det_lu_inplace(&mut scratch, m);
+        acc.add(det * det);
+        if !successor(&mut cols, n as u64) {
+            break;
+        }
+    }
+    Ok(acc.value())
+}
+
+/// Block-decomposition determinant (\[11\]/\[13\] family): sum of dets of
+/// the `⌊n/m⌋` disjoint `m×m` column blocks; a trailing partial block
+/// is ignored (the usual “summarize” behaviour ref \[19\] criticizes).
+pub fn block_sum_det(a: &MatF64) -> Result<f64> {
+    let (m, n) = (a.rows(), a.cols());
+    if m > n {
+        return Ok(0.0);
+    }
+    let blocks = n / m;
+    let mut scratch = vec![0.0f64; m * m];
+    let mut acc = NeumaierSum::new();
+    for b in 0..blocks {
+        let cols: Vec<u32> = (0..m).map(|k| (b * m + k + 1) as u32).collect();
+        a.gather_cols_into(&cols, &mut scratch);
+        acc.add(det_lu_inplace(&mut scratch, m));
+    }
+    Ok(acc.value())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{det_lu, radic_det_seq};
+    use crate::matrix::{gen, Mat};
+    use crate::testkit::{for_all, TestRng};
+
+    #[test]
+    fn cauchy_binet_theorem_validates_enumeration() {
+        // Σ_J det(A_J)² == det(A·Aᵀ): two independent pipelines
+        // (enumeration+LU vs matmul+LU) must agree — the strongest
+        // single cross-check of the machinery in the crate.
+        for_all("Cauchy–Binet", 60, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(4);
+            let n = m + rng.usize_below(6);
+            let a = gen::uniform(rng, m, n, -2.0, 2.0);
+            let lhs = cauchy_binet_sum(&a).unwrap();
+            let rhs = gram_det(&a).unwrap().powi(2);
+            assert!(
+                (lhs - rhs).abs() < 1e-8 * rhs.max(1.0),
+                "m={m} n={n}: Σdet² = {lhs}, det(AAᵀ) = {rhs}"
+            );
+        });
+    }
+
+    #[test]
+    fn square_case_all_reduce_to_plain_det() {
+        for_all("m=n reductions", 40, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(5);
+            let a = gen::uniform(rng, m, m, -2.0, 2.0);
+            let plain = det_lu(a.data(), m);
+            assert!((gram_det(&a).unwrap() - plain.abs()).abs() < 1e-8 * plain.abs().max(1.0));
+            assert!((block_sum_det(&a).unwrap() - plain).abs() < 1e-10 * plain.abs().max(1.0));
+            assert!(
+                (cauchy_binet_sum(&a).unwrap() - plain * plain).abs()
+                    < 1e-8 * (plain * plain).max(1.0)
+            );
+        });
+    }
+
+    #[test]
+    fn m_bigger_than_n_zero_everywhere() {
+        let a = gen::uniform(&mut TestRng::from_seed(4), 4, 2, -1.0, 1.0);
+        assert_eq!(gram_det(&a).unwrap(), 0.0);
+        assert_eq!(cauchy_binet_sum(&a).unwrap(), 0.0);
+        assert_eq!(block_sum_det(&a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn block_definition_loses_information() {
+        // Second block replaced by a *different* matrix with the same
+        // determinant (−2): block-sum cannot tell the two apart, Radić
+        // can (ref \[19\]'s criticism, demonstrated).
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 5.0, 6.0], vec![3.0, 4.0, 7.0, 8.0]]);
+        let b = Mat::from_rows(&[vec![1.0, 2.0, 1.0, 0.0], vec![3.0, 4.0, 0.0, -2.0]]);
+        let block_a = block_sum_det(&a).unwrap();
+        let block_b = block_sum_det(&b).unwrap();
+        assert!((block_a - block_b).abs() < 1e-12, "blocks blind to order");
+        let radic_a = radic_det_seq(&a).unwrap();
+        let radic_b = radic_det_seq(&b).unwrap();
+        assert!(
+            (radic_a - radic_b).abs() > 1e-9,
+            "Radić distinguishes: {radic_a} vs {radic_b}"
+        );
+    }
+
+    #[test]
+    fn gram_is_rotation_invariant_radic_is_not() {
+        // Right-multiplying… (row-space rotation): rotate rows by a
+        // 2×2 Givens rotation Q (A' = Q·A). Gram det is invariant;
+        // Radić generally is not (it is row-linear, not orthogonal-
+        // invariant in general position).
+        let a = gen::uniform(&mut TestRng::from_seed(5), 2, 5, -1.0, 1.0);
+        let (c, s) = (0.6, 0.8); // cos/sin of a rotation
+        let mut rot = Mat::filled(2, 5, 0.0);
+        for j in 0..5 {
+            *rot.at_mut(0, j) = c * a.at(0, j) - s * a.at(1, j);
+            *rot.at_mut(1, j) = s * a.at(0, j) + c * a.at(1, j);
+        }
+        let g0 = gram_det(&a).unwrap();
+        let g1 = gram_det(&rot).unwrap();
+        assert!((g0 - g1).abs() < 1e-9 * g0.max(1.0), "gram invariant");
+    }
+
+    #[test]
+    fn cauchy_binet_dominates_any_single_term() {
+        // Σ det² ≥ det(first block)² trivially — sanity on magnitudes.
+        let a = gen::uniform(&mut TestRng::from_seed(6), 3, 9, -1.0, 1.0);
+        let total = cauchy_binet_sum(&a).unwrap();
+        let first = {
+            let sub = a.gather_cols(&[1, 2, 3]);
+            det_lu(sub.data(), 3)
+        };
+        assert!(total >= first * first - 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Cofactor (Laplace) expansion — the O(m!) oracle for tiny m.
+//!
+//! Structurally unrelated to both LU elimination and Bareiss, which is
+//! exactly what makes it a useful oracle: the three agree only if each
+//! is right.
+
+/// Determinant by first-row cofactor expansion. `a` is row-major `m×m`.
+///
+/// Intended for `m ≤ 10` (10! ≈ 3.6M leaf terms); tests use `m ≤ 7`.
+pub fn det_laplace(a: &[f64], m: usize) -> f64 {
+    assert_eq!(a.len(), m * m, "square row-major buffer expected");
+    match m {
+        0 => 1.0, // empty product convention
+        1 => a[0],
+        2 => a[0] * a[3] - a[1] * a[2],
+        _ => {
+            let mut acc = 0.0;
+            let mut minor = vec![0.0; (m - 1) * (m - 1)];
+            for j in 0..m {
+                // Minor of (0, j).
+                for r in 1..m {
+                    let mut cidx = 0;
+                    for c in 0..m {
+                        if c == j {
+                            continue;
+                        }
+                        minor[(r - 1) * (m - 1) + cidx] = a[r * m + c];
+                        cidx += 1;
+                    }
+                }
+                let cof = det_laplace(&minor, m - 1);
+                let term = a[j] * cof;
+                acc += if j % 2 == 0 { term } else { -term };
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_cases() {
+        assert_eq!(det_laplace(&[], 0), 1.0);
+        assert_eq!(det_laplace(&[7.0], 1), 7.0);
+        assert_eq!(det_laplace(&[1.0, 2.0, 3.0, 4.0], 2), -2.0);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // |1 2 3; 4 5 6; 7 8 10| = 1(50−48) − 2(40−42) + 3(32−35) = −3.
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 10.0];
+        assert_eq!(det_laplace(&a, 3), -3.0);
+    }
+
+    #[test]
+    fn identity_and_permutation() {
+        let eye4 = crate::matrix::MatF64::eye(4);
+        assert_eq!(det_laplace(eye4.data(), 4), 1.0);
+        // Swap two rows of I₄ ⇒ det −1.
+        let mut p = eye4.clone();
+        for c in 0..4 {
+            let tmp = p.at(0, c);
+            *p.at_mut(0, c) = p.at(1, c);
+            *p.at_mut(1, c) = tmp;
+        }
+        assert_eq!(det_laplace(p.data(), 4), -1.0);
+    }
+
+    #[test]
+    fn singular_is_zero() {
+        // Rows 0 and 2 identical.
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 1.0, 2.0, 3.0];
+        assert_eq!(det_laplace(&a, 3), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Partial-pivot LU determinant — the CPU engine's O(m³) hot path.
+//!
+//! Same algorithm as the L1 Pallas kernel (`batched_det.py`), so the
+//! XLA and CPU engines are numerically near-identical; the pivoting
+//! policy (max |entry| in the eliminating column) matches exactly.
+
+/// Determinant of a row-major `m×m` matrix, destroying `buf`.
+///
+/// The coordinator calls this in a loop over a reused scratch buffer —
+/// zero allocation per submatrix.
+pub fn det_lu_inplace(buf: &mut [f64], m: usize) -> f64 {
+    debug_assert_eq!(buf.len(), m * m);
+    let mut det = 1.0f64;
+    for k in 0..m {
+        // Pivot: max |entry| in column k, rows k…
+        let mut p = k;
+        let mut best = buf[k * m + k].abs();
+        for r in k + 1..m {
+            let mag = buf[r * m + k].abs();
+            if mag > best {
+                best = mag;
+                p = r;
+            }
+        }
+        if p != k {
+            for c in 0..m {
+                buf.swap(k * m + c, p * m + c);
+            }
+            det = -det;
+        }
+        let pivot = buf[k * m + k];
+        if pivot == 0.0 {
+            return 0.0; // exactly singular (column below k is all zero)
+        }
+        det *= pivot;
+        let inv = 1.0 / pivot;
+        for r in k + 1..m {
+            let f = buf[r * m + k] * inv;
+            if f != 0.0 {
+                for c in k + 1..m {
+                    buf[r * m + c] -= f * buf[k * m + c];
+                }
+            }
+        }
+    }
+    det
+}
+
+/// Allocating convenience wrapper (copies `a`).
+pub fn det_lu(a: &[f64], m: usize) -> f64 {
+    let mut buf = a.to_vec();
+    det_lu_inplace(&mut buf, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::det_laplace;
+    use crate::matrix::gen;
+    use crate::testkit::{for_all, TestRng};
+
+    #[test]
+    fn matches_laplace_randomized() {
+        for_all("LU == Laplace (m ≤ 6)", 200, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(6);
+            let a = gen::uniform(rng, m, m, -3.0, 3.0);
+            let lu = det_lu(a.data(), m);
+            let lp = det_laplace(a.data(), m);
+            let tol = 1e-10 * lp.abs().max(1.0);
+            assert!((lu - lp).abs() < tol, "m={m}: lu={lu} laplace={lp}");
+        });
+    }
+
+    #[test]
+    fn zero_pivot_needs_swap() {
+        // [[0,1],[1,0]] — naive no-pivot LU would divide by zero.
+        assert_eq!(det_lu(&[0.0, 1.0, 1.0, 0.0], 2), -1.0);
+    }
+
+    #[test]
+    fn exactly_singular() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert_eq!(det_lu(&a, 2), 0.0);
+    }
+
+    #[test]
+    fn triangular_product_of_diagonal() {
+        let a = [2.0, 5.0, -1.0, 0.0, 3.0, 4.0, 0.0, 0.0, -2.0];
+        assert!((det_lu(&a, 3) - (-12.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        for_all("det(cA) = c^m det(A)", 100, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(5);
+            let a = gen::uniform(rng, m, m, -2.0, 2.0);
+            let base = det_lu(a.data(), m);
+            let scaled = a.map(|x| 3.0 * x);
+            let got = det_lu(scaled.data(), m);
+            let want = 3.0f64.powi(m as i32) * base;
+            assert!((got - want).abs() < 1e-9 * want.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn inplace_reuses_buffer() {
+        let a = crate::matrix::MatF64::eye(3);
+        let mut scratch = a.data().to_vec();
+        assert_eq!(det_lu_inplace(&mut scratch, 3), 1.0);
+        // Reuse the same scratch for another matrix.
+        scratch.copy_from_slice(&[0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(det_lu_inplace(&mut scratch, 3), -1.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Determinant engines and the sequential Radić reference.
+//!
+//! Three independent square-determinant algorithms (the substrate the
+//! paper's inner loop needs — its ref \[7\]):
+//!
+//! * [`laplace`] — cofactor expansion, O(m!) — the tiny-m oracle.
+//! * [`lu`] — partial-pivot Gaussian elimination, O(m³) — the CPU
+//!   engine's hot path (same algorithm as the L1 Pallas kernel).
+//! * [`bareiss`] — fraction-free elimination over `i128` — *exact* for
+//!   integer matrices; anchors the floating-point paths against
+//!   cancellation artifacts.
+//!
+//! [`radic`] evaluates Definition 3 sequentially on top of any of them —
+//! the single-processor baseline every parallel run is checked against.
+//! [`accum`] provides Neumaier compensated summation for the
+//! C(n,m)-term outer sum.
+
+pub mod accum;
+pub mod altdef;
+pub mod bareiss;
+pub mod laplace;
+pub mod lu;
+pub mod radic;
+
+pub use accum::NeumaierSum;
+pub use altdef::{block_sum_det, cauchy_binet_sum, gram_det};
+pub use bareiss::det_bareiss;
+pub use laplace::det_laplace;
+pub use lu::{det_lu, det_lu_inplace};
+pub use radic::{radic_det_exact, radic_det_seq, radic_terms, RadicTerm};

@@ -1,0 +1,236 @@
+//! Sequential Radić determinant — Definition 3, evaluated term by term.
+//!
+//! This is the single-processor baseline of the paper's comparison: the
+//! full dictionary-order walk (First Member + successors), one signed
+//! `m×m` determinant per step, Neumaier-compensated accumulation. Every
+//! parallel run in `coordinator` is verified against this.
+
+use super::accum::NeumaierSum;
+use super::bareiss::det_bareiss;
+use super::lu::det_lu_inplace;
+use crate::combin::{combination_count, first_member, radic_sign, successor};
+use crate::matrix::{MatF64, MatI64};
+use crate::{Error, Result};
+
+/// One term of the Radić sum (exposed for introspection / the service).
+#[derive(Clone, Debug)]
+pub struct RadicTerm {
+    /// 1-based ascending column selection.
+    pub cols: Vec<u32>,
+    /// `(−1)^(r+s)`.
+    pub sign: f64,
+    /// Determinant of the gathered submatrix.
+    pub det: f64,
+}
+
+/// Refuse jobs with more than this many terms (sequential path).
+pub const SEQ_TERM_CAP: u128 = 1 << 33;
+
+/// Sequential Radić determinant of an `m×n` matrix (`m ≤ n`) using the
+/// in-place LU engine.
+///
+/// Returns the compensated sum. `m > n` is defined as 0 by the paper;
+/// we return it without enumeration.
+pub fn radic_det_seq(a: &MatF64) -> Result<f64> {
+    let (m, n) = (a.rows(), a.cols());
+    if m > n {
+        return Ok(0.0); // Definition 3: det(A) = 0 for m > n
+    }
+    let total = combination_count(n as u64, m as u64)?;
+    if total > SEQ_TERM_CAP {
+        return Err(Error::JobTooLarge {
+            n: n as u64,
+            m: m as u64,
+            total,
+            cap: SEQ_TERM_CAP,
+        });
+    }
+    let mut cols = first_member(m as u64);
+    let mut scratch = vec![0.0f64; m * m];
+    let mut acc = NeumaierSum::new();
+    loop {
+        a.gather_cols_into(&cols, &mut scratch);
+        let det = det_lu_inplace(&mut scratch, m);
+        acc.add(radic_sign(&cols) * det);
+        if !successor(&mut cols, n as u64) {
+            break;
+        }
+    }
+    Ok(acc.value())
+}
+
+/// Exact Radić determinant for integer matrices (Bareiss inner engine).
+///
+/// The rounding-free anchor: float paths are audited against this on
+/// integer workloads. Fails loudly on `i128` overflow (term or sum).
+pub fn radic_det_exact(a: &MatI64) -> Result<i128> {
+    let (m, n) = (a.rows(), a.cols());
+    if m > n {
+        return Ok(0);
+    }
+    let total = combination_count(n as u64, m as u64)?;
+    if total > SEQ_TERM_CAP {
+        return Err(Error::JobTooLarge {
+            n: n as u64,
+            m: m as u64,
+            total,
+            cap: SEQ_TERM_CAP,
+        });
+    }
+    let mut cols = first_member(m as u64);
+    let mut scratch = vec![0i64; m * m];
+    let mut acc: i128 = 0;
+    loop {
+        a.gather_cols_into(&cols, &mut scratch);
+        let det = det_bareiss(&scratch, m)?;
+        let signed = if radic_sign(&cols) > 0.0 { det } else { -det };
+        acc = acc
+            .checked_add(signed)
+            .ok_or(Error::ExactOverflow("radic sum"))?;
+        if !successor(&mut cols, n as u64) {
+            break;
+        }
+    }
+    Ok(acc)
+}
+
+/// Enumerate every term (tiny problems only — introspection, tests).
+pub fn radic_terms(a: &MatF64) -> Result<Vec<RadicTerm>> {
+    let (m, n) = (a.rows(), a.cols());
+    combination_count(n as u64, m as u64)?;
+    let mut cols = first_member(m as u64);
+    let mut scratch = vec![0.0f64; m * m];
+    let mut out = Vec::new();
+    loop {
+        a.gather_cols_into(&cols, &mut scratch);
+        let det = det_lu_inplace(&mut scratch, m);
+        out.push(RadicTerm {
+            cols: cols.clone(),
+            sign: radic_sign(&cols),
+            det,
+        });
+        if !successor(&mut cols, n as u64) {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, Mat};
+    use crate::testkit::{for_all, TestRng};
+
+    #[test]
+    fn sign_anchor_1xn() {
+        // det([a₁ … a₄]) = a₁ − a₂ + a₃ − a₄ (mirrors python
+        // test_model.py::test_sign_anchor_1xn).
+        let a = Mat::from_rows(&[vec![3.0, 5.0, 7.0, 11.0]]);
+        assert_eq!(radic_det_seq(&a).unwrap(), 3.0 - 5.0 + 7.0 - 11.0);
+    }
+
+    #[test]
+    fn sign_anchor_2x3() {
+        // det = +D₁₂ − D₁₃ + D₂₃ (mirrors test_sign_anchor_2x3).
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let want = (5.0 - 8.0) - (6.0 - 12.0) + (12.0 - 15.0);
+        assert!((radic_det_seq(&a).unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn m_greater_than_n_is_zero() {
+        let a = gen::uniform(&mut TestRng::from_seed(1), 4, 3, -1.0, 1.0);
+        assert_eq!(radic_det_seq(&a).unwrap(), 0.0);
+        let b = gen::integer(&mut TestRng::from_seed(2), 5, 2, -3, 3);
+        assert_eq!(radic_det_exact(&b).unwrap(), 0);
+    }
+
+    #[test]
+    fn square_reduces_to_plain_det() {
+        for_all("radic(m=n) == det", 100, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(6);
+            let a = gen::uniform(rng, m, m, -2.0, 2.0);
+            let radic = radic_det_seq(&a).unwrap();
+            let plain = super::super::det_lu(a.data(), m);
+            assert!((radic - plain).abs() < 1e-10 * plain.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn float_matches_exact_on_integer_matrices() {
+        for_all("radic float == exact", 80, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(4);
+            let n = m + rng.usize_below(4);
+            let ai = gen::integer(rng, m, n, -6, 6);
+            let exact = radic_det_exact(&ai).unwrap() as f64;
+            let float = radic_det_seq(&ai.map(|x| x as f64)).unwrap();
+            // LU pivoting introduces rounding even on integer inputs;
+            // the compensated sum keeps the error at a few ulps of the
+            // term magnitudes.
+            let tol = 1e-9 * exact.abs().max(100.0);
+            assert!((float - exact).abs() < tol, "m={m} n={n}: {float} vs {exact}");
+        });
+    }
+
+    #[test]
+    fn terms_count_and_signs() {
+        let a = gen::uniform(&mut TestRng::from_seed(4), 2, 4, -1.0, 1.0);
+        let terms = radic_terms(&a).unwrap();
+        assert_eq!(terms.len(), 6); // C(4,2)
+        // First term: cols [1,2], r=3, s=3 ⇒ sign +1.
+        assert_eq!(terms[0].cols, vec![1, 2]);
+        assert_eq!(terms[0].sign, 1.0);
+        // Terms sum (compensated order not needed at 6 terms).
+        let direct: f64 = terms.iter().map(|t| t.sign * t.det).sum();
+        assert!((direct - radic_det_seq(&a).unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_scaling_is_linear() {
+        // Radić det is linear in each row ([12] property): scaling row 0
+        // by c scales det by c.
+        let a = gen::uniform(&mut TestRng::from_seed(5), 3, 5, -1.0, 1.0);
+        let base = radic_det_seq(&a).unwrap();
+        let mut scaled = a.clone();
+        for c in 0..scaled.cols() {
+            *scaled.at_mut(0, c) *= 3.5;
+        }
+        let got = radic_det_seq(&scaled).unwrap();
+        assert!((got - 3.5 * base).abs() < 1e-9 * base.abs().max(1.0));
+    }
+
+    #[test]
+    fn row_swap_antisymmetry() {
+        // Swapping two rows negates the determinant ([12]).
+        let a = gen::uniform(&mut TestRng::from_seed(6), 3, 6, -1.0, 1.0);
+        let base = radic_det_seq(&a).unwrap();
+        let mut swapped = a.clone();
+        for c in 0..swapped.cols() {
+            let t = swapped.at(0, c);
+            *swapped.at_mut(0, c) = swapped.at(2, c);
+            *swapped.at_mut(2, c) = t;
+        }
+        let got = radic_det_seq(&swapped).unwrap();
+        assert!((got + base).abs() < 1e-10 * base.abs().max(1.0));
+    }
+
+    #[test]
+    fn duplicate_rows_give_zero() {
+        // Two equal rows ⇒ every submatrix singular ⇒ det 0 ([12]).
+        let mut a = gen::uniform(&mut TestRng::from_seed(7), 3, 6, -1.0, 1.0);
+        for c in 0..a.cols() {
+            *a.at_mut(2, c) = a.at(0, c);
+        }
+        assert!(radic_det_seq(&a).unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn too_large_job_refused() {
+        let a = gen::uniform(&mut TestRng::from_seed(8), 20, 80, -1.0, 1.0);
+        assert!(matches!(
+            radic_det_seq(&a),
+            Err(Error::JobTooLarge { .. })
+        ));
+    }
+}

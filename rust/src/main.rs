@@ -1,0 +1,6 @@
+//! raddet CLI entry point — see [`raddet::cli`] for the command set.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(raddet::cli::run(&args));
+}

@@ -1,0 +1,108 @@
+//! Deterministic matrix generators (workload synthesis).
+//!
+//! Everything is seed-addressable via [`crate::testkit::TestRng`]
+//! (SplitMix64) so benchmarks and tests regenerate identical inputs.
+
+use super::{Mat, MatF64, MatI64};
+use crate::testkit::TestRng;
+
+/// Uniform entries in `[lo, hi)`.
+pub fn uniform(rng: &mut TestRng, rows: usize, cols: usize, lo: f64, hi: f64) -> MatF64 {
+    let data = (0..rows * cols).map(|_| rng.f64_range(lo, hi)).collect();
+    Mat::from_vec(rows, cols, data).expect("sized by construction")
+}
+
+/// Standard-ish normal entries (sum of 4 uniforms, variance-normalized —
+/// adequate for conditioning workloads without a Box–Muller dependency).
+pub fn gaussian_ish(rng: &mut TestRng, rows: usize, cols: usize) -> MatF64 {
+    let data = (0..rows * cols)
+        .map(|_| {
+            let s: f64 = (0..4).map(|_| rng.f64_unit() - 0.5).sum();
+            s * (12.0f64 / 4.0).sqrt()
+        })
+        .collect();
+    Mat::from_vec(rows, cols, data).expect("sized by construction")
+}
+
+/// Integer entries in `[lo, hi]` — the exact-arithmetic (Bareiss) path.
+pub fn integer(rng: &mut TestRng, rows: usize, cols: usize, lo: i64, hi: i64) -> MatI64 {
+    let data = (0..rows * cols).map(|_| rng.i64_range(lo, hi)).collect();
+    Mat::from_vec(rows, cols, data).expect("sized by construction")
+}
+
+/// Rectangular Hilbert matrix `H[i][j] = 1/(i+j+1)` — the classic
+/// ill-conditioned stress input.
+pub fn hilbert(rows: usize, cols: usize) -> MatF64 {
+    let mut m = Mat::filled(rows, cols, 0.0);
+    for i in 0..rows {
+        for j in 0..cols {
+            *m.at_mut(i, j) = 1.0 / (i + j + 1) as f64;
+        }
+    }
+    m
+}
+
+/// Rectangular Vandermonde: row `i` is `[1, xᵢ, xᵢ², …]` over `cols`
+/// powers, nodes spread over `[-1, 1]`. Square column-submatrices have
+/// closed-form determinants — a structured correctness workload.
+pub fn vandermonde(rows: usize, cols: usize) -> MatF64 {
+    let mut m = Mat::filled(rows, cols, 0.0);
+    for i in 0..rows {
+        let x = if rows == 1 { 0.0 } else { -1.0 + 2.0 * i as f64 / (rows - 1) as f64 };
+        let mut p = 1.0;
+        for j in 0..cols {
+            *m.at_mut(i, j) = p;
+            p *= x;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = uniform(&mut TestRng::from_seed(9), 3, 5, -1.0, 1.0);
+        let b = uniform(&mut TestRng::from_seed(9), 3, 5, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let m = uniform(&mut TestRng::from_seed(1), 10, 10, -2.0, 3.0);
+        assert!(m.data().iter().all(|&x| (-2.0..3.0).contains(&x)));
+    }
+
+    #[test]
+    fn integer_range() {
+        let m = integer(&mut TestRng::from_seed(2), 8, 8, -5, 5);
+        assert!(m.data().iter().all(|&x| (-5..=5).contains(&x)));
+    }
+
+    #[test]
+    fn hilbert_values() {
+        let h = hilbert(2, 3);
+        assert_eq!(h.at(0, 0), 1.0);
+        assert_eq!(h.at(1, 2), 1.0 / 4.0);
+    }
+
+    #[test]
+    fn vandermonde_structure() {
+        let v = vandermonde(3, 4);
+        // Row 0: x = −1 ⇒ [1, −1, 1, −1]; row 1: x = 0 ⇒ [1, 0, 0, 0].
+        assert_eq!(v.row(0), &[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(v.row(1), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(v.row(2), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn gaussian_ish_moments() {
+        let m = gaussian_ish(&mut TestRng::from_seed(3), 100, 100);
+        let mean: f64 = m.data().iter().sum::<f64>() / 10_000.0;
+        let var: f64 = m.data().iter().map(|x| x * x).sum::<f64>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "variance {var}");
+    }
+}

@@ -1,0 +1,101 @@
+//! CSV matrix I/O — the workload-ingestion path for the CLI and the
+//! retrieval example (no serde offline; the format is plain
+//! comma-separated f64 rows).
+
+use super::MatF64;
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Parse a matrix from CSV text (one row per line, `,`-separated).
+pub fn read_csv<R: Read>(reader: R) -> Result<MatF64> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row = line
+            .split(',')
+            .map(|tok| {
+                tok.trim().parse::<f64>().map_err(|e| {
+                    Error::Shape(format!("line {}: bad number {tok:?}: {e}", lineno + 1))
+                })
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                return Err(Error::Shape(format!(
+                    "line {}: {} fields, expected {}",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                )));
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(Error::Shape("empty CSV".into()));
+    }
+    Ok(MatF64::from_rows(&rows))
+}
+
+/// Load a matrix from a CSV file.
+pub fn read_csv_file(path: &Path) -> Result<MatF64> {
+    read_csv(std::fs::File::open(path)?)
+}
+
+/// Write a matrix as CSV (17 significant digits — f64 roundtrip-exact).
+pub fn write_csv<W: Write>(mat: &MatF64, mut writer: W) -> Result<()> {
+    for r in 0..mat.rows() {
+        let line = mat
+            .row(r)
+            .iter()
+            .map(|x| format!("{x:.17e}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(writer, "{line}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    #[test]
+    fn roundtrip_exact() {
+        let m = gen::uniform(&mut TestRng::from_seed(5), 4, 7, -10.0, 10.0);
+        let mut buf = Vec::new();
+        write_csv(&m, &mut buf).unwrap();
+        let back = read_csv(&buf[..]).unwrap();
+        assert_eq!(m, back, "CSV roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let text = "# header\n1, 2.5\n\n3,4\n";
+        let m = read_csv(text.as_bytes()).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.at(0, 1), 2.5);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(read_csv("1,2\n3\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        assert!(read_csv("1,x\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(read_csv("".as_bytes()).is_err());
+    }
+}

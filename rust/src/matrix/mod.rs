@@ -1,0 +1,179 @@
+//! Dense row-major matrices + deterministic generators + CSV I/O.
+//!
+//! Deliberately minimal: the coordinator needs fast column gathering
+//! into batch buffers ([`Mat::gather_cols_into`]) and the tests need
+//! structured generators; nothing here tries to be a general linear
+//! algebra library (that's `linalg`'s job).
+
+pub mod gen;
+pub mod io;
+
+use crate::{Error, Result};
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+/// The f64 working type used across the coordinator.
+pub type MatF64 = Mat<f64>;
+/// Integer matrices for the exact (Bareiss) path.
+pub type MatI64 = Mat<i64>;
+
+impl<T: Copy> Mat<T> {
+    /// Construct from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer len {} != {rows}×{cols}",
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Construct from row slices (all rows must have equal length).
+    pub fn from_rows(rows: &[Vec<T>]) -> Self {
+        assert!(!rows.is_empty(), "need at least one row");
+        let cols = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == cols), "ragged rows");
+        let data = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        Self { rows: rows.len(), cols, data }
+    }
+
+    /// Filled with a constant.
+    pub fn filled(rows: usize, cols: usize, value: T) -> Self {
+        Self { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access (row-major).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Flat row-major data.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Gather the 1-based columns `cols_1b` into `out` as a row-major
+    /// `rows × cols_1b.len()` submatrix — the coordinator hot path
+    /// (`A[:, {j1..jm}]` of Definition 3).
+    ///
+    /// `out.len()` must be exactly `rows · cols_1b.len()`.
+    #[inline]
+    pub fn gather_cols_into(&self, cols_1b: &[u32], out: &mut [T]) {
+        let m = cols_1b.len();
+        debug_assert_eq!(out.len(), self.rows * m);
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (slot, &c) in dst.iter_mut().zip(cols_1b) {
+                debug_assert!(c >= 1 && (c as usize) <= self.cols);
+                *slot = row[(c - 1) as usize];
+            }
+        }
+    }
+
+    /// Allocating variant of [`Self::gather_cols_into`].
+    pub fn gather_cols(&self, cols_1b: &[u32]) -> Mat<T> {
+        let m = cols_1b.len();
+        let mut out = Vec::with_capacity(self.rows * m);
+        out.resize(self.rows * m, self.data[0]);
+        self.gather_cols_into(cols_1b, &mut out);
+        Mat { rows: self.rows, cols: m, data: out }
+    }
+
+    /// Map every element.
+    pub fn map<U: Copy, F: Fn(T) -> U>(&self, f: F) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl MatF64 {
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::filled(n, n, 0.0);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.at(1, 2), 6.0);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_vec_shape_checked() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn gather_columns() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]]);
+        let g = m.gather_cols(&[2, 4]);
+        assert_eq!(g, Mat::from_rows(&[vec![2.0, 4.0], vec![6.0, 8.0]]));
+    }
+
+    #[test]
+    fn gather_into_buffer() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let mut buf = [0.0; 4];
+        m.gather_cols_into(&[1, 3], &mut buf);
+        assert_eq!(buf, [1.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn eye_and_map() {
+        let e = MatF64::eye(3);
+        assert_eq!(e.at(1, 1), 1.0);
+        assert_eq!(e.at(0, 1), 0.0);
+        let doubled = e.map(|x| x * 2.0);
+        assert_eq!(doubled.at(2, 2), 2.0);
+    }
+}

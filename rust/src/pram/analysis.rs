@@ -1,0 +1,114 @@
+//! §6 reproduction: the complexity table, measured.
+//!
+//! For each memory policy, run the simulator and report measured
+//! critical-path time against the paper's asymptotic shape, plus the
+//! fitted constant `time / (m(n−m))` that should stay flat as the
+//! problem grows (that flatness *is* the O(m(n−m)) claim).
+
+use super::machine::{MemPolicy, PramMachine};
+use crate::Result;
+
+/// One row of the reproduced §6 table.
+#[derive(Clone, Debug)]
+pub struct Section6Row {
+    /// Policy.
+    pub policy: MemPolicy,
+    /// Problem.
+    pub n: u64,
+    /// Subset size.
+    pub m: u64,
+    /// C(n,m).
+    pub groups: u128,
+    /// Machine size m²·C(n,m).
+    pub processors: u128,
+    /// Measured critical-path steps.
+    pub time: u64,
+    /// Paper's bound shape for this policy (steps).
+    pub bound: u64,
+    /// time / (m·(n−m)) — must stay O(1).
+    pub normalized: f64,
+    /// Model speedup vs the sequential machine.
+    pub speedup: f64,
+}
+
+/// Run the §6 table for a list of problems.
+pub fn section6_table(problems: &[(u64, u64)]) -> Result<Vec<Section6Row>> {
+    let mut rows = Vec::new();
+    for &(n, m) in problems {
+        for &policy in &MemPolicy::ALL {
+            let r = PramMachine::new(policy).simulate(n, m)?;
+            let width = (m * (n - m)).max(1);
+            rows.push(Section6Row {
+                policy,
+                n,
+                m,
+                groups: r.groups,
+                processors: r.processors,
+                time: r.time(),
+                bound: r.paper_bound_shape(),
+                normalized: r.time() as f64 / width as f64,
+                speedup: r.speedup(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render rows as a markdown table (CLI + EXPERIMENTS.md).
+pub fn render(rows: &[Section6Row]) -> String {
+    let mut s = String::from(
+        "| policy | n | m | C(n,m) | processors | time (steps) | paper bound | time/m(n−m) | speedup |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.2} | {:.1} |\n",
+            r.policy.name(),
+            r.n,
+            r.m,
+            r.groups,
+            r.processors,
+            r.time,
+            r.bound,
+            r.normalized,
+            r.speedup
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_three_rows_per_problem() {
+        let rows = section6_table(&[(10, 5), (12, 4)]).unwrap();
+        assert_eq!(rows.len(), 6);
+    }
+
+    #[test]
+    fn normalized_time_stays_flat() {
+        // The O(m(n−m)) claim: normalized time bounded by a constant
+        // across problem sizes (per policy).
+        let rows = section6_table(&[(10, 5), (14, 7), (16, 8), (20, 6)]).unwrap();
+        for r in &rows {
+            assert!(
+                r.normalized < 8.0,
+                "{} n={} m={}: normalized {:.2}",
+                r.policy.name(),
+                r.n,
+                r.m,
+                r.normalized
+            );
+        }
+    }
+
+    #[test]
+    fn render_is_markdown() {
+        let rows = section6_table(&[(8, 5)]).unwrap();
+        let s = render(&rows);
+        assert!(s.starts_with("| policy |"));
+        assert!(s.contains("| CRCW | 8 | 5 | 56 |"));
+    }
+}

@@ -1,0 +1,25 @@
+//! PRAM cost-model simulator — reproduces the paper's §6 analysis.
+//!
+//! The paper's machine: `m²·C(n,m)` processors on a shared-memory PRAM,
+//! under three access policies (CRCW / CREW / EREW). No such machine
+//! exists (see DESIGN.md §2 substitution 1), so we *simulate the cost
+//! model*: the per-processor unranking phase executes the **real**
+//! combinatorial-addition walk and counts its actual steps
+//! ([`steps::unrank_step_count`]); the inner-determinant phase charges
+//! ref \[7\]'s `O(m)` depth; broadcast and reduction charge the
+//! policy-dependent tree depths the paper quotes. The output is a
+//! step-accurate account of the §6 table:
+//!
+//! | policy | time |
+//! |---|---|
+//! | CRCW | `O(m(n−m) + m)` |
+//! | CREW | `O(m(n−m) + log C(n,m))` |
+//! | EREW | `O(m(n−m) + 2·log C(n,m))` |
+
+pub mod analysis;
+pub mod machine;
+pub mod steps;
+
+pub use analysis::{section6_table, Section6Row};
+pub use machine::{MemPolicy, PramMachine, PramReport, PhaseCost};
+pub use steps::unrank_step_count;

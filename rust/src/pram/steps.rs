@@ -1,0 +1,108 @@
+//! Instrumented step counts for the paper's algorithms — the measured
+//! side of the §6 complexity claims.
+//!
+//! [`unrank_step_count`] re-runs the *actual* combinatorial-addition
+//! walk (same control flow as [`fn@crate::combin::unrank`]) and counts
+//! unit operations: table-row scans, leftward weight accumulations, and
+//! tail resets. The paper's claim is that this count is `O(m·(n−m))`
+//! for every rank; `benches/bench_unrank.rs` and
+//! `rust/tests/pram_model.rs` check the bound empirically.
+
+use crate::combin::{combination_count, PascalTable};
+use crate::Result;
+
+/// Unit-operation count of unranking rank `q` for `(n, m)`.
+///
+/// Counts: first-member initialisation (m), per-stage row scans,
+/// per-stage leftward steps, and tail-reset writes — one unit each,
+/// mirroring the PRAM convention of unit-cost shared-memory ops.
+pub fn unrank_step_count(table: &PascalTable, q: u128) -> Result<u64> {
+    let m = table.m();
+    let n = table.n();
+    combination_count(n, m)?;
+    let mut steps: u64 = m; // write the First Member
+
+    let mut q = q;
+    let mut col = n - m;
+    while q > 0 {
+        // Row scan.
+        let mut j = 0u64;
+        steps += 1;
+        while j + 1 < m && table.at(j + 1, col) <= q {
+            j += 1;
+            steps += 1;
+        }
+        // Leftward walk.
+        let mut sum: u128 = 0;
+        let mut p: u64 = 0;
+        let mut i = col as i64;
+        while i >= 0 {
+            steps += 1;
+            let w = table.at(j, i as u64);
+            if sum + w > q {
+                break;
+            }
+            sum += w;
+            p += 1;
+            i -= 1;
+        }
+        // Apply: one write for the lead place + j tail writes.
+        steps += 1 + j;
+        q -= sum;
+        col -= p;
+    }
+    Ok(steps)
+}
+
+/// Worst-case measured unrank steps over all ranks (exhaustive — small
+/// problems only; used by tests and the §6 analysis).
+pub fn max_unrank_steps(n: u64, m: u64) -> Result<u64> {
+    let table = PascalTable::new(n, m)?;
+    let total = combination_count(n, m)?;
+    let mut max = 0;
+    for q in 0..total {
+        max = max.max(unrank_step_count(&table, q)?);
+    }
+    Ok(max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_member_costs_m() {
+        let t = PascalTable::new(8, 5).unwrap();
+        assert_eq!(unrank_step_count(&t, 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn steps_bounded_by_m_times_nm() {
+        // The §6 bound: steps ≤ c·(m + m·(n−m)) with a small constant.
+        for (n, m) in [(8u64, 5u64), (12, 4), (16, 8), (20, 3), (10, 1)] {
+            let bound = 4 * (m + m * (n - m) + (n - m)) + 8;
+            let max = max_unrank_steps(n, m).unwrap();
+            assert!(
+                max <= bound,
+                "n={n} m={m}: measured {max} exceeds bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn example1_step_count_reasonable() {
+        // Two stages: scans + walks + writes; well under m(n−m)+2m.
+        let t = PascalTable::new(8, 5).unwrap();
+        let s = unrank_step_count(&t, 49).unwrap();
+        assert!(s >= 10 && s <= 35, "steps {s}");
+    }
+
+    #[test]
+    fn counts_grow_with_width_not_total() {
+        // Steps scale with m(n−m), not with C(n,m): doubling n−m roughly
+        // doubles the worst case, while C explodes.
+        let narrow = max_unrank_steps(12, 6).unwrap(); // width 6
+        let wide = max_unrank_steps(18, 6).unwrap(); // width 12
+        assert!(wide < narrow * 4, "narrow={narrow} wide={wide}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact manifest — the TSV contract between `python/compile/aot.py`
+//! and the rust runtime (TSV because serde/JSON is unavailable offline
+//! and the schema is five columns).
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest file name inside the artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.tsv";
+
+/// Element type of an artifact (matches the aot.py bucket axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 32-bit floats.
+    F32,
+    /// 64-bit floats (the default path).
+    F64,
+}
+
+impl Dtype {
+    /// Parse the manifest encoding.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f64" => Ok(Dtype::F64),
+            other => Err(Error::Artifact(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    /// Manifest encoding.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+}
+
+/// One AOT artifact: a compiled `radic_partial` graph for a fixed
+/// `(m, batch, dtype)` bucket.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Bucket name (e.g. `radic_partial_m5_b256_f64`).
+    pub name: String,
+    /// Submatrix order `m`.
+    pub m: usize,
+    /// Batch size the graph was specialized for.
+    pub batch: usize,
+    /// Element type.
+    pub dtype: Dtype,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("read {}: {e}", path.display())))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Artifact("empty manifest".into()))?;
+        if header != "name\tm\tbatch\tdtype\tfile" {
+            return Err(Error::Artifact(format!("bad manifest header {header:?}")));
+        }
+        let mut specs = Vec::new();
+        for (no, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 5 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: {} fields",
+                    no + 2,
+                    f.len()
+                )));
+            }
+            let parse_num = |s: &str, what: &str| {
+                s.parse::<usize>()
+                    .map_err(|e| Error::Artifact(format!("line {}: bad {what}: {e}", no + 2)))
+            };
+            specs.push(ArtifactSpec {
+                name: f[0].to_string(),
+                m: parse_num(f[1], "m")?,
+                batch: parse_num(f[2], "batch")?,
+                dtype: Dtype::parse(f[3])?,
+                path: dir.join(f[4]),
+            });
+        }
+        if specs.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Self { dir: dir.to_path_buf(), specs })
+    }
+
+    /// All specs.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Find the bucket for `(m, dtype)` with the largest batch ≤
+    /// `batch_cap` (or the smallest batch overall if none fit).
+    pub fn find(&self, m: usize, dtype: Dtype, batch_cap: usize) -> Result<&ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> = self
+            .specs
+            .iter()
+            .filter(|s| s.m == m && s.dtype == dtype)
+            .collect();
+        if candidates.is_empty() {
+            let mut avail: Vec<String> = self
+                .specs
+                .iter()
+                .map(|s| format!("m={} {}", s.m, s.dtype.as_str()))
+                .collect();
+            avail.sort();
+            avail.dedup();
+            return Err(Error::NoArtifact {
+                m,
+                dtype: dtype.as_str(),
+                available: avail.join(", "),
+            });
+        }
+        candidates.sort_by_key(|s| s.batch);
+        Ok(candidates
+            .iter()
+            .rev()
+            .find(|s| s.batch <= batch_cap)
+            .unwrap_or(&candidates[0]))
+    }
+
+    /// The `m` values available for a dtype.
+    pub fn available_ms(&self, dtype: Dtype) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .specs
+            .iter()
+            .filter(|s| s.dtype == dtype)
+            .map(|s| s.m)
+            .collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tm\tbatch\tdtype\tfile\n\
+        radic_partial_m5_b64_f64\t5\t64\tf64\ta.hlo.txt\n\
+        radic_partial_m5_b256_f64\t5\t256\tf64\tb.hlo.txt\n\
+        radic_partial_m4_b64_f32\t4\t64\tf32\tc.hlo.txt\n";
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        assert_eq!(m.specs().len(), 3);
+        let spec = m.find(5, Dtype::F64, 256).unwrap();
+        assert_eq!(spec.batch, 256);
+        assert_eq!(spec.path, Path::new("/art/b.hlo.txt"));
+        // Batch cap prefers the largest bucket that fits.
+        assert_eq!(m.find(5, Dtype::F64, 100).unwrap().batch, 64);
+        // Cap below every bucket still returns the smallest.
+        assert_eq!(m.find(5, Dtype::F64, 1).unwrap().batch, 64);
+    }
+
+    #[test]
+    fn missing_bucket_reports_available() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        let err = m.find(7, Dtype::F64, 256).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("m=7"), "{msg}");
+        assert!(msg.contains("m=5 f64"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_bad_header_and_rows() {
+        assert!(Manifest::parse(Path::new("/a"), "nope\n").is_err());
+        assert!(Manifest::parse(Path::new("/a"), "name\tm\tbatch\tdtype\tfile\n").is_err());
+        assert!(Manifest::parse(
+            Path::new("/a"),
+            "name\tm\tbatch\tdtype\tfile\nx\t5\t64\tf64\n"
+        )
+        .is_err());
+        assert!(Manifest::parse(
+            Path::new("/a"),
+            "name\tm\tbatch\tdtype\tfile\nx\tfive\t64\tf64\tf.txt\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn available_ms_sorted_unique() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        assert_eq!(m.available_ms(Dtype::F64), vec![5]);
+        assert_eq!(m.available_ms(Dtype::F32), vec![4]);
+    }
+}

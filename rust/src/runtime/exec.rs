@@ -1,0 +1,132 @@
+//! Executable wrapper: HLO text → PJRT compile → batched execution.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: `HloModuleProto::
+//! from_text_file` (the text parser reassigns the 64-bit instruction ids
+//! that xla_extension 0.5.1 would otherwise reject), `client.compile`,
+//! tuple output (`return_tuple=True` on the python side).
+
+use super::artifact::{ArtifactSpec, Dtype};
+use crate::{Error, Result};
+
+/// Output of one `radic_partial` execution.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    /// `Σ_b signs[b]·det(subs[b])` as computed on-device.
+    pub partial: f64,
+    /// Per-lane determinants (length = artifact batch).
+    pub dets: Vec<f64>,
+}
+
+/// A per-thread PJRT CPU session (NOT `Send` — see module docs).
+pub struct XlaSession {
+    client: xla::PjRtClient,
+}
+
+impl XlaSession {
+    /// Create a CPU PJRT client on the current thread.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact bucket.
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<RadicExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-UTF8 path {:?}", spec.path)))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(RadicExecutable {
+            exe,
+            m: spec.m,
+            batch: spec.batch,
+            dtype: spec.dtype,
+            name: spec.name.clone(),
+        })
+    }
+}
+
+/// One compiled `radic_partial` graph, pinned to its creating thread.
+pub struct RadicExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    m: usize,
+    batch: usize,
+    dtype: Dtype,
+    name: String,
+}
+
+impl RadicExecutable {
+    /// Submatrix order.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Specialized batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Bucket name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute on a full batch: `subs` is row-major `(batch, m, m)`,
+    /// `signs` is `(batch,)` with 0.0 marking padding lanes.
+    pub fn run(&self, subs: &[f64], signs: &[f64]) -> Result<BatchResult> {
+        let (b, m) = (self.batch, self.m);
+        if subs.len() != b * m * m || signs.len() != b {
+            return Err(Error::Shape(format!(
+                "batch buffers ({}, {}) don't match artifact {} ({}, {})",
+                subs.len(),
+                signs.len(),
+                self.name,
+                b * m * m,
+                b
+            )));
+        }
+        let (subs_lit, signs_lit) = match self.dtype {
+            Dtype::F64 => (
+                xla::Literal::vec1(subs).reshape(&[b as i64, m as i64, m as i64])?,
+                xla::Literal::vec1(signs),
+            ),
+            Dtype::F32 => {
+                let subs32: Vec<f32> = subs.iter().map(|&x| x as f32).collect();
+                let signs32: Vec<f32> = signs.iter().map(|&x| x as f32).collect();
+                (
+                    xla::Literal::vec1(&subs32).reshape(&[b as i64, m as i64, m as i64])?,
+                    xla::Literal::vec1(&signs32),
+                )
+            }
+        };
+        let result = self.exe.execute::<xla::Literal>(&[subs_lit, signs_lit])?[0][0]
+            .to_literal_sync()?;
+        let (partial_lit, dets_lit) = result.to_tuple2()?;
+        let (partial, dets) = match self.dtype {
+            Dtype::F64 => (
+                partial_lit.get_first_element::<f64>()?,
+                dets_lit.to_vec::<f64>()?,
+            ),
+            Dtype::F32 => (
+                partial_lit.get_first_element::<f32>()? as f64,
+                dets_lit
+                    .to_vec::<f32>()?
+                    .into_iter()
+                    .map(|x| x as f64)
+                    .collect(),
+            ),
+        };
+        Ok(BatchResult { partial, dets })
+    }
+}
+
+// No unit tests here: everything needs compiled artifacts + a PJRT
+// client, which belongs to the integration suite
+// (rust/tests/runtime_xla.rs) so it can gracefully skip when
+// `make artifacts` hasn't run.

@@ -1,0 +1,48 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts. Python never runs here; the interchange is HLO *text*
+//! produced once by `make artifacts` (see `python/compile/aot.py`).
+//!
+//! Thread-model note: the `xla` crate's `PjRtClient` is `Rc`-based and
+//! **not `Send`** — a client and everything compiled from it must live
+//! and die on one thread. [`XlaSession`] therefore provides a
+//! per-thread handle; the coordinator's dispatch module runs sessions on
+//! dedicated executor threads and feeds them over channels.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactSpec, Dtype, Manifest};
+pub use exec::{BatchResult, RadicExecutable, XlaSession};
+
+use std::path::Path;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory: explicit argument, `RADDET_ARTIFACTS`
+/// env var, or the default — first one that contains a manifest wins.
+pub fn resolve_artifact_dir(explicit: Option<&Path>) -> Option<std::path::PathBuf> {
+    let mut candidates: Vec<std::path::PathBuf> = Vec::new();
+    if let Some(p) = explicit {
+        candidates.push(p.to_path_buf());
+    }
+    if let Ok(env) = std::env::var("RADDET_ARTIFACTS") {
+        candidates.push(env.into());
+    }
+    candidates.push(DEFAULT_ARTIFACT_DIR.into());
+    // Also try relative to the crate root (tests run from target dirs).
+    candidates.push(Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR));
+    candidates
+        .into_iter()
+        .find(|c| c.join(artifact::MANIFEST_FILE).exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_never_panics_on_bogus_explicit() {
+        let _ = resolve_artifact_dir(Some(Path::new("/nonexistent")));
+    }
+}

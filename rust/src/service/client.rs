@@ -1,0 +1,84 @@
+//! Blocking client for the determinant service.
+
+use super::protocol::{Request, Response};
+use crate::matrix::{MatF64, MatI64};
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// One service connection (request/response, pipelined sequentially).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// A float determinant reply with client-side latency attached.
+#[derive(Clone, Copy, Debug)]
+pub struct DetReply {
+    /// The determinant.
+    pub det: f64,
+    /// Radić terms evaluated.
+    pub terms: u128,
+    /// Server-side evaluation time.
+    pub server_micros: u128,
+    /// Full round-trip as observed by the client.
+    pub round_trip: Duration,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        self.stream.write_all(req.encode().as_bytes())?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(Error::Protocol("server closed the connection".into()));
+        }
+        Response::parse(&line)
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(Error::Protocol(format!("expected PONG, got {other:?}"))),
+        }
+    }
+
+    /// Float Radić determinant with latency breakdown.
+    pub fn det(&mut self, a: &MatF64) -> Result<DetReply> {
+        let t0 = Instant::now();
+        match self.roundtrip(&Request::Det(a.clone()))? {
+            Response::Ok { det, terms, micros } => Ok(DetReply {
+                det,
+                terms,
+                server_micros: micros,
+                round_trip: t0.elapsed(),
+            }),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Exact integer Radić determinant.
+    pub fn det_exact(&mut self, a: &MatI64) -> Result<i128> {
+        match self.roundtrip(&Request::Exact(a.clone()))? {
+            Response::OkExact { det, .. } => Ok(det),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Polite close.
+    pub fn quit(mut self) {
+        let _ = self.stream.write_all(Request::Quit.encode().as_bytes());
+    }
+}

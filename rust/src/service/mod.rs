@@ -1,0 +1,16 @@
+//! TCP determinant service — the paper's §8 future-work study
+//! (“implementation and computing network overhead in these systems”).
+//!
+//! A line-oriented protocol ([`protocol`]) over std TCP: clients submit
+//! non-square matrices, the server evaluates Radić determinants on a
+//! shared [`crate::coordinator::Coordinator`] and reports the result
+//! with timing, so `benches/bench_service.rs` can measure exactly the
+//! `network_overhead` term of §6's `O(n² + network_overhead)` claim.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use protocol::{Request, Response};
+pub use server::{Server, ServerHandle};

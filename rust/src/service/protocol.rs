@@ -1,0 +1,244 @@
+//! Wire protocol: single-line requests and responses (UTF-8, `\n`
+//! terminated — trivially debuggable with `nc`).
+//!
+//! ```text
+//! → DET <m> <n> <v11>,<v12>,…,<vmn>     row-major values
+//! ← OK <det> <terms> <micros>
+//! → EXACT <m> <n> <i11>,…                integer path (Bareiss)
+//! ← OK <det> <terms> <micros>
+//! → PING                                 liveness
+//! ← PONG
+//! → QUIT                                 close the connection
+//! ← (closed)
+//! ← ERR <message>                        any failure
+//! ```
+
+use crate::matrix::{Mat, MatF64, MatI64};
+use crate::{Error, Result};
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Float Radić determinant.
+    Det(MatF64),
+    /// Exact integer Radić determinant.
+    Exact(MatI64),
+    /// Liveness probe.
+    Ping,
+    /// Close the connection.
+    Quit,
+}
+
+/// A server response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Float result: determinant, term count, evaluation micros.
+    Ok { det: f64, terms: u128, micros: u128 },
+    /// Exact result.
+    OkExact { det: i128, terms: u128, micros: u128 },
+    /// Liveness answer.
+    Pong,
+    /// Failure.
+    Err(String),
+}
+
+fn parse_shape(mtok: &str, ntok: &str) -> Result<(usize, usize)> {
+    let m: usize = mtok
+        .parse()
+        .map_err(|e| Error::Protocol(format!("bad m {mtok:?}: {e}")))?;
+    let n: usize = ntok
+        .parse()
+        .map_err(|e| Error::Protocol(format!("bad n {ntok:?}: {e}")))?;
+    if m == 0 || n == 0 || m > 64 || n > 10_000 {
+        return Err(Error::Protocol(format!("unreasonable shape {m}×{n}")));
+    }
+    Ok((m, n))
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let line = line.trim_end();
+        let mut parts = line.splitn(4, ' ');
+        match parts.next() {
+            Some("PING") => Ok(Request::Ping),
+            Some("QUIT") => Ok(Request::Quit),
+            Some(cmd @ ("DET" | "EXACT")) => {
+                let (m, n) = parse_shape(
+                    parts.next().ok_or_else(|| Error::Protocol("missing m".into()))?,
+                    parts.next().ok_or_else(|| Error::Protocol("missing n".into()))?,
+                )?;
+                let body = parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("missing values".into()))?;
+                let toks: Vec<&str> = body.split(',').collect();
+                if toks.len() != m * n {
+                    return Err(Error::Protocol(format!(
+                        "expected {} values, got {}",
+                        m * n,
+                        toks.len()
+                    )));
+                }
+                if cmd == "DET" {
+                    let vals = toks
+                        .iter()
+                        .map(|t| {
+                            t.trim()
+                                .parse::<f64>()
+                                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))
+                        })
+                        .collect::<Result<Vec<f64>>>()?;
+                    Ok(Request::Det(Mat::from_vec(m, n, vals)?))
+                } else {
+                    let vals = toks
+                        .iter()
+                        .map(|t| {
+                            t.trim()
+                                .parse::<i64>()
+                                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))
+                        })
+                        .collect::<Result<Vec<i64>>>()?;
+                    Ok(Request::Exact(Mat::from_vec(m, n, vals)?))
+                }
+            }
+            Some(other) => Err(Error::Protocol(format!("unknown command {other:?}"))),
+            None => Err(Error::Protocol("empty request".into())),
+        }
+    }
+
+    /// Encode a request line (client side).
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Ping => "PING\n".into(),
+            Request::Quit => "QUIT\n".into(),
+            Request::Det(a) => {
+                let body = a
+                    .data()
+                    .iter()
+                    .map(|v| format!("{v:.17e}"))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                format!("DET {} {} {}\n", a.rows(), a.cols(), body)
+            }
+            Request::Exact(a) => {
+                let body = a
+                    .data()
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                format!("EXACT {} {} {}\n", a.rows(), a.cols(), body)
+            }
+        }
+    }
+}
+
+impl Response {
+    /// Parse one response line.
+    pub fn parse(line: &str) -> Result<Response> {
+        let line = line.trim_end();
+        if line == "PONG" {
+            return Ok(Response::Pong);
+        }
+        if let Some(msg) = line.strip_prefix("ERR ") {
+            return Ok(Response::Err(msg.to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("OK ") {
+            let toks: Vec<&str> = rest.split(' ').collect();
+            if toks.len() != 3 {
+                return Err(Error::Protocol(format!("bad OK line {line:?}")));
+            }
+            let terms: u128 = toks[1]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad terms: {e}")))?;
+            let micros: u128 = toks[2]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad micros: {e}")))?;
+            // Float vs exact distinguished by the detail of the token.
+            if toks[0].contains('.') || toks[0].contains('e') || toks[0].contains("inf") {
+                let det: f64 = toks[0]
+                    .parse()
+                    .map_err(|e| Error::Protocol(format!("bad det: {e}")))?;
+                Ok(Response::Ok { det, terms, micros })
+            } else {
+                let det: i128 = toks[0]
+                    .parse()
+                    .map_err(|e| Error::Protocol(format!("bad det: {e}")))?;
+                Ok(Response::OkExact { det, terms, micros })
+            }
+        } else {
+            Err(Error::Protocol(format!("unparseable response {line:?}")))
+        }
+    }
+
+    /// Encode a response line (server side).
+    pub fn encode(&self) -> String {
+        match self {
+            Response::Pong => "PONG\n".into(),
+            Response::Err(m) => format!("ERR {}\n", m.replace('\n', " ")),
+            Response::Ok { det, terms, micros } => {
+                format!("OK {det:.17e} {terms} {micros}\n")
+            }
+            Response::OkExact { det, terms, micros } => {
+                format!("OK {det} {terms} {micros}\n")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn det_roundtrip() {
+        let a = Mat::from_rows(&[vec![1.5, -2.0, 3.25], vec![0.0, 4.0, -1.0]]);
+        let line = Request::Det(a.clone()).encode();
+        match Request::parse(&line).unwrap() {
+            Request::Det(b) => assert_eq!(a, b),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_roundtrip() {
+        let a = Mat::from_vec(2, 3, vec![1i64, -2, 3, 4, 5, -6]).unwrap();
+        let line = Request::Exact(a.clone()).encode();
+        assert_eq!(Request::parse(&line).unwrap(), Request::Exact(a));
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for r in [
+            Response::Ok { det: -1.25e10, terms: 792, micros: 1234 },
+            Response::OkExact { det: -987654321, terms: 56, micros: 7 },
+            Response::Pong,
+            Response::Err("boom".into()),
+        ] {
+            assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in [
+            "",
+            "NOPE",
+            "DET",
+            "DET 2",
+            "DET 2 2 1,2,3",       // wrong count
+            "DET 0 2 ",            // zero dim
+            "DET 2 2 1,2,x,4",     // bad value
+            "EXACT 1 2 1.5,2",     // float in integer path
+            "DET 100 20000 1",     // unreasonable shape
+        ] {
+            assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn ping_quit() {
+        assert_eq!(Request::parse("PING\n").unwrap(), Request::Ping);
+        assert_eq!(Request::parse("QUIT").unwrap(), Request::Quit);
+    }
+}

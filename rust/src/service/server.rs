@@ -1,0 +1,148 @@
+//! The determinant server: accept loop + per-connection handler threads
+//! sharing one coordinator.
+
+use super::protocol::{Request, Response};
+use crate::coordinator::Coordinator;
+use crate::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Server configuration + shared state.
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+}
+
+/// Handle to a running server (stop + stats).
+pub struct ServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    requests: Arc<AtomicU64>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// New server around an existing coordinator.
+    pub fn new(coordinator: Coordinator) -> Self {
+        Self { coordinator: Arc::new(coordinator) }
+    }
+
+    /// Bind `addr` (use port 0 for ephemeral) and start serving in
+    /// background threads. Returns immediately.
+    pub fn start(self, addr: &str) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_requests = Arc::clone(&requests);
+        let coordinator = Arc::clone(&self.coordinator);
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let coord = Arc::clone(&coordinator);
+                let reqs = Arc::clone(&accept_requests);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, &coord, &reqs);
+                });
+            }
+        });
+
+        Ok(ServerHandle {
+            addr: local,
+            stop,
+            requests,
+            accept_thread: Some(accept_thread),
+        })
+    }
+}
+
+impl ServerHandle {
+    /// Bound address (for ephemeral-port tests).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Requests served so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join the accept loop. In-flight connections
+    /// finish their current request.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Coordinator,
+    requests: &AtomicU64,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let response = match Request::parse(&line) {
+            Ok(Request::Quit) => break,
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Det(a)) => {
+                let t0 = Instant::now();
+                match coord.radic_det(&a) {
+                    Ok(out) => Response::Ok {
+                        det: out.det,
+                        terms: out.terms,
+                        micros: t0.elapsed().as_micros(),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(Request::Exact(a)) => {
+                let t0 = Instant::now();
+                let terms = crate::combin::combination_count(
+                    a.cols() as u64,
+                    a.rows().min(a.cols()) as u64,
+                )
+                .unwrap_or(0);
+                match coord.radic_det_exact(&a) {
+                    Ok(det) => Response::OkExact {
+                        det,
+                        terms,
+                        micros: t0.elapsed().as_micros(),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Err(e) => Response::Err(e.to_string()),
+        };
+        requests.fetch_add(1, Ordering::SeqCst);
+        writer.write_all(response.encode().as_bytes())?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    let _ = writer.shutdown(Shutdown::Both);
+    Ok(())
+}

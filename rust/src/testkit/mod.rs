@@ -1,0 +1,66 @@
+//! Minimal property-testing kit (proptest is unavailable offline).
+//!
+//! Deterministic, seed-addressable generators over a [`TestRng`] built on
+//! SplitMix64. Property helpers run a closure over many generated cases
+//! and, on failure, report the seed + case index so the exact case can be
+//! replayed with `TestRng::from_seed`.
+
+mod rng;
+
+pub use rng::TestRng;
+
+/// Run `prop` over `cases` generated inputs; panic with a replayable
+/// seed on the first failure.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the libstdc++ rpath of this image)
+/// use raddet::testkit::{for_all, TestRng};
+/// for_all("addition commutes", 100, |rng| {
+///     let (a, b) = (rng.u64_below(1000), rng.u64_below(1000));
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+pub fn for_all<F: FnMut(&mut TestRng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64.wrapping_add(case);
+        let mut rng = TestRng::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (replay seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Draw a random (n, m) pair with `1 ≤ m ≤ n ≤ max_n`.
+pub fn arb_nm(rng: &mut TestRng, max_n: u64) -> (u64, u64) {
+    let n = 1 + rng.u64_below(max_n);
+    let m = 1 + rng.u64_below(n);
+    (n, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_every_case() {
+        let mut count = 0;
+        for_all("counter", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn arb_nm_in_range() {
+        for_all("nm range", 200, |rng| {
+            let (n, m) = arb_nm(rng, 12);
+            assert!(m >= 1 && m <= n && n <= 12);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_all_propagates_failure() {
+        for_all("always fails", 5, |_| panic!("boom"));
+    }
+}

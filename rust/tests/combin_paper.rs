@@ -1,0 +1,180 @@
+//! Byte-for-byte reproduction of the paper's §3–§4 artifacts:
+//! Table 2 (all 56 five-member subsets of {1..8} in dictionary order),
+//! Table 1/3 (the Pascal weight table), and Example 1 (q = 49).
+
+use raddet::combin::{
+    combination_count, first_member, last_member, rank, successor, unrank, unrank_lex,
+    unrank_traced, CombinationStream, PascalTable, PascalWeights,
+};
+
+/// Table 2 of the paper, transcribed row-by-row (B₀ … B₅₅).
+const TABLE_2: [[u32; 5]; 56] = [
+    [1, 2, 3, 4, 5],
+    [1, 2, 3, 4, 6],
+    [1, 2, 3, 4, 7],
+    [1, 2, 3, 4, 8],
+    [1, 2, 3, 5, 6],
+    [1, 2, 3, 5, 7],
+    [1, 2, 3, 5, 8],
+    [1, 2, 3, 6, 7],
+    [1, 2, 3, 6, 8],
+    [1, 2, 3, 7, 8],
+    [1, 2, 4, 5, 6],
+    [1, 2, 4, 5, 7],
+    [1, 2, 4, 5, 8],
+    [1, 2, 4, 6, 7],
+    [1, 2, 4, 6, 8],
+    [1, 2, 4, 7, 8],
+    [1, 2, 5, 6, 7],
+    [1, 2, 5, 6, 8],
+    [1, 2, 5, 7, 8],
+    [1, 2, 6, 7, 8],
+    [1, 3, 4, 5, 6],
+    [1, 3, 4, 5, 7],
+    [1, 3, 4, 5, 8],
+    [1, 3, 4, 6, 7],
+    [1, 3, 4, 6, 8],
+    [1, 3, 4, 7, 8],
+    [1, 3, 5, 6, 7],
+    [1, 3, 5, 6, 8],
+    [1, 3, 5, 7, 8],
+    [1, 3, 6, 7, 8],
+    [1, 4, 5, 6, 7],
+    [1, 4, 5, 6, 8],
+    [1, 4, 5, 7, 8],
+    [1, 4, 6, 7, 8],
+    [1, 5, 6, 7, 8],
+    [2, 3, 4, 5, 6],
+    [2, 3, 4, 5, 7],
+    [2, 3, 4, 5, 8],
+    [2, 3, 4, 6, 7],
+    [2, 3, 4, 6, 8],
+    [2, 3, 4, 7, 8],
+    [2, 3, 5, 6, 7],
+    [2, 3, 5, 6, 8],
+    [2, 3, 5, 7, 8],
+    [2, 3, 6, 7, 8],
+    [2, 4, 5, 6, 7],
+    [2, 4, 5, 6, 8],
+    [2, 4, 5, 7, 8],
+    [2, 4, 6, 7, 8],
+    [2, 5, 6, 7, 8],
+    [3, 4, 5, 6, 7],
+    [3, 4, 5, 6, 8],
+    [3, 4, 5, 7, 8],
+    [3, 4, 6, 7, 8],
+    [3, 5, 6, 7, 8],
+    [4, 5, 6, 7, 8],
+];
+
+#[test]
+fn table2_count_is_56() {
+    assert_eq!(combination_count(8, 5).unwrap(), 56);
+}
+
+#[test]
+fn table2_via_unranking() {
+    // Every Bq regenerated independently by combinatorial addition.
+    for (q, row) in TABLE_2.iter().enumerate() {
+        assert_eq!(unrank(8, 5, q as u128).unwrap(), row.to_vec(), "B{q}");
+        assert_eq!(unrank_lex(8, 5, q as u128).unwrap(), row.to_vec(), "B{q} (lex)");
+    }
+}
+
+#[test]
+fn table2_via_successor_chain() {
+    // The §5 walk: start at the First Member and apply successors.
+    let mut b = first_member(5);
+    for (q, row) in TABLE_2.iter().enumerate() {
+        assert_eq!(b.as_slice(), row, "B{q}");
+        let more = successor(&mut b, 8);
+        assert_eq!(more, q + 1 < 56);
+    }
+}
+
+#[test]
+fn table2_via_stream() {
+    let table = PascalTable::new(8, 5).unwrap();
+    let all: Vec<Vec<u32>> = CombinationStream::new(&table, 0, 56).unwrap().collect();
+    assert_eq!(all.len(), 56);
+    for (q, row) in TABLE_2.iter().enumerate() {
+        assert_eq!(all[q], row.to_vec(), "B{q}");
+    }
+}
+
+#[test]
+fn table2_ranks_invert() {
+    for (q, row) in TABLE_2.iter().enumerate() {
+        assert_eq!(rank(8, row).unwrap(), q as u128, "rank(B{q})");
+    }
+}
+
+#[test]
+fn first_and_last_members_match_section3() {
+    // §3: first element [1..m], last [n−m+1..n].
+    assert_eq!(first_member(5), TABLE_2[0].to_vec());
+    assert_eq!(last_member(8, 5), TABLE_2[55].to_vec());
+}
+
+#[test]
+fn example1_result() {
+    // §4 Example 1: q = 49 ⇒ B₄₉ = [2,5,6,7,8] — also row 49 of Table 2.
+    let b = unrank(8, 5, 49).unwrap();
+    assert_eq!(b, vec![2, 5, 6, 7, 8]);
+    assert_eq!(b, TABLE_2[49].to_vec());
+}
+
+#[test]
+fn example1_full_narrative() {
+    // The two combinatorial-addition stages exactly as narrated:
+    //   stage 1: C(7,4)=35 < 49 ≤ C(8,5); one step in row j=4; q←14;
+    //            sequence becomes [2,3,4,5,6];
+    //   stage 2: from column n−m−p=2, row j=3: C(5,3)+C(4,3)=14 ≤ 14;
+    //            two steps; last four places +2 ⇒ [2,5,6,7,8]; q←0.
+    let (b, stages) = unrank_traced(8, 5, 49).unwrap();
+    assert_eq!(b, vec![2, 5, 6, 7, 8]);
+    assert_eq!(stages.len(), 2);
+
+    assert_eq!(stages[0].row_j, 4);
+    assert_eq!(stages[0].col_start, 3);
+    assert_eq!(stages[0].steps_p, 1);
+    assert_eq!(stages[0].sum, 35); // C(7,4)
+    assert_eq!(stages[0].q_before, 49);
+    assert_eq!(stages[0].q_after, 14);
+    assert_eq!(stages[0].b_after, vec![2, 3, 4, 5, 6]);
+
+    assert_eq!(stages[1].row_j, 3);
+    assert_eq!(stages[1].col_start, 2);
+    assert_eq!(stages[1].steps_p, 2);
+    assert_eq!(stages[1].sum, 14); // C(5,3) + C(4,3)
+    assert_eq!(stages[1].q_after, 0);
+    assert_eq!(stages[1].b_after, vec![2, 5, 6, 7, 8]);
+}
+
+#[test]
+fn example1_weight_vector() {
+    // §4: “the weight of each place … C(7,4) C(6,3) C(5,2) C(4,1) C(3,0)”.
+    let w = PascalWeights::new(8, 5).unwrap();
+    assert_eq!(w.as_slice(), &[35, 20, 10, 4, 1]);
+}
+
+#[test]
+fn table1_pascal_structure() {
+    // Table 1: A(j,i) = C(i+j, j); spot-check the corners the paper lists.
+    let t = PascalTable::new(8, 5).unwrap();
+    assert_eq!(t.at(0, 1), 1); // C(1,0)
+    assert_eq!(t.at(1, 1), 2); // C(2,1)
+    assert_eq!(t.at(4, 1), 5); // C(5,4) — first column, last row: (m, m−1)
+    assert_eq!(t.at(4, 3), 35); // C(7,4) — last column, last row: (n−1, m−1)
+    assert_eq!(t.at(0, 3), 1); // C(3,0) = C(n−m, 0)
+}
+
+#[test]
+fn theorem1_count_via_hockey_stick() {
+    // Theorem 1: Σ C(n−i, m−1) for i=1..n−m+1 equals C(n,m).
+    let (n, m) = (8u64, 5u64);
+    let sum: u128 = (1..=n - m + 1)
+        .map(|i| raddet::combin::binom(n - i, m - 1))
+        .sum();
+    assert_eq!(sum, combination_count(n, m).unwrap());
+}

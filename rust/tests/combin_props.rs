@@ -1,0 +1,150 @@
+//! Property tests over the combinatorics substrate (testkit-driven).
+//!
+//! These are the Theorem-2 verification: combinatorial addition is a
+//! bijection `[0, C(n,m)) → ascending sequences` that agrees with the
+//! independently derived lexicographic unranker, inverts through
+//! `rank`, and is consistent with the successor chain.
+
+use raddet::combin::{
+    combination_count, is_ascending, partition_total, rank, successor, unrank, unrank_lex,
+    CombinationStream, PascalTable,
+};
+use raddet::testkit::{for_all, TestRng};
+
+/// Draw a valid (n, m, q) triple with n ≤ max_n.
+fn arb_nmq(rng: &mut TestRng, max_n: u64) -> (u64, u64, u128) {
+    let n = 1 + rng.u64_below(max_n);
+    let m = 1 + rng.u64_below(n);
+    let total = combination_count(n, m).unwrap();
+    let q = rng.u128_below(total);
+    (n, m, q)
+}
+
+#[test]
+fn exhaustive_equivalence_small() {
+    // Every (n ≤ 14, m, q): paper algorithm == independent algorithm,
+    // and rank inverts. (n=14 alone is 16k ranks; total ≈ 115k cases.)
+    for n in 1..=14u64 {
+        for m in 1..=n {
+            let total = combination_count(n, m).unwrap();
+            let table = PascalTable::new(n, m).unwrap();
+            let mut buf = vec![0u32; m as usize];
+            for q in 0..total {
+                raddet::combin::unrank::unrank_into(&table, q, &mut buf).unwrap();
+                let lex = unrank_lex(n, m, q).unwrap();
+                assert_eq!(buf, lex.as_slice(), "n={n} m={m} q={q}");
+                assert_eq!(rank(n, &buf).unwrap(), q, "rank inverse n={n} m={m} q={q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unrank_is_ascending_and_invertible_large() {
+    for_all("unrank/rank roundtrip (large n)", 400, |rng| {
+        let (n, m, q) = arb_nmq(rng, 64);
+        let c = unrank(n, m, q).unwrap();
+        assert!(is_ascending(&c, n), "n={n} m={m} q={q}: {c:?}");
+        assert_eq!(c, unrank_lex(n, m, q).unwrap(), "n={n} m={m} q={q}");
+        assert_eq!(rank(n, &c).unwrap(), q, "n={n} m={m} q={q}");
+    });
+}
+
+#[test]
+fn prop_unrank_preserves_dictionary_order() {
+    for_all("unrank monotone in q", 300, |rng| {
+        let (n, m, q) = arb_nmq(rng, 40);
+        let total = combination_count(n, m).unwrap();
+        if q + 1 >= total {
+            return;
+        }
+        let a = unrank(n, m, q).unwrap();
+        let b = unrank(n, m, q + 1).unwrap();
+        assert!(a < b, "dictionary order violated at n={n} m={m} q={q}: {a:?} !< {b:?}");
+    });
+}
+
+#[test]
+fn prop_successor_matches_unrank() {
+    for_all("successor == unrank(q+1)", 300, |rng| {
+        let (n, m, q) = arb_nmq(rng, 48);
+        let total = combination_count(n, m).unwrap();
+        let mut c = unrank(n, m, q).unwrap();
+        let advanced = successor(&mut c, n);
+        if q + 1 < total {
+            assert!(advanced);
+            assert_eq!(c, unrank(n, m, q + 1).unwrap(), "n={n} m={m} q={q}");
+        } else {
+            assert!(!advanced, "last member must have no successor");
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_streams_cover_exactly() {
+    for_all("chunk streams tile the enumeration", 60, |rng| {
+        let n = 2 + rng.u64_below(16);
+        let m = 1 + rng.u64_below(n);
+        let k = 1 + rng.usize_below(9);
+        let total = combination_count(n, m).unwrap();
+        let table = PascalTable::new(n, m).unwrap();
+        let mut count = 0u128;
+        let mut prev: Option<Vec<u32>> = None;
+        for chunk in partition_total(total, k) {
+            let mut s = CombinationStream::new(&table, chunk.start, chunk.len).unwrap();
+            while let Some(c) = s.next_ref() {
+                if let Some(p) = &prev {
+                    assert!(p.as_slice() < c, "global order across chunk boundary");
+                }
+                prev = Some(c.to_vec());
+                count += 1;
+            }
+        }
+        assert_eq!(count, total, "n={n} m={m} k={k}");
+    });
+}
+
+#[test]
+fn prop_rank_rejects_tampered_sequences() {
+    for_all("rank input validation", 200, |rng| {
+        let (n, m, q) = arb_nmq(rng, 24);
+        if m < 2 {
+            return;
+        }
+        let mut c = unrank(n, m, q).unwrap();
+        // Tamper: duplicate one element (breaks strict ascent).
+        let i = 1 + rng.usize_below(m as usize - 1);
+        c[i] = c[i - 1];
+        assert!(rank(n, &c).is_err(), "tampered {c:?} must be rejected");
+    });
+}
+
+#[test]
+fn prop_theorem1_count() {
+    // Theorem 1 for random (n, m): Σ_{j=m−1}^{n−1} C(j, m−1) = C(n, m).
+    for_all("theorem 1", 200, |rng| {
+        let (n, m) = raddet::testkit::arb_nm(rng, 50);
+        let sum: u128 = (m - 1..n).map(|j| raddet::combin::binom(j, m - 1)).sum();
+        assert_eq!(sum, combination_count(n, m).unwrap());
+    });
+}
+
+#[test]
+fn unranking_handles_huge_ranks() {
+    // u128-range ranks: n=100, m=50 (C ≈ 1e29) — unrank the extremes and
+    // a few random interior points; verify with rank().
+    let (n, m) = (100u64, 50u64);
+    let total = combination_count(n, m).unwrap();
+    assert!(total > u64::MAX as u128, "this test wants a >2^64 space");
+    let mut rng = TestRng::from_seed(0xABCD);
+    let mut qs = vec![0u128, 1, total / 2, total - 2, total - 1];
+    for _ in 0..20 {
+        qs.push(rng.u128_below(total));
+    }
+    for q in qs {
+        let c = unrank(n, m, q).unwrap();
+        assert!(is_ascending(&c, n));
+        assert_eq!(rank(n, &c).unwrap(), q, "q={q}");
+        assert_eq!(c, unrank_lex(n, m, q).unwrap(), "q={q}");
+    }
+}

@@ -1,0 +1,170 @@
+//! End-to-end coordinator tests: parallel runs (both engines, both
+//! schedules) against the sequential reference and the exact integer
+//! path — the core “decoupling preserves the determinant” claim.
+
+use raddet::coordinator::{
+    Coordinator, CoordinatorConfig, EngineKind, Schedule,
+};
+use raddet::linalg::{radic_det_exact, radic_det_seq};
+use raddet::matrix::gen;
+use raddet::runtime::resolve_artifact_dir;
+use raddet::testkit::{for_all, TestRng};
+
+fn coord(engine: EngineKind, workers: usize, schedule: Schedule) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        workers,
+        engine,
+        schedule,
+        batch: 64,
+        xla_executors: 2,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn have_artifacts() -> bool {
+    resolve_artifact_dir(None).is_some()
+}
+
+#[test]
+fn cpu_parallel_equals_sequential_property() {
+    for_all("parallel == sequential (cpu)", 25, |rng: &mut TestRng| {
+        let m = 1 + rng.usize_below(5);
+        let n = m + rng.usize_below(8);
+        let workers = 1 + rng.usize_below(6);
+        let a = gen::uniform(rng, m, n, -2.0, 2.0);
+        let seq = radic_det_seq(&a).unwrap();
+        let out = coord(EngineKind::Cpu, workers, Schedule::Static)
+            .radic_det(&a)
+            .unwrap();
+        assert!(
+            (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+            "m={m} n={n} workers={workers}: {} vs {seq}",
+            out.det
+        );
+    });
+}
+
+#[test]
+fn schedules_agree() {
+    let a = gen::uniform(&mut TestRng::from_seed(11), 4, 13, -1.0, 1.0);
+    let st = coord(EngineKind::Cpu, 4, Schedule::Static).radic_det(&a).unwrap();
+    let ws = coord(EngineKind::Cpu, 4, Schedule::WorkStealing { grain: 50 })
+        .radic_det(&a)
+        .unwrap();
+    assert!((st.det - ws.det).abs() < 1e-9 * st.det.abs().max(1.0));
+    assert_eq!(st.terms, ws.terms);
+}
+
+#[test]
+fn xla_engine_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    // m=5, n=12 ⇒ C(12,5) = 792 terms across 4 workers through PJRT.
+    let a = gen::uniform(&mut TestRng::from_seed(21), 5, 12, -1.0, 1.0);
+    let seq = radic_det_seq(&a).unwrap();
+    let out = coord(EngineKind::Xla, 4, Schedule::Static).radic_det(&a).unwrap();
+    assert_eq!(out.engine, "xla-pjrt");
+    assert_eq!(out.terms, 792);
+    assert!(
+        (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+        "xla={} seq={seq}",
+        out.det
+    );
+}
+
+#[test]
+fn xla_and_cpu_engines_agree() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    for (m, n) in [(2usize, 10usize), (3, 11), (6, 11), (8, 12)] {
+        let a = gen::uniform(&mut TestRng::from_seed((m * n) as u64), m, n, -1.5, 1.5);
+        let c = coord(EngineKind::Cpu, 3, Schedule::Static).radic_det(&a).unwrap();
+        let x = coord(EngineKind::Xla, 3, Schedule::Static).radic_det(&a).unwrap();
+        assert!(
+            (c.det - x.det).abs() < 1e-9 * c.det.abs().max(1.0),
+            "m={m} n={n}: cpu={} xla={}",
+            c.det,
+            x.det
+        );
+    }
+}
+
+#[test]
+fn auto_engine_picks_xla_when_bucketed_cpu_otherwise() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    // m=5 has a bucket.
+    let a = gen::uniform(&mut TestRng::from_seed(31), 5, 10, -1.0, 1.0);
+    let out = coord(EngineKind::Auto, 2, Schedule::Static).radic_det(&a).unwrap();
+    assert_eq!(out.engine, "xla-pjrt");
+    // m=7 has no bucket ⇒ CPU fallback.
+    let b = gen::uniform(&mut TestRng::from_seed(32), 7, 10, -1.0, 1.0);
+    let out = coord(EngineKind::Auto, 2, Schedule::Static).radic_det(&b).unwrap();
+    assert_eq!(out.engine, "cpu-lu");
+}
+
+#[test]
+fn float_engines_match_exact_anchor() {
+    // Integer workload: the exact Bareiss path is the truth; CPU (and
+    // XLA if present) must match to f64 rounding.
+    let ai = gen::integer(&mut TestRng::from_seed(41), 4, 11, -5, 5);
+    let exact = radic_det_exact(&ai).unwrap() as f64;
+    let af = ai.map(|x| x as f64);
+    let cpu = coord(EngineKind::Cpu, 3, Schedule::Static).radic_det(&af).unwrap();
+    assert!(
+        (cpu.det - exact).abs() < 1e-9 * exact.abs().max(100.0),
+        "cpu={} exact={exact}",
+        cpu.det
+    );
+    if have_artifacts() {
+        let xla = coord(EngineKind::Xla, 3, Schedule::Static).radic_det(&af).unwrap();
+        assert!(
+            (xla.det - exact).abs() < 1e-9 * exact.abs().max(100.0),
+            "xla={} exact={exact}",
+            xla.det
+        );
+    }
+}
+
+#[test]
+fn exact_parallel_matches_sequential_property() {
+    for_all("parallel exact == sequential exact", 15, |rng: &mut TestRng| {
+        let m = 1 + rng.usize_below(4);
+        let n = m + rng.usize_below(6);
+        let workers = 1 + rng.usize_below(5);
+        let a = gen::integer(rng, m, n, -6, 6);
+        let seq = radic_det_exact(&a).unwrap();
+        let par = coord(EngineKind::Cpu, workers, Schedule::Static)
+            .radic_det_exact(&a)
+            .unwrap();
+        assert_eq!(par, seq, "m={m} n={n} workers={workers}");
+    });
+}
+
+#[test]
+fn metrics_are_consistent() {
+    let a = gen::uniform(&mut TestRng::from_seed(51), 3, 12, -1.0, 1.0);
+    let out = coord(EngineKind::Cpu, 4, Schedule::Static).radic_det(&a).unwrap();
+    let total = out.metrics.total();
+    assert_eq!(total.terms as u128, out.terms);
+    assert!(total.batches >= 4, "each worker flushes at least once");
+    assert!(out.metrics.balance() > 0.5, "static split is near-even");
+    assert!(out.metrics.throughput() > 0.0);
+}
+
+#[test]
+fn hilbert_stress_no_nan() {
+    // Ill-conditioned input: values are tiny but must stay finite.
+    let a = gen::hilbert(5, 11);
+    let out = coord(EngineKind::Cpu, 4, Schedule::Static).radic_det(&a).unwrap();
+    assert!(out.det.is_finite());
+    let seq = radic_det_seq(&a).unwrap();
+    assert!((out.det - seq).abs() <= 1e-12 + 1e-6 * seq.abs());
+}

@@ -1,0 +1,154 @@
+//! Failure injection: every subsystem must fail *loudly and softly* —
+//! clear errors, no panics, no silent corruption.
+
+use raddet::cli;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use raddet::matrix::gen;
+use raddet::runtime::{Dtype, Manifest, XlaSession};
+use raddet::testkit::TestRng;
+use std::io::Write;
+use std::path::Path;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("raddet_fi_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = tmpdir("badmanifest");
+    std::fs::write(dir.join("manifest.tsv"), "wrong\theader\n").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("header"), "{err}");
+}
+
+#[test]
+fn truncated_artifact_fails_at_load_not_at_run() {
+    let dir = tmpdir("truncated");
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "name\tm\tbatch\tdtype\tfile\nbad\t3\t64\tf64\tbad.hlo.txt\n",
+    )
+    .unwrap();
+    let mut f = std::fs::File::create(dir.join("bad.hlo.txt")).unwrap();
+    f.write_all(b"HloModule totally_not_valid_hlo\n garbage {").unwrap();
+    drop(f);
+
+    let man = Manifest::load(&dir).unwrap();
+    let spec = man.find(3, Dtype::F64, 64).unwrap();
+    let session = XlaSession::cpu().unwrap();
+    let err = session.load(spec);
+    assert!(err.is_err(), "corrupt HLO must fail to load");
+}
+
+#[test]
+fn xla_engine_without_artifacts_is_a_config_error() {
+    let err = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Xla,
+        artifact_dir: Some("/definitely/not/here".into()),
+        ..Default::default()
+    });
+    // resolve falls back to repo artifacts if built; force a miss by
+    // also checking the error message when it does fail.
+    if let Err(e) = err {
+        assert!(e.to_string().contains("artifacts"), "{e}");
+    }
+}
+
+#[test]
+fn coordinator_worker_errors_propagate() {
+    // An integer job whose Bareiss terms overflow i128 must surface
+    // ExactOverflow from inside a worker thread, not panic.
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        ..Default::default()
+    })
+    .unwrap();
+    let huge = raddet::matrix::Mat::from_vec(4, 6, vec![i64::MAX / 3; 24]).unwrap();
+    match coord.radic_det_exact(&huge) {
+        Ok(v) => assert_eq!(v, 0, "degenerate matrix may legitimately cancel to 0"),
+        Err(e) => assert!(e.to_string().contains("overflow"), "{e}"),
+    }
+}
+
+#[test]
+fn cli_error_paths_return_code_2() {
+    let run = |args: &[&str]| cli::run(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert_eq!(run(&["nonsense"]), 2);
+    assert_eq!(run(&["det", "--rows"]), 2); // bare flag where value needed → missing cols
+    assert_eq!(run(&["unrank", "--n", "8", "--m", "5", "--q", "99"]), 1); // out of range
+    assert_eq!(run(&["det", "--rows", "3", "--cols", "2", "--typo", "x"]), 2);
+}
+
+#[test]
+fn cli_happy_paths_return_zero() {
+    let run = |args: &[&str]| cli::run(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert_eq!(run(&["help"]), 0);
+    assert_eq!(run(&["table2"]), 0);
+    assert_eq!(run(&["table", "--n", "8", "--m", "5"]), 0);
+    assert_eq!(run(&["unrank", "--n", "8", "--m", "5", "--q", "49", "--trace"]), 0);
+    assert_eq!(run(&["rank", "--n", "8", "--cols", "2,5,6,7,8"]), 0);
+    assert_eq!(run(&["pram", "--n", "12", "--m", "6"]), 0);
+    assert_eq!(run(&[
+        "det", "--rows", "3", "--cols", "9", "--engine", "cpu", "--workers", "2", "--compare",
+    ]), 0);
+}
+
+#[test]
+fn csv_roundtrip_through_cli_det() {
+    let dir = tmpdir("csv");
+    let path = dir.join("m.csv");
+    let a = gen::uniform(&mut TestRng::from_seed(3), 3, 7, -1.0, 1.0);
+    let f = std::fs::File::create(&path).unwrap();
+    raddet::matrix::io::write_csv(&a, f).unwrap();
+
+    let args: Vec<String> = ["det", "--csv", path.to_str().unwrap(), "--engine", "cpu"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(cli::run(&args), 0);
+
+    // And a corrupt CSV errors cleanly.
+    std::fs::write(dir.join("bad.csv"), "1,2\n3\n").unwrap();
+    let args: Vec<String> = ["det", "--csv", dir.join("bad.csv").to_str().unwrap()]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(cli::run(&args), 1);
+}
+
+#[test]
+fn service_survives_client_disconnect_mid_request() {
+    use raddet::service::Server;
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        engine: EngineKind::Cpu,
+        ..Default::default()
+    })
+    .unwrap();
+    let handle = Server::new(coord).start("127.0.0.1:0").unwrap();
+    // Open a connection, write half a request, slam it shut.
+    {
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"DET 3 9 1,2,3").unwrap(); // no newline, no close handshake
+    }
+    // Server must still answer a well-behaved client.
+    let mut c = raddet::service::Client::connect(&handle.addr().to_string()).unwrap();
+    c.ping().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn unreadable_artifact_path_errors() {
+    let spec = raddet::runtime::ArtifactSpec {
+        name: "ghost".into(),
+        m: 3,
+        batch: 64,
+        dtype: Dtype::F64,
+        path: Path::new("/nonexistent/ghost.hlo.txt").into(),
+    };
+    let session = XlaSession::cpu().unwrap();
+    assert!(session.load(&spec).is_err());
+}

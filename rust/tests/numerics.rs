@@ -1,0 +1,153 @@
+//! Numerical-policy validation: the C(n,m)-term Radić sum under
+//! cancellation, audited against the exact integer path.
+//!
+//! DESIGN.md §5 commits to Neumaier compensation; these tests measure
+//! that it actually buys accuracy on adversarial workloads (and that
+//! the engines inherit it).
+
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use raddet::linalg::{radic_det_exact, radic_det_seq, radic_terms, NeumaierSum};
+use raddet::matrix::{gen, Mat};
+use raddet::testkit::TestRng;
+
+/// A cancellation-stressed integer workload: large-magnitude entries
+/// arranged so signed terms nearly cancel (small exact det, huge terms).
+fn adversarial(seed: u64, m: usize, n: usize, scale: i64) -> raddet::matrix::MatI64 {
+    let mut rng = TestRng::from_seed(seed);
+    let mut a = gen::integer(&mut rng, m, n, -scale, scale);
+    // Make columns nearly linearly dependent: col j ≈ col 1 + tiny noise.
+    for r in 0..m {
+        let base = a.at(r, 0);
+        for c in 1..n {
+            *a.at_mut(r, c) = base + rng.i64_range(-3, 3);
+        }
+    }
+    a
+}
+
+#[test]
+fn compensated_sum_tracks_exact_under_cancellation() {
+    for seed in 0..10u64 {
+        let ai = adversarial(seed, 4, 10, 1000);
+        let exact = radic_det_exact(&ai).unwrap() as f64;
+        let af = ai.map(|x| x as f64);
+        let compensated = radic_det_seq(&af).unwrap();
+
+        // Naive left-to-right sum of the same terms, for comparison.
+        let terms = radic_terms(&af).unwrap();
+        let naive: f64 = terms.iter().map(|t| t.sign * t.det).sum();
+
+        let err_comp = (compensated - exact).abs();
+        let err_naive = (naive - exact).abs();
+        assert!(
+            err_comp <= err_naive + 1e-9,
+            "seed {seed}: compensation made things worse ({err_comp} vs {err_naive})"
+        );
+        // Terms are O(scale^m · noise³) while the det is tiny; demand
+        // the compensated error stays small in *absolute* terms scaled
+        // to the term magnitude.
+        let term_mag = terms.iter().map(|t| t.det.abs()).fold(0.0, f64::max);
+        assert!(
+            err_comp <= 1e-10 * term_mag.max(1.0),
+            "seed {seed}: err {err_comp} vs term magnitude {term_mag}"
+        );
+    }
+}
+
+#[test]
+fn parallel_reduction_preserves_compensation() {
+    // The worker-merge path (NeumaierSum::merge in worker order) must
+    // not lose what the sequential compensation won.
+    for seed in 10..16u64 {
+        let ai = adversarial(seed, 3, 12, 2000);
+        let exact = radic_det_exact(&ai).unwrap() as f64;
+        let af = ai.map(|x| x as f64);
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 4,
+            engine: EngineKind::Cpu,
+            batch: 32,
+            ..Default::default()
+        })
+        .unwrap();
+        let par = coord.radic_det(&af).unwrap().det;
+        let seq = radic_det_seq(&af).unwrap();
+        assert!(
+            (par - exact).abs() <= (seq - exact).abs() * 4.0 + 1e-9,
+            "seed {seed}: parallel {par} vs seq {seq} vs exact {exact}"
+        );
+    }
+}
+
+#[test]
+fn float_pipeline_near_exact_on_small_integers() {
+    // Integer matrices with small entries: the sums are exactly
+    // representable, but LU pivoting divides (even at m=2 the update is
+    // a22 − a21/a11·a12), so the float pipeline is *near*-exact — a few
+    // ulps of the term magnitudes, never worse.
+    for seed in 0..20u64 {
+        let mut rng = TestRng::from_seed(seed);
+        let m = 1 + rng.usize_below(3);
+        let n = m + rng.usize_below(5);
+        let ai = gen::integer(&mut rng, m, n, -64, 64);
+        let exact = radic_det_exact(&ai).unwrap() as f64;
+        let float = radic_det_seq(&ai.map(|x| x as f64)).unwrap();
+        let err = (float - exact).abs();
+        assert!(
+            err <= 1e-9 * exact.abs().max(1e4),
+            "seed {seed} m={m} n={n}: {float} vs {exact}"
+        );
+        // m = 1 has no elimination at all ⇒ exactly equal.
+        if m == 1 {
+            assert_eq!(float, exact, "m=1 must be exact");
+        }
+    }
+}
+
+#[test]
+fn hilbert_matrix_extreme_conditioning() {
+    // Rectangular Hilbert 6×12: submatrix dets span ~20 orders of
+    // magnitude; result must be finite and reproducible across worker
+    // counts bit-for-bit... not guaranteed bitwise across schedules, so
+    // demand agreement to 1e-12 relative of the largest term.
+    let h = gen::hilbert(6, 12);
+    let seq = radic_det_seq(&h).unwrap();
+    assert!(seq.is_finite());
+    for workers in [1usize, 3, 7] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers,
+            engine: EngineKind::Cpu,
+            batch: 64,
+            ..Default::default()
+        })
+        .unwrap();
+        let par = coord.radic_det(&h).unwrap().det;
+        assert!(
+            (par - seq).abs() <= 1e-12 * seq.abs().max(1e-12),
+            "workers={workers}: {par} vs {seq}"
+        );
+    }
+}
+
+#[test]
+fn scale_extremes_no_overflow_to_inf() {
+    // Entries at 1e150: 3×3 dets ~1e450 would overflow — the engine
+    // must produce inf (loud), never a quiet wrong finite number; at
+    // 1e-200, dets underflow to 0 gracefully.
+    let big = Mat::from_rows(&[
+        vec![1e150, 2e150, 3e150, 4e150],
+        vec![5e150, 6e150, 7e150, 8.5e150],
+        vec![9e150, 1e150, 2.5e150, 3e150],
+    ]);
+    let d = radic_det_seq(&big).unwrap();
+    // Products of three 1e150-scale pivots overflow; the signed sum of
+    // ±inf terms is inf or NaN — either is loud. A quiet, plausible
+    // finite value would be the bug.
+    assert!(
+        d.is_infinite() || d.is_nan() || d.abs() > 1e300,
+        "magnitude must surface, got {d}"
+    );
+
+    let tiny = big.map(|x| x * 1e-350);
+    let d = radic_det_seq(&tiny).unwrap();
+    assert_eq!(d, 0.0, "graceful underflow");
+}

@@ -1,0 +1,88 @@
+//! §6 model validation: the simulator's measured step counts must
+//! exhibit the paper's complexity shape across a problem sweep.
+
+use raddet::pram::{section6_table, MemPolicy, PramMachine};
+
+#[test]
+fn section6_ordering_holds_across_sweep() {
+    for (n, m) in [(10u64, 5u64), (12, 6), (16, 4), (18, 9), (22, 3)] {
+        let crcw = PramMachine::new(MemPolicy::Crcw).simulate(n, m).unwrap();
+        let crew = PramMachine::new(MemPolicy::Crew).simulate(n, m).unwrap();
+        let erew = PramMachine::new(MemPolicy::Erew).simulate(n, m).unwrap();
+        assert!(
+            crcw.time() <= crew.time() && crew.time() <= erew.time(),
+            "n={n} m={m}: {} {} {}",
+            crcw.time(),
+            crew.time(),
+            erew.time()
+        );
+        // The additive reduction terms are exactly the paper's: CREW
+        // pays one log-tree, EREW two (broadcast + reduce).
+        assert_eq!(crew.reduce.time, erew.reduce.time / 2);
+        assert_eq!(crcw.reduce.time, 1);
+    }
+}
+
+#[test]
+fn unrank_time_scales_with_m_times_width() {
+    // Fix m, double the width (n−m): critical-path unrank time must
+    // grow at most linearly (with slack for the constant).
+    let m = 5u64;
+    let t1 = PramMachine::new(MemPolicy::Crcw)
+        .simulate(m + 6, m)
+        .unwrap()
+        .unrank
+        .time;
+    let t2 = PramMachine::new(MemPolicy::Crcw)
+        .simulate(m + 12, m)
+        .unwrap()
+        .unrank
+        .time;
+    assert!(t2 <= t1 * 3, "width doubling tripled+ time: {t1} -> {t2}");
+    assert!(t2 > t1, "wider problems cost more");
+}
+
+#[test]
+fn time_polynomial_while_work_exponential() {
+    // n grows with m = n/2: groups explode, time stays ~n².
+    let small = PramMachine::new(MemPolicy::Crew).simulate(12, 6).unwrap();
+    let big = PramMachine::new(MemPolicy::Crew).simulate(24, 12).unwrap();
+    let group_ratio = big.groups as f64 / small.groups as f64;
+    let time_ratio = big.time() as f64 / small.time() as f64;
+    assert!(group_ratio > 2000.0, "work should explode: {group_ratio}");
+    assert!(time_ratio < 8.0, "time must stay polynomial: {time_ratio}");
+}
+
+#[test]
+fn o_n_squared_claim() {
+    // §6's headline: total time ∈ O(n²). Fit time/n² over a sweep with
+    // m = n/2 (the worst case for m(n−m)).
+    let mut ratios = Vec::new();
+    for n in [8u64, 12, 16, 20, 24] {
+        let r = PramMachine::new(MemPolicy::Erew).simulate(n, n / 2).unwrap();
+        ratios.push(r.time() as f64 / (n * n) as f64);
+    }
+    let max = ratios.iter().cloned().fold(0.0, f64::max);
+    let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max / min < 4.0,
+        "time/n² must stay within a constant band: {ratios:?}"
+    );
+}
+
+#[test]
+fn section6_table_renders_all_policies() {
+    let rows = section6_table(&[(8, 5), (16, 8)]).unwrap();
+    assert_eq!(rows.len(), 6);
+    let crcw_8_5 = &rows[0];
+    assert_eq!(crcw_8_5.groups, 56);
+    assert_eq!(crcw_8_5.processors, 56 * 25);
+    assert!(rows.iter().all(|r| r.time > 0 && r.speedup > 1.0));
+}
+
+#[test]
+fn sequential_model_grows_with_groups() {
+    let a = PramMachine::new(MemPolicy::Crcw).simulate(12, 4).unwrap();
+    let b = PramMachine::new(MemPolicy::Crcw).simulate(16, 4).unwrap();
+    assert!(b.sequential_time() > a.sequential_time() * 3);
+}

@@ -1,0 +1,152 @@
+//! Runtime integration: load the AOT artifacts, execute on PJRT, and
+//! check the numbers against the pure-rust engines.
+//!
+//! Requires `make artifacts`; each test skips (with a loud message) when
+//! the manifest is absent so `cargo test` stays usable pre-build.
+
+use raddet::coordinator::batcher::BatchBuilder;
+use raddet::coordinator::engine::{CpuEngine, DetEngine};
+use raddet::linalg::det_lu;
+use raddet::matrix::gen;
+use raddet::runtime::{resolve_artifact_dir, Dtype, Manifest, XlaSession};
+use raddet::testkit::TestRng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = resolve_artifact_dir(None)?;
+    Some(Manifest::load(&dir).expect("manifest parse"))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_shipped_buckets() {
+    let man = require_artifacts!();
+    let ms = man.available_ms(Dtype::F64);
+    for m in [2usize, 3, 4, 5, 6, 8] {
+        assert!(ms.contains(&m), "missing f64 bucket m={m} (have {ms:?})");
+    }
+    assert!(man.available_ms(Dtype::F32).contains(&4));
+}
+
+#[test]
+fn load_and_execute_identity_batch() {
+    let man = require_artifacts!();
+    let spec = man.find(3, Dtype::F64, 64).unwrap();
+    let session = XlaSession::cpu().unwrap();
+    let exe = session.load(spec).unwrap();
+    assert_eq!(exe.m(), 3);
+
+    let b = BatchBuilder::new(3, exe.batch());
+    let (subs, signs, _) = b.buffers();
+    let out = exe.run(subs, signs).unwrap();
+    assert_eq!(out.partial, 0.0, "all-padding batch sums to 0");
+    assert!(out.dets.iter().all(|&d| d == 1.0), "identity lanes det 1");
+}
+
+#[test]
+fn xla_matches_cpu_engine_all_buckets() {
+    let man = require_artifacts!();
+    let session = XlaSession::cpu().unwrap();
+    let mut rng = TestRng::from_seed(0xDE7);
+    for m in [2usize, 3, 4, 5, 6, 8] {
+        let spec = man.find(m, Dtype::F64, 64).unwrap();
+        let exe = session.load(spec).unwrap();
+        let batch = exe.batch();
+
+        let a = gen::uniform(&mut rng, m, m + 6, -2.0, 2.0);
+        let mut b = BatchBuilder::new(m, batch);
+        // Fill ~¾ of the batch with real combos, leave the rest padding.
+        let mut cols: Vec<u32> = (1..=m as u32).collect();
+        for _ in 0..(3 * batch / 4) {
+            b.push(&a, &cols);
+            raddet::combin::successor(&mut cols, (m + 6) as u64);
+        }
+        let (subs, signs, _) = b.finalize();
+        let (subs, signs) = (subs.to_vec(), signs.to_vec());
+
+        let got = exe.run(&subs, &signs).unwrap();
+        let mut cpu = CpuEngine::new(m, batch);
+        let want = cpu.run_batch(&mut subs.clone(), &signs).unwrap();
+
+        let tol = 1e-9 * want.partial.abs().max(1.0);
+        assert!(
+            (got.partial - want.partial).abs() < tol,
+            "m={m}: xla={} cpu={}",
+            got.partial,
+            want.partial
+        );
+        for (i, (x, c)) in got.dets.iter().zip(&want.dets).enumerate() {
+            assert!(
+                (x - c).abs() < 1e-9 * c.abs().max(1.0),
+                "m={m} lane {i}: xla={x} cpu={c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_bucket_runs_with_loss() {
+    let man = require_artifacts!();
+    let spec = man.find(4, Dtype::F32, 64).unwrap();
+    let session = XlaSession::cpu().unwrap();
+    let exe = session.load(spec).unwrap();
+
+    let a = gen::uniform(&mut TestRng::from_seed(7), 4, 8, -1.0, 1.0);
+    let mut b = BatchBuilder::new(4, exe.batch());
+    let mut cols: Vec<u32> = vec![1, 2, 3, 4];
+    for _ in 0..exe.batch() {
+        b.push(&a, &cols);
+        if !raddet::combin::successor(&mut cols, 8) {
+            break;
+        }
+    }
+    let (subs, signs, _) = b.finalize();
+    let (subs, signs) = (subs.to_vec(), signs.to_vec());
+    let got = exe.run(&subs, &signs).unwrap();
+    let mut cpu = CpuEngine::new(4, exe.batch());
+    let want = cpu.run_batch(&mut subs.clone(), &signs).unwrap();
+    // f32 tolerance.
+    assert!(
+        (got.partial - want.partial).abs() < 1e-3 * want.partial.abs().max(1.0),
+        "xla-f32={} cpu-f64={}",
+        got.partial,
+        want.partial
+    );
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let man = require_artifacts!();
+    let spec = man.find(2, Dtype::F64, 64).unwrap();
+    let session = XlaSession::cpu().unwrap();
+    let exe = session.load(spec).unwrap();
+    let bad_subs = vec![0.0; 7];
+    let signs = vec![0.0; exe.batch()];
+    assert!(exe.run(&bad_subs, &signs).is_err());
+}
+
+#[test]
+fn single_lane_known_determinant() {
+    let man = require_artifacts!();
+    let spec = man.find(2, Dtype::F64, 64).unwrap();
+    let session = XlaSession::cpu().unwrap();
+    let exe = session.load(spec).unwrap();
+
+    let mut b = BatchBuilder::new(2, exe.batch());
+    let a = raddet::matrix::Mat::from_rows(&[vec![3.0, 7.0], vec![1.0, 5.0]]);
+    b.push(&a, &[1, 2]); // det = 8, sign(r=3,s=3) = +1
+    let (subs, signs, _) = b.buffers();
+    let out = exe.run(subs, signs).unwrap();
+    assert!((out.partial - 8.0).abs() < 1e-12, "partial {}", out.partial);
+    assert!((out.dets[0] - det_lu(a.data(), 2)).abs() < 1e-12);
+}

@@ -1,0 +1,99 @@
+//! Service end-to-end: real sockets on an ephemeral port.
+
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::linalg::{radic_det_exact, radic_det_seq};
+use raddet::matrix::gen;
+use raddet::service::{Client, Server};
+use raddet::testkit::TestRng;
+
+fn start_server() -> raddet::service::ServerHandle {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    Server::new(coord).start("127.0.0.1:0").unwrap()
+}
+
+#[test]
+fn ping_det_exact_quit() {
+    let handle = start_server();
+    let addr = handle.addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+
+    // Float determinant matches the local sequential reference.
+    let a = gen::uniform(&mut TestRng::from_seed(1), 3, 9, -1.0, 1.0);
+    let want = radic_det_seq(&a).unwrap();
+    let reply = c.det(&a).unwrap();
+    assert!((reply.det - want).abs() < 1e-9 * want.abs().max(1.0));
+    assert_eq!(reply.terms, 84); // C(9,3)
+
+    // Exact integer determinant.
+    let ai = gen::integer(&mut TestRng::from_seed(2), 2, 7, -5, 5);
+    let exact = c.det_exact(&ai).unwrap();
+    assert_eq!(exact, radic_det_exact(&ai).unwrap());
+
+    c.quit();
+    assert!(handle.requests() >= 3);
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients() {
+    let handle = start_server();
+    let addr = handle.addr().to_string();
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let a = gen::uniform(&mut TestRng::from_seed(100 + t), 3, 8, -1.0, 1.0);
+            let want = radic_det_seq(&a).unwrap();
+            for _ in 0..5 {
+                let got = c.det(&a).unwrap();
+                assert!((got.det - want).abs() < 1e-9 * want.abs().max(1.0));
+            }
+            c.quit();
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(handle.requests() >= 20);
+    handle.stop();
+}
+
+#[test]
+fn protocol_errors_are_soft() {
+    use std::io::{BufRead, BufReader, Write};
+    let handle = start_server();
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(b"GARBAGE\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR "), "{line}");
+    // Connection survives an error: a valid PING still works.
+    s.write_all(b"PING\n").unwrap();
+    let mut line2 = String::new();
+    BufReader::new(s).read_line(&mut line2).unwrap();
+    assert_eq!(line2.trim(), "PONG");
+    handle.stop();
+}
+
+#[test]
+fn oversized_job_reported_not_crashed() {
+    let handle = start_server();
+    let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+    // m=12, n=60 ⇒ C(60,12) ≈ 1.4e12 > default term cap.
+    let a = gen::uniform(&mut TestRng::from_seed(9), 12, 60, -1.0, 1.0);
+    let err = c.det(&a).unwrap_err();
+    assert!(err.to_string().contains("too large"), "{err}");
+    // Server still alive.
+    c.ping().unwrap();
+    handle.stop();
+}
