@@ -22,7 +22,12 @@ use raddet::testkit::TestRng;
 const M: usize = 8;
 const N: usize = 28;
 
-fn run(engine: EngineKind, schedule: Schedule, workers: usize, a: &raddet::matrix::MatF64) -> anyhow::Result<raddet::coordinator::RadicOutput> {
+fn run(
+    engine: EngineKind,
+    schedule: Schedule,
+    workers: usize,
+    a: &raddet::matrix::MatF64,
+) -> raddet::Result<raddet::coordinator::RadicOutput> {
     let coord = Coordinator::new(CoordinatorConfig {
         workers,
         engine,
@@ -31,10 +36,10 @@ fn run(engine: EngineKind, schedule: Schedule, workers: usize, a: &raddet::matri
         xla_executors: workers.min(4),
         ..Default::default()
     })?;
-    Ok(coord.radic_det(a)?)
+    coord.radic_det(a)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> raddet::Result<()> {
     let total = combination_count(N as u64, M as u64)?;
     println!(
         "end-to-end workload: {M}×{N} uniform matrix ⇒ {total} Radić terms\n"
@@ -76,6 +81,27 @@ fn main() -> anyhow::Result<()> {
                 format!("{err:.1e}"),
             ]);
         }
+        w *= 2;
+    }
+
+    // The prefix-factored engine: same workers, per-term cost
+    // amortized from O(m³) down to an O(m) Laplace dot per sibling.
+    let mut w = 1;
+    while w <= max_workers {
+        let out = run(EngineKind::Prefix, Schedule::Static, w, &a)?;
+        let secs = out.metrics.elapsed.as_secs_f64();
+        let err = (out.det - base.det).abs() / base.det.abs().max(1.0);
+        assert!(err < 1e-9, "prefix path disagrees: {err:.3e}");
+        table.row(&[
+            w.to_string(),
+            "static".into(),
+            "prefix".into(),
+            fmt_time(secs),
+            format!("{:.2}×", t1 / secs),
+            format!("{:.0}%", 100.0 * t1 / secs / w as f64),
+            format!("{:.2}", total as f64 / secs / 1e6),
+            format!("{err:.1e}"),
+        ]);
         w *= 2;
     }
 

@@ -73,7 +73,7 @@ fn main() {
         let mut scratch = subs.clone();
         let s = bench(&cfg, || {
             scratch.copy_from_slice(&subs);
-            cpu.run_batch(&mut scratch, &signs).unwrap().partial
+            cpu.run_batch(&mut scratch, &signs).unwrap()
         });
         t1.row(&[
             m.to_string(),

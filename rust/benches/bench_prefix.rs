@@ -1,0 +1,105 @@
+//! Bench: prefix-factored engine vs cpu-lu across the (m, n) plane —
+//! the amortization claim in numbers (terms/sec, same worker count).
+//!
+//! Emits both the usual markdown table and machine-readable JSON
+//! records (via `bench::stats`) to seed the `BENCH_prefix.json` perf
+//! trajectory: set `RADDET_BENCH_JSON=path` to write the file, else
+//! the JSON lines print to stdout after the table.
+//!
+//! Expectation (EXPERIMENTS.md §Perf iteration 6): speedup grows with
+//! m (the LU being amortized is O(m³)) and with n (wider sibling
+//! blocks); ≥ 5× for m ≥ 5, n ≥ 20 on a fixed worker count.
+
+use raddet::bench::stats::{json_f64, json_object};
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::combin::combination_count;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::matrix::gen;
+use raddet::testkit::TestRng;
+
+const WORKERS: usize = 4;
+/// Keep the sweep under ~a minute: skip shapes beyond this many terms.
+const TERM_BUDGET: u128 = 4_000_000;
+
+fn coord(engine: EngineKind) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        workers: WORKERS,
+        engine,
+        schedule: Schedule::Static,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn main() {
+    let cfg = BenchConfig::slow();
+    let cpu = coord(EngineKind::Cpu);
+    let prefix = coord(EngineKind::Prefix);
+
+    println!("## prefix engine vs cpu-lu ({WORKERS} workers, static schedule)\n");
+    let mut table = Table::new(&[
+        "m", "n", "terms", "cpu-lu", "prefix", "cpu Mterms/s", "prefix Mterms/s", "speedup",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for m in 3usize..=8 {
+        for n in [12usize, 16, 20, 24, 28] {
+            if n < m {
+                continue;
+            }
+            let terms = combination_count(n as u64, m as u64).unwrap();
+            if terms > TERM_BUDGET {
+                eprintln!("(skip m={m} n={n}: {terms} terms over budget)");
+                continue;
+            }
+            let a = gen::uniform(&mut TestRng::from_seed((m * 100 + n) as u64), m, n, -1.0, 1.0);
+
+            // Sanity first: both engines must agree before we time them.
+            let d_cpu = cpu.radic_det(&a).unwrap().det;
+            let d_pre = prefix.radic_det(&a).unwrap().det;
+            assert!(
+                (d_cpu - d_pre).abs() < 1e-9 * d_cpu.abs().max(1.0),
+                "m={m} n={n}: engines disagree ({d_cpu} vs {d_pre})"
+            );
+
+            let s_cpu = bench(&cfg, || cpu.radic_det(&a).unwrap().det);
+            let s_pre = bench(&cfg, || prefix.radic_det(&a).unwrap().det);
+            let tput_cpu = terms as f64 / s_cpu.median;
+            let tput_pre = terms as f64 / s_pre.median;
+            let speedup = s_cpu.median / s_pre.median;
+            table.row(&[
+                m.to_string(),
+                n.to_string(),
+                terms.to_string(),
+                fmt_time(s_cpu.median),
+                fmt_time(s_pre.median),
+                format!("{:.2}", tput_cpu / 1e6),
+                format!("{:.2}", tput_pre / 1e6),
+                format!("{speedup:.2}×"),
+            ]);
+            json_rows.push(json_object(&[
+                ("bench", "\"prefix_vs_cpu\"".into()),
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("workers", WORKERS.to_string()),
+                ("terms", terms.to_string()),
+                ("cpu", s_cpu.to_json()),
+                ("prefix", s_pre.to_json()),
+                ("speedup", json_f64(speedup)),
+            ]));
+        }
+    }
+    print!("{}", table.render());
+
+    let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::env::var("RADDET_BENCH_JSON") {
+        Ok(path) if !path.is_empty() => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("\n(JSON written to {path})");
+        }
+        _ => {
+            println!("\n## JSON (set RADDET_BENCH_JSON=path to write a file)\n");
+            print!("{json}");
+        }
+    }
+}

@@ -1,4 +1,6 @@
-//! Robust sample statistics for the bench harness.
+//! Robust sample statistics for the bench harness, plus a tiny JSON
+//! emitter (serde is unavailable offline) so bench binaries can write
+//! machine-readable `BENCH_*.json` trajectories.
 
 /// Summary statistics over timing samples (seconds).
 #[derive(Clone, Copy, Debug, Default)]
@@ -45,6 +47,40 @@ impl Stats {
             mad: percentile_sorted(&devs, 50.0),
         }
     }
+
+    /// Serialize as a JSON object (seconds; non-finite values → null).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"n\":{},\"median\":{},\"mean\":{},\"p10\":{},\"p90\":{},\"min\":{},\"max\":{},\"mad\":{}}}",
+            self.n,
+            json_f64(self.median),
+            json_f64(self.mean),
+            json_f64(self.p10),
+            json_f64(self.p90),
+            json_f64(self.min),
+            json_f64(self.max),
+            json_f64(self.mad),
+        )
+    }
+}
+
+/// A finite f64 as a JSON number, else `null`.
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Assemble `fields` (already-serialized `"key":value` pairs) into one
+/// JSON object — enough structure for bench records without serde.
+pub fn json_object(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("\"{k}\":{v}"))
+        .collect();
+    format!("{{{}}}", body.join(","))
 }
 
 /// Linear-interpolated percentile of a sorted slice.
@@ -93,6 +129,18 @@ mod tests {
     fn empty_is_default() {
         let s = Stats::from_samples(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn json_roundtrips_shape() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]).to_json();
+        assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
+        assert!(s.contains("\"n\":3") && s.contains("\"median\":2"), "{s}");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(
+            json_object(&[("a", "1".into()), ("b", "\"x\"".into())]),
+            "{\"a\":1,\"b\":\"x\"}"
+        );
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! The `raddet` command-line interface.
 //!
 //! ```text
-//! raddet det       --rows M --cols N [--seed S | --csv F] [--engine auto|cpu|xla]
+//! raddet det       --rows M --cols N [--seed S | --csv F]
+//!                  [--engine auto|cpu|xla|prefix]
 //!                  [--workers K] [--batch B] [--schedule static|steal] [--exact]
 //! raddet unrank    --n N --m M --q Q [--trace]
 //! raddet rank      --n N --cols 2,5,6,7,8
@@ -84,6 +85,7 @@ fn build_coordinator(a: &Args) -> Result<Coordinator> {
         "auto" => EngineKind::Auto,
         "cpu" => EngineKind::Cpu,
         "xla" => EngineKind::Xla,
+        "prefix" => EngineKind::Prefix,
         other => return Err(Error::Config(format!("bad --engine {other:?}"))),
     };
     let schedule = match a.get("schedule").unwrap_or("static") {
@@ -128,8 +130,9 @@ fn cmd_det(a: &Args) -> Result<()> {
     };
     if a.has_flag("exact") {
         let ai = mat.map(|x| x.round() as i64);
-        let det = coord.radic_det_exact(&ai)?;
+        let (det, metrics) = coord.radic_det_exact_with_metrics(&ai)?;
         println!("radic_det_exact = {det}");
+        println!("  {}", metrics.render());
         return Ok(());
     }
     let out = coord.radic_det(&mat)?;

@@ -17,12 +17,17 @@
 //!   sequence” pseudo-code).
 //! * [`stream`] — chunk walker: one unrank, then successors (how each
 //!   processor traverses its granularity chunk).
+//! * [`prefix`] — sibling-block walker: the same chunk as
+//!   `(shared m−1 prefix, last-column range)` blocks, plus the
+//!   boundary-alignment helpers the prefix-factored engine's scheduler
+//!   uses.
 //! * [`partition`] — §5 granularity partitioning of `[0, C(n,m))` into
 //!   `k` contiguous chunks.
 
 pub mod binomial;
 pub mod partition;
 pub mod pascal;
+pub mod prefix;
 pub mod rank;
 pub mod stream;
 pub mod successor;
@@ -31,6 +36,10 @@ pub mod unrank;
 pub use binomial::{binom, binom_checked, PascalWeights};
 pub use partition::{partition_ranks, partition_total, Chunk};
 pub use pascal::PascalTable;
+pub use prefix::{
+    align_chunks_to_blocks, block_aligned_grain, block_start, max_block_len, PrefixBlock,
+    PrefixBlockStream,
+};
 pub use rank::rank;
 pub use stream::CombinationStream;
 pub use successor::{first_member, last_member, successor};

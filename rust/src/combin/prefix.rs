@@ -1,0 +1,305 @@
+//! Sibling-block walker — the prefix-factored engine's enumeration.
+//!
+//! Dictionary order (Def. 2) emits all combinations that share their
+//! first `m−1` places *contiguously*: for a fixed prefix
+//! `[j₁,…,j_{m−1}]` the last place sweeps `j_{m−1}+1 ..= n` before the
+//! prefix advances. [`PrefixBlockStream`] walks a rank chunk as those
+//! `(shared prefix, last-column range)` blocks, which is what lets the
+//! engine factorize the `m×(m−1)` prefix once and reduce every sibling
+//! determinant to an O(m) Laplace dot product along the last column.
+//!
+//! Chunk boundaries falling *inside* a block are handled correctly (the
+//! stream emits a truncated block), but every split block costs one
+//! extra factorization, so [`align_chunks_to_blocks`] /
+//! [`block_aligned_grain`] let the scheduler snap boundaries to block
+//! starts up front.
+
+use super::pascal::PascalTable;
+use super::successor::successor;
+use super::unrank::unrank_into;
+use crate::Result;
+
+/// One sibling block: all combinations `(prefix…, j)` for
+/// `last_lo ≤ j ≤ last_hi`, contiguous in dictionary order.
+#[derive(Debug, PartialEq, Eq)]
+pub struct PrefixBlock<'a> {
+    /// The shared first `m−1` columns (1-based ascending; empty iff m=1).
+    pub prefix: &'a [u32],
+    /// First last-column value in the block (inclusive).
+    pub last_lo: u32,
+    /// Final last-column value in the block (inclusive).
+    pub last_hi: u32,
+    /// Dictionary rank of `(prefix…, last_lo)`.
+    pub start_rank: u128,
+}
+
+impl PrefixBlock<'_> {
+    /// Number of sibling combinations in the block.
+    #[inline]
+    pub fn len(&self) -> u64 {
+        (self.last_hi - self.last_lo + 1) as u64
+    }
+
+    /// Blocks are never empty; provided for clippy/API symmetry.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// Streaming enumerator of the sibling blocks covering a contiguous rank
+/// range `[start, start+len)`. Lending-style like
+/// [`super::CombinationStream`]: one unranking up front, then amortized
+/// O(1) successor steps per block.
+#[derive(Clone, Debug)]
+pub struct PrefixBlockStream {
+    n: u64,
+    /// Current combination; after a block is emitted, its last place
+    /// holds that block's `last_hi` so the next successor step lands on
+    /// the following block's first member.
+    cols: Vec<u32>,
+    remaining: u128,
+    rank: u128,
+    fresh: bool,
+}
+
+impl PrefixBlockStream {
+    /// Open a block stream over `[start, start+len)` for `(n, m)`.
+    pub fn new(table: &PascalTable, start: u128, len: u128) -> Result<Self> {
+        let m = table.m();
+        let mut cols = vec![0u32; m as usize];
+        if len > 0 {
+            unrank_into(table, start, &mut cols)?;
+        }
+        Ok(Self { n: table.n(), cols, remaining: len, rank: start, fresh: true })
+    }
+
+    /// Next sibling block, or `None` when the chunk is exhausted.
+    ///
+    /// The first and last blocks may be truncated if the chunk
+    /// boundaries fall mid-block; interior blocks are always full.
+    pub fn next_block(&mut self) -> Option<PrefixBlock<'_>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if self.fresh {
+            self.fresh = false;
+        } else {
+            let advanced = successor(&mut self.cols, self.n);
+            debug_assert!(advanced, "chunk length exceeded the enumeration");
+        }
+        let m = self.cols.len();
+        let lo = self.cols[m - 1];
+        // The last place's dictionary maximum is n; the block runs there
+        // unless the chunk ends first.
+        let full_width = (self.n as u32 - lo + 1) as u128;
+        let take = full_width.min(self.remaining);
+        let hi = lo + (take - 1) as u32;
+        self.cols[m - 1] = hi;
+        let start_rank = self.rank;
+        self.rank += take;
+        self.remaining -= take;
+        Some(PrefixBlock {
+            prefix: &self.cols[..m - 1],
+            last_lo: lo,
+            last_hi: hi,
+            start_rank,
+        })
+    }
+
+    /// Combinations (not blocks) not yet covered.
+    pub fn remaining(&self) -> u128 {
+        self.remaining
+    }
+}
+
+/// Rank of the first member of the sibling block containing rank `q`.
+///
+/// `O(m(n−m))` (one unranking) — used by the scheduler to align chunk
+/// boundaries, not on the per-term hot path.
+pub fn block_start(table: &PascalTable, q: u128) -> Result<u128> {
+    let m = table.m() as usize;
+    if m == 1 {
+        // Empty prefix: the whole enumeration is one block.
+        return Ok(0);
+    }
+    let mut cols = vec![0u32; m];
+    unrank_into(table, q, &mut cols)?;
+    let prev = cols[m - 2];
+    let last = cols[m - 1];
+    // (prefix…, prev+1) is the block's first member, (last − prev − 1)
+    // ranks before q.
+    Ok(q - (last - prev - 1) as u128)
+}
+
+/// Widest possible sibling block: a prefix ending at column `j` spawns
+/// `n − j` siblings, maximized at the first prefix (`j = m−1`).
+#[inline]
+pub fn max_block_len(n: u64, m: u64) -> u64 {
+    debug_assert!(m >= 1 && m <= n);
+    n - m + 1
+}
+
+/// Round a work-stealing grain up to a multiple of [`max_block_len`], so
+/// a claimed chunk spans whole blocks in expectation (truncated blocks
+/// at claim edges remain possible — the stream handles them — but the
+/// amortization loss stays O(1) per claim instead of per block).
+pub fn block_aligned_grain(grain: u64, n: u64, m: u64) -> u64 {
+    let w = max_block_len(n, m).max(1);
+    grain.max(1).div_ceil(w) * w
+}
+
+/// Snap each interior chunk boundary down to the start of its sibling
+/// block. The cover stays exact and in rank order; chunks may shrink to
+/// empty (their worker idles), never overlap.
+pub fn align_chunks_to_blocks(
+    table: &PascalTable,
+    chunks: &[super::partition::Chunk],
+) -> Result<Vec<super::partition::Chunk>> {
+    use super::partition::Chunk;
+    if chunks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let total: u128 = chunks.iter().map(|c| c.len).sum();
+    // Aligned boundary list: fixed 0 at the front, `total` at the back.
+    let mut bounds = Vec::with_capacity(chunks.len() + 1);
+    bounds.push(0u128);
+    for c in &chunks[1..] {
+        let b = if c.start >= total { total } else { block_start(table, c.start)? };
+        // block_start is monotone, but clamp defensively so a bad table
+        // can't produce overlapping chunks.
+        bounds.push(b.max(*bounds.last().expect("non-empty")));
+    }
+    bounds.push(total);
+    Ok(bounds
+        .windows(2)
+        .map(|w| Chunk { start: w[0], len: w[1] - w[0] })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::{combination_count, partition_total, unrank, CombinationStream};
+
+    /// Expand a block stream back to plain combinations.
+    fn expand(table: &PascalTable, start: u128, len: u128) -> Vec<Vec<u32>> {
+        let mut stream = PrefixBlockStream::new(table, start, len).unwrap();
+        let mut out = Vec::new();
+        while let Some(b) = stream.next_block() {
+            for j in b.last_lo..=b.last_hi {
+                let mut c = b.prefix.to_vec();
+                c.push(j);
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocks_expand_to_dictionary_order() {
+        for (n, m) in [(8u64, 5u64), (9, 4), (7, 1), (6, 6), (10, 2)] {
+            let total = combination_count(n, m).unwrap();
+            let table = PascalTable::new(n, m).unwrap();
+            let got = expand(&table, 0, total);
+            assert_eq!(got.len() as u128, total, "n={n} m={m}");
+            for (q, c) in got.iter().enumerate() {
+                assert_eq!(*c, unrank(n, m, q as u128).unwrap(), "n={n} m={m} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn mid_chunk_blocks_match_combination_stream() {
+        let table = PascalTable::new(9, 4).unwrap();
+        // Start mid-block (rank 41 is not a block start) and end mid-block.
+        let got = expand(&table, 41, 23);
+        let want: Vec<Vec<u32>> =
+            CombinationStream::new(&table, 41, 23).unwrap().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn block_ranks_and_lengths_are_consistent() {
+        let table = PascalTable::new(8, 3).unwrap();
+        let total = combination_count(8, 3).unwrap();
+        let mut stream = PrefixBlockStream::new(&table, 0, total).unwrap();
+        let mut cursor = 0u128;
+        while let Some(b) = stream.next_block() {
+            assert_eq!(b.start_rank, cursor);
+            assert!(b.last_lo > *b.prefix.last().unwrap());
+            assert_eq!(b.last_hi, 8, "full blocks of a whole run end at n");
+            cursor += b.len() as u128;
+        }
+        assert_eq!(cursor, total);
+    }
+
+    #[test]
+    fn m_equals_one_is_a_single_block() {
+        let table = PascalTable::new(7, 1).unwrap();
+        let mut stream = PrefixBlockStream::new(&table, 0, 7).unwrap();
+        let b = stream.next_block().unwrap();
+        assert_eq!(b.prefix, &[] as &[u32]);
+        assert_eq!((b.last_lo, b.last_hi), (1, 7));
+        assert!(stream.next_block().is_none());
+    }
+
+    #[test]
+    fn empty_chunk_yields_nothing() {
+        let table = PascalTable::new(8, 5).unwrap();
+        let mut stream = PrefixBlockStream::new(&table, 10, 0).unwrap();
+        assert!(stream.next_block().is_none());
+    }
+
+    #[test]
+    fn block_start_floors_every_rank() {
+        let (n, m) = (9u64, 4u64);
+        let table = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap();
+        let mut expected_start = 0u128;
+        let mut prev_prefix: Option<Vec<u32>> = None;
+        for q in 0..total {
+            let c = unrank(n, m, q).unwrap();
+            let p = c[..c.len() - 1].to_vec();
+            if prev_prefix.as_ref() != Some(&p) {
+                expected_start = q;
+                prev_prefix = Some(p);
+            }
+            assert_eq!(block_start(&table, q).unwrap(), expected_start, "q={q}");
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_cover_exactly_and_start_on_blocks() {
+        let (n, m) = (10u64, 4u64);
+        let table = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap();
+        for k in [1usize, 2, 3, 7, 50] {
+            let aligned =
+                align_chunks_to_blocks(&table, &partition_total(total, k)).unwrap();
+            assert_eq!(aligned.len(), k);
+            let mut cursor = 0u128;
+            for c in &aligned {
+                assert_eq!(c.start, cursor, "k={k}: gap/overlap at {cursor}");
+                cursor = c.end();
+                if c.len > 0 && c.start < total {
+                    assert_eq!(
+                        block_start(&table, c.start).unwrap(),
+                        c.start,
+                        "k={k}: chunk start {} is mid-block",
+                        c.start
+                    );
+                }
+            }
+            assert_eq!(cursor, total, "k={k}");
+        }
+    }
+
+    #[test]
+    fn grain_rounds_up_to_block_multiples() {
+        assert_eq!(block_aligned_grain(1, 20, 5), 16); // w = 16
+        assert_eq!(block_aligned_grain(16, 20, 5), 16);
+        assert_eq!(block_aligned_grain(17, 20, 5), 32);
+        assert_eq!(block_aligned_grain(1000, 12, 12), 1000); // w = 1
+    }
+}

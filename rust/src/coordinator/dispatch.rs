@@ -84,6 +84,7 @@ impl XlaDispatcher {
             tx: self.tx.as_ref().expect("live dispatcher").clone(),
             m: self.m,
             batch: self.batch,
+            dets: Vec::new(),
         }
     }
 }
@@ -102,6 +103,8 @@ pub struct XlaEngineHandle {
     tx: mpsc::Sender<Job>,
     m: usize,
     batch: usize,
+    /// Most recent per-lane dets (moved from the executor's reply).
+    dets: Vec<f64>,
 }
 
 impl DetEngine for XlaEngineHandle {
@@ -113,7 +116,7 @@ impl DetEngine for XlaEngineHandle {
         self.batch
     }
 
-    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult> {
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<f64> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
             .send(Job {
@@ -122,9 +125,15 @@ impl DetEngine for XlaEngineHandle {
                 reply: reply_tx,
             })
             .map_err(|_| Error::Xla("dispatcher is gone".into()))?;
-        reply_rx
+        let out: BatchResult = reply_rx
             .recv()
-            .map_err(|_| Error::Xla("executor dropped the batch".into()))?
+            .map_err(|_| Error::Xla("executor dropped the batch".into()))??;
+        self.dets = out.dets; // move, not copy — the executor's vec is ours now
+        Ok(out.partial)
+    }
+
+    fn dets(&self) -> &[f64] {
+        &self.dets
     }
 
     fn label(&self) -> &'static str {

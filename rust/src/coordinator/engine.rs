@@ -1,29 +1,45 @@
 //! Determinant engines — the pluggable inner loop of the coordinator.
 //!
-//! [`CpuEngine`] evaluates batches with the in-crate LU (same pivoting
-//! policy as the Pallas kernel, so Cpu and Xla agree to rounding).
-//! [`super::dispatch::XlaEngineHandle`] is the XLA-backed implementation;
-//! both implement [`DetEngine`], which is what workers program against.
+//! [`CpuEngine`] evaluates padded batches with the in-crate LU (same
+//! pivoting policy as the Pallas kernel, so Cpu and Xla agree to
+//! rounding); [`super::dispatch::XlaEngineHandle`] is the XLA-backed
+//! implementation. Both implement [`DetEngine`], which is what batch
+//! workers program against.
+//!
+//! [`PrefixEngine`] is the third evaluator and deliberately does *not*
+//! implement [`DetEngine`]: it consumes sibling *blocks* (shared m−1
+//! column prefix + last-column range, see [`crate::combin::prefix`])
+//! instead of padded lanes, factorizing each prefix once
+//! ([`MinorsWorkspace`]) and reducing every sibling determinant to an
+//! O(m) dot product — O(m³/w + m) per term for width-w blocks versus
+//! the per-term O(m³) of the LU lane engines.
 
-use crate::linalg::{det_lu_inplace, NeumaierSum};
-use crate::runtime::BatchResult;
+use crate::combin::radic_sign;
+use crate::linalg::{det_lu_inplace, MinorsWorkspace, NeumaierSum};
+use crate::matrix::MatF64;
 use crate::Result;
 
 /// A batched signed-determinant evaluator.
 ///
 /// `run_batch` receives *padded* buffers (`subs`: `(batch, m, m)`
 /// row-major; `signs`: `(batch,)` with zeros on padding lanes) and
-/// returns the signed partial sum plus per-lane dets. `subs` is mutable
-/// and **consumed**: in-place engines (LU) eliminate directly in the
-/// batch buffer instead of copying each lane to scratch
-/// (EXPERIMENTS.md §Perf iteration 3).
+/// returns the signed partial sum. `subs` is mutable and **consumed**:
+/// in-place engines (LU) eliminate directly in the batch buffer instead
+/// of copying each lane to scratch (EXPERIMENTS.md §Perf iteration 3).
+/// Per-lane determinants land in a per-engine buffer exposed by
+/// [`Self::dets`] — valid until the next `run_batch` — so the hot path
+/// allocates nothing per batch (EXPERIMENTS.md §Perf iteration 5).
 pub trait DetEngine {
     /// Submatrix order the engine is specialized for.
     fn m(&self) -> usize;
     /// Batch size the engine expects.
     fn batch(&self) -> usize;
-    /// Evaluate one (padded) batch, destroying `subs`.
-    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult>;
+    /// Evaluate one (padded) batch, destroying `subs`; returns the
+    /// signed partial sum `Σ signs[b]·det(subs[b])`.
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<f64>;
+    /// Per-lane determinants of the most recent batch (length =
+    /// [`Self::batch`]; empty before the first batch).
+    fn dets(&self) -> &[f64];
     /// Engine label for metrics/CLI output.
     fn label(&self) -> &'static str;
 }
@@ -32,12 +48,14 @@ pub trait DetEngine {
 pub struct CpuEngine {
     m: usize,
     batch: usize,
+    /// Reused per-lane determinant buffer (see [`DetEngine::dets`]).
+    dets: Vec<f64>,
 }
 
 impl CpuEngine {
     /// New engine for `(m, batch)`.
     pub fn new(m: usize, batch: usize) -> Self {
-        Self { m, batch }
+        Self { m, batch, dets: Vec::with_capacity(batch) }
     }
 }
 
@@ -50,25 +68,168 @@ impl DetEngine for CpuEngine {
         self.batch
     }
 
-    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<BatchResult> {
+    fn run_batch(&mut self, subs: &mut [f64], signs: &[f64]) -> Result<f64> {
         let (m, mm) = (self.m, self.m * self.m);
         debug_assert_eq!(subs.len(), self.batch * mm);
         debug_assert_eq!(signs.len(), self.batch);
-        let mut dets = Vec::with_capacity(self.batch);
+        self.dets.clear();
         let mut acc = NeumaierSum::new();
         for (lane, chunk) in subs.chunks_exact_mut(mm).enumerate() {
             let det = det_lu_inplace(chunk, m);
-            dets.push(det);
+            self.dets.push(det);
             let s = signs[lane];
             if s != 0.0 {
                 acc.add(s * det);
             }
         }
-        Ok(BatchResult { partial: acc.value(), dets })
+        Ok(acc.value())
+    }
+
+    fn dets(&self) -> &[f64] {
+        &self.dets
     }
 
     fn label(&self) -> &'static str {
         "cpu-lu"
+    }
+}
+
+/// Outcome of one sibling block evaluated by [`PrefixEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct BlockOutcome {
+    /// Signed partial sum over the block's siblings.
+    pub partial: f64,
+    /// Sibling combinations evaluated.
+    pub terms: u64,
+    /// True when the prefix was rank-deficient and the block was
+    /// re-evaluated with per-sibling pivoted LU.
+    pub fell_back: bool,
+}
+
+/// Prefix-factored Laplace engine.
+///
+/// Per block: gather the shared m×(m−1) prefix once, compute its m
+/// Laplace cofactors in one pivoted elimination
+/// ([`MinorsWorkspace::cofactors`]), then each sibling determinant is
+/// `Σᵢ cᵢ·A[i, j]` — O(m) instead of the O(m³) gather+LU of the lane
+/// engines. Rank-deficient prefixes fall back to the exact same
+/// per-sibling LU the [`CpuEngine`] runs (metered, never silent).
+///
+/// All scratch is owned by the engine and reused across blocks — the
+/// steady-state hot path performs zero allocations.
+pub struct PrefixEngine {
+    m: usize,
+    ws: MinorsWorkspace,
+    /// Gathered m×(m−1) prefix.
+    prefix_buf: Vec<f64>,
+    /// Laplace cofactors of the current prefix.
+    cof: Vec<f64>,
+    /// Column selection scratch for the fallback gather.
+    cols_buf: Vec<u32>,
+    /// m×m scratch for the fallback LU.
+    lu_buf: Vec<f64>,
+}
+
+impl PrefixEngine {
+    /// New engine for m-row jobs.
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self {
+            m,
+            ws: MinorsWorkspace::new(m),
+            prefix_buf: vec![0.0; m * (m - 1)],
+            cof: vec![0.0; m],
+            cols_buf: vec![0; m],
+            lu_buf: vec![0.0; m * m],
+        }
+    }
+
+    /// Submatrix order.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Engine label for metrics/CLI output.
+    pub fn label(&self) -> &'static str {
+        "prefix"
+    }
+
+    /// Evaluate one sibling block: columns `(prefix…, j)` for
+    /// `last_lo ≤ j ≤ last_hi` against matrix `a` (`a.rows() == m`,
+    /// 1-based column indices, `prefix.len() == m−1`).
+    pub fn run_block(
+        &mut self,
+        a: &MatF64,
+        prefix: &[u32],
+        last_lo: u32,
+        last_hi: u32,
+    ) -> BlockOutcome {
+        let m = self.m;
+        debug_assert_eq!(a.rows(), m);
+        debug_assert_eq!(prefix.len(), m - 1);
+        debug_assert!(last_lo <= last_hi && (last_hi as usize) <= a.cols());
+        let terms = (last_hi - last_lo + 1) as u64;
+
+        a.gather_cols_into(prefix, &mut self.prefix_buf);
+        if !self.ws.cofactors(&self.prefix_buf, &mut self.cof) {
+            return BlockOutcome {
+                partial: self.run_block_fallback(a, prefix, last_lo, last_hi),
+                terms,
+                fell_back: true,
+            };
+        }
+
+        // Radić sign (−1)^(r+s) with s = Σ prefix + j: alternates as j
+        // sweeps the block.
+        let mut sign = block_sign(prefix, last_lo);
+        let data = a.data();
+        let n = a.cols();
+        let mut acc = NeumaierSum::new();
+        for j in last_lo..=last_hi {
+            let col = (j - 1) as usize;
+            let mut det = 0.0;
+            for (i, c) in self.cof.iter().enumerate() {
+                det += c * data[i * n + col];
+            }
+            acc.add(sign * det);
+            sign = -sign;
+        }
+        BlockOutcome { partial: acc.value(), terms, fell_back: false }
+    }
+
+    /// Rank-deficient-prefix fallback: per-sibling gather + pivoted LU,
+    /// identical arithmetic to [`CpuEngine`] so a degenerate prefix can
+    /// never change the answer, only the speed.
+    fn run_block_fallback(
+        &mut self,
+        a: &MatF64,
+        prefix: &[u32],
+        last_lo: u32,
+        last_hi: u32,
+    ) -> f64 {
+        let m = self.m;
+        self.cols_buf[..m - 1].copy_from_slice(prefix);
+        let mut acc = NeumaierSum::new();
+        for j in last_lo..=last_hi {
+            self.cols_buf[m - 1] = j;
+            a.gather_cols_into(&self.cols_buf, &mut self.lu_buf);
+            let det = det_lu_inplace(&mut self.lu_buf, m);
+            acc.add(radic_sign(&self.cols_buf) * det);
+        }
+        acc.value()
+    }
+}
+
+/// Radić sign of `(prefix…, last)` without materializing the combination.
+#[inline]
+fn block_sign(prefix: &[u32], last: u32) -> f64 {
+    let m = prefix.len() as u64 + 1;
+    let r = m * (m + 1) / 2;
+    let s: u64 = prefix.iter().map(|&c| c as u64).sum::<u64>() + last as u64;
+    if (r + s) % 2 == 0 {
+        1.0
+    } else {
+        -1.0
     }
 }
 
@@ -89,11 +250,11 @@ mod tests {
         let (subs, signs, _) = b.finalize();
         let signs = signs.to_vec();
         let mut eng = CpuEngine::new(2, 4);
-        let out = eng.run_batch(subs, &signs).unwrap();
+        let partial = eng.run_batch(subs, &signs).unwrap();
         // +D12 − D13 + D23 = −3 + 6 − 3 = 0.
-        assert!(out.partial.abs() < 1e-12, "partial {}", out.partial);
-        assert_eq!(out.dets.len(), 4);
-        assert_eq!(out.dets[3], 1.0, "identity padding lane");
+        assert!(partial.abs() < 1e-12, "partial {partial}");
+        assert_eq!(eng.dets().len(), 4);
+        assert_eq!(eng.dets()[3], 1.0, "identity padding lane");
     }
 
     #[test]
@@ -107,7 +268,86 @@ mod tests {
         let (s1, g1, _) = partial.finalize();
         let g1 = g1.to_vec();
         let r1 = eng.run_batch(s1, &g1).unwrap();
-        let manual: f64 = r1.dets.iter().zip(&g1).map(|(d, s)| d * s).sum();
-        assert!((r1.partial - manual).abs() < 1e-12);
+        let manual: f64 = eng.dets().iter().zip(&g1).map(|(d, s)| d * s).sum();
+        assert!((r1 - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_engine_det_buffer_is_reused() {
+        let a = gen::uniform(&mut TestRng::from_seed(5), 2, 6, -1.0, 1.0);
+        let mut eng = CpuEngine::new(2, 4);
+        let mut builder = BatchBuilder::new(2, 4);
+        let mut first_ptr = None;
+        for round in 0..3 {
+            builder.clear();
+            builder.push(&a, &[1, (2 + round) as u32]);
+            let (subs, signs, _) = builder.finalize();
+            let signs = signs.to_vec();
+            eng.run_batch(subs, &signs).unwrap();
+            let ptr = eng.dets().as_ptr();
+            if let Some(p) = first_ptr {
+                assert_eq!(p, ptr, "dets buffer must not reallocate per batch");
+            }
+            first_ptr = Some(ptr);
+        }
+    }
+
+    #[test]
+    fn prefix_engine_matches_cpu_on_a_block() {
+        let a = gen::uniform(&mut TestRng::from_seed(7), 3, 9, -2.0, 2.0);
+        let mut eng = PrefixEngine::new(3);
+        let out = eng.run_block(&a, &[2, 4], 5, 9);
+        assert_eq!(out.terms, 5);
+        assert!(!out.fell_back);
+        // Reference: per-sibling LU.
+        let mut want = 0.0;
+        let mut scratch = vec![0.0; 9];
+        for j in 5..=9u32 {
+            let cols = [2, 4, j];
+            a.gather_cols_into(&cols, &mut scratch);
+            want += radic_sign(&cols) * det_lu_inplace(&mut scratch, 3);
+        }
+        assert!(
+            (out.partial - want).abs() < 1e-12 * want.abs().max(1.0),
+            "{} vs {want}",
+            out.partial
+        );
+    }
+
+    #[test]
+    fn prefix_engine_m1_blocks() {
+        // m=1: empty prefix, det of [a₁ⱼ] is the entry itself.
+        let a = Mat::from_rows(&[vec![3.0, 5.0, 7.0, 11.0]]);
+        let mut eng = PrefixEngine::new(1);
+        let out = eng.run_block(&a, &[], 1, 4);
+        assert_eq!(out.terms, 4);
+        assert!((out.partial - (3.0 - 5.0 + 7.0 - 11.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_engine_falls_back_on_rank_deficient_prefix() {
+        // Columns 1 and 2 identical ⇒ any prefix containing both is
+        // singular; every sibling det is 0 and the fallback must say so.
+        let mut a = gen::uniform(&mut TestRng::from_seed(9), 3, 7, -1.0, 1.0);
+        for r in 0..3 {
+            *a.at_mut(r, 1) = a.at(r, 0);
+        }
+        let mut eng = PrefixEngine::new(3);
+        let out = eng.run_block(&a, &[1, 2], 3, 7);
+        assert!(out.fell_back, "duplicate-column prefix must fall back");
+        assert!(out.partial.abs() < 1e-12, "all siblings are singular");
+        // A full-rank prefix on the same matrix still takes the fast path.
+        let ok = eng.run_block(&a, &[1, 3], 4, 7);
+        assert!(!ok.fell_back);
+    }
+
+    #[test]
+    fn block_sign_matches_radic_sign() {
+        for (prefix, last) in [(vec![1u32, 2], 3u32), (vec![2, 5], 6), (vec![1, 4], 7)] {
+            let mut cols = prefix.clone();
+            cols.push(last);
+            assert_eq!(block_sign(&prefix, last), radic_sign(&cols), "{cols:?}");
+        }
+        assert_eq!(block_sign(&[], 2), radic_sign(&[2]));
     }
 }

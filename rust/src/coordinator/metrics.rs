@@ -12,6 +12,11 @@ pub struct WorkerMetrics {
     pub batches: u64,
     /// Chunks claimed from the scheduler.
     pub chunks: u64,
+    /// Sibling blocks processed (prefix engine; 0 on lane engines).
+    pub blocks: u64,
+    /// Blocks whose rank-deficient prefix forced the per-sibling LU
+    /// fallback (prefix engine only).
+    pub fallback_blocks: u64,
     /// Time enumerating + gathering (the paper's parallel part).
     pub gather_time: Duration,
     /// Time inside the engine (ref \[7\]'s inner determinant).
@@ -24,6 +29,8 @@ impl WorkerMetrics {
         self.terms += other.terms;
         self.batches += other.batches;
         self.chunks += other.chunks;
+        self.blocks += other.blocks;
+        self.fallback_blocks += other.fallback_blocks;
         self.gather_time += other.gather_time;
         self.engine_time += other.engine_time;
     }
@@ -73,11 +80,17 @@ impl JobMetrics {
         }
     }
 
-    /// Human-readable one-job report.
+    /// Human-readable one-job report. Block counters (prefix engine)
+    /// appear only when blocks were actually processed.
     pub fn render(&self) -> String {
         let t = self.total();
+        let blocks = if t.blocks > 0 {
+            format!(" blocks={} fallbacks={}", t.blocks, t.fallback_blocks)
+        } else {
+            String::new()
+        };
         format!(
-            "terms={} batches={} chunks={} workers={} elapsed={:?} throughput={:.0}/s balance={:.2}",
+            "terms={} batches={} chunks={}{blocks} workers={} elapsed={:?} throughput={:.0}/s balance={:.2}",
             t.terms,
             t.batches,
             t.chunks,
@@ -111,6 +124,23 @@ mod tests {
         let idle = WorkerMetrics::default();
         let jm = JobMetrics { workers: vec![a, idle], elapsed: Duration::ZERO };
         assert_eq!(jm.balance(), 1.0);
+    }
+
+    #[test]
+    fn block_counters_merge_and_render() {
+        let a = WorkerMetrics { terms: 20, blocks: 4, fallback_blocks: 1, ..Default::default() };
+        let b = WorkerMetrics { terms: 10, blocks: 2, ..Default::default() };
+        let jm = JobMetrics { workers: vec![a, b], elapsed: Duration::from_millis(5) };
+        let t = jm.total();
+        assert_eq!((t.blocks, t.fallback_blocks), (6, 1));
+        let s = jm.render();
+        assert!(s.contains("blocks=6") && s.contains("fallbacks=1"), "{s}");
+        // Lane engines (blocks=0) keep the old compact format.
+        let lane = JobMetrics {
+            workers: vec![WorkerMetrics { terms: 3, ..Default::default() }],
+            elapsed: Duration::ZERO,
+        };
+        assert!(!lane.render().contains("blocks="));
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! or the AOT-compiled JAX/Pallas graph via PJRT ([`dispatch`]).
 //! Worker partial sums are Neumaier-compensated and merged
 //! deterministically in worker order.
+//!
+//! [`EngineKind::Prefix`] swaps the per-term O(m³) gather+LU loop for
+//! the prefix-factored path: block-aligned chunks
+//! ([`JobSchedule::new_block_aligned`]), sibling blocks
+//! ([`crate::combin::PrefixBlockStream`]), one m×(m−1) factorization
+//! per block ([`crate::linalg::MinorsWorkspace`]) and an O(m) Laplace
+//! dot per term — amortized O(m³/w + m) per term for width-w blocks.
 
 pub mod batcher;
 pub mod dispatch;
@@ -16,12 +23,12 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use batcher::BatchBuilder;
-pub use engine::{CpuEngine, DetEngine};
+pub use engine::{BlockOutcome, CpuEngine, DetEngine, PrefixEngine};
 pub use metrics::{JobMetrics, WorkerMetrics};
 pub use scheduler::{JobSchedule, Schedule};
 
-use crate::combin::{combination_count, PascalTable};
-use crate::linalg::{det_bareiss, NeumaierSum};
+use crate::combin::{combination_count, PascalTable, PrefixBlockStream};
+use crate::linalg::{cofactors_exact, det_bareiss, NeumaierSum};
 use crate::matrix::{MatF64, MatI64};
 use crate::runtime::{resolve_artifact_dir, Dtype, Manifest};
 use crate::{Error, Result};
@@ -37,6 +44,11 @@ pub enum EngineKind {
     Cpu,
     /// AOT JAX/Pallas graph via PJRT (requires `make artifacts`).
     Xla,
+    /// Prefix-factored Laplace engine: factorize each sibling block's
+    /// shared m×(m−1) prefix once, O(m) per term thereafter
+    /// ([`PrefixEngine`]). Block-aligned scheduling, explicit LU
+    /// fallback on rank-deficient prefixes.
+    Prefix,
 }
 
 /// Coordinator configuration.
@@ -86,6 +98,11 @@ pub struct RadicOutput {
     pub metrics: JobMetrics,
 }
 
+/// Per-bucket cache of warm XLA dispatchers, keyed by `(m, batch)`.
+type DispatcherCache = std::sync::Mutex<
+    std::collections::HashMap<(usize, usize), std::sync::Arc<dispatch::XlaDispatcher>>,
+>;
+
 /// The L3 coordinator. Cheap to construct; one instance serves many jobs.
 ///
 /// XLA dispatchers (PJRT sessions + compiled executables) are cached per
@@ -95,7 +112,7 @@ pub struct RadicOutput {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     manifest: Option<Manifest>,
-    dispatchers: std::sync::Mutex<std::collections::HashMap<(usize, usize), std::sync::Arc<dispatch::XlaDispatcher>>>,
+    dispatchers: DispatcherCache,
 }
 
 impl Coordinator {
@@ -159,9 +176,14 @@ impl Coordinator {
             });
         }
 
+        // The prefix engine has its own block-oriented worker loop.
+        if matches!(self.cfg.engine, EngineKind::Prefix) {
+            return self.radic_det_prefix(a, total);
+        }
+
         // Engine selection.
         let use_xla = match self.cfg.engine {
-            EngineKind::Cpu => false,
+            EngineKind::Cpu | EngineKind::Prefix => false,
             EngineKind::Xla => true,
             EngineKind::Auto => self
                 .manifest
@@ -238,12 +260,56 @@ impl Coordinator {
         Ok(RadicOutput { det: sum.value(), terms: total, engine: label, metrics: jm })
     }
 
+    /// Prefix-engine job: block-aligned schedule, one prefix
+    /// factorization per sibling block, O(m) Laplace dot per term.
+    fn radic_det_prefix(&self, a: &MatF64, total: u128) -> Result<RadicOutput> {
+        let (m, n) = (a.rows(), a.cols());
+        let workers = self.workers();
+        let started = Instant::now();
+        let table = PascalTable::new(n as u64, m as u64)?;
+        let job = JobSchedule::new_block_aligned(self.cfg.schedule, total, workers, &table)?;
+        let results: Vec<Result<(NeumaierSum, WorkerMetrics)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let table = &table;
+                    let job = &job;
+                    handles.push(scope.spawn(move || prefix_worker_loop(w, a, table, job)));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker panicked"))
+                    .collect()
+            });
+        let mut sum = NeumaierSum::new();
+        let mut jm = JobMetrics::default();
+        for r in results {
+            let (partial, wm) = r?;
+            sum.merge(&partial);
+            jm.workers.push(wm);
+        }
+        jm.elapsed = started.elapsed();
+        Ok(RadicOutput { det: sum.value(), terms: total, engine: "prefix", metrics: jm })
+    }
+
     /// Parallel *exact* Radić determinant for integer matrices
     /// (Bareiss inner engine, `i128` partials, overflow-checked).
+    ///
+    /// With [`EngineKind::Prefix`] the inner engine switches to exact
+    /// Bareiss *prefix cofactors* shared across each sibling block —
+    /// the integer twin of the float prefix path (no rank fallback
+    /// needed: integer arithmetic is exact, singular prefixes simply
+    /// yield zero cofactors).
     pub fn radic_det_exact(&self, a: &MatI64) -> Result<i128> {
+        Ok(self.radic_det_exact_with_metrics(a)?.0)
+    }
+
+    /// [`Self::radic_det_exact`] plus per-worker metrics — the exact
+    /// path reports terms/chunks/blocks like the float path.
+    pub fn radic_det_exact_with_metrics(&self, a: &MatI64) -> Result<(i128, JobMetrics)> {
         let (m, n) = (a.rows(), a.cols());
         if m > n {
-            return Ok(0);
+            return Ok((0, JobMetrics::default()));
         }
         let total = combination_count(n as u64, m as u64)?;
         if total > self.cfg.term_cap {
@@ -255,14 +321,26 @@ impl Coordinator {
             });
         }
         let workers = self.workers();
+        let started = Instant::now();
         let table = PascalTable::new(n as u64, m as u64)?;
-        let job = JobSchedule::new(self.cfg.schedule, total, workers);
-        let partials: Vec<Result<i128>> = std::thread::scope(|scope| {
+        let use_prefix = matches!(self.cfg.engine, EngineKind::Prefix);
+        let job = if use_prefix {
+            JobSchedule::new_block_aligned(self.cfg.schedule, total, workers, &table)?
+        } else {
+            JobSchedule::new(self.cfg.schedule, total, workers)
+        };
+        let partials: Vec<Result<(i128, WorkerMetrics)>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
                 let table = &table;
                 let job = &job;
-                handles.push(scope.spawn(move || exact_worker_loop(w, a, table, job)));
+                handles.push(scope.spawn(move || {
+                    if use_prefix {
+                        exact_prefix_worker_loop(w, a, table, job)
+                    } else {
+                        exact_worker_loop(w, a, table, job)
+                    }
+                }));
             }
             handles
                 .into_iter()
@@ -270,12 +348,16 @@ impl Coordinator {
                 .collect()
         });
         let mut acc: i128 = 0;
+        let mut jm = JobMetrics::default();
         for p in partials {
+            let (partial, wm) = p?;
             acc = acc
-                .checked_add(p?)
+                .checked_add(partial)
                 .ok_or(Error::ExactOverflow("radic sum"))?;
+            jm.workers.push(wm);
         }
-        Ok(acc)
+        jm.elapsed = started.elapsed();
+        Ok((acc, jm))
     }
 }
 
@@ -293,13 +375,16 @@ fn worker_loop(
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
 
-    let flush =
-        |builder: &mut BatchBuilder, acc: &mut NeumaierSum, wm: &mut WorkerMetrics, eng: &mut Box<dyn DetEngine + Send>| -> Result<()> {
+    let flush = |builder: &mut BatchBuilder,
+                 acc: &mut NeumaierSum,
+                 wm: &mut WorkerMetrics,
+                 eng: &mut Box<dyn DetEngine + Send>|
+     -> Result<()> {
             if builder.is_empty() {
                 return Ok(());
             }
             let t0 = Instant::now();
-            let out = {
+            let partial = {
                 // finalize() hands back disjoint field borrows
                 // (mutable subs for in-place LU, shared signs).
                 let (subs, signs, _) = builder.finalize();
@@ -307,7 +392,7 @@ fn worker_loop(
             };
             wm.engine_time += t0.elapsed();
             wm.batches += 1;
-            acc.add(out.partial);
+            acc.add(partial);
             builder.clear();
             Ok(())
         };
@@ -334,19 +419,55 @@ fn worker_loop(
     Ok((acc, wm))
 }
 
+/// Prefix-engine worker: claim block-aligned chunks, walk sibling
+/// blocks, one factorization + O(m) dots per block.
+///
+/// The gather/factorize/dot phases are fused per block, so all time is
+/// booked as `engine_time` (`gather_time` stays 0 on this path).
+fn prefix_worker_loop(
+    w: usize,
+    a: &MatF64,
+    table: &PascalTable,
+    job: &JobSchedule,
+) -> Result<(NeumaierSum, WorkerMetrics)> {
+    let mut eng = PrefixEngine::new(a.rows());
+    let mut acc = NeumaierSum::new();
+    let mut wm = WorkerMetrics::default();
+    let mut src = job.source(w);
+    while let Some(chunk) = src.next_chunk() {
+        wm.chunks += 1;
+        let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
+        let t0 = Instant::now();
+        while let Some(b) = stream.next_block() {
+            let out = eng.run_block(a, b.prefix, b.last_lo, b.last_hi);
+            acc.add(out.partial);
+            wm.terms += out.terms;
+            wm.blocks += 1;
+            if out.fell_back {
+                wm.fallback_blocks += 1;
+            }
+        }
+        wm.engine_time += t0.elapsed();
+    }
+    Ok((acc, wm))
+}
+
 /// Exact-path worker: Bareiss per combination, `i128` partial.
 fn exact_worker_loop(
     w: usize,
     a: &MatI64,
     table: &PascalTable,
     job: &JobSchedule,
-) -> Result<i128> {
+) -> Result<(i128, WorkerMetrics)> {
     let m = a.rows();
     let mut scratch = vec![0i64; m * m];
     let mut acc: i128 = 0;
+    let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
     while let Some(chunk) = src.next_chunk() {
+        wm.chunks += 1;
         let mut stream = crate::combin::CombinationStream::new(table, chunk.start, chunk.len)?;
+        let t0 = Instant::now();
         while let Some(cols) = stream.next_ref() {
             a.gather_cols_into(cols, &mut scratch);
             let det = det_bareiss(&scratch, m)?;
@@ -354,10 +475,63 @@ fn exact_worker_loop(
             acc = acc
                 .checked_add(signed)
                 .ok_or(Error::ExactOverflow("radic sum"))?;
+            wm.terms += 1;
         }
+        wm.engine_time += t0.elapsed();
     }
-    let _ = w;
-    Ok(acc)
+    Ok((acc, wm))
+}
+
+/// Exact prefix worker: Bareiss-style integer cofactors shared per
+/// block, `i128` checked dot per sibling. No rank fallback is needed —
+/// exact arithmetic makes singular-prefix cofactors exactly zero.
+fn exact_prefix_worker_loop(
+    w: usize,
+    a: &MatI64,
+    table: &PascalTable,
+    job: &JobSchedule,
+) -> Result<(i128, WorkerMetrics)> {
+    let (m, n) = (a.rows(), a.cols());
+    let r_const = (m as u64) * (m as u64 + 1) / 2;
+    let mut prefix_buf = vec![0i64; m * (m - 1)];
+    let mut cof = vec![0i128; m];
+    let mut minor_buf: Vec<i64> = Vec::new();
+    let mut acc: i128 = 0;
+    let mut wm = WorkerMetrics::default();
+    let mut src = job.source(w);
+    while let Some(chunk) = src.next_chunk() {
+        wm.chunks += 1;
+        let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
+        let t0 = Instant::now();
+        while let Some(b) = stream.next_block() {
+            a.gather_cols_into(b.prefix, &mut prefix_buf);
+            cofactors_exact(&prefix_buf, m, &mut minor_buf, &mut cof)?;
+            let s_prefix: u64 = b.prefix.iter().map(|&c| c as u64).sum();
+            let mut negative = (r_const + s_prefix + b.last_lo as u64) % 2 == 1;
+            let data = a.data();
+            for j in b.last_lo..=b.last_hi {
+                let col = (j - 1) as usize;
+                let mut det: i128 = 0;
+                for (i, &c) in cof.iter().enumerate() {
+                    let term = c
+                        .checked_mul(data[i * n + col] as i128)
+                        .ok_or(Error::ExactOverflow("prefix dot"))?;
+                    det = det
+                        .checked_add(term)
+                        .ok_or(Error::ExactOverflow("prefix dot"))?;
+                }
+                let signed = if negative { -det } else { det };
+                acc = acc
+                    .checked_add(signed)
+                    .ok_or(Error::ExactOverflow("radic sum"))?;
+                negative = !negative;
+                wm.terms += 1;
+            }
+            wm.blocks += 1;
+        }
+        wm.engine_time += t0.elapsed();
+    }
+    Ok((acc, wm))
 }
 
 #[cfg(test)]
@@ -439,6 +613,65 @@ mod tests {
                 .unwrap();
             assert_eq!(got, seq, "workers={workers}");
         }
+    }
+
+    fn prefix_coord(workers: usize, schedule: Schedule) -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            workers,
+            engine: EngineKind::Prefix,
+            schedule,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn prefix_engine_matches_sequential_static_and_stealing() {
+        let a = gen::uniform(&mut TestRng::from_seed(7), 4, 12, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        for workers in [1, 2, 5] {
+            let out = prefix_coord(workers, Schedule::Static).radic_det(&a).unwrap();
+            assert_eq!(out.engine, "prefix");
+            assert_eq!(out.terms, 495);
+            assert_eq!(out.metrics.total().terms, 495);
+            assert!(out.metrics.total().blocks > 0, "blocks metered");
+            assert!(
+                (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+                "workers={workers}: {} vs {seq}",
+                out.det
+            );
+        }
+        let ws = prefix_coord(3, Schedule::WorkStealing { grain: 11 })
+            .radic_det(&a)
+            .unwrap();
+        assert!((ws.det - seq).abs() < 1e-9 * seq.abs().max(1.0));
+        assert_eq!(ws.metrics.total().terms, 495);
+    }
+
+    #[test]
+    fn prefix_exact_matches_sequential() {
+        let a = gen::integer(&mut TestRng::from_seed(8), 3, 10, -7, 7);
+        let seq = radic_det_exact(&a).unwrap();
+        for workers in [1, 4] {
+            let (got, jm) = prefix_coord(workers, Schedule::Static)
+                .radic_det_exact_with_metrics(&a)
+                .unwrap();
+            assert_eq!(got, seq, "workers={workers}");
+            assert_eq!(jm.total().terms as u128, 120); // C(10,3)
+            assert!(jm.total().blocks > 0);
+        }
+    }
+
+    #[test]
+    fn exact_path_reports_metrics() {
+        let a = gen::integer(&mut TestRng::from_seed(9), 3, 9, -5, 5);
+        let (det, jm) = cpu_coord(3, Schedule::Static)
+            .radic_det_exact_with_metrics(&a)
+            .unwrap();
+        assert_eq!(det, radic_det_exact(&a).unwrap());
+        assert_eq!(jm.total().terms as u128, 84); // C(9,3)
+        assert!(jm.total().chunks >= 1);
+        assert_eq!(jm.workers.len(), 3);
     }
 
     #[test]

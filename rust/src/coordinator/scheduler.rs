@@ -8,7 +8,10 @@
 //!   cost of one atomic RMW per block. `benches/bench_scaling.rs`
 //!   compares the two.
 
-use crate::combin::{partition_total, Chunk};
+use crate::combin::{
+    align_chunks_to_blocks, block_aligned_grain, partition_total, Chunk, PascalTable,
+};
+use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Scheduling policy.
@@ -80,6 +83,39 @@ impl JobSchedule {
         }
     }
 
+    /// Plan a job with chunk boundaries aligned to sibling-block starts
+    /// — the prefix engine's schedule. Static chunks are snapped to
+    /// block starts ([`align_chunks_to_blocks`]), so no worker ever
+    /// splits (and re-factorizes) another worker's block; the stealing
+    /// grain is rounded up to whole-block multiples
+    /// ([`block_aligned_grain`]) so at most the first/last block of a
+    /// claim is truncated.
+    pub fn new_block_aligned(
+        schedule: Schedule,
+        total: u128,
+        workers: usize,
+        table: &PascalTable,
+    ) -> Result<Self> {
+        let (schedule, chunks) = match schedule {
+            Schedule::Static => (
+                schedule,
+                align_chunks_to_blocks(table, &partition_total(total, workers))?,
+            ),
+            Schedule::WorkStealing { grain } => (
+                Schedule::WorkStealing {
+                    grain: block_aligned_grain(grain, table.n(), table.m()),
+                },
+                Vec::new(),
+            ),
+        };
+        Ok(Self {
+            schedule,
+            chunks,
+            cursor: AtomicU64::new(0),
+            total: u64::try_from(total).expect("term cap keeps totals in u64"),
+        })
+    }
+
     /// The work source for worker `w`.
     pub fn source(&self, w: usize) -> WorkSource<'_> {
         match self.schedule {
@@ -119,6 +155,41 @@ mod tests {
         let js = JobSchedule::new(Schedule::Static, 2, 5);
         let nonempty = (0..5).filter(|&w| !drain(js.source(w)).is_empty()).count();
         assert_eq!(nonempty, 2);
+    }
+
+    #[test]
+    fn block_aligned_static_tiles_and_starts_on_blocks() {
+        // C(10,4) = 210 over 4 workers.
+        let table = PascalTable::new(10, 4).unwrap();
+        let js = JobSchedule::new_block_aligned(Schedule::Static, 210, 4, &table).unwrap();
+        let mut all: Vec<Chunk> = (0..4).flat_map(|w| drain(js.source(w))).collect();
+        all.sort_by_key(|c| c.start);
+        let mut cursor = 0u128;
+        for c in &all {
+            assert_eq!(c.start, cursor);
+            cursor = c.end();
+            assert_eq!(
+                crate::combin::block_start(&table, c.start).unwrap(),
+                c.start,
+                "chunk must start on a block boundary"
+            );
+        }
+        assert_eq!(cursor, 210);
+    }
+
+    #[test]
+    fn block_aligned_stealing_rounds_grain() {
+        // n=10, m=4 ⇒ max block width 7; grain 10 rounds to 14.
+        let table = PascalTable::new(10, 4).unwrap();
+        let js = JobSchedule::new_block_aligned(
+            Schedule::WorkStealing { grain: 10 },
+            210,
+            3,
+            &table,
+        )
+        .unwrap();
+        let first = drain(js.source(0));
+        assert_eq!(first[0].len, 14, "grain snapped to a whole-block multiple");
     }
 
     #[test]

@@ -1,51 +1,107 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (thiserror is unavailable in the
+//! offline build — same substitution policy as bench/testkit/cli::args).
+
+use crate::xla;
 
 /// Unified error for all raddet subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Combinatorial argument out of range (e.g. `m > n`, rank ≥ C(n,m)).
-    #[error("combinatorics: {0}")]
     Combinatorics(String),
 
     /// Binomial/rank arithmetic would overflow u128.
-    #[error("binomial overflow: C({n},{k}) exceeds u128")]
-    BinomialOverflow { n: u64, k: u64 },
+    BinomialOverflow {
+        /// Binomial upper argument.
+        n: u64,
+        /// Binomial lower argument.
+        k: u64,
+    },
 
     /// Job too large for enumeration (guard, see DESIGN.md §5).
-    #[error("job too large: C({n},{m}) = {total} exceeds the enumeration cap {cap}")]
-    JobTooLarge { n: u64, m: u64, total: u128, cap: u128 },
+    JobTooLarge {
+        /// Matrix columns.
+        n: u64,
+        /// Matrix rows.
+        m: u64,
+        /// Term count C(n,m).
+        total: u128,
+        /// Configured cap.
+        cap: u128,
+    },
 
     /// Matrix shape problem.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Artifact manifest / file problem.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// No artifact bucket matches the request.
-    #[error("no artifact for m={m} dtype={dtype}; available: {available}")]
-    NoArtifact { m: usize, dtype: &'static str, available: String },
+    NoArtifact {
+        /// Requested submatrix order.
+        m: usize,
+        /// Requested dtype.
+        dtype: &'static str,
+        /// Buckets actually present.
+        available: String,
+    },
 
     /// PJRT / XLA runtime failure.
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Exact (integer) arithmetic overflow.
-    #[error("exact arithmetic overflow in {0}")]
     ExactOverflow(&'static str),
 
     /// Service protocol violation.
-    #[error("protocol: {0}")]
     Protocol(String),
 
     /// I/O error.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Configuration error (CLI or coordinator).
-    #[error("config: {0}")]
     Config(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Combinatorics(s) => write!(f, "combinatorics: {s}"),
+            Error::BinomialOverflow { n, k } => {
+                write!(f, "binomial overflow: C({n},{k}) exceeds u128")
+            }
+            Error::JobTooLarge { n, m, total, cap } => write!(
+                f,
+                "job too large: C({n},{m}) = {total} exceeds the enumeration cap {cap}"
+            ),
+            Error::Shape(s) => write!(f, "shape: {s}"),
+            Error::Artifact(s) => write!(f, "artifact: {s}"),
+            Error::NoArtifact { m, dtype, available } => write!(
+                f,
+                "no artifact for m={m} dtype={dtype}; available: {available}"
+            ),
+            Error::Xla(s) => write!(f, "xla: {s}"),
+            Error::ExactOverflow(what) => write!(f, "exact arithmetic overflow in {what}"),
+            Error::Protocol(s) => write!(f, "protocol: {s}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -56,3 +112,32 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_format() {
+        assert_eq!(
+            Error::Combinatorics("m > n".into()).to_string(),
+            "combinatorics: m > n"
+        );
+        assert_eq!(
+            Error::BinomialOverflow { n: 200, k: 100 }.to_string(),
+            "binomial overflow: C(200,100) exceeds u128"
+        );
+        assert_eq!(
+            Error::ExactOverflow("bareiss").to_string(),
+            "exact arithmetic overflow in bareiss"
+        );
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().starts_with("io: "));
+    }
+}

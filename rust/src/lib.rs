@@ -27,10 +27,14 @@
 //!   Radić reference implementation.
 //! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes batched determinant
-//!   graphs. Python never runs on this path.
-//! * [`coordinator`] — the L3 system: engines, batcher, scheduler
-//!   (static granularity per §5 + work-stealing extension), worker pool,
-//!   compensated reduction, metrics.
+//!   graphs. Python never runs on this path. (Offline builds link the
+//!   [`mod@xla`] stub, which fails loudly at runtime instead.)
+//! * [`coordinator`] — the L3 system: engines (per-term LU lanes, XLA
+//!   batches, and the prefix-factored Laplace engine that amortizes one
+//!   m×(m−1) factorization across each sibling combination block),
+//!   batcher, scheduler (static granularity per §5, work-stealing, and
+//!   block-aligned variants), worker pool, compensated reduction,
+//!   metrics.
 //! * [`pram`] — CRCW/CREW/EREW cost-model simulator reproducing the §6
 //!   complexity table.
 //! * [`service`] — TCP determinant service (the §8 “network overhead”
@@ -68,5 +72,6 @@ pub mod pram;
 pub mod runtime;
 pub mod service;
 pub mod testkit;
+pub mod xla;
 
 pub use error::{Error, Result};

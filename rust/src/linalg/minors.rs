@@ -1,0 +1,314 @@
+//! Prefix cofactors — the m signed minors of a shared m×(m−1) prefix in
+//! one pivoted elimination pass.
+//!
+//! For a block of sibling combinations `(j₁,…,j_{m−1}, j)` the gathered
+//! submatrices differ only in their last column, so by Laplace expansion
+//!
+//! ```text
+//! det([P | v]) = Σᵢ cᵢ·vᵢ,   cᵢ = (−1)^(i+m)·minorᵢ(P)
+//! ```
+//!
+//! where `P` is the m×(m−1) prefix and `minorᵢ` deletes row `i`. Rather
+//! than m separate (m−1)×(m−1) determinants (O(m⁴)), one pivoted
+//! elimination of `P` gives every cofactor at once in O(m³): with
+//! `ΠP = LU` (partial pivoting, `U` upper-trapezoidal whose last row
+//! eliminates to zero),
+//!
+//! ```text
+//! det([P|v]) = sign(Π)·(∏ diag U)·(last entry of L⁻¹Πv)
+//!            = ⟨ sign(Π)·(∏ diag U)·Πᵀy , v ⟩,   yᵀL = e_mᵀ
+//! ```
+//!
+//! so `c = sign(Π)·(∏ diag U)·Πᵀy` after one O(m²) unit-triangular
+//! solve. Amortized over a width-`w` sibling block the per-term cost is
+//! O(m³/w + m) — below the O(m³) per-term LU for every `w > 1`, and O(m)
+//! once `w ≳ m²`.
+//!
+//! **Rank-deficient prefixes** (pivot below the scaled threshold) return
+//! `false` instead of cofactors: a singular prefix means every sibling
+//! determinant is *mathematically* zero, but near-singular prefixes lose
+//! accuracy in this factorization while per-sibling pivoted LU stays
+//! accurate — so the engine must fall back loudly (metered as
+//! `fallback_blocks`), never answer silently from a bad factorization.
+
+use crate::linalg::det_bareiss;
+use crate::Result;
+
+/// Reusable scratch for [`MinorsWorkspace::cofactors`] — one per
+/// engine, zero allocation per block after construction.
+#[derive(Clone, Debug)]
+pub struct MinorsWorkspace {
+    m: usize,
+    /// m×(m−1) elimination buffer: U above the diagonal, L multipliers
+    /// below (LAPACK-style packed storage).
+    lu: Vec<f64>,
+    /// Unit-triangular solve vector (length m).
+    y: Vec<f64>,
+    /// Row permutation: `perm[j]` = original row index now at row `j`.
+    perm: Vec<usize>,
+}
+
+impl MinorsWorkspace {
+    /// Workspace for prefixes of `m`-row problems (`m ≥ 1`).
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self {
+            m,
+            lu: vec![0.0; m * m.saturating_sub(1)],
+            y: vec![0.0; m],
+            perm: vec![0; m],
+        }
+    }
+
+    /// Submatrix order this workspace serves.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Compute the Laplace cofactors of the row-major m×(m−1) `prefix`
+    /// into `out` (length m): afterwards `det([prefix | v]) = Σᵢ
+    /// out[i]·v[i]` for any last column `v`.
+    ///
+    /// Returns `false` — leaving `out` unspecified — when the prefix is
+    /// rank-deficient to working precision; callers must then fall back
+    /// to per-sibling pivoted LU.
+    pub fn cofactors(&mut self, prefix: &[f64], out: &mut [f64]) -> bool {
+        let m = self.m;
+        debug_assert_eq!(prefix.len(), m * (m - 1));
+        debug_assert_eq!(out.len(), m);
+        if m == 1 {
+            // Empty prefix: det([|v]) = v₀.
+            out[0] = 1.0;
+            return true;
+        }
+        let w = m - 1; // prefix column count = packed row stride
+        self.lu.copy_from_slice(prefix);
+        for (j, p) in self.perm.iter_mut().enumerate() {
+            *p = j;
+        }
+        // Scaled rank threshold: pivots at or below this are treated as
+        // zero (the prefix has numerically dependent columns).
+        let maxabs = prefix.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        let tiny = maxabs * (m as f64) * f64::EPSILON * 16.0;
+
+        let mut sign = 1.0f64;
+        let mut prod = 1.0f64;
+        for k in 0..w {
+            // Partial pivot: max |entry| in column k, rows k…m−1.
+            let mut p = k;
+            let mut best = self.lu[k * w + k].abs();
+            for r in k + 1..m {
+                let mag = self.lu[r * w + k].abs();
+                if mag > best {
+                    best = mag;
+                    p = r;
+                }
+            }
+            if best <= tiny {
+                return false; // rank-deficient prefix — caller falls back
+            }
+            if p != k {
+                for c in 0..w {
+                    self.lu.swap(k * w + c, p * w + c);
+                }
+                self.perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = self.lu[k * w + k];
+            prod *= pivot;
+            let inv = 1.0 / pivot;
+            for r in k + 1..m {
+                let f = self.lu[r * w + k] * inv;
+                self.lu[r * w + k] = f; // packed L multiplier
+                if f != 0.0 {
+                    for c in k + 1..w {
+                        self.lu[r * w + c] -= f * self.lu[k * w + c];
+                    }
+                }
+            }
+        }
+        // Solve yᵀL = e_{m−1}ᵀ (L unit lower-triangular, multipliers in
+        // the packed sub-diagonal): y_{m−1} = 1, back-substitute upward.
+        self.y[m - 1] = 1.0;
+        for r in (0..m - 1).rev() {
+            let mut s = 0.0;
+            for q in r + 1..m {
+                s += self.y[q] * self.lu[q * w + r];
+            }
+            self.y[r] = -s;
+        }
+        // c = sign·prod·Πᵀy: row j of the permuted system is original
+        // row perm[j].
+        let scale = sign * prod;
+        for j in 0..m {
+            out[self.perm[j]] = scale * self.y[j];
+        }
+        true
+    }
+}
+
+/// Exact integer cofactors of a row-major m×(m−1) prefix: `out[i] =
+/// (−1)^(i+m)·det(prefix without row i)` over `i128` via Bareiss, so
+/// `det([prefix | v]) = Σᵢ out[i]·vᵢ` exactly.
+///
+/// O(m⁴) per prefix — amortized over a width-`w` sibling block this
+/// beats per-sibling Bareiss (O(m³)) whenever `w > m`. `minor_buf` is
+/// caller-owned scratch (resized to (m−1)² as needed) so block loops
+/// stay allocation-free. A rank-deficient integer prefix needs no
+/// fallback: Bareiss is exact, the cofactors simply come out zero.
+pub fn cofactors_exact(
+    prefix: &[i64],
+    m: usize,
+    minor_buf: &mut Vec<i64>,
+    out: &mut [i128],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), m);
+    if m == 1 {
+        out[0] = 1;
+        return Ok(());
+    }
+    let w = m - 1;
+    debug_assert_eq!(prefix.len(), m * w);
+    minor_buf.clear();
+    minor_buf.resize(w * w, 0);
+    for skip in 0..m {
+        let mut t = 0;
+        for r in 0..m {
+            if r == skip {
+                continue;
+            }
+            minor_buf[t * w..(t + 1) * w].copy_from_slice(&prefix[r * w..(r + 1) * w]);
+            t += 1;
+        }
+        let minor = det_bareiss(minor_buf, w)?;
+        // 1-based row i = skip+1, column m: (−1)^(i+m). Magnitude needs
+        // no pre-guard here: the per-sibling dot product uses checked
+        // ops on the actual entries, which is strictly more permissive.
+        out[skip] = if (skip + 1 + m) % 2 == 0 { minor } else { -minor };
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::det_lu;
+    use crate::matrix::gen;
+    use crate::testkit::{for_all, TestRng};
+
+    /// det([P | v]) assembled the slow way for checking.
+    fn det_with_last_column(prefix: &[f64], v: &[f64], m: usize) -> f64 {
+        let w = m - 1;
+        let mut full = vec![0.0; m * m];
+        for r in 0..m {
+            full[r * m..r * m + w].copy_from_slice(&prefix[r * w..(r + 1) * w]);
+            full[r * m + w] = v[r];
+        }
+        det_lu(&full, m)
+    }
+
+    #[test]
+    fn cofactors_reproduce_lu_dets_randomized() {
+        for_all("prefix cofactors == LU (m ≤ 7)", 200, |rng: &mut TestRng| {
+            let m = 2 + rng.usize_below(6);
+            let prefix = gen::uniform(rng, m, m - 1, -2.0, 2.0);
+            let mut ws = MinorsWorkspace::new(m);
+            let mut c = vec![0.0; m];
+            assert!(ws.cofactors(prefix.data(), &mut c), "random prefix full rank");
+            for _ in 0..4 {
+                let v: Vec<f64> = (0..m).map(|_| rng.f64_range(-2.0, 2.0)).collect();
+                let fast: f64 = c.iter().zip(&v).map(|(ci, vi)| ci * vi).sum();
+                let slow = det_with_last_column(prefix.data(), &v, m);
+                let tol = 1e-9 * slow.abs().max(1.0);
+                assert!((fast - slow).abs() < tol, "m={m}: {fast} vs {slow}");
+            }
+        });
+    }
+
+    #[test]
+    fn m_one_is_identity_cofactor() {
+        let mut ws = MinorsWorkspace::new(1);
+        let mut c = [0.0];
+        assert!(ws.cofactors(&[], &mut c));
+        assert_eq!(c, [1.0]);
+    }
+
+    #[test]
+    fn m_two_anchor() {
+        // P = [[3],[5]]: det([P|v]) = 3·v₁ − 5·v₀ ⇒ c = [−5, 3].
+        let mut ws = MinorsWorkspace::new(2);
+        let mut c = [0.0; 2];
+        assert!(ws.cofactors(&[3.0, 5.0], &mut c));
+        assert_eq!(c, [-5.0, 3.0]);
+    }
+
+    #[test]
+    fn rank_deficient_prefix_reports_false() {
+        // Two proportional columns ⇒ rank 1 < m−1 = 2.
+        let prefix = [1.0, 2.0, 3.0, 6.0, -2.0, -4.0]; // col₂ = 2·col₁
+        let mut ws = MinorsWorkspace::new(3);
+        let mut c = [0.0; 3];
+        assert!(!ws.cofactors(&prefix, &mut c), "must demand the fallback");
+        // Zero prefix too.
+        assert!(!ws.cofactors(&[0.0; 6], &mut c));
+    }
+
+    #[test]
+    fn pivoting_handles_leading_zeros() {
+        // First row zero forces a swap chain; still full rank.
+        let prefix = [0.0, 0.0, 1.0, 0.0, 0.0, 1.0]; // 3×2
+        let mut ws = MinorsWorkspace::new(3);
+        let mut c = [0.0; 3];
+        assert!(ws.cofactors(&prefix, &mut c));
+        for v in [[1.0, 0.0, 0.0], [0.5, -1.0, 2.0], [3.0, 3.0, 3.0]] {
+            let fast: f64 = c.iter().zip(&v).map(|(ci, vi)| ci * vi).sum();
+            let slow = det_with_last_column(&prefix, &v, 3);
+            assert!((fast - slow).abs() < 1e-12, "{fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean() {
+        let mut ws = MinorsWorkspace::new(2);
+        let mut c = [0.0; 2];
+        assert!(ws.cofactors(&[1.0, 0.0], &mut c));
+        assert_eq!(c, [0.0, 1.0]);
+        // A singular pass must not poison the next full-rank pass.
+        assert!(!ws.cofactors(&[0.0, 0.0], &mut c));
+        assert!(ws.cofactors(&[0.0, 4.0], &mut c));
+        assert_eq!(c, [-4.0, 0.0]);
+    }
+
+    #[test]
+    fn exact_cofactors_match_float_randomized() {
+        for_all("exact cofactors == float (m ≤ 5)", 150, |rng: &mut TestRng| {
+            let m = 2 + rng.usize_below(4);
+            let prefix = gen::integer(rng, m, m - 1, -9, 9);
+            let mut ci = vec![0i128; m];
+            let mut buf = Vec::new();
+            cofactors_exact(prefix.data(), m, &mut buf, &mut ci).unwrap();
+            let pf: Vec<f64> = prefix.data().iter().map(|&x| x as f64).collect();
+            let mut ws = MinorsWorkspace::new(m);
+            let mut cf = vec![0.0; m];
+            if ws.cofactors(&pf, &mut cf) {
+                for (i, &e) in ci.iter().enumerate() {
+                    assert!(
+                        (e as f64 - cf[i]).abs() < 1e-9 * (e as f64).abs().max(1.0),
+                        "m={m} i={i}: exact {e} float {}",
+                        cf[i]
+                    );
+                }
+            } else {
+                // Float declared rank-deficient ⇒ exact cofactors are 0.
+                assert!(ci.iter().all(|&e| e == 0), "singular ⇒ zero cofactors");
+            }
+        });
+    }
+
+    #[test]
+    fn exact_m_one() {
+        let mut out = [0i128];
+        cofactors_exact(&[], 1, &mut Vec::new(), &mut out).unwrap();
+        assert_eq!(out, [1]);
+    }
+}

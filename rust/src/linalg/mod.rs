@@ -9,6 +9,9 @@
 //! * [`bareiss`] — fraction-free elimination over `i128` — *exact* for
 //!   integer matrices; anchors the floating-point paths against
 //!   cancellation artifacts.
+//! * [`minors`] — prefix cofactors: the m signed minors of a shared
+//!   m×(m−1) column prefix in one elimination pass, the factorization
+//!   the prefix engine amortizes across sibling combination blocks.
 //!
 //! [`radic`] evaluates Definition 3 sequentially on top of any of them —
 //! the single-processor baseline every parallel run is checked against.
@@ -20,6 +23,7 @@ pub mod altdef;
 pub mod bareiss;
 pub mod laplace;
 pub mod lu;
+pub mod minors;
 pub mod radic;
 
 pub use accum::NeumaierSum;
@@ -27,4 +31,5 @@ pub use altdef::{block_sum_det, cauchy_binet_sum, gram_det};
 pub use bareiss::det_bareiss;
 pub use laplace::det_laplace;
 pub use lu::{det_lu, det_lu_inplace};
+pub use minors::{cofactors_exact, MinorsWorkspace};
 pub use radic::{radic_det_exact, radic_det_seq, radic_terms, RadicTerm};

@@ -6,6 +6,7 @@
 //! tuple output (`return_tuple=True` on the python side).
 
 use super::artifact::{ArtifactSpec, Dtype};
+use crate::xla;
 use crate::{Error, Result};
 
 /// Output of one `radic_partial` execution.

@@ -1,0 +1,140 @@
+//! Offline stand-in for the `xla` crate (PJRT / xla_extension bindings).
+//!
+//! The build image carries no crates.io mirror and no PJRT plugin, so the
+//! real bindings cannot be a dependency. This module mirrors exactly the
+//! slice of the `xla` API that [`crate::runtime`] uses; every entry point
+//! that would touch a device fails loudly with [`Error`], which the
+//! coordinator surfaces as `Error::Xla` — `EngineKind::Xla` therefore
+//! errors at *runtime* ("PJRT backend not built in") instead of breaking
+//! the build, and `EngineKind::Auto` silently stays on the CPU engine.
+//!
+//! To restore the real backend: add the `xla` crate to `Cargo.toml`,
+//! delete this module and the `use crate::xla;` lines in `error.rs` and
+//! `runtime/exec.rs`. No other code changes are required.
+
+/// Error produced by the (stubbed) XLA layer.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("PJRT backend not built in (xla stub — see rust/src/xla.rs)".into())
+}
+
+/// Element types the runtime moves across the PJRT boundary.
+pub trait ArrayElement: Copy + Default {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// Host-side literal (stub: never holds data — construction is the only
+/// operation that can succeed, and only so callers can reach the fallible
+/// `reshape`/`execute` steps where the stub reports itself).
+pub struct Literal;
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: ArrayElement>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    /// Split a 2-tuple output.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        Err(unavailable())
+    }
+
+    /// First element of the buffer.
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T, Error> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments; `[replica][output]` buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub — creation always fails, so nothing downstream of a
+/// client can be reached in a stub build).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    /// Platform string.
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_not_silently() {
+        let err = PjRtClient::cpu().err().expect("stub client must not exist");
+        assert!(err.to_string().contains("stub"), "error names the stub: {err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0f64]).reshape(&[1]).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Prefix-factored engine end-to-end: randomized parity against the
+//! sequential float reference and the exact integer path, plus the
+//! rank-deficient-prefix fallback contract.
+
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::linalg::{radic_det_exact, radic_det_seq};
+use raddet::matrix::gen;
+use raddet::testkit::{for_all, TestRng};
+
+fn prefix_coord(workers: usize, schedule: Schedule) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        workers,
+        engine: EngineKind::Prefix,
+        schedule,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn prefix_matches_sequential_property() {
+    for_all("prefix == sequential (m ≤ 5, n ≤ 12)", 40, |rng: &mut TestRng| {
+        let m = 1 + rng.usize_below(5);
+        let n = m + rng.usize_below(13 - m);
+        let workers = 1 + rng.usize_below(6);
+        let a = gen::uniform(rng, m, n, -2.0, 2.0);
+        let seq = radic_det_seq(&a).unwrap();
+        let out = prefix_coord(workers, Schedule::Static).radic_det(&a).unwrap();
+        assert_eq!(out.engine, "prefix");
+        assert!(
+            (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+            "m={m} n={n} workers={workers}: {} vs {seq}",
+            out.det
+        );
+        assert_eq!(out.metrics.total().terms as u128, out.terms);
+    });
+}
+
+#[test]
+fn prefix_matches_exact_on_integer_inputs_property() {
+    for_all("prefix == exact (integer)", 30, |rng: &mut TestRng| {
+        let m = 1 + rng.usize_below(5);
+        let n = m + rng.usize_below(13 - m);
+        let workers = 1 + rng.usize_below(4);
+        let ai = gen::integer(rng, m, n, -6, 6);
+        let exact = radic_det_exact(&ai).unwrap();
+        // Float prefix engine against the exact anchor.
+        let af = ai.map(|x| x as f64);
+        let out = prefix_coord(workers, Schedule::Static).radic_det(&af).unwrap();
+        let tol = 1e-9 * (exact as f64).abs().max(100.0);
+        assert!(
+            (out.det - exact as f64).abs() < tol,
+            "m={m} n={n}: float prefix {} vs exact {exact}",
+            out.det
+        );
+        // Exact prefix engine must agree bit-for-bit.
+        let got = prefix_coord(workers, Schedule::Static)
+            .radic_det_exact(&ai)
+            .unwrap();
+        assert_eq!(got, exact, "m={m} n={n} workers={workers}");
+    });
+}
+
+#[test]
+fn prefix_work_stealing_agrees_with_static() {
+    let a = gen::uniform(&mut TestRng::from_seed(77), 5, 12, -1.0, 1.0);
+    let st = prefix_coord(4, Schedule::Static).radic_det(&a).unwrap();
+    let ws = prefix_coord(4, Schedule::WorkStealing { grain: 13 })
+        .radic_det(&a)
+        .unwrap();
+    assert!((st.det - ws.det).abs() < 1e-9 * st.det.abs().max(1.0));
+    assert_eq!(st.metrics.total().terms, ws.metrics.total().terms);
+}
+
+/// A matrix whose columns 1 and 2 are identical: every sibling block
+/// whose prefix contains both is rank-deficient, so the engine must
+/// take the metered LU fallback there — and still be right everywhere.
+#[test]
+fn rank_deficient_prefixes_fall_back_and_stay_correct() {
+    let mut a = gen::uniform(&mut TestRng::from_seed(123), 3, 9, -1.0, 1.0);
+    for r in 0..3 {
+        *a.at_mut(r, 1) = a.at(r, 0);
+    }
+    let seq = radic_det_seq(&a).unwrap();
+    for workers in [1, 3] {
+        let out = prefix_coord(workers, Schedule::Static).radic_det(&a).unwrap();
+        assert!(
+            (out.det - seq).abs() < 1e-9 * seq.abs().max(1.0),
+            "workers={workers}: {} vs {seq}",
+            out.det
+        );
+        let t = out.metrics.total();
+        assert!(
+            t.fallback_blocks > 0,
+            "duplicate-column prefixes must be metered as fallbacks (got {t:?})"
+        );
+        assert!(t.fallback_blocks <= t.blocks);
+    }
+}
+
+#[test]
+fn fully_singular_matrix_is_zero_via_fallback() {
+    // Rank-1 matrix: every prefix (m ≥ 2) is rank-deficient, every det 0.
+    let base = gen::uniform(&mut TestRng::from_seed(5), 1, 10, -1.0, 1.0);
+    let mut a = gen::uniform(&mut TestRng::from_seed(6), 3, 10, 0.0, 0.0);
+    for r in 0..3 {
+        for c in 0..10 {
+            *a.at_mut(r, c) = base.at(0, c) * (r as f64 + 1.0);
+        }
+    }
+    let out = prefix_coord(2, Schedule::Static).radic_det(&a).unwrap();
+    assert!(out.det.abs() < 1e-9, "rank-1 matrix: det = {}", out.det);
+    let t = out.metrics.total();
+    assert_eq!(t.fallback_blocks, t.blocks, "every block is degenerate");
+}
+
+#[test]
+fn prefix_engine_on_paper_example_shape() {
+    // The paper's running example: n=8, m=5 (56 terms).
+    let a = gen::uniform(&mut TestRng::from_seed(2015), 5, 8, -1.0, 1.0);
+    let seq = radic_det_seq(&a).unwrap();
+    let out = prefix_coord(8, Schedule::Static).radic_det(&a).unwrap();
+    assert_eq!(out.terms, 56);
+    assert!((out.det - seq).abs() < 1e-9 * seq.abs().max(1.0));
+}
+
+#[test]
+fn exact_prefix_metrics_report_blocks() {
+    let ai = gen::integer(&mut TestRng::from_seed(9), 4, 11, -5, 5);
+    let (det, jm) = prefix_coord(3, Schedule::Static)
+        .radic_det_exact_with_metrics(&ai)
+        .unwrap();
+    assert_eq!(det, radic_det_exact(&ai).unwrap());
+    let t = jm.total();
+    assert_eq!(t.terms as u128, 330); // C(11,4)
+    assert!(t.blocks > 0, "exact path meters blocks too");
+    assert_eq!(t.fallback_blocks, 0, "exact path never falls back");
+}
