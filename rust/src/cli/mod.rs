@@ -10,18 +10,29 @@
 //! raddet table2                           # paper Table 2 (n=8, m=5)
 //! raddet pram      --n N --m M            # §6 complexity table
 //! raddet scaling   --rows M --cols N [--max-workers K] [--engine …]
-//! raddet serve     --port P [--workers K] [--engine …]
+//! raddet serve     --port P [--workers K] [--engine …] [--jobs-dir D]
 //! raddet query     --addr HOST:PORT --csv F [--exact]
 //! raddet retrieve  [--images K] [--query I] [--noise E]
+//! raddet job submit  --rows M --cols N [--seed S | --csv F] [--exact]
+//!                    [--engine cpu|prefix] [--chunks C] [--batch B]
+//!                    [--jobs-dir D] [--job-workers K] [--max-chunks B]
+//! raddet job status  --id ID [--jobs-dir D]
+//! raddet job resume  --id ID [--jobs-dir D] [--job-workers K] [--max-chunks B]
+//! raddet job list    [--jobs-dir D]
+//! raddet job export  --id ID [--jobs-dir D] [--out F]   # JSON
 //! raddet help
 //! ```
 
 pub mod args;
 
 use crate::apps::retrieval::{ImageStore, SyntheticImage};
+use crate::bench::stats::{json_f64, json_object, Stats};
 use crate::combin::{rank as rank_fn, unrank_traced, PascalTable};
 use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
-use crate::matrix::{gen, io as mio};
+use crate::jobs::{
+    JobEngine, JobManager, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
+};
+use crate::matrix::{gen, io as mio, MatF64};
 use crate::pram::{analysis, section6_table};
 use crate::service::{Client, Server};
 use crate::testkit::TestRng;
@@ -47,6 +58,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         print!("{}", HELP);
         return Ok(());
     }
+    if argv[0] == "job" {
+        return dispatch_job(&argv[1..]);
+    }
     let a = Args::parse(argv)?;
     match a.command.as_str() {
         "det" => cmd_det(&a),
@@ -65,6 +79,25 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
+fn dispatch_job(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        return Err(Error::Config(
+            "usage: raddet job <submit|status|resume|list|export> [--options]".into(),
+        ));
+    }
+    let a = Args::parse(argv)?;
+    match a.command.as_str() {
+        "submit" => cmd_job_submit(&a),
+        "status" => cmd_job_status(&a),
+        "resume" => cmd_job_resume(&a),
+        "list" => cmd_job_list(&a),
+        "export" => cmd_job_export(&a),
+        other => Err(Error::Config(format!(
+            "unknown job action {other:?} (submit|status|resume|list|export)"
+        ))),
+    }
+}
+
 const HELP: &str = "raddet — parallel Radić determinant of non-square matrices\n\
 (Abdollahi et al., IJDPS 2015 — see README.md)\n\n\
 commands:\n\
@@ -75,9 +108,13 @@ commands:\n\
   table2    all 56 five-member subsets of {1..8} (paper Table 2)\n\
   pram      §6 PRAM complexity table for --n/--m\n\
   scaling   strong-scaling study on this machine\n\
-  serve     TCP determinant service (--port)\n\
+  serve     TCP determinant service; JOB verbs are always on and\n\
+            journal to --jobs-dir (default ./raddet-jobs)\n\
   query     send a --csv matrix to a running service (--addr)\n\
   retrieve  image-retrieval demo (paper's machine-vision motivation)\n\
+  job       durable det-jobs: submit|status|resume|list|export\n\
+            (journaled, resumable sweeps — kill-safe, bitwise-identical\n\
+            results after resume; see README §Durable jobs)\n\
   help      this text\n";
 
 fn build_coordinator(a: &Args) -> Result<Coordinator> {
@@ -113,21 +150,7 @@ fn cmd_det(a: &Args) -> Result<()> {
         &[&COORD_OPTS[..], &["rows", "cols", "csv", "exact", "lo", "hi", "compare"]].concat(),
     )?;
     let coord = build_coordinator(a)?;
-    let mat = match a.get("csv") {
-        Some(path) => mio::read_csv_file(std::path::Path::new(path))?,
-        None => {
-            let rows: usize = a.require_parse("rows")?;
-            let cols: usize = a.require_parse("cols")?;
-            let seed: u64 = a.get_parse("seed", 42u64)?;
-            gen::uniform(
-                &mut TestRng::from_seed(seed),
-                rows,
-                cols,
-                a.get_parse("lo", -1.0)?,
-                a.get_parse("hi", 1.0)?,
-            )
-        }
-    };
+    let mat = matrix_from_args(a)?;
     if a.has_flag("exact") {
         let ai = mat.map(|x| x.round() as i64);
         let (det, metrics) = coord.radic_det_exact_with_metrics(&ai)?;
@@ -268,13 +291,18 @@ fn cmd_scaling(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    a.check_known(&[&COORD_OPTS[..], &["port", "host"]].concat())?;
+    a.check_known(&[&COORD_OPTS[..], &["port", "host", "jobs-dir"]].concat())?;
     let port: u16 = a.get_parse("port", 7171u16)?;
     let host = a.get("host").unwrap_or("127.0.0.1");
+    let jobs_dir = a.get("jobs-dir").unwrap_or("raddet-jobs");
     let coord = build_coordinator(a)?;
-    let handle = Server::new(coord).start(&format!("{host}:{port}"))?;
+    let manager = JobManager::new(JobStore::open(jobs_dir)?, a.get_parse("workers", 0usize)?);
+    let handle = Server::with_jobs(coord, manager).start(&format!("{host}:{port}"))?;
     println!("raddet service listening on {}", handle.addr());
-    println!("protocol: DET m n v1,v2,… | EXACT m n i1,… | PING | QUIT");
+    println!("jobs journal dir: {jobs_dir}");
+    println!(
+        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | PING | QUIT"
+    );
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -300,6 +328,180 @@ fn cmd_query(a: &Args) -> Result<()> {
         );
     }
     client.quit();
+    Ok(())
+}
+
+fn job_store(a: &Args) -> Result<JobStore> {
+    JobStore::open(a.get("jobs-dir").unwrap_or("raddet-jobs"))
+}
+
+fn job_runner(a: &Args) -> Result<JobRunner> {
+    let chunk_budget = match a.get("max-chunks") {
+        None => None,
+        Some(v) => Some(v.parse::<u64>().map_err(|_| {
+            Error::Config(format!("bad value for --max-chunks: {v:?}"))
+        })?),
+    };
+    Ok(JobRunner::new(RunnerConfig {
+        workers: a.get_parse("job-workers", 0usize)?,
+        chunk_budget,
+    }))
+}
+
+/// The input matrix shared by `det` and `job submit`: `--csv FILE`, or
+/// a seeded uniform `--rows × --cols` (one implementation so the two
+/// commands can never diverge on identical arguments).
+fn matrix_from_args(a: &Args) -> Result<MatF64> {
+    match a.get("csv") {
+        Some(path) => mio::read_csv_file(std::path::Path::new(path)),
+        None => {
+            let rows: usize = a.require_parse("rows")?;
+            let cols: usize = a.require_parse("cols")?;
+            let seed: u64 = a.get_parse("seed", 42u64)?;
+            Ok(gen::uniform(
+                &mut TestRng::from_seed(seed),
+                rows,
+                cols,
+                a.get_parse("lo", -1.0)?,
+                a.get_parse("hi", 1.0)?,
+            ))
+        }
+    }
+}
+
+fn report_job_run(a: &Args, out: &crate::jobs::JobOutcome) {
+    println!("{}", out.status.render());
+    let t = out.metrics.total();
+    println!(
+        "  this run: {} chunks, {} terms in {:?} ({:.0} terms/s)",
+        t.chunks,
+        t.terms,
+        out.metrics.elapsed,
+        out.metrics.throughput()
+    );
+    if out.interrupted {
+        println!(
+            "  interrupted — resume with: raddet job resume --id {} --jobs-dir {}",
+            out.status.id,
+            a.get("jobs-dir").unwrap_or("raddet-jobs")
+        );
+    }
+}
+
+fn cmd_job_submit(a: &Args) -> Result<()> {
+    a.check_known(&[
+        "rows", "cols", "csv", "seed", "lo", "hi", "exact", "engine", "jobs-dir", "chunks",
+        "batch", "job-workers", "max-chunks",
+    ])?;
+    let engine = match a.get("engine").unwrap_or("prefix") {
+        "cpu" => JobEngine::CpuLu,
+        "prefix" => JobEngine::Prefix,
+        other => {
+            return Err(Error::Config(format!(
+                "bad --engine {other:?} (jobs support cpu|prefix)"
+            )))
+        }
+    };
+    let mat = matrix_from_args(a)?;
+    let payload = if a.has_flag("exact") {
+        JobPayload::Exact(mat.map(|x| x.round() as i64))
+    } else {
+        JobPayload::F64(mat)
+    };
+    let spec = JobSpec {
+        payload,
+        engine,
+        chunks: a.get_parse("chunks", 32usize)?,
+        batch: a.get_parse("batch", 256usize)?,
+    };
+    let store = job_store(a)?;
+    let id = store.create(&spec)?;
+    println!("job id: {id}");
+    let out = job_runner(a)?.run(&store, &id)?;
+    report_job_run(a, &out);
+    Ok(())
+}
+
+fn cmd_job_status(a: &Args) -> Result<()> {
+    a.check_known(&["id", "jobs-dir"])?;
+    let id: String = a.require_parse("id")?;
+    println!("{}", job_store(a)?.status(&id)?.render());
+    Ok(())
+}
+
+fn cmd_job_resume(a: &Args) -> Result<()> {
+    a.check_known(&["id", "jobs-dir", "job-workers", "max-chunks"])?;
+    let id: String = a.require_parse("id")?;
+    let store = job_store(a)?;
+    let out = job_runner(a)?.run(&store, &id)?;
+    report_job_run(a, &out);
+    Ok(())
+}
+
+fn cmd_job_list(a: &Args) -> Result<()> {
+    a.check_known(&["jobs-dir"])?;
+    let store = job_store(a)?;
+    let ids = store.list()?;
+    if ids.is_empty() {
+        println!("no jobs in {}", store.root().display());
+        return Ok(());
+    }
+    for id in ids {
+        match store.status(&id) {
+            Ok(st) => println!("{}", st.render()),
+            Err(e) => println!("job {id}: unreadable ({e})"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_job_export(a: &Args) -> Result<()> {
+    a.check_known(&["id", "jobs-dir", "out"])?;
+    let id: String = a.require_parse("id")?;
+    let store = job_store(a)?;
+    let job = store.load(&id)?;
+    let status = job.status();
+    let (m, n) = job.spec.shape();
+    let samples: Vec<f64> = job
+        .completed
+        .values()
+        .map(|r| r.micros as f64 * 1e-6)
+        .collect();
+    let mut fields: Vec<(&str, String)> = vec![
+        ("id", format!("\"{}\"", job.id)),
+        ("kind", format!("\"{}\"", job.spec.payload.kind_str())),
+        ("engine", format!("\"{}\"", job.spec.engine.as_str())),
+        ("m", m.to_string()),
+        ("n", n.to_string()),
+        ("chunks_done", status.chunks_done.to_string()),
+        ("chunks_total", status.chunks_total.to_string()),
+        ("terms_done", status.terms_done.to_string()),
+        ("terms_total", status.terms_total.to_string()),
+        ("complete", status.complete.to_string()),
+        ("chunk_seconds", Stats::from_samples(&samples).to_json()),
+    ];
+    match status.value {
+        Some(JobValue::F64(v)) => {
+            fields.push(("det", json_f64(v)));
+            // The bit pattern is the resume-determinism witness the CI
+            // smoke compares across interrupted/uninterrupted runs.
+            fields.push(("det_bits", format!("\"{:016x}\"", v.to_bits())));
+        }
+        Some(JobValue::Exact(v)) => {
+            // i128 exceeds JSON number range; export as strings.
+            fields.push(("det", format!("\"{v}\"")));
+            fields.push(("det_bits", format!("\"{v}\"")));
+        }
+        None => {}
+    }
+    let json = json_object(&fields);
+    match a.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{json}\n"))?;
+            println!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
     Ok(())
 }
 

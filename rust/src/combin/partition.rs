@@ -6,6 +6,7 @@
 //! over the leading chunks so the cover is exact for every `T, k`).
 
 use super::combination_count;
+use super::pascal::PascalTable;
 use crate::Result;
 
 /// A contiguous rank range owned by one processor.
@@ -31,6 +32,24 @@ impl Chunk {
 pub fn partition_ranks(n: u64, m: u64, k: usize) -> Result<Vec<Chunk>> {
     let total = combination_count(n, m)?;
     Ok(partition_total(total, k))
+}
+
+/// Partition an explicit total into `k` chunks whose interior boundaries
+/// are snapped down to sibling-block starts (the prefix engine's block
+/// geometry, [`super::prefix::block_start`]).
+///
+/// This is the **single** block-aligned rounding implementation shared by
+/// the scheduler (`JobSchedule::new_block_aligned`) and the durable jobs
+/// subsystem (`crate::jobs`): both must agree on chunk geometry so a
+/// journaled chunk index always denotes the same rank range. The cover
+/// stays exact and in rank order; chunks may shrink to empty, never
+/// overlap.
+pub fn partition_total_block_aligned(
+    total: u128,
+    k: usize,
+    table: &PascalTable,
+) -> Result<Vec<Chunk>> {
+    super::prefix::align_chunks_to_blocks(table, &partition_total(total, k))
 }
 
 /// Partition an explicit total (used by the coordinator once it has
@@ -97,6 +116,25 @@ mod tests {
     fn single_processor_owns_everything() {
         let chunks = partition_total(56, 1);
         assert_eq!(chunks, vec![Chunk { start: 0, len: 56 }]);
+    }
+
+    #[test]
+    fn block_aligned_partition_is_align_of_plain_partition() {
+        // The shared implementation must be exactly align∘partition — the
+        // scheduler and the jobs subsystem both key chunk indices off it.
+        let (n, m) = (10u64, 4u64);
+        let table = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap();
+        for k in [1usize, 3, 4, 9] {
+            let shared = partition_total_block_aligned(total, k, &table).unwrap();
+            let manual = crate::combin::align_chunks_to_blocks(
+                &table,
+                &partition_total(total, k),
+            )
+            .unwrap();
+            assert_eq!(shared, manual, "k={k}");
+            assert_exact_cover(total, &shared);
+        }
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Chunk leases — one rank chunk evaluated to a *deterministic* partial.
+//!
+//! A lease is the unit of restartable work: given the same matrix, the
+//! same Pascal table and the same [`Chunk`], `run_chunk` always produces
+//! the bitwise-identical partial, because every accumulation inside a
+//! chunk happens in rank order on a single thread. The coordinator's
+//! worker loops execute leases back-to-back in-process; the durable jobs
+//! subsystem ([`crate::jobs`]) executes exactly the same leases but
+//! journals each result, which is what makes an interrupted sweep
+//! resumable without changing the final bits.
+//!
+//! Two runners cover the engine matrix:
+//!
+//! * [`LeaseRunner`] — float path, wrapping either a lane engine
+//!   ([`DetEngine`]: `cpu-lu` batches, XLA handles) or the
+//!   prefix-factored Laplace engine ([`PrefixEngine`]).
+//! * [`ExactLeaseRunner`] — the `i128` twin (per-term Bareiss, or exact
+//!   prefix cofactors shared per sibling block).
+//!
+//! All scratch lives in the runner and is reused across leases, so the
+//! steady-state hot path allocates nothing per chunk.
+//!
+//! Trade-off: lane batches flush at every chunk boundary (a chunk's
+//! partial must not depend on neighbouring chunks, or journaled
+//! partials would not be recomputable). Under work-stealing this means
+//! a claim grain smaller than the batch size yields short batches —
+//! pick `grain ≥ batch` (the CLI default grain 1024 vs batch 256
+//! already does); static schedules are unaffected (one chunk per
+//! worker).
+
+use super::batcher::BatchBuilder;
+use super::engine::{CpuEngine, DetEngine, PrefixEngine};
+use super::metrics::WorkerMetrics;
+use crate::combin::{radic_sign, Chunk, CombinationStream, PascalTable, PrefixBlockStream};
+use crate::linalg::{cofactors_exact, det_bareiss, NeumaierSum};
+use crate::matrix::{MatF64, MatI64};
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// Reusable float-path lease executor.
+pub struct LeaseRunner {
+    inner: Inner,
+}
+
+enum Inner {
+    /// Batched lane engine (cpu-lu or an XLA handle).
+    Lanes {
+        eng: Box<dyn DetEngine + Send>,
+        builder: BatchBuilder,
+    },
+    /// Prefix-factored Laplace engine.
+    Prefix { eng: PrefixEngine },
+}
+
+impl LeaseRunner {
+    /// Wrap an arbitrary lane engine (batch geometry taken from it).
+    pub fn lanes(eng: Box<dyn DetEngine + Send>) -> Self {
+        let builder = BatchBuilder::new(eng.m(), eng.batch());
+        Self { inner: Inner::Lanes { eng, builder } }
+    }
+
+    /// Pure-rust LU lane runner for `(m, batch)`.
+    pub fn cpu(m: usize, batch: usize) -> Self {
+        Self::lanes(Box::new(CpuEngine::new(m, batch.max(1))))
+    }
+
+    /// Prefix-factored runner for m-row jobs.
+    pub fn prefix(m: usize) -> Self {
+        Self { inner: Inner::Prefix { eng: PrefixEngine::new(m) } }
+    }
+
+    /// Engine label (metrics/CLI).
+    pub fn label(&self) -> &'static str {
+        match &self.inner {
+            Inner::Lanes { eng, .. } => eng.label(),
+            Inner::Prefix { .. } => "prefix",
+        }
+    }
+
+    /// Evaluate the rank chunk to its signed partial sum.
+    ///
+    /// Deterministic: terms are accumulated in rank order (Neumaier) on
+    /// this thread only, so equal inputs give equal bits.
+    pub fn run_chunk(
+        &mut self,
+        a: &MatF64,
+        table: &PascalTable,
+        chunk: Chunk,
+    ) -> Result<(f64, WorkerMetrics)> {
+        let mut wm = WorkerMetrics::default();
+        if chunk.len == 0 {
+            return Ok((0.0, wm));
+        }
+        wm.chunks = 1;
+        let value = match &mut self.inner {
+            Inner::Lanes { eng, builder } => {
+                run_chunk_lanes(eng, builder, a, table, chunk, &mut wm)?
+            }
+            Inner::Prefix { eng } => run_chunk_prefix(eng, a, table, chunk, &mut wm)?,
+        };
+        Ok((value, wm))
+    }
+}
+
+fn flush_batch(
+    builder: &mut BatchBuilder,
+    eng: &mut Box<dyn DetEngine + Send>,
+    acc: &mut NeumaierSum,
+    wm: &mut WorkerMetrics,
+) -> Result<()> {
+    if builder.is_empty() {
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let partial = {
+        // finalize() hands back disjoint field borrows (mutable subs
+        // for in-place LU, shared signs).
+        let (subs, signs, _) = builder.finalize();
+        eng.run_batch(subs, signs)?
+    };
+    wm.engine_time += t0.elapsed();
+    wm.batches += 1;
+    acc.add(partial);
+    builder.clear();
+    Ok(())
+}
+
+fn run_chunk_lanes(
+    eng: &mut Box<dyn DetEngine + Send>,
+    builder: &mut BatchBuilder,
+    a: &MatF64,
+    table: &PascalTable,
+    chunk: Chunk,
+    wm: &mut WorkerMetrics,
+) -> Result<f64> {
+    builder.clear();
+    let mut acc = NeumaierSum::new();
+    let mut stream = CombinationStream::new(table, chunk.start, chunk.len)?;
+    // Timing is chunk-granular: a per-term Instant::now() pair costs
+    // more than the gather itself (EXPERIMENTS.md §Perf iteration 1).
+    let mut t0 = Instant::now();
+    while let Some(cols) = stream.next_ref() {
+        builder.push(a, cols);
+        wm.terms += 1;
+        if builder.is_full() {
+            wm.gather_time += t0.elapsed();
+            flush_batch(builder, eng, &mut acc, wm)?;
+            t0 = Instant::now();
+        }
+    }
+    wm.gather_time += t0.elapsed();
+    flush_batch(builder, eng, &mut acc, wm)?;
+    Ok(acc.value())
+}
+
+fn run_chunk_prefix(
+    eng: &mut PrefixEngine,
+    a: &MatF64,
+    table: &PascalTable,
+    chunk: Chunk,
+    wm: &mut WorkerMetrics,
+) -> Result<f64> {
+    let mut acc = NeumaierSum::new();
+    let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
+    let t0 = Instant::now();
+    while let Some(b) = stream.next_block() {
+        let out = eng.run_block(a, b.prefix, b.last_lo, b.last_hi);
+        acc.add(out.partial);
+        wm.terms += out.terms;
+        wm.blocks += 1;
+        if out.fell_back {
+            wm.fallback_blocks += 1;
+        }
+    }
+    wm.engine_time += t0.elapsed();
+    Ok(acc.value())
+}
+
+/// Reusable exact-path (`i128`) lease executor.
+pub struct ExactLeaseRunner {
+    m: usize,
+    use_prefix: bool,
+    /// m×m gather scratch (per-term Bareiss path).
+    scratch: Vec<i64>,
+    /// m×(m−1) shared-prefix gather (prefix path).
+    prefix_buf: Vec<i64>,
+    /// Exact Laplace cofactors of the current prefix.
+    cof: Vec<i128>,
+    /// Minor scratch for [`cofactors_exact`].
+    minor_buf: Vec<i64>,
+}
+
+impl ExactLeaseRunner {
+    /// New runner for m-row jobs; `use_prefix` selects the exact prefix
+    /// cofactor path over per-term Bareiss.
+    pub fn new(m: usize, use_prefix: bool) -> Self {
+        assert!(m >= 1);
+        Self {
+            m,
+            use_prefix,
+            scratch: vec![0i64; m * m],
+            prefix_buf: vec![0i64; m * (m - 1)],
+            cof: vec![0i128; m],
+            minor_buf: Vec::new(),
+        }
+    }
+
+    /// Engine label (metrics/CLI).
+    pub fn label(&self) -> &'static str {
+        if self.use_prefix {
+            "exact-prefix"
+        } else {
+            "exact-bareiss"
+        }
+    }
+
+    /// Evaluate the rank chunk to its exact signed partial (overflow-
+    /// checked). Deterministic: integer addition is exact, so any
+    /// grouping gives the same value; terms still run in rank order.
+    pub fn run_chunk(
+        &mut self,
+        a: &MatI64,
+        table: &PascalTable,
+        chunk: Chunk,
+    ) -> Result<(i128, WorkerMetrics)> {
+        let mut wm = WorkerMetrics::default();
+        if chunk.len == 0 {
+            return Ok((0, wm));
+        }
+        wm.chunks = 1;
+        let value = if self.use_prefix {
+            self.run_chunk_prefix(a, table, chunk, &mut wm)?
+        } else {
+            self.run_chunk_bareiss(a, table, chunk, &mut wm)?
+        };
+        Ok((value, wm))
+    }
+
+    fn run_chunk_bareiss(
+        &mut self,
+        a: &MatI64,
+        table: &PascalTable,
+        chunk: Chunk,
+        wm: &mut WorkerMetrics,
+    ) -> Result<i128> {
+        let m = self.m;
+        let mut acc: i128 = 0;
+        let mut stream = CombinationStream::new(table, chunk.start, chunk.len)?;
+        let t0 = Instant::now();
+        while let Some(cols) = stream.next_ref() {
+            a.gather_cols_into(cols, &mut self.scratch);
+            let det = det_bareiss(&self.scratch, m)?;
+            let signed = if radic_sign(cols) > 0.0 { det } else { -det };
+            acc = acc
+                .checked_add(signed)
+                .ok_or(Error::ExactOverflow("radic sum"))?;
+            wm.terms += 1;
+        }
+        wm.engine_time += t0.elapsed();
+        Ok(acc)
+    }
+
+    /// Exact prefix path: Bareiss-style integer cofactors shared per
+    /// block, `i128` checked dot per sibling. No rank fallback is
+    /// needed — exact arithmetic makes singular-prefix cofactors
+    /// exactly zero.
+    fn run_chunk_prefix(
+        &mut self,
+        a: &MatI64,
+        table: &PascalTable,
+        chunk: Chunk,
+        wm: &mut WorkerMetrics,
+    ) -> Result<i128> {
+        let (m, n) = (self.m, a.cols());
+        let r_const = (m as u64) * (m as u64 + 1) / 2;
+        let mut acc: i128 = 0;
+        let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
+        let t0 = Instant::now();
+        while let Some(b) = stream.next_block() {
+            a.gather_cols_into(b.prefix, &mut self.prefix_buf);
+            cofactors_exact(&self.prefix_buf, m, &mut self.minor_buf, &mut self.cof)?;
+            let s_prefix: u64 = b.prefix.iter().map(|&c| c as u64).sum();
+            let mut negative = (r_const + s_prefix + b.last_lo as u64) % 2 == 1;
+            let data = a.data();
+            for j in b.last_lo..=b.last_hi {
+                let col = (j - 1) as usize;
+                let mut det: i128 = 0;
+                for (i, &c) in self.cof.iter().enumerate() {
+                    let term = c
+                        .checked_mul(data[i * n + col] as i128)
+                        .ok_or(Error::ExactOverflow("prefix dot"))?;
+                    det = det
+                        .checked_add(term)
+                        .ok_or(Error::ExactOverflow("prefix dot"))?;
+                }
+                let signed = if negative { -det } else { det };
+                acc = acc
+                    .checked_add(signed)
+                    .ok_or(Error::ExactOverflow("radic sum"))?;
+                negative = !negative;
+                wm.terms += 1;
+            }
+            wm.blocks += 1;
+        }
+        wm.engine_time += t0.elapsed();
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::combination_count;
+    use crate::linalg::{radic_det_exact, radic_det_seq};
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn chunks_of(total: u128, k: usize) -> Vec<Chunk> {
+        crate::combin::partition_total(total, k)
+    }
+
+    #[test]
+    fn lease_partials_sum_to_sequential() {
+        let a = gen::uniform(&mut TestRng::from_seed(21), 3, 10, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        let table = PascalTable::new(10, 3).unwrap();
+        let total = combination_count(10, 3).unwrap();
+        let makers: [fn(usize) -> LeaseRunner; 2] =
+            [|m| LeaseRunner::cpu(m, 16), LeaseRunner::prefix];
+        for mk in makers {
+            let mut runner = mk(3);
+            let mut sum = NeumaierSum::new();
+            let mut terms = 0u64;
+            for c in chunks_of(total, 5) {
+                let (v, wm) = runner.run_chunk(&a, &table, c).unwrap();
+                sum.add(v);
+                terms += wm.terms;
+            }
+            assert_eq!(terms as u128, total, "{}", runner.label());
+            assert!(
+                (sum.value() - seq).abs() < 1e-9 * seq.abs().max(1.0),
+                "{}: {} vs {seq}",
+                runner.label(),
+                sum.value()
+            );
+        }
+    }
+
+    #[test]
+    fn lease_is_bitwise_deterministic() {
+        let a = gen::uniform(&mut TestRng::from_seed(22), 4, 11, -1.0, 1.0);
+        let table = PascalTable::new(11, 4).unwrap();
+        let chunk = Chunk { start: 37, len: 101 };
+        let makers: [fn(usize) -> LeaseRunner; 2] =
+            [|m| LeaseRunner::cpu(m, 8), LeaseRunner::prefix];
+        for mk in makers {
+            let (v1, _) = mk(4).run_chunk(&a, &table, chunk).unwrap();
+            let (v2, _) = mk(4).run_chunk(&a, &table, chunk).unwrap();
+            // A reused runner must agree with a fresh one.
+            let mut reused = mk(4);
+            reused
+                .run_chunk(&a, &table, Chunk { start: 0, len: 19 })
+                .unwrap();
+            let (v3, _) = reused.run_chunk(&a, &table, chunk).unwrap();
+            assert_eq!(v1.to_bits(), v2.to_bits());
+            assert_eq!(v1.to_bits(), v3.to_bits());
+        }
+    }
+
+    #[test]
+    fn exact_lease_partials_sum_to_reference() {
+        let a = gen::integer(&mut TestRng::from_seed(23), 3, 9, -6, 6);
+        let want = radic_det_exact(&a).unwrap();
+        let table = PascalTable::new(9, 3).unwrap();
+        let total = combination_count(9, 3).unwrap();
+        for use_prefix in [false, true] {
+            let mut runner = ExactLeaseRunner::new(3, use_prefix);
+            let mut acc: i128 = 0;
+            for c in chunks_of(total, 4) {
+                let (v, _) = runner.run_chunk(&a, &table, c).unwrap();
+                acc += v;
+            }
+            assert_eq!(acc, want, "use_prefix={use_prefix}");
+        }
+    }
+
+    #[test]
+    fn empty_chunk_is_identity() {
+        let a = gen::uniform(&mut TestRng::from_seed(24), 2, 6, -1.0, 1.0);
+        let table = PascalTable::new(6, 2).unwrap();
+        let (v, wm) = LeaseRunner::prefix(2)
+            .run_chunk(&a, &table, Chunk { start: 3, len: 0 })
+            .unwrap();
+        assert_eq!(v, 0.0);
+        assert_eq!((wm.terms, wm.chunks), (0, 0));
+    }
+}

@@ -19,16 +19,18 @@
 pub mod batcher;
 pub mod dispatch;
 pub mod engine;
+pub mod lease;
 pub mod metrics;
 pub mod scheduler;
 
 pub use batcher::BatchBuilder;
 pub use engine::{BlockOutcome, CpuEngine, DetEngine, PrefixEngine};
+pub use lease::{ExactLeaseRunner, LeaseRunner};
 pub use metrics::{JobMetrics, WorkerMetrics};
 pub use scheduler::{JobSchedule, Schedule};
 
-use crate::combin::{combination_count, PascalTable, PrefixBlockStream};
-use crate::linalg::{cofactors_exact, det_bareiss, NeumaierSum};
+use crate::combin::{combination_count, PascalTable};
+use crate::linalg::NeumaierSum;
 use crate::matrix::{MatF64, MatI64};
 use crate::runtime::{resolve_artifact_dir, Dtype, Manifest};
 use crate::{Error, Result};
@@ -334,13 +336,7 @@ impl Coordinator {
             for w in 0..workers {
                 let table = &table;
                 let job = &job;
-                handles.push(scope.spawn(move || {
-                    if use_prefix {
-                        exact_prefix_worker_loop(w, a, table, job)
-                    } else {
-                        exact_worker_loop(w, a, table, job)
-                    }
-                }));
+                handles.push(scope.spawn(move || exact_worker_loop(w, a, table, job, use_prefix)));
             }
             handles
                 .into_iter()
@@ -361,66 +357,30 @@ impl Coordinator {
     }
 }
 
-/// One worker: claim chunks, stream combinations, batch, evaluate.
+/// One worker: claim chunks, execute each as a lease
+/// ([`LeaseRunner::run_chunk`] — the same unit the durable jobs
+/// subsystem journals), merge chunk partials in claim order.
 fn worker_loop(
     w: usize,
-    mut eng: Box<dyn DetEngine + Send>,
+    eng: Box<dyn DetEngine + Send>,
     a: &MatF64,
     table: &PascalTable,
     job: &JobSchedule,
 ) -> Result<(NeumaierSum, WorkerMetrics)> {
-    let m = a.rows();
-    let mut builder = BatchBuilder::new(m, eng.batch());
+    let mut runner = LeaseRunner::lanes(eng);
     let mut acc = NeumaierSum::new();
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
-
-    let flush = |builder: &mut BatchBuilder,
-                 acc: &mut NeumaierSum,
-                 wm: &mut WorkerMetrics,
-                 eng: &mut Box<dyn DetEngine + Send>|
-     -> Result<()> {
-            if builder.is_empty() {
-                return Ok(());
-            }
-            let t0 = Instant::now();
-            let partial = {
-                // finalize() hands back disjoint field borrows
-                // (mutable subs for in-place LU, shared signs).
-                let (subs, signs, _) = builder.finalize();
-                eng.run_batch(subs, signs)?
-            };
-            wm.engine_time += t0.elapsed();
-            wm.batches += 1;
-            acc.add(partial);
-            builder.clear();
-            Ok(())
-        };
-
     while let Some(chunk) = src.next_chunk() {
-        wm.chunks += 1;
-        let mut stream = crate::combin::CombinationStream::new(table, chunk.start, chunk.len)?;
-        // Timing is chunk-granular: a per-term Instant::now() pair costs
-        // more than the gather itself (measured ~40% of job time on the
-        // baseline — see EXPERIMENTS.md §Perf).
-        let mut t0 = Instant::now();
-        while let Some(cols) = stream.next_ref() {
-            builder.push(a, cols);
-            wm.terms += 1;
-            if builder.is_full() {
-                wm.gather_time += t0.elapsed();
-                flush(&mut builder, &mut acc, &mut wm, &mut eng)?;
-                t0 = Instant::now();
-            }
-        }
-        wm.gather_time += t0.elapsed();
+        let (partial, cm) = runner.run_chunk(a, table, chunk)?;
+        acc.add(partial);
+        wm.merge(&cm);
     }
-    flush(&mut builder, &mut acc, &mut wm, &mut eng)?;
     Ok((acc, wm))
 }
 
-/// Prefix-engine worker: claim block-aligned chunks, walk sibling
-/// blocks, one factorization + O(m) dots per block.
+/// Prefix-engine worker: block-aligned chunk leases, one factorization
+/// + O(m) dots per sibling block.
 ///
 /// The gather/factorize/dot phases are fused per block, so all time is
 /// booked as `engine_time` (`gather_time` stays 0 on this path).
@@ -430,106 +390,38 @@ fn prefix_worker_loop(
     table: &PascalTable,
     job: &JobSchedule,
 ) -> Result<(NeumaierSum, WorkerMetrics)> {
-    let mut eng = PrefixEngine::new(a.rows());
+    let mut runner = LeaseRunner::prefix(a.rows());
     let mut acc = NeumaierSum::new();
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
     while let Some(chunk) = src.next_chunk() {
-        wm.chunks += 1;
-        let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
-        let t0 = Instant::now();
-        while let Some(b) = stream.next_block() {
-            let out = eng.run_block(a, b.prefix, b.last_lo, b.last_hi);
-            acc.add(out.partial);
-            wm.terms += out.terms;
-            wm.blocks += 1;
-            if out.fell_back {
-                wm.fallback_blocks += 1;
-            }
-        }
-        wm.engine_time += t0.elapsed();
+        let (partial, cm) = runner.run_chunk(a, table, chunk)?;
+        acc.add(partial);
+        wm.merge(&cm);
     }
     Ok((acc, wm))
 }
 
-/// Exact-path worker: Bareiss per combination, `i128` partial.
+/// Exact-path worker: chunk leases on the `i128` twin
+/// ([`ExactLeaseRunner`] — per-term Bareiss, or exact prefix cofactors
+/// shared per sibling block when `use_prefix`).
 fn exact_worker_loop(
     w: usize,
     a: &MatI64,
     table: &PascalTable,
     job: &JobSchedule,
+    use_prefix: bool,
 ) -> Result<(i128, WorkerMetrics)> {
-    let m = a.rows();
-    let mut scratch = vec![0i64; m * m];
+    let mut runner = ExactLeaseRunner::new(a.rows(), use_prefix);
     let mut acc: i128 = 0;
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
     while let Some(chunk) = src.next_chunk() {
-        wm.chunks += 1;
-        let mut stream = crate::combin::CombinationStream::new(table, chunk.start, chunk.len)?;
-        let t0 = Instant::now();
-        while let Some(cols) = stream.next_ref() {
-            a.gather_cols_into(cols, &mut scratch);
-            let det = det_bareiss(&scratch, m)?;
-            let signed = if crate::combin::radic_sign(cols) > 0.0 { det } else { -det };
-            acc = acc
-                .checked_add(signed)
-                .ok_or(Error::ExactOverflow("radic sum"))?;
-            wm.terms += 1;
-        }
-        wm.engine_time += t0.elapsed();
-    }
-    Ok((acc, wm))
-}
-
-/// Exact prefix worker: Bareiss-style integer cofactors shared per
-/// block, `i128` checked dot per sibling. No rank fallback is needed —
-/// exact arithmetic makes singular-prefix cofactors exactly zero.
-fn exact_prefix_worker_loop(
-    w: usize,
-    a: &MatI64,
-    table: &PascalTable,
-    job: &JobSchedule,
-) -> Result<(i128, WorkerMetrics)> {
-    let (m, n) = (a.rows(), a.cols());
-    let r_const = (m as u64) * (m as u64 + 1) / 2;
-    let mut prefix_buf = vec![0i64; m * (m - 1)];
-    let mut cof = vec![0i128; m];
-    let mut minor_buf: Vec<i64> = Vec::new();
-    let mut acc: i128 = 0;
-    let mut wm = WorkerMetrics::default();
-    let mut src = job.source(w);
-    while let Some(chunk) = src.next_chunk() {
-        wm.chunks += 1;
-        let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
-        let t0 = Instant::now();
-        while let Some(b) = stream.next_block() {
-            a.gather_cols_into(b.prefix, &mut prefix_buf);
-            cofactors_exact(&prefix_buf, m, &mut minor_buf, &mut cof)?;
-            let s_prefix: u64 = b.prefix.iter().map(|&c| c as u64).sum();
-            let mut negative = (r_const + s_prefix + b.last_lo as u64) % 2 == 1;
-            let data = a.data();
-            for j in b.last_lo..=b.last_hi {
-                let col = (j - 1) as usize;
-                let mut det: i128 = 0;
-                for (i, &c) in cof.iter().enumerate() {
-                    let term = c
-                        .checked_mul(data[i * n + col] as i128)
-                        .ok_or(Error::ExactOverflow("prefix dot"))?;
-                    det = det
-                        .checked_add(term)
-                        .ok_or(Error::ExactOverflow("prefix dot"))?;
-                }
-                let signed = if negative { -det } else { det };
-                acc = acc
-                    .checked_add(signed)
-                    .ok_or(Error::ExactOverflow("radic sum"))?;
-                negative = !negative;
-                wm.terms += 1;
-            }
-            wm.blocks += 1;
-        }
-        wm.engine_time += t0.elapsed();
+        let (partial, cm) = runner.run_chunk(a, table, chunk)?;
+        acc = acc
+            .checked_add(partial)
+            .ok_or(Error::ExactOverflow("radic sum"))?;
+        wm.merge(&cm);
     }
     Ok((acc, wm))
 }

@@ -9,7 +9,7 @@
 //!   compares the two.
 
 use crate::combin::{
-    align_chunks_to_blocks, block_aligned_grain, partition_total, Chunk, PascalTable,
+    block_aligned_grain, partition_total, partition_total_block_aligned, Chunk, PascalTable,
 };
 use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -85,9 +85,10 @@ impl JobSchedule {
 
     /// Plan a job with chunk boundaries aligned to sibling-block starts
     /// — the prefix engine's schedule. Static chunks are snapped to
-    /// block starts ([`align_chunks_to_blocks`]), so no worker ever
-    /// splits (and re-factorizes) another worker's block; the stealing
-    /// grain is rounded up to whole-block multiples
+    /// block starts ([`partition_total_block_aligned`], the same shared
+    /// implementation the durable jobs subsystem plans with), so no
+    /// worker ever splits (and re-factorizes) another worker's block;
+    /// the stealing grain is rounded up to whole-block multiples
     /// ([`block_aligned_grain`]) so at most the first/last block of a
     /// claim is truncated.
     pub fn new_block_aligned(
@@ -99,7 +100,7 @@ impl JobSchedule {
         let (schedule, chunks) = match schedule {
             Schedule::Static => (
                 schedule,
-                align_chunks_to_blocks(table, &partition_total(total, workers))?,
+                partition_total_block_aligned(total, workers, table)?,
             ),
             Schedule::WorkStealing { grain } => (
                 Schedule::WorkStealing {

@@ -56,6 +56,10 @@ pub enum Error {
     /// Service protocol violation.
     Protocol(String),
 
+    /// Durable job / journal problem (unknown id, corrupt journal,
+    /// concurrent-run conflict).
+    Job(String),
+
     /// I/O error.
     Io(std::io::Error),
 
@@ -83,6 +87,7 @@ impl std::fmt::Display for Error {
             Error::Xla(s) => write!(f, "xla: {s}"),
             Error::ExactOverflow(what) => write!(f, "exact arithmetic overflow in {what}"),
             Error::Protocol(s) => write!(f, "protocol: {s}"),
+            Error::Job(s) => write!(f, "job: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Config(s) => write!(f, "config: {s}"),
         }

@@ -1,0 +1,644 @@
+//! Append-only, checksummed, fsync'd job journal.
+//!
+//! One text file per job (trivially inspectable with `cat`, same
+//! debuggability policy as the wire protocol). Line 1 is a fixed magic
+//! header; every subsequent line is one record, `<body> <fnv1a64(body)
+//! as 16 hex>`:
+//!
+//! ```text
+//! raddet-job-journal v1
+//! SPEC <f64|exact> <cpu|prefix> <batch> <chunks> <m> <n> <v1,v2,…> <crc>
+//! CHUNK <index> <terms> <micros> <value> <crc>
+//! DONE <terms> <value> <crc>
+//! ```
+//!
+//! Float values travel as 16-hex-digit IEEE-754 bit patterns, so a
+//! journaled partial replays to the *identical* f64 — the foundation of
+//! the subsystem's bitwise resume guarantee.
+//!
+//! Crash safety: records are appended in one write and fsync'd
+//! (`sync_data`) before the runner considers the chunk durable. On
+//! replay, a corrupt or incomplete **final** line is treated as a torn
+//! write — ignored, and truncated away when the journal is reopened for
+//! append. A corrupt *interior* record is real damage and fails the
+//! replay loudly.
+
+use super::{ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
+use crate::matrix::Mat;
+use crate::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// First line of every journal file.
+pub const MAGIC: &str = "raddet-job-journal v1";
+
+/// FNV-1a 64-bit — tiny, dependency-free record checksum.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One journal record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// The job spec (always the first record; written once at create).
+    Spec(JobSpec),
+    /// A completed chunk lease.
+    Chunk {
+        /// Index into the spec's deterministic chunk plan.
+        index: u64,
+        /// The journaled partial.
+        rec: ChunkRecord,
+    },
+    /// Terminal marker: all chunks composed.
+    Done {
+        /// Total terms swept (must equal `C(n,m)`).
+        terms: u128,
+        /// The composed determinant.
+        value: JobValue,
+    },
+}
+
+fn encode_body(rec: &Record) -> String {
+    match rec {
+        Record::Spec(spec) => {
+            let (m, n) = spec.shape();
+            let vals = match &spec.payload {
+                JobPayload::F64(a) => a
+                    .data()
+                    .iter()
+                    .map(|v| format!("{:016x}", v.to_bits()))
+                    .collect::<Vec<_>>()
+                    .join(","),
+                JobPayload::Exact(a) => a
+                    .data()
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            };
+            format!(
+                "SPEC {} {} {} {} {m} {n} {vals}",
+                spec.payload.kind_str(),
+                spec.engine.as_str(),
+                spec.batch,
+                spec.chunks
+            )
+        }
+        Record::Chunk { index, rec } => format!(
+            "CHUNK {index} {} {} {}",
+            rec.terms,
+            rec.micros,
+            rec.value.encode()
+        ),
+        Record::Done { terms, value } => format!("DONE {terms} {}", value.encode()),
+    }
+}
+
+fn bad(what: &str) -> Error {
+    Error::Job(format!("journal: {what}"))
+}
+
+fn parse_u<T: std::str::FromStr>(tok: Option<&str>, what: &str) -> Result<T> {
+    tok.ok_or_else(|| bad(&format!("missing {what}")))?
+        .parse()
+        .map_err(|_| bad(&format!("bad {what}")))
+}
+
+/// Verify the trailing checksum and hand back the record body. Every
+/// line is hashed exactly once — the body parsers below assume a
+/// verified body.
+fn verify_crc(line: &str) -> Result<&str> {
+    let (body, crc_tok) = line
+        .rsplit_once(' ')
+        .ok_or_else(|| bad("record without checksum"))?;
+    let want = u64::from_str_radix(crc_tok, 16).map_err(|_| bad("unparseable checksum"))?;
+    if fnv1a64(body.as_bytes()) != want {
+        return Err(bad("checksum mismatch"));
+    }
+    Ok(body)
+}
+
+fn parse_record(line: &str) -> Result<Record> {
+    parse_record_body(verify_crc(line)?)
+}
+
+fn parse_record_body(body: &str) -> Result<Record> {
+    let mut toks = body.split(' ');
+    match toks.next() {
+        Some("SPEC") => {
+            let kind = toks.next().ok_or_else(|| bad("missing kind"))?.to_string();
+            let engine = JobEngine::parse(toks.next().ok_or_else(|| bad("missing engine"))?)?;
+            let batch: usize = parse_u(toks.next(), "batch")?;
+            let chunks: usize = parse_u(toks.next(), "chunks")?;
+            let m: usize = parse_u(toks.next(), "m")?;
+            let n: usize = parse_u(toks.next(), "n")?;
+            let vals = toks.next().ok_or_else(|| bad("missing values"))?;
+            if toks.next().is_some() {
+                return Err(bad("trailing SPEC tokens"));
+            }
+            let vtoks: Vec<&str> = vals.split(',').collect();
+            if vtoks.len() != m * n {
+                return Err(bad("value count mismatch"));
+            }
+            let payload = match kind.as_str() {
+                "f64" => {
+                    let data = vtoks
+                        .iter()
+                        .map(|t| {
+                            u64::from_str_radix(t, 16)
+                                .map(f64::from_bits)
+                                .map_err(|_| bad("bad f64 bits"))
+                        })
+                        .collect::<Result<Vec<f64>>>()?;
+                    JobPayload::F64(Mat::from_vec(m, n, data)?)
+                }
+                "exact" => {
+                    let data = vtoks
+                        .iter()
+                        .map(|t| t.parse::<i64>().map_err(|_| bad("bad i64 value")))
+                        .collect::<Result<Vec<i64>>>()?;
+                    JobPayload::Exact(Mat::from_vec(m, n, data)?)
+                }
+                _ => return Err(bad("unknown payload kind")),
+            };
+            Ok(Record::Spec(JobSpec { payload, engine, chunks, batch }))
+        }
+        Some("CHUNK") => {
+            let index: u64 = parse_u(toks.next(), "chunk index")?;
+            let terms: u64 = parse_u(toks.next(), "chunk terms")?;
+            let micros: u64 = parse_u(toks.next(), "chunk micros")?;
+            let value = JobValue::decode(toks.next().ok_or_else(|| bad("missing value"))?)?;
+            if toks.next().is_some() {
+                return Err(bad("trailing CHUNK tokens"));
+            }
+            Ok(Record::Chunk { index, rec: ChunkRecord { value, terms, micros } })
+        }
+        Some("DONE") => {
+            let terms: u128 = parse_u(toks.next(), "done terms")?;
+            let value = JobValue::decode(toks.next().ok_or_else(|| bad("missing value"))?)?;
+            if toks.next().is_some() {
+                return Err(bad("trailing DONE tokens"));
+            }
+            Ok(Record::Done { terms, value })
+        }
+        _ => Err(bad("unknown record tag")),
+    }
+}
+
+/// SPEC header without the matrix payload — everything the status path
+/// needs to reproduce the chunk plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecMeta {
+    /// Exact (`i128`) payload vs float.
+    pub exact: bool,
+    /// Engine family.
+    pub engine: JobEngine,
+    /// Lane batch size.
+    pub batch: usize,
+    /// Target chunk count.
+    pub chunks: usize,
+    /// Matrix rows.
+    pub m: usize,
+    /// Matrix columns.
+    pub n: usize,
+}
+
+/// A record with the SPEC matrix payload left unparsed (checksummed but
+/// not decoded) — see [`Journal::replay_meta`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetaRecord {
+    /// SPEC header.
+    Spec(SpecMeta),
+    /// A completed chunk lease (parsed in full).
+    Chunk {
+        /// Index into the chunk plan.
+        index: u64,
+        /// The journaled partial.
+        rec: ChunkRecord,
+    },
+    /// Terminal marker (parsed in full).
+    Done {
+        /// Total terms swept.
+        terms: u128,
+        /// The composed determinant.
+        value: JobValue,
+    },
+}
+
+fn parse_record_meta(line: &str) -> Result<MetaRecord> {
+    let body = verify_crc(line)?;
+    if !body.starts_with("SPEC ") {
+        // CHUNK/DONE are cheap — parse them in full via the one shared
+        // body parser so the two replay modes cannot drift.
+        return match parse_record_body(body)? {
+            Record::Chunk { index, rec } => Ok(MetaRecord::Chunk { index, rec }),
+            Record::Done { terms, value } => Ok(MetaRecord::Done { terms, value }),
+            Record::Spec(_) => unreachable!("body does not start with SPEC"),
+        };
+    }
+    let mut toks = body.split(' ');
+    let _tag = toks.next();
+    let kind = toks.next().ok_or_else(|| bad("missing kind"))?;
+    let exact = match kind {
+        "f64" => false,
+        "exact" => true,
+        _ => return Err(bad("unknown payload kind")),
+    };
+    let engine = JobEngine::parse(toks.next().ok_or_else(|| bad("missing engine"))?)?;
+    let batch: usize = parse_u(toks.next(), "batch")?;
+    let chunks: usize = parse_u(toks.next(), "chunks")?;
+    let m: usize = parse_u(toks.next(), "m")?;
+    let n: usize = parse_u(toks.next(), "n")?;
+    if toks.next().is_none() {
+        return Err(bad("missing values"));
+    }
+    // Same strictness as the full parser: a SPEC body with extra
+    // tokens must fail here too, or status and resume would disagree
+    // about whether a journal is corrupt.
+    if toks.next().is_some() {
+        return Err(bad("trailing SPEC tokens"));
+    }
+    Ok(MetaRecord::Spec(SpecMeta { exact, engine, batch, chunks, m, n }))
+}
+
+/// Replay raw journal bytes through `parse` → `(records, valid_byte_len)`.
+///
+/// `valid_byte_len` is where the last intact record ends; anything past
+/// it is a torn tail to be truncated before appending.
+fn replay_bytes_with<R>(
+    data: &[u8],
+    parse: impl Fn(&str) -> Result<R>,
+    expect_magic: bool,
+) -> Result<(Vec<R>, u64)> {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    let mut valid = 0usize;
+    let mut first = expect_magic;
+    while pos < data.len() {
+        let Some(rel) = data[pos..].iter().position(|&b| b == b'\n') else {
+            break; // torn tail without newline
+        };
+        let end = pos + rel;
+        let is_final = end + 1 >= data.len();
+        let Ok(line) = std::str::from_utf8(&data[pos..end]) else {
+            if is_final {
+                break; // torn non-UTF8 tail
+            }
+            return Err(bad(&format!("non-UTF8 record at byte {pos}")));
+        };
+        if first {
+            if line != MAGIC {
+                return Err(bad("missing or wrong magic header"));
+            }
+            first = false;
+        } else {
+            match parse(line) {
+                Ok(r) => records.push(r),
+                // A bad *final* record is a torn write; anything earlier
+                // is real corruption.
+                Err(_) if is_final => break,
+                Err(e) => {
+                    return Err(bad(&format!("corrupt record at byte {pos}: {e}")));
+                }
+            }
+        }
+        valid = end + 1;
+        pos = end + 1;
+    }
+    if first {
+        return Err(bad("missing or wrong magic header"));
+    }
+    Ok((records, valid as u64))
+}
+
+fn replay_bytes(data: &[u8]) -> Result<(Vec<Record>, u64)> {
+    replay_bytes_with(data, parse_record, true)
+}
+
+/// An open journal file positioned for appends.
+pub struct Journal {
+    file: File,
+}
+
+impl Journal {
+    /// Create a fresh journal at `path` (fails if it exists) and write
+    /// the magic header plus the SPEC record, fsync'd. The parent
+    /// directory is fsync'd too (best-effort on platforms where
+    /// directories can't be opened), so the new *name* survives power
+    /// loss along with the data — the returned job id must stay
+    /// resolvable after a crash.
+    pub fn create(path: &Path, spec: &JobSpec) -> Result<Journal> {
+        let mut file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        file.write_all(format!("{MAGIC}\n").as_bytes())?;
+        let mut j = Journal { file };
+        j.append(&Record::Spec(spec.clone()))?;
+        j.file.sync_all()?;
+        if let Some(parent) = path.parent() {
+            if let Ok(dir) = File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+        Ok(j)
+    }
+
+    /// Replay a journal read-only.
+    pub fn replay(path: &Path) -> Result<Vec<Record>> {
+        let data = std::fs::read(path)?;
+        Ok(replay_bytes(&data)?.0)
+    }
+
+    /// Replay record *metadata* only: CHUNK/DONE in full, but the SPEC
+    /// matrix payload (megabytes on production-sized jobs) is
+    /// checksummed without being decoded. Status polling uses this.
+    pub fn replay_meta(path: &Path) -> Result<Vec<MetaRecord>> {
+        let data = std::fs::read(path)?;
+        Ok(replay_bytes_with(&data, parse_record_meta, true)?.0)
+    }
+
+    /// Read the journal's immutable head — magic line + SPEC record —
+    /// returning the [`SpecMeta`] and the byte offset where tail
+    /// records begin. The SPEC line is hashed once here; callers cache
+    /// the result (the head never changes after create) and poll with
+    /// [`Self::replay_tail`].
+    pub fn read_spec_meta(path: &Path) -> Result<(SpecMeta, u64)> {
+        let mut reader = BufReader::new(File::open(path)?);
+        let mut magic = String::new();
+        let n1 = reader.read_line(&mut magic)?;
+        if magic.strip_suffix('\n') != Some(MAGIC) {
+            return Err(bad("missing or wrong magic header"));
+        }
+        let mut spec_line = String::new();
+        let n2 = reader.read_line(&mut spec_line)?;
+        let line = spec_line
+            .strip_suffix('\n')
+            .ok_or_else(|| bad("journal has no complete SPEC record"))?;
+        match parse_record_meta(line)? {
+            MetaRecord::Spec(meta) => Ok((meta, (n1 + n2) as u64)),
+            _ => Err(bad("first record is not SPEC")),
+        }
+    }
+
+    /// Replay CHUNK/DONE metadata from byte `offset` — the tail-begin
+    /// offset [`Self::read_spec_meta`] returned — without touching the
+    /// head. Torn-tail semantics identical to the full replays.
+    pub fn replay_tail(path: &Path, offset: u64) -> Result<Vec<MetaRecord>> {
+        let mut file = File::open(path)?;
+        file.seek(SeekFrom::Start(offset))?;
+        let mut data = Vec::new();
+        file.read_to_end(&mut data)?;
+        Ok(replay_bytes_with(&data, parse_record_meta, false)?.0)
+    }
+
+    /// Open for append: replay, truncate any torn tail, position at the
+    /// end. Returns the journal plus the replayed records.
+    pub fn open_append(path: &Path) -> Result<(Journal, Vec<Record>)> {
+        let data = std::fs::read(path)?;
+        let (records, valid) = replay_bytes(&data)?;
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        if valid < data.len() as u64 {
+            file.set_len(valid)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(valid))?;
+        Ok((Journal { file }, records))
+    }
+
+    /// Append one record and fsync it. The record is durable when this
+    /// returns.
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        let body = encode_body(rec);
+        let line = format!("{body} {:016x}\n", fnv1a64(body.as_bytes()));
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        crate::testkit::scratch_dir(&format!("journal-{tag}")).join("j.journal")
+    }
+
+    fn sample_spec() -> JobSpec {
+        JobSpec {
+            payload: JobPayload::F64(gen::uniform(
+                &mut TestRng::from_seed(5),
+                2,
+                5,
+                -1.0,
+                1.0,
+            )),
+            engine: JobEngine::Prefix,
+            chunks: 4,
+            batch: 16,
+        }
+    }
+
+    #[test]
+    fn create_append_replay_roundtrip() {
+        let path = tmp("roundtrip");
+        let spec = sample_spec();
+        let mut j = Journal::create(&path, &spec).unwrap();
+        let c0 = Record::Chunk {
+            index: 0,
+            rec: ChunkRecord { value: JobValue::F64(-1.25e-3), terms: 3, micros: 42 },
+        };
+        let c1 = Record::Chunk {
+            index: 1,
+            rec: ChunkRecord { value: JobValue::F64(7.5), terms: 7, micros: 9 },
+        };
+        j.append(&c0).unwrap();
+        j.append(&c1).unwrap();
+        let records = Journal::replay(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0], Record::Spec(spec));
+        assert_eq!(records[1], c0);
+        assert_eq!(records[2], c1);
+    }
+
+    #[test]
+    fn exact_spec_roundtrips() {
+        let path = tmp("exact");
+        let spec = JobSpec {
+            payload: JobPayload::Exact(gen::integer(
+                &mut TestRng::from_seed(6),
+                3,
+                7,
+                -9,
+                9,
+            )),
+            engine: JobEngine::CpuLu,
+            chunks: 3,
+            batch: 8,
+        };
+        Journal::create(&path, &spec).unwrap();
+        let records = Journal::replay(&path).unwrap();
+        assert_eq!(records, vec![Record::Spec(spec)]);
+    }
+
+    #[test]
+    fn meta_replay_matches_full_replay() {
+        let path = tmp("meta");
+        let spec = sample_spec();
+        let mut j = Journal::create(&path, &spec).unwrap();
+        let c = Record::Chunk {
+            index: 2,
+            rec: ChunkRecord { value: JobValue::F64(-0.5), terms: 11, micros: 3 },
+        };
+        let d = Record::Done { terms: 11, value: JobValue::F64(-0.5) };
+        j.append(&c).unwrap();
+        j.append(&d).unwrap();
+        let meta = Journal::replay_meta(&path).unwrap();
+        assert_eq!(meta.len(), 3);
+        match &meta[0] {
+            MetaRecord::Spec(s) => {
+                assert!(!s.exact);
+                assert_eq!(s.engine, JobEngine::Prefix);
+                assert_eq!((s.batch, s.chunks, s.m, s.n), (16, 4, 2, 5));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            meta[1],
+            MetaRecord::Chunk {
+                index: 2,
+                rec: ChunkRecord { value: JobValue::F64(-0.5), terms: 11, micros: 3 }
+            }
+        );
+        assert_eq!(meta[2], MetaRecord::Done { terms: 11, value: JobValue::F64(-0.5) });
+        // Meta replay shares torn-tail semantics with the full replay.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"CHUNK torn").unwrap();
+        }
+        assert_eq!(Journal::replay_meta(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn head_tail_split_matches_full_meta_replay() {
+        let path = tmp("head-tail");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        for i in 0..3u64 {
+            j.append(&Record::Chunk {
+                index: i,
+                rec: ChunkRecord { value: JobValue::F64(i as f64), terms: 2, micros: 1 },
+            })
+            .unwrap();
+        }
+        let (meta, offset) = Journal::read_spec_meta(&path).unwrap();
+        assert_eq!((meta.m, meta.n), (2, 5));
+        let tail = Journal::replay_tail(&path, offset).unwrap();
+        let full = Journal::replay_meta(&path).unwrap();
+        assert_eq!(tail.as_slice(), &full[1..], "tail == full minus SPEC");
+        // Tail replay shares torn-tail tolerance.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"CHUNK torn").unwrap();
+        }
+        assert_eq!(Journal::replay_tail(&path, offset).unwrap().len(), 3);
+        // Empty tail (fresh journal) is fine.
+        let fresh = tmp("head-tail-fresh");
+        Journal::create(&fresh, &sample_spec()).unwrap();
+        let (_, off2) = Journal::read_spec_meta(&fresh).unwrap();
+        assert!(Journal::replay_tail(&fresh, off2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_tail_is_ignored_and_truncated() {
+        let path = tmp("torn");
+        let spec = sample_spec();
+        let mut j = Journal::create(&path, &spec).unwrap();
+        j.append(&Record::Chunk {
+            index: 0,
+            rec: ChunkRecord { value: JobValue::F64(1.0), terms: 2, micros: 1 },
+        })
+        .unwrap();
+        drop(j);
+        // Simulate a crash mid-append: partial record, no newline.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"CHUNK 1 99 7 f64:3ff00").unwrap();
+        }
+        let records = Journal::replay(&path).unwrap();
+        assert_eq!(records.len(), 2, "torn tail must not surface");
+        // Reopen-for-append truncates and keeps working.
+        let (mut j2, records2) = Journal::open_append(&path).unwrap();
+        assert_eq!(records2.len(), 2);
+        j2.append(&Record::Chunk {
+            index: 1,
+            rec: ChunkRecord { value: JobValue::F64(2.0), terms: 4, micros: 2 },
+        })
+        .unwrap();
+        assert_eq!(Journal::replay(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn torn_tail_with_newline_is_ignored() {
+        let path = tmp("torn-nl");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        j.append(&Record::Chunk {
+            index: 0,
+            rec: ChunkRecord { value: JobValue::F64(1.0), terms: 2, micros: 1 },
+        })
+        .unwrap();
+        drop(j);
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"CHUNK 1 bogus line\n").unwrap();
+        }
+        assert_eq!(Journal::replay(&path).unwrap().len(), 2);
+        let (_, records) = Journal::open_append(&path).unwrap();
+        assert_eq!(records.len(), 2);
+    }
+
+    #[test]
+    fn interior_corruption_fails_loudly() {
+        let path = tmp("corrupt");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        for i in 0..3u64 {
+            j.append(&Record::Chunk {
+                index: i,
+                rec: ChunkRecord { value: JobValue::F64(i as f64), terms: 1, micros: 0 },
+            })
+            .unwrap();
+        }
+        drop(j);
+        // Flip one byte inside the *second* chunk record (not the tail).
+        let mut data = std::fs::read(&path).unwrap();
+        let text = String::from_utf8(data.clone()).unwrap();
+        let off = text.match_indices("CHUNK").nth(1).unwrap().0 + 6;
+        data[off] ^= 0x01;
+        std::fs::write(&path, &data).unwrap();
+        let err = Journal::replay(&path).unwrap_err();
+        assert!(err.to_string().contains("journal"), "{err}");
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"not a journal\nSPEC whatever 0\n").unwrap();
+        assert!(Journal::replay(&path).is_err());
+        let empty = tmp("magic-empty");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(Journal::replay(&empty).is_err());
+    }
+
+    #[test]
+    fn create_refuses_to_clobber() {
+        let path = tmp("clobber");
+        Journal::create(&path, &sample_spec()).unwrap();
+        assert!(Journal::create(&path, &sample_spec()).is_err());
+    }
+}

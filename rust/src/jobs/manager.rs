@@ -1,0 +1,362 @@
+//! Job manager — background execution of durable jobs behind the TCP
+//! service's `JOB SUBMIT / STATUS / WAIT / CANCEL / RESUME` verbs.
+//!
+//! One manager owns one [`JobStore`] and tracks which jobs currently
+//! have a live runner thread. The journal stays the source of truth for
+//! progress (status replays it); the manager only adds the transient
+//! running/paused distinction and the stop flags that make `CANCEL`
+//! cooperative: a cancelled job finishes its in-flight chunks, journals
+//! them, and can be resumed later.
+
+use super::runner::{JobRunner, RunnerConfig};
+use super::store::{JobStatus, JobStore};
+use super::{JobEngine, JobPayload, JobSpec};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The one capacity gate: live (not-done) handles vs the cap. Both the
+/// submit fast-fail and the spawn-time check go through here.
+fn check_capacity(jobs: &HashMap<String, Handle>, max_concurrent: usize) -> Result<()> {
+    let live = jobs
+        .values()
+        .filter(|h| !h.done.load(Ordering::SeqCst))
+        .count();
+    if live >= max_concurrent {
+        return Err(Error::Job(format!(
+            "too many running jobs ({live}); wait for one to finish or cancel one"
+        )));
+    }
+    Ok(())
+}
+
+/// Transient server-side view of one job's runner thread.
+struct Handle {
+    stop: Arc<AtomicBool>,
+    done: Arc<AtomicBool>,
+    /// Terminal runner error, if the thread failed (surfaced by the
+    /// next status/wait call).
+    error: Arc<Mutex<Option<String>>>,
+}
+
+/// Background job execution over a shared [`JobStore`].
+pub struct JobManager {
+    store: JobStore,
+    runner: RunnerConfig,
+    /// Default chunk count for submitted specs (resume reads the count
+    /// from the journal, so this only shapes *new* jobs).
+    default_chunks: usize,
+    /// Default lane batch for submitted specs (float cpu engine).
+    default_batch: usize,
+    /// Cap on simultaneously *running* jobs (each is one runner thread
+    /// plus its per-job worker pool) — a client hammering `JOB SUBMIT`
+    /// must not exhaust server threads.
+    max_concurrent: usize,
+    jobs: Mutex<HashMap<String, Handle>>,
+}
+
+impl JobManager {
+    /// New manager over `store`; `workers` bounds each job's runner
+    /// concurrency (0 ⇒ available parallelism). At most 8 jobs run
+    /// simultaneously by default — tune with
+    /// [`Self::with_max_concurrent`].
+    pub fn new(store: JobStore, workers: usize) -> Self {
+        Self {
+            store,
+            runner: RunnerConfig { workers, chunk_budget: None },
+            default_chunks: 32,
+            default_batch: 256,
+            max_concurrent: 8,
+            jobs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Override the cap on simultaneously running jobs (0 ⇒ reject all
+    /// background runs).
+    pub fn with_max_concurrent(mut self, n: usize) -> Self {
+        self.max_concurrent = n;
+        self
+    }
+
+    /// The underlying store.
+    pub fn store(&self) -> &JobStore {
+        &self.store
+    }
+
+    /// Create a durable job from a payload and start it in the
+    /// background. Returns the job id immediately.
+    pub fn submit(&self, payload: JobPayload, engine: JobEngine) -> Result<String> {
+        // Fast-fail on capacity *before* writing the journal — a
+        // rejected submit must not leave a matrix-sized file behind.
+        self.ensure_capacity()?;
+        let spec = JobSpec {
+            payload,
+            engine,
+            chunks: self.default_chunks,
+            batch: self.default_batch,
+        };
+        let id = self.store.create(&spec)?;
+        if let Err(e) = self.spawn_run(&id) {
+            // Lost a capacity/lock race after creating: the job never
+            // started and its id never reached the caller, so the
+            // journal is an orphan — remove it.
+            if let Ok(path) = self.store.journal_path(&id) {
+                let _ = std::fs::remove_file(path);
+            }
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    fn ensure_capacity(&self) -> Result<()> {
+        check_capacity(
+            &self.jobs.lock().expect("job map poisoned"),
+            self.max_concurrent,
+        )
+    }
+
+    /// Resume a paused/crashed job in the background. A no-op for
+    /// complete jobs; an error if the job is unknown or already running.
+    pub fn resume(&self, id: &str) -> Result<()> {
+        // Validate before spawning so the caller gets a crisp error.
+        let status = self.store.status(id)?;
+        if status.complete {
+            return Ok(());
+        }
+        self.spawn_run(id)
+    }
+
+    fn spawn_run(&self, id: &str) -> Result<()> {
+        let mut jobs = self.jobs.lock().expect("job map poisoned");
+        // Don't silently overwrite a failure nobody has seen yet:
+        // surface it as this call's result (consuming it); the next
+        // submit/resume goes through clean.
+        let prior_error = match jobs.get(id) {
+            Some(h) if !h.done.load(Ordering::SeqCst) => {
+                return Err(Error::Job(format!("job {id:?} is already running")));
+            }
+            Some(h) => h.error.lock().expect("job error slot poisoned").take(),
+            None => None,
+        };
+        if let Some(msg) = prior_error {
+            jobs.remove(id);
+            return Err(Error::Job(format!(
+                "job {id:?} previously failed: {msg} (retry to run again)"
+            )));
+        }
+        check_capacity(&jobs, self.max_concurrent)?;
+        // Prune finished handles (keeping any whose failure hasn't been
+        // reported yet) so a long-lived server doesn't grow one entry
+        // per job ever run.
+        jobs.retain(|_, h| {
+            !h.done.load(Ordering::SeqCst)
+                || h.error.lock().expect("job error slot poisoned").is_some()
+        });
+        // Probe the cross-process lock *now*: if another runner (say an
+        // operator's `raddet job resume`) holds it, the submit/resume
+        // caller gets the conflict directly instead of a background
+        // thread recording it as a spurious "job failed".
+        let file_lock = self.store.lock_job(id)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let done = Arc::new(AtomicBool::new(false));
+        let error = Arc::new(Mutex::new(None));
+        let handle = Handle {
+            stop: Arc::clone(&stop),
+            done: Arc::clone(&done),
+            error: Arc::clone(&error),
+        };
+        let store = self.store.clone();
+        let runner_cfg = self.runner;
+        let id_owned = id.to_string();
+        std::thread::spawn(move || {
+            // catch_unwind: a panic anywhere in the run must still set
+            // `done` (and leave a diagnosis), or the job would read as
+            // "running" forever — unwaitable, unresumable, unprunable.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                JobRunner::new(runner_cfg).run_locked(&store, &id_owned, &stop, file_lock)
+            }));
+            match outcome {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => {
+                    *error.lock().expect("job error slot poisoned") = Some(e.to_string());
+                }
+                Err(_) => {
+                    *error.lock().expect("job error slot poisoned") =
+                        Some("runner thread panicked".into());
+                }
+            }
+            done.store(true, Ordering::SeqCst);
+        });
+        jobs.insert(id.to_string(), handle);
+        Ok(())
+    }
+
+    /// Is `id` currently being run — by this manager's threads *or* by
+    /// another process holding its run lock (shared jobs dirs are
+    /// expected: a server plus an operator's `raddet job resume`)?
+    pub fn is_running(&self, id: &str) -> bool {
+        let in_process = {
+            let jobs = self.jobs.lock().expect("job map poisoned");
+            jobs.get(id).is_some_and(|h| !h.done.load(Ordering::SeqCst))
+        };
+        in_process || self.store.lock_holder(id).is_some()
+    }
+
+    /// Raise the stop flag for `id`. Returns `true` when a live run was
+    /// signalled (the job pauses after in-flight chunks are journaled).
+    /// Only runs owned by *this* manager can be signalled — a run held
+    /// by another process (visible via [`Self::is_running`]) must be
+    /// stopped from that process.
+    pub fn cancel(&self, id: &str) -> Result<bool> {
+        if !self.store.exists(id) {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        let jobs = self.jobs.lock().expect("job map poisoned");
+        match jobs.get(id) {
+            Some(h) if !h.done.load(Ordering::SeqCst) => {
+                h.stop.store(true, Ordering::SeqCst);
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// Progress snapshot plus the transient running flag. Surfaces a
+    /// background runner failure as the error it died with.
+    pub fn status(&self, id: &str) -> Result<(JobStatus, bool)> {
+        if let Some(msg) = self.take_error(id) {
+            return Err(Error::Job(format!("job {id:?} failed: {msg}")));
+        }
+        Ok((self.store.status(id)?, self.is_running(id)))
+    }
+
+    fn take_error(&self, id: &str) -> Option<String> {
+        let jobs = self.jobs.lock().expect("job map poisoned");
+        jobs.get(id)
+            .and_then(|h| h.error.lock().expect("job error slot poisoned").take())
+    }
+
+    /// Block until the job completes, pauses (run ended without
+    /// completing), or the timeout elapses; returns the final snapshot.
+    ///
+    /// The poll watches the runner handle's `done` flag only — the
+    /// journal (whose SPEC record embeds the whole matrix and can be
+    /// megabytes) is replayed exactly once, for the final snapshot.
+    /// The flag is set *after* the last record lands, so that single
+    /// replay is a consistent view of everything the run journaled.
+    pub fn wait(&self, id: &str, timeout: Duration) -> Result<(JobStatus, bool)> {
+        if !self.store.exists(id) {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(msg) = self.take_error(id) {
+                return Err(Error::Job(format!("job {id:?} failed: {msg}")));
+            }
+            if !self.is_running(id) || Instant::now() >= deadline {
+                return self.status(id);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::JobValue;
+    use crate::linalg::radic_det_seq;
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn tmp_manager(tag: &str) -> JobManager {
+        let dir = crate::testkit::scratch_dir(&format!("manager-{tag}"));
+        JobManager::new(JobStore::open(dir).unwrap(), 2)
+    }
+
+    #[test]
+    fn submit_wait_complete() {
+        let mgr = tmp_manager("submit");
+        let a = gen::uniform(&mut TestRng::from_seed(41), 3, 9, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        let id = mgr
+            .submit(JobPayload::F64(a), JobEngine::Prefix)
+            .unwrap();
+        let (status, _) = mgr.wait(&id, Duration::from_secs(30)).unwrap();
+        assert!(status.complete, "{status:?}");
+        match status.value.unwrap() {
+            JobValue::F64(v) => assert!((v - seq).abs() < 1e-9 * seq.abs().max(1.0)),
+            other => panic!("{other:?}"),
+        }
+        // Resume of a complete job is a no-op.
+        mgr.resume(&id).unwrap();
+        assert!(!mgr.is_running(&id));
+    }
+
+    #[test]
+    fn concurrency_cap_rejects_excess_submits_without_orphans() {
+        let mgr = tmp_manager("cap").with_max_concurrent(0);
+        let a = gen::uniform(&mut TestRng::from_seed(44), 3, 8, -1.0, 1.0);
+        let err = mgr.submit(JobPayload::F64(a), JobEngine::Prefix).unwrap_err();
+        assert!(err.to_string().contains("too many running jobs"), "{err}");
+        assert!(
+            mgr.store().list().unwrap().is_empty(),
+            "a rejected submit must not leave a journal behind"
+        );
+    }
+
+    #[test]
+    fn external_lock_holder_reads_as_running() {
+        let mgr = tmp_manager("xproc");
+        let a = gen::uniform(&mut TestRng::from_seed(45), 3, 8, -1.0, 1.0);
+        let spec = crate::jobs::JobSpec {
+            payload: JobPayload::F64(a),
+            engine: JobEngine::Prefix,
+            chunks: 4,
+            batch: 16,
+        };
+        let id = mgr.store().create(&spec).unwrap();
+        // Simulate another process mid-run: the lock is held, but this
+        // manager has no handle for the job.
+        let lock = mgr.store().lock_job(&id).unwrap();
+        assert!(mgr.is_running(&id), "foreign lock holder must show as running");
+        let (_, running) = mgr.status(&id).unwrap();
+        assert!(running);
+        drop(lock);
+        assert!(!mgr.is_running(&id));
+    }
+
+    #[test]
+    fn cancel_unknown_and_status_unknown_error() {
+        let mgr = tmp_manager("unknown");
+        assert!(mgr.cancel("job-nope").is_err());
+        assert!(mgr.status("job-nope").is_err());
+    }
+
+    #[test]
+    fn finished_handles_are_pruned() {
+        let mgr = tmp_manager("prune");
+        let a = gen::uniform(&mut TestRng::from_seed(43), 3, 8, -1.0, 1.0);
+        let id1 = mgr.submit(JobPayload::F64(a.clone()), JobEngine::Prefix).unwrap();
+        mgr.wait(&id1, Duration::from_secs(30)).unwrap();
+        // The next spawn prunes id1's finished handle.
+        let id2 = mgr.submit(JobPayload::F64(a), JobEngine::Prefix).unwrap();
+        {
+            let jobs = mgr.jobs.lock().unwrap();
+            assert!(!jobs.contains_key(&id1), "finished handle pruned");
+            assert!(jobs.contains_key(&id2));
+        }
+        mgr.wait(&id2, Duration::from_secs(30)).unwrap();
+    }
+
+    #[test]
+    fn cancel_idle_job_is_false() {
+        let mgr = tmp_manager("idle");
+        let a = gen::uniform(&mut TestRng::from_seed(42), 3, 8, -1.0, 1.0);
+        let id = mgr.submit(JobPayload::F64(a), JobEngine::CpuLu).unwrap();
+        mgr.wait(&id, Duration::from_secs(30)).unwrap();
+        assert!(!mgr.cancel(&id).unwrap(), "nothing live to cancel");
+    }
+}

@@ -1,0 +1,374 @@
+//! Durable det-jobs — journaled, resumable sweeps over the C(n,m) rank
+//! space.
+//!
+//! At production sizes one Radić determinant is a long-running batch
+//! computation (`C(n,m)` terms); the §6 cost model only holds if partial
+//! work survives worker failure instead of being recomputed. This
+//! subsystem turns a determinant request into a **durable job**:
+//!
+//! 1. The rank space `[0, C(n,m))` is partitioned into block-aligned
+//!    chunks ([`crate::combin::partition_total_block_aligned`] — the
+//!    same shared geometry the prefix engine's scheduler uses), fixed
+//!    once at submit time and reproducible from the spec alone.
+//! 2. Chunks are executed as coordinator leases
+//!    ([`crate::coordinator::LeaseRunner`] /
+//!    [`crate::coordinator::ExactLeaseRunner`] — both the `cpu-lu` and
+//!    `prefix` engines plug in), each producing a *deterministic*
+//!    partial: ordered accumulation per chunk, single thread.
+//! 3. Every completed chunk is appended to a crash-safe [`journal`]
+//!    (append-only, fsync'd, checksummed records — no dependencies,
+//!    the crate stays dep-free).
+//! 4. A resumed job replays the journal, skips completed chunks, and
+//!    composes the partials **associatively in chunk order**, so an
+//!    interrupted sweep finishes with a result bitwise-identical to an
+//!    uninterrupted run (Neumaier fold of chunk values for f64; exact
+//!    checked `i128` sums for [`JobPayload::Exact`]).
+//!
+//! Layers: [`JobStore`] (journal directory, ids, status),
+//! [`JobRunner`] (bounded-concurrency execution with
+//! [`crate::coordinator::WorkerMetrics`] progress counters),
+//! [`JobManager`] (background jobs behind the TCP service's
+//! `JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME` verbs), and the
+//! `raddet job submit|status|resume|list|export` CLI.
+
+pub mod journal;
+pub mod manager;
+pub mod runner;
+pub mod store;
+
+pub use journal::{Journal, MetaRecord, Record, SpecMeta};
+pub use manager::JobManager;
+pub use runner::{JobOutcome, JobRunner, RunnerConfig};
+pub use store::{valid_id, JobStatus, JobStore, LoadedJob, RunLock};
+
+use crate::combin::{combination_count, partition_total_block_aligned, Chunk, PascalTable};
+use crate::linalg::NeumaierSum;
+use crate::matrix::{MatF64, MatI64};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// The matrix a job sweeps (selects the float or exact engine family).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobPayload {
+    /// Float path (`cpu-lu` lanes or the prefix Laplace engine).
+    F64(MatF64),
+    /// Exact `i128` path (Bareiss lanes or exact prefix cofactors).
+    Exact(MatI64),
+}
+
+impl JobPayload {
+    /// `(m, n)` shape of the payload matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            JobPayload::F64(a) => (a.rows(), a.cols()),
+            JobPayload::Exact(a) => (a.rows(), a.cols()),
+        }
+    }
+
+    /// Wire/journal tag: `f64` or `exact`.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            JobPayload::F64(_) => "f64",
+            JobPayload::Exact(_) => "exact",
+        }
+    }
+}
+
+/// Which engine family executes the job's chunk leases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobEngine {
+    /// Per-term LU / Bareiss lanes.
+    CpuLu,
+    /// Prefix-factored Laplace engine (one factorization per sibling
+    /// block).
+    Prefix,
+}
+
+impl JobEngine {
+    /// Wire/journal tag: `cpu` or `prefix`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobEngine::CpuLu => "cpu",
+            JobEngine::Prefix => "prefix",
+        }
+    }
+
+    /// Parse a wire/journal tag.
+    pub fn parse(tok: &str) -> Result<JobEngine> {
+        match tok {
+            "cpu" => Ok(JobEngine::CpuLu),
+            "prefix" => Ok(JobEngine::Prefix),
+            other => Err(Error::Job(format!("unknown job engine {other:?}"))),
+        }
+    }
+}
+
+/// Everything needed to (re)plan and execute a job. Stored verbatim in
+/// the journal's SPEC record so a resume in a fresh process reproduces
+/// the exact chunk geometry and per-chunk arithmetic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// The matrix (and thereby float vs exact arithmetic).
+    pub payload: JobPayload,
+    /// Engine family for chunk leases.
+    pub engine: JobEngine,
+    /// Target chunk count (boundaries are then block-aligned; empty
+    /// chunks are dropped from the plan).
+    pub chunks: usize,
+    /// Lane batch size (float `cpu` engine only — part of the spec
+    /// because batching affects f64 accumulation order).
+    pub batch: usize,
+}
+
+impl JobSpec {
+    /// `(m, n)` shape of the payload matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        self.payload.shape()
+    }
+
+    /// The job's deterministic chunk plan plus the total term count.
+    ///
+    /// Chunk indices returned here are the indices journaled in CHUNK
+    /// records; both sides derive them from this one function.
+    pub fn plan(&self) -> Result<(Vec<Chunk>, u128)> {
+        let (m, n) = self.shape();
+        plan_dims(m, n, self.chunks)
+    }
+}
+
+/// Absurdity guard on job size (~1.8e13 terms — weeks of compute):
+/// far above any sweep one machine finishes, far below the C(n,m) a
+/// hostile but legal-shape `JOB SUBMIT` can reach (~1e33 already at
+/// 10×10 000). The one-shot DET path has its own (smaller)
+/// `CoordinatorConfig::term_cap`; jobs are allowed to be much longer
+/// but not unbounded.
+pub const JOB_TERM_CAP: u128 = 1 << 44;
+
+/// Deterministic chunk plan for an `(m, n)` job split into `chunks`
+/// block-aligned pieces (empty pieces dropped), plus the total term
+/// count. [`JobSpec::plan`] delegates here; the status path computes
+/// the same geometry from the journal's SPEC *header* alone without
+/// parsing the matrix payload.
+pub fn plan_dims(m: usize, n: usize, chunks: usize) -> Result<(Vec<Chunk>, u128)> {
+    if m > n {
+        return Err(Error::Job(format!(
+            "jobs require m ≤ n (got {m}×{n}; Radić's det is 0 for m > n — no sweep needed)"
+        )));
+    }
+    let total = combination_count(n as u64, m as u64)?;
+    if total > JOB_TERM_CAP {
+        return Err(Error::JobTooLarge {
+            n: n as u64,
+            m: m as u64,
+            total,
+            cap: JOB_TERM_CAP,
+        });
+    }
+    let table = PascalTable::new(n as u64, m as u64)?;
+    let aligned = partition_total_block_aligned(total, chunks.max(1), &table)?;
+    let plan: Vec<Chunk> = aligned.into_iter().filter(|c| c.len > 0).collect();
+    Ok((plan, total))
+}
+
+/// One journaled partial: the chunk's deterministic value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobValue {
+    /// Float partial (journaled as the exact bit pattern).
+    F64(f64),
+    /// Exact partial.
+    Exact(i128),
+}
+
+impl JobValue {
+    /// Wire/journal encoding (`f64:<16 hex bits>` / `i128:<decimal>`)
+    /// — the f64 bit pattern round-trips exactly.
+    pub fn encode(&self) -> String {
+        match self {
+            JobValue::F64(v) => format!("f64:{:016x}", v.to_bits()),
+            JobValue::Exact(v) => format!("i128:{v}"),
+        }
+    }
+
+    /// Decode the wire/journal encoding.
+    pub fn decode(tok: &str) -> Result<JobValue> {
+        if let Some(hex) = tok.strip_prefix("f64:") {
+            let bits = u64::from_str_radix(hex, 16)
+                .map_err(|e| Error::Job(format!("bad f64 value {tok:?}: {e}")))?;
+            Ok(JobValue::F64(f64::from_bits(bits)))
+        } else if let Some(dec) = tok.strip_prefix("i128:") {
+            let v: i128 = dec
+                .parse()
+                .map_err(|e| Error::Job(format!("bad i128 value {tok:?}: {e}")))?;
+            Ok(JobValue::Exact(v))
+        } else {
+            Err(Error::Job(format!("bad job value {tok:?}")))
+        }
+    }
+
+    /// Human-readable rendering (decimal / scientific).
+    pub fn render(&self) -> String {
+        match self {
+            JobValue::F64(v) => format!("{v:.12e}"),
+            JobValue::Exact(v) => v.to_string(),
+        }
+    }
+}
+
+/// One replayed CHUNK record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkRecord {
+    /// The chunk's deterministic partial.
+    pub value: JobValue,
+    /// Terms the chunk covered.
+    pub terms: u64,
+    /// Wall-clock micros the lease took (export/throughput stats).
+    pub micros: u64,
+}
+
+/// Compose completed chunk partials into the job result.
+///
+/// Deterministic by construction: f64 partials are folded with one
+/// Neumaier accumulator **in chunk-index order** (the map is ordered),
+/// exact partials with checked `i128` addition — so any interleaving of
+/// runs that produced the same per-chunk values yields the same bits.
+/// Errors if the map's kinds are mixed or a chunk is missing
+/// (`completed.len() != plan_len`).
+pub fn compose_partials(
+    plan_len: usize,
+    completed: &BTreeMap<u64, ChunkRecord>,
+) -> Result<(JobValue, u128)> {
+    if completed.len() != plan_len {
+        return Err(Error::Job(format!(
+            "cannot compose: {} of {plan_len} chunks journaled",
+            completed.len()
+        )));
+    }
+    let mut terms: u128 = 0;
+    let mut float = NeumaierSum::new();
+    let mut exact: i128 = 0;
+    let mut saw_float = false;
+    let mut saw_exact = false;
+    for rec in completed.values() {
+        terms += rec.terms as u128;
+        match rec.value {
+            JobValue::F64(v) => {
+                saw_float = true;
+                float.add(v);
+            }
+            JobValue::Exact(v) => {
+                saw_exact = true;
+                exact = exact
+                    .checked_add(v)
+                    .ok_or(Error::ExactOverflow("job compose"))?;
+            }
+        }
+    }
+    match (saw_float, saw_exact) {
+        (true, true) => Err(Error::Job("journal mixes f64 and exact chunks".into())),
+        (false, true) => Ok((JobValue::Exact(exact), terms)),
+        // An empty (plan_len == 0) job composes to the float identity;
+        // callers never hit this (plans of m ≤ n are non-empty).
+        _ => Ok((JobValue::F64(float.value()), terms)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    #[test]
+    fn value_encoding_roundtrips_bits() {
+        for v in [0.0f64, -0.0, 1.5, -2.75e-300, f64::INFINITY, f64::NAN] {
+            let enc = JobValue::F64(v).encode();
+            match JobValue::decode(&enc).unwrap() {
+                JobValue::F64(back) => assert_eq!(back.to_bits(), v.to_bits(), "{enc}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        for v in [0i128, -1, i128::MAX, i128::MIN] {
+            assert_eq!(
+                JobValue::decode(&JobValue::Exact(v).encode()).unwrap(),
+                JobValue::Exact(v)
+            );
+        }
+        assert!(JobValue::decode("f64:xyz").is_err());
+        assert!(JobValue::decode("nope").is_err());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_block_aligned() {
+        let a = gen::uniform(&mut TestRng::from_seed(1), 4, 12, -1.0, 1.0);
+        let spec = JobSpec {
+            payload: JobPayload::F64(a),
+            engine: JobEngine::Prefix,
+            chunks: 10,
+            batch: 64,
+        };
+        let (p1, total) = spec.plan().unwrap();
+        let (p2, _) = spec.plan().unwrap();
+        assert_eq!(p1, p2, "plan must be reproducible");
+        assert_eq!(total, 495);
+        let covered: u128 = p1.iter().map(|c| c.len).sum();
+        assert_eq!(covered, 495);
+        assert!(p1.iter().all(|c| c.len > 0));
+        let table = PascalTable::new(12, 4).unwrap();
+        for c in &p1 {
+            assert_eq!(crate::combin::block_start(&table, c.start).unwrap(), c.start);
+        }
+    }
+
+    #[test]
+    fn plan_rejects_absurd_term_counts() {
+        // Legal protocol shape (m ≤ 64, n ≤ 10 000) but C(10000,10) ≈
+        // 2.7e33 terms — must be refused, like the one-shot term_cap.
+        assert!(matches!(
+            plan_dims(10, 10_000, 32),
+            Err(Error::JobTooLarge { .. })
+        ));
+        assert!(plan_dims(4, 12, 8).is_ok());
+    }
+
+    #[test]
+    fn plan_rejects_zero_rows_cleanly() {
+        // combination_count fires before PascalTable's assert could —
+        // a 0×n spec is an Error, never a panic.
+        assert!(plan_dims(0, 5, 4).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_m_greater_than_n() {
+        let a = gen::uniform(&mut TestRng::from_seed(2), 5, 3, -1.0, 1.0);
+        let spec = JobSpec {
+            payload: JobPayload::F64(a),
+            engine: JobEngine::CpuLu,
+            chunks: 4,
+            batch: 16,
+        };
+        assert!(matches!(spec.plan(), Err(Error::Job(_))));
+    }
+
+    #[test]
+    fn compose_orders_and_checks_completeness() {
+        let mut completed = BTreeMap::new();
+        completed.insert(1, ChunkRecord { value: JobValue::F64(2.0), terms: 3, micros: 1 });
+        completed.insert(0, ChunkRecord { value: JobValue::F64(1.0), terms: 2, micros: 1 });
+        assert!(compose_partials(3, &completed).is_err(), "missing chunk 2");
+        completed.insert(2, ChunkRecord { value: JobValue::F64(4.0), terms: 5, micros: 1 });
+        let (v, terms) = compose_partials(3, &completed).unwrap();
+        assert_eq!(terms, 10);
+        match v {
+            JobValue::F64(x) => assert_eq!(x, 7.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn compose_rejects_mixed_kinds() {
+        let mut completed = BTreeMap::new();
+        completed.insert(0, ChunkRecord { value: JobValue::F64(1.0), terms: 1, micros: 0 });
+        completed.insert(1, ChunkRecord { value: JobValue::Exact(1), terms: 1, micros: 0 });
+        assert!(compose_partials(2, &completed).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Job runner — executes a job's pending chunks with bounded
+//! concurrency, journaling each completed lease.
+//!
+//! One run = open the journal for append (truncating any torn tail),
+//! replay completed chunks, then drain the pending chunk list through a
+//! worker pool. Workers execute chunk leases
+//! ([`crate::coordinator::LeaseRunner`] /
+//! [`crate::coordinator::ExactLeaseRunner`]) and hand results to the
+//! single journal writer (this thread), which appends + fsyncs each
+//! CHUNK record — so at any kill point the journal holds only whole,
+//! checksummed records.
+//!
+//! Interruption is first-class: a run stops early when the shared stop
+//! flag is raised (`JOB CANCEL`) or when the configured
+//! [`RunnerConfig::chunk_budget`] is exhausted (the CI resume-smoke's
+//! deterministic "kill"). A later run picks up exactly the chunks that
+//! never hit the journal; because each chunk's partial is deterministic
+//! and composition is a fixed-order fold ([`super::compose_partials`]),
+//! the final result is bitwise-identical to an uninterrupted sweep.
+
+use super::journal::{Journal, Record};
+use super::store::{JobStatus, JobStore, LoadedJob};
+use super::{compose_partials, ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
+use crate::combin::{Chunk, PascalTable};
+use crate::coordinator::{ExactLeaseRunner, JobMetrics, LeaseRunner, WorkerMetrics};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Runner knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunnerConfig {
+    /// Worker threads (0 ⇒ available parallelism), capped at the
+    /// pending chunk count.
+    pub workers: usize,
+    /// Execute (and journal) at most this many chunks this run, then
+    /// pause resumably — the deterministic "kill" used by the resume
+    /// tests and the CI smoke. `None` runs to completion.
+    pub chunk_budget: Option<u64>,
+}
+
+/// What one run achieved.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    /// Post-run progress snapshot (complete ⇒ `status.value` is set).
+    pub status: JobStatus,
+    /// Metrics for the leases executed by *this* run (one
+    /// [`WorkerMetrics`] entry per chunk).
+    pub metrics: JobMetrics,
+    /// True when the run stopped before the sweep finished (budget or
+    /// stop flag).
+    pub interrupted: bool,
+}
+
+/// Executes (and resumes) durable jobs against a [`JobStore`].
+pub struct JobRunner {
+    cfg: RunnerConfig,
+}
+
+enum AnyRunner {
+    Float(LeaseRunner),
+    Exact(ExactLeaseRunner),
+}
+
+fn make_runner(spec: &JobSpec) -> AnyRunner {
+    let (m, _) = spec.shape();
+    match (&spec.payload, spec.engine) {
+        (JobPayload::F64(_), JobEngine::CpuLu) => AnyRunner::Float(LeaseRunner::cpu(m, spec.batch)),
+        (JobPayload::F64(_), JobEngine::Prefix) => AnyRunner::Float(LeaseRunner::prefix(m)),
+        (JobPayload::Exact(_), eng) => {
+            AnyRunner::Exact(ExactLeaseRunner::new(m, matches!(eng, JobEngine::Prefix)))
+        }
+    }
+}
+
+fn run_chunk_any(
+    runner: &mut AnyRunner,
+    spec: &JobSpec,
+    table: &PascalTable,
+    chunk: Chunk,
+) -> Result<(JobValue, WorkerMetrics)> {
+    match (runner, &spec.payload) {
+        (AnyRunner::Float(lr), JobPayload::F64(a)) => {
+            let (v, wm) = lr.run_chunk(a, table, chunk)?;
+            Ok((JobValue::F64(v), wm))
+        }
+        (AnyRunner::Exact(er), JobPayload::Exact(a)) => {
+            let (v, wm) = er.run_chunk(a, table, chunk)?;
+            Ok((JobValue::Exact(v), wm))
+        }
+        _ => Err(Error::Job("runner/payload mismatch".into())),
+    }
+}
+
+impl JobRunner {
+    /// New runner with the given config.
+    pub fn new(cfg: RunnerConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Run (or resume) job `id` to completion, budget, or error.
+    pub fn run(&self, store: &JobStore, id: &str) -> Result<JobOutcome> {
+        self.run_with_stop(store, id, &AtomicBool::new(false))
+    }
+
+    /// [`Self::run`] with an external stop flag (raised by
+    /// `JOB CANCEL`): workers finish their in-flight chunk, journal it,
+    /// and the run returns as interrupted.
+    pub fn run_with_stop(
+        &self,
+        store: &JobStore,
+        id: &str,
+        stop: &AtomicBool,
+    ) -> Result<JobOutcome> {
+        // Exclusive across processes for the whole run: a second
+        // appender would interleave bytes, and its torn-tail truncation
+        // could chop our live records (held until return).
+        let lock = store.lock_job(id)?;
+        self.run_locked(store, id, stop, lock)
+    }
+
+    /// Run with a [`RunLock`] the caller already acquired — the job
+    /// manager probes the lock *before* acknowledging a submit/resume,
+    /// so a conflict surfaces to the requester instead of being
+    /// recorded later as a background job failure.
+    pub fn run_locked(
+        &self,
+        store: &JobStore,
+        id: &str,
+        stop: &AtomicBool,
+        lock: crate::jobs::RunLock,
+    ) -> Result<JobOutcome> {
+        let _lock = lock; // held until return
+        let started = Instant::now();
+        let path = store.journal_path(id)?;
+        if !path.is_file() {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        let (mut journal, records) = Journal::open_append(&path)?;
+        let job = LoadedJob::from_records(id, records)?;
+        let mut jm = JobMetrics::default();
+
+        // Already finished: resume is a no-op reporting the same value.
+        if job.done.is_some() {
+            jm.elapsed = started.elapsed();
+            return Ok(JobOutcome { status: job.status(), metrics: jm, interrupted: false });
+        }
+
+        let pending: Vec<(u64, Chunk)> = job
+            .plan
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !job.completed.contains_key(&(*i as u64)))
+            .map(|(i, c)| (i as u64, *c))
+            .collect();
+
+        let (m, n) = job.spec.shape();
+        let table = PascalTable::new(n as u64, m as u64)?;
+        let mut completed = job.completed.clone();
+        let mut run_err: Option<Error> = None;
+
+        // Claim cap: the budget bounds how many pending chunks this run
+        // may execute; the cap (not a post-hoc flag) makes interruption
+        // deterministic under any thread scheduling.
+        let limit = match self.cfg.chunk_budget {
+            Some(b) => pending.len().min(usize::try_from(b).unwrap_or(usize::MAX)),
+            None => pending.len(),
+        };
+
+        if limit > 0 && !stop.load(Ordering::SeqCst) {
+            let workers = {
+                let w = if self.cfg.workers > 0 {
+                    self.cfg.workers
+                } else {
+                    std::thread::available_parallelism().map_or(4, |p| p.get())
+                };
+                w.min(limit).max(1)
+            };
+            let halt = AtomicBool::new(false);
+            let cursor = AtomicUsize::new(0);
+            let (tx, rx) = mpsc::channel::<(u64, Result<(JobValue, WorkerMetrics)>, u64)>();
+
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let tx = tx.clone();
+                    let halt = &halt;
+                    let cursor = &cursor;
+                    let pending = &pending;
+                    let table = &table;
+                    let spec = &job.spec;
+                    scope.spawn(move || {
+                        let mut runner = make_runner(spec);
+                        loop {
+                            if halt.load(Ordering::SeqCst) || stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            let i = cursor.fetch_add(1, Ordering::SeqCst);
+                            if i >= limit {
+                                break;
+                            }
+                            let (idx, chunk) = pending[i];
+                            let t0 = Instant::now();
+                            let res = run_chunk_any(&mut runner, spec, table, chunk);
+                            let micros = t0.elapsed().as_micros() as u64;
+                            if tx.send((idx, res, micros)).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+                drop(tx);
+
+                // Single journal writer: append + fsync in completion
+                // order (records carry their plan index, so journal
+                // order is irrelevant to composition).
+                while let Ok((idx, res, micros)) = rx.recv() {
+                    match res.and_then(|(value, wm)| {
+                        let rec = ChunkRecord { value, terms: wm.terms, micros };
+                        journal.append(&Record::Chunk { index: idx, rec })?;
+                        Ok((rec, wm))
+                    }) {
+                        Ok((rec, wm)) => {
+                            completed.insert(idx, rec);
+                            jm.workers.push(wm);
+                        }
+                        Err(e) => {
+                            run_err = Some(e);
+                            halt.store(true, Ordering::SeqCst);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+
+        if let Some(e) = run_err {
+            return Err(e);
+        }
+
+        let mut done_value = None;
+        if completed.len() == job.plan.len() {
+            let (value, terms) = compose_partials(job.plan.len(), &completed)?;
+            if terms != job.total_terms {
+                return Err(Error::Job(format!(
+                    "job {id}: journaled {terms} terms, expected {}",
+                    job.total_terms
+                )));
+            }
+            journal.append(&Record::Done { terms, value })?;
+            done_value = Some(value);
+        }
+
+        jm.elapsed = started.elapsed();
+        let terms_done: u128 = completed.values().map(|r| r.terms as u128).sum();
+        let status = JobStatus {
+            id: id.to_string(),
+            chunks_done: completed.len(),
+            chunks_total: job.plan.len(),
+            terms_done,
+            terms_total: job.total_terms,
+            complete: done_value.is_some(),
+            value: done_value,
+        };
+        let interrupted = !status.complete;
+        Ok(JobOutcome { status, metrics: jm, interrupted })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::radic_det_seq;
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn tmp_store(tag: &str) -> JobStore {
+        JobStore::open(crate::testkit::scratch_dir(&format!("runner-{tag}"))).unwrap()
+    }
+
+    fn f64_spec(engine: JobEngine, chunks: usize) -> (JobSpec, f64) {
+        let a = gen::uniform(&mut TestRng::from_seed(31), 3, 10, -1.0, 1.0);
+        let seq = radic_det_seq(&a).unwrap();
+        (
+            JobSpec { payload: JobPayload::F64(a), engine, chunks, batch: 16 },
+            seq,
+        )
+    }
+
+    #[test]
+    fn runs_to_completion_and_matches_reference() {
+        for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
+            let store = tmp_store(engine.as_str());
+            let (spec, seq) = f64_spec(engine, 7);
+            let id = store.create(&spec).unwrap();
+            let out = JobRunner::new(RunnerConfig { workers: 3, chunk_budget: None })
+                .run(&store, &id)
+                .unwrap();
+            assert!(out.status.complete && !out.interrupted);
+            assert_eq!(out.status.terms_done, 120); // C(10,3)
+            match out.status.value.unwrap() {
+                JobValue::F64(v) => {
+                    assert!((v - seq).abs() < 1e-9 * seq.abs().max(1.0), "{engine:?}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn budget_pauses_and_resume_completes() {
+        let store = tmp_store("budget");
+        let (spec, _) = f64_spec(JobEngine::Prefix, 9);
+        let id = store.create(&spec).unwrap();
+        let first = JobRunner::new(RunnerConfig { workers: 1, chunk_budget: Some(2) })
+            .run(&store, &id)
+            .unwrap();
+        assert!(first.interrupted);
+        assert_eq!(first.status.chunks_done, 2, "budget is a hard claim cap");
+        assert!(first.status.chunks_done < first.status.chunks_total);
+        let second = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+            .run(&store, &id)
+            .unwrap();
+        assert!(second.status.complete);
+        // Resuming a complete job is a no-op with the same value.
+        let third = JobRunner::new(RunnerConfig::default()).run(&store, &id).unwrap();
+        assert!(third.status.complete && !third.interrupted);
+        assert_eq!(third.metrics.workers.len(), 0, "no leases re-run");
+        match (second.status.value.unwrap(), third.status.value.unwrap()) {
+            (JobValue::F64(a), JobValue::F64(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn preraised_stop_flag_runs_nothing() {
+        let store = tmp_store("stop");
+        let (spec, _) = f64_spec(JobEngine::CpuLu, 5);
+        let id = store.create(&spec).unwrap();
+        let stop = AtomicBool::new(true);
+        let out = JobRunner::new(RunnerConfig::default())
+            .run_with_stop(&store, &id, &stop)
+            .unwrap();
+        assert!(out.interrupted);
+        assert_eq!(out.status.chunks_done, 0);
+    }
+
+    #[test]
+    fn unknown_job_is_an_error() {
+        let store = tmp_store("unknown");
+        assert!(matches!(
+            JobRunner::new(RunnerConfig::default()).run(&store, "job-missing"),
+            Err(Error::Job(_))
+        ));
+    }
+
+    #[test]
+    fn concurrent_run_is_refused_by_the_lock() {
+        let store = tmp_store("locked");
+        let (spec, _) = f64_spec(JobEngine::CpuLu, 4);
+        let id = store.create(&spec).unwrap();
+        let held = store.lock_job(&id).unwrap();
+        let err = JobRunner::new(RunnerConfig::default())
+            .run(&store, &id)
+            .unwrap_err();
+        assert!(err.to_string().contains("locked"), "{err}");
+        drop(held);
+        let out = JobRunner::new(RunnerConfig::default()).run(&store, &id).unwrap();
+        assert!(out.status.complete, "lock released ⇒ run proceeds");
+    }
+}

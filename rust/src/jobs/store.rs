@@ -1,0 +1,594 @@
+//! Job store — a directory of journals, one per job id.
+//!
+//! The journal is the single source of truth: `status`/`load` replay it
+//! on every call (journals are small — one line per chunk), so status is
+//! always consistent with what would survive a crash, and any process
+//! that can see the directory can inspect or resume a job.
+
+use super::journal::{Journal, MetaRecord, Record};
+use super::{plan_dims, ChunkRecord, JobSpec, JobValue};
+use crate::combin::Chunk;
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Characters permitted in a job id (ids become file names; this is the
+/// path-traversal guard shared with the wire protocol).
+pub fn valid_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 96
+        && id
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+}
+
+fn new_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let millis = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.as_millis() as u64);
+    format!(
+        "job-{millis:x}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// A job replayed from its journal.
+#[derive(Clone, Debug)]
+pub struct LoadedJob {
+    /// The job id.
+    pub id: String,
+    /// The spec as journaled at create time.
+    pub spec: JobSpec,
+    /// Deterministic chunk plan (derived from the spec; indices match
+    /// journaled CHUNK records).
+    pub plan: Vec<Chunk>,
+    /// Total Radić terms `C(n,m)`.
+    pub total_terms: u128,
+    /// Journaled chunk partials, keyed by plan index.
+    pub completed: BTreeMap<u64, ChunkRecord>,
+    /// The DONE record, if the job finished.
+    pub done: Option<(JobValue, u128)>,
+}
+
+/// A post-SPEC journal event — the common shape of [`Record`] and
+/// [`MetaRecord`] tails, so `load` and `status` reduce through one
+/// fold and cannot drift.
+enum TailEvent {
+    Spec,
+    Chunk(u64, ChunkRecord),
+    Done(JobValue, u128),
+}
+
+impl From<Record> for TailEvent {
+    fn from(r: Record) -> TailEvent {
+        match r {
+            Record::Spec(_) => TailEvent::Spec,
+            Record::Chunk { index, rec } => TailEvent::Chunk(index, rec),
+            Record::Done { terms, value } => TailEvent::Done(value, terms),
+        }
+    }
+}
+
+impl From<MetaRecord> for TailEvent {
+    fn from(r: MetaRecord) -> TailEvent {
+        match r {
+            MetaRecord::Spec(_) => TailEvent::Spec,
+            MetaRecord::Chunk { index, rec } => TailEvent::Chunk(index, rec),
+            MetaRecord::Done { terms, value } => TailEvent::Done(value, terms),
+        }
+    }
+}
+
+/// Fold the post-SPEC tail: duplicate SPECs and out-of-plan chunk
+/// indices are corruption; a re-journaled chunk (a resume that re-ran a
+/// chunk whose record was torn away) is harmless — values are
+/// deterministic, so the rewrite is identical. Concurrent runners are
+/// excluded by [`JobStore::lock_job`].
+fn fold_tail(
+    id: &str,
+    plan_len: usize,
+    tail: impl Iterator<Item = TailEvent>,
+) -> Result<(BTreeMap<u64, ChunkRecord>, Option<(JobValue, u128)>)> {
+    let mut completed = BTreeMap::new();
+    let mut done = None;
+    for ev in tail {
+        match ev {
+            TailEvent::Spec => {
+                return Err(Error::Job(format!("job {id}: duplicate SPEC record")))
+            }
+            TailEvent::Chunk(index, rec) => {
+                if index as usize >= plan_len {
+                    return Err(Error::Job(format!(
+                        "job {id}: chunk index {index} outside plan of {plan_len}"
+                    )));
+                }
+                completed.insert(index, rec);
+            }
+            TailEvent::Done(value, terms) => done = Some((value, terms)),
+        }
+    }
+    Ok((completed, done))
+}
+
+impl LoadedJob {
+    /// Build from replayed records (shared by `load` and the runner's
+    /// open-for-append path).
+    pub fn from_records(id: &str, records: Vec<Record>) -> Result<LoadedJob> {
+        let mut it = records.into_iter();
+        let spec = match it.next() {
+            Some(Record::Spec(s)) => s,
+            _ => return Err(Error::Job(format!("job {id}: journal has no SPEC record"))),
+        };
+        let (plan, total_terms) = spec.plan()?;
+        let (completed, done) = fold_tail(id, plan.len(), it.map(TailEvent::from))?;
+        Ok(LoadedJob {
+            id: id.to_string(),
+            spec,
+            plan,
+            total_terms,
+            completed,
+            done,
+        })
+    }
+
+    /// Progress snapshot.
+    pub fn status(&self) -> JobStatus {
+        let terms_done: u128 = self.completed.values().map(|r| r.terms as u128).sum();
+        JobStatus {
+            id: self.id.clone(),
+            chunks_done: self.completed.len(),
+            chunks_total: self.plan.len(),
+            terms_done,
+            terms_total: self.total_terms,
+            complete: self.done.is_some(),
+            value: self.done.map(|(v, _)| v),
+        }
+    }
+}
+
+/// Progress counters for one job (everything the `JOB STATUS` verb and
+/// the CLI report).
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    /// The job id.
+    pub id: String,
+    /// Chunks journaled so far.
+    pub chunks_done: usize,
+    /// Chunks in the plan.
+    pub chunks_total: usize,
+    /// Terms covered by journaled chunks.
+    pub terms_done: u128,
+    /// Total terms `C(n,m)`.
+    pub terms_total: u128,
+    /// DONE record present.
+    pub complete: bool,
+    /// Composed determinant (when complete).
+    pub value: Option<JobValue>,
+}
+
+impl JobStatus {
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        let val = match &self.value {
+            Some(v) => format!("   det = {}", v.render()),
+            None => String::new(),
+        };
+        format!(
+            "job {}: {}   chunks {}/{}   terms {}/{}{val}",
+            self.id,
+            if self.complete { "complete" } else { "in-progress" },
+            self.chunks_done,
+            self.chunks_total,
+            self.terms_done,
+            self.terms_total
+        )
+    }
+}
+
+/// Exclusive cross-process run lock for one job (`<id>.lock` beside the
+/// journal). Exactly one runner may hold it — two processes appending
+/// to one journal would interleave bytes and corrupt it, and a second
+/// opener could mistake the first's in-flight append for a torn tail.
+/// Released (file removed) on drop; locks whose owner pid is dead (per
+/// `/proc`) are reclaimed automatically.
+#[derive(Debug)]
+pub struct RunLock {
+    path: PathBuf,
+}
+
+impl Drop for RunLock {
+    fn drop(&mut self) {
+        // Release only if the file still carries *our* pid: if a racing
+        // reclaim ever displaced this lock, deleting blindly would
+        // remove someone else's — verify, never clobber.
+        let ours = std::fs::read_to_string(&self.path)
+            .ok()
+            .and_then(|s| s.trim().parse::<u32>().ok())
+            == Some(std::process::id());
+        if ours {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Cached immutable journal head: SPEC header + derived plan geometry.
+/// Valid forever — job ids are unique, journals are append-only, and
+/// the SPEC record never changes after create.
+#[derive(Clone, Copy, Debug)]
+struct SpecCacheEntry {
+    /// Byte offset where tail (CHUNK/DONE) records begin.
+    tail_offset: u64,
+    plan_len: usize,
+    terms_total: u128,
+}
+
+/// A directory of job journals.
+#[derive(Clone, Debug)]
+pub struct JobStore {
+    root: PathBuf,
+    /// Per-id SPEC head cache (shared across clones) so status polling
+    /// never re-reads or re-hashes the matrix-sized SPEC line.
+    spec_cache: Arc<Mutex<HashMap<String, SpecCacheEntry>>>,
+}
+
+impl JobStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<JobStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(JobStore { root, spec_cache: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    /// Store root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Journal path for a job id.
+    pub fn journal_path(&self, id: &str) -> Result<PathBuf> {
+        if !valid_id(id) {
+            return Err(Error::Job(format!("invalid job id {id:?}")));
+        }
+        Ok(self.root.join(format!("{id}.journal")))
+    }
+
+    /// Create a new durable job: validate + plan the spec, allocate an
+    /// id, write the SPEC record. Returns the id.
+    pub fn create(&self, spec: &JobSpec) -> Result<String> {
+        spec.plan()?; // reject impossible jobs before touching disk
+        let id = new_id();
+        Journal::create(&self.journal_path(&id)?, spec)?;
+        Ok(id)
+    }
+
+    /// Does a journal exist for `id`?
+    pub fn exists(&self, id: &str) -> bool {
+        self.journal_path(id).map(|p| p.is_file()).unwrap_or(false)
+    }
+
+    /// All job ids in the store (sorted).
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut ids = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name.strip_suffix(".journal") {
+                ids.push(id.to_string());
+            }
+        }
+        ids.sort();
+        Ok(ids)
+    }
+
+    /// Replay a job's journal.
+    pub fn load(&self, id: &str) -> Result<LoadedJob> {
+        let path = self.journal_path(id)?;
+        if !path.is_file() {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        LoadedJob::from_records(id, Journal::replay(&path)?)
+    }
+
+    /// Progress snapshot for a job, built for polling: the journal's
+    /// immutable head (magic + matrix-sized SPEC line) is read, hashed
+    /// and planned **once per store** ([`Journal::read_spec_meta`] +
+    /// [`plan_dims`], cached); each poll then reads only the CHUNK/DONE
+    /// tail ([`Journal::replay_tail`]) and reduces it through the same
+    /// [`fold_tail`] the resume path uses.
+    pub fn status(&self, id: &str) -> Result<JobStatus> {
+        let path = self.journal_path(id)?;
+        if !path.is_file() {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        let cached = {
+            let cache = self.spec_cache.lock().expect("spec cache poisoned");
+            cache.get(id).copied()
+        };
+        let entry = match cached {
+            Some(e) => e,
+            None => {
+                let (meta, tail_offset) = Journal::read_spec_meta(&path)?;
+                let (plan, terms_total) = plan_dims(meta.m, meta.n, meta.chunks)?;
+                let e = SpecCacheEntry {
+                    tail_offset,
+                    plan_len: plan.len(),
+                    terms_total,
+                };
+                self.spec_cache
+                    .lock()
+                    .expect("spec cache poisoned")
+                    .insert(id.to_string(), e);
+                e
+            }
+        };
+        let tail = Journal::replay_tail(&path, entry.tail_offset)?;
+        let (completed, done) = fold_tail(id, entry.plan_len, tail.into_iter().map(TailEvent::from))?;
+        let terms_done: u128 = completed.values().map(|r| r.terms as u128).sum();
+        Ok(JobStatus {
+            id: id.to_string(),
+            chunks_done: completed.len(),
+            chunks_total: entry.plan_len,
+            terms_done,
+            terms_total: entry.terms_total,
+            complete: done.is_some(),
+            value: done.map(|(v, _)| v),
+        })
+    }
+
+    /// Acquire the exclusive run lock for `id` (see [`RunLock`]).
+    ///
+    /// The lock file is created atomically with the owner pid already
+    /// inside (write-to-temp + `hard_link`), so a reader never observes
+    /// a pid-less lock. A lock whose owner is dead (Linux `/proc`
+    /// probe) is reclaimed by *renaming* it aside — rename is atomic,
+    /// so contending reclaimers cannot both win, and a reclaimer that
+    /// accidentally grabs a freshly re-acquired live lock detects the
+    /// pid mismatch and puts it back. A live (or undeterminable) owner
+    /// yields [`Error::Job`].
+    pub fn lock_job(&self, id: &str) -> Result<RunLock> {
+        if !valid_id(id) {
+            return Err(Error::Job(format!("invalid job id {id:?}")));
+        }
+        let lock_path = self.root.join(format!("{id}.lock"));
+        let tmp = self.root.join(format!("{id}.lock.{}", std::process::id()));
+        std::fs::write(&tmp, format!("{}\n", std::process::id()))?;
+        let mut result = None;
+        for attempt in 0..2 {
+            match std::fs::hard_link(&tmp, &lock_path) {
+                Ok(()) => {
+                    result = Some(Ok(RunLock { path: lock_path }));
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let owner: Option<u32> = std::fs::read_to_string(&lock_path)
+                        .ok()
+                        .and_then(|s| s.trim().parse().ok());
+                    let dead = owner.is_some_and(|pid| {
+                        Path::new("/proc").is_dir()
+                            && !Path::new(&format!("/proc/{pid}")).exists()
+                    });
+                    // A vanished lock (read failed, file gone) means a
+                    // holder released between our link and read — just
+                    // retry the link.
+                    let vanished = owner.is_none() && !lock_path.exists();
+                    if (dead || vanished) && attempt == 0 {
+                        if dead {
+                            self.reclaim_stale_lock(&lock_path, owner);
+                        }
+                        continue;
+                    }
+                    result = Some(Err(Error::Job(format!(
+                        "job {id:?} is locked by another runner{}",
+                        owner.map_or_else(String::new, |p| format!(" (pid {p})"))
+                    ))));
+                    break;
+                }
+                Err(e) => {
+                    result = Some(Err(e.into()));
+                    break;
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&tmp);
+        result.unwrap_or_else(|| {
+            Err(Error::Job(format!("job {id:?} is locked by another runner")))
+        })
+    }
+
+    /// Pid of the *live* process currently holding `id`'s run lock, if
+    /// any — this sees runners in other processes sharing the jobs
+    /// dir (an operator's `raddet job resume` next to a server), which
+    /// the manager's in-process handle map cannot. A lock whose owner
+    /// is provably dead reads as "nobody" (it will be reclaimed at the
+    /// next acquire); where liveness can't be probed (no `/proc`) the
+    /// holder is conservatively assumed alive.
+    pub fn lock_holder(&self, id: &str) -> Option<u32> {
+        if !valid_id(id) {
+            return None;
+        }
+        let pid: u32 = std::fs::read_to_string(self.root.join(format!("{id}.lock")))
+            .ok()?
+            .trim()
+            .parse()
+            .ok()?;
+        let alive = !Path::new("/proc").is_dir()
+            || Path::new(&format!("/proc/{pid}")).exists();
+        alive.then_some(pid)
+    }
+
+    /// Atomically retire a dead owner's lock: rename it aside (exactly
+    /// one contender's rename succeeds), verify the renamed inode still
+    /// carries the dead pid we inspected — if a live runner re-acquired
+    /// the name in between, restore it — then delete the carcass.
+    fn reclaim_stale_lock(&self, lock_path: &Path, dead_owner: Option<u32>) {
+        // Grave name is per-(job, pid) so concurrent reclaims of
+        // different jobs by one process can't collide.
+        let mut grave_name = lock_path
+            .file_name()
+            .map(|s| s.to_os_string())
+            .unwrap_or_default();
+        grave_name.push(format!(".reclaim.{}", std::process::id()));
+        let grave = self.root.join(grave_name);
+        if std::fs::rename(lock_path, &grave).is_err() {
+            return; // another contender won the reclaim race
+        }
+        let got: Option<u32> = std::fs::read_to_string(&grave)
+            .ok()
+            .and_then(|s| s.trim().parse().ok());
+        if got == dead_owner {
+            let _ = std::fs::remove_file(&grave);
+        } else {
+            // We renamed a *live* lock that replaced the stale one in
+            // the inspection window — put it back via `hard_link`,
+            // which fails (instead of clobbering) if a third contender
+            // acquired the freed name meanwhile; pid-verified
+            // [`RunLock::drop`] keeps even that residual three-way
+            // race from deleting the wrong holder's lock.
+            if std::fs::hard_link(&grave, lock_path).is_ok() {
+                let _ = std::fs::remove_file(&grave);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{JobEngine, JobPayload};
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn tmp_store(tag: &str) -> JobStore {
+        JobStore::open(crate::testkit::scratch_dir(&format!("store-{tag}"))).unwrap()
+    }
+
+    fn sample_spec() -> JobSpec {
+        JobSpec {
+            payload: JobPayload::F64(gen::uniform(
+                &mut TestRng::from_seed(3),
+                3,
+                9,
+                -1.0,
+                1.0,
+            )),
+            engine: JobEngine::Prefix,
+            chunks: 6,
+            batch: 32,
+        }
+    }
+
+    #[test]
+    fn create_list_load_status() {
+        let store = tmp_store("basic");
+        let spec = sample_spec();
+        let id = store.create(&spec).unwrap();
+        assert!(store.exists(&id));
+        assert_eq!(store.list().unwrap(), vec![id.clone()]);
+        let job = store.load(&id).unwrap();
+        assert_eq!(job.spec, spec);
+        assert!(job.completed.is_empty());
+        assert!(job.done.is_none());
+        let st = store.status(&id).unwrap();
+        assert!(!st.complete);
+        assert_eq!(st.chunks_done, 0);
+        assert_eq!(st.terms_total, 84); // C(9,3)
+        assert!(st.chunks_total >= 1);
+        assert!(st.render().contains("in-progress"));
+    }
+
+    #[test]
+    fn meta_status_agrees_with_full_load() {
+        let store = tmp_store("meta-status");
+        let id = store.create(&sample_spec()).unwrap();
+        crate::jobs::JobRunner::new(crate::jobs::RunnerConfig {
+            workers: 2,
+            chunk_budget: Some(2),
+        })
+        .run(&store, &id)
+        .unwrap();
+        // First call populates the SPEC-head cache, second hits it;
+        // both (and a fresh store with a cold cache) must agree with
+        // the full replay, including after more chunks land.
+        let assert_matches_full = |store: &JobStore| {
+            let light = store.status(&id).unwrap();
+            let full = store.load(&id).unwrap().status();
+            assert_eq!(light.chunks_done, full.chunks_done);
+            assert_eq!(light.chunks_total, full.chunks_total);
+            assert_eq!(light.terms_done, full.terms_done);
+            assert_eq!(light.terms_total, full.terms_total);
+            assert_eq!(light.complete, full.complete);
+        };
+        assert_matches_full(&store);
+        assert_matches_full(&store); // cached head
+        crate::jobs::JobRunner::new(crate::jobs::RunnerConfig::default())
+            .run(&store, &id)
+            .unwrap();
+        assert_matches_full(&store); // cached head + grown tail
+        let cold = JobStore::open(store.root()).unwrap();
+        assert_matches_full(&cold);
+        assert!(cold.status(&id).unwrap().complete);
+    }
+
+    #[test]
+    fn ids_are_unique_and_valid() {
+        let store = tmp_store("ids");
+        let spec = sample_spec();
+        let a = store.create(&spec).unwrap();
+        let b = store.create(&spec).unwrap();
+        assert_ne!(a, b);
+        assert!(valid_id(&a) && valid_id(&b));
+    }
+
+    #[test]
+    fn id_validation_blocks_traversal() {
+        let store = tmp_store("traversal");
+        for bad in ["", "../etc/passwd", "a/b", "x.y", "a b", &"z".repeat(200)] {
+            assert!(store.journal_path(bad).is_err(), "{bad:?}");
+            assert!(matches!(store.load(bad), Err(Error::Job(_))), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_a_job_error() {
+        let store = tmp_store("unknown");
+        assert!(matches!(store.load("job-nope"), Err(Error::Job(_))));
+        assert!(!store.exists("job-nope"));
+    }
+
+    #[test]
+    fn run_lock_is_exclusive_and_released_on_drop() {
+        let store = tmp_store("lock");
+        let id = store.create(&sample_spec()).unwrap();
+        let lock = store.lock_job(&id).unwrap();
+        let err = store.lock_job(&id).unwrap_err();
+        assert!(err.to_string().contains("locked"), "{err}");
+        drop(lock);
+        let relock = store.lock_job(&id).unwrap();
+        drop(relock);
+    }
+
+    #[test]
+    fn stale_lock_of_dead_owner_is_reclaimed() {
+        if !std::path::Path::new("/proc").is_dir() {
+            return; // liveness probe is Linux-only
+        }
+        let store = tmp_store("stale-lock");
+        let id = store.create(&sample_spec()).unwrap();
+        // A crashed runner's lock: pid that cannot exist.
+        std::fs::write(store.root().join(format!("{id}.lock")), "999999999\n").unwrap();
+        let lock = store.lock_job(&id).unwrap();
+        drop(lock);
+    }
+
+    #[test]
+    fn lock_files_do_not_pollute_listing() {
+        let store = tmp_store("lock-list");
+        let id = store.create(&sample_spec()).unwrap();
+        let _lock = store.lock_job(&id).unwrap();
+        assert_eq!(store.list().unwrap(), vec![id]);
+    }
+}

@@ -37,8 +37,12 @@
 //!   metrics.
 //! * [`pram`] — CRCW/CREW/EREW cost-model simulator reproducing the §6
 //!   complexity table.
+//! * [`jobs`] — durable det-jobs: the rank space partitioned into
+//!   block-aligned chunks, each completed chunk journaled (append-only,
+//!   fsync'd, checksummed), interrupted sweeps resumed to a
+//!   bitwise-identical result.
 //! * [`service`] — TCP determinant service (the §8 “network overhead”
-//!   future-work study).
+//!   future-work study), including `JOB` verbs over the jobs subsystem.
 //! * [`apps`] — the paper's motivating application: image retrieval with
 //!   a non-square determinant similarity kernel (refs \[8\], [20–23]).
 //! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
@@ -66,6 +70,7 @@ pub mod cli;
 pub mod combin;
 pub mod coordinator;
 pub mod error;
+pub mod jobs;
 pub mod linalg;
 pub mod matrix;
 pub mod pram;

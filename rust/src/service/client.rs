@@ -1,6 +1,8 @@
-//! Blocking client for the determinant service.
+//! Blocking client for the determinant service, including the durable
+//! `JOB` verbs (submit / status / wait / cancel / resume).
 
 use super::protocol::{Request, Response};
+use crate::jobs::{JobEngine, JobPayload, JobValue};
 use crate::matrix::{MatF64, MatI64};
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -77,8 +79,94 @@ impl Client {
         }
     }
 
+    /// Submit a durable float job; returns the job id immediately.
+    pub fn job_submit(&mut self, a: &MatF64, engine: JobEngine) -> Result<String> {
+        self.job_submit_payload(JobPayload::F64(a.clone()), engine)
+    }
+
+    /// Submit a durable exact (integer) job.
+    pub fn job_submit_exact(&mut self, a: &MatI64, engine: JobEngine) -> Result<String> {
+        self.job_submit_payload(JobPayload::Exact(a.clone()), engine)
+    }
+
+    fn job_submit_payload(&mut self, payload: JobPayload, engine: JobEngine) -> Result<String> {
+        match self.roundtrip(&Request::JobSubmit { engine, payload })? {
+            Response::Job { id } => Ok(id),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    fn expect_status(&mut self, req: &Request) -> Result<JobStatusReply> {
+        match self.roundtrip(req)? {
+            Response::JobStatus {
+                id,
+                state,
+                chunks_done,
+                chunks_total,
+                terms_done,
+                terms_total,
+                value,
+            } => Ok(JobStatusReply {
+                id,
+                state,
+                chunks_done,
+                chunks_total,
+                terms_done,
+                terms_total,
+                value,
+            }),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Progress snapshot for a job.
+    pub fn job_status(&mut self, id: &str) -> Result<JobStatusReply> {
+        self.expect_status(&Request::JobStatus(id.to_string()))
+    }
+
+    /// Block (server-side) until the job completes, pauses, or
+    /// `timeout_ms` elapses; returns the final snapshot.
+    pub fn job_wait(&mut self, id: &str, timeout_ms: u64) -> Result<JobStatusReply> {
+        self.expect_status(&Request::JobWait { id: id.to_string(), timeout_ms })
+    }
+
+    /// Cooperatively cancel a running job (it pauses, resumable).
+    pub fn job_cancel(&mut self, id: &str) -> Result<JobStatusReply> {
+        self.expect_status(&Request::JobCancel(id.to_string()))
+    }
+
+    /// Resume a paused/crashed job in the background.
+    pub fn job_resume(&mut self, id: &str) -> Result<()> {
+        match self.roundtrip(&Request::JobResume(id.to_string()))? {
+            Response::Job { .. } => Ok(()),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
     /// Polite close.
     pub fn quit(mut self) {
         let _ = self.stream.write_all(Request::Quit.encode().as_bytes());
     }
+}
+
+/// A `JOB STATUS`/`WAIT`/`CANCEL` reply.
+#[derive(Clone, Debug)]
+pub struct JobStatusReply {
+    /// The job id.
+    pub id: String,
+    /// `running`, `paused` or `complete`.
+    pub state: String,
+    /// Chunks journaled.
+    pub chunks_done: u64,
+    /// Chunks planned.
+    pub chunks_total: u64,
+    /// Terms covered by journaled chunks.
+    pub terms_done: u128,
+    /// Total Radić terms.
+    pub terms_total: u128,
+    /// Composed determinant (complete jobs only) — bit-exact for f64.
+    pub value: Option<JobValue>,
 }

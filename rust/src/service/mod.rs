@@ -6,11 +6,17 @@
 //! shared [`crate::coordinator::Coordinator`] and reports the result
 //! with timing, so `benches/bench_service.rs` can measure exactly the
 //! `network_overhead` term of §6's `O(n² + network_overhead)` claim.
+//!
+//! Servers started with [`Server::with_jobs`] additionally serve the
+//! durable-job verbs (`JOB SUBMIT / STATUS / WAIT / CANCEL / RESUME`)
+//! over a shared [`crate::jobs::JobManager`]: long sweeps run in the
+//! background, survive server restarts via the journal, and report
+//! bit-exact results.
 
 pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::Client;
+pub use client::{Client, JobStatusReply};
 pub use protocol::{Request, Response};
 pub use server::{Server, ServerHandle};

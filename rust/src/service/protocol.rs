@@ -6,13 +6,29 @@
 //! ← OK <det> <terms> <micros>
 //! → EXACT <m> <n> <i11>,…                integer path (Bareiss)
 //! ← OK <det> <terms> <micros>
+//! → JOB SUBMIT <cpu|prefix> <f64|exact> <m> <n> <v11>,…
+//! ← OK JOB <id>                          durable job accepted
+//! → JOB STATUS <id>
+//! ← OK JOBSTATUS <id> <state> <chunks_done> <chunks_total>
+//!                <terms_done> <terms_total> <value|->
+//! → JOB WAIT <id> [timeout_ms]           block until done/paused
+//! → JOB CANCEL <id>                      cooperative pause (resumable)
+//! → JOB RESUME <id>                      restart a paused/crashed job
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
 //! ← (closed)
 //! ← ERR <message>                        any failure
 //! ```
+//!
+//! Job values travel in the journal encoding (`f64:<16 hex bits>` /
+//! `i128:<decimal>`), so a completed determinant round-trips
+//! bit-exactly. Parsing is hardened against malformed input: truncated
+//! frames, oversized dimensions, non-finite floats and hostile job ids
+//! all yield a protocol error (the server answers `ERR …` and lives on)
+//! instead of panicking the connection handler.
 
+use crate::jobs::{valid_id, JobEngine, JobPayload, JobValue};
 use crate::matrix::{Mat, MatF64, MatI64};
 use crate::{Error, Result};
 
@@ -23,6 +39,26 @@ pub enum Request {
     Det(MatF64),
     /// Exact integer Radić determinant.
     Exact(MatI64),
+    /// Submit a durable job.
+    JobSubmit {
+        /// Engine family for chunk leases.
+        engine: JobEngine,
+        /// The matrix (float or exact path).
+        payload: JobPayload,
+    },
+    /// Progress snapshot for a job.
+    JobStatus(String),
+    /// Block until the job completes, pauses, or the timeout elapses.
+    JobWait {
+        /// The job id.
+        id: String,
+        /// Wait bound in milliseconds.
+        timeout_ms: u64,
+    },
+    /// Cooperative cancel (job pauses, resumable).
+    JobCancel(String),
+    /// Resume a paused/crashed job.
+    JobResume(String),
     /// Liveness probe.
     Ping,
     /// Close the connection.
@@ -36,6 +72,28 @@ pub enum Response {
     Ok { det: f64, terms: u128, micros: u128 },
     /// Exact result.
     OkExact { det: i128, terms: u128, micros: u128 },
+    /// Durable job accepted / resumed.
+    Job {
+        /// The job id.
+        id: String,
+    },
+    /// Durable job progress snapshot.
+    JobStatus {
+        /// The job id.
+        id: String,
+        /// `running`, `paused` or `complete`.
+        state: String,
+        /// Chunks journaled.
+        chunks_done: u64,
+        /// Chunks planned.
+        chunks_total: u64,
+        /// Terms covered by journaled chunks.
+        terms_done: u128,
+        /// Total Radić terms.
+        terms_total: u128,
+        /// Composed determinant (complete jobs only), bit-exact.
+        value: Option<JobValue>,
+    },
     /// Liveness answer.
     Pong,
     /// Failure.
@@ -55,10 +113,121 @@ fn parse_shape(mtok: &str, ntok: &str) -> Result<(usize, usize)> {
     Ok((m, n))
 }
 
+/// Parse `m*n` comma-separated floats; non-finite values are rejected
+/// (a request carrying inf/NaN can only produce garbage downstream).
+fn parse_f64_matrix(m: usize, n: usize, body: &str) -> Result<MatF64> {
+    let toks: Vec<&str> = body.split(',').collect();
+    if toks.len() != m * n {
+        return Err(Error::Protocol(format!(
+            "expected {} values, got {}",
+            m * n,
+            toks.len()
+        )));
+    }
+    let vals = toks
+        .iter()
+        .map(|t| {
+            let v = t
+                .trim()
+                .parse::<f64>()
+                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))?;
+            if !v.is_finite() {
+                return Err(Error::Protocol(format!("non-finite value {t:?}")));
+            }
+            Ok(v)
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    Mat::from_vec(m, n, vals)
+}
+
+/// Parse `m*n` comma-separated integers.
+fn parse_i64_matrix(m: usize, n: usize, body: &str) -> Result<MatI64> {
+    let toks: Vec<&str> = body.split(',').collect();
+    if toks.len() != m * n {
+        return Err(Error::Protocol(format!(
+            "expected {} values, got {}",
+            m * n,
+            toks.len()
+        )));
+    }
+    let vals = toks
+        .iter()
+        .map(|t| {
+            t.trim()
+                .parse::<i64>()
+                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))
+        })
+        .collect::<Result<Vec<i64>>>()?;
+    Mat::from_vec(m, n, vals)
+}
+
+fn parse_job_id(tok: &str) -> Result<String> {
+    if !valid_id(tok) {
+        return Err(Error::Protocol(format!("bad job id {tok:?}")));
+    }
+    Ok(tok.to_string())
+}
+
+fn parse_job(rest: &str) -> Result<Request> {
+    let mut parts = rest.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    let args = parts.next().unwrap_or("");
+    match verb {
+        "SUBMIT" => {
+            let mut t = args.splitn(5, ' ');
+            let engine = JobEngine::parse(
+                t.next()
+                    .filter(|s| !s.is_empty())
+                    .ok_or_else(|| Error::Protocol("missing job engine".into()))?,
+            )
+            .map_err(|e| Error::Protocol(e.to_string()))?;
+            let kind = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing job kind".into()))?;
+            let (m, n) = parse_shape(
+                t.next().ok_or_else(|| Error::Protocol("missing m".into()))?,
+                t.next().ok_or_else(|| Error::Protocol("missing n".into()))?,
+            )?;
+            let body = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing values".into()))?;
+            let payload = match kind {
+                "f64" => JobPayload::F64(parse_f64_matrix(m, n, body)?),
+                "exact" => JobPayload::Exact(parse_i64_matrix(m, n, body)?),
+                other => {
+                    return Err(Error::Protocol(format!("bad job kind {other:?}")))
+                }
+            };
+            Ok(Request::JobSubmit { engine, payload })
+        }
+        "STATUS" => Ok(Request::JobStatus(parse_job_id(args)?)),
+        "CANCEL" => Ok(Request::JobCancel(parse_job_id(args)?)),
+        "RESUME" => Ok(Request::JobResume(parse_job_id(args)?)),
+        "WAIT" => {
+            let mut t = args.split(' ');
+            let id = parse_job_id(t.next().unwrap_or(""))?;
+            let timeout_ms = match t.next() {
+                None => 60_000,
+                Some(tok) => tok
+                    .parse::<u64>()
+                    .map_err(|e| Error::Protocol(format!("bad timeout {tok:?}: {e}")))?,
+            };
+            if t.next().is_some() {
+                return Err(Error::Protocol("trailing JOB WAIT tokens".into()));
+            }
+            Ok(Request::JobWait { id, timeout_ms })
+        }
+        other => Err(Error::Protocol(format!("unknown JOB verb {other:?}"))),
+    }
+}
+
 impl Request {
     /// Parse one request line.
     pub fn parse(line: &str) -> Result<Request> {
         let line = line.trim_end();
+        if let Some(rest) = line.strip_prefix("JOB ") {
+            return parse_job(rest);
+        }
         let mut parts = line.splitn(4, ' ');
         match parts.next() {
             Some("PING") => Ok(Request::Ping),
@@ -71,34 +240,10 @@ impl Request {
                 let body = parts
                     .next()
                     .ok_or_else(|| Error::Protocol("missing values".into()))?;
-                let toks: Vec<&str> = body.split(',').collect();
-                if toks.len() != m * n {
-                    return Err(Error::Protocol(format!(
-                        "expected {} values, got {}",
-                        m * n,
-                        toks.len()
-                    )));
-                }
                 if cmd == "DET" {
-                    let vals = toks
-                        .iter()
-                        .map(|t| {
-                            t.trim()
-                                .parse::<f64>()
-                                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))
-                        })
-                        .collect::<Result<Vec<f64>>>()?;
-                    Ok(Request::Det(Mat::from_vec(m, n, vals)?))
+                    Ok(Request::Det(parse_f64_matrix(m, n, body)?))
                 } else {
-                    let vals = toks
-                        .iter()
-                        .map(|t| {
-                            t.trim()
-                                .parse::<i64>()
-                                .map_err(|e| Error::Protocol(format!("bad value {t:?}: {e}")))
-                        })
-                        .collect::<Result<Vec<i64>>>()?;
-                    Ok(Request::Exact(Mat::from_vec(m, n, vals)?))
+                    Ok(Request::Exact(parse_i64_matrix(m, n, body)?))
                 }
             }
             Some(other) => Err(Error::Protocol(format!("unknown command {other:?}"))),
@@ -108,27 +253,45 @@ impl Request {
 
     /// Encode a request line (client side).
     pub fn encode(&self) -> String {
+        fn f64_body(a: &MatF64) -> String {
+            a.data()
+                .iter()
+                .map(|v| format!("{v:.17e}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+        fn i64_body(a: &MatI64) -> String {
+            a.data()
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
         match self {
             Request::Ping => "PING\n".into(),
             Request::Quit => "QUIT\n".into(),
             Request::Det(a) => {
-                let body = a
-                    .data()
-                    .iter()
-                    .map(|v| format!("{v:.17e}"))
-                    .collect::<Vec<_>>()
-                    .join(",");
-                format!("DET {} {} {}\n", a.rows(), a.cols(), body)
+                format!("DET {} {} {}\n", a.rows(), a.cols(), f64_body(a))
             }
             Request::Exact(a) => {
-                let body = a
-                    .data()
-                    .iter()
-                    .map(|v| v.to_string())
-                    .collect::<Vec<_>>()
-                    .join(",");
-                format!("EXACT {} {} {}\n", a.rows(), a.cols(), body)
+                format!("EXACT {} {} {}\n", a.rows(), a.cols(), i64_body(a))
             }
+            Request::JobSubmit { engine, payload } => {
+                let (m, n) = payload.shape();
+                let body = match payload {
+                    JobPayload::F64(a) => f64_body(a),
+                    JobPayload::Exact(a) => i64_body(a),
+                };
+                format!(
+                    "JOB SUBMIT {} {} {m} {n} {body}\n",
+                    engine.as_str(),
+                    payload.kind_str()
+                )
+            }
+            Request::JobStatus(id) => format!("JOB STATUS {id}\n"),
+            Request::JobWait { id, timeout_ms } => format!("JOB WAIT {id} {timeout_ms}\n"),
+            Request::JobCancel(id) => format!("JOB CANCEL {id}\n"),
+            Request::JobResume(id) => format!("JOB RESUME {id}\n"),
         }
     }
 }
@@ -142,6 +305,46 @@ impl Response {
         }
         if let Some(msg) = line.strip_prefix("ERR ") {
             return Ok(Response::Err(msg.to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("OK JOBSTATUS ") {
+            let toks: Vec<&str> = rest.split(' ').collect();
+            if toks.len() != 7 {
+                return Err(Error::Protocol(format!("bad JOBSTATUS line {line:?}")));
+            }
+            let id = parse_job_id(toks[0])?;
+            let state = toks[1].to_string();
+            let chunks_done: u64 = toks[2]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunks_done: {e}")))?;
+            let chunks_total: u64 = toks[3]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunks_total: {e}")))?;
+            let terms_done: u128 = toks[4]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad terms_done: {e}")))?;
+            let terms_total: u128 = toks[5]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad terms_total: {e}")))?;
+            let value = if toks[6] == "-" {
+                None
+            } else {
+                Some(
+                    JobValue::decode(toks[6])
+                        .map_err(|e| Error::Protocol(e.to_string()))?,
+                )
+            };
+            return Ok(Response::JobStatus {
+                id,
+                state,
+                chunks_done,
+                chunks_total,
+                terms_done,
+                terms_total,
+                value,
+            });
+        }
+        if let Some(id) = line.strip_prefix("OK JOB ") {
+            return Ok(Response::Job { id: parse_job_id(id)? });
         }
         if let Some(rest) = line.strip_prefix("OK ") {
             let toks: Vec<&str> = rest.split(' ').collect();
@@ -182,6 +385,21 @@ impl Response {
             Response::OkExact { det, terms, micros } => {
                 format!("OK {det} {terms} {micros}\n")
             }
+            Response::Job { id } => format!("OK JOB {id}\n"),
+            Response::JobStatus {
+                id,
+                state,
+                chunks_done,
+                chunks_total,
+                terms_done,
+                terms_total,
+                value,
+            } => {
+                let v = value.map_or_else(|| "-".to_string(), |v| v.encode());
+                format!(
+                    "OK JOBSTATUS {id} {state} {chunks_done} {chunks_total} {terms_done} {terms_total} {v}\n"
+                )
+            }
         }
     }
 }
@@ -208,14 +426,89 @@ mod tests {
     }
 
     #[test]
+    fn job_request_roundtrips() {
+        let f = Mat::from_rows(&[vec![1.5, -2.0, 3.25], vec![0.0, 4.0, -1.0]]);
+        let i = Mat::from_vec(2, 3, vec![1i64, -2, 3, 4, 5, -6]).unwrap();
+        for req in [
+            Request::JobSubmit {
+                engine: JobEngine::Prefix,
+                payload: JobPayload::F64(f),
+            },
+            Request::JobSubmit {
+                engine: JobEngine::CpuLu,
+                payload: JobPayload::Exact(i),
+            },
+            Request::JobStatus("job-1a2b-3-4".into()),
+            Request::JobWait { id: "job-x".into(), timeout_ms: 1234 },
+            Request::JobCancel("job-x".into()),
+            Request::JobResume("job-x".into()),
+        ] {
+            assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
+        }
+        // WAIT timeout defaults when omitted.
+        assert_eq!(
+            Request::parse("JOB WAIT job-x").unwrap(),
+            Request::JobWait { id: "job-x".into(), timeout_ms: 60_000 }
+        );
+    }
+
+    #[test]
     fn response_roundtrips() {
         for r in [
             Response::Ok { det: -1.25e10, terms: 792, micros: 1234 },
             Response::OkExact { det: -987654321, terms: 56, micros: 7 },
+            Response::Job { id: "job-12ab-9-0".into() },
+            Response::JobStatus {
+                id: "job-x".into(),
+                state: "running".into(),
+                chunks_done: 3,
+                chunks_total: 12,
+                terms_done: 120,
+                terms_total: 495,
+                value: None,
+            },
+            Response::JobStatus {
+                id: "job-x".into(),
+                state: "complete".into(),
+                chunks_done: 12,
+                chunks_total: 12,
+                terms_done: 495,
+                terms_total: 495,
+                value: Some(JobValue::F64(-0.12345)),
+            },
+            Response::JobStatus {
+                id: "job-y".into(),
+                state: "complete".into(),
+                chunks_done: 2,
+                chunks_total: 2,
+                terms_done: 56,
+                terms_total: 56,
+                value: Some(JobValue::Exact(-987654321)),
+            },
             Response::Pong,
             Response::Err("boom".into()),
         ] {
             assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn jobstatus_value_is_bit_exact() {
+        let v = f64::from_bits(0x3ff0_0000_0000_0001); // 1 + ulp
+        let r = Response::JobStatus {
+            id: "job-z".into(),
+            state: "complete".into(),
+            chunks_done: 1,
+            chunks_total: 1,
+            terms_done: 1,
+            terms_total: 1,
+            value: Some(JobValue::F64(v)),
+        };
+        match Response::parse(&r.encode()).unwrap() {
+            Response::JobStatus { value: Some(JobValue::F64(back)), .. } => {
+                assert_eq!(back.to_bits(), v.to_bits())
+            }
+            other => panic!("{other:?}"),
         }
     }
 
@@ -231,6 +524,33 @@ mod tests {
             "DET 2 2 1,2,x,4",     // bad value
             "EXACT 1 2 1.5,2",     // float in integer path
             "DET 100 20000 1",     // unreasonable shape
+            "DET 2 2 inf,1,2,3",   // non-finite float
+            "DET 2 2 1,nan,2,3",   // non-finite float
+            "DET 1 2 1,-inf",      // non-finite float
+        ] {
+            assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn malformed_job_requests_rejected() {
+        for bad in [
+            "JOB ",                          // empty verb
+            "JOB NOPE x",                    // unknown verb
+            "JOB SUBMIT",                    // truncated frame
+            "JOB SUBMIT prefix",             // truncated frame
+            "JOB SUBMIT prefix f64 2 2",     // missing values
+            "JOB SUBMIT prefix f64 2 2 1,2,3", // wrong count
+            "JOB SUBMIT warp f64 2 2 1,2,3,4", // unknown engine
+            "JOB SUBMIT prefix f32 2 2 1,2,3,4", // unknown kind
+            "JOB SUBMIT prefix f64 2 2 1,inf,3,4", // non-finite
+            "JOB SUBMIT prefix f64 99 99999 1",  // oversized dims
+            "JOB STATUS",                    // missing id
+            "JOB STATUS ../../etc/passwd",   // hostile id
+            "JOB STATUS a b",                // id with space
+            "JOB WAIT job-x 12x",            // bad timeout
+            "JOB WAIT job-x 5 extra",        // trailing tokens
+            "JOB CANCEL",                    // missing id
         ] {
             assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
         }

@@ -1,18 +1,30 @@
 //! The determinant server: accept loop + per-connection handler threads
-//! sharing one coordinator.
+//! sharing one coordinator (and, when enabled, one durable
+//! [`JobManager`] serving the `JOB` verbs).
 
 use super::protocol::{Request, Response};
 use crate::coordinator::Coordinator;
+use crate::jobs::{JobManager, JobStatus};
 use crate::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Hard cap on one request line. Generous for the largest legal matrix
+/// (64×10 000 values) but bounds memory against a hostile client that
+/// streams an endless line.
+const MAX_LINE_BYTES: usize = 32 << 20;
+
+/// Server-side bound on `JOB WAIT` so a client cannot pin a handler
+/// thread forever.
+const MAX_WAIT: Duration = Duration::from_secs(600);
 
 /// Server configuration + shared state.
 pub struct Server {
     coordinator: Arc<Coordinator>,
+    jobs: Option<Arc<JobManager>>,
 }
 
 /// Handle to a running server (stop + stats).
@@ -24,9 +36,21 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    /// New server around an existing coordinator.
+    /// New server around an existing coordinator, without durable-job
+    /// support: `JOB` verbs answer `ERR jobs disabled`. Use
+    /// [`Self::with_jobs`] to enable them (the `raddet serve` CLI
+    /// always does, journaling to `--jobs-dir`, default
+    /// `./raddet-jobs`).
     pub fn new(coordinator: Coordinator) -> Self {
-        Self { coordinator: Arc::new(coordinator) }
+        Self { coordinator: Arc::new(coordinator), jobs: None }
+    }
+
+    /// New server with durable-jobs support.
+    pub fn with_jobs(coordinator: Coordinator, jobs: JobManager) -> Self {
+        Self {
+            coordinator: Arc::new(coordinator),
+            jobs: Some(Arc::new(jobs)),
+        }
     }
 
     /// Bind `addr` (use port 0 for ephemeral) and start serving in
@@ -40,6 +64,7 @@ impl Server {
         let accept_stop = Arc::clone(&stop);
         let accept_requests = Arc::clone(&requests);
         let coordinator = Arc::clone(&self.coordinator);
+        let jobs = self.jobs.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if accept_stop.load(Ordering::SeqCst) {
@@ -47,9 +72,10 @@ impl Server {
                 }
                 let Ok(stream) = conn else { continue };
                 let coord = Arc::clone(&coordinator);
+                let jobs = jobs.clone();
                 let reqs = Arc::clone(&accept_requests);
                 std::thread::spawn(move || {
-                    let _ = handle_connection(stream, &coord, &reqs);
+                    let _ = handle_connection(stream, &coord, jobs.as_deref(), &reqs);
                 });
             }
         });
@@ -96,16 +122,126 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Read one `\n`-terminated line with a byte cap.
+///
+/// `Ok(None)` = clean EOF (or EOF after a truncated frame — there is
+/// nothing left to answer on a half-line whose sender hung up; the
+/// partial text is discarded rather than parsed as a frame).
+/// `Err(InvalidData)` = the cap was exceeded; the stream is unusable.
+pub(crate) fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    cap: usize,
+) -> std::io::Result<Option<String>> {
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            // EOF: a non-empty remainder is a truncated frame.
+            return Ok(None);
+        }
+        if let Some(i) = buf.iter().position(|&b| b == b'\n') {
+            out.extend_from_slice(&buf[..i]);
+            reader.consume(i + 1);
+            if out.len() > cap {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "request line exceeds cap",
+                ));
+            }
+            return Ok(Some(String::from_utf8_lossy(&out).into_owned()));
+        }
+        out.extend_from_slice(buf);
+        let n = buf.len();
+        reader.consume(n);
+        if out.len() > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request line exceeds cap",
+            ));
+        }
+    }
+}
+
+fn job_status_response(jobs: &JobManager, id: &str) -> Response {
+    match jobs.status(id) {
+        Ok((status, running)) => status_to_response(&status, running),
+        Err(e) => Response::Err(e.to_string()),
+    }
+}
+
+fn status_to_response(status: &JobStatus, running: bool) -> Response {
+    let state = if status.complete {
+        "complete"
+    } else if running {
+        "running"
+    } else {
+        "paused"
+    };
+    Response::JobStatus {
+        id: status.id.clone(),
+        state: state.to_string(),
+        chunks_done: status.chunks_done as u64,
+        chunks_total: status.chunks_total as u64,
+        terms_done: status.terms_done,
+        terms_total: status.terms_total,
+        value: status.value,
+    }
+}
+
+fn handle_job_request(jobs: Option<&JobManager>, req: Request) -> Response {
+    let Some(jobs) = jobs else {
+        return Response::Err("jobs disabled on this server (start with a jobs dir)".into());
+    };
+    match req {
+        Request::JobSubmit { engine, payload } => match jobs.submit(payload, engine) {
+            Ok(id) => Response::Job { id },
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::JobStatus(id) => job_status_response(jobs, &id),
+        Request::JobWait { id, timeout_ms } => {
+            let timeout = Duration::from_millis(timeout_ms).min(MAX_WAIT);
+            match jobs.wait(&id, timeout) {
+                Ok((status, running)) => status_to_response(&status, running),
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::JobCancel(id) => match jobs.cancel(&id) {
+            // Cancellation is cooperative: report the (possibly still
+            // draining) snapshot right away.
+            Ok(_) => job_status_response(jobs, &id),
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::JobResume(id) => match jobs.resume(&id) {
+            Ok(()) => Response::Job { id },
+            Err(e) => Response::Err(e.to_string()),
+        },
+        other => Response::Err(format!("not a JOB request: {other:?}")),
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     coord: &Coordinator,
+    jobs: Option<&JobManager>,
     requests: &AtomicU64,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
+            Ok(None) => break,
+            Ok(Some(line)) => line,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Oversized frame: answer once, then hang up — the rest
+                // of the stream is this same runaway line.
+                requests.fetch_add(1, Ordering::SeqCst);
+                let _ = writer
+                    .write_all(Response::Err("request line too long".into()).encode().as_bytes());
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        };
         let response = match Request::parse(&line) {
             Ok(Request::Quit) => break,
             Ok(Request::Ping) => Response::Pong,
@@ -136,6 +272,7 @@ fn handle_connection(
                     Err(e) => Response::Err(e.to_string()),
                 }
             }
+            Ok(job_req) => handle_job_request(jobs, job_req),
             Err(e) => Response::Err(e.to_string()),
         };
         requests.fetch_add(1, Ordering::SeqCst);
@@ -145,4 +282,39 @@ fn handle_connection(
     let _ = peer;
     let _ = writer.shutdown(Shutdown::Both);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn capped_reader_returns_lines_and_eof() {
+        let mut r = BufReader::new(Cursor::new(b"PING\nQUIT\n".to_vec()));
+        assert_eq!(read_line_capped(&mut r, 64).unwrap(), Some("PING".into()));
+        assert_eq!(read_line_capped(&mut r, 64).unwrap(), Some("QUIT".into()));
+        assert_eq!(read_line_capped(&mut r, 64).unwrap(), None);
+    }
+
+    #[test]
+    fn capped_reader_discards_truncated_frame() {
+        // A half-line with no newline (sender died mid-frame) is EOF,
+        // not a parseable request.
+        let mut r = BufReader::new(Cursor::new(b"DET 2 2 1,2".to_vec()));
+        assert_eq!(read_line_capped(&mut r, 64).unwrap(), None);
+    }
+
+    #[test]
+    fn capped_reader_rejects_runaway_line() {
+        let big = vec![b'x'; 1000];
+        let mut r = BufReader::new(Cursor::new(big));
+        let err = read_line_capped(&mut r, 100).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Also when the newline does eventually arrive past the cap.
+        let mut line = vec![b'y'; 500];
+        line.push(b'\n');
+        let mut r2 = BufReader::new(Cursor::new(line));
+        assert!(read_line_capped(&mut r2, 100).is_err());
+    }
 }

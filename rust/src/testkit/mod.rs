@@ -39,6 +39,17 @@ pub fn arb_nm(rng: &mut TestRng, max_n: u64) -> (u64, u64) {
     (n, m)
 }
 
+/// Fresh per-process scratch directory under the system temp dir,
+/// wiped if a previous run left it behind. `tag` must be unique across
+/// the whole test suite (tests in one binary run concurrently) — by
+/// convention `<module>-<test>`.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("raddet-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

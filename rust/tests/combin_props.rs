@@ -130,6 +130,73 @@ fn prop_theorem1_count() {
 }
 
 #[test]
+fn prop_roundtrip_near_u128_boundary() {
+    // n ∈ [96, 130], m ≈ n/2: C(n,m) spans ~1e27 … ~1e38, brushing the
+    // u128 ceiling (≈3.4e38) without crossing it. Draws are biased to
+    // the extremes of the rank range where the unranking walk takes its
+    // longest strides.
+    for_all("u128-boundary roundtrip", 80, |rng| {
+        let n = 96 + rng.u64_below(35); // ≤ 130
+        let half = n / 2;
+        let lo = half.saturating_sub(2).max(1);
+        let m = (lo + rng.u64_below(5)).min(n);
+        let total = combination_count(n, m).unwrap();
+        let q = match rng.u64_below(5) {
+            0 => 0,
+            1 => total - 1,
+            2 => total - 1 - rng.u128_below(1000.min(total)),
+            3 => rng.u128_below(1000).min(total - 1),
+            _ => rng.u128_below(total),
+        };
+        let c = unrank(n, m, q).unwrap();
+        assert!(is_ascending(&c, n), "n={n} m={m} q={q}: {c:?}");
+        assert_eq!(c, unrank_lex(n, m, q).unwrap(), "n={n} m={m} q={q}");
+        assert_eq!(rank(n, &c).unwrap(), q, "n={n} m={m} q={q}");
+    });
+}
+
+#[test]
+fn out_of_range_ranks_are_rejected_not_wrapped() {
+    use raddet::combin::unrank::unrank_into;
+    use raddet::Error;
+    for (n, m) in [(10u64, 4u64), (100, 50), (130, 65)] {
+        let total = combination_count(n, m).unwrap();
+        for q in [total, total + 1, u128::MAX] {
+            assert!(
+                matches!(unrank(n, m, q), Err(Error::Combinatorics(_))),
+                "unrank(n={n}, m={m}, q={q}) must reject"
+            );
+            assert!(
+                matches!(unrank_lex(n, m, q), Err(Error::Combinatorics(_))),
+                "unrank_lex(n={n}, m={m}, q={q}) must reject"
+            );
+            let table = PascalTable::new(n, m).unwrap();
+            let mut buf = vec![0u32; m as usize];
+            assert!(
+                matches!(unrank_into(&table, q, &mut buf), Err(Error::Combinatorics(_))),
+                "unrank_into(n={n}, m={m}, q={q}) must reject"
+            );
+        }
+        // The largest valid rank still works right at the edge.
+        let c = unrank(n, m, total - 1).unwrap();
+        assert_eq!(rank(n, &c).unwrap(), total - 1);
+    }
+}
+
+#[test]
+fn binomials_past_the_u128_ceiling_error_cleanly() {
+    use raddet::Error;
+    // C(140,70) ≈ 9.4e40 > u128::MAX — the whole problem is rejected at
+    // validation, never silently wrapped.
+    assert!(matches!(
+        combination_count(140, 70),
+        Err(Error::BinomialOverflow { .. })
+    ));
+    // The largest centered binomial that still fits is accepted.
+    assert!(combination_count(130, 65).is_ok());
+}
+
+#[test]
 fn unranking_handles_huge_ranks() {
     // u128-range ranks: n=100, m=50 (C ≈ 1e29) — unrank the extremes and
     // a few random interior points; verify with rank().

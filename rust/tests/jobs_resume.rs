@@ -1,0 +1,204 @@
+//! Kill-and-resume determinism for the durable jobs subsystem.
+//!
+//! The acceptance contract: interrupting a job after ≥1 journaled chunk
+//! and resuming yields a result **bitwise-identical** to an
+//! uninterrupted run — for the float `prefix` and `cpu-lu` paths and
+//! for the exact `i128` twin — including across a simulated crash that
+//! tears the journal tail.
+
+use raddet::jobs::{
+    JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
+};
+use raddet::linalg::{radic_det_exact, radic_det_seq};
+use raddet::matrix::gen;
+use raddet::testkit::TestRng;
+
+fn tmp_store(tag: &str) -> JobStore {
+    JobStore::open(raddet::testkit::scratch_dir(&format!("resume-{tag}"))).unwrap()
+}
+
+fn run_to_end(store: &JobStore, id: &str, workers: usize) -> raddet::jobs::JobOutcome {
+    JobRunner::new(RunnerConfig { workers, chunk_budget: None })
+        .run(store, id)
+        .unwrap()
+}
+
+fn run_budgeted(store: &JobStore, id: &str, workers: usize, budget: u64) -> raddet::jobs::JobOutcome {
+    JobRunner::new(RunnerConfig { workers, chunk_budget: Some(budget) })
+        .run(store, id)
+        .unwrap()
+}
+
+fn f64_value(out: &raddet::jobs::JobOutcome) -> f64 {
+    match out.status.value.expect("complete job has a value") {
+        JobValue::F64(v) => v,
+        other => panic!("expected f64 value, got {other:?}"),
+    }
+}
+
+fn exact_value(out: &raddet::jobs::JobOutcome) -> i128 {
+    match out.status.value.expect("complete job has a value") {
+        JobValue::Exact(v) => v,
+        other => panic!("expected exact value, got {other:?}"),
+    }
+}
+
+/// Shared float scenario: uninterrupted twin vs kill-and-resume twin.
+fn kill_resume_f64(engine: JobEngine, tag: &str) {
+    let a = gen::uniform(&mut TestRng::from_seed(101), 4, 12, -1.0, 1.0);
+    let seq = radic_det_seq(&a).unwrap();
+    let spec = JobSpec {
+        payload: JobPayload::F64(a),
+        engine,
+        chunks: 12,
+        batch: 32,
+    };
+    let store = tmp_store(tag);
+
+    // Uninterrupted reference run.
+    let id_ref = store.create(&spec).unwrap();
+    let reference = run_to_end(&store, &id_ref, 3);
+    assert!(reference.status.complete);
+    assert_eq!(reference.status.terms_done, 495); // C(12,4)
+    let v_ref = f64_value(&reference);
+    assert!(
+        (v_ref - seq).abs() < 1e-9 * seq.abs().max(1.0),
+        "{engine:?}: {v_ref} vs {seq}"
+    );
+
+    // Twin job: interrupt after 3 journaled chunks, then resume from
+    // the journal in a freshly opened store (new-process simulation).
+    let id_int = store.create(&spec).unwrap();
+    let first = run_budgeted(&store, &id_int, 2, 3);
+    assert!(first.interrupted, "budget must interrupt the sweep");
+    assert!(first.status.chunks_done >= 1, "≥1 chunk journaled");
+    assert!(
+        first.status.chunks_done < first.status.chunks_total,
+        "sweep must be unfinished"
+    );
+    let store2 = JobStore::open(store.root()).unwrap();
+    let resumed = run_to_end(&store2, &id_int, 4);
+    assert!(resumed.status.complete);
+    assert_eq!(
+        f64_value(&resumed).to_bits(),
+        v_ref.to_bits(),
+        "{engine:?}: resumed result must be bitwise-identical"
+    );
+    // The resumed run only executed the chunks the kill left behind.
+    assert_eq!(
+        resumed.metrics.total().chunks + first.metrics.total().chunks,
+        reference.metrics.total().chunks
+    );
+}
+
+#[test]
+fn kill_and_resume_f64_prefix_is_bitwise_identical() {
+    kill_resume_f64(JobEngine::Prefix, "f64-prefix");
+}
+
+#[test]
+fn kill_and_resume_f64_cpu_is_bitwise_identical() {
+    kill_resume_f64(JobEngine::CpuLu, "f64-cpu");
+}
+
+/// Shared exact scenario.
+fn kill_resume_exact(engine: JobEngine, tag: &str) {
+    let a = gen::integer(&mut TestRng::from_seed(103), 3, 11, -7, 7);
+    let want = radic_det_exact(&a).unwrap();
+    let spec = JobSpec {
+        payload: JobPayload::Exact(a),
+        engine,
+        chunks: 10,
+        batch: 16,
+    };
+    let store = tmp_store(tag);
+
+    let id_ref = store.create(&spec).unwrap();
+    let reference = run_to_end(&store, &id_ref, 3);
+    assert_eq!(exact_value(&reference), want);
+
+    let id_int = store.create(&spec).unwrap();
+    let first = run_budgeted(&store, &id_int, 2, 2);
+    assert!(first.interrupted && first.status.chunks_done >= 1);
+    let resumed = run_to_end(&store, &id_int, 3);
+    assert!(resumed.status.complete);
+    assert_eq!(exact_value(&resumed), want, "{engine:?}");
+}
+
+#[test]
+fn kill_and_resume_exact_prefix_matches_reference() {
+    kill_resume_exact(JobEngine::Prefix, "exact-prefix");
+}
+
+#[test]
+fn kill_and_resume_exact_cpu_matches_reference() {
+    kill_resume_exact(JobEngine::CpuLu, "exact-cpu");
+}
+
+#[test]
+fn resume_survives_a_torn_journal_tail() {
+    // Crash simulation: after an interrupted run, append a torn partial
+    // record (as a mid-append power cut would). Resume must ignore it,
+    // truncate it away, and still finish bitwise-identical.
+    let a = gen::uniform(&mut TestRng::from_seed(107), 4, 11, -1.0, 1.0);
+    let spec = JobSpec {
+        payload: JobPayload::F64(a),
+        engine: JobEngine::Prefix,
+        chunks: 10,
+        batch: 32,
+    };
+    let store = tmp_store("torn");
+
+    let id_ref = store.create(&spec).unwrap();
+    let v_ref = f64_value(&run_to_end(&store, &id_ref, 2));
+
+    let id_int = store.create(&spec).unwrap();
+    let first = run_budgeted(&store, &id_int, 1, 2);
+    assert!(first.interrupted);
+    let done_before = first.status.chunks_done;
+
+    // Tear the tail.
+    {
+        use std::io::Write as _;
+        let path = store.journal_path(&id_int).unwrap();
+        let mut f = std::fs::OpenOptions::new().append(true).open(path).unwrap();
+        f.write_all(b"CHUNK 7 999 1 f64:3f").unwrap();
+    }
+
+    // Status replays past the torn tail.
+    let st = store.status(&id_int).unwrap();
+    assert_eq!(st.chunks_done, done_before, "torn record must not count");
+
+    let resumed = run_to_end(&store, &id_int, 3);
+    assert!(resumed.status.complete);
+    assert_eq!(f64_value(&resumed).to_bits(), v_ref.to_bits());
+}
+
+#[test]
+fn repeated_interruptions_still_converge_bitwise() {
+    // Kill the sweep every 2 chunks until it completes; the stutter
+    // must not change a single bit.
+    let a = gen::uniform(&mut TestRng::from_seed(109), 3, 14, -1.0, 1.0);
+    let spec = JobSpec {
+        payload: JobPayload::F64(a),
+        engine: JobEngine::Prefix,
+        chunks: 9,
+        batch: 16,
+    };
+    let store = tmp_store("stutter");
+    let id_ref = store.create(&spec).unwrap();
+    let v_ref = f64_value(&run_to_end(&store, &id_ref, 2));
+
+    let id_int = store.create(&spec).unwrap();
+    let mut rounds = 0;
+    loop {
+        let out = run_budgeted(&store, &id_int, 2, 2);
+        rounds += 1;
+        assert!(rounds < 50, "must converge");
+        if out.status.complete {
+            assert_eq!(f64_value(&out).to_bits(), v_ref.to_bits());
+            break;
+        }
+    }
+    assert!(rounds >= 3, "budget of 2 over ~9 chunks needs several rounds");
+}

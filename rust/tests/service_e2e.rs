@@ -1,21 +1,33 @@
 //! Service end-to-end: real sockets on an ephemeral port.
 
 use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::jobs::{JobEngine, JobManager, JobStore, JobValue};
 use raddet::linalg::{radic_det_exact, radic_det_seq};
 use raddet::matrix::gen;
 use raddet::service::{Client, Server};
 use raddet::testkit::TestRng;
 
-fn start_server() -> raddet::service::ServerHandle {
-    let coord = Coordinator::new(CoordinatorConfig {
+fn test_coordinator() -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
         workers: 2,
         engine: EngineKind::Cpu,
         schedule: Schedule::Static,
         batch: 64,
         ..Default::default()
     })
-    .unwrap();
-    Server::new(coord).start("127.0.0.1:0").unwrap()
+    .unwrap()
+}
+
+fn start_server() -> raddet::service::ServerHandle {
+    Server::new(test_coordinator()).start("127.0.0.1:0").unwrap()
+}
+
+fn start_server_with_jobs(tag: &str) -> raddet::service::ServerHandle {
+    let dir = raddet::testkit::scratch_dir(&format!("service-{tag}"));
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    Server::with_jobs(test_coordinator(), manager)
+        .start("127.0.0.1:0")
+        .unwrap()
 }
 
 #[test]
@@ -82,6 +94,111 @@ fn protocol_errors_are_soft() {
     let mut line2 = String::new();
     BufReader::new(s).read_line(&mut line2).unwrap();
     assert_eq!(line2.trim(), "PONG");
+    handle.stop();
+}
+
+#[test]
+fn job_verbs_end_to_end() {
+    let handle = start_server_with_jobs("verbs");
+    let addr = handle.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Float job over the prefix engine.
+    let a = gen::uniform(&mut TestRng::from_seed(51), 4, 10, -1.0, 1.0);
+    let want = radic_det_seq(&a).unwrap();
+    let id = c.job_submit(&a, JobEngine::Prefix).unwrap();
+    let st = c.job_wait(&id, 30_000).unwrap();
+    assert_eq!(st.state, "complete", "{st:?}");
+    assert_eq!(st.terms_total, 210); // C(10,4)
+    assert_eq!(st.chunks_done, st.chunks_total);
+    let v = match st.value.unwrap() {
+        JobValue::F64(v) => v,
+        other => panic!("{other:?}"),
+    };
+    assert!((v - want).abs() < 1e-9 * want.abs().max(1.0));
+
+    // STATUS after completion reports the identical bits.
+    let again = c.job_status(&id).unwrap();
+    match again.value.unwrap() {
+        JobValue::F64(v2) => assert_eq!(v2.to_bits(), v.to_bits()),
+        other => panic!("{other:?}"),
+    }
+
+    // RESUME of a complete job is an accepted no-op.
+    c.job_resume(&id).unwrap();
+
+    // Exact job via the cpu engine.
+    let ai = gen::integer(&mut TestRng::from_seed(52), 3, 9, -5, 5);
+    let id2 = c.job_submit_exact(&ai, JobEngine::CpuLu).unwrap();
+    let st2 = c.job_wait(&id2, 30_000).unwrap();
+    assert_eq!(st2.state, "complete");
+    match st2.value.unwrap() {
+        JobValue::Exact(v) => assert_eq!(v, radic_det_exact(&ai).unwrap()),
+        other => panic!("{other:?}"),
+    }
+
+    // Unknown ids are soft errors; the connection keeps working.
+    assert!(c.job_status("job-does-not-exist").is_err());
+    assert!(c.job_cancel("job-does-not-exist").is_err());
+    c.ping().unwrap();
+    c.quit();
+    handle.stop();
+}
+
+#[test]
+fn job_verbs_disabled_without_manager() {
+    let handle = start_server();
+    let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+    let a = gen::uniform(&mut TestRng::from_seed(53), 3, 8, -1.0, 1.0);
+    let err = c.job_submit(&a, JobEngine::Prefix).unwrap_err();
+    assert!(err.to_string().contains("jobs disabled"), "{err}");
+    c.ping().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn malformed_and_hostile_input_is_soft() {
+    use std::io::{BufRead, BufReader, Write};
+    let handle = start_server_with_jobs("hostile");
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    // Every malformed frame must get an ERR, and the loop must survive.
+    for bad in [
+        "DET 2 2 inf,1,2,3\n",            // non-finite float
+        "DET 2 2 1,nan,2,3\n",            // non-finite float
+        "JOB SUBMIT prefix f64 2 2\n",     // truncated frame
+        "JOB SUBMIT warp f64 2 2 1,2,3,4\n", // unknown engine
+        "JOB STATUS ../../etc/passwd\n",   // hostile id
+        "JOB NOPE x\n",                    // unknown verb
+        "DET 99 99999 1\n",                // oversized dimensions
+    ] {
+        s.write_all(bad.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{bad:?} → {line}");
+    }
+    // Still alive after the barrage.
+    s.write_all(b"PING\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+    handle.stop();
+}
+
+#[test]
+fn truncated_frame_then_disconnect_leaves_server_alive() {
+    use std::io::Write;
+    let handle = start_server_with_jobs("truncated");
+    {
+        // A client that dies mid-frame (no newline, then EOF).
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"JOB SUBMIT prefix f64 4 10 1.0,2.0").unwrap();
+        drop(s);
+    }
+    // The accept loop and other connections are unaffected.
+    let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+    c.ping().unwrap();
+    c.quit();
     handle.stop();
 }
 
