@@ -11,11 +11,15 @@
 //! raddet pram      --n N --m M            # §6 complexity table
 //! raddet scaling   --rows M --cols N [--max-workers K] [--engine …]
 //! raddet serve     --port P [--workers K] [--engine …] [--jobs-dir D]
+//!                  [--fleet-chunks C] [--fleet-ttl-ms T]
 //! raddet query     --addr HOST:PORT --csv F [--exact]
+//! raddet worker    --connect HOST:PORT [--id W] [--job ID] [--poll-ms P]
+//!                  [--max-chunks N] [--exit-on-idle]
 //! raddet retrieve  [--images K] [--query I] [--noise E]
 //! raddet job submit  --rows M --cols N [--seed S | --csv F] [--exact]
 //!                    [--engine cpu|prefix] [--chunks C] [--batch B]
 //!                    [--jobs-dir D] [--job-workers K] [--max-chunks B]
+//!                    [--fleet --addr HOST:PORT [--wait-ms T]]
 //! raddet job status  --id ID [--jobs-dir D]
 //! raddet job resume  --id ID [--jobs-dir D] [--job-workers K] [--max-chunks B]
 //! raddet job list    [--jobs-dir D]
@@ -72,6 +76,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(&a),
         "serve" => cmd_serve(&a),
         "query" => cmd_query(&a),
+        "worker" => cmd_worker(&a),
         "retrieve" => cmd_retrieve(&a),
         other => Err(Error::Config(format!(
             "unknown command {other:?} (try `raddet help`)"
@@ -111,10 +116,14 @@ commands:\n\
   serve     TCP determinant service; JOB verbs are always on and\n\
             journal to --jobs-dir (default ./raddet-jobs)\n\
   query     send a --csv matrix to a running service (--addr)\n\
+  worker    join a running service as a fleet worker: lease chunks of\n\
+            durable jobs over LEASE GRANT/RENEW/COMPLETE/ABANDON and\n\
+            stream bit-exact partials back (see README §Fleet)\n\
   retrieve  image-retrieval demo (paper's machine-vision motivation)\n\
   job       durable det-jobs: submit|status|resume|list|export\n\
             (journaled, resumable sweeps — kill-safe, bitwise-identical\n\
-            results after resume; see README §Durable jobs)\n\
+            results after resume; submit --fleet opens the job for\n\
+            remote workers instead of running locally)\n\
   help      this text\n";
 
 fn build_coordinator(a: &Args) -> Result<Coordinator> {
@@ -291,18 +300,36 @@ fn cmd_scaling(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    a.check_known(&[&COORD_OPTS[..], &["port", "host", "jobs-dir"]].concat())?;
+    a.check_known(
+        &[&COORD_OPTS[..], &["port", "host", "jobs-dir", "fleet-chunks", "fleet-ttl-ms"]]
+            .concat(),
+    )?;
     let port: u16 = a.get_parse("port", 7171u16)?;
     let host = a.get("host").unwrap_or("127.0.0.1");
     let jobs_dir = a.get("jobs-dir").unwrap_or("raddet-jobs");
     let coord = build_coordinator(a)?;
     let manager = JobManager::new(JobStore::open(jobs_dir)?, a.get_parse("workers", 0usize)?);
-    let handle = Server::with_jobs(coord, manager).start(&format!("{host}:{port}"))?;
+    // Fleet knobs: chunk count is part of a job's spec (it fixes the
+    // f64 composition grouping), so submitting the same matrix with the
+    // same --fleet-chunks as a local `job submit --chunks` reproduces
+    // the identical bits.
+    let fleet_cfg = crate::fleet::FleetConfig {
+        lease_ttl: std::time::Duration::from_millis(a.get_parse("fleet-ttl-ms", 30_000u64)?),
+        // Default matches `raddet job submit --chunks` so default fleet
+        // and local runs of one matrix stay bit-comparable.
+        default_chunks: a.get_parse("fleet-chunks", 32usize)?,
+        default_batch: a.get_parse("batch", 256usize)?,
+        ..Default::default()
+    };
+    let handle = Server::with_jobs(coord, manager)
+        .with_fleet_config(fleet_cfg)
+        .start(&format!("{host}:{port}"))?;
     println!("raddet service listening on {}", handle.addr());
     println!("jobs journal dir: {jobs_dir}");
     println!(
-        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | PING | QUIT"
+        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | PING | QUIT (spec: docs/PROTOCOL.md)"
     );
+    println!("fleet: join workers with `raddet worker --connect {host}:{port}`");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -391,7 +418,7 @@ fn report_job_run(a: &Args, out: &crate::jobs::JobOutcome) {
 fn cmd_job_submit(a: &Args) -> Result<()> {
     a.check_known(&[
         "rows", "cols", "csv", "seed", "lo", "hi", "exact", "engine", "jobs-dir", "chunks",
-        "batch", "job-workers", "max-chunks",
+        "batch", "job-workers", "max-chunks", "fleet", "addr", "wait-ms",
     ])?;
     let engine = match a.get("engine").unwrap_or("prefix") {
         "cpu" => JobEngine::CpuLu,
@@ -408,6 +435,46 @@ fn cmd_job_submit(a: &Args) -> Result<()> {
     } else {
         JobPayload::F64(mat)
     };
+    if a.has_flag("fleet") {
+        // Fleet mode: hand the job to a running server; remote
+        // `raddet worker` processes do the computing. Chunk geometry is
+        // part of the spec (it fixes the f64 composition grouping) and
+        // is *server*-authoritative in fleet mode (`serve
+        // --fleet-chunks`), so silently accepting local geometry flags
+        // would break the bit-reproducibility contract — reject them.
+        for local_only in ["chunks", "batch", "jobs-dir", "job-workers", "max-chunks"] {
+            if a.get(local_only).is_some() {
+                return Err(Error::Config(format!(
+                    "--{local_only} does not apply to --fleet submits: chunk/batch \
+                     geometry comes from the server (serve --fleet-chunks/--batch)"
+                )));
+            }
+        }
+        let addr = a
+            .get("addr")
+            .ok_or_else(|| Error::Config("--fleet needs --addr HOST:PORT".into()))?;
+        let mut client = Client::connect(addr)?;
+        let id = client.job_submit_fleet(payload, engine)?;
+        println!("job id: {id}");
+        println!("  fleet job open on {addr} — start workers with: raddet worker --connect {addr}");
+        let wait_ms: u64 = a.get_parse("wait-ms", 0u64)?;
+        if wait_ms > 0 {
+            let st = client.job_wait(&id, wait_ms)?;
+            println!(
+                "job {}: {}   chunks {}/{}   terms {}/{}{}",
+                st.id,
+                st.state,
+                st.chunks_done,
+                st.chunks_total,
+                st.terms_done,
+                st.terms_total,
+                st.value
+                    .map_or_else(String::new, |v| format!("   det = {}", v.render()))
+            );
+        }
+        client.quit();
+        return Ok(());
+    }
     let spec = JobSpec {
         payload,
         engine,
@@ -419,6 +486,34 @@ fn cmd_job_submit(a: &Args) -> Result<()> {
     println!("job id: {id}");
     let out = job_runner(a)?.run(&store, &id)?;
     report_job_run(a, &out);
+    Ok(())
+}
+
+fn cmd_worker(a: &Args) -> Result<()> {
+    a.check_known(&["connect", "id", "job", "poll-ms", "max-chunks", "exit-on-idle"])?;
+    let addr = a
+        .get("connect")
+        .ok_or_else(|| Error::Config("missing --connect HOST:PORT".into()))?;
+    let mut cfg = crate::fleet::WorkerConfig::new(match a.get("id") {
+        Some(id) => id.to_string(),
+        None => format!("w-{}", std::process::id()),
+    });
+    cfg.job = a.get("job").map(Into::into);
+    cfg.poll = std::time::Duration::from_millis(a.get_parse("poll-ms", 500u64)?);
+    cfg.exit_on_idle = a.has_flag("exit-on-idle");
+    cfg.max_chunks = match a.get("max-chunks") {
+        None => None,
+        Some(v) => Some(v.parse::<u64>().map_err(|_| {
+            Error::Config(format!("bad value for --max-chunks: {v:?}"))
+        })?),
+    };
+    println!("worker {} joining {addr} …", cfg.id);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let report = crate::fleet::run_worker(addr, &cfg, &stop)?;
+    println!(
+        "worker {}: {} chunks accepted, {} terms, {} rejected",
+        cfg.id, report.chunks, report.terms, report.rejected
+    );
     Ok(())
 }
 

@@ -307,6 +307,86 @@ impl ExactLeaseRunner {
     }
 }
 
+/// Borrowed lease input: the matrix plus (implicitly) the arithmetic
+/// path a chunk must be evaluated on.
+#[derive(Clone, Copy, Debug)]
+pub enum LeaseMatrix<'a> {
+    /// Float path.
+    F64(&'a MatF64),
+    /// Exact `i128` path.
+    Exact(&'a MatI64),
+}
+
+/// A chunk's deterministic partial from either arithmetic path — the
+/// coordinator-level twin of the jobs layer's `JobValue` (which adds
+/// the wire/journal encoding on top).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LeasePartial {
+    /// Float partial.
+    F64(f64),
+    /// Exact partial.
+    Exact(i128),
+}
+
+/// The remote-lease adapter: one reusable executor covering the whole
+/// engine matrix (float `cpu-lu`/`prefix`, exact Bareiss/prefix), so a
+/// lease executor — the in-process jobs runner or a fleet worker that
+/// only knows a job's spec tags — can run any chunk without matching on
+/// engine families itself.
+pub struct ChunkRunner {
+    inner: AnyRunner,
+}
+
+enum AnyRunner {
+    Float(LeaseRunner),
+    Exact(ExactLeaseRunner),
+}
+
+impl ChunkRunner {
+    /// Build the runner a job spec calls for: `exact` selects the
+    /// `i128` path, `prefix` the prefix-factored engine over per-term
+    /// lanes; `batch` only shapes the float lane engine.
+    pub fn new(exact: bool, prefix: bool, m: usize, batch: usize) -> Self {
+        let inner = if exact {
+            AnyRunner::Exact(ExactLeaseRunner::new(m, prefix))
+        } else if prefix {
+            AnyRunner::Float(LeaseRunner::prefix(m))
+        } else {
+            AnyRunner::Float(LeaseRunner::cpu(m, batch))
+        };
+        Self { inner }
+    }
+
+    /// Engine label (metrics/CLI).
+    pub fn label(&self) -> &'static str {
+        match &self.inner {
+            AnyRunner::Float(r) => r.label(),
+            AnyRunner::Exact(r) => r.label(),
+        }
+    }
+
+    /// Evaluate one rank chunk to its deterministic partial. Errors if
+    /// the matrix's arithmetic path does not match the runner's.
+    pub fn run_chunk(
+        &mut self,
+        a: LeaseMatrix<'_>,
+        table: &PascalTable,
+        chunk: Chunk,
+    ) -> Result<(LeasePartial, WorkerMetrics)> {
+        match (&mut self.inner, a) {
+            (AnyRunner::Float(r), LeaseMatrix::F64(a)) => {
+                let (v, wm) = r.run_chunk(a, table, chunk)?;
+                Ok((LeasePartial::F64(v), wm))
+            }
+            (AnyRunner::Exact(r), LeaseMatrix::Exact(a)) => {
+                let (v, wm) = r.run_chunk(a, table, chunk)?;
+                Ok((LeasePartial::Exact(v), wm))
+            }
+            _ => Err(Error::Job("runner/payload mismatch".into())),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +461,46 @@ mod tests {
                 acc += v;
             }
             assert_eq!(acc, want, "use_prefix={use_prefix}");
+        }
+    }
+
+    #[test]
+    fn chunk_runner_covers_engine_matrix_and_rejects_mismatch() {
+        let af = gen::uniform(&mut TestRng::from_seed(25), 3, 9, -1.0, 1.0);
+        let ai = gen::integer(&mut TestRng::from_seed(26), 3, 9, -6, 6);
+        let table = PascalTable::new(9, 3).unwrap();
+        let total = combination_count(9, 3).unwrap();
+        let seq = radic_det_seq(&af).unwrap();
+        let want = radic_det_exact(&ai).unwrap();
+        for prefix in [false, true] {
+            // Float family sums to the sequential reference.
+            let mut fr = ChunkRunner::new(false, prefix, 3, 16);
+            let mut sum = NeumaierSum::new();
+            for c in chunks_of(total, 4) {
+                match fr.run_chunk(LeaseMatrix::F64(&af), &table, c).unwrap() {
+                    (LeasePartial::F64(v), _) => sum.add(v),
+                    other => panic!("{other:?}"),
+                }
+            }
+            assert!(
+                (sum.value() - seq).abs() < 1e-9 * seq.abs().max(1.0),
+                "{}",
+                fr.label()
+            );
+            // Exact family sums to the exact reference.
+            let mut er = ChunkRunner::new(true, prefix, 3, 16);
+            let mut acc: i128 = 0;
+            for c in chunks_of(total, 4) {
+                match er.run_chunk(LeaseMatrix::Exact(&ai), &table, c).unwrap() {
+                    (LeasePartial::Exact(v), _) => acc += v,
+                    other => panic!("{other:?}"),
+                }
+            }
+            assert_eq!(acc, want, "{}", er.label());
+            // Path mismatch is an error, not a wrong answer.
+            let c0 = Chunk { start: 0, len: 5 };
+            assert!(fr.run_chunk(LeaseMatrix::Exact(&ai), &table, c0).is_err());
+            assert!(er.run_chunk(LeaseMatrix::F64(&af), &table, c0).is_err());
         }
     }
 

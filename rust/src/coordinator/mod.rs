@@ -25,7 +25,7 @@ pub mod scheduler;
 
 pub use batcher::BatchBuilder;
 pub use engine::{BlockOutcome, CpuEngine, DetEngine, PrefixEngine};
-pub use lease::{ExactLeaseRunner, LeaseRunner};
+pub use lease::{ChunkRunner, ExactLeaseRunner, LeaseMatrix, LeasePartial, LeaseRunner};
 pub use metrics::{JobMetrics, WorkerMetrics};
 pub use scheduler::{JobSchedule, Schedule};
 

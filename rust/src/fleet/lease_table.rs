@@ -1,0 +1,787 @@
+//! Server-side lease table — the authority over which worker owns which
+//! chunk of which open fleet job.
+//!
+//! One table serves one [`JobStore`]. A job is *opened* for fleet
+//! execution either by a `JOB SUBMIT fleet …` request or lazily by a
+//! later `LEASE GRANT` (which is how a fleet sweep survives a server
+//! restart: the new process re-opens the job from its journal and only
+//! the unjournaled chunks are granted again). Fleet membership is
+//! remembered on disk — an `<id>.fleet` marker beside the journal, set
+//! on open and cleared on finish/close — so even an *unpinned* grant
+//! (no job filter) after a restart finds and adopts the interrupted
+//! sweep; `JOB CANCEL` clears the marker, which is what keeps a
+//! cancelled fleet job from being silently re-adopted. While open, the
+//! table holds the job's cross-process [`RunLock`] and its journal open
+//! for append — remote completions are journaled through exactly the
+//! same records an in-process [`crate::jobs::JobRunner`] writes, so a
+//! fleet-computed determinant is bitwise-identical to a single-process
+//! run and `JOB STATUS` needs no fleet-specific path.
+//!
+//! Failure semantics:
+//!
+//! * **Worker death** — a lease not renewed within the TTL expires
+//!   (lazily, at the next grant) and the chunk is granted to another
+//!   worker. Chunk partials are deterministic, so a reassignment can
+//!   never change the final bits, only the wall-clock.
+//! * **Late duplicates** — a `LEASE COMPLETE` for a chunk that another
+//!   worker already delivered is rejected without touching the journal;
+//!   a re-delivery by the *same* worker (a retry after a dropped reply)
+//!   is acknowledged idempotently.
+//! * **Server death** — the journal holds every accepted partial
+//!   (fsync'd before the completion is acknowledged); the in-memory
+//!   lease state is rebuilt empty on restart and outstanding remote
+//!   work is simply re-granted.
+//!
+//! Known scaling tradeoff: one table-wide mutex serializes all `LEASE`
+//! traffic, including the journal fsync inside [`LeaseTable::complete`]
+//! and the journal replay inside a lazy open. At the current scale
+//! (chunks of ~10³–10⁶ terms, completions per job every hundreds of
+//! milliseconds at best) the lock is never the bottleneck; if fleets
+//! grow to many hot jobs, the evolution path is a per-open-job lock
+//! with the table map only guarding membership — keep lease TTLs well
+//! above worst-case fsync latency until then.
+
+use crate::combin::Chunk;
+use crate::jobs::{
+    compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, JobValue,
+    Journal, LoadedJob, Record, RunLock,
+};
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Fleet knobs (server side).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// How long a granted lease stays valid without renewal.
+    pub lease_ttl: Duration,
+    /// Chunk count for `JOB SUBMIT fleet` specs. Deliberately equal to
+    /// the `raddet job submit` default — chunk geometry fixes the f64
+    /// composition grouping, so equal defaults keep a default fleet
+    /// run bit-comparable to a default local run of the same matrix.
+    pub default_chunks: usize,
+    /// Lane batch size for fleet-submitted specs (float `cpu` engine).
+    pub default_batch: usize,
+    /// Cap on simultaneously open fleet jobs (each pins a run lock and
+    /// an open journal).
+    pub max_open: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            lease_ttl: Duration::from_secs(30),
+            default_chunks: 32,
+            default_batch: 256,
+            max_open: 8,
+        }
+    }
+}
+
+/// One open fleet job: plan + journal + lease bookkeeping.
+struct OpenJob {
+    spec: JobSpec,
+    plan: Vec<Chunk>,
+    total_terms: u128,
+    journal: Journal,
+    _lock: RunLock,
+    completed: BTreeMap<u64, ChunkRecord>,
+    /// chunk → (worker, lease deadline).
+    leases: HashMap<u64, (String, Instant)>,
+    /// chunk → worker whose partial was journaled (idempotent re-acks
+    /// for retried `LEASE COMPLETE`s).
+    completed_by: HashMap<u64, String>,
+}
+
+impl OpenJob {
+    /// Drop leases whose deadline has passed; their chunks become
+    /// grantable again.
+    fn expire_leases(&mut self, now: Instant) {
+        self.leases.retain(|_, (_, deadline)| *deadline > now);
+    }
+
+    /// Lowest-index chunk that is neither journaled nor actively leased.
+    fn next_free_chunk(&self) -> Option<u64> {
+        (0..self.plan.len() as u64)
+            .find(|i| !self.completed.contains_key(i) && !self.leases.contains_key(i))
+    }
+}
+
+/// A granted chunk lease, as handed to the protocol layer.
+#[derive(Clone, Debug)]
+pub struct Grant {
+    /// The job id.
+    pub job: String,
+    /// Chunk index within the job's plan.
+    pub chunk_index: u64,
+    /// The rank range to evaluate.
+    pub chunk: Chunk,
+    /// Lease validity; the worker must renew or complete within it.
+    pub ttl: Duration,
+    /// The job spec, when the caller asked for it (first grant of this
+    /// job on a connection).
+    pub spec: Option<JobSpec>,
+}
+
+/// Outcome of a `LEASE GRANT`.
+#[derive(Clone, Debug)]
+pub enum GrantOutcome {
+    /// A chunk lease.
+    Granted(Grant),
+    /// No open fleet job has a free chunk right now.
+    Idle,
+    /// The requested job has finished (its DONE record is journaled).
+    Complete,
+}
+
+/// What a `LEASE COMPLETE` achieved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompleteOutcome {
+    /// The partial was journaled; `finished` marks the job's last chunk
+    /// (DONE composed and journaled, job closed).
+    Accepted {
+        /// Chunks journaled after this completion.
+        chunks_done: u64,
+        /// Chunks in the plan.
+        chunks_total: u64,
+        /// The job is now complete.
+        finished: bool,
+    },
+    /// Idempotent re-delivery by the worker that already completed the
+    /// chunk: acknowledged, nothing journaled.
+    Duplicate {
+        /// Chunks journaled.
+        chunks_done: u64,
+        /// Chunks in the plan.
+        chunks_total: u64,
+    },
+}
+
+/// Scan the open-job map for the lowest grantable chunk (lowest job id
+/// first), honouring `filter`, and lease it to `worker`.
+fn grant_from<F: Fn(&str) -> bool>(
+    jobs: &mut BTreeMap<String, OpenJob>,
+    worker: &str,
+    filter: Option<&str>,
+    want_spec: &F,
+    now: Instant,
+    ttl: Duration,
+) -> Option<Grant> {
+    for (id, oj) in jobs.iter_mut() {
+        if filter.is_some_and(|f| f != id.as_str()) {
+            continue;
+        }
+        oj.expire_leases(now);
+        if let Some(idx) = oj.next_free_chunk() {
+            oj.leases.insert(idx, (worker.to_string(), now + ttl));
+            let spec = want_spec(id).then(|| oj.spec.clone());
+            return Some(Grant {
+                job: id.clone(),
+                chunk_index: idx,
+                chunk: oj.plan[idx as usize],
+                ttl,
+                spec,
+            });
+        }
+    }
+    None
+}
+
+/// The lease authority over one [`JobStore`].
+pub struct LeaseTable {
+    store: JobStore,
+    cfg: FleetConfig,
+    jobs: Mutex<BTreeMap<String, OpenJob>>,
+}
+
+impl LeaseTable {
+    /// New table over `store`.
+    pub fn new(store: JobStore, cfg: FleetConfig) -> Self {
+        Self { store, cfg, jobs: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The underlying store.
+    pub fn store(&self) -> &JobStore {
+        &self.store
+    }
+
+    /// The configured lease TTL.
+    pub fn lease_ttl(&self) -> Duration {
+        self.cfg.lease_ttl
+    }
+
+    /// Ids of currently open fleet jobs (sorted).
+    pub fn open_jobs(&self) -> Vec<String> {
+        self.lock_jobs().keys().cloned().collect()
+    }
+
+    fn lock_jobs(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, OpenJob>> {
+        self.jobs.lock().expect("lease table poisoned")
+    }
+
+    /// Create a durable job and open it for fleet leasing. No chunk
+    /// runs until a worker claims it.
+    pub fn submit(&self, payload: JobPayload, engine: JobEngine) -> Result<String> {
+        let spec = JobSpec {
+            payload,
+            engine,
+            chunks: self.cfg.default_chunks,
+            batch: self.cfg.default_batch,
+        };
+        {
+            // Fast-fail on capacity before writing a matrix-sized journal.
+            let jobs = self.lock_jobs();
+            if jobs.len() >= self.cfg.max_open {
+                return Err(Error::Job(format!(
+                    "too many open fleet jobs ({}); wait for one to finish",
+                    jobs.len()
+                )));
+            }
+        }
+        let id = self.store.create(&spec)?;
+        let mut jobs = self.lock_jobs();
+        match self.open_entry(&mut jobs, &id) {
+            Ok(_) => Ok(id),
+            Err(e) => {
+                // Lost a capacity/lock race after creating: the id never
+                // reached the caller, so remove the orphan journal.
+                if let Ok(path) = self.store.journal_path(&id) {
+                    let _ = std::fs::remove_file(path);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Open (register) job `id` for fleet leasing. Idempotent for
+    /// already-open jobs; `Ok(false)` when the job is already complete.
+    pub fn open(&self, id: &str) -> Result<bool> {
+        let mut jobs = self.lock_jobs();
+        self.open_entry(&mut jobs, id)
+    }
+
+    /// Open `id` into `jobs`; `Ok(false)` ⇒ already complete (nothing
+    /// inserted). A journal whose chunks are all present but whose DONE
+    /// record was lost to a crash is finished here on the spot.
+    fn open_entry(
+        &self,
+        jobs: &mut BTreeMap<String, OpenJob>,
+        id: &str,
+    ) -> Result<bool> {
+        if jobs.contains_key(id) {
+            return Ok(true);
+        }
+        if !self.store.exists(id) {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        if jobs.len() >= self.cfg.max_open {
+            return Err(Error::Job(format!(
+                "too many open fleet jobs ({}); wait for one to finish",
+                jobs.len()
+            )));
+        }
+        let lock = self.store.lock_job(id)?;
+        let path = self.store.journal_path(id)?;
+        let (mut journal, records) = Journal::open_append(&path)?;
+        let job = LoadedJob::from_records(id, records)?;
+        if job.done.is_some() {
+            self.clear_fleet_marker(id);
+            return Ok(false); // lock + journal drop here
+        }
+        if job.completed.len() == job.plan.len() {
+            // All partials journaled but the DONE record was torn away:
+            // compose and finish without granting anything.
+            let (value, terms) = compose_partials(job.plan.len(), &job.completed)?;
+            if terms != job.total_terms {
+                return Err(Error::Job(format!(
+                    "job {id}: journaled {terms} terms, expected {}",
+                    job.total_terms
+                )));
+            }
+            journal.append(&Record::Done { terms, value })?;
+            self.clear_fleet_marker(id);
+            return Ok(false);
+        }
+        jobs.insert(
+            id.to_string(),
+            OpenJob {
+                spec: job.spec,
+                plan: job.plan,
+                total_terms: job.total_terms,
+                journal,
+                _lock: lock,
+                completed: job.completed,
+                leases: HashMap::new(),
+                completed_by: HashMap::new(),
+            },
+        );
+        self.set_fleet_marker(id);
+        Ok(true)
+    }
+
+    /// Persist fleet membership beside the journal (`<id>.fleet`) so an
+    /// unpinned grant in a future server process can find the sweep.
+    /// Best-effort: a lost marker only costs restart adoption, never
+    /// correctness (the journal stays the single source of truth).
+    fn set_fleet_marker(&self, id: &str) {
+        let _ = std::fs::write(self.store.root().join(format!("{id}.fleet")), b"fleet\n");
+    }
+
+    fn clear_fleet_marker(&self, id: &str) {
+        let _ = std::fs::remove_file(self.store.root().join(format!("{id}.fleet")));
+    }
+
+    /// Ids carrying a fleet marker (sorted) — candidates for lazy
+    /// adoption by an unpinned grant.
+    fn fleet_markers(&self) -> Vec<String> {
+        let mut ids = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(self.store.root()) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(id) = name.strip_suffix(".fleet") {
+                    if valid_id(id) {
+                        ids.push(id.to_string());
+                    }
+                }
+            }
+        }
+        ids.sort();
+        ids
+    }
+
+    /// Claim a chunk lease for `worker`. `filter` restricts the claim
+    /// to one job (opening it lazily if needed); without a filter, open
+    /// jobs are tried first and then any on-disk fleet marker is
+    /// adopted (the server-restart path for unpinned workers).
+    /// `want_spec` decides — per granted job id — whether the grant
+    /// carries the spec (the server passes its per-connection sent-spec
+    /// cache).
+    pub fn grant(
+        &self,
+        worker: &str,
+        filter: Option<&str>,
+        want_spec: impl Fn(&str) -> bool,
+    ) -> Result<GrantOutcome> {
+        let mut jobs = self.lock_jobs();
+        if let Some(id) = filter {
+            if !jobs.contains_key(id) && !self.open_entry(&mut jobs, id)? {
+                return Ok(GrantOutcome::Complete);
+            }
+        }
+        let now = Instant::now();
+        if let Some(g) = grant_from(&mut jobs, worker, filter, &want_spec, now, self.cfg.lease_ttl)
+        {
+            return Ok(GrantOutcome::Granted(g));
+        }
+        if filter.is_none() {
+            // Nothing leasable in memory: adopt fleet-marked jobs from
+            // disk (interrupted sweeps from a previous server process).
+            // Open errors are soft here — a job locked by another
+            // runner or mid-release just isn't adoptable *yet*; an
+            // orphan marker (journal gone) is cleaned up.
+            let mut adopted = false;
+            for id in self.fleet_markers() {
+                if jobs.contains_key(&id) {
+                    continue;
+                }
+                match self.open_entry(&mut jobs, &id) {
+                    Ok(true) => adopted = true,
+                    Ok(false) => {}
+                    Err(_) => {
+                        if !self.store.exists(&id) {
+                            self.clear_fleet_marker(&id);
+                        }
+                    }
+                }
+            }
+            if adopted {
+                if let Some(g) =
+                    grant_from(&mut jobs, worker, None, &want_spec, now, self.cfg.lease_ttl)
+                {
+                    return Ok(GrantOutcome::Granted(g));
+                }
+            }
+        }
+        Ok(GrantOutcome::Idle)
+    }
+
+    /// Extend `worker`'s lease on a chunk by one TTL window. An expired
+    /// lease can be revived here as long as the chunk has not been
+    /// swept and re-granted (expiry is lazy, at grant time).
+    pub fn renew(&self, worker: &str, id: &str, chunk: u64) -> Result<Duration> {
+        let mut jobs = self.lock_jobs();
+        let oj = jobs
+            .get_mut(id)
+            .ok_or_else(|| Error::Job(format!("job {id:?} is not open for fleet leasing")))?;
+        match oj.leases.get_mut(&chunk) {
+            Some((w, deadline)) if w.as_str() == worker => {
+                *deadline = Instant::now() + self.cfg.lease_ttl;
+                Ok(self.cfg.lease_ttl)
+            }
+            _ => Err(Error::Job(format!(
+                "lease lost: worker {worker:?} does not hold chunk {chunk} of job {id:?}"
+            ))),
+        }
+    }
+
+    /// Deliver a chunk partial. Accepted partials are journaled (fsync'd)
+    /// before this returns; the final chunk composes the DONE record and
+    /// closes the job, releasing its run lock.
+    pub fn complete(
+        &self,
+        worker: &str,
+        id: &str,
+        chunk: u64,
+        rec: ChunkRecord,
+    ) -> Result<CompleteOutcome> {
+        let mut jobs = self.lock_jobs();
+        let Some(oj) = jobs.get_mut(id) else {
+            // The common benign case of a missing entry: the worker's
+            // COMPLETE ack was lost and the retry arrived after the
+            // final chunk closed the job. The journal decides — a
+            // complete job with this chunk in plan gets an idempotent
+            // re-ack (nothing journaled either way), anything else is
+            // the ordinary not-open error.
+            drop(jobs);
+            if let Ok(st) = self.store.status(id) {
+                if st.complete && (chunk as usize) < st.chunks_total {
+                    return Ok(CompleteOutcome::Duplicate {
+                        chunks_done: st.chunks_done as u64,
+                        chunks_total: st.chunks_total as u64,
+                    });
+                }
+            }
+            return Err(Error::Job(format!("job {id:?} is not open for fleet leasing")));
+        };
+        let total = oj.plan.len() as u64;
+        if chunk >= total {
+            return Err(Error::Job(format!(
+                "chunk index {chunk} outside plan of {total} for job {id:?}"
+            )));
+        }
+        if oj.completed.contains_key(&chunk) {
+            let done = oj.completed.len() as u64;
+            return match oj.completed_by.get(&chunk) {
+                Some(w) if w == worker => {
+                    Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total })
+                }
+                Some(_) => Err(Error::Job(format!(
+                    "lease lost: chunk {chunk} of job {id:?} was completed by another worker"
+                ))),
+                // Journaled before this open of the job (completer
+                // identity is not persisted): treat a re-delivery as
+                // the idempotent retry the protocol promises — nothing
+                // is journaled either way.
+                None => Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total }),
+            };
+        }
+        if oj.leases.get(&chunk).is_some_and(|(w, _)| w != worker) {
+            return Err(Error::Job(format!(
+                "lease lost: chunk {chunk} of job {id:?} is leased to another worker"
+            )));
+        }
+        // A holder whose lease expired but whose chunk was never
+        // re-granted still lands here: the partial is deterministic, so
+        // accepting it loses nothing and saves a recompute.
+        if rec.terms as u128 != oj.plan[chunk as usize].len {
+            return Err(Error::Job(format!(
+                "chunk {chunk} of job {id:?}: {} terms delivered, plan says {}",
+                rec.terms, oj.plan[chunk as usize].len
+            )));
+        }
+        let kind_ok = matches!(
+            (&oj.spec.payload, &rec.value),
+            (JobPayload::F64(_), JobValue::F64(_)) | (JobPayload::Exact(_), JobValue::Exact(_))
+        );
+        if !kind_ok {
+            return Err(Error::Job(format!(
+                "chunk {chunk} of job {id:?}: value kind does not match the job payload"
+            )));
+        }
+        oj.journal.append(&Record::Chunk { index: chunk, rec })?;
+        oj.completed.insert(chunk, rec);
+        oj.completed_by.insert(chunk, worker.to_string());
+        oj.leases.remove(&chunk);
+        let done = oj.completed.len() as u64;
+        let finished = done == total;
+        if finished {
+            let (value, terms) = compose_partials(oj.plan.len(), &oj.completed)?;
+            if terms != oj.total_terms {
+                return Err(Error::Job(format!(
+                    "job {id}: journaled {terms} terms, expected {}",
+                    oj.total_terms
+                )));
+            }
+            oj.journal.append(&Record::Done { terms, value })?;
+            jobs.remove(id); // drops the journal and releases the run lock
+            self.clear_fleet_marker(id);
+        }
+        Ok(CompleteOutcome::Accepted { chunks_done: done, chunks_total: total, finished })
+    }
+
+    /// Give `worker`'s lease on a chunk back to the free pool.
+    pub fn abandon(&self, worker: &str, id: &str, chunk: u64) -> Result<()> {
+        let mut jobs = self.lock_jobs();
+        let oj = jobs
+            .get_mut(id)
+            .ok_or_else(|| Error::Job(format!("job {id:?} is not open for fleet leasing")))?;
+        match oj.leases.get(&chunk) {
+            Some((w, _)) if w == worker => {
+                oj.leases.remove(&chunk);
+                Ok(())
+            }
+            _ => Err(Error::Job(format!(
+                "lease lost: worker {worker:?} does not hold chunk {chunk} of job {id:?}"
+            ))),
+        }
+    }
+
+    /// Close an open fleet job (cooperative pause): stop granting,
+    /// clear its fleet marker (so unpinned grants won't silently
+    /// re-adopt a cancelled job), release its run lock. Journaled
+    /// chunks survive — a job-pinned `LEASE GRANT`, `JOB RESUME`, or
+    /// `raddet job resume` picks the sweep up from the journal.
+    /// Returns whether the job was open.
+    pub fn close(&self, id: &str) -> bool {
+        let closed = self.lock_jobs().remove(id).is_some();
+        if closed {
+            self.clear_fleet_marker(id);
+        }
+        closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{JobRunner, RunnerConfig};
+    use crate::matrix::gen;
+    use crate::testkit::TestRng;
+
+    fn tmp_table(tag: &str, ttl: Duration) -> LeaseTable {
+        let store =
+            JobStore::open(crate::testkit::scratch_dir(&format!("fleet-{tag}"))).unwrap();
+        LeaseTable::new(
+            store,
+            FleetConfig { lease_ttl: ttl, default_chunks: 6, ..Default::default() },
+        )
+    }
+
+    fn submit_f64(table: &LeaseTable, seed: u64) -> String {
+        let a = gen::uniform(&mut TestRng::from_seed(seed), 3, 9, -1.0, 1.0);
+        table.submit(JobPayload::F64(a), JobEngine::Prefix).unwrap()
+    }
+
+    /// Compute a granted chunk the way a worker would.
+    fn compute(spec: &JobSpec, chunk: Chunk) -> ChunkRecord {
+        let (m, n) = spec.shape();
+        let table = crate::combin::PascalTable::new(n as u64, m as u64).unwrap();
+        let mut runner = spec.runner();
+        let (partial, wm) = runner.run_chunk(spec.payload.as_lease(), &table, chunk).unwrap();
+        ChunkRecord { value: partial.into(), terms: wm.terms, micros: 1 }
+    }
+
+    #[test]
+    fn grant_complete_drains_to_done_matching_inprocess_bits() {
+        let table = tmp_table("drain", Duration::from_secs(10));
+        let id = submit_f64(&table, 61);
+        // Reference: the identical spec run by the in-process runner.
+        let spec = {
+            let g = match table.grant("w0", Some(id.as_str()), |_| true).unwrap() {
+                GrantOutcome::Granted(g) => g,
+                other => panic!("{other:?}"),
+            };
+            let spec = g.spec.clone().unwrap();
+            table.abandon("w0", &id, g.chunk_index).unwrap();
+            spec
+        };
+        let ref_store =
+            JobStore::open(crate::testkit::scratch_dir("fleet-drain-ref")).unwrap();
+        let ref_id = ref_store.create(&spec).unwrap();
+        let ref_out = JobRunner::new(RunnerConfig::default())
+            .run(&ref_store, &ref_id)
+            .unwrap();
+        let want = ref_out.status.value.unwrap();
+
+        // Drain all chunks through grant/complete.
+        let mut finished = false;
+        while !finished {
+            let g = match table.grant("w1", Some(id.as_str()), |_| true).unwrap() {
+                GrantOutcome::Granted(g) => g,
+                other => panic!("{other:?}"),
+            };
+            let rec = compute(g.spec.as_ref().unwrap_or(&spec), g.chunk);
+            match table.complete("w1", &id, g.chunk_index, rec).unwrap() {
+                CompleteOutcome::Accepted { finished: f, .. } => finished = f,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(matches!(
+            table.grant("w1", Some(id.as_str()), |_| true).unwrap(),
+            GrantOutcome::Complete
+        ));
+        let st = table.store().status(&id).unwrap();
+        assert!(st.complete);
+        match (st.value.unwrap(), want) {
+            (JobValue::F64(a), JobValue::F64(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_lease_is_regranted_and_late_complete_rejected() {
+        let table = tmp_table("expiry", Duration::from_millis(20));
+        let id = submit_f64(&table, 62);
+        let ga = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        let spec = ga.spec.clone().unwrap();
+        // wa stops renewing; past the TTL the same chunk goes to wb.
+        std::thread::sleep(Duration::from_millis(60));
+        let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(gb.chunk_index, ga.chunk_index, "expired chunk reassigned first");
+        let rec = compute(&spec, gb.chunk);
+        assert!(matches!(
+            table.complete("wb", &id, gb.chunk_index, rec).unwrap(),
+            CompleteOutcome::Accepted { .. }
+        ));
+        // wa's late duplicate is rejected and journals nothing…
+        let before = table.store().status(&id).unwrap().chunks_done;
+        let err = table.complete("wa", &id, ga.chunk_index, rec).unwrap_err();
+        assert!(err.to_string().contains("lease lost"), "{err}");
+        assert_eq!(table.store().status(&id).unwrap().chunks_done, before);
+        // …while wb's retry is acknowledged idempotently.
+        assert!(matches!(
+            table.complete("wb", &id, gb.chunk_index, rec).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+        assert_eq!(table.store().status(&id).unwrap().chunks_done, before);
+    }
+
+    #[test]
+    fn renewal_keeps_a_lease_alive() {
+        let table = tmp_table("renew", Duration::from_millis(200));
+        let id = submit_f64(&table, 63);
+        let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(60));
+            table.renew("wa", &id, g.chunk_index).unwrap();
+        }
+        // Well past the original TTL, the chunk is still wa's: a rival
+        // grant gets a different chunk.
+        let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(gb.chunk_index, g.chunk_index);
+        // A stranger cannot renew or abandon wa's lease.
+        assert!(table.renew("wb", &id, g.chunk_index).is_err());
+        assert!(table.abandon("wb", &id, g.chunk_index).is_err());
+    }
+
+    #[test]
+    fn complete_validates_terms_and_kind() {
+        let table = tmp_table("validate", Duration::from_secs(10));
+        let id = submit_f64(&table, 64);
+        let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        let good = compute(g.spec.as_ref().unwrap(), g.chunk);
+        // Wrong term count.
+        let bad_terms = ChunkRecord { terms: good.terms + 1, ..good };
+        assert!(table.complete("wa", &id, g.chunk_index, bad_terms).is_err());
+        // Wrong value kind for an f64 job.
+        let bad_kind = ChunkRecord { value: JobValue::Exact(1), ..good };
+        assert!(table.complete("wa", &id, g.chunk_index, bad_kind).is_err());
+        // Out-of-plan index.
+        assert!(table.complete("wa", &id, 10_000, good).is_err());
+        // The lease survives the rejections and the real record lands.
+        assert!(matches!(
+            table.complete("wa", &id, g.chunk_index, good).unwrap(),
+            CompleteOutcome::Accepted { .. }
+        ));
+    }
+
+    #[test]
+    fn unknown_and_closed_jobs_are_errors() {
+        let table = tmp_table("unknown", Duration::from_secs(10));
+        assert!(table.grant("wa", Some("job-nope"), |_| true).is_err());
+        assert!(table.renew("wa", "job-nope", 0).is_err());
+        let id = submit_f64(&table, 65);
+        assert!(table.close(&id));
+        assert!(!table.close(&id), "close is not idempotent-true");
+        // Closed ⇒ leasing verbs on it fail until re-opened…
+        assert!(table.renew("wa", &id, 0).is_err());
+        // …and a grant lazily re-opens it.
+        assert!(matches!(
+            table.grant("wa", Some(id.as_str()), |_| true).unwrap(),
+            GrantOutcome::Granted(_)
+        ));
+    }
+
+    #[test]
+    fn unpinned_grant_adopts_fleet_jobs_after_restart_and_respects_cancel() {
+        let dir = crate::testkit::scratch_dir("fleet-marker");
+        let store = JobStore::open(&dir).unwrap();
+        let cfg = FleetConfig {
+            lease_ttl: Duration::from_secs(10),
+            default_chunks: 6,
+            ..Default::default()
+        };
+        let t1 = LeaseTable::new(store.clone(), cfg);
+        let a = gen::uniform(&mut TestRng::from_seed(67), 3, 9, -1.0, 1.0);
+        let id = t1.submit(JobPayload::F64(a), JobEngine::Prefix).unwrap();
+        // "Server restart": a fresh table over the same store, empty
+        // in-memory state; the old process's lock must be gone first.
+        drop(t1);
+        let t2 = LeaseTable::new(store.clone(), cfg);
+        match t2.grant("wx", None, |_| true).unwrap() {
+            GrantOutcome::Granted(g) => {
+                assert_eq!(g.job, id, "marker-led adoption of the interrupted sweep");
+                assert!(g.spec.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+        // Cancel clears the marker: yet another "restarted server"
+        // sees nothing to adopt without naming the job.
+        assert!(t2.close(&id));
+        let t3 = LeaseTable::new(store, cfg);
+        assert!(matches!(
+            t3.grant("wy", None, |_| true).unwrap(),
+            GrantOutcome::Idle
+        ));
+        // Naming it still re-opens (explicit resumption).
+        assert!(matches!(
+            t3.grant("wy", Some(id.as_str()), |_| true).unwrap(),
+            GrantOutcome::Granted(_)
+        ));
+    }
+
+    #[test]
+    fn close_releases_the_run_lock_for_inprocess_resume() {
+        let table = tmp_table("close-lock", Duration::from_secs(10));
+        let id = submit_f64(&table, 66);
+        // While open, the run lock blocks an in-process runner.
+        assert!(table.store().lock_job(&id).is_err());
+        assert!(table.close(&id));
+        let out = JobRunner::new(RunnerConfig::default())
+            .run(table.store(), &id)
+            .unwrap();
+        assert!(out.status.complete);
+        // A grant on the finished job reports Complete.
+        assert!(matches!(
+            table.grant("wa", Some(id.as_str()), |_| true).unwrap(),
+            GrantOutcome::Complete
+        ));
+    }
+}

@@ -1,0 +1,44 @@
+//! Worker fleet — sharding one durable det-job across processes.
+//!
+//! The paper's O(n²) bound assumes the `C(n,m)` term space is spread
+//! across many processors; in-process parallelism tops out at one
+//! machine. This subsystem distributes the same block-aligned chunks
+//! the durable-jobs layer journals (see [`crate::jobs`]) across a fleet
+//! of worker *processes* over the TCP service's `LEASE` verbs:
+//!
+//! ```text
+//! server (raddet serve --jobs-dir D)          workers (raddet worker)
+//! ┌──────────────────────────────┐            ┌──────────────────────┐
+//! │ LeaseTable                   │← GRANT ────│ claim chunk, get spec│
+//! │  chunk → free|leased|done    │─ OK LEASE →│ ChunkRunner::run_    │
+//! │  journal (append, fsync)     │← RENEW ────│   chunk (any engine) │
+//! │  RunLock (exclusive)         │← COMPLETE ─│ partial as bit       │
+//! │  compose → DONE              │─ OK ──────→│   pattern            │
+//! └──────────────────────────────┘            └──────────────────────┘
+//! ```
+//!
+//! * [`LeaseTable`] — server side: grants block-aligned chunk leases
+//!   with a TTL, journals remote completions through the job's ordinary
+//!   journal, expires and reassigns the leases of dead workers, and
+//!   composes the DONE record when the last chunk lands.
+//! * [`run_worker`] — client side: the `raddet worker --connect` loop.
+//!   Claims leases, reconstructs the job's bit-exact matrix from the
+//!   grant's embedded spec, computes chunks on the engine the spec
+//!   names ([`crate::coordinator::ChunkRunner`] — `cpu-lu`, `prefix`,
+//!   or the exact Bareiss paths), renews held leases from a heartbeat
+//!   thread, and streams partials back in the journal's bit-pattern
+//!   encoding.
+//!
+//! Because chunk partials are deterministic and composition is the
+//! fixed-order fold of [`crate::jobs::compose_partials`], a determinant
+//! computed by any number of workers — through any interleaving of
+//! crashes, lease expiries, and reassignments — is bitwise-identical
+//! to a single-process run. `rust/tests/fleet_e2e.rs` proves this with
+//! a three-worker fleet and a mid-chunk worker kill; the wire grammar
+//! is specified normatively in `docs/PROTOCOL.md`.
+
+pub mod lease_table;
+pub mod worker;
+
+pub use lease_table::{CompleteOutcome, FleetConfig, Grant, GrantOutcome, LeaseTable};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

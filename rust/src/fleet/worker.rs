@@ -1,0 +1,294 @@
+//! The fleet worker loop behind `raddet worker --connect`.
+//!
+//! A worker is a plain TCP client of the determinant service: it claims
+//! chunk leases (`LEASE GRANT`), reconstructs the job's bit-exact
+//! matrix from the spec embedded in the first grant per job (later
+//! grants say `CACHED`), evaluates each chunk with the
+//! [`ChunkRunner`] the spec's engine tags select, and delivers the
+//! partial (`LEASE COMPLETE`) in the journal's bit-pattern encoding.
+//! A heartbeat thread on its own connection renews the held lease every
+//! [`WorkerConfig::renew_every`], so chunks longer than the server's
+//! TTL survive — and a worker that dies simply stops renewing, which is
+//! exactly the signal the server's lease table needs to reassign.
+//!
+//! Delivery failures are benign by design: a `LEASE COMPLETE` rejected
+//! because the lease expired and another worker finished the chunk is
+//! counted in [`WorkerReport::rejected`] and the loop moves on — the
+//! partial was deterministic, so nothing about the journal is at risk.
+
+use crate::combin::{Chunk, PascalTable};
+use crate::coordinator::ChunkRunner;
+use crate::jobs::JobSpec;
+use crate::service::{Client, GrantReply};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Worker id on the wire (job-id charset; it names this worker in
+    /// lease ownership and error messages).
+    pub id: String,
+    /// Serve only this job (`None` ⇒ any open fleet job). A worker
+    /// pinned to a job exits when the job completes.
+    pub job: Option<String>,
+    /// Idle poll interval when the server has nothing to lease.
+    pub poll: Duration,
+    /// Exit when the server reports no leasable chunk instead of
+    /// polling for more work.
+    pub exit_on_idle: bool,
+    /// Complete at most this many chunks, then exit cleanly.
+    pub max_chunks: Option<u64>,
+    /// Upper bound on the heartbeat period for renewing the held
+    /// lease. The effective cadence is `min(renew_every, ttl/3)` of
+    /// the *granted* TTL, so a server running short leases is renewed
+    /// fast enough automatically.
+    pub renew_every: Duration,
+    /// Failure injection for tests and ops drills: stop dead
+    /// immediately after the Nth grant — the lease is neither computed,
+    /// completed, nor abandoned, exactly like a worker crash. The
+    /// server must recover it by TTL expiry.
+    pub crash_after_grants: Option<u64>,
+}
+
+impl WorkerConfig {
+    /// Defaults for worker `id`: serve any job, poll every 500 ms,
+    /// renew every 5 s, run until stopped.
+    pub fn new(id: impl Into<String>) -> Self {
+        Self {
+            id: id.into(),
+            job: None,
+            poll: Duration::from_millis(500),
+            exit_on_idle: false,
+            max_chunks: None,
+            renew_every: Duration::from_secs(5),
+            crash_after_grants: None,
+        }
+    }
+}
+
+/// What one worker run achieved.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    /// Chunks completed and accepted by the server.
+    pub chunks: u64,
+    /// Radić terms evaluated across accepted chunks.
+    pub terms: u64,
+    /// Completions the server rejected (lease lost to reassignment).
+    pub rejected: u64,
+    /// True when the run ended via [`WorkerConfig::crash_after_grants`].
+    pub crashed: bool,
+}
+
+/// Per-job state a worker caches from the first grant's spec.
+struct CachedJob {
+    spec: JobSpec,
+    table: PascalTable,
+    runner: ChunkRunner,
+}
+
+impl CachedJob {
+    fn build(spec: JobSpec) -> Result<CachedJob> {
+        let (m, n) = spec.shape();
+        let table = PascalTable::new(n as u64, m as u64)?;
+        let runner = spec.runner();
+        Ok(CachedJob { spec, table, runner })
+    }
+}
+
+/// Renew the currently held lease from a second connection so the main
+/// loop can stay buried in chunk compute. Each held lease carries its
+/// own renew period (derived from the granted TTL). Renewal failures
+/// are soft: the connection is rebuilt on the next tick, and if the
+/// lease really is gone the eventual `LEASE COMPLETE` is the
+/// authoritative verdict.
+fn spawn_heartbeat(
+    addr: String,
+    worker: String,
+    held: Arc<Mutex<Option<(String, u64, Duration)>>>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let tick = Duration::from_millis(20);
+        let mut client: Option<Client> = None;
+        let mut last = Instant::now();
+        while !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(tick);
+            let lease = held.lock().expect("held lease poisoned").clone();
+            let Some((job, chunk, every)) = lease else { continue };
+            if last.elapsed() < every {
+                continue;
+            }
+            if client.is_none() {
+                client = Client::connect(&addr).ok();
+            }
+            let renewed = client
+                .as_mut()
+                .is_some_and(|c| c.lease_renew(&worker, &job, chunk).is_ok());
+            if !renewed {
+                client = None;
+            }
+            last = Instant::now();
+        }
+    })
+}
+
+/// Join a running determinant server as a fleet worker and serve chunk
+/// leases until stopped, idle-exhausted, or budget-bounded (see
+/// [`WorkerConfig`]). `stop` makes the loop cooperative: raise it and
+/// the worker finishes (and delivers) its in-flight chunk, then exits.
+pub fn run_worker(addr: &str, cfg: &WorkerConfig, stop: &AtomicBool) -> Result<WorkerReport> {
+    let mut client = Client::connect(addr)?;
+    let mut jobs: HashMap<String, CachedJob> = HashMap::new();
+    let mut report = WorkerReport::default();
+    let mut grants: u64 = 0;
+    let mut grant_errors: u32 = 0;
+    let mut run_err: Option<Error> = None;
+
+    let held: Arc<Mutex<Option<(String, u64, Duration)>>> = Arc::new(Mutex::new(None));
+    let heartbeat_stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = spawn_heartbeat(
+        addr.to_string(),
+        cfg.id.clone(),
+        Arc::clone(&held),
+        Arc::clone(&heartbeat_stop),
+    );
+
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if cfg.max_chunks.is_some_and(|cap| report.chunks >= cap) {
+            break;
+        }
+        let reply = match client.lease_grant(&cfg.id, cfg.job.as_deref()) {
+            Ok(r) => {
+                grant_errors = 0;
+                r
+            }
+            Err(e) => {
+                // Transient conflicts (a just-released run lock still
+                // visible) and dead connections (server restart) are
+                // retried briefly before giving up. Reconnecting also
+                // resets the server's per-connection spec cache, so
+                // dropping ours keeps the two sides consistent.
+                grant_errors += 1;
+                if grant_errors > 50 {
+                    run_err = Some(e);
+                    break;
+                }
+                std::thread::sleep(cfg.poll);
+                if let Ok(fresh) = Client::connect(addr) {
+                    client = fresh;
+                    jobs.clear();
+                }
+                continue;
+            }
+        };
+        match reply {
+            GrantReply::NoLease { reason } => {
+                if reason == "complete" && cfg.job.is_some() {
+                    break; // the one job we serve is done
+                }
+                if cfg.exit_on_idle {
+                    break;
+                }
+                std::thread::sleep(cfg.poll);
+            }
+            GrantReply::Lease { job, chunk, start, len, ttl_ms, spec } => {
+                grants += 1;
+                if cfg.crash_after_grants.is_some_and(|cap| grants >= cap) {
+                    // Die holding the lease: neither complete nor
+                    // abandon — the server's TTL must recover it.
+                    report.crashed = true;
+                    break;
+                }
+                if let Some(spec) = spec {
+                    match CachedJob::build(spec) {
+                        Ok(cj) => {
+                            jobs.insert(job.clone(), cj);
+                        }
+                        Err(e) => {
+                            run_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                let Some(cj) = jobs.get_mut(&job) else {
+                    // `CACHED` for a spec this connection never saw
+                    // (can only follow a server-side anomaly): give the
+                    // lease back rather than compute blind.
+                    let _ = client.lease_abandon(&cfg.id, &job, chunk);
+                    std::thread::sleep(cfg.poll);
+                    continue;
+                };
+                // Renew well inside the granted TTL whatever the
+                // server's lease config is; cfg.renew_every only caps
+                // how chatty the heartbeat may get.
+                let renew_period = cfg
+                    .renew_every
+                    .min(Duration::from_millis((ttl_ms / 3).max(10)));
+                *held.lock().expect("held lease poisoned") =
+                    Some((job.clone(), chunk, renew_period));
+                let t0 = Instant::now();
+                let outcome =
+                    cj.runner
+                        .run_chunk(cj.spec.payload.as_lease(), &cj.table, Chunk { start, len });
+                let micros = t0.elapsed().as_micros() as u64;
+                *held.lock().expect("held lease poisoned") = None;
+                match outcome {
+                    Ok((partial, wm)) => {
+                        match client.lease_complete(
+                            &cfg.id,
+                            &job,
+                            chunk,
+                            wm.terms,
+                            micros,
+                            partial.into(),
+                        ) {
+                            Ok(ack) => {
+                                // A dup ack means some delivery of this
+                                // chunk already counted (possibly by
+                                // another worker after our lease
+                                // expired) — counting it again would
+                                // break chunk conservation.
+                                if !ack.duplicate {
+                                    report.chunks += 1;
+                                    report.terms += wm.terms;
+                                }
+                                if ack.chunks_done == ack.chunks_total {
+                                    // Job finished: drop its cached
+                                    // matrix so a long-lived worker's
+                                    // memory stays bounded by *live*
+                                    // jobs, not every job ever served.
+                                    jobs.remove(&job);
+                                }
+                            }
+                            Err(_) => report.rejected += 1,
+                        }
+                    }
+                    Err(e) => {
+                        let _ = client.lease_abandon(&cfg.id, &job, chunk);
+                        run_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    heartbeat_stop.store(true, Ordering::SeqCst);
+    let _ = heartbeat.join();
+    if report.crashed {
+        drop(client); // no polite QUIT — simulate the crash faithfully
+    } else {
+        client.quit();
+    }
+    match run_err {
+        Some(e) => Err(e),
+        None => Ok(report),
+    }
+}

@@ -64,32 +64,48 @@ pub enum Record {
     },
 }
 
+/// Encode a [`JobSpec`] as the canonical `SPEC …` body — the job
+/// journal's first record *and* the spec payload of a fleet
+/// `OK LEASE … SPEC …` grant reply. One encoder (and one parser,
+/// [`parse_spec_body`]) so the journal and the wire cannot drift:
+/// float values travel as 16-hex-digit IEEE-754 bit patterns either
+/// way, so a worker reconstructs the bit-identical matrix.
+pub fn encode_spec_body(spec: &JobSpec) -> String {
+    let (m, n) = spec.shape();
+    let vals = match &spec.payload {
+        JobPayload::F64(a) => a
+            .data()
+            .iter()
+            .map(|v| format!("{:016x}", v.to_bits()))
+            .collect::<Vec<_>>()
+            .join(","),
+        JobPayload::Exact(a) => a
+            .data()
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+    };
+    format!(
+        "SPEC {} {} {} {} {m} {n} {vals}",
+        spec.payload.kind_str(),
+        spec.engine.as_str(),
+        spec.batch,
+        spec.chunks
+    )
+}
+
+/// Parse a `SPEC …` body produced by [`encode_spec_body`].
+pub fn parse_spec_body(body: &str) -> Result<JobSpec> {
+    match parse_record_body(body)? {
+        Record::Spec(spec) => Ok(spec),
+        _ => Err(bad("not a SPEC body")),
+    }
+}
+
 fn encode_body(rec: &Record) -> String {
     match rec {
-        Record::Spec(spec) => {
-            let (m, n) = spec.shape();
-            let vals = match &spec.payload {
-                JobPayload::F64(a) => a
-                    .data()
-                    .iter()
-                    .map(|v| format!("{:016x}", v.to_bits()))
-                    .collect::<Vec<_>>()
-                    .join(","),
-                JobPayload::Exact(a) => a
-                    .data()
-                    .iter()
-                    .map(|v| v.to_string())
-                    .collect::<Vec<_>>()
-                    .join(","),
-            };
-            format!(
-                "SPEC {} {} {} {} {m} {n} {vals}",
-                spec.payload.kind_str(),
-                spec.engine.as_str(),
-                spec.batch,
-                spec.chunks
-            )
-        }
+        Record::Spec(spec) => encode_spec_body(spec),
         Record::Chunk { index, rec } => format!(
             "CHUNK {index} {} {} {}",
             rec.terms,

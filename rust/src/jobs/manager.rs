@@ -240,6 +240,9 @@ impl JobManager {
 
     /// Block until the job completes, pauses (run ended without
     /// completing), or the timeout elapses; returns the final snapshot.
+    /// A **zero** timeout is the documented pure-poll form of
+    /// `JOB WAIT`: it replies immediately with the current status and
+    /// never touches the wait loop (docs/PROTOCOL.md §JOB WAIT).
     ///
     /// The poll watches the runner handle's `done` flag only — the
     /// journal (whose SPEC record embeds the whole matrix and can be
@@ -249,6 +252,11 @@ impl JobManager {
     pub fn wait(&self, id: &str, timeout: Duration) -> Result<(JobStatus, bool)> {
         if !self.store.exists(id) {
             return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        if timeout.is_zero() {
+            // status() surfaces a pending runner failure exactly like
+            // the loop's take_error check would.
+            return self.status(id);
         }
         let deadline = Instant::now() + timeout;
         loop {
@@ -349,6 +357,29 @@ mod tests {
             assert!(jobs.contains_key(&id2));
         }
         mgr.wait(&id2, Duration::from_secs(30)).unwrap();
+    }
+
+    #[test]
+    fn wait_zero_is_an_immediate_status_poll() {
+        let mgr = tmp_manager("wait-zero");
+        let a = gen::uniform(&mut TestRng::from_seed(46), 4, 11, -1.0, 1.0);
+        let id = mgr.submit(JobPayload::F64(a), JobEngine::Prefix).unwrap();
+        // Immediately after submit the job may be running or already
+        // done — either way the zero-timeout wait must come straight
+        // back with a coherent snapshot, not block for a default.
+        let t0 = Instant::now();
+        let (status, _running) = mgr.wait(&id, Duration::ZERO).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "zero-timeout wait must not block ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(status.id, id);
+        // And on a finished job it reports the final value.
+        mgr.wait(&id, Duration::from_secs(30)).unwrap();
+        let (done, running) = mgr.wait(&id, Duration::ZERO).unwrap();
+        assert!(done.complete && !running);
+        assert!(done.value.is_some());
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod manager;
 pub mod runner;
 pub mod store;
 
-pub use journal::{Journal, MetaRecord, Record, SpecMeta};
+pub use journal::{encode_spec_body, parse_spec_body, Journal, MetaRecord, Record, SpecMeta};
 pub use manager::JobManager;
 pub use runner::{JobOutcome, JobRunner, RunnerConfig};
 pub use store::{valid_id, JobStatus, JobStore, LoadedJob, RunLock};
@@ -62,6 +62,15 @@ impl JobPayload {
         match self {
             JobPayload::F64(a) => (a.rows(), a.cols()),
             JobPayload::Exact(a) => (a.rows(), a.cols()),
+        }
+    }
+
+    /// Borrow the payload as a [`crate::coordinator::LeaseMatrix`] for
+    /// a [`crate::coordinator::ChunkRunner`].
+    pub fn as_lease(&self) -> crate::coordinator::LeaseMatrix<'_> {
+        match self {
+            JobPayload::F64(a) => crate::coordinator::LeaseMatrix::F64(a),
+            JobPayload::Exact(a) => crate::coordinator::LeaseMatrix::Exact(a),
         }
     }
 
@@ -126,6 +135,20 @@ impl JobSpec {
         self.payload.shape()
     }
 
+    /// The [`crate::coordinator::ChunkRunner`] this spec's engine tags
+    /// select — the one place the tag → engine mapping lives, so the
+    /// in-process jobs runner and a fleet worker can never pick
+    /// different engines for the same spec.
+    pub fn runner(&self) -> crate::coordinator::ChunkRunner {
+        let (m, _) = self.shape();
+        crate::coordinator::ChunkRunner::new(
+            matches!(self.payload, JobPayload::Exact(_)),
+            matches!(self.engine, JobEngine::Prefix),
+            m,
+            self.batch,
+        )
+    }
+
     /// The job's deterministic chunk plan plus the total term count.
     ///
     /// Chunk indices returned here are the indices journaled in CHUNK
@@ -177,6 +200,15 @@ pub enum JobValue {
     F64(f64),
     /// Exact partial.
     Exact(i128),
+}
+
+impl From<crate::coordinator::LeasePartial> for JobValue {
+    fn from(p: crate::coordinator::LeasePartial) -> JobValue {
+        match p {
+            crate::coordinator::LeasePartial::F64(v) => JobValue::F64(v),
+            crate::coordinator::LeasePartial::Exact(v) => JobValue::Exact(v),
+        }
+    }
 }
 
 impl JobValue {

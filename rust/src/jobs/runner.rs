@@ -3,9 +3,9 @@
 //!
 //! One run = open the journal for append (truncating any torn tail),
 //! replay completed chunks, then drain the pending chunk list through a
-//! worker pool. Workers execute chunk leases
-//! ([`crate::coordinator::LeaseRunner`] /
-//! [`crate::coordinator::ExactLeaseRunner`]) and hand results to the
+//! worker pool. Workers execute chunk leases through the unified
+//! [`crate::coordinator::ChunkRunner`] adapter (the same one a fleet
+//! worker builds from a grant's spec tags) and hand results to the
 //! single journal writer (this thread), which appends + fsyncs each
 //! CHUNK record — so at any kill point the journal holds only whole,
 //! checksummed records.
@@ -20,9 +20,9 @@
 
 use super::journal::{Journal, Record};
 use super::store::{JobStatus, JobStore, LoadedJob};
-use super::{compose_partials, ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
+use super::{compose_partials, ChunkRecord, JobSpec, JobValue};
 use crate::combin::{Chunk, PascalTable};
-use crate::coordinator::{ExactLeaseRunner, JobMetrics, LeaseRunner, WorkerMetrics};
+use crate::coordinator::{ChunkRunner, JobMetrics, WorkerMetrics};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -58,39 +58,14 @@ pub struct JobRunner {
     cfg: RunnerConfig,
 }
 
-enum AnyRunner {
-    Float(LeaseRunner),
-    Exact(ExactLeaseRunner),
-}
-
-fn make_runner(spec: &JobSpec) -> AnyRunner {
-    let (m, _) = spec.shape();
-    match (&spec.payload, spec.engine) {
-        (JobPayload::F64(_), JobEngine::CpuLu) => AnyRunner::Float(LeaseRunner::cpu(m, spec.batch)),
-        (JobPayload::F64(_), JobEngine::Prefix) => AnyRunner::Float(LeaseRunner::prefix(m)),
-        (JobPayload::Exact(_), eng) => {
-            AnyRunner::Exact(ExactLeaseRunner::new(m, matches!(eng, JobEngine::Prefix)))
-        }
-    }
-}
-
 fn run_chunk_any(
-    runner: &mut AnyRunner,
+    runner: &mut ChunkRunner,
     spec: &JobSpec,
     table: &PascalTable,
     chunk: Chunk,
 ) -> Result<(JobValue, WorkerMetrics)> {
-    match (runner, &spec.payload) {
-        (AnyRunner::Float(lr), JobPayload::F64(a)) => {
-            let (v, wm) = lr.run_chunk(a, table, chunk)?;
-            Ok((JobValue::F64(v), wm))
-        }
-        (AnyRunner::Exact(er), JobPayload::Exact(a)) => {
-            let (v, wm) = er.run_chunk(a, table, chunk)?;
-            Ok((JobValue::Exact(v), wm))
-        }
-        _ => Err(Error::Job("runner/payload mismatch".into())),
-    }
+    let (partial, wm) = runner.run_chunk(spec.payload.as_lease(), table, chunk)?;
+    Ok((partial.into(), wm))
 }
 
 impl JobRunner {
@@ -190,7 +165,10 @@ impl JobRunner {
                     let table = &table;
                     let spec = &job.spec;
                     scope.spawn(move || {
-                        let mut runner = make_runner(spec);
+                        // The same spec→engine mapping a fleet worker
+                        // uses ([`JobSpec::runner`]), so both execution
+                        // paths evaluate chunks through identical code.
+                        let mut runner = spec.runner();
                         loop {
                             if halt.load(Ordering::SeqCst) || stop.load(Ordering::SeqCst) {
                                 break;
@@ -270,6 +248,7 @@ impl JobRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jobs::{JobEngine, JobPayload};
     use crate::linalg::radic_det_seq;
     use crate::matrix::gen;
     use crate::testkit::TestRng;

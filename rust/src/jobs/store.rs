@@ -298,7 +298,7 @@ impl JobStore {
     /// and planned **once per store** ([`Journal::read_spec_meta`] +
     /// [`plan_dims`], cached); each poll then reads only the CHUNK/DONE
     /// tail ([`Journal::replay_tail`]) and reduces it through the same
-    /// [`fold_tail`] the resume path uses.
+    /// `fold_tail` the resume path uses.
     pub fn status(&self, id: &str) -> Result<JobStatus> {
         let path = self.journal_path(id)?;
         if !path.is_file() {

@@ -42,7 +42,14 @@
 //!   fsync'd, checksummed), interrupted sweeps resumed to a
 //!   bitwise-identical result.
 //! * [`service`] — TCP determinant service (the §8 “network overhead”
-//!   future-work study), including `JOB` verbs over the jobs subsystem.
+//!   future-work study), including `JOB` verbs over the jobs subsystem
+//!   and the fleet `LEASE` verbs (`docs/PROTOCOL.md` is the normative
+//!   wire spec).
+//! * [`fleet`] — worker-fleet sharding: a server-side lease table
+//!   grants block-aligned chunks of a durable job to remote
+//!   `raddet worker` processes with TTL expiry and reassignment;
+//!   journaled completions make the distributed result bitwise-equal
+//!   to a single-process run (see `ARCHITECTURE.md`).
 //! * [`apps`] — the paper's motivating application: image retrieval with
 //!   a non-square determinant similarity kernel (refs \[8\], [20–23]).
 //! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
@@ -64,12 +71,18 @@
 //! println!("det = {}", out.det);
 //! ```
 
+// Every public item documents itself; CI turns rustdoc warnings into
+// errors (`cargo doc --no-deps` with RUSTDOCFLAGS=-D warnings), so a
+// new undocumented API fails the build there rather than rotting here.
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod bench;
 pub mod cli;
 pub mod combin;
 pub mod coordinator;
 pub mod error;
+pub mod fleet;
 pub mod jobs;
 pub mod linalg;
 pub mod matrix;

@@ -1,8 +1,9 @@
 //! Blocking client for the determinant service, including the durable
-//! `JOB` verbs (submit / status / wait / cancel / resume).
+//! `JOB` verbs (submit / status / wait / cancel / resume) and the
+//! fleet-worker `LEASE` verbs (grant / renew / complete / abandon).
 
 use super::protocol::{Request, Response};
-use crate::jobs::{JobEngine, JobPayload, JobValue};
+use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{MatF64, MatI64};
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -81,16 +82,28 @@ impl Client {
 
     /// Submit a durable float job; returns the job id immediately.
     pub fn job_submit(&mut self, a: &MatF64, engine: JobEngine) -> Result<String> {
-        self.job_submit_payload(JobPayload::F64(a.clone()), engine)
+        self.job_submit_payload(JobPayload::F64(a.clone()), engine, false)
     }
 
     /// Submit a durable exact (integer) job.
     pub fn job_submit_exact(&mut self, a: &MatI64, engine: JobEngine) -> Result<String> {
-        self.job_submit_payload(JobPayload::Exact(a.clone()), engine)
+        self.job_submit_payload(JobPayload::Exact(a.clone()), engine, false)
     }
 
-    fn job_submit_payload(&mut self, payload: JobPayload, engine: JobEngine) -> Result<String> {
-        match self.roundtrip(&Request::JobSubmit { engine, payload })? {
+    /// Submit a durable job in **fleet mode**: the server opens it for
+    /// `LEASE` claims instead of running it with its own worker pool.
+    /// Returns the job id immediately; chunks run as workers claim them.
+    pub fn job_submit_fleet(&mut self, payload: JobPayload, engine: JobEngine) -> Result<String> {
+        self.job_submit_payload(payload, engine, true)
+    }
+
+    fn job_submit_payload(
+        &mut self,
+        payload: JobPayload,
+        engine: JobEngine,
+        fleet: bool,
+    ) -> Result<String> {
+        match self.roundtrip(&Request::JobSubmit { engine, payload, fleet })? {
             Response::Job { id } => Ok(id),
             Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
@@ -146,10 +159,123 @@ impl Client {
         }
     }
 
+    /// Claim a chunk lease (`LEASE GRANT`). `job` restricts the claim
+    /// to one job; `None` accepts a chunk of any open fleet job.
+    pub fn lease_grant(&mut self, worker: &str, job: Option<&str>) -> Result<GrantReply> {
+        let req = Request::LeaseGrant {
+            worker: worker.to_string(),
+            job: job.map(Into::into),
+        };
+        match self.roundtrip(&req)? {
+            Response::Lease { job, chunk, start, len, ttl_ms, spec } => {
+                Ok(GrantReply::Lease { job, chunk, start, len, ttl_ms, spec })
+            }
+            Response::NoLease { reason } => Ok(GrantReply::NoLease { reason }),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Extend a held lease (`LEASE RENEW`); returns the renewed TTL in
+    /// milliseconds.
+    pub fn lease_renew(&mut self, worker: &str, job: &str, chunk: u64) -> Result<u64> {
+        let req = Request::LeaseRenew {
+            worker: worker.to_string(),
+            job: job.to_string(),
+            chunk,
+        };
+        match self.roundtrip(&req)? {
+            Response::Renewed { ttl_ms } => Ok(ttl_ms),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Deliver a computed chunk partial (`LEASE COMPLETE`). The value
+    /// travels in the bit-exact journal encoding.
+    pub fn lease_complete(
+        &mut self,
+        worker: &str,
+        job: &str,
+        chunk: u64,
+        terms: u64,
+        micros: u64,
+        value: JobValue,
+    ) -> Result<CompleteReply> {
+        let req = Request::LeaseComplete {
+            worker: worker.to_string(),
+            job: job.to_string(),
+            chunk,
+            terms,
+            micros,
+            value,
+        };
+        match self.roundtrip(&req)? {
+            Response::Completed { duplicate, chunks_done, chunks_total } => {
+                Ok(CompleteReply { duplicate, chunks_done, chunks_total })
+            }
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Give a lease back without completing it (`LEASE ABANDON`).
+    pub fn lease_abandon(&mut self, worker: &str, job: &str, chunk: u64) -> Result<()> {
+        let req = Request::LeaseAbandon {
+            worker: worker.to_string(),
+            job: job.to_string(),
+            chunk,
+        };
+        match self.roundtrip(&req)? {
+            Response::Abandoned => Ok(()),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
     /// Polite close.
     pub fn quit(mut self) {
         let _ = self.stream.write_all(Request::Quit.encode().as_bytes());
     }
+}
+
+/// A `LEASE GRANT` reply.
+#[derive(Clone, Debug)]
+pub enum GrantReply {
+    /// A chunk lease.
+    Lease {
+        /// The job id.
+        job: String,
+        /// Chunk index within the job's plan.
+        chunk: u64,
+        /// First rank of the chunk.
+        start: u128,
+        /// Ranks in the chunk.
+        len: u128,
+        /// Lease validity in milliseconds.
+        ttl_ms: u64,
+        /// The job spec — present on the first grant of each job per
+        /// connection, `None` once the server knows this connection has
+        /// it (`CACHED`).
+        spec: Option<JobSpec>,
+    },
+    /// Nothing to lease: `idle` (no free chunk right now) or
+    /// `complete` (the requested job has finished).
+    NoLease {
+        /// `idle` or `complete`.
+        reason: String,
+    },
+}
+
+/// A `LEASE COMPLETE` acknowledgement.
+#[derive(Clone, Copy, Debug)]
+pub struct CompleteReply {
+    /// True when this was an idempotent re-acknowledgement.
+    pub duplicate: bool,
+    /// Chunks journaled so far.
+    pub chunks_done: u64,
+    /// Chunks in the job's plan.
+    pub chunks_total: u64,
 }
 
 /// A `JOB STATUS`/`WAIT`/`CANCEL` reply.

@@ -11,12 +11,16 @@
 //! durable-job verbs (`JOB SUBMIT / STATUS / WAIT / CANCEL / RESUME`)
 //! over a shared [`crate::jobs::JobManager`]: long sweeps run in the
 //! background, survive server restarts via the journal, and report
-//! bit-exact results.
+//! bit-exact results. The same servers speak the fleet `LEASE` verbs
+//! (`GRANT / RENEW / COMPLETE / ABANDON`) over a
+//! [`crate::fleet::LeaseTable`], distributing a durable job's chunks
+//! across remote `raddet worker` processes. The full wire contract is
+//! specified in `docs/PROTOCOL.md`.
 
 pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, JobStatusReply};
+pub use client::{Client, CompleteReply, GrantReply, JobStatusReply};
 pub use protocol::{Request, Response};
 pub use server::{Server, ServerHandle};

@@ -6,20 +6,37 @@
 //! ← OK <det> <terms> <micros>
 //! → EXACT <m> <n> <i11>,…                integer path (Bareiss)
 //! ← OK <det> <terms> <micros>
-//! → JOB SUBMIT <cpu|prefix> <f64|exact> <m> <n> <v11>,…
+//! → JOB SUBMIT [fleet] <cpu|prefix> <f64|exact> <m> <n> <v11>,…
 //! ← OK JOB <id>                          durable job accepted
 //! → JOB STATUS <id>
 //! ← OK JOBSTATUS <id> <state> <chunks_done> <chunks_total>
 //!                <terms_done> <terms_total> <value|->
-//! → JOB WAIT <id> [timeout_ms]           block until done/paused
+//! → JOB WAIT <id> [timeout_ms]           block until done/paused (0 ⇒
+//!                                        immediate status snapshot)
 //! → JOB CANCEL <id>                      cooperative pause (resumable)
 //! → JOB RESUME <id>                      restart a paused/crashed job
+//! → LEASE GRANT <worker> [<job>]         claim a chunk lease
+//! ← OK LEASE <job> <chunk> <start> <len> <ttl_ms> <SPEC …|CACHED>
+//! ← OK NOLEASE <idle|complete>           nothing to lease right now
+//! → LEASE RENEW <worker> <job> <chunk>   extend a held lease
+//! ← OK RENEWED <ttl_ms>
+//! → LEASE COMPLETE <worker> <job> <chunk> <terms> <micros> <value>
+//! ← OK COMPLETED <chunks_done> <chunks_total> <new|dup>
+//! → LEASE ABANDON <worker> <job> <chunk> give a lease back
+//! ← OK ABANDONED
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
 //! ← (closed)
 //! ← ERR <message>                        any failure
 //! ```
+//!
+//! The `LEASE` verbs are the worker-fleet side of the durable-jobs
+//! subsystem: a `raddet worker` claims block-aligned chunks of an open
+//! fleet job, computes them with the engine the job's spec names, and
+//! streams the partials back as bit patterns. The full normative
+//! grammar (framing limits, error replies, spec-caching rules) lives in
+//! `docs/PROTOCOL.md`.
 //!
 //! Job values travel in the journal encoding (`f64:<16 hex bits>` /
 //! `i128:<decimal>`), so a completed determinant round-trips
@@ -28,7 +45,8 @@
 //! all yield a protocol error (the server answers `ERR …` and lives on)
 //! instead of panicking the connection handler.
 
-use crate::jobs::{valid_id, JobEngine, JobPayload, JobValue};
+use crate::jobs::{encode_spec_body, parse_spec_body, valid_id};
+use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{Mat, MatF64, MatI64};
 use crate::{Error, Result};
 
@@ -45,6 +63,9 @@ pub enum Request {
         engine: JobEngine,
         /// The matrix (float or exact path).
         payload: JobPayload,
+        /// Fleet mode: the server opens the job for `LEASE` claims
+        /// instead of running it with its own worker pool.
+        fleet: bool,
     },
     /// Progress snapshot for a job.
     JobStatus(String),
@@ -59,6 +80,46 @@ pub enum Request {
     JobCancel(String),
     /// Resume a paused/crashed job.
     JobResume(String),
+    /// Fleet worker: claim a chunk lease (optionally of one job).
+    LeaseGrant {
+        /// The worker id.
+        worker: String,
+        /// Restrict the claim to this job (`None` ⇒ any open job).
+        job: Option<String>,
+    },
+    /// Fleet worker: extend a held lease.
+    LeaseRenew {
+        /// The worker id.
+        worker: String,
+        /// The job id.
+        job: String,
+        /// Chunk index within the job's plan.
+        chunk: u64,
+    },
+    /// Fleet worker: deliver a computed chunk partial.
+    LeaseComplete {
+        /// The worker id.
+        worker: String,
+        /// The job id.
+        job: String,
+        /// Chunk index within the job's plan.
+        chunk: u64,
+        /// Terms the chunk covered (must equal the planned chunk len).
+        terms: u64,
+        /// Worker-side evaluation micros (journaled for export stats).
+        micros: u64,
+        /// The partial, in the bit-exact journal encoding.
+        value: JobValue,
+    },
+    /// Fleet worker: give a lease back without completing it.
+    LeaseAbandon {
+        /// The worker id.
+        worker: String,
+        /// The job id.
+        job: String,
+        /// Chunk index within the job's plan.
+        chunk: u64,
+    },
     /// Liveness probe.
     Ping,
     /// Close the connection.
@@ -94,6 +155,45 @@ pub enum Response {
         /// Composed determinant (complete jobs only), bit-exact.
         value: Option<JobValue>,
     },
+    /// A granted chunk lease.
+    Lease {
+        /// The job id.
+        job: String,
+        /// Chunk index within the job's plan.
+        chunk: u64,
+        /// First rank of the chunk.
+        start: u128,
+        /// Ranks in the chunk.
+        len: u128,
+        /// Lease validity; renew before it elapses.
+        ttl_ms: u64,
+        /// The job spec, on the first grant of this job per connection
+        /// (`None` ⇒ the wire said `CACHED`: the worker already has it).
+        spec: Option<JobSpec>,
+    },
+    /// No chunk to lease: `idle` (no open fleet job has a free chunk)
+    /// or `complete` (the requested job has finished).
+    NoLease {
+        /// `idle` or `complete`.
+        reason: String,
+    },
+    /// Lease extended for another TTL window.
+    Renewed {
+        /// Renewed validity.
+        ttl_ms: u64,
+    },
+    /// Chunk partial journaled (or idempotently re-acknowledged).
+    Completed {
+        /// True when this was a re-delivery by the worker that already
+        /// completed the chunk (nothing journaled).
+        duplicate: bool,
+        /// Chunks journaled after this completion.
+        chunks_done: u64,
+        /// Chunks in the job's plan.
+        chunks_total: u64,
+    },
+    /// Lease returned to the free pool.
+    Abandoned,
     /// Liveness answer.
     Pong,
     /// Failure.
@@ -168,12 +268,25 @@ fn parse_job_id(tok: &str) -> Result<String> {
     Ok(tok.to_string())
 }
 
+/// Worker ids share the job-id charset (they are journaled and echoed
+/// into error messages — same hostile-input concerns).
+fn parse_worker_id(tok: &str) -> Result<String> {
+    if !valid_id(tok) {
+        return Err(Error::Protocol(format!("bad worker id {tok:?}")));
+    }
+    Ok(tok.to_string())
+}
+
 fn parse_job(rest: &str) -> Result<Request> {
     let mut parts = rest.splitn(2, ' ');
     let verb = parts.next().unwrap_or("");
     let args = parts.next().unwrap_or("");
     match verb {
         "SUBMIT" => {
+            let (fleet, args) = match args.strip_prefix("fleet ") {
+                Some(rest) => (true, rest),
+                None => (false, args),
+            };
             let mut t = args.splitn(5, ' ');
             let engine = JobEngine::parse(
                 t.next()
@@ -198,7 +311,7 @@ fn parse_job(rest: &str) -> Result<Request> {
                     return Err(Error::Protocol(format!("bad job kind {other:?}")))
                 }
             };
-            Ok(Request::JobSubmit { engine, payload })
+            Ok(Request::JobSubmit { engine, payload, fleet })
         }
         "STATUS" => Ok(Request::JobStatus(parse_job_id(args)?)),
         "CANCEL" => Ok(Request::JobCancel(parse_job_id(args)?)),
@@ -221,12 +334,80 @@ fn parse_job(rest: &str) -> Result<Request> {
     }
 }
 
+fn parse_lease(rest: &str) -> Result<Request> {
+    let mut parts = rest.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    let args = parts.next().unwrap_or("");
+    let mut t = args.split(' ');
+    match verb {
+        "GRANT" => {
+            let worker = parse_worker_id(t.next().unwrap_or(""))?;
+            let job = match t.next() {
+                None => None,
+                Some(tok) => Some(parse_job_id(tok)?),
+            };
+            if t.next().is_some() {
+                return Err(Error::Protocol("trailing LEASE GRANT tokens".into()));
+            }
+            Ok(Request::LeaseGrant { worker, job })
+        }
+        v @ ("RENEW" | "ABANDON") => {
+            let worker = parse_worker_id(t.next().unwrap_or(""))?;
+            let job = parse_job_id(t.next().unwrap_or(""))?;
+            let chunk: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing chunk index".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunk index: {e}")))?;
+            if t.next().is_some() {
+                return Err(Error::Protocol(format!("trailing LEASE {v} tokens")));
+            }
+            if v == "RENEW" {
+                Ok(Request::LeaseRenew { worker, job, chunk })
+            } else {
+                Ok(Request::LeaseAbandon { worker, job, chunk })
+            }
+        }
+        "COMPLETE" => {
+            let worker = parse_worker_id(t.next().unwrap_or(""))?;
+            let job = parse_job_id(t.next().unwrap_or(""))?;
+            let chunk: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing chunk index".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunk index: {e}")))?;
+            let terms: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing terms".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad terms: {e}")))?;
+            let micros: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing micros".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad micros: {e}")))?;
+            let value = JobValue::decode(
+                t.next().ok_or_else(|| Error::Protocol("missing value".into()))?,
+            )
+            .map_err(|e| Error::Protocol(e.to_string()))?;
+            if t.next().is_some() {
+                return Err(Error::Protocol("trailing LEASE COMPLETE tokens".into()));
+            }
+            Ok(Request::LeaseComplete { worker, job, chunk, terms, micros, value })
+        }
+        other => Err(Error::Protocol(format!("unknown LEASE verb {other:?}"))),
+    }
+}
+
 impl Request {
     /// Parse one request line.
     pub fn parse(line: &str) -> Result<Request> {
         let line = line.trim_end();
         if let Some(rest) = line.strip_prefix("JOB ") {
             return parse_job(rest);
+        }
+        if let Some(rest) = line.strip_prefix("LEASE ") {
+            return parse_lease(rest);
         }
         let mut parts = line.splitn(4, ' ');
         match parts.next() {
@@ -276,14 +457,15 @@ impl Request {
             Request::Exact(a) => {
                 format!("EXACT {} {} {}\n", a.rows(), a.cols(), i64_body(a))
             }
-            Request::JobSubmit { engine, payload } => {
+            Request::JobSubmit { engine, payload, fleet } => {
                 let (m, n) = payload.shape();
                 let body = match payload {
                     JobPayload::F64(a) => f64_body(a),
                     JobPayload::Exact(a) => i64_body(a),
                 };
                 format!(
-                    "JOB SUBMIT {} {} {m} {n} {body}\n",
+                    "JOB SUBMIT {}{} {} {m} {n} {body}\n",
+                    if *fleet { "fleet " } else { "" },
                     engine.as_str(),
                     payload.kind_str()
                 )
@@ -292,6 +474,22 @@ impl Request {
             Request::JobWait { id, timeout_ms } => format!("JOB WAIT {id} {timeout_ms}\n"),
             Request::JobCancel(id) => format!("JOB CANCEL {id}\n"),
             Request::JobResume(id) => format!("JOB RESUME {id}\n"),
+            Request::LeaseGrant { worker, job } => match job {
+                Some(j) => format!("LEASE GRANT {worker} {j}\n"),
+                None => format!("LEASE GRANT {worker}\n"),
+            },
+            Request::LeaseRenew { worker, job, chunk } => {
+                format!("LEASE RENEW {worker} {job} {chunk}\n")
+            }
+            Request::LeaseComplete { worker, job, chunk, terms, micros, value } => {
+                format!(
+                    "LEASE COMPLETE {worker} {job} {chunk} {terms} {micros} {}\n",
+                    value.encode()
+                )
+            }
+            Request::LeaseAbandon { worker, job, chunk } => {
+                format!("LEASE ABANDON {worker} {job} {chunk}\n")
+            }
         }
     }
 }
@@ -303,8 +501,78 @@ impl Response {
         if line == "PONG" {
             return Ok(Response::Pong);
         }
+        if line == "OK ABANDONED" {
+            return Ok(Response::Abandoned);
+        }
         if let Some(msg) = line.strip_prefix("ERR ") {
             return Ok(Response::Err(msg.to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("OK LEASE ") {
+            let mut t = rest.splitn(6, ' ');
+            let job = parse_job_id(t.next().unwrap_or(""))?;
+            let chunk: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing lease chunk".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad lease chunk: {e}")))?;
+            let start: u128 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing lease start".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad lease start: {e}")))?;
+            let len: u128 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing lease len".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad lease len: {e}")))?;
+            let ttl_ms: u64 = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing lease ttl".into()))?
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad lease ttl: {e}")))?;
+            let tail = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing lease spec".into()))?;
+            let spec = if tail == "CACHED" {
+                None
+            } else if tail.starts_with("SPEC ") {
+                Some(parse_spec_body(tail).map_err(|e| Error::Protocol(e.to_string()))?)
+            } else {
+                return Err(Error::Protocol(format!("bad lease payload {tail:?}")));
+            };
+            return Ok(Response::Lease { job, chunk, start, len, ttl_ms, spec });
+        }
+        if let Some(reason) = line.strip_prefix("OK NOLEASE ") {
+            if reason != "idle" && reason != "complete" {
+                return Err(Error::Protocol(format!("bad NOLEASE reason {reason:?}")));
+            }
+            return Ok(Response::NoLease { reason: reason.to_string() });
+        }
+        if let Some(tok) = line.strip_prefix("OK RENEWED ") {
+            let ttl_ms: u64 = tok
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad renewed ttl: {e}")))?;
+            return Ok(Response::Renewed { ttl_ms });
+        }
+        if let Some(rest) = line.strip_prefix("OK COMPLETED ") {
+            let toks: Vec<&str> = rest.split(' ').collect();
+            if toks.len() != 3 {
+                return Err(Error::Protocol(format!("bad COMPLETED line {line:?}")));
+            }
+            let chunks_done: u64 = toks[0]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunks_done: {e}")))?;
+            let chunks_total: u64 = toks[1]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad chunks_total: {e}")))?;
+            let duplicate = match toks[2] {
+                "new" => false,
+                "dup" => true,
+                other => {
+                    return Err(Error::Protocol(format!("bad COMPLETED tag {other:?}")))
+                }
+            };
+            return Ok(Response::Completed { duplicate, chunks_done, chunks_total });
         }
         if let Some(rest) = line.strip_prefix("OK JOBSTATUS ") {
             let toks: Vec<&str> = rest.split(' ').collect();
@@ -379,6 +647,20 @@ impl Response {
         match self {
             Response::Pong => "PONG\n".into(),
             Response::Err(m) => format!("ERR {}\n", m.replace('\n', " ")),
+            Response::Lease { job, chunk, start, len, ttl_ms, spec } => match spec {
+                Some(s) => format!(
+                    "OK LEASE {job} {chunk} {start} {len} {ttl_ms} {}\n",
+                    encode_spec_body(s)
+                ),
+                None => format!("OK LEASE {job} {chunk} {start} {len} {ttl_ms} CACHED\n"),
+            },
+            Response::NoLease { reason } => format!("OK NOLEASE {reason}\n"),
+            Response::Renewed { ttl_ms } => format!("OK RENEWED {ttl_ms}\n"),
+            Response::Completed { duplicate, chunks_done, chunks_total } => format!(
+                "OK COMPLETED {chunks_done} {chunks_total} {}\n",
+                if *duplicate { "dup" } else { "new" }
+            ),
+            Response::Abandoned => "OK ABANDONED\n".into(),
             Response::Ok { det, terms, micros } => {
                 format!("OK {det:.17e} {terms} {micros}\n")
             }
@@ -432,11 +714,18 @@ mod tests {
         for req in [
             Request::JobSubmit {
                 engine: JobEngine::Prefix,
-                payload: JobPayload::F64(f),
+                payload: JobPayload::F64(f.clone()),
+                fleet: false,
             },
             Request::JobSubmit {
                 engine: JobEngine::CpuLu,
                 payload: JobPayload::Exact(i),
+                fleet: false,
+            },
+            Request::JobSubmit {
+                engine: JobEngine::Prefix,
+                payload: JobPayload::F64(f),
+                fleet: true,
             },
             Request::JobStatus("job-1a2b-3-4".into()),
             Request::JobWait { id: "job-x".into(), timeout_ms: 1234 },
@@ -560,5 +849,174 @@ mod tests {
     fn ping_quit() {
         assert_eq!(Request::parse("PING\n").unwrap(), Request::Ping);
         assert_eq!(Request::parse("QUIT").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn lease_request_roundtrips() {
+        for req in [
+            Request::LeaseGrant { worker: "w1".into(), job: None },
+            Request::LeaseGrant { worker: "w1".into(), job: Some("job-x".into()) },
+            Request::LeaseRenew { worker: "w1".into(), job: "job-x".into(), chunk: 7 },
+            Request::LeaseComplete {
+                worker: "w1".into(),
+                job: "job-x".into(),
+                chunk: 7,
+                terms: 41,
+                micros: 1234,
+                value: JobValue::F64(-0.125),
+            },
+            Request::LeaseComplete {
+                worker: "w2".into(),
+                job: "job-y".into(),
+                chunk: 0,
+                terms: 56,
+                micros: 9,
+                value: JobValue::Exact(-987654321),
+            },
+            Request::LeaseAbandon { worker: "w1".into(), job: "job-x".into(), chunk: 7 },
+        ] {
+            assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn lease_complete_value_is_bit_exact() {
+        let v = f64::from_bits(0x3ff0_0000_0000_0001); // 1 + ulp
+        let req = Request::LeaseComplete {
+            worker: "w1".into(),
+            job: "job-x".into(),
+            chunk: 3,
+            terms: 10,
+            micros: 5,
+            value: JobValue::F64(v),
+        };
+        match Request::parse(&req.encode()).unwrap() {
+            Request::LeaseComplete { value: JobValue::F64(back), .. } => {
+                assert_eq!(back.to_bits(), v.to_bits())
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lease_response_roundtrips() {
+        let spec = crate::jobs::JobSpec {
+            payload: JobPayload::F64(Mat::from_rows(&[
+                vec![1.5, -2.0, 3.25],
+                vec![0.0, 4.0, -1.0],
+            ])),
+            engine: JobEngine::Prefix,
+            chunks: 8,
+            batch: 64,
+        };
+        for r in [
+            Response::Lease {
+                job: "job-x".into(),
+                chunk: 3,
+                start: 120,
+                len: 41,
+                ttl_ms: 30_000,
+                spec: Some(spec),
+            },
+            Response::Lease {
+                job: "job-x".into(),
+                chunk: 4,
+                start: 161,
+                len: 41,
+                ttl_ms: 30_000,
+                spec: None,
+            },
+            Response::NoLease { reason: "idle".into() },
+            Response::NoLease { reason: "complete".into() },
+            Response::Renewed { ttl_ms: 30_000 },
+            Response::Completed { duplicate: false, chunks_done: 3, chunks_total: 12 },
+            Response::Completed { duplicate: true, chunks_done: 12, chunks_total: 12 },
+            Response::Abandoned,
+        ] {
+            assert_eq!(Response::parse(&r.encode()).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn lease_spec_matrix_is_bit_exact() {
+        // The grant's embedded matrix must reconstruct the identical
+        // f64 bits — a fleet partial is only composable if the worker
+        // computed on the same matrix the server journaled.
+        let v = f64::from_bits(0x3ff0_0000_0000_0001); // 1 + ulp
+        let spec = crate::jobs::JobSpec {
+            payload: JobPayload::F64(Mat::from_vec(1, 2, vec![v, -v]).unwrap()),
+            engine: JobEngine::CpuLu,
+            chunks: 2,
+            batch: 16,
+        };
+        let r = Response::Lease {
+            job: "job-z".into(),
+            chunk: 0,
+            start: 0,
+            len: 1,
+            ttl_ms: 1000,
+            spec: Some(spec),
+        };
+        match Response::parse(&r.encode()).unwrap() {
+            Response::Lease { spec: Some(back), .. } => match back.payload {
+                JobPayload::F64(a) => {
+                    assert_eq!(a.data()[0].to_bits(), v.to_bits());
+                    assert_eq!(a.data()[1].to_bits(), (-v).to_bits());
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lease_requests_rejected() {
+        for bad in [
+            "LEASE ",                            // empty verb
+            "LEASE NOPE w1",                     // unknown verb
+            "LEASE GRANT",                       // missing worker
+            "LEASE GRANT ../etc",                // hostile worker id
+            "LEASE GRANT w1 ../etc",             // hostile job id
+            "LEASE GRANT w1 job-x extra",        // trailing tokens
+            "LEASE RENEW w1 job-x",              // missing chunk
+            "LEASE RENEW w1 job-x 1x",           // bad chunk
+            "LEASE RENEW w1 job-x 1 extra",      // trailing tokens
+            "LEASE COMPLETE w1 job-x 1 2",       // truncated frame
+            "LEASE COMPLETE w1 job-x 1 2 3 nope",  // bad value encoding
+            "LEASE COMPLETE w1 job-x 1 2 3 f64:0 x", // trailing tokens
+            "LEASE ABANDON w1",                  // missing job
+        ] {
+            assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn malformed_lease_responses_rejected() {
+        for bad in [
+            "OK LEASE job-x",                       // truncated
+            "OK LEASE job-x 1 2 3 4",               // missing payload
+            "OK LEASE job-x 1 2 3 4 NOPE",          // bad payload tag
+            "OK LEASE job-x 1 2 3 4 SPEC bogus",    // bad spec body
+            "OK NOLEASE because",                   // unknown reason
+            "OK RENEWED soon",                      // bad ttl
+            "OK COMPLETED 1",                       // truncated
+            "OK COMPLETED 1 2 maybe",               // bad tag
+        ] {
+            assert!(Response::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn fleet_submit_flag_roundtrips_on_the_wire() {
+        let line = "JOB SUBMIT fleet prefix f64 2 2 1.0,2.0,3.0,4.0";
+        match Request::parse(line).unwrap() {
+            Request::JobSubmit { fleet, engine, .. } => {
+                assert!(fleet);
+                assert_eq!(engine, JobEngine::Prefix);
+            }
+            other => panic!("{other:?}"),
+        }
+        // `fleet` alone is not an engine.
+        assert!(Request::parse("JOB SUBMIT fleet").is_err());
     }
 }

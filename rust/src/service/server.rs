@@ -1,11 +1,14 @@
 //! The determinant server: accept loop + per-connection handler threads
 //! sharing one coordinator (and, when enabled, one durable
-//! [`JobManager`] serving the `JOB` verbs).
+//! [`JobManager`] serving the `JOB` verbs plus one
+//! [`LeaseTable`] serving the fleet `LEASE` verbs).
 
 use super::protocol::{Request, Response};
 use crate::coordinator::Coordinator;
-use crate::jobs::{JobManager, JobStatus};
+use crate::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
+use crate::jobs::{ChunkRecord, JobManager, JobStatus};
 use crate::Result;
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -25,6 +28,7 @@ const MAX_WAIT: Duration = Duration::from_secs(600);
 pub struct Server {
     coordinator: Arc<Coordinator>,
     jobs: Option<Arc<JobManager>>,
+    fleet: Option<Arc<LeaseTable>>,
 }
 
 /// Handle to a running server (stop + stats).
@@ -42,15 +46,29 @@ impl Server {
     /// always does, journaling to `--jobs-dir`, default
     /// `./raddet-jobs`).
     pub fn new(coordinator: Coordinator) -> Self {
-        Self { coordinator: Arc::new(coordinator), jobs: None }
+        Self { coordinator: Arc::new(coordinator), jobs: None, fleet: None }
     }
 
-    /// New server with durable-jobs support.
+    /// New server with durable-jobs support. Fleet leasing (`LEASE`
+    /// verbs over a [`LeaseTable`] sharing the manager's store) comes
+    /// with it; tune it with [`Self::with_fleet_config`].
     pub fn with_jobs(coordinator: Coordinator, jobs: JobManager) -> Self {
+        let fleet = Arc::new(LeaseTable::new(jobs.store().clone(), FleetConfig::default()));
         Self {
             coordinator: Arc::new(coordinator),
             jobs: Some(Arc::new(jobs)),
+            fleet: Some(fleet),
         }
+    }
+
+    /// Rebuild the fleet lease table with explicit knobs (tests use
+    /// short TTLs; ops may want coarser default chunking). No-op on a
+    /// server without jobs support.
+    pub fn with_fleet_config(mut self, cfg: FleetConfig) -> Self {
+        if let Some(jobs) = &self.jobs {
+            self.fleet = Some(Arc::new(LeaseTable::new(jobs.store().clone(), cfg)));
+        }
+        self
     }
 
     /// Bind `addr` (use port 0 for ephemeral) and start serving in
@@ -65,6 +83,7 @@ impl Server {
         let accept_requests = Arc::clone(&requests);
         let coordinator = Arc::clone(&self.coordinator);
         let jobs = self.jobs.clone();
+        let fleet = self.fleet.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if accept_stop.load(Ordering::SeqCst) {
@@ -73,9 +92,10 @@ impl Server {
                 let Ok(stream) = conn else { continue };
                 let coord = Arc::clone(&coordinator);
                 let jobs = jobs.clone();
+                let fleet = fleet.clone();
                 let reqs = Arc::clone(&accept_requests);
                 std::thread::spawn(move || {
-                    let _ = handle_connection(stream, &coord, jobs.as_deref(), &reqs);
+                    let _ = handle_connection(stream, &coord, jobs.as_deref(), fleet.as_deref(), &reqs);
                 });
             }
         });
@@ -188,14 +208,29 @@ fn status_to_response(status: &JobStatus, running: bool) -> Response {
     }
 }
 
-fn handle_job_request(jobs: Option<&JobManager>, req: Request) -> Response {
+fn handle_job_request(
+    jobs: Option<&JobManager>,
+    fleet: Option<&LeaseTable>,
+    req: Request,
+) -> Response {
     let Some(jobs) = jobs else {
         return Response::Err("jobs disabled on this server (start with a jobs dir)".into());
     };
     match req {
-        Request::JobSubmit { engine, payload } => match jobs.submit(payload, engine) {
-            Ok(id) => Response::Job { id },
-            Err(e) => Response::Err(e.to_string()),
+        Request::JobSubmit { engine, payload, fleet: false } => {
+            match jobs.submit(payload, engine) {
+                Ok(id) => Response::Job { id },
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        // Fleet submit: journal the job and open it for LEASE claims —
+        // no in-process runner is spawned.
+        Request::JobSubmit { engine, payload, fleet: true } => match fleet {
+            Some(table) => match table.submit(payload, engine) {
+                Ok(id) => Response::Job { id },
+                Err(e) => Response::Err(e.to_string()),
+            },
+            None => Response::Err("fleet disabled on this server".into()),
         },
         Request::JobStatus(id) => job_status_response(jobs, &id),
         Request::JobWait { id, timeout_ms } => {
@@ -205,12 +240,20 @@ fn handle_job_request(jobs: Option<&JobManager>, req: Request) -> Response {
                 Err(e) => Response::Err(e.to_string()),
             }
         }
-        Request::JobCancel(id) => match jobs.cancel(&id) {
-            // Cancellation is cooperative: report the (possibly still
-            // draining) snapshot right away.
-            Ok(_) => job_status_response(jobs, &id),
-            Err(e) => Response::Err(e.to_string()),
-        },
+        Request::JobCancel(id) => {
+            // An open fleet job pauses by closing its lease-table entry
+            // (stops granting, releases the run lock); otherwise fall
+            // through to the manager's cooperative stop flag.
+            if fleet.is_some_and(|table| table.close(&id)) {
+                return job_status_response(jobs, &id);
+            }
+            match jobs.cancel(&id) {
+                // Cancellation is cooperative: report the (possibly
+                // still draining) snapshot right away.
+                Ok(_) => job_status_response(jobs, &id),
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
         Request::JobResume(id) => match jobs.resume(&id) {
             Ok(()) => Response::Job { id },
             Err(e) => Response::Err(e.to_string()),
@@ -219,15 +262,86 @@ fn handle_job_request(jobs: Option<&JobManager>, req: Request) -> Response {
     }
 }
 
+/// Serve the fleet `LEASE` verbs over the shared [`LeaseTable`].
+/// `sent_specs` is this connection's spec cache: the first grant of
+/// each job carries the full spec, later grants say `CACHED` (the
+/// worker keeps specs for the lifetime of its connection; a reconnect
+/// resets both sides consistently).
+fn handle_lease_request(
+    fleet: Option<&LeaseTable>,
+    req: Request,
+    sent_specs: &mut HashSet<String>,
+) -> Response {
+    let Some(fleet) = fleet else {
+        return Response::Err("fleet disabled on this server (start with a jobs dir)".into());
+    };
+    match req {
+        Request::LeaseGrant { worker, job } => {
+            // Evaluated into a binding first: the spec-cache closure's
+            // shared borrow must end before the insert below.
+            let outcome = fleet.grant(&worker, job.as_deref(), |id| !sent_specs.contains(id));
+            match outcome {
+                Ok(GrantOutcome::Granted(g)) => {
+                    if g.spec.is_some() {
+                        sent_specs.insert(g.job.clone());
+                    }
+                    Response::Lease {
+                        job: g.job,
+                        chunk: g.chunk_index,
+                        start: g.chunk.start,
+                        len: g.chunk.len,
+                        ttl_ms: g.ttl.as_millis() as u64,
+                        spec: g.spec,
+                    }
+                }
+                Ok(GrantOutcome::Idle) => Response::NoLease { reason: "idle".into() },
+                Ok(GrantOutcome::Complete) => {
+                    Response::NoLease { reason: "complete".into() }
+                }
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::LeaseRenew { worker, job, chunk } => {
+            match fleet.renew(&worker, &job, chunk) {
+                Ok(ttl) => Response::Renewed { ttl_ms: ttl.as_millis() as u64 },
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::LeaseComplete { worker, job, chunk, terms, micros, value } => {
+            let rec = ChunkRecord { value, terms, micros };
+            match fleet.complete(&worker, &job, chunk, rec) {
+                Ok(CompleteOutcome::Accepted { chunks_done, chunks_total, .. }) => {
+                    Response::Completed { duplicate: false, chunks_done, chunks_total }
+                }
+                Ok(CompleteOutcome::Duplicate { chunks_done, chunks_total }) => {
+                    Response::Completed { duplicate: true, chunks_done, chunks_total }
+                }
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::LeaseAbandon { worker, job, chunk } => {
+            match fleet.abandon(&worker, &job, chunk) {
+                Ok(()) => Response::Abandoned,
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        other => Response::Err(format!("not a LEASE request: {other:?}")),
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     coord: &Coordinator,
     jobs: Option<&JobManager>,
+    fleet: Option<&LeaseTable>,
     requests: &AtomicU64,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    // Job specs already shipped on this connection: grants for these
+    // jobs reply `CACHED` instead of re-sending a matrix-sized spec.
+    let mut sent_specs: HashSet<String> = HashSet::new();
     loop {
         let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
             Ok(None) => break,
@@ -272,7 +386,13 @@ fn handle_connection(
                     Err(e) => Response::Err(e.to_string()),
                 }
             }
-            Ok(job_req) => handle_job_request(jobs, job_req),
+            Ok(
+                lease_req @ (Request::LeaseGrant { .. }
+                | Request::LeaseRenew { .. }
+                | Request::LeaseComplete { .. }
+                | Request::LeaseAbandon { .. }),
+            ) => handle_lease_request(fleet, lease_req, &mut sent_specs),
+            Ok(job_req) => handle_job_request(jobs, fleet, job_req),
             Err(e) => Response::Err(e.to_string()),
         };
         requests.fetch_add(1, Ordering::SeqCst);

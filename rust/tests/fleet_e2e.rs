@@ -1,0 +1,337 @@
+//! Fleet end-to-end: a real server plus in-process workers over real
+//! sockets, including worker crashes, lease expiry/reassignment, and a
+//! full server restart — every scenario must land on a determinant
+//! bitwise-identical to a single-process run of the same spec.
+
+use raddet::combin::PascalTable;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::fleet::{run_worker, FleetConfig, WorkerConfig};
+use raddet::jobs::{
+    JobEngine, JobManager, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
+};
+use raddet::matrix::gen;
+use raddet::service::{Client, GrantReply, Server, ServerHandle};
+use raddet::testkit::TestRng;
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::time::Duration;
+
+/// Chunk/batch geometry shared by every fleet test and its
+/// single-process reference — identical specs are what make the
+/// bitwise comparison meaningful.
+const CHUNKS: usize = 12;
+const BATCH: usize = 64;
+
+fn test_coordinator() -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn fleet_config(ttl: Duration) -> FleetConfig {
+    FleetConfig {
+        lease_ttl: ttl,
+        default_chunks: CHUNKS,
+        default_batch: BATCH,
+        ..Default::default()
+    }
+}
+
+fn start_fleet_server(dir: &Path, ttl: Duration) -> ServerHandle {
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    Server::with_jobs(test_coordinator(), manager)
+        .with_fleet_config(fleet_config(ttl))
+        .start("127.0.0.1:0")
+        .unwrap()
+}
+
+/// Run the identical spec to completion in a single process and return
+/// its composed value.
+fn reference_value(spec: &JobSpec, tag: &str) -> JobValue {
+    let store = JobStore::open(raddet::testkit::scratch_dir(tag)).unwrap();
+    let id = store.create(spec).unwrap();
+    let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+        .run(&store, &id)
+        .unwrap();
+    assert!(out.status.complete);
+    out.status.value.unwrap()
+}
+
+fn assert_bits_eq(got: JobValue, want: JobValue) {
+    match (got, want) {
+        (JobValue::F64(a), JobValue::F64(b)) => {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a:e} vs {b:e}")
+        }
+        (JobValue::Exact(a), JobValue::Exact(b)) => assert_eq!(a, b),
+        other => panic!("mismatched value kinds: {other:?}"),
+    }
+}
+
+fn worker_cfg(id: &str, job: &str) -> WorkerConfig {
+    let mut cfg = WorkerConfig::new(id);
+    cfg.job = Some(job.to_string());
+    cfg.poll = Duration::from_millis(10);
+    cfg.renew_every = Duration::from_millis(25);
+    cfg
+}
+
+/// The tier-1 acceptance proof: three workers drain a fleet job while
+/// one of them is killed mid-chunk (lease held, never completed). For
+/// both the float prefix engine and the exact `i128` path, the exported
+/// value must be bit-for-bit the single-process result.
+#[test]
+fn fleet_with_midchunk_worker_kill_matches_single_process_bits() {
+    for exact in [false, true] {
+        let tag = if exact { "exact" } else { "f64" };
+        let payload = if exact {
+            JobPayload::Exact(gen::integer(&mut TestRng::from_seed(71), 4, 12, -6, 6))
+        } else {
+            JobPayload::F64(gen::uniform(&mut TestRng::from_seed(71), 4, 12, -1.0, 1.0))
+        };
+        let spec = JobSpec {
+            payload: payload.clone(),
+            engine: JobEngine::Prefix,
+            chunks: CHUNKS,
+            batch: BATCH,
+        };
+        let want = reference_value(&spec, &format!("fleet-ref-{tag}"));
+
+        let dir = raddet::testkit::scratch_dir(&format!("fleet-e2e-{tag}"));
+        let handle = start_fleet_server(&dir, Duration::from_millis(150));
+        let addr = handle.addr().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+        // Worker 0 is the kill: it claims a chunk and dies holding the
+        // lease (neither COMPLETE nor ABANDON) — run first so the
+        // mid-chunk death is deterministic, not a race against the
+        // healthy workers draining the job.
+        let mut cfg0 = worker_cfg("w0", &id);
+        cfg0.crash_after_grants = Some(1);
+        let r0 = run_worker(&addr, &cfg0, &AtomicBool::new(false)).unwrap();
+        assert!(r0.crashed, "worker 0 must die mid-chunk");
+        assert_eq!(r0.chunks, 0);
+
+        // Two live workers drain the job, inheriting the dead worker's
+        // chunk once its lease TTL expires.
+        let mut threads = Vec::new();
+        for w in 1..3u64 {
+            let addr = addr.clone();
+            let cfg = worker_cfg(&format!("w{w}"), &id);
+            threads.push(std::thread::spawn(move || {
+                run_worker(&addr, &cfg, &AtomicBool::new(false))
+            }));
+        }
+        let reports: Vec<_> = threads
+            .into_iter()
+            .map(|t| t.join().unwrap().unwrap())
+            .collect();
+        let fleet_chunks: u64 = reports.iter().map(|r| r.chunks).sum();
+        assert_eq!(fleet_chunks as usize, CHUNKS, "all chunks fleet-computed");
+
+        let st = c.job_wait(&id, 30_000).unwrap();
+        assert_eq!(st.state, "complete", "{st:?}");
+        assert_eq!(st.chunks_done, st.chunks_total);
+        assert_bits_eq(st.value.unwrap(), want);
+        c.quit();
+        handle.stop();
+    }
+}
+
+/// Lease-expiry property, driven at the wire level: a worker that stops
+/// renewing loses its chunk, a second worker is granted and completes
+/// it, the late duplicate `LEASE COMPLETE` is rejected without touching
+/// the journal, and the same worker's retry is acknowledged
+/// idempotently. The sweep then finishes to the single-process bits —
+/// the journal survived the whole episode uncorrupted.
+#[test]
+fn lease_expiry_reassigns_and_late_duplicate_is_rejected() {
+    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(72), 3, 10, -1.0, 1.0));
+    let spec = JobSpec {
+        payload: payload.clone(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_value(&spec, "fleet-expiry-ref");
+
+    let dir = raddet::testkit::scratch_dir("fleet-e2e-expiry");
+    let handle = start_fleet_server(&dir, Duration::from_millis(50));
+    let addr = handle.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    // wa claims a chunk (first grant per connection carries the spec)…
+    let mut wa = Client::connect(&addr).unwrap();
+    let (chunk_a, start_a, len_a, spec_a) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            (chunk, start, len, spec.expect("first grant carries the spec"))
+        }
+        other => panic!("{other:?}"),
+    };
+    // …and goes silent past the TTL.
+    std::thread::sleep(Duration::from_millis(150));
+
+    // wb is granted the same chunk (lowest free index is the expired one).
+    let mut wb = Client::connect(&addr).unwrap();
+    let (chunk_b, start_b, len_b) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            assert!(spec.is_some(), "fresh connection gets the spec again");
+            (chunk, start, len)
+        }
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(chunk_b, chunk_a, "expired chunk reassigned first");
+    assert_eq!((start_b, len_b), (start_a, len_a));
+
+    // wb computes and delivers the chunk, exactly as a worker would:
+    // runner built from the grant's spec tags.
+    let (m, n) = spec_a.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let mut runner = spec_a.runner();
+    let (partial, wm) = runner
+        .run_chunk(
+            spec_a.payload.as_lease(),
+            &table,
+            raddet::combin::Chunk { start: start_b, len: len_b },
+        )
+        .unwrap();
+    let value: JobValue = partial.into();
+    let ack = wb
+        .lease_complete("wb", &id, chunk_b, wm.terms, 1, value)
+        .unwrap();
+    assert!(!ack.duplicate);
+    assert_eq!(ack.chunks_done, 1);
+
+    // wa's late duplicate is rejected; the journal is untouched.
+    let err = wa
+        .lease_complete("wa", &id, chunk_a, wm.terms, 1, value)
+        .unwrap_err();
+    assert!(err.to_string().contains("lease lost"), "{err}");
+    let st = c.job_status(&id).unwrap();
+    assert_eq!(st.chunks_done, 1, "rejected duplicate must not journal");
+
+    // wb's own retry is an idempotent re-ack, not a second record.
+    let again = wb
+        .lease_complete("wb", &id, chunk_b, wm.terms, 1, value)
+        .unwrap();
+    assert!(again.duplicate);
+    assert_eq!(again.chunks_done, 1);
+
+    // A second grant on wb's connection replies CACHED (no spec).
+    match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, spec, .. } => {
+            assert!(spec.is_none(), "same connection: spec is cached");
+            assert_ne!(chunk, chunk_b);
+            wb.lease_abandon("wb", &id, chunk).unwrap();
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Drain the rest with an ordinary worker: final bits must match the
+    // uninterrupted single-process run.
+    let report = run_worker(&addr, &worker_cfg("wc", &id), &AtomicBool::new(false)).unwrap();
+    assert_eq!(report.chunks as usize, CHUNKS - 1);
+    let fin = c.job_wait(&id, 30_000).unwrap();
+    assert_eq!(fin.state, "complete");
+    assert_bits_eq(fin.value.unwrap(), want);
+
+    wa.quit();
+    wb.quit();
+    c.quit();
+    handle.stop();
+}
+
+/// A fleet sweep survives a full server restart: partials journaled
+/// before the crash are replayed by the next server process (the first
+/// `LEASE GRANT` naming the job lazily re-opens it from the journal)
+/// and only the missing chunks are recomputed.
+#[test]
+fn fleet_survives_server_restart_bit_exactly() {
+    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(73), 4, 12, -1.0, 1.0));
+    let spec = JobSpec {
+        payload: payload.clone(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_value(&spec, "fleet-restart-ref");
+
+    let dir = raddet::testkit::scratch_dir("fleet-e2e-restart");
+    let first = start_fleet_server(&dir, Duration::from_millis(200));
+    let addr1 = first.addr().to_string();
+    let id = {
+        let mut c = Client::connect(&addr1).unwrap();
+        let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
+        c.quit();
+        id
+    };
+    // Complete a few chunks, then the server "crashes".
+    let mut cfg = worker_cfg("w1", &id);
+    cfg.max_chunks = Some(4);
+    let partial_report = run_worker(&addr1, &cfg, &AtomicBool::new(false)).unwrap();
+    assert_eq!(partial_report.chunks, 4);
+    first.stop();
+
+    // A fresh server over the same jobs dir: the worker's first grant
+    // re-opens the job from its journal (retrying briefly while the old
+    // process's run lock finishes releasing).
+    let second = start_fleet_server(&dir, Duration::from_millis(200));
+    let addr2 = second.addr().to_string();
+    let report = run_worker(&addr2, &worker_cfg("w2", &id), &AtomicBool::new(false)).unwrap();
+    assert_eq!(
+        report.chunks as usize,
+        CHUNKS - 4,
+        "only unjournaled chunks recomputed"
+    );
+
+    let mut c = Client::connect(&addr2).unwrap();
+    let st = c.job_wait(&id, 30_000).unwrap();
+    assert_eq!(st.state, "complete");
+    assert_bits_eq(st.value.unwrap(), want);
+    c.quit();
+    second.stop();
+}
+
+/// `JOB CANCEL` on an open fleet job pauses it (stops granting,
+/// releases the run lock) and `raddet job resume` semantics — an
+/// in-process runner over the same store — finish it to the same bits.
+#[test]
+fn fleet_cancel_pauses_and_inprocess_resume_finishes() {
+    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(74), 3, 10, -1.0, 1.0));
+    let spec = JobSpec {
+        payload: payload.clone(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_value(&spec, "fleet-cancel-ref");
+
+    let dir = raddet::testkit::scratch_dir("fleet-e2e-cancel");
+    let handle = start_fleet_server(&dir, Duration::from_millis(200));
+    let addr = handle.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    let mut cfg = worker_cfg("w1", &id);
+    cfg.max_chunks = Some(3);
+    run_worker(&addr, &cfg, &AtomicBool::new(false)).unwrap();
+
+    let st = c.job_cancel(&id).unwrap();
+    assert_eq!(st.chunks_done, 3);
+    // Closed: further grants lazily re-open, so instead prove the lock
+    // is free by finishing in-process over the shared store.
+    let store = JobStore::open(&dir).unwrap();
+    let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+        .run(&store, &id)
+        .unwrap();
+    assert!(out.status.complete);
+    assert_bits_eq(out.status.value.unwrap(), want);
+    c.quit();
+    handle.stop();
+}

@@ -146,12 +146,44 @@ fn job_verbs_end_to_end() {
 }
 
 #[test]
+fn job_wait_zero_replies_immediately_with_current_status() {
+    let handle = start_server_with_jobs("wait-zero");
+    let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+    let a = gen::uniform(&mut TestRng::from_seed(54), 4, 11, -1.0, 1.0);
+    let id = c.job_submit(&a, raddet::jobs::JobEngine::Prefix).unwrap();
+    // `JOB WAIT <id> 0` is a pure status poll: it must come straight
+    // back (not sit out the 60 s default), whatever state the job is in.
+    let t0 = std::time::Instant::now();
+    let st = c.job_wait(&id, 0).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "JOB WAIT 0 blocked for {:?}",
+        t0.elapsed()
+    );
+    assert!(
+        matches!(st.state.as_str(), "running" | "paused" | "complete"),
+        "{st:?}"
+    );
+    // A real wait still drains the job, and a zero wait then reports
+    // the finished snapshot.
+    assert_eq!(c.job_wait(&id, 30_000).unwrap().state, "complete");
+    let done = c.job_wait(&id, 0).unwrap();
+    assert_eq!(done.state, "complete");
+    assert!(done.value.is_some());
+    c.quit();
+    handle.stop();
+}
+
+#[test]
 fn job_verbs_disabled_without_manager() {
     let handle = start_server();
     let mut c = Client::connect(&handle.addr().to_string()).unwrap();
     let a = gen::uniform(&mut TestRng::from_seed(53), 3, 8, -1.0, 1.0);
     let err = c.job_submit(&a, JobEngine::Prefix).unwrap_err();
     assert!(err.to_string().contains("jobs disabled"), "{err}");
+    // The fleet LEASE verbs are off for the same reason.
+    let err2 = c.lease_grant("w1", None).unwrap_err();
+    assert!(err2.to_string().contains("fleet disabled"), "{err2}");
     c.ping().unwrap();
     handle.stop();
 }
@@ -171,6 +203,10 @@ fn malformed_and_hostile_input_is_soft() {
         "JOB STATUS ../../etc/passwd\n",   // hostile id
         "JOB NOPE x\n",                    // unknown verb
         "DET 99 99999 1\n",                // oversized dimensions
+        "LEASE GRANT ../etc job-x\n",      // hostile worker id
+        "LEASE COMPLETE w1 job-x 0 1 1 zz\n", // bad value encoding
+        "LEASE NOPE w1\n",                 // unknown LEASE verb
+        "LEASE GRANT w1 job-does-not-exist\n", // unknown job
     ] {
         s.write_all(bad.as_bytes()).unwrap();
         let mut line = String::new();
