@@ -24,6 +24,8 @@
 //! raddet job resume  --id ID [--jobs-dir D] [--job-workers K] [--max-chunks B]
 //! raddet job list    [--jobs-dir D]
 //! raddet job export  --id ID [--jobs-dir D] [--out F]   # JSON
+//! raddet sim       --seed S [--seeds K] [--rows M --cols N]
+//!                  [--matrix-seed X] [--chunks C] [--ttl-ms T] [--trace]
 //! raddet help
 //! ```
 
@@ -78,6 +80,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "query" => cmd_query(&a),
         "worker" => cmd_worker(&a),
         "retrieve" => cmd_retrieve(&a),
+        "sim" => cmd_sim(&a),
         other => Err(Error::Config(format!(
             "unknown command {other:?} (try `raddet help`)"
         ))),
@@ -120,6 +123,11 @@ commands:\n\
             durable jobs over LEASE GRANT/RENEW/COMPLETE/ABANDON and\n\
             stream bit-exact partials back (see README §Fleet)\n\
   retrieve  image-retrieval demo (paper's machine-vision motivation)\n\
+  sim       replay a deterministic-simulation fleet scenario by seed:\n\
+            virtual clock, in-memory transport, seeded crashes/\n\
+            partitions/restarts — prints the event trace and checks\n\
+            the bits against a single-process run (EXPERIMENTS.md\n\
+            §Simulation)\n\
   job       durable det-jobs: submit|status|resume|list|export\n\
             (journaled, resumable sweeps — kill-safe, bitwise-identical\n\
             results after resume; submit --fleet opens the job for\n\
@@ -597,6 +605,96 @@ fn cmd_job_export(a: &Args) -> Result<()> {
         }
         None => println!("{json}"),
     }
+    Ok(())
+}
+
+/// `raddet sim` — replay the canonical seeded simulation scenario (the
+/// same driver the `sim_seeds` sweep runs, so a CI failure naming a
+/// seed is reproduced here, event trace included).
+fn cmd_sim(a: &Args) -> Result<()> {
+    a.check_known(&[
+        "seed", "seeds", "rows", "cols", "matrix-seed", "chunks", "batch", "ttl-ms", "trace",
+    ])?;
+    let seed0: u64 = a.get_parse("seed", 0u64)?;
+    let count: u64 = a.get_parse("seeds", 1u64)?;
+    let rows: usize = a.get_parse("rows", 3usize)?;
+    let cols: usize = a.get_parse("cols", 9usize)?;
+    let matrix_seed: u64 = a.get_parse("matrix-seed", 2024u64)?;
+    let chunks: usize = a.get_parse("chunks", 6usize)?;
+    let batch: usize = a.get_parse("batch", 32usize)?;
+    let ttl = std::time::Duration::from_millis(a.get_parse("ttl-ms", 200u64)?);
+    let payload = JobPayload::F64(gen::uniform(
+        &mut TestRng::from_seed(matrix_seed),
+        rows,
+        cols,
+        -1.0,
+        1.0,
+    ));
+    let spec = JobSpec { payload: payload.clone(), engine: JobEngine::Prefix, chunks, batch };
+
+    // Single-process reference of the identical spec.
+    let ref_store = JobStore::open(crate::testkit::scratch_dir("cli-sim-ref"))?;
+    let ref_id = ref_store.create(&spec)?;
+    let reference = JobRunner::new(RunnerConfig { workers: 0, chunk_budget: None })
+        .run(&ref_store, &ref_id)?;
+    let want = reference
+        .status
+        .value
+        .ok_or_else(|| Error::Job("reference run produced no value".into()))?;
+
+    let cfg = crate::fleet::FleetConfig {
+        lease_ttl: ttl,
+        default_chunks: chunks,
+        default_batch: batch,
+        ..Default::default()
+    };
+    let mut failures = 0u64;
+    for seed in seed0..seed0.saturating_add(count) {
+        let dir = crate::testkit::scratch_dir(&format!("cli-sim-{seed}"));
+        match crate::testkit::sim::run_random_scenario(
+            seed,
+            payload.clone(),
+            JobEngine::Prefix,
+            cfg,
+            dir,
+        ) {
+            Ok(out) => {
+                let ok = match (&out.value, &want) {
+                    (JobValue::F64(a), JobValue::F64(b)) => a.to_bits() == b.to_bits(),
+                    (JobValue::Exact(a), JobValue::Exact(b)) => a == b,
+                    _ => false,
+                };
+                println!(
+                    "seed {seed}: {}   det = {}   {} events, {}/{} chunks fleet-acked{}",
+                    if ok { "OK" } else { "MISMATCH" },
+                    out.value.render(),
+                    out.trace.len(),
+                    out.fleet_chunks,
+                    out.chunks_total,
+                    if out.faulty { ", faults on" } else { "" }
+                );
+                if a.has_flag("trace") || !ok {
+                    for line in &out.trace {
+                        println!("  {line}");
+                    }
+                }
+                if !ok {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("seed {seed}: ERROR {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(Error::Job(format!("{failures} of {count} sim seed(s) failed")));
+    }
+    println!(
+        "all {count} seed(s) reproduce the single-process bits: det = {}",
+        want.render()
+    );
     Ok(())
 }
 

@@ -1,0 +1,329 @@
+//! The virtual-time seam: every timing-dependent component (lease TTLs,
+//! worker heartbeats, `JOB WAIT` deadlines, job-id timestamps) reads
+//! time through a [`Clock`] instead of `Instant::now()` /
+//! `thread::sleep`, so the deterministic simulation fabric
+//! ([`crate::testkit::sim`]) can run the identical code under a
+//! manually-advanced [`SimClock`] — TTL expiry, heartbeat races and
+//! restart windows become replayable functions of a seed instead of
+//! wall-clock races.
+//!
+//! Timestamps are a [`Duration`] since the clock's epoch (process start
+//! for [`WallClock`], zero for [`SimClock`]). Components never compare
+//! timestamps across clocks; they only do deadline arithmetic on one
+//! clock, which is why a plain `Duration` suffices and no `Instant`
+//! needs to be forged.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A source of monotonic time plus the ability to block on it.
+///
+/// Implementations must be cheap to `now()` (it sits inside lease-table
+/// critical sections) and safe to share across threads.
+pub trait Clock: Send + Sync + fmt::Debug {
+    /// Monotonic time elapsed since this clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Block the calling thread for `d` of *this clock's* time. Under a
+    /// [`SimClock`] this parks the thread until someone advances virtual
+    /// time past the deadline.
+    fn sleep(&self, d: Duration);
+
+    /// Deadline `ttl` from now (saturating).
+    fn deadline(&self, ttl: Duration) -> Duration {
+        self.now().saturating_add(ttl)
+    }
+
+    /// Has `deadline` passed?
+    fn expired(&self, deadline: Duration) -> bool {
+        self.now() >= deadline
+    }
+}
+
+/// The production clock: real monotonic time, real sleeps.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// A wall clock whose epoch is "now".
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Shared handle to the production clock.
+pub fn wall() -> Arc<dyn Clock> {
+    Arc::new(WallClock::new())
+}
+
+#[derive(Debug, Default)]
+struct SimState {
+    now: Duration,
+    next_token: u64,
+    /// Registered sleeper deadlines, ordered — the wake order contract.
+    sleepers: BTreeSet<(Duration, u64)>,
+}
+
+/// A manually-advanced virtual clock.
+///
+/// `now` only moves when a test (or the sim scheduler) calls
+/// [`SimClock::advance`] / [`SimClock::advance_to`]. Sleeping threads
+/// register a deadline and are woken **in timestamp order**: an advance
+/// walks the pending deadlines earliest-first, moves `now` to each one,
+/// and waits for that sleeper to actually resume (deregister) before
+/// moving further — so two sleepers never observe time out of order,
+/// which is what makes multi-threaded sim tests replayable.
+///
+/// A sleep with no future advance blocks forever by design: virtual
+/// time has no background source, so a hung sim test points straight at
+/// the missing `advance` instead of flaking.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    state: Mutex<SimState>,
+    cv: Condvar,
+}
+
+impl SimClock {
+    /// A fresh virtual clock at `t = 0`, shareable across threads.
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock::default())
+    }
+
+    /// Advance virtual time by `d`, waking sleepers in deadline order.
+    pub fn advance(&self, d: Duration) {
+        let target = {
+            let st = self.state.lock().expect("sim clock poisoned");
+            st.now.saturating_add(d)
+        };
+        self.advance_to(target);
+    }
+
+    /// Advance virtual time to `target` (no-op if already past it).
+    pub fn advance_to(&self, target: Duration) {
+        let mut st = self.state.lock().expect("sim clock poisoned");
+        loop {
+            let next = st.sleepers.iter().next().copied();
+            match next {
+                Some((deadline, token)) if deadline <= target => {
+                    if st.now < deadline {
+                        st.now = deadline;
+                    }
+                    self.cv.notify_all();
+                    // Wait for that sleeper to resume and deregister
+                    // before time moves on — the in-order-wake contract.
+                    while st.sleepers.contains(&(deadline, token)) {
+                        st = self.cv.wait(st).expect("sim clock poisoned");
+                    }
+                }
+                _ => {
+                    if st.now < target {
+                        st.now = target;
+                    }
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Duration {
+        self.state.lock().expect("sim clock poisoned").now
+    }
+
+    fn sleep(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let mut st = self.state.lock().expect("sim clock poisoned");
+        let deadline = st.now.saturating_add(d);
+        let token = st.next_token;
+        st.next_token += 1;
+        st.sleepers.insert((deadline, token));
+        while st.now < deadline {
+            st = self.cv.wait(st).expect("sim clock poisoned");
+        }
+        st.sleepers.remove(&(deadline, token));
+        // Unblock an advancer waiting for this sleeper to resume.
+        self.cv.notify_all();
+    }
+}
+
+/// A broadcast wakeup: an epoch counter plus a condvar. Waiters record
+/// the epoch they have seen and block until it moves (or a real-time
+/// backstop elapses) — the condvar-with-deadline primitive that replaces
+/// fixed-interval polling in [`crate::jobs::JobManager::wait`].
+#[derive(Debug, Default)]
+pub struct Notify {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    /// A fresh notifier at epoch 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bump the epoch and wake all waiters.
+    pub fn notify(&self) {
+        *self.epoch.lock().expect("notify poisoned") += 1;
+        self.cv.notify_all();
+    }
+
+    /// The current epoch (capture *before* re-checking the condition you
+    /// wait on, so a notify between check and wait is never lost).
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().expect("notify poisoned")
+    }
+
+    /// Block until the epoch moves past `seen` or `backstop` (real time)
+    /// elapses. Returns the epoch observed on wakeup.
+    pub fn wait_past(&self, seen: u64, backstop: Duration) -> u64 {
+        let deadline = Instant::now() + backstop;
+        let mut g = self.epoch.lock().expect("notify poisoned");
+        while *g <= seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, _) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .expect("notify poisoned");
+            g = ng;
+        }
+        *g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn wall_clock_moves_and_sleeps() {
+        let c = WallClock::new();
+        let t0 = c.now();
+        c.sleep(Duration::from_millis(2));
+        assert!(c.now() > t0);
+        let d = c.deadline(Duration::from_secs(3600));
+        assert!(!c.expired(d));
+    }
+
+    #[test]
+    fn sim_clock_only_moves_on_advance() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(250));
+        c.advance_to(Duration::from_millis(100)); // backwards is a no-op
+        assert_eq!(c.now(), Duration::from_millis(250));
+        let d = c.deadline(Duration::from_millis(50));
+        assert!(!c.expired(d));
+        c.advance(Duration::from_millis(50));
+        assert!(c.expired(d));
+    }
+
+    #[test]
+    fn sim_sleepers_wake_in_timestamp_order() {
+        let c = SimClock::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        // Spawn sleepers with distinct deadlines, registration order
+        // scrambled relative to deadline order.
+        for (label, ms) in [("c", 30u64), ("a", 10), ("b", 20)] {
+            let c = Arc::clone(&c);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                c.sleep(Duration::from_millis(ms));
+                order.lock().unwrap().push(label);
+            }));
+        }
+        // Let all three register before advancing.
+        while c.state.lock().unwrap().sleepers.len() < 3 {
+            std::thread::yield_now();
+        }
+        // Step time deadline by deadline: after each advance only the
+        // newly-due sleeper can have woken, so the recorded order is
+        // the deadline order by construction of the clock.
+        let mut want = Vec::new();
+        for label in ["a", "b", "c"] {
+            c.advance(Duration::from_millis(10));
+            want.push(label);
+            while order.lock().unwrap().len() < want.len() {
+                std::thread::yield_now();
+            }
+            assert_eq!(*order.lock().unwrap(), want);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sim_sleep_past_target_stays_asleep() {
+        let c = SimClock::new();
+        let c2 = Arc::clone(&c);
+        let done = Arc::new(AtomicUsize::new(0));
+        let done2 = Arc::clone(&done);
+        let h = std::thread::spawn(move || {
+            c2.sleep(Duration::from_millis(100));
+            done2.store(1, Ordering::SeqCst);
+        });
+        while c.state.lock().unwrap().sleepers.is_empty() {
+            std::thread::yield_now();
+        }
+        c.advance(Duration::from_millis(50));
+        assert_eq!(done.load(Ordering::SeqCst), 0, "deadline not reached");
+        c.advance(Duration::from_millis(50));
+        h.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn notify_wakes_waiter_before_backstop() {
+        let n = Arc::new(Notify::new());
+        let seen = n.epoch();
+        let n2 = Arc::clone(&n);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            n2.notify();
+        });
+        let t0 = Instant::now();
+        let after = n.wait_past(seen, Duration::from_secs(30));
+        assert!(after > seen);
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn notify_backstop_elapses_without_signal() {
+        let n = Notify::new();
+        let seen = n.epoch();
+        let after = n.wait_past(seen, Duration::from_millis(5));
+        assert_eq!(after, seen);
+    }
+}

@@ -41,6 +41,7 @@
 //! with the table map only guarding membership — keep lease TTLs well
 //! above worst-case fsync latency until then.
 
+use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::jobs::{
     compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, JobValue,
@@ -48,8 +49,8 @@ use crate::jobs::{
 };
 use crate::{Error, Result};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Fleet knobs (server side).
 #[derive(Clone, Copy, Debug)]
@@ -87,8 +88,8 @@ struct OpenJob {
     journal: Journal,
     _lock: RunLock,
     completed: BTreeMap<u64, ChunkRecord>,
-    /// chunk → (worker, lease deadline).
-    leases: HashMap<u64, (String, Instant)>,
+    /// chunk → (worker, lease deadline on the table's [`Clock`]).
+    leases: HashMap<u64, (String, Duration)>,
     /// chunk → worker whose partial was journaled (idempotent re-acks
     /// for retried `LEASE COMPLETE`s).
     completed_by: HashMap<u64, String>,
@@ -97,7 +98,7 @@ struct OpenJob {
 impl OpenJob {
     /// Drop leases whose deadline has passed; their chunks become
     /// grantable again.
-    fn expire_leases(&mut self, now: Instant) {
+    fn expire_leases(&mut self, now: Duration) {
         self.leases.retain(|_, (_, deadline)| *deadline > now);
     }
 
@@ -165,7 +166,7 @@ fn grant_from<F: Fn(&str) -> bool>(
     worker: &str,
     filter: Option<&str>,
     want_spec: &F,
-    now: Instant,
+    now: Duration,
     ttl: Duration,
 ) -> Option<Grant> {
     for (id, oj) in jobs.iter_mut() {
@@ -174,7 +175,7 @@ fn grant_from<F: Fn(&str) -> bool>(
         }
         oj.expire_leases(now);
         if let Some(idx) = oj.next_free_chunk() {
-            oj.leases.insert(idx, (worker.to_string(), now + ttl));
+            oj.leases.insert(idx, (worker.to_string(), now.saturating_add(ttl)));
             let spec = want_spec(id).then(|| oj.spec.clone());
             return Some(Grant {
                 job: id.clone(),
@@ -192,13 +193,22 @@ fn grant_from<F: Fn(&str) -> bool>(
 pub struct LeaseTable {
     store: JobStore,
     cfg: FleetConfig,
+    clock: Arc<dyn Clock>,
     jobs: Mutex<BTreeMap<String, OpenJob>>,
 }
 
 impl LeaseTable {
-    /// New table over `store`.
+    /// New table over `store` on the production wall clock.
     pub fn new(store: JobStore, cfg: FleetConfig) -> Self {
-        Self { store, cfg, jobs: Mutex::new(BTreeMap::new()) }
+        Self::with_clock(store, cfg, clock::wall())
+    }
+
+    /// New table over `store` reading TTL deadlines from `clock` — the
+    /// deterministic-simulation constructor (a
+    /// [`crate::clock::SimClock`] makes lease expiry a pure function of
+    /// explicit `advance` calls).
+    pub fn with_clock(store: JobStore, cfg: FleetConfig, clock: Arc<dyn Clock>) -> Self {
+        Self { store, cfg, clock, jobs: Mutex::new(BTreeMap::new()) }
     }
 
     /// The underlying store.
@@ -370,7 +380,7 @@ impl LeaseTable {
                 return Ok(GrantOutcome::Complete);
             }
         }
-        let now = Instant::now();
+        let now = self.clock.now();
         if let Some(g) = grant_from(&mut jobs, worker, filter, &want_spec, now, self.cfg.lease_ttl)
         {
             return Ok(GrantOutcome::Granted(g));
@@ -417,7 +427,7 @@ impl LeaseTable {
             .ok_or_else(|| Error::Job(format!("job {id:?} is not open for fleet leasing")))?;
         match oj.leases.get_mut(&chunk) {
             Some((w, deadline)) if w.as_str() == worker => {
-                *deadline = Instant::now() + self.cfg.lease_ttl;
+                *deadline = self.clock.deadline(self.cfg.lease_ttl);
                 Ok(self.cfg.lease_ttl)
             }
             _ => Err(Error::Job(format!(
@@ -556,17 +566,23 @@ impl LeaseTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::SimClock;
     use crate::jobs::{JobRunner, RunnerConfig};
     use crate::matrix::gen;
     use crate::testkit::TestRng;
 
-    fn tmp_table(tag: &str, ttl: Duration) -> LeaseTable {
+    /// Table over a virtual clock: expiry tests advance time instead of
+    /// sleeping, so they are instant and can never race the wall clock.
+    fn tmp_table(tag: &str, ttl: Duration) -> (Arc<SimClock>, LeaseTable) {
         let store =
             JobStore::open(crate::testkit::scratch_dir(&format!("fleet-{tag}"))).unwrap();
-        LeaseTable::new(
+        let clock = SimClock::new();
+        let table = LeaseTable::with_clock(
             store,
             FleetConfig { lease_ttl: ttl, default_chunks: 6, ..Default::default() },
-        )
+            clock.clone(),
+        );
+        (clock, table)
     }
 
     fn submit_f64(table: &LeaseTable, seed: u64) -> String {
@@ -585,7 +601,7 @@ mod tests {
 
     #[test]
     fn grant_complete_drains_to_done_matching_inprocess_bits() {
-        let table = tmp_table("drain", Duration::from_secs(10));
+        let (_clock, table) = tmp_table("drain", Duration::from_secs(10));
         let id = submit_f64(&table, 61);
         // Reference: the identical spec run by the in-process runner.
         let spec = {
@@ -632,7 +648,7 @@ mod tests {
 
     #[test]
     fn expired_lease_is_regranted_and_late_complete_rejected() {
-        let table = tmp_table("expiry", Duration::from_millis(20));
+        let (clock, table) = tmp_table("expiry", Duration::from_millis(20));
         let id = submit_f64(&table, 62);
         let ga = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
             GrantOutcome::Granted(g) => g,
@@ -640,7 +656,7 @@ mod tests {
         };
         let spec = ga.spec.clone().unwrap();
         // wa stops renewing; past the TTL the same chunk goes to wb.
-        std::thread::sleep(Duration::from_millis(60));
+        clock.advance(Duration::from_millis(60));
         let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
             GrantOutcome::Granted(g) => g,
             other => panic!("{other:?}"),
@@ -666,18 +682,20 @@ mod tests {
 
     #[test]
     fn renewal_keeps_a_lease_alive() {
-        let table = tmp_table("renew", Duration::from_millis(200));
+        let (clock, table) = tmp_table("renew", Duration::from_millis(200));
         let id = submit_f64(&table, 63);
         let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
             GrantOutcome::Granted(g) => g,
             other => panic!("{other:?}"),
         };
         for _ in 0..3 {
-            std::thread::sleep(Duration::from_millis(60));
+            clock.advance(Duration::from_millis(60));
             table.renew("wa", &id, g.chunk_index).unwrap();
         }
-        // Well past the original TTL, the chunk is still wa's: a rival
-        // grant gets a different chunk.
+        // t = 180 ms with the last renewal reaching to 380 ms: advance
+        // well past the *original* 200 ms TTL — the chunk is still
+        // wa's, so a rival grant gets a different chunk.
+        clock.advance(Duration::from_millis(120));
         let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
             GrantOutcome::Granted(g) => g,
             other => panic!("{other:?}"),
@@ -690,7 +708,7 @@ mod tests {
 
     #[test]
     fn complete_validates_terms_and_kind() {
-        let table = tmp_table("validate", Duration::from_secs(10));
+        let (_clock, table) = tmp_table("validate", Duration::from_secs(10));
         let id = submit_f64(&table, 64);
         let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
             GrantOutcome::Granted(g) => g,
@@ -714,7 +732,7 @@ mod tests {
 
     #[test]
     fn unknown_and_closed_jobs_are_errors() {
-        let table = tmp_table("unknown", Duration::from_secs(10));
+        let (_clock, table) = tmp_table("unknown", Duration::from_secs(10));
         assert!(table.grant("wa", Some("job-nope"), |_| true).is_err());
         assert!(table.renew("wa", "job-nope", 0).is_err());
         let id = submit_f64(&table, 65);
@@ -769,7 +787,7 @@ mod tests {
 
     #[test]
     fn close_releases_the_run_lock_for_inprocess_resume() {
-        let table = tmp_table("close-lock", Duration::from_secs(10));
+        let (_clock, table) = tmp_table("close-lock", Duration::from_secs(10));
         let id = submit_f64(&table, 66);
         // While open, the run lock blocks an in-process runner.
         assert!(table.store().lock_job(&id).is_err());

@@ -41,4 +41,4 @@ pub mod lease_table;
 pub mod worker;
 
 pub use lease_table::{CompleteOutcome, FleetConfig, Grant, GrantOutcome, LeaseTable};
-pub use worker::{run_worker, WorkerConfig, WorkerReport};
+pub use worker::{run_worker, run_worker_with, Worker, WorkerConfig, WorkerEvent, WorkerReport};

@@ -1,12 +1,23 @@
-//! The fleet worker loop behind `raddet worker --connect`.
+//! The fleet worker: a step-wise lease-serving state machine
+//! ([`Worker`]) plus the threaded loop behind `raddet worker --connect`
+//! ([`run_worker`]).
 //!
-//! A worker is a plain TCP client of the determinant service: it claims
+//! A worker is a plain client of the determinant service: it claims
 //! chunk leases (`LEASE GRANT`), reconstructs the job's bit-exact
 //! matrix from the spec embedded in the first grant per job (later
 //! grants say `CACHED`), evaluates each chunk with the
 //! [`ChunkRunner`] the spec's engine tags select, and delivers the
 //! partial (`LEASE COMPLETE`) in the journal's bit-pattern encoding.
-//! A heartbeat thread on its own connection renews the held lease every
+//!
+//! [`Worker::step`] performs exactly one grant→compute→deliver cycle
+//! and **never sleeps** — pacing decisions (idle poll, reconnect
+//! back-off) are returned to the caller as [`WorkerEvent`]s. That split
+//! is what the deterministic simulation fabric
+//! ([`crate::testkit::sim`]) is built on: a seeded scheduler steps many
+//! workers cooperatively and every interleaving is a replayable
+//! function of the seed. [`run_worker`] is the production driver: real
+//! TCP transport, wall clock, a poll sleep on idle, and a heartbeat
+//! thread on its own connection renewing the held lease every
 //! [`WorkerConfig::renew_every`], so chunks longer than the server's
 //! TTL survive — and a worker that dies simply stops renewing, which is
 //! exactly the signal the server's lease table needs to reassign.
@@ -16,10 +27,11 @@
 //! counted in [`WorkerReport::rejected`] and the loop moves on — the
 //! partial was deterministic, so nothing about the journal is at risk.
 
+use crate::clock::{self, Clock};
 use crate::combin::{Chunk, PascalTable};
 use crate::coordinator::ChunkRunner;
 use crate::jobs::JobSpec;
-use crate::service::{Client, GrantReply};
+use crate::service::{Client, GrantReply, TcpTransport, Transport};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -83,6 +95,46 @@ pub struct WorkerReport {
     pub crashed: bool,
 }
 
+/// What one [`Worker::step`] did — the scheduler's (and
+/// [`run_worker`]'s) pacing signal. Steps never sleep; the driver
+/// decides what an `Idle` or `Disconnected` step is worth in time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkerEvent {
+    /// Nothing leasable right now.
+    Idle,
+    /// The pinned job has finished; a pinned worker is done.
+    JobComplete,
+    /// A chunk was computed and delivered.
+    Completed {
+        /// The job id.
+        job: String,
+        /// Chunk index delivered.
+        chunk: u64,
+        /// The server acknowledged it as an idempotent re-delivery.
+        duplicate: bool,
+    },
+    /// The server rejected the delivery (lease lost to reassignment).
+    Rejected {
+        /// The job id.
+        job: String,
+        /// Chunk index rejected.
+        chunk: u64,
+    },
+    /// Failure injection fired: the worker died holding this lease
+    /// (neither completed nor abandoned). The worker is terminal.
+    Crashed {
+        /// The job id.
+        job: String,
+        /// The chunk whose lease dies with the worker.
+        chunk: u64,
+    },
+    /// The connection failed (or could not be re-established); the next
+    /// step redials. After ~50 consecutive failures `step` errors out.
+    Disconnected,
+    /// [`WorkerConfig::max_chunks`] reached; the worker is done.
+    BudgetExhausted,
+}
+
 /// Per-job state a worker caches from the first grant's spec.
 struct CachedJob {
     spec: JobSpec,
@@ -99,6 +151,211 @@ impl CachedJob {
     }
 }
 
+/// The lease currently being computed: `(job, chunk, renew period)` —
+/// shared with the heartbeat thread on the production path.
+type HeldLease = Arc<Mutex<Option<(String, u64, Duration)>>>;
+
+/// A step-wise fleet worker over any transport and clock.
+pub struct Worker {
+    cfg: WorkerConfig,
+    transport: Arc<dyn Transport>,
+    addr: String,
+    clock: Arc<dyn Clock>,
+    client: Option<Client>,
+    jobs: HashMap<String, CachedJob>,
+    report: WorkerReport,
+    grants: u64,
+    grant_errors: u32,
+    held: HeldLease,
+}
+
+impl Worker {
+    /// Dial `addr` over `transport` and build a worker. Fails fast when
+    /// the first connection cannot be established (a typo'd address
+    /// should error, not retry forever); later connection losses are
+    /// retried via [`WorkerEvent::Disconnected`].
+    pub fn connect(
+        transport: Arc<dyn Transport>,
+        addr: &str,
+        cfg: WorkerConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Worker> {
+        let conn = transport.connect(addr)?;
+        Ok(Worker {
+            cfg,
+            transport,
+            addr: addr.to_string(),
+            clock,
+            client: Some(Client::over(conn)),
+            jobs: HashMap::new(),
+            report: WorkerReport::default(),
+            grants: 0,
+            grant_errors: 0,
+            held: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    /// Progress so far (final report comes from [`Worker::finish`]).
+    pub fn report(&self) -> WorkerReport {
+        self.report
+    }
+
+    /// Handle to the held-lease slot for a heartbeat loop.
+    fn held_handle(&self) -> HeldLease {
+        Arc::clone(&self.held)
+    }
+
+    /// A grant/connect failure: drop the connection (also resetting the
+    /// spec caches on both sides — the server's is per-connection) and
+    /// let the next step redial. Gives up after 50 consecutive
+    /// failures.
+    fn connection_failure(&mut self, e: Error) -> Result<WorkerEvent> {
+        self.grant_errors += 1;
+        self.client = None;
+        self.jobs.clear();
+        if self.grant_errors > 50 {
+            return Err(e);
+        }
+        Ok(WorkerEvent::Disconnected)
+    }
+
+    /// One grant→compute→deliver cycle. Never sleeps, never blocks on
+    /// time — pacing is the driver's job (see [`WorkerEvent`]).
+    pub fn step(&mut self) -> Result<WorkerEvent> {
+        if self.report.crashed {
+            return Err(Error::Job(format!(
+                "worker {:?} crashed and cannot be stepped",
+                self.cfg.id
+            )));
+        }
+        if self.cfg.max_chunks.is_some_and(|cap| self.report.chunks >= cap) {
+            return Ok(WorkerEvent::BudgetExhausted);
+        }
+        if self.client.is_none() {
+            match self.transport.connect(&self.addr) {
+                Ok(conn) => self.client = Some(Client::over(conn)),
+                Err(e) => return self.connection_failure(e),
+            }
+        }
+        let reply = {
+            let client = self.client.as_mut().expect("client ensured above");
+            match client.lease_grant(&self.cfg.id, self.cfg.job.as_deref()) {
+                Ok(r) => {
+                    self.grant_errors = 0;
+                    r
+                }
+                // Transient conflicts (a just-released run lock still
+                // visible) and dead connections (server restart) are
+                // retried; reconnecting also resets the server's
+                // per-connection spec cache, so dropping ours keeps the
+                // two sides consistent.
+                Err(e) => return self.connection_failure(e),
+            }
+        };
+        let (job, chunk, start, len, ttl_ms, spec) = match reply {
+            GrantReply::NoLease { reason } => {
+                if reason == "complete" && self.cfg.job.is_some() {
+                    return Ok(WorkerEvent::JobComplete);
+                }
+                return Ok(WorkerEvent::Idle);
+            }
+            GrantReply::Lease { job, chunk, start, len, ttl_ms, spec } => {
+                (job, chunk, start, len, ttl_ms, spec)
+            }
+        };
+        self.grants += 1;
+        if self.cfg.crash_after_grants.is_some_and(|cap| self.grants >= cap) {
+            // Die holding the lease: neither complete nor abandon — the
+            // server's TTL must recover it. No polite QUIT either: the
+            // connection is torn down exactly as a crash would.
+            self.report.crashed = true;
+            self.client = None;
+            return Ok(WorkerEvent::Crashed { job, chunk });
+        }
+        if let Some(spec) = spec {
+            match CachedJob::build(spec) {
+                Ok(cj) => {
+                    self.jobs.insert(job.clone(), cj);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let Some(cj) = self.jobs.get_mut(&job) else {
+            // `CACHED` for a spec this connection never saw (can only
+            // follow a server-side anomaly): give the lease back rather
+            // than compute blind.
+            let client = self.client.as_mut().expect("client ensured above");
+            let _ = client.lease_abandon(&self.cfg.id, &job, chunk);
+            return Ok(WorkerEvent::Idle);
+        };
+        // Renew well inside the granted TTL whatever the server's lease
+        // config is; cfg.renew_every only caps how chatty the heartbeat
+        // may get.
+        let renew_period = self
+            .cfg
+            .renew_every
+            .min(Duration::from_millis((ttl_ms / 3).max(10)));
+        *self.held.lock().expect("held lease poisoned") =
+            Some((job.clone(), chunk, renew_period));
+        let t0 = self.clock.now();
+        let outcome =
+            cj.runner
+                .run_chunk(cj.spec.payload.as_lease(), &cj.table, Chunk { start, len });
+        let micros = self.clock.now().saturating_sub(t0).as_micros() as u64;
+        *self.held.lock().expect("held lease poisoned") = None;
+        match outcome {
+            Ok((partial, wm)) => {
+                let client = self.client.as_mut().expect("client ensured above");
+                match client.lease_complete(
+                    &self.cfg.id,
+                    &job,
+                    chunk,
+                    wm.terms,
+                    micros,
+                    partial.into(),
+                ) {
+                    Ok(ack) => {
+                        // A dup ack means some delivery of this chunk
+                        // already counted (possibly by another worker
+                        // after our lease expired) — counting it again
+                        // would break chunk conservation.
+                        if !ack.duplicate {
+                            self.report.chunks += 1;
+                            self.report.terms += wm.terms;
+                        }
+                        if ack.chunks_done == ack.chunks_total {
+                            // Job finished: drop its cached matrix so a
+                            // long-lived worker's memory stays bounded
+                            // by *live* jobs, not every job ever served.
+                            self.jobs.remove(&job);
+                        }
+                        Ok(WorkerEvent::Completed { job, chunk, duplicate: ack.duplicate })
+                    }
+                    Err(_) => {
+                        self.report.rejected += 1;
+                        Ok(WorkerEvent::Rejected { job, chunk })
+                    }
+                }
+            }
+            Err(e) => {
+                let client = self.client.as_mut().expect("client ensured above");
+                let _ = client.lease_abandon(&self.cfg.id, &job, chunk);
+                Err(e)
+            }
+        }
+    }
+
+    /// End the run: QUIT politely (unless the worker "crashed" — then
+    /// the connection was already torn down abruptly) and return the
+    /// final report.
+    pub fn finish(mut self) -> WorkerReport {
+        if let Some(client) = self.client.take() {
+            client.quit();
+        }
+        self.report
+    }
+}
+
 /// Renew the currently held lease from a second connection so the main
 /// loop can stay buried in chunk compute. Each held lease carries its
 /// own renew period (derived from the granted TTL). Renewal failures
@@ -106,9 +363,10 @@ impl CachedJob {
 /// lease really is gone the eventual `LEASE COMPLETE` is the
 /// authoritative verdict.
 fn spawn_heartbeat(
+    transport: Arc<dyn Transport>,
     addr: String,
     worker: String,
-    held: Arc<Mutex<Option<(String, u64, Duration)>>>,
+    held: HeldLease,
     stop: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
@@ -123,7 +381,7 @@ fn spawn_heartbeat(
                 continue;
             }
             if client.is_none() {
-                client = Client::connect(&addr).ok();
+                client = transport.connect(&addr).ok().map(Client::over);
             }
             let renewed = client
                 .as_mut()
@@ -136,157 +394,62 @@ fn spawn_heartbeat(
     })
 }
 
-/// Join a running determinant server as a fleet worker and serve chunk
-/// leases until stopped, idle-exhausted, or budget-bounded (see
-/// [`WorkerConfig`]). `stop` makes the loop cooperative: raise it and
-/// the worker finishes (and delivers) its in-flight chunk, then exits.
+/// Join a running determinant server as a fleet worker over real TCP
+/// and serve chunk leases until stopped, idle-exhausted, or
+/// budget-bounded (see [`WorkerConfig`]). `stop` makes the loop
+/// cooperative: raise it and the worker finishes (and delivers) its
+/// in-flight chunk, then exits.
 pub fn run_worker(addr: &str, cfg: &WorkerConfig, stop: &AtomicBool) -> Result<WorkerReport> {
-    let mut client = Client::connect(addr)?;
-    let mut jobs: HashMap<String, CachedJob> = HashMap::new();
-    let mut report = WorkerReport::default();
-    let mut grants: u64 = 0;
-    let mut grant_errors: u32 = 0;
-    let mut run_err: Option<Error> = None;
+    run_worker_with(Arc::new(TcpTransport), addr, cfg, stop, clock::wall())
+}
 
-    let held: Arc<Mutex<Option<(String, u64, Duration)>>> = Arc::new(Mutex::new(None));
+/// [`run_worker`] over an explicit transport and clock — the seam the
+/// simulation fabric and transport tests use. Pacing (`cfg.poll`)
+/// sleeps on the given clock; the heartbeat thread is only spawned on
+/// real transports' behalf but is harmless (and idle) under sim, where
+/// steps are atomic with respect to virtual time.
+pub fn run_worker_with(
+    transport: Arc<dyn Transport>,
+    addr: &str,
+    cfg: &WorkerConfig,
+    stop: &AtomicBool,
+    clock: Arc<dyn Clock>,
+) -> Result<WorkerReport> {
+    let mut worker = Worker::connect(Arc::clone(&transport), addr, cfg.clone(), clock.clone())?;
     let heartbeat_stop = Arc::new(AtomicBool::new(false));
     let heartbeat = spawn_heartbeat(
+        transport,
         addr.to_string(),
         cfg.id.clone(),
-        Arc::clone(&held),
+        worker.held_handle(),
         Arc::clone(&heartbeat_stop),
     );
-
+    let mut run_err: Option<Error> = None;
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        if cfg.max_chunks.is_some_and(|cap| report.chunks >= cap) {
-            break;
-        }
-        let reply = match client.lease_grant(&cfg.id, cfg.job.as_deref()) {
-            Ok(r) => {
-                grant_errors = 0;
-                r
-            }
-            Err(e) => {
-                // Transient conflicts (a just-released run lock still
-                // visible) and dead connections (server restart) are
-                // retried briefly before giving up. Reconnecting also
-                // resets the server's per-connection spec cache, so
-                // dropping ours keeps the two sides consistent.
-                grant_errors += 1;
-                if grant_errors > 50 {
-                    run_err = Some(e);
-                    break;
-                }
-                std::thread::sleep(cfg.poll);
-                if let Ok(fresh) = Client::connect(addr) {
-                    client = fresh;
-                    jobs.clear();
-                }
-                continue;
-            }
-        };
-        match reply {
-            GrantReply::NoLease { reason } => {
-                if reason == "complete" && cfg.job.is_some() {
-                    break; // the one job we serve is done
-                }
+        match worker.step() {
+            Ok(WorkerEvent::Idle) => {
                 if cfg.exit_on_idle {
                     break;
                 }
-                std::thread::sleep(cfg.poll);
+                clock.sleep(cfg.poll);
             }
-            GrantReply::Lease { job, chunk, start, len, ttl_ms, spec } => {
-                grants += 1;
-                if cfg.crash_after_grants.is_some_and(|cap| grants >= cap) {
-                    // Die holding the lease: neither complete nor
-                    // abandon — the server's TTL must recover it.
-                    report.crashed = true;
-                    break;
-                }
-                if let Some(spec) = spec {
-                    match CachedJob::build(spec) {
-                        Ok(cj) => {
-                            jobs.insert(job.clone(), cj);
-                        }
-                        Err(e) => {
-                            run_err = Some(e);
-                            break;
-                        }
-                    }
-                }
-                let Some(cj) = jobs.get_mut(&job) else {
-                    // `CACHED` for a spec this connection never saw
-                    // (can only follow a server-side anomaly): give the
-                    // lease back rather than compute blind.
-                    let _ = client.lease_abandon(&cfg.id, &job, chunk);
-                    std::thread::sleep(cfg.poll);
-                    continue;
-                };
-                // Renew well inside the granted TTL whatever the
-                // server's lease config is; cfg.renew_every only caps
-                // how chatty the heartbeat may get.
-                let renew_period = cfg
-                    .renew_every
-                    .min(Duration::from_millis((ttl_ms / 3).max(10)));
-                *held.lock().expect("held lease poisoned") =
-                    Some((job.clone(), chunk, renew_period));
-                let t0 = Instant::now();
-                let outcome =
-                    cj.runner
-                        .run_chunk(cj.spec.payload.as_lease(), &cj.table, Chunk { start, len });
-                let micros = t0.elapsed().as_micros() as u64;
-                *held.lock().expect("held lease poisoned") = None;
-                match outcome {
-                    Ok((partial, wm)) => {
-                        match client.lease_complete(
-                            &cfg.id,
-                            &job,
-                            chunk,
-                            wm.terms,
-                            micros,
-                            partial.into(),
-                        ) {
-                            Ok(ack) => {
-                                // A dup ack means some delivery of this
-                                // chunk already counted (possibly by
-                                // another worker after our lease
-                                // expired) — counting it again would
-                                // break chunk conservation.
-                                if !ack.duplicate {
-                                    report.chunks += 1;
-                                    report.terms += wm.terms;
-                                }
-                                if ack.chunks_done == ack.chunks_total {
-                                    // Job finished: drop its cached
-                                    // matrix so a long-lived worker's
-                                    // memory stays bounded by *live*
-                                    // jobs, not every job ever served.
-                                    jobs.remove(&job);
-                                }
-                            }
-                            Err(_) => report.rejected += 1,
-                        }
-                    }
-                    Err(e) => {
-                        let _ = client.lease_abandon(&cfg.id, &job, chunk);
-                        run_err = Some(e);
-                        break;
-                    }
-                }
+            Ok(WorkerEvent::Disconnected) => clock.sleep(cfg.poll),
+            Ok(WorkerEvent::JobComplete)
+            | Ok(WorkerEvent::Crashed { .. })
+            | Ok(WorkerEvent::BudgetExhausted) => break,
+            Ok(WorkerEvent::Completed { .. }) | Ok(WorkerEvent::Rejected { .. }) => {}
+            Err(e) => {
+                run_err = Some(e);
+                break;
             }
         }
     }
-
     heartbeat_stop.store(true, Ordering::SeqCst);
     let _ = heartbeat.join();
-    if report.crashed {
-        drop(client); // no polite QUIT — simulate the crash faithfully
-    } else {
-        client.quit();
-    }
+    let report = worker.finish();
     match run_err {
         Some(e) => Err(e),
         None => Ok(report),

@@ -11,11 +11,12 @@
 use super::runner::{JobRunner, RunnerConfig};
 use super::store::{JobStatus, JobStore};
 use super::{JobEngine, JobPayload, JobSpec};
+use crate::clock::{self, Clock, Notify};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// The one capacity gate: live (not-done) handles vs the cap. Both the
 /// submit fast-fail and the spawn-time check go through here.
@@ -54,6 +55,12 @@ pub struct JobManager {
     /// plus its per-job worker pool) — a client hammering `JOB SUBMIT`
     /// must not exhaust server threads.
     max_concurrent: usize,
+    /// Deadline arithmetic for [`Self::wait`] (virtual under sim).
+    clock: Arc<dyn Clock>,
+    /// Bumped by every runner thread as it finishes, so `wait` wakes
+    /// the moment one of *our* jobs completes or pauses instead of
+    /// discovering it a poll interval later.
+    done_signal: Arc<Notify>,
     jobs: Mutex<HashMap<String, Handle>>,
 }
 
@@ -69,6 +76,8 @@ impl JobManager {
             default_chunks: 32,
             default_batch: 256,
             max_concurrent: 8,
+            clock: clock::wall(),
+            done_signal: Arc::new(Notify::new()),
             jobs: Mutex::new(HashMap::new()),
         }
     }
@@ -77,6 +86,16 @@ impl JobManager {
     /// background runs).
     pub fn with_max_concurrent(mut self, n: usize) -> Self {
         self.max_concurrent = n;
+        self
+    }
+
+    /// Read `wait` deadlines from `clock` instead of the wall — the
+    /// deterministic-simulation hook. Runner threads still execute in
+    /// real time; only deadline arithmetic goes virtual, so a sim test
+    /// uses zero-timeout polls (or jobs that actually finish) rather
+    /// than timing out.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -170,6 +189,7 @@ impl JobManager {
         let store = self.store.clone();
         let runner_cfg = self.runner;
         let id_owned = id.to_string();
+        let signal = Arc::clone(&self.done_signal);
         std::thread::spawn(move || {
             // catch_unwind: a panic anywhere in the run must still set
             // `done` (and leave a diagnosis), or the job would read as
@@ -188,6 +208,7 @@ impl JobManager {
                 }
             }
             done.store(true, Ordering::SeqCst);
+            signal.notify();
         });
         jobs.insert(id.to_string(), handle);
         Ok(())
@@ -244,8 +265,13 @@ impl JobManager {
     /// `JOB WAIT`: it replies immediately with the current status and
     /// never touches the wait loop (docs/PROTOCOL.md §JOB WAIT).
     ///
-    /// The poll watches the runner handle's `done` flag only — the
-    /// journal (whose SPEC record embeds the whole matrix and can be
+    /// The wait is a condvar with a deadline, not a fixed-interval
+    /// poll: each runner thread bumps [`Notify`] as it finishes, so
+    /// completion of one of *our* jobs wakes this immediately (no
+    /// 10 ms poll race). A real-time backstop re-checks foreign lock
+    /// holders — another process releasing a run lock can't signal us.
+    /// Only the runner handle's `done` flag is watched — the journal
+    /// (whose SPEC record embeds the whole matrix and can be
     /// megabytes) is replayed exactly once, for the final snapshot.
     /// The flag is set *after* the last record lands, so that single
     /// replay is a consistent view of everything the run journaled.
@@ -258,15 +284,26 @@ impl JobManager {
             // the loop's take_error check would.
             return self.status(id);
         }
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.deadline(timeout);
         loop {
             if let Some(msg) = self.take_error(id) {
                 return Err(Error::Job(format!("job {id:?} failed: {msg}")));
             }
-            if !self.is_running(id) || Instant::now() >= deadline {
+            if self.clock.expired(deadline) {
                 return self.status(id);
             }
-            std::thread::sleep(Duration::from_millis(10));
+            // Capture the epoch *before* the final running check: a
+            // notify landing between check and wait then returns
+            // immediately instead of being lost.
+            let seen = self.done_signal.epoch();
+            if !self.is_running(id) {
+                return self.status(id);
+            }
+            // Backstop clamped to the remaining deadline so a short
+            // JOB WAIT never overshoots by a full backstop interval.
+            let remaining = deadline.saturating_sub(self.clock.now());
+            self.done_signal
+                .wait_past(seen, remaining.min(Duration::from_millis(50)));
         }
     }
 }
@@ -278,6 +315,7 @@ mod tests {
     use crate::linalg::radic_det_seq;
     use crate::matrix::gen;
     use crate::testkit::TestRng;
+    use std::time::Instant;
 
     fn tmp_manager(tag: &str) -> JobManager {
         let dir = crate::testkit::scratch_dir(&format!("manager-{tag}"));

@@ -7,6 +7,7 @@
 
 use super::journal::{Journal, MetaRecord, Record};
 use super::{plan_dims, ChunkRecord, JobSpec, JobValue};
+use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::{Error, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -24,11 +25,13 @@ pub fn valid_id(id: &str) -> bool {
             .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
 }
 
-fn new_id() -> String {
+/// Allocate a job id: a millisecond timestamp (store epoch + clock
+/// offset) for cross-restart uniqueness and operator legibility, plus
+/// pid and a process-global sequence number — the id stays unique even
+/// under a frozen [`crate::clock::SimClock`] whose offset never moves.
+fn new_id(epoch_millis: u64, clock: &dyn Clock) -> String {
     static SEQ: AtomicU64 = AtomicU64::new(0);
-    let millis = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map_or(0, |d| d.as_millis() as u64);
+    let millis = epoch_millis.saturating_add(clock.now().as_millis() as u64);
     format!(
         "job-{millis:x}-{}-{}",
         std::process::id(),
@@ -230,6 +233,13 @@ struct SpecCacheEntry {
 #[derive(Clone, Debug)]
 pub struct JobStore {
     root: PathBuf,
+    /// Unix-epoch millis at store open — the absolute base of id
+    /// timestamps, so ids stay unique across process restarts (the
+    /// clock below only measures time *since* open). Zero under sim.
+    epoch_millis: u64,
+    /// Offset source for allocated job ids (virtual under sim, so a
+    /// seeded scenario mints reproducible ids).
+    clock: Arc<dyn Clock>,
     /// Per-id SPEC head cache (shared across clones) so status polling
     /// never re-reads or re-hashes the matrix-sized SPEC line.
     spec_cache: Arc<Mutex<HashMap<String, SpecCacheEntry>>>,
@@ -240,7 +250,25 @@ impl JobStore {
     pub fn open(root: impl Into<PathBuf>) -> Result<JobStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        Ok(JobStore { root, spec_cache: Arc::new(Mutex::new(HashMap::new())) })
+        let epoch_millis = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map_or(0, |d| d.as_millis() as u64);
+        Ok(JobStore {
+            root,
+            epoch_millis,
+            clock: clock::wall(),
+            spec_cache: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// Replace the id-timestamp source (deterministic-simulation hook):
+    /// ids derive from virtual time alone (epoch base zeroed) so a
+    /// seeded world mints reproducible ids. Journals and locks are
+    /// unaffected.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self.epoch_millis = 0;
+        self
     }
 
     /// Store root directory.
@@ -260,7 +288,7 @@ impl JobStore {
     /// id, write the SPEC record. Returns the id.
     pub fn create(&self, spec: &JobSpec) -> Result<String> {
         spec.plan()?; // reject impossible jobs before touching disk
-        let id = new_id();
+        let id = new_id(self.epoch_millis, self.clock.as_ref());
         Journal::create(&self.journal_path(&id)?, spec)?;
         Ok(id)
     }
@@ -536,6 +564,18 @@ mod tests {
     #[test]
     fn ids_are_unique_and_valid() {
         let store = tmp_store("ids");
+        let spec = sample_spec();
+        let a = store.create(&spec).unwrap();
+        let b = store.create(&spec).unwrap();
+        assert_ne!(a, b);
+        assert!(valid_id(&a) && valid_id(&b));
+    }
+
+    #[test]
+    fn ids_stay_unique_under_a_frozen_sim_clock() {
+        // A SimClock that never advances mints identical timestamps;
+        // the sequence suffix must still keep ids distinct.
+        let store = tmp_store("sim-ids").with_clock(crate::clock::SimClock::new());
         let spec = sample_spec();
         let a = store.create(&spec).unwrap();
         let b = store.create(&spec).unwrap();

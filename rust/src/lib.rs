@@ -52,8 +52,14 @@
 //!   to a single-process run (see `ARCHITECTURE.md`).
 //! * [`apps`] — the paper's motivating application: image retrieval with
 //!   a non-square determinant similarity kernel (refs \[8\], [20–23]).
+//! * [`clock`] — the virtual-time seam: a [`clock::Clock`] trait with
+//!   the production [`clock::WallClock`] and the manually-advanced
+//!   [`clock::SimClock`] behind every TTL, heartbeat and wait deadline.
 //! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
-//!   criterion / proptest / clap (offline environment, see DESIGN.md §2).
+//!   criterion / proptest / clap (offline environment, see DESIGN.md §2);
+//!   [`testkit::sim`] is the deterministic simulation fabric (virtual
+//!   clock + in-memory transport + seeded scheduler) the fleet's
+//!   failure scenarios replay on.
 //!
 //! ## Quickstart
 //!
@@ -79,6 +85,7 @@
 pub mod apps;
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod combin;
 pub mod coordinator;
 pub mod error;

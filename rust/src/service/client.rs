@@ -3,17 +3,19 @@
 //! fleet-worker `LEASE` verbs (grant / renew / complete / abandon).
 
 use super::protocol::{Request, Response};
+use super::transport::{Conn, TcpTransport, Transport};
 use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{MatF64, MatI64};
 use crate::{Error, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 /// One service connection (request/response, pipelined sequentially).
+///
+/// Transport-agnostic: [`Client::connect`] dials real TCP, while
+/// [`Client::over`] wraps any [`Conn`] — the deterministic simulation
+/// fabric hands workers in-memory connections this way.
 pub struct Client {
-    stream: TcpStream,
-    reader: BufReader<TcpStream>,
+    conn: Box<dyn Conn>,
 }
 
 /// A float determinant reply with client-side latency attached.
@@ -30,22 +32,22 @@ pub struct DetReply {
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `127.0.0.1:7171`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7171`) over real TCP.
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Self { stream, reader })
+        Ok(Self::over(TcpTransport.connect(addr)?))
+    }
+
+    /// Wrap an already-established connection (any transport).
+    pub fn over(conn: Box<dyn Conn>) -> Self {
+        Self { conn }
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
-        self.stream.write_all(req.encode().as_bytes())?;
-        self.stream.flush()?;
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            return Err(Error::Protocol("server closed the connection".into()));
+        self.conn.send(&req.encode())?;
+        match self.conn.recv()? {
+            Some(line) => Response::parse(&line),
+            None => Err(Error::Protocol("server closed the connection".into())),
         }
-        Response::parse(&line)
     }
 
     /// Liveness probe.
@@ -235,7 +237,7 @@ impl Client {
 
     /// Polite close.
     pub fn quit(mut self) {
-        let _ = self.stream.write_all(Request::Quit.encode().as_bytes());
+        let _ = self.conn.send(&Request::Quit.encode());
     }
 }
 

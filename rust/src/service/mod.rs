@@ -20,7 +20,9 @@
 pub mod client;
 pub mod protocol;
 pub mod server;
+pub mod transport;
 
 pub use client::{Client, CompleteReply, GrantReply, JobStatusReply};
 pub use protocol::{Request, Response};
-pub use server::{Server, ServerHandle};
+pub use server::{ConnCtx, Server, ServerHandle, ServiceCore};
+pub use transport::{Conn, ScriptConn, ScriptTransport, TcpTransport, Transport};

@@ -1,7 +1,14 @@
-//! The determinant server: accept loop + per-connection handler threads
-//! sharing one coordinator (and, when enabled, one durable
-//! [`JobManager`] serving the `JOB` verbs plus one
-//! [`LeaseTable`] serving the fleet `LEASE` verbs).
+//! The determinant server: a transport-independent request core
+//! ([`ServiceCore`]) plus the TCP shell around it (accept loop +
+//! per-connection handler threads).
+//!
+//! [`ServiceCore::handle_line`] is the entire verb dispatch — one
+//! request frame in, one response frame out, with per-connection state
+//! (the lease-spec cache) carried in a [`ConnCtx`]. The TCP path feeds
+//! it from sockets; the deterministic simulation fabric
+//! ([`crate::testkit::sim`]) feeds it from an in-memory transport, so
+//! every protocol behaviour tested under simulation is byte-for-byte
+//! the behaviour a real socket would see.
 
 use super::protocol::{Request, Response};
 use crate::coordinator::Coordinator;
@@ -24,11 +31,107 @@ const MAX_LINE_BYTES: usize = 32 << 20;
 /// thread forever.
 const MAX_WAIT: Duration = Duration::from_secs(600);
 
-/// Server configuration + shared state.
-pub struct Server {
+/// Per-connection protocol state.
+///
+/// Job specs already shipped on this connection: grants for these jobs
+/// reply `CACHED` instead of re-sending a matrix-sized spec. Lives and
+/// dies with the connection on both transports, which is what keeps the
+/// two sides' spec caches consistent across reconnects.
+#[derive(Debug, Default)]
+pub struct ConnCtx {
+    sent_specs: HashSet<String>,
+}
+
+/// The transport-independent request brain: one shared coordinator
+/// plus (optionally) the durable-jobs manager and the fleet lease
+/// table. Every connection handler — TCP thread or simulated link —
+/// owns a [`ConnCtx`] and calls [`ServiceCore::handle_line`] per frame.
+pub struct ServiceCore {
     coordinator: Arc<Coordinator>,
     jobs: Option<Arc<JobManager>>,
     fleet: Option<Arc<LeaseTable>>,
+}
+
+impl ServiceCore {
+    /// Assemble a core from its parts (`None` disables the `JOB` /
+    /// `LEASE` verb families with a soft error, exactly like a server
+    /// started without a jobs dir).
+    pub fn new(
+        coordinator: Coordinator,
+        jobs: Option<JobManager>,
+        fleet: Option<LeaseTable>,
+    ) -> Self {
+        Self {
+            coordinator: Arc::new(coordinator),
+            jobs: jobs.map(Arc::new),
+            fleet: fleet.map(Arc::new),
+        }
+    }
+
+    /// The fleet lease table, when enabled.
+    pub fn fleet(&self) -> Option<&LeaseTable> {
+        self.fleet.as_deref()
+    }
+
+    /// The durable-jobs manager, when enabled.
+    pub fn jobs(&self) -> Option<&JobManager> {
+        self.jobs.as_deref()
+    }
+
+    /// Serve one request frame. `None` means the client said `QUIT`
+    /// (close the connection without replying); parse failures and verb
+    /// errors come back as `Some(Response::Err)` — the connection
+    /// survives.
+    pub fn handle_line(&self, line: &str, ctx: &mut ConnCtx) -> Option<Response> {
+        let response = match Request::parse(line) {
+            Ok(Request::Quit) => return None,
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Det(a)) => {
+                let t0 = Instant::now();
+                match self.coordinator.radic_det(&a) {
+                    Ok(out) => Response::Ok {
+                        det: out.det,
+                        terms: out.terms,
+                        micros: t0.elapsed().as_micros(),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(Request::Exact(a)) => {
+                let t0 = Instant::now();
+                let terms = crate::combin::combination_count(
+                    a.cols() as u64,
+                    a.rows().min(a.cols()) as u64,
+                )
+                .unwrap_or(0);
+                match self.coordinator.radic_det_exact(&a) {
+                    Ok(det) => Response::OkExact {
+                        det,
+                        terms,
+                        micros: t0.elapsed().as_micros(),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Ok(
+                lease_req @ (Request::LeaseGrant { .. }
+                | Request::LeaseRenew { .. }
+                | Request::LeaseComplete { .. }
+                | Request::LeaseAbandon { .. }),
+            ) => handle_lease_request(self.fleet.as_deref(), lease_req, &mut ctx.sent_specs),
+            Ok(job_req) => {
+                handle_job_request(self.jobs.as_deref(), self.fleet.as_deref(), job_req)
+            }
+            Err(e) => Response::Err(e.to_string()),
+        };
+        Some(response)
+    }
+}
+
+/// Server configuration + shared state (the TCP shell over a
+/// [`ServiceCore`]).
+pub struct Server {
+    core: ServiceCore,
 }
 
 /// Handle to a running server (stop + stats).
@@ -46,27 +149,24 @@ impl Server {
     /// always does, journaling to `--jobs-dir`, default
     /// `./raddet-jobs`).
     pub fn new(coordinator: Coordinator) -> Self {
-        Self { coordinator: Arc::new(coordinator), jobs: None, fleet: None }
+        Self { core: ServiceCore::new(coordinator, None, None) }
     }
 
     /// New server with durable-jobs support. Fleet leasing (`LEASE`
     /// verbs over a [`LeaseTable`] sharing the manager's store) comes
     /// with it; tune it with [`Self::with_fleet_config`].
     pub fn with_jobs(coordinator: Coordinator, jobs: JobManager) -> Self {
-        let fleet = Arc::new(LeaseTable::new(jobs.store().clone(), FleetConfig::default()));
-        Self {
-            coordinator: Arc::new(coordinator),
-            jobs: Some(Arc::new(jobs)),
-            fleet: Some(fleet),
-        }
+        let fleet = LeaseTable::new(jobs.store().clone(), FleetConfig::default());
+        Self { core: ServiceCore::new(coordinator, Some(jobs), Some(fleet)) }
     }
 
     /// Rebuild the fleet lease table with explicit knobs (tests use
     /// short TTLs; ops may want coarser default chunking). No-op on a
     /// server without jobs support.
     pub fn with_fleet_config(mut self, cfg: FleetConfig) -> Self {
-        if let Some(jobs) = &self.jobs {
-            self.fleet = Some(Arc::new(LeaseTable::new(jobs.store().clone(), cfg)));
+        if let Some(jobs) = &self.core.jobs {
+            self.core.fleet =
+                Some(Arc::new(LeaseTable::new(jobs.store().clone(), cfg)));
         }
         self
     }
@@ -81,21 +181,17 @@ impl Server {
 
         let accept_stop = Arc::clone(&stop);
         let accept_requests = Arc::clone(&requests);
-        let coordinator = Arc::clone(&self.coordinator);
-        let jobs = self.jobs.clone();
-        let fleet = self.fleet.clone();
+        let core = Arc::new(self.core);
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if accept_stop.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                let coord = Arc::clone(&coordinator);
-                let jobs = jobs.clone();
-                let fleet = fleet.clone();
+                let core = Arc::clone(&core);
                 let reqs = Arc::clone(&accept_requests);
                 std::thread::spawn(move || {
-                    let _ = handle_connection(stream, &coord, jobs.as_deref(), fleet.as_deref(), &reqs);
+                    let _ = handle_connection(stream, &core, &reqs);
                 });
             }
         });
@@ -331,17 +427,13 @@ fn handle_lease_request(
 
 fn handle_connection(
     stream: TcpStream,
-    coord: &Coordinator,
-    jobs: Option<&JobManager>,
-    fleet: Option<&LeaseTable>,
+    core: &ServiceCore,
     requests: &AtomicU64,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    // Job specs already shipped on this connection: grants for these
-    // jobs reply `CACHED` instead of re-sending a matrix-sized spec.
-    let mut sent_specs: HashSet<String> = HashSet::new();
+    let mut ctx = ConnCtx::default();
     loop {
         let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
             Ok(None) => break,
@@ -356,44 +448,8 @@ fn handle_connection(
             }
             Err(e) => return Err(e.into()),
         };
-        let response = match Request::parse(&line) {
-            Ok(Request::Quit) => break,
-            Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Det(a)) => {
-                let t0 = Instant::now();
-                match coord.radic_det(&a) {
-                    Ok(out) => Response::Ok {
-                        det: out.det,
-                        terms: out.terms,
-                        micros: t0.elapsed().as_micros(),
-                    },
-                    Err(e) => Response::Err(e.to_string()),
-                }
-            }
-            Ok(Request::Exact(a)) => {
-                let t0 = Instant::now();
-                let terms = crate::combin::combination_count(
-                    a.cols() as u64,
-                    a.rows().min(a.cols()) as u64,
-                )
-                .unwrap_or(0);
-                match coord.radic_det_exact(&a) {
-                    Ok(det) => Response::OkExact {
-                        det,
-                        terms,
-                        micros: t0.elapsed().as_micros(),
-                    },
-                    Err(e) => Response::Err(e.to_string()),
-                }
-            }
-            Ok(
-                lease_req @ (Request::LeaseGrant { .. }
-                | Request::LeaseRenew { .. }
-                | Request::LeaseComplete { .. }
-                | Request::LeaseAbandon { .. }),
-            ) => handle_lease_request(fleet, lease_req, &mut sent_specs),
-            Ok(job_req) => handle_job_request(jobs, fleet, job_req),
-            Err(e) => Response::Err(e.to_string()),
+        let Some(response) = core.handle_line(&line, &mut ctx) else {
+            break; // QUIT
         };
         requests.fetch_add(1, Ordering::SeqCst);
         writer.write_all(response.encode().as_bytes())?;
@@ -436,5 +492,29 @@ mod tests {
         line.push(b'\n');
         let mut r2 = BufReader::new(Cursor::new(line));
         assert!(read_line_capped(&mut r2, 100).is_err());
+    }
+
+    #[test]
+    fn core_answers_ping_and_quit_without_a_socket() {
+        let coord = crate::coordinator::Coordinator::new(
+            crate::coordinator::CoordinatorConfig {
+                workers: 1,
+                engine: crate::coordinator::EngineKind::Cpu,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let core = ServiceCore::new(coord, None, None);
+        let mut ctx = ConnCtx::default();
+        assert_eq!(core.handle_line("PING", &mut ctx), Some(Response::Pong));
+        assert!(matches!(
+            core.handle_line("GARBAGE", &mut ctx),
+            Some(Response::Err(_))
+        ));
+        assert!(matches!(
+            core.handle_line("LEASE GRANT w1", &mut ctx),
+            Some(Response::Err(_)) // fleet disabled
+        ));
+        assert_eq!(core.handle_line("QUIT", &mut ctx), None);
     }
 }

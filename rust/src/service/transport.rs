@@ -1,0 +1,168 @@
+//! The network seam: a line-framed connection abstraction over
+//! `TcpStream` so the client, the fleet worker, and the heartbeat loop
+//! can run unchanged over real sockets ([`TcpTransport`]) or the
+//! in-memory deterministic fabric ([`crate::testkit::sim::SimNet`]).
+//!
+//! The protocol is strictly one `\n`-terminated UTF-8 frame per
+//! request/response ([`super::protocol`]), so the seam is line-level:
+//! [`Conn::send`] writes one frame, [`Conn::recv`] reads one. Byte-level
+//! concerns (the hostile-input line cap, half-frame EOF handling) stay
+//! in the TCP server's accept path, which is deliberately *not* behind
+//! this trait — a simulated network models message loss and partitions,
+//! not malformed TCP framing (that corpus is tested over real sockets
+//! in `tests/protocol_corpus.rs`).
+
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// One established, bidirectional, line-framed connection.
+pub trait Conn: Send {
+    /// Write one frame (a trailing `\n` is appended if missing).
+    fn send(&mut self, frame: &str) -> Result<()>;
+
+    /// Read the next frame, without its terminator. `Ok(None)` means
+    /// the peer closed the connection cleanly.
+    fn recv(&mut self) -> Result<Option<String>>;
+}
+
+/// A connection factory — the dial side of the seam.
+pub trait Transport: Send + Sync {
+    /// Open a connection to `addr` (interpretation is transport-
+    /// specific: `host:port` for TCP, ignored by the sim fabric).
+    fn connect(&self, addr: &str) -> Result<Box<dyn Conn>>;
+}
+
+/// The production transport: real TCP with `TCP_NODELAY` (the protocol
+/// is strictly request/response, so Nagle only adds latency).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpTransport;
+
+impl Transport for TcpTransport {
+    fn connect(&self, addr: &str) -> Result<Box<dyn Conn>> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Box::new(TcpConn { stream, reader }))
+    }
+}
+
+/// A [`Conn`] over one `TcpStream`.
+pub struct TcpConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, frame: &str) -> Result<()> {
+        self.stream.write_all(frame.as_bytes())?;
+        if !frame.ends_with('\n') {
+            self.stream.write_all(b"\n")?;
+        }
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<String>> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(Some(line))
+    }
+}
+
+/// A scripted connection for protocol-hardening tests: `recv` replays a
+/// fixed sequence of server frames, `send` records what the client side
+/// transmitted into a shared log. Lets a test drive a
+/// [`crate::fleet::Worker`] against arbitrary (including malformed or
+/// out-of-contract) server behaviour without a server at all.
+#[derive(Debug, Default)]
+pub struct ScriptConn {
+    /// Frames the fake server will answer, in order.
+    replies: std::collections::VecDeque<String>,
+    /// Frames the client sent, shared so the test keeps a handle after
+    /// the conn is moved into a client/worker.
+    sent: std::sync::Arc<std::sync::Mutex<Vec<String>>>,
+}
+
+impl ScriptConn {
+    /// A connection that will answer with `replies` in order and then
+    /// report EOF.
+    pub fn new<S: Into<String>>(replies: impl IntoIterator<Item = S>) -> Self {
+        Self {
+            replies: replies.into_iter().map(Into::into).collect(),
+            sent: Default::default(),
+        }
+    }
+
+    /// Shared handle to the sent-frame log (clone it before moving the
+    /// conn into a [`super::Client`] or worker).
+    pub fn sent_log(&self) -> std::sync::Arc<std::sync::Mutex<Vec<String>>> {
+        std::sync::Arc::clone(&self.sent)
+    }
+}
+
+impl Conn for ScriptConn {
+    fn send(&mut self, frame: &str) -> Result<()> {
+        self.sent
+            .lock()
+            .expect("script log poisoned")
+            .push(frame.trim_end().to_string());
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<String>> {
+        Ok(self.replies.pop_front())
+    }
+}
+
+/// A [`Transport`] handing out prepared [`ScriptConn`]s, one per
+/// `connect` call (EOF once the scripts run out).
+#[derive(Debug, Default)]
+pub struct ScriptTransport {
+    scripts: std::sync::Mutex<std::collections::VecDeque<ScriptConn>>,
+}
+
+impl ScriptTransport {
+    /// A transport whose successive `connect`s yield `conns` in order.
+    pub fn new(conns: impl IntoIterator<Item = ScriptConn>) -> Self {
+        Self { scripts: std::sync::Mutex::new(conns.into_iter().collect()) }
+    }
+}
+
+impl Transport for ScriptTransport {
+    fn connect(&self, _addr: &str) -> Result<Box<dyn Conn>> {
+        match self.scripts.lock().expect("script transport poisoned").pop_front() {
+            Some(c) => Ok(Box::new(c)),
+            None => Err(Error::Protocol("script transport exhausted".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn script_conn_replays_and_records() {
+        let mut c = ScriptConn::new(["PONG", "OK ABANDONED"]);
+        let log = c.sent_log();
+        c.send("PING\n").unwrap();
+        assert_eq!(c.recv().unwrap().as_deref(), Some("PONG"));
+        c.send("LEASE ABANDON w1 job-x 0").unwrap();
+        assert_eq!(c.recv().unwrap().as_deref(), Some("OK ABANDONED"));
+        assert_eq!(c.recv().unwrap(), None, "script exhausted ⇒ EOF");
+        assert_eq!(*log.lock().unwrap(), vec!["PING", "LEASE ABANDON w1 job-x 0"]);
+    }
+
+    #[test]
+    fn script_transport_hands_out_conns_then_fails() {
+        let t = ScriptTransport::new([ScriptConn::new(["PONG"])]);
+        assert!(t.connect("anywhere").is_ok());
+        assert!(t.connect("anywhere").is_err());
+    }
+}

@@ -6,6 +6,7 @@
 //! replayed with `TestRng::from_seed`.
 
 mod rng;
+pub mod sim;
 
 pub use rng::TestRng;
 

@@ -1,0 +1,683 @@
+//! Deterministic simulation fabric (FoundationDB-style DST) for the
+//! job/fleet stack.
+//!
+//! Three pieces compose a fully-controlled distributed system in one
+//! thread:
+//!
+//! * a [`SimClock`] (see [`crate::clock`]) that only moves when the
+//!   scenario advances it — lease TTLs, heartbeat windows and restart
+//!   gaps become explicit script steps, not wall-clock races;
+//! * [`SimNet`], an in-memory [`Transport`] whose connections dispatch
+//!   request frames straight into the server's [`ServiceCore`] (the
+//!   byte-identical verb dispatch the TCP path uses), with injectable
+//!   latency, message drops, per-peer partitions and whole-server
+//!   restarts;
+//! * [`SimWorld`], a seeded scheduler that steps N [`Worker`] state
+//!   machines cooperatively. Every interleaving — which worker wins
+//!   which grant, when a TTL expires relative to a delivery, what a
+//!   restart interrupts — is a pure function of the seed, and the
+//!   recorded [`SimWorld::trace`] replays identically for the same
+//!   seed.
+//!
+//! The fabric runs the *production* code: `Worker::step`,
+//! `LeaseTable::grant/complete`, journal appends and composition are
+//! all the real implementations; only time and bytes-on-the-wire are
+//! virtual. A scenario that fails can be handed around as a single
+//! seed (see EXPERIMENTS.md §Simulation).
+
+use crate::clock::{Clock, SimClock};
+use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use crate::fleet::{FleetConfig, LeaseTable, Worker, WorkerConfig, WorkerEvent};
+use crate::jobs::{JobEngine, JobManager, JobPayload, JobStore, JobValue};
+use crate::service::{Client, Conn, ConnCtx, ServiceCore, Transport};
+use crate::testkit::TestRng;
+use crate::{Error, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Message-level fault injection knobs (all off by default).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Virtual time charged per delivered request/response exchange —
+    /// models network latency eating into lease TTLs.
+    pub latency: Duration,
+    /// Per-message drop probability in parts per 10 000 (applied
+    /// independently to the request and the response; a dropped message
+    /// kills the connection, as TCP would surface it).
+    pub drop_per_10k: u32,
+}
+
+struct NetState {
+    /// The live server; `None` while "down" (between stop and start).
+    core: Option<Arc<ServiceCore>>,
+    /// Bumped on every server stop/restart: connections carry the
+    /// generation they were dialed under and die on mismatch.
+    generation: u64,
+    /// Peers currently cut off from the server.
+    partitioned: HashSet<String>,
+    plan: FaultPlan,
+    /// Fault dice, seeded separately from the scheduler's RNG so
+    /// enabling faults does not reshuffle scheduling decisions.
+    rng: TestRng,
+}
+
+impl NetState {
+    fn roll_drop(&mut self) -> bool {
+        self.plan.drop_per_10k > 0
+            && self.rng.u64_below(10_000) < self.plan.drop_per_10k as u64
+    }
+}
+
+struct SimNetInner {
+    clock: Arc<SimClock>,
+    state: Mutex<NetState>,
+    trace: Mutex<Vec<String>>,
+}
+
+impl SimNetInner {
+    fn record(&self, clock_ms: u128, line: String) {
+        self.trace
+            .lock()
+            .expect("sim trace poisoned")
+            .push(format!("t={clock_ms}ms {line}"));
+    }
+}
+
+/// The in-memory network: hands out per-peer [`Transport`]s whose
+/// connections speak to the current [`ServiceCore`] synchronously.
+#[derive(Clone)]
+pub struct SimNet {
+    inner: Arc<SimNetInner>,
+}
+
+impl SimNet {
+    /// A transport dialing as `peer` (the unit of partitioning).
+    pub fn peer(&self, peer: &str) -> Arc<dyn Transport> {
+        Arc::new(SimPeer { inner: Arc::clone(&self.inner), peer: peer.to_string() })
+    }
+}
+
+struct SimPeer {
+    inner: Arc<SimNetInner>,
+    peer: String,
+}
+
+impl Transport for SimPeer {
+    fn connect(&self, _addr: &str) -> Result<Box<dyn Conn>> {
+        let st = self.inner.state.lock().expect("sim net poisoned");
+        if st.core.is_none() {
+            return Err(Error::Protocol("sim: connection refused (server down)".into()));
+        }
+        if st.partitioned.contains(&self.peer) {
+            return Err(Error::Protocol(format!(
+                "sim: peer {:?} is partitioned from the server",
+                self.peer
+            )));
+        }
+        let generation = st.generation;
+        drop(st);
+        Ok(Box::new(SimConn {
+            inner: Arc::clone(&self.inner),
+            peer: self.peer.clone(),
+            generation,
+            ctx: ConnCtx::default(),
+            inbox: VecDeque::new(),
+            dead: false,
+        }))
+    }
+}
+
+/// One simulated connection: `send` dispatches the frame into the
+/// server core immediately (after fault rolls) and queues the response
+/// for `recv` — faithful to the protocol's strict request/response
+/// cadence without any real I/O.
+struct SimConn {
+    inner: Arc<SimNetInner>,
+    peer: String,
+    generation: u64,
+    ctx: ConnCtx,
+    inbox: VecDeque<String>,
+    dead: bool,
+}
+
+impl Conn for SimConn {
+    fn send(&mut self, frame: &str) -> Result<()> {
+        if self.dead {
+            return Err(Error::Protocol("sim: connection is closed".into()));
+        }
+        let (core, latency) = {
+            let mut st = self.inner.state.lock().expect("sim net poisoned");
+            let stale = st.generation != self.generation;
+            if stale || st.core.is_none() {
+                drop(st);
+                self.dead = true;
+                return Err(Error::Protocol(
+                    "sim: connection reset (server restarted)".into(),
+                ));
+            }
+            if st.partitioned.contains(&self.peer) {
+                drop(st);
+                self.dead = true;
+                return Err(Error::Protocol(format!(
+                    "sim: peer {:?} is partitioned from the server",
+                    self.peer
+                )));
+            }
+            if st.roll_drop() {
+                drop(st);
+                self.dead = true;
+                let ms = self.inner.clock.now().as_millis();
+                self.inner
+                    .record(ms, format!("net dropped request from {}", self.peer));
+                return Err(Error::Protocol("sim: request lost".into()));
+            }
+            (Arc::clone(st.core.as_ref().expect("checked above")), st.plan.latency)
+        };
+        if !latency.is_zero() {
+            self.inner.clock.advance(latency);
+        }
+        match core.handle_line(frame.trim_end(), &mut self.ctx) {
+            None => {
+                // QUIT: the server closes; recv will report EOF.
+                self.dead = true;
+            }
+            Some(response) => {
+                let drop_reply = {
+                    let mut st = self.inner.state.lock().expect("sim net poisoned");
+                    st.roll_drop()
+                };
+                if drop_reply {
+                    self.dead = true;
+                    let ms = self.inner.clock.now().as_millis();
+                    self.inner
+                        .record(ms, format!("net dropped reply to {}", self.peer));
+                } else {
+                    self.inbox
+                        .push_back(response.encode().trim_end().to_string());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<String>> {
+        if let Some(line) = self.inbox.pop_front() {
+            return Ok(Some(line));
+        }
+        if self.dead {
+            return Err(Error::Protocol("sim: connection is closed".into()));
+        }
+        // No queued response and not dead: the protocol is strictly
+        // request/response, so this is EOF (e.g. after our own QUIT).
+        Ok(None)
+    }
+}
+
+/// One scheduled worker slot.
+struct SimWorkerSlot {
+    name: String,
+    worker: Worker,
+    alive: bool,
+}
+
+/// The seeded deterministic world: virtual clock + simulated network +
+/// server + N cooperative workers + an event trace.
+pub struct SimWorld {
+    /// The virtual clock every component reads.
+    pub clock: Arc<SimClock>,
+    net: SimNet,
+    dir: PathBuf,
+    fleet_cfg: FleetConfig,
+    rng: TestRng,
+    workers: Vec<SimWorkerSlot>,
+    /// job id → stable alias (`job0`, `job1`, …) so traces compare
+    /// equal across runs even though allocated ids differ.
+    aliases: HashMap<String, String>,
+    /// Virtual time charged when every live worker came up idle — the
+    /// cooperative stand-in for the workers' poll sleep.
+    pub idle_poll: Duration,
+}
+
+impl SimWorld {
+    /// A fresh world: server up, no workers, clock at zero. `seed`
+    /// fixes every scheduling and fault decision.
+    pub fn new(seed: u64, dir: impl Into<PathBuf>, fleet_cfg: FleetConfig) -> SimWorld {
+        let clock = SimClock::new();
+        let inner = Arc::new(SimNetInner {
+            clock: Arc::clone(&clock),
+            state: Mutex::new(NetState {
+                core: None,
+                generation: 0,
+                partitioned: HashSet::new(),
+                plan: FaultPlan::default(),
+                rng: TestRng::from_seed(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1)),
+            }),
+            trace: Mutex::new(Vec::new()),
+        });
+        let mut world = SimWorld {
+            clock,
+            net: SimNet { inner },
+            dir: dir.into(),
+            fleet_cfg,
+            rng: TestRng::from_seed(seed),
+            workers: Vec::new(),
+            aliases: HashMap::new(),
+            idle_poll: Duration::from_millis(50),
+        };
+        world.start_server();
+        world
+    }
+
+    fn build_core(&self) -> ServiceCore {
+        let store = JobStore::open(&self.dir)
+            .expect("sim: open job store")
+            .with_clock(self.clock.clone());
+        let manager = JobManager::new(store.clone(), 1).with_clock(self.clock.clone());
+        let fleet = LeaseTable::with_clock(store, self.fleet_cfg, self.clock.clone());
+        let coordinator = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            engine: EngineKind::Cpu,
+            schedule: Schedule::Static,
+            batch: 64,
+            ..Default::default()
+        })
+        .expect("sim: build coordinator");
+        ServiceCore::new(coordinator, Some(manager), Some(fleet))
+    }
+
+    /// Virtual now, for assertions.
+    pub fn now_ms(&self) -> u128 {
+        self.clock.now().as_millis()
+    }
+
+    fn record(&self, line: String) {
+        self.net.inner.record(self.clock.now().as_millis(), line);
+    }
+
+    /// The event trace so far (scenario ops, worker step outcomes, net
+    /// faults), each line stamped with virtual time. Identical for
+    /// identical seeds — the replay witness.
+    pub fn trace(&self) -> Vec<String> {
+        self.net.inner.trace.lock().expect("sim trace poisoned").clone()
+    }
+
+    /// Set message-fault knobs (latency, drop rate).
+    pub fn set_faults(&mut self, plan: FaultPlan) {
+        self.net.inner.state.lock().expect("sim net poisoned").plan = plan;
+        self.record(format!(
+            "faults latency={}ms drop={}/10k",
+            plan.latency.as_millis(),
+            plan.drop_per_10k
+        ));
+    }
+
+    /// A fresh job-store view over the world's journal directory (what
+    /// an operator's `raddet job status` would see).
+    pub fn store(&self) -> JobStore {
+        JobStore::open(&self.dir).expect("sim: open job store")
+    }
+
+    /// Advance virtual time (the scenario's only time source).
+    pub fn advance(&mut self, d: Duration) {
+        self.clock.advance(d);
+        self.record("advance".into());
+    }
+
+    /// Advance past the fleet lease TTL — the canonical
+    /// "expire every outstanding lease" scenario step.
+    pub fn expire_leases(&mut self) {
+        self.clock
+            .advance(self.fleet_cfg.lease_ttl + Duration::from_millis(1));
+        self.record("expire-leases".into());
+    }
+
+    /// Cut `peer` off: its existing connections die on next use and new
+    /// dials are refused until [`SimWorld::heal`].
+    pub fn partition(&mut self, peer: &str) {
+        self.net
+            .inner
+            .state
+            .lock()
+            .expect("sim net poisoned")
+            .partitioned
+            .insert(peer.to_string());
+        self.record(format!("partition {peer}"));
+    }
+
+    /// Reconnect `peer` to the server.
+    pub fn heal(&mut self, peer: &str) {
+        self.net
+            .inner
+            .state
+            .lock()
+            .expect("sim net poisoned")
+            .partitioned
+            .remove(peer);
+        self.record(format!("heal {peer}"));
+    }
+
+    /// Kill the server process: every connection dies, all in-memory
+    /// lease state is lost; the journal (on disk) survives.
+    pub fn stop_server(&mut self) {
+        let mut st = self.net.inner.state.lock().expect("sim net poisoned");
+        st.core = None;
+        st.generation += 1;
+        drop(st);
+        self.record("server stop".into());
+    }
+
+    /// Boot a fresh server process over the same journal directory.
+    pub fn start_server(&mut self) {
+        let core = Arc::new(self.build_core());
+        let mut st = self.net.inner.state.lock().expect("sim net poisoned");
+        st.core = Some(core);
+        drop(st);
+        self.record("server start".into());
+    }
+
+    /// Stop + start: the crash/recovery scenario step.
+    pub fn restart_server(&mut self) {
+        self.stop_server();
+        self.start_server();
+    }
+
+    /// A transport dialing as `peer` (for hand-driven protocol steps).
+    pub fn transport(&self, peer: &str) -> Arc<dyn Transport> {
+        self.net.peer(peer)
+    }
+
+    /// A fresh client connection dialing as `peer`.
+    pub fn client(&self, peer: &str) -> Result<Client> {
+        Ok(Client::over(self.net.peer(peer).connect("sim")?))
+    }
+
+    /// Submit a fleet job through the wire path and register a stable
+    /// trace alias for it.
+    pub fn submit_fleet(&mut self, payload: JobPayload, engine: JobEngine) -> Result<String> {
+        let mut c = self.client("ctl")?;
+        let id = c.job_submit_fleet(payload, engine)?;
+        c.quit();
+        let alias = format!("job{}", self.aliases.len());
+        self.aliases.insert(id.clone(), alias.clone());
+        self.record(format!("submit {alias}"));
+        Ok(id)
+    }
+
+    fn alias(&self, id: &str) -> String {
+        self.aliases.get(id).cloned().unwrap_or_else(|| "job?".into())
+    }
+
+    /// Add a worker named `name`; `tune` edits its config (pin a job,
+    /// set `crash_after_grants`, …) before the first dial.
+    pub fn add_worker(
+        &mut self,
+        name: &str,
+        tune: impl FnOnce(&mut WorkerConfig),
+    ) -> Result<()> {
+        let mut cfg = WorkerConfig::new(name);
+        tune(&mut cfg);
+        let worker =
+            Worker::connect(self.net.peer(name), "sim", cfg, self.clock.clone())?;
+        self.workers.push(SimWorkerSlot { name: name.to_string(), worker, alive: true });
+        self.record(format!("worker {name} joins"));
+        Ok(())
+    }
+
+    /// Mark `name` dead without stepping it again (sudden death between
+    /// steps; for death *holding a lease* use
+    /// [`WorkerConfig::crash_after_grants`]).
+    pub fn kill_worker(&mut self, name: &str) {
+        for slot in &mut self.workers {
+            if slot.name == name {
+                slot.alive = false;
+            }
+        }
+        self.record(format!("worker {name} killed"));
+    }
+
+    /// Step worker `name` once, tracing the outcome. Scenario scripts
+    /// use this for hand-crafted interleavings; [`Self::run_until_complete`]
+    /// drives random ones.
+    pub fn step_worker(&mut self, name: &str) -> Result<WorkerEvent> {
+        let idx = self
+            .workers
+            .iter()
+            .position(|s| s.name == name && s.alive)
+            .ok_or_else(|| Error::Job(format!("sim: no live worker named {name:?}")))?;
+        self.step_slot(idx)
+    }
+
+    fn step_slot(&mut self, idx: usize) -> Result<WorkerEvent> {
+        let event = self.workers[idx].worker.step()?;
+        let name = self.workers[idx].name.clone();
+        let line = match &event {
+            WorkerEvent::Idle => format!("{name} idle"),
+            WorkerEvent::JobComplete => format!("{name} sees job complete"),
+            WorkerEvent::Completed { job, chunk, duplicate } => format!(
+                "{name} completed {}#{chunk}{}",
+                self.alias(job),
+                if *duplicate { " (dup)" } else { "" }
+            ),
+            WorkerEvent::Rejected { job, chunk } => {
+                format!("{name} rejected {}#{chunk}", self.alias(job))
+            }
+            WorkerEvent::Crashed { job, chunk } => {
+                format!("{name} crashed holding {}#{chunk}", self.alias(job))
+            }
+            WorkerEvent::Disconnected => format!("{name} disconnected"),
+            WorkerEvent::BudgetExhausted => format!("{name} budget exhausted"),
+        };
+        self.record(line);
+        match &event {
+            WorkerEvent::Crashed { .. }
+            | WorkerEvent::JobComplete
+            | WorkerEvent::BudgetExhausted => self.workers[idx].alive = false,
+            _ => {}
+        }
+        Ok(event)
+    }
+
+    /// Sum of accepted chunks across all workers (chunk-conservation
+    /// assertions).
+    pub fn total_chunks_completed(&self) -> u64 {
+        self.workers.iter().map(|s| s.worker.report().chunks).sum()
+    }
+
+    /// Names of workers still alive (not crashed/killed/finished).
+    pub fn live_workers(&self) -> Vec<String> {
+        self.workers
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    /// Drive randomly-interleaved worker steps (seeded) until the
+    /// job's journal holds its DONE record, advancing the clock by
+    /// [`Self::idle_poll`] whenever a full round of live workers found
+    /// nothing to do (which is also what lets an expired lease free a
+    /// crashed worker's chunk). Errors after `max_steps` or if every
+    /// worker died with the job incomplete.
+    pub fn run_until_complete(&mut self, id: &str, max_steps: u64) -> Result<JobValue> {
+        let store = self.store();
+        let mut idle_streak = 0usize;
+        for _ in 0..max_steps {
+            let status = store.status(id)?;
+            if status.complete {
+                self.record(format!("{} complete", self.alias(id)));
+                return status
+                    .value
+                    .ok_or_else(|| Error::Job("complete job lost its value".into()));
+            }
+            let live: Vec<usize> = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.alive)
+                .map(|(i, _)| i)
+                .collect();
+            if live.is_empty() {
+                return Err(Error::Job(format!(
+                    "sim: job {} incomplete but no live workers remain",
+                    self.alias(id)
+                )));
+            }
+            let pick = live[self.rng.usize_below(live.len())];
+            match self.step_slot(pick)? {
+                WorkerEvent::Idle | WorkerEvent::Disconnected => {
+                    idle_streak += 1;
+                    if idle_streak >= live.len() {
+                        self.clock.advance(self.idle_poll);
+                        idle_streak = 0;
+                    }
+                }
+                _ => idle_streak = 0,
+            }
+        }
+        Err(Error::Job(format!(
+            "sim: job {} did not complete within {max_steps} steps",
+            self.alias(id)
+        )))
+    }
+}
+
+/// What one seeded random scenario produced (see
+/// [`run_random_scenario`]).
+pub struct ScenarioOutcome {
+    /// The composed determinant the fleet landed on.
+    pub value: JobValue,
+    /// The full replayable event trace.
+    pub trace: Vec<String>,
+    /// Chunks in the job's plan.
+    pub chunks_total: u64,
+    /// Chunks accepted (non-duplicate) across all workers.
+    pub fleet_chunks: u64,
+    /// Whether message faults (drops/latency) were enabled for this
+    /// seed — when `false`, `fleet_chunks == chunks_total` is an exact
+    /// invariant (chunk conservation); under reply drops a journaled
+    /// chunk's ack can be lost, so only `≤` holds.
+    pub faulty: bool,
+}
+
+/// The canonical seeded random scenario, shared by the
+/// `tests/sim_seeds.rs` sweep and the `raddet sim` CLI so a failing
+/// sweep seed is reproduced (trace and all) by
+/// `raddet sim --seed <N>`.
+///
+/// From `seed` alone it derives: worker count (2–4), an optional
+/// crash-after-k-grants worker, message faults on odd seeds (latency +
+/// drops), and a random interleaving of worker steps, partitions,
+/// server restarts and clock advances, run to job completion.
+pub fn run_random_scenario(
+    seed: u64,
+    payload: JobPayload,
+    engine: JobEngine,
+    cfg: FleetConfig,
+    dir: impl Into<PathBuf>,
+) -> Result<ScenarioOutcome> {
+    let mut world = SimWorld::new(seed, dir, cfg);
+    let mut rng = TestRng::from_seed(seed ^ 0xA5A5_5A5A);
+
+    let id = world.submit_fleet(payload, engine)?;
+    // Odd seeds get message faults; even seeds stay clean so exact
+    // chunk conservation can be asserted for them. Enabled only after
+    // the submit round-trip: the scenario explores *fleet* fault
+    // tolerance, not whether the control client retries a submit.
+    let faulty = seed % 2 == 1;
+    if faulty {
+        world.set_faults(FaultPlan {
+            latency: Duration::from_millis(rng.u64_below(4)),
+            drop_per_10k: 100 + rng.u64_below(200) as u32,
+        });
+    }
+    let n_workers = 2 + rng.u64_below(3); // 2..=4
+    let crasher = rng.u64_below(2) == 0;
+    for i in 0..n_workers {
+        let name = format!("w{i}");
+        let crash = (crasher && i == 0).then(|| 1 + rng.u64_below(3));
+        world.add_worker(&name, |wc| {
+            wc.job = Some(id.clone());
+            wc.crash_after_grants = crash;
+        })?;
+    }
+
+    let mut partitioned: HashSet<String> = HashSet::new();
+    let mut idle_streak = 0usize;
+    let mut rescues = 0u32;
+    let mut ops = 0u64;
+    let chunks_total = loop {
+        let status = world.store().status(&id)?;
+        if status.complete {
+            break status.chunks_total as u64;
+        }
+        ops += 1;
+        if ops >= 20_000 {
+            return Err(Error::Job(format!(
+                "seed {seed}: scenario failed to converge within {ops} ops"
+            )));
+        }
+        let mut live = world.live_workers();
+        if live.is_empty() {
+            // Every worker died (crash injection / retry exhaustion
+            // under heavy faults): heal the world and send in a rescue
+            // worker, like an operator would.
+            for p in partitioned.drain() {
+                world.heal(&p);
+            }
+            rescues += 1;
+            let name = format!("rescue{rescues}");
+            world.add_worker(&name, |wc| {
+                wc.job = Some(id.clone());
+            })?;
+            live = vec![name];
+        }
+        match rng.u64_below(100) {
+            // Rare: server restart mid-sweep.
+            0..=1 => world.restart_server(),
+            // Occasional partition flap of one worker.
+            2..=4 => {
+                let w = live[rng.usize_below(live.len())].clone();
+                if partitioned.contains(&w) {
+                    world.heal(&w);
+                    partitioned.remove(&w);
+                } else {
+                    world.partition(&w);
+                    partitioned.insert(w);
+                }
+            }
+            // Let virtual time pass (TTL pressure).
+            5..=9 => world.advance(Duration::from_millis(30)),
+            // Otherwise: step a random live worker.
+            _ => {
+                let w = live[rng.usize_below(live.len())].clone();
+                match world.step_worker(&w) {
+                    Ok(WorkerEvent::Idle) | Ok(WorkerEvent::Disconnected) => {
+                        idle_streak += 1;
+                        if idle_streak >= live.len() {
+                            world.advance(Duration::from_millis(50));
+                            idle_streak = 0;
+                        }
+                    }
+                    Ok(_) => idle_streak = 0,
+                    // Retry budget exhausted (long partition window):
+                    // that worker is dead; the loop rescues if needed.
+                    Err(_) => world.kill_worker(&w),
+                }
+            }
+        }
+    };
+
+    let status = world.store().status(&id)?;
+    let value = status
+        .value
+        .ok_or_else(|| Error::Job("complete job lost its value".into()))?;
+    Ok(ScenarioOutcome {
+        value,
+        trace: world.trace(),
+        chunks_total,
+        fleet_chunks: world.total_chunks_completed(),
+        faulty,
+    })
+}

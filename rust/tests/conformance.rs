@@ -1,0 +1,167 @@
+//! Cross-engine golden-vector conformance.
+//!
+//! `fixtures/golden_vectors.tsv` commits literal matrices with their
+//! Radić determinants computed *outside this codebase* (two independent
+//! Python implementations — Laplace expansion and fraction-free
+//! Bareiss — see `fixtures/gen_golden_vectors.py`). Every engine family
+//! must reproduce the committed values **bit-for-bit**:
+//!
+//! * `exact` rows — the exact `i128` engines: per-term Bareiss lanes
+//!   (`cpu-lu` tag) and exact prefix cofactors (`prefix` tag);
+//! * `f64pm1` rows — entries restricted to {−1, 0, +1} with m ≤ 2, for
+//!   which *every* float operation in both float engines is exact in
+//!   IEEE-754 double (all pivots and multipliers are 0 or ±1, all sums
+//!   small integers), so the float result must be bit-for-bit
+//!   `float(exact_det)` — the committed `f64_bits`. The exact engines
+//!   must match `exact_det` on these rows too, tying all four engine
+//!   families to one fixture.
+//!
+//! When backends multiply (GPU lanes, XLA executors), their results
+//! belong in this table, not in per-test recomputation.
+
+use raddet::combin::PascalTable;
+use raddet::jobs::{compose_partials, ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
+use raddet::matrix::Mat;
+use std::collections::BTreeMap;
+
+const FIXTURE: &str = include_str!("fixtures/golden_vectors.tsv");
+
+struct Row {
+    kind: String,
+    m: usize,
+    n: usize,
+    values: Vec<i64>,
+    exact_det: i128,
+    f64_bits: Option<u64>,
+}
+
+fn parse_fixture() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for line in FIXTURE.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        assert_eq!(cols.len(), 6, "bad fixture line: {line:?}");
+        let m: usize = cols[1].parse().unwrap();
+        let n: usize = cols[2].parse().unwrap();
+        let values: Vec<i64> = cols[3].split(',').map(|t| t.parse().unwrap()).collect();
+        assert_eq!(values.len(), m * n, "bad value count: {line:?}");
+        let exact_det: i128 = cols[4].parse().unwrap();
+        let f64_bits = match cols[5] {
+            "-" => None,
+            hex => Some(u64::from_str_radix(hex, 16).unwrap()),
+        };
+        rows.push(Row { kind: cols[0].to_string(), m, n, values, exact_det, f64_bits });
+    }
+    assert!(rows.len() >= 8, "fixture unexpectedly small");
+    rows
+}
+
+/// Run a spec chunk-by-chunk through the engine its tags select and
+/// compose the partials — the identical arithmetic path durable jobs
+/// and fleet workers execute.
+fn run_spec(spec: &JobSpec) -> JobValue {
+    let (plan, _total) = spec.plan().unwrap();
+    let (m, n) = spec.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let mut runner = spec.runner();
+    let mut completed = BTreeMap::new();
+    for (i, chunk) in plan.iter().enumerate() {
+        let (partial, wm) = runner
+            .run_chunk(spec.payload.as_lease(), &table, *chunk)
+            .unwrap();
+        completed.insert(
+            i as u64,
+            ChunkRecord { value: partial.into(), terms: wm.terms, micros: 0 },
+        );
+    }
+    let (value, _terms) = compose_partials(plan.len(), &completed).unwrap();
+    value
+}
+
+fn spec(payload: JobPayload, engine: JobEngine, chunks: usize) -> JobSpec {
+    JobSpec { payload, engine, chunks, batch: 16 }
+}
+
+#[test]
+fn golden_vectors_reproduced_bit_for_bit_by_all_engines() {
+    for row in parse_fixture() {
+        let ai = Mat::from_vec(row.m, row.n, row.values.clone()).unwrap();
+
+        // Exact engines: Bareiss lanes (cpu-lu) and exact prefix.
+        for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
+            for chunks in [1usize, 3] {
+                let got = run_spec(&spec(JobPayload::Exact(ai.clone()), engine, chunks));
+                match got {
+                    JobValue::Exact(v) => assert_eq!(
+                        v, row.exact_det,
+                        "{} {}×{} engine={engine:?} chunks={chunks}",
+                        row.kind, row.m, row.n
+                    ),
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+
+        // Float engines, where the fixture pins the exact bit pattern.
+        if let Some(want_bits) = row.f64_bits {
+            let af = Mat::from_vec(
+                row.m,
+                row.n,
+                row.values.iter().map(|&x| x as f64).collect(),
+            )
+            .unwrap();
+            for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
+                for chunks in [1usize, 3] {
+                    let got = run_spec(&spec(JobPayload::F64(af.clone()), engine, chunks));
+                    match got {
+                        JobValue::F64(v) => assert_eq!(
+                            v.to_bits(),
+                            want_bits,
+                            "{} {}×{} engine={engine:?} chunks={chunks}: {v:e} ({:016x}) \
+                             vs committed {:016x}",
+                            row.kind,
+                            row.m,
+                            row.n,
+                            v.to_bits(),
+                            want_bits
+                        ),
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The committed `f64_bits` must themselves be `float(exact_det)` — a
+/// self-consistency guard on the fixture file (catches a hand-edited
+/// row drifting).
+#[test]
+fn golden_vector_fixture_is_self_consistent() {
+    for row in parse_fixture() {
+        if let Some(bits) = row.f64_bits {
+            assert_eq!(
+                bits,
+                (row.exact_det as f64).to_bits(),
+                "{} {}×{}: f64_bits column disagrees with exact_det",
+                row.kind,
+                row.m,
+                row.n
+            );
+        }
+        match row.kind.as_str() {
+            "exact" => assert!(row.f64_bits.is_none()),
+            "f64pm1" => {
+                assert!(row.m <= 2, "float-exactness argument needs m ≤ 2");
+                assert!(
+                    row.values.iter().all(|v| (-1..=1).contains(v)),
+                    "float-exactness argument needs entries in {{-1,0,1}}"
+                );
+            }
+            other => panic!("unknown fixture kind {other:?}"),
+        }
+    }
+}

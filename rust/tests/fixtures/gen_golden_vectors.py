@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Generate golden_vectors.tsv — cross-engine conformance fixtures.
+
+Each row is a literal matrix plus its exact Radic determinant, computed
+here independently (integer Laplace expansion, no floating point), so
+the committed values do not depend on any Rust code path.
+
+Row kinds:
+  exact  — integer matrix; the exact engines (Bareiss lanes via cpu-lu,
+           exact prefix cofactors) must reproduce `exact_det` verbatim.
+  f64pm1 — entries restricted to {-1,0,+1} with m <= 2: every float
+           operation in both float engines (per-minor LU, prefix
+           cofactors) is then exact in IEEE-754 double (all pivots and
+           multipliers are 0 or +-1, all sums are small integers), so
+           the f64 result is bit-for-bit float(exact_det) — committed
+           as `f64_bits`. The exact engines must match `exact_det` too.
+
+Columns (tab-separated):
+  kind  m  n  values(comma,row-major)  exact_det  f64_bits(hex or '-')
+
+Deterministic: a tiny LCG seeds the entries; the committed matrix
+literals are authoritative (the RNG is only provenance).
+"""
+
+import struct
+from itertools import combinations
+
+def lcg(seed):
+    state = seed & 0xFFFFFFFFFFFFFFFF
+    while True:
+        state = (6364136223846793005 * state + 1442695040888963407) % (1 << 64)
+        yield state >> 33
+
+def gen_matrix(seed, m, n, lo, hi):
+    g = lcg(seed)
+    return [[lo + next(g) % (hi - lo + 1) for _ in range(n)] for _ in range(m)]
+
+def minor_det(rows):
+    k = len(rows)
+    if k == 1:
+        return rows[0][0]
+    det = 0
+    for j in range(k):
+        a = rows[0][j]
+        if a == 0:
+            continue
+        sub = [r[:j] + r[j + 1:] for r in rows[1:]]
+        det += (-1) ** j * a * minor_det(sub)
+    return det
+
+def radic_det(A, m, n):
+    # det(A) = sum over ascending column m-subsets of (-1)^(r+s) * minor
+    # with r = m(m+1)/2 and s = sum of the 1-based column indices.
+    r = m * (m + 1) // 2
+    total = 0
+    for cols in combinations(range(1, n + 1), m):
+        s = sum(cols)
+        sub = [[A[i][j - 1] for j in cols] for i in range(m)]
+        total += (-1) ** (r + s) * minor_det(sub)
+    return total
+
+def f64_bits(v):
+    return struct.pack(">d", float(v)).hex()
+
+def main():
+    rows = build_rows()
+    with open("golden_vectors.tsv", "w") as f:
+        f.write("# kind\tm\tn\tvalues\texact_det\tf64_bits\n")
+        f.write("# regenerate: python3 gen_golden_vectors.py (in this directory)\n")
+        for kind, m, n, vals, d, bits in rows:
+            f.write(f"{kind}\t{m}\t{n}\t{vals}\t{d}\t{bits}\n")
+    print("wrote", len(rows), "rows")
+
+def build_rows():
+    rows = []
+    # Exact-engine rows: general small-integer matrices.
+    for seed, m, n, lo, hi in [
+    (101, 1, 6, -6, 6),
+    (102, 2, 7, -6, 6),
+    (103, 3, 8, -6, 6),
+    (104, 4, 9, -5, 5),
+        (105, 3, 7, -9, 9),
+    ]:
+        A = gen_matrix(seed, m, n, lo, hi)
+        d = radic_det(A, m, n)
+        vals = ",".join(str(x) for r in A for x in r)
+        rows.append(("exact", m, n, vals, d, "-"))
+
+    # Float-exact rows: entries in {-1,0,1}, m <= 2.
+    for seed, m, n in [(201, 1, 8), (202, 2, 6), (203, 2, 9), (204, 2, 10)]:
+        A = gen_matrix(seed, m, n, -1, 1)
+        d = radic_det(A, m, n)
+        vals = ",".join(str(x) for r in A for x in r)
+        rows.append(("f64pm1", m, n, vals, d, f64_bits(d)))
+    return rows
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,21 @@
-//! Fleet end-to-end: a real server plus in-process workers over real
-//! sockets, including worker crashes, lease expiry/reassignment, and a
-//! full server restart — every scenario must land on a determinant
-//! bitwise-identical to a single-process run of the same spec.
+//! Fleet end-to-end over **real TCP** — the thin smoke layer.
+//!
+//! The timing-sensitive fleet scenarios (lease expiry, server restart,
+//! restart stutter, partitions, seed sweeps) live in the deterministic
+//! simulation suites `tests/sim_fleet.rs` / `tests/sim_seeds.rs`, where
+//! they run in milliseconds with zero real sleeps. This file keeps the
+//! one proof the simulation cannot give: the same stack speaks real
+//! sockets end-to-end — accept loop, handler threads, heartbeat
+//! renewals — and still lands on bits identical to a single-process
+//! run, through a genuine mid-chunk worker kill.
 
-use raddet::combin::PascalTable;
 use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
 use raddet::fleet::{run_worker, FleetConfig, WorkerConfig};
 use raddet::jobs::{
     JobEngine, JobManager, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
 };
 use raddet::matrix::gen;
-use raddet::service::{Client, GrantReply, Server, ServerHandle};
+use raddet::service::{Client, Server, ServerHandle};
 use raddet::testkit::TestRng;
 use std::path::Path;
 use std::sync::atomic::AtomicBool;
@@ -80,222 +85,60 @@ fn worker_cfg(id: &str, job: &str) -> WorkerConfig {
     cfg
 }
 
-/// The tier-1 acceptance proof: three workers drain a fleet job while
-/// one of them is killed mid-chunk (lease held, never completed). For
-/// both the float prefix engine and the exact `i128` path, the exported
-/// value must be bit-for-bit the single-process result.
+/// The real-socket acceptance smoke: three workers drain a fleet job
+/// while one of them is killed mid-chunk (lease held, never
+/// completed). The exported value must be bit-for-bit the
+/// single-process result.
 #[test]
-fn fleet_with_midchunk_worker_kill_matches_single_process_bits() {
-    for exact in [false, true] {
-        let tag = if exact { "exact" } else { "f64" };
-        let payload = if exact {
-            JobPayload::Exact(gen::integer(&mut TestRng::from_seed(71), 4, 12, -6, 6))
-        } else {
-            JobPayload::F64(gen::uniform(&mut TestRng::from_seed(71), 4, 12, -1.0, 1.0))
-        };
-        let spec = JobSpec {
-            payload: payload.clone(),
-            engine: JobEngine::Prefix,
-            chunks: CHUNKS,
-            batch: BATCH,
-        };
-        let want = reference_value(&spec, &format!("fleet-ref-{tag}"));
-
-        let dir = raddet::testkit::scratch_dir(&format!("fleet-e2e-{tag}"));
-        let handle = start_fleet_server(&dir, Duration::from_millis(150));
-        let addr = handle.addr().to_string();
-        let mut c = Client::connect(&addr).unwrap();
-        let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
-
-        // Worker 0 is the kill: it claims a chunk and dies holding the
-        // lease (neither COMPLETE nor ABANDON) — run first so the
-        // mid-chunk death is deterministic, not a race against the
-        // healthy workers draining the job.
-        let mut cfg0 = worker_cfg("w0", &id);
-        cfg0.crash_after_grants = Some(1);
-        let r0 = run_worker(&addr, &cfg0, &AtomicBool::new(false)).unwrap();
-        assert!(r0.crashed, "worker 0 must die mid-chunk");
-        assert_eq!(r0.chunks, 0);
-
-        // Two live workers drain the job, inheriting the dead worker's
-        // chunk once its lease TTL expires.
-        let mut threads = Vec::new();
-        for w in 1..3u64 {
-            let addr = addr.clone();
-            let cfg = worker_cfg(&format!("w{w}"), &id);
-            threads.push(std::thread::spawn(move || {
-                run_worker(&addr, &cfg, &AtomicBool::new(false))
-            }));
-        }
-        let reports: Vec<_> = threads
-            .into_iter()
-            .map(|t| t.join().unwrap().unwrap())
-            .collect();
-        let fleet_chunks: u64 = reports.iter().map(|r| r.chunks).sum();
-        assert_eq!(fleet_chunks as usize, CHUNKS, "all chunks fleet-computed");
-
-        let st = c.job_wait(&id, 30_000).unwrap();
-        assert_eq!(st.state, "complete", "{st:?}");
-        assert_eq!(st.chunks_done, st.chunks_total);
-        assert_bits_eq(st.value.unwrap(), want);
-        c.quit();
-        handle.stop();
-    }
-}
-
-/// Lease-expiry property, driven at the wire level: a worker that stops
-/// renewing loses its chunk, a second worker is granted and completes
-/// it, the late duplicate `LEASE COMPLETE` is rejected without touching
-/// the journal, and the same worker's retry is acknowledged
-/// idempotently. The sweep then finishes to the single-process bits —
-/// the journal survived the whole episode uncorrupted.
-#[test]
-fn lease_expiry_reassigns_and_late_duplicate_is_rejected() {
-    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(72), 3, 10, -1.0, 1.0));
+fn fleet_tcp_smoke_midchunk_kill_matches_single_process_bits() {
+    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(71), 4, 12, -1.0, 1.0));
     let spec = JobSpec {
         payload: payload.clone(),
         engine: JobEngine::Prefix,
         chunks: CHUNKS,
         batch: BATCH,
     };
-    let want = reference_value(&spec, "fleet-expiry-ref");
+    let want = reference_value(&spec, "fleet-ref-smoke");
 
-    let dir = raddet::testkit::scratch_dir("fleet-e2e-expiry");
-    let handle = start_fleet_server(&dir, Duration::from_millis(50));
+    let dir = raddet::testkit::scratch_dir("fleet-e2e-smoke");
+    let handle = start_fleet_server(&dir, Duration::from_millis(150));
     let addr = handle.addr().to_string();
     let mut c = Client::connect(&addr).unwrap();
     let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
 
-    // wa claims a chunk (first grant per connection carries the spec)…
-    let mut wa = Client::connect(&addr).unwrap();
-    let (chunk_a, start_a, len_a, spec_a) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
-        GrantReply::Lease { chunk, start, len, spec, .. } => {
-            (chunk, start, len, spec.expect("first grant carries the spec"))
-        }
-        other => panic!("{other:?}"),
-    };
-    // …and goes silent past the TTL.
-    std::thread::sleep(Duration::from_millis(150));
+    // Worker 0 is the kill: it claims a chunk and dies holding the
+    // lease (neither COMPLETE nor ABANDON) — run first so the
+    // mid-chunk death is deterministic, not a race against the
+    // healthy workers draining the job.
+    let mut cfg0 = worker_cfg("w0", &id);
+    cfg0.crash_after_grants = Some(1);
+    let r0 = run_worker(&addr, &cfg0, &AtomicBool::new(false)).unwrap();
+    assert!(r0.crashed, "worker 0 must die mid-chunk");
+    assert_eq!(r0.chunks, 0);
 
-    // wb is granted the same chunk (lowest free index is the expired one).
-    let mut wb = Client::connect(&addr).unwrap();
-    let (chunk_b, start_b, len_b) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
-        GrantReply::Lease { chunk, start, len, spec, .. } => {
-            assert!(spec.is_some(), "fresh connection gets the spec again");
-            (chunk, start, len)
-        }
-        other => panic!("{other:?}"),
-    };
-    assert_eq!(chunk_b, chunk_a, "expired chunk reassigned first");
-    assert_eq!((start_b, len_b), (start_a, len_a));
-
-    // wb computes and delivers the chunk, exactly as a worker would:
-    // runner built from the grant's spec tags.
-    let (m, n) = spec_a.shape();
-    let table = PascalTable::new(n as u64, m as u64).unwrap();
-    let mut runner = spec_a.runner();
-    let (partial, wm) = runner
-        .run_chunk(
-            spec_a.payload.as_lease(),
-            &table,
-            raddet::combin::Chunk { start: start_b, len: len_b },
-        )
-        .unwrap();
-    let value: JobValue = partial.into();
-    let ack = wb
-        .lease_complete("wb", &id, chunk_b, wm.terms, 1, value)
-        .unwrap();
-    assert!(!ack.duplicate);
-    assert_eq!(ack.chunks_done, 1);
-
-    // wa's late duplicate is rejected; the journal is untouched.
-    let err = wa
-        .lease_complete("wa", &id, chunk_a, wm.terms, 1, value)
-        .unwrap_err();
-    assert!(err.to_string().contains("lease lost"), "{err}");
-    let st = c.job_status(&id).unwrap();
-    assert_eq!(st.chunks_done, 1, "rejected duplicate must not journal");
-
-    // wb's own retry is an idempotent re-ack, not a second record.
-    let again = wb
-        .lease_complete("wb", &id, chunk_b, wm.terms, 1, value)
-        .unwrap();
-    assert!(again.duplicate);
-    assert_eq!(again.chunks_done, 1);
-
-    // A second grant on wb's connection replies CACHED (no spec).
-    match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
-        GrantReply::Lease { chunk, spec, .. } => {
-            assert!(spec.is_none(), "same connection: spec is cached");
-            assert_ne!(chunk, chunk_b);
-            wb.lease_abandon("wb", &id, chunk).unwrap();
-        }
-        other => panic!("{other:?}"),
+    // Two live workers drain the job, inheriting the dead worker's
+    // chunk once its lease TTL expires.
+    let mut threads = Vec::new();
+    for w in 1..3u64 {
+        let addr = addr.clone();
+        let cfg = worker_cfg(&format!("w{w}"), &id);
+        threads.push(std::thread::spawn(move || {
+            run_worker(&addr, &cfg, &AtomicBool::new(false))
+        }));
     }
+    let reports: Vec<_> = threads
+        .into_iter()
+        .map(|t| t.join().unwrap().unwrap())
+        .collect();
+    let fleet_chunks: u64 = reports.iter().map(|r| r.chunks).sum();
+    assert_eq!(fleet_chunks as usize, CHUNKS, "all chunks fleet-computed");
 
-    // Drain the rest with an ordinary worker: final bits must match the
-    // uninterrupted single-process run.
-    let report = run_worker(&addr, &worker_cfg("wc", &id), &AtomicBool::new(false)).unwrap();
-    assert_eq!(report.chunks as usize, CHUNKS - 1);
-    let fin = c.job_wait(&id, 30_000).unwrap();
-    assert_eq!(fin.state, "complete");
-    assert_bits_eq(fin.value.unwrap(), want);
-
-    wa.quit();
-    wb.quit();
-    c.quit();
-    handle.stop();
-}
-
-/// A fleet sweep survives a full server restart: partials journaled
-/// before the crash are replayed by the next server process (the first
-/// `LEASE GRANT` naming the job lazily re-opens it from the journal)
-/// and only the missing chunks are recomputed.
-#[test]
-fn fleet_survives_server_restart_bit_exactly() {
-    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(73), 4, 12, -1.0, 1.0));
-    let spec = JobSpec {
-        payload: payload.clone(),
-        engine: JobEngine::Prefix,
-        chunks: CHUNKS,
-        batch: BATCH,
-    };
-    let want = reference_value(&spec, "fleet-restart-ref");
-
-    let dir = raddet::testkit::scratch_dir("fleet-e2e-restart");
-    let first = start_fleet_server(&dir, Duration::from_millis(200));
-    let addr1 = first.addr().to_string();
-    let id = {
-        let mut c = Client::connect(&addr1).unwrap();
-        let id = c.job_submit_fleet(payload, JobEngine::Prefix).unwrap();
-        c.quit();
-        id
-    };
-    // Complete a few chunks, then the server "crashes".
-    let mut cfg = worker_cfg("w1", &id);
-    cfg.max_chunks = Some(4);
-    let partial_report = run_worker(&addr1, &cfg, &AtomicBool::new(false)).unwrap();
-    assert_eq!(partial_report.chunks, 4);
-    first.stop();
-
-    // A fresh server over the same jobs dir: the worker's first grant
-    // re-opens the job from its journal (retrying briefly while the old
-    // process's run lock finishes releasing).
-    let second = start_fleet_server(&dir, Duration::from_millis(200));
-    let addr2 = second.addr().to_string();
-    let report = run_worker(&addr2, &worker_cfg("w2", &id), &AtomicBool::new(false)).unwrap();
-    assert_eq!(
-        report.chunks as usize,
-        CHUNKS - 4,
-        "only unjournaled chunks recomputed"
-    );
-
-    let mut c = Client::connect(&addr2).unwrap();
     let st = c.job_wait(&id, 30_000).unwrap();
-    assert_eq!(st.state, "complete");
+    assert_eq!(st.state, "complete", "{st:?}");
+    assert_eq!(st.chunks_done, st.chunks_total);
     assert_bits_eq(st.value.unwrap(), want);
     c.quit();
-    second.stop();
+    handle.stop();
 }
 
 /// `JOB CANCEL` on an open fleet job pauses it (stops granting,

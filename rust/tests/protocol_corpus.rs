@@ -1,0 +1,162 @@
+//! Table-driven protocol-hardening corpus.
+//!
+//! Every hostile, truncated, malformed or out-of-contract frame the
+//! service must survive, in one data-driven place (collected from the
+//! former inline cases in `service_e2e.rs` and extended with the
+//! fleet `LEASE` verb malformations). Two layers:
+//!
+//! * server side — each corpus frame is fired at a real TCP server,
+//!   which must answer `ERR …` and keep the connection serviceable;
+//! * worker side — a scripted connection feeds out-of-contract *server*
+//!   behaviour (a `CACHED` grant for a spec never shipped, garbage
+//!   replies) to a real [`Worker`], which must abandon/retreat, never
+//!   compute blind or crash.
+
+use raddet::clock;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::fleet::{Worker, WorkerConfig, WorkerEvent};
+use raddet::jobs::{JobManager, JobStore};
+use raddet::service::{Server, ServerHandle, ScriptConn, ScriptTransport};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+/// The corpus: `(frame, why it must be rejected)`. Kept flat and
+/// data-driven so hardening a new parse path is one added line.
+const HOSTILE_FRAMES: &[(&str, &str)] = &[
+    // --- float/exact one-shot paths ---
+    ("DET 2 2 inf,1,2,3", "non-finite float"),
+    ("DET 2 2 1,nan,2,3", "non-finite float"),
+    ("DET 99 99999 1", "oversized dimensions"),
+    ("DET 2 2 1,2,3", "wrong value count"),
+    ("EXACT 1 2 1.5,2", "float in integer path"),
+    ("GARBAGE", "unknown command"),
+    // --- JOB verbs ---
+    ("JOB SUBMIT prefix f64 2 2", "truncated frame"),
+    ("JOB SUBMIT warp f64 2 2 1,2,3,4", "unknown engine"),
+    ("JOB SUBMIT prefix f32 2 2 1,2,3,4", "unknown kind"),
+    ("JOB STATUS ../../etc/passwd", "hostile id"),
+    ("JOB NOPE x", "unknown verb"),
+    ("JOB WAIT job-x 12x", "bad timeout"),
+    // --- LEASE verbs ---
+    ("LEASE GRANT ../etc job-x", "hostile worker id"),
+    ("LEASE GRANT w1 ../etc", "hostile job id"),
+    ("LEASE GRANT w1 job-x extra", "trailing tokens"),
+    ("LEASE NOPE w1", "unknown LEASE verb"),
+    ("LEASE GRANT w1 job-does-not-exist", "unknown job"),
+    ("LEASE RENEW w1 job-x", "missing chunk id"),
+    ("LEASE RENEW w1 job-x 1x", "bad chunk id"),
+    (
+        "LEASE RENEW w1 job-x 99999999999999999999999",
+        "chunk id overflows u64",
+    ),
+    ("LEASE ABANDON w1 job-x notachunk", "bad chunk id"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 zz", "bad value encoding"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 f64:xyz", "bad f64 bit pattern"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 i128:notanum", "bad i128 value"),
+    (
+        "LEASE COMPLETE w1 job-x 0 1 1 f64:3ff0000000000000 f64:3ff0000000000000",
+        "duplicate COMPLETE value bodies",
+    ),
+    ("LEASE COMPLETE w1 job-x 0 1", "truncated COMPLETE frame"),
+    (
+        "LEASE COMPLETE w1 job-x 184467440737095516199 1 1 f64:0",
+        "chunk id overflows u64",
+    ),
+];
+
+fn start_server_with_jobs(tag: &str) -> ServerHandle {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let dir = raddet::testkit::scratch_dir(&format!("corpus-{tag}"));
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    Server::with_jobs(coord, manager).start("127.0.0.1:0").unwrap()
+}
+
+/// Every corpus frame gets an `ERR` and the connection (and server)
+/// survive the whole barrage on a single socket.
+#[test]
+fn hostile_frame_corpus_is_soft() {
+    let handle = start_server_with_jobs("hostile");
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    for (frame, why) in HOSTILE_FRAMES {
+        s.write_all(frame.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.starts_with("ERR "),
+            "{frame:?} ({why}) → {line:?} (expected ERR)"
+        );
+    }
+    // Still alive after the barrage.
+    s.write_all(b"PING\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+    handle.stop();
+}
+
+/// A client that dies mid-frame (no newline, then EOF) leaves the
+/// accept loop and other connections unaffected.
+#[test]
+fn truncated_frame_then_disconnect_leaves_server_alive() {
+    let handle = start_server_with_jobs("truncated");
+    {
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"JOB SUBMIT prefix f64 4 10 1.0,2.0").unwrap();
+        drop(s);
+    }
+    let mut c = raddet::service::Client::connect(&handle.addr().to_string()).unwrap();
+    c.ping().unwrap();
+    c.quit();
+    handle.stop();
+}
+
+fn script_worker(replies: &[&str]) -> (Worker, Arc<std::sync::Mutex<Vec<String>>>) {
+    let conn = ScriptConn::new(replies.iter().copied());
+    let log = conn.sent_log();
+    let transport = Arc::new(ScriptTransport::new([conn]));
+    let worker = Worker::connect(transport, "script", WorkerConfig::new("w1"), clock::wall())
+        .unwrap();
+    (worker, log)
+}
+
+/// Out-of-contract server behaviour: a `CACHED` grant for a job whose
+/// spec this connection never received. The worker must hand the lease
+/// back (ABANDON) rather than compute blind — and must not panic.
+#[test]
+fn cached_grant_without_prior_spec_is_abandoned_not_computed() {
+    let (mut worker, log) = script_worker(&[
+        "OK LEASE job-x 0 0 10 1000 CACHED",
+        "OK ABANDONED",
+    ]);
+    assert_eq!(worker.step().unwrap(), WorkerEvent::Idle);
+    let sent = log.lock().unwrap().clone();
+    assert_eq!(sent.len(), 2, "{sent:?}");
+    assert!(sent[0].starts_with("LEASE GRANT w1"), "{sent:?}");
+    assert_eq!(sent[1], "LEASE ABANDON w1 job-x 0", "{sent:?}");
+    assert_eq!(worker.report().chunks, 0, "nothing may be computed");
+}
+
+/// Garbage replies are a connection-level failure: the worker retreats
+/// to `Disconnected` (and would redial), never panics.
+#[test]
+fn garbage_grant_reply_disconnects_the_worker() {
+    let (mut worker, _log) = script_worker(&["TOTALLY BOGUS REPLY"]);
+    assert_eq!(worker.step().unwrap(), WorkerEvent::Disconnected);
+}
+
+/// `NOLEASE complete` for an *unpinned* worker is just idleness (other
+/// jobs may appear); only a job-pinned worker treats it as terminal.
+#[test]
+fn nolease_complete_unpinned_is_idle() {
+    let (mut worker, _log) = script_worker(&["OK NOLEASE complete"]);
+    assert_eq!(worker.step().unwrap(), WorkerEvent::Idle);
+}

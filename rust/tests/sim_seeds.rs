@@ -1,0 +1,235 @@
+//! Seed-sweep exploration of the fleet's interleaving space.
+//!
+//! Two layers:
+//!
+//! * a **wire-level sweep** driving full [`SimWorld`] scenarios —
+//!   random worker counts, crashes, partitions, server restarts,
+//!   message drops and latency, all derived from the seed — asserting
+//!   the composed determinant is always bit-identical to the
+//!   single-process run of the same spec;
+//! * a **table-level property test** (≥500 seeds) hammering
+//!   [`LeaseTable`] directly with random grant/renew/expire/complete/
+//!   abandon interleavings over a [`SimClock`], asserting chunk
+//!   conservation — every chunk journaled exactly once — and bit-equal
+//!   composition.
+//!
+//! Seed count for the sweep scales with `RADDET_SIM_SEEDS` (CI runs a
+//! fast subset per-PR and a wide sweep on a schedule); a failing seed
+//! is reproduced by running the same test with that seed number — see
+//! EXPERIMENTS.md §Simulation.
+
+use raddet::clock::SimClock;
+use raddet::combin::{Chunk, PascalTable};
+use raddet::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
+use raddet::jobs::{
+    ChunkRecord, JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
+};
+use raddet::matrix::gen;
+use raddet::testkit::sim::run_random_scenario;
+use raddet::testkit::TestRng;
+use std::time::Duration;
+
+const CHUNKS: usize = 6;
+const BATCH: usize = 32;
+
+fn sweep_seeds() -> u64 {
+    std::env::var("RADDET_SIM_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        lease_ttl: Duration::from_millis(200),
+        default_chunks: CHUNKS,
+        default_batch: BATCH,
+        ..Default::default()
+    }
+}
+
+fn sweep_payload() -> JobPayload {
+    JobPayload::F64(gen::uniform(&mut TestRng::from_seed(2024), 3, 9, -1.0, 1.0))
+}
+
+fn reference_bits(spec: &JobSpec, tag: &str) -> u64 {
+    let store = JobStore::open(raddet::testkit::scratch_dir(tag)).unwrap();
+    let id = store.create(spec).unwrap();
+    let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+        .run(&store, &id)
+        .unwrap();
+    match out.status.value.unwrap() {
+        JobValue::F64(v) => v.to_bits(),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// The tentpole sweep: hundreds of random interleavings (crashes,
+/// partitions, restarts, drops, latency — all derived from the seed by
+/// the shared [`run_random_scenario`] driver, which `raddet sim
+/// --seed N` replays) must all land on the exact single-process bits.
+#[test]
+fn seed_sweep_random_interleavings_reproduce_reference_bits() {
+    let spec = JobSpec {
+        payload: sweep_payload(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_bits(&spec, "sim-sweep-ref");
+    let seeds = sweep_seeds();
+    for seed in 0..seeds {
+        let dir = raddet::testkit::scratch_dir(&format!("sim-sweep-{seed}"));
+        let out = run_random_scenario(seed, sweep_payload(), JobEngine::Prefix, fleet_cfg(), dir)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        match out.value {
+            JobValue::F64(v) => assert_eq!(
+                v.to_bits(),
+                want,
+                "seed {seed}: fleet bits {:016x} != reference {want:016x} \
+                 (replay: raddet sim --seed {seed})",
+                v.to_bits()
+            ),
+            other => panic!("seed {seed}: {other:?}"),
+        }
+        if !out.faulty {
+            // No message loss ⇒ every journaled chunk was acked to
+            // exactly one worker as non-duplicate: strict conservation.
+            assert_eq!(
+                out.fleet_chunks, out.chunks_total,
+                "seed {seed}: chunk conservation"
+            );
+        }
+        assert!(!out.trace.is_empty(), "seed {seed}: trace must be recorded");
+    }
+}
+
+/// Compute a granted chunk the way a worker would.
+fn compute(spec: &JobSpec, chunk: Chunk) -> ChunkRecord {
+    let (m, n) = spec.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let mut runner = spec.runner();
+    let (partial, wm) = runner.run_chunk(spec.payload.as_lease(), &table, chunk).unwrap();
+    ChunkRecord { value: partial.into(), terms: wm.terms, micros: 1 }
+}
+
+/// ≥500-seed property test straight at the [`LeaseTable`]: random
+/// grant/renew/expire/complete/abandon interleavings over a virtual
+/// clock. Invariants: the table never journals a chunk twice (accepted
+/// acks equal the plan length exactly), every run completes, and the
+/// composed value is bit-identical to the single-process run.
+#[test]
+fn lease_interleavings_conserve_chunks_and_bits() {
+    let payload = JobPayload::F64(gen::uniform(&mut TestRng::from_seed(555), 2, 8, -1.0, 1.0));
+    let spec = JobSpec {
+        payload: payload.clone(),
+        engine: JobEngine::Prefix,
+        chunks: 4,
+        batch: 16,
+    };
+    let want = reference_bits(&spec, "lease-prop-ref");
+    let workers = ["wa", "wb", "wc"];
+
+    for seed in 0..500u64 {
+        let dir = raddet::testkit::scratch_dir(&format!("lease-prop-{seed}"));
+        let clock = SimClock::new();
+        let table = LeaseTable::with_clock(
+            JobStore::open(&dir).unwrap(),
+            FleetConfig {
+                lease_ttl: Duration::from_millis(100),
+                default_chunks: 4,
+                default_batch: 16,
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        let id = table.submit(payload.clone(), JobEngine::Prefix).unwrap();
+        let mut rng = TestRng::from_seed(seed);
+        // (worker, chunk index, chunk) leases this test believes it
+        // holds — the table may have silently expired any of them.
+        let mut held: Vec<(usize, u64, Chunk)> = Vec::new();
+        let mut accepted = 0u64;
+        let mut got_spec: Option<JobSpec> = None;
+        let mut ops = 0u64;
+
+        loop {
+            ops += 1;
+            assert!(ops < 5_000, "seed {seed}: interleaving failed to converge");
+            match rng.u64_below(10) {
+                // Grant to a random worker.
+                0..=3 => {
+                    let w = rng.usize_below(workers.len());
+                    match table.grant(workers[w], Some(id.as_str()), |_| got_spec.is_none()) {
+                        Ok(GrantOutcome::Granted(g)) => {
+                            if let Some(s) = g.spec {
+                                got_spec = Some(s);
+                            }
+                            held.push((w, g.chunk_index, g.chunk));
+                        }
+                        Ok(GrantOutcome::Idle) => clock.advance(Duration::from_millis(40)),
+                        Ok(GrantOutcome::Complete) => break,
+                        Err(e) => panic!("seed {seed}: grant failed: {e}"),
+                    }
+                }
+                // Complete a random held lease (possibly expired or
+                // stolen by now — every outcome is legal, but accepted
+                // acks are counted exactly).
+                4..=7 => {
+                    if held.is_empty() {
+                        continue;
+                    }
+                    let k = rng.usize_below(held.len());
+                    let (w, idx, chunk) = held.swap_remove(k);
+                    let spec = got_spec.as_ref().expect("spec arrives with first grant");
+                    let rec = compute(spec, chunk);
+                    match table.complete(workers[w], &id, idx, rec) {
+                        Ok(CompleteOutcome::Accepted { finished, .. }) => {
+                            accepted += 1;
+                            if finished {
+                                break;
+                            }
+                        }
+                        Ok(CompleteOutcome::Duplicate { .. }) => {}
+                        // Lease lost to reassignment after expiry.
+                        Err(e) => assert!(
+                            e.to_string().contains("lease lost"),
+                            "seed {seed}: unexpected complete error: {e}"
+                        ),
+                    }
+                }
+                // Renew a random held lease (may legitimately fail if
+                // it expired and was re-granted).
+                8 => {
+                    if let Some(&(w, idx, _)) = held.first() {
+                        let _ = table.renew(workers[w], &id, idx);
+                    }
+                }
+                // Abandon, or let time pass so leases expire.
+                _ => {
+                    if !held.is_empty() && rng.u64_below(2) == 0 {
+                        let k = rng.usize_below(held.len());
+                        let (w, idx, _) = held.swap_remove(k);
+                        let _ = table.abandon(workers[w], &id, idx);
+                    } else {
+                        clock.advance(Duration::from_millis(60 + rng.u64_below(80)));
+                    }
+                }
+            }
+        }
+
+        let st = table.store().status(&id).unwrap();
+        assert!(st.complete, "seed {seed}");
+        assert_eq!(
+            accepted, st.chunks_total as u64,
+            "seed {seed}: every chunk must be journaled (and acked) exactly once"
+        );
+        match st.value.unwrap() {
+            JobValue::F64(v) => assert_eq!(
+                v.to_bits(),
+                want,
+                "seed {seed}: composed bits diverge from single-process run"
+            ),
+            other => panic!("seed {seed}: {other:?}"),
+        }
+    }
+}
