@@ -1,0 +1,143 @@
+//! Bench: the scalar tower's per-term cost — f64 vs checked i128 vs
+//! BigInt — across submatrix orders, plus the BigInt entry-magnitude
+//! crossover (the point where i128 stops being *available* and big
+//! stops being a luxury).
+//!
+//! Two questions, one table each:
+//!
+//! 1. **Per-term cost by m** (fixed small entries): what does each
+//!    scalar pay per Radić term on the cpu-lu and prefix engine
+//!    families? Expectation: i128 ≈ f64 within a small factor (checked
+//!    ops are branch-predictable), BigInt a constant factor behind on
+//!    small values (per-value allocation) that *shrinks* relatively as
+//!    m grows and the O(m³) work dominates.
+//! 2. **Crossover by entry magnitude** (fixed shape): sweeping entry
+//!    size upward, where does checked i128 start refusing
+//!    (ScalarOverflow) — i.e. from which magnitude is BigInt the only
+//!    exact option? The bench prints the refusal boundary instead of
+//!    pretending to time a path that errors.
+//!
+//! Results are recorded in EXPERIMENTS.md §Scalars. JSON rows go to
+//! `RADDET_BENCH_JSON` like the other benches.
+
+use raddet::bench::stats::{json_f64, json_object};
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
+use raddet::combin::{combination_count, Chunk, PascalTable};
+use raddet::coordinator::{ChunkRunner, LeaseMatrix, LeasePartial};
+use raddet::matrix::gen;
+use raddet::scalar::ScalarKind;
+use raddet::testkit::TestRng;
+
+/// One full-space sweep through a [`ChunkRunner`] (single chunk — the
+/// per-term arithmetic is what's under test, not scheduling).
+fn sweep(runner: &mut ChunkRunner, a: LeaseMatrix<'_>, table: &PascalTable, total: u128) -> u64 {
+    let (partial, wm) = runner
+        .run_chunk(a, table, Chunk { start: 0, len: total })
+        .expect("bench sweep");
+    std::hint::black_box(&partial);
+    wm.terms
+}
+
+fn main() {
+    let cfg = BenchConfig::slow();
+
+    println!("## per-term cost by scalar (entries in ±60, single chunk)\n");
+    let mut t1 = Table::new(&[
+        "m", "n", "terms", "engine", "f64", "i128", "big", "i128/f64", "big/i128",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for (m, n) in [(3usize, 14usize), (4, 14), (5, 16), (6, 16)] {
+        let total = combination_count(n as u64, m as u64).unwrap();
+        let table = PascalTable::new(n as u64, m as u64).unwrap();
+        let ai = gen::integer(&mut TestRng::from_seed((m * 31 + n) as u64), m, n, -60, 60);
+        let af = ai.map(|x| x as f64);
+        for use_prefix in [false, true] {
+            let engine = if use_prefix { "prefix" } else { "cpu-lu" };
+            let mut rf = ChunkRunner::new(ScalarKind::F64, use_prefix, m, 256);
+            let mut ri = ChunkRunner::new(ScalarKind::I128, use_prefix, m, 256);
+            let mut rb = ChunkRunner::new(ScalarKind::Big, use_prefix, m, 256);
+            let s_f = bench(&cfg, || sweep(&mut rf, LeaseMatrix::F64(&af), &table, total));
+            let s_i = bench(&cfg, || sweep(&mut ri, LeaseMatrix::Exact(&ai), &table, total));
+            let s_b = bench(&cfg, || sweep(&mut rb, LeaseMatrix::Exact(&ai), &table, total));
+            let per = |s: f64| s / total as f64;
+            t1.row(&[
+                m.to_string(),
+                n.to_string(),
+                total.to_string(),
+                engine.into(),
+                fmt_time(per(s_f.median)),
+                fmt_time(per(s_i.median)),
+                fmt_time(per(s_b.median)),
+                format!("{:.2}×", s_i.median / s_f.median),
+                format!("{:.2}×", s_b.median / s_i.median),
+            ]);
+            json_rows.push(json_object(&[
+                ("bench", "\"scalar_per_term\"".into()),
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("engine", format!("\"{engine}\"")),
+                ("terms", total.to_string()),
+                ("f64", s_f.to_json()),
+                ("i128", s_i.to_json()),
+                ("big", s_b.to_json()),
+                ("big_over_i128", json_f64(s_b.median / s_i.median)),
+            ]));
+        }
+    }
+    print!("{}", t1.render());
+
+    println!("\n## exact-range crossover by entry magnitude (m=5, n=12, prefix)\n");
+    let (m, n) = (5usize, 12usize);
+    let total = combination_count(n as u64, m as u64).unwrap();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let mut t2 = Table::new(&["|entries| ≤", "i128", "big", "big/i128"]);
+    for mag in [1_000i64, 1_000_000, 1_000_000_000, 1_000_000_000_000, i64::MAX / 4] {
+        let ai = gen::integer(&mut TestRng::from_seed(mag as u64), m, n, -mag, mag);
+        let mut ri = ChunkRunner::new(ScalarKind::I128, true, m, 256);
+        let mut rb = ChunkRunner::new(ScalarKind::Big, true, m, 256);
+        // i128 first — past its range the row records the refusal.
+        let narrow = ri.run_chunk(LeaseMatrix::Exact(&ai), &table, Chunk { start: 0, len: total });
+        let s_b = bench(&cfg, || sweep(&mut rb, LeaseMatrix::Exact(&ai), &table, total));
+        match narrow {
+            Ok((LeasePartial::Exact(_), _)) => {
+                let s_i = bench(&cfg, || {
+                    sweep(&mut ri, LeaseMatrix::Exact(&ai), &table, total)
+                });
+                t2.row(&[
+                    format!("1e{}", (mag as f64).log10().round() as i64),
+                    fmt_time(s_i.median),
+                    fmt_time(s_b.median),
+                    format!("{:.2}×", s_b.median / s_i.median),
+                ]);
+            }
+            Ok(other) => panic!("{other:?}"),
+            Err(e) => {
+                t2.row(&[
+                    format!("1e{}", (mag as f64).log10().round() as i64),
+                    format!("refused ({e})"),
+                    fmt_time(s_b.median),
+                    "∞ (big only)".into(),
+                ]);
+            }
+        }
+        json_rows.push(json_object(&[
+            ("bench", "\"scalar_crossover\"".into()),
+            ("magnitude", mag.to_string()),
+            ("terms", total.to_string()),
+            ("big", s_b.to_json()),
+        ]));
+    }
+    print!("{}", t2.render());
+
+    let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    match std::env::var("RADDET_BENCH_JSON") {
+        Ok(path) if !path.is_empty() => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("\n(JSON written to {path})");
+        }
+        _ => {
+            println!("\n## JSON (set RADDET_BENCH_JSON=path to write a file)\n");
+            print!("{json}");
+        }
+    }
+}

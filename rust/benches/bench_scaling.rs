@@ -8,10 +8,12 @@
 //! side of the paper's parallel claim is reproduced on the PRAM
 //! simulator (bench_pram), per DESIGN.md §2 substitution 1.
 
-use raddet::bench::{fmt_time, Table};
+use raddet::bench::stats::{json_f64, json_object, Stats};
+use raddet::bench::{bench, fmt_time, BenchConfig, Table};
 use raddet::combin::combination_count;
 use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
 use raddet::matrix::gen;
+use raddet::scalar::ScalarKind;
 use raddet::testkit::TestRng;
 
 fn run(workers: usize, schedule: Schedule, a: &raddet::matrix::MatF64) -> (f64, f64, f64) {
@@ -95,4 +97,67 @@ fn main() {
         ]);
     }
     print!("{}", t2.render());
+
+    scaling_by_scalar();
+}
+
+/// Strong scaling per scalar of the tower — the same sweep (integer
+/// matrix, cpu-lu + prefix engines) in f64, checked i128 and BigInt,
+/// across worker counts. Emits the `BENCH_PR5.json` trajectory
+/// datapoint via `bench::stats` (path from `RADDET_BENCH_PR5`,
+/// default `BENCH_PR5.json`).
+fn scaling_by_scalar() {
+    let cfg = BenchConfig::slow();
+    let (m, n) = (5usize, 18usize);
+    let terms = combination_count(n as u64, m as u64).unwrap();
+    let ai = gen::integer(&mut TestRng::from_seed(77), m, n, -60, 60);
+    let af = ai.map(|x| x as f64);
+
+    println!("\n## strong scaling by scalar — {m}×{n} ({terms} terms), prefix engine\n");
+    let mut table = Table::new(&["workers", "scalar", "time", "Mterms/s", "vs f64"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &w in &[1usize, 2, 4] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: w,
+            engine: EngineKind::Prefix,
+            schedule: Schedule::Static,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut base = None;
+        for scalar in [ScalarKind::F64, ScalarKind::I128, ScalarKind::Big] {
+            let stats: Stats = match scalar {
+                ScalarKind::F64 => bench(&cfg, || coord.radic_det(&af).unwrap().det),
+                ScalarKind::I128 => {
+                    bench(&cfg, || coord.radic_det_exact(&ai).unwrap())
+                }
+                ScalarKind::Big => bench(&cfg, || coord.radic_det_big(&ai).unwrap()),
+            };
+            let base_median = *base.get_or_insert(stats.median);
+            table.row(&[
+                w.to_string(),
+                scalar.as_str().into(),
+                fmt_time(stats.median),
+                format!("{:.2}", terms as f64 / stats.median / 1e6),
+                format!("{:.2}×", stats.median / base_median),
+            ]);
+            json_rows.push(json_object(&[
+                ("bench", "\"scaling_by_scalar\"".into()),
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("workers", w.to_string()),
+                ("scalar", format!("\"{scalar}\"")),
+                ("terms", terms.to_string()),
+                ("stats", stats.to_json()),
+                ("mterms_per_s", json_f64(terms as f64 / stats.median / 1e6)),
+            ]));
+        }
+    }
+    print!("{}", table.render());
+
+    let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+    let path =
+        std::env::var("RADDET_BENCH_PR5").unwrap_or_else(|_| "BENCH_PR5.json".to_string());
+    std::fs::write(&path, &json).expect("write BENCH_PR5.json");
+    println!("\n(scalar scaling JSON written to {path})");
 }

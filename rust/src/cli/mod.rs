@@ -3,7 +3,8 @@
 //! ```text
 //! raddet det       --rows M --cols N [--seed S | --csv F]
 //!                  [--engine auto|cpu|xla|prefix]
-//!                  [--workers K] [--batch B] [--schedule static|steal] [--exact]
+//!                  [--workers K] [--batch B] [--schedule static|steal]
+//!                  [--scalar f64|i128|big] [--exact]
 //! raddet unrank    --n N --m M --q Q [--trace]
 //! raddet rank      --n N --cols 2,5,6,7,8
 //! raddet table     --n N --m M            # paper Table 1 / Table 3
@@ -16,7 +17,8 @@
 //! raddet worker    --connect HOST:PORT [--id W] [--job ID] [--poll-ms P]
 //!                  [--max-chunks N] [--exit-on-idle]
 //! raddet retrieve  [--images K] [--query I] [--noise E]
-//! raddet job submit  --rows M --cols N [--seed S | --csv F] [--exact]
+//! raddet job submit  --rows M --cols N [--seed S | --csv F]
+//!                    [--scalar f64|i128|big] [--exact]
 //!                    [--engine cpu|prefix] [--chunks C] [--batch B]
 //!                    [--jobs-dir D] [--job-workers K] [--max-chunks B]
 //!                    [--fleet --addr HOST:PORT [--wait-ms T]]
@@ -40,6 +42,7 @@ use crate::jobs::{
 };
 use crate::matrix::{gen, io as mio, MatF64};
 use crate::pram::{analysis, section6_table};
+use crate::scalar::ScalarKind;
 use crate::service::{Client, Server};
 use crate::testkit::TestRng;
 use crate::{Error, Result};
@@ -162,18 +165,87 @@ const COORD_OPTS: [&str; 8] = [
     "engine", "schedule", "grain", "workers", "batch", "artifacts", "executors", "seed",
 ];
 
+/// The `--scalar f64|i128|big` axis shared by `det` and `job submit`
+/// (`--exact` stays as an alias for `--scalar i128`; the legacy
+/// `exact` spelling is accepted as a value too). Contradictory
+/// combinations are refused — a run the user believes is exact must
+/// never silently compute in f64.
+fn scalar_from_args(a: &Args) -> Result<ScalarKind> {
+    let scalar = match a.get("scalar") {
+        Some(tok) => Some(
+            ScalarKind::parse(tok)
+                .map_err(|_| Error::Config(format!("bad --scalar {tok:?}")))?,
+        ),
+        None => None,
+    };
+    match (scalar, a.has_flag("exact")) {
+        (Some(s), false) => Ok(s),
+        (Some(ScalarKind::I128), true) => Ok(ScalarKind::I128),
+        (Some(s), true) => Err(Error::Config(format!(
+            "--exact contradicts --scalar {s} (drop one of them)"
+        ))),
+        (None, true) => Ok(ScalarKind::I128),
+        (None, false) => Ok(ScalarKind::F64),
+    }
+}
+
+/// Convert the (f64-parsed) input matrix to exact integer entries —
+/// loudly. The CLI's input funnel is f64 (the CSV reader and the
+/// seeded generator), which represents integers exactly only up to
+/// 2⁵³; past that the funnel itself has already rounded, and feeding
+/// a silently altered matrix to an *exact* scalar would defeat its
+/// whole point. Such entries are a Config error, not a best effort.
+/// User-supplied data (`from_csv`) must additionally be integral
+/// already — rounding someone's 2.5 to 2 under an "exact" flag is the
+/// same silent alteration; only the seeded `--lo/--hi` generator,
+/// whose rounding is this command's documented sampling behaviour,
+/// may round.
+fn exact_entries(mat: &MatF64, from_csv: bool) -> Result<crate::matrix::MatI64> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    for (idx, &x) in mat.data().iter().enumerate() {
+        if !x.is_finite() || x.round().abs() > MAX_EXACT {
+            return Err(Error::Config(format!(
+                "entry #{idx} ({x:e}) cannot pass the f64 input path losslessly \
+                 (exact scalars accept |entry| ≤ 2^53 here; larger i64 entries \
+                 are supported via the wire protocol's integer form)"
+            )));
+        }
+        if from_csv && x.fract() != 0.0 {
+            return Err(Error::Config(format!(
+                "entry #{idx} ({x}) is not an integer — exact scalars refuse to \
+                 round user data (supply integer entries for --scalar i128|big)"
+            )));
+        }
+    }
+    Ok(mat.map(|x| x.round() as i64))
+}
+
 fn cmd_det(a: &Args) -> Result<()> {
     a.check_known(
-        &[&COORD_OPTS[..], &["rows", "cols", "csv", "exact", "lo", "hi", "compare"]].concat(),
+        &[
+            &COORD_OPTS[..],
+            &["rows", "cols", "csv", "scalar", "exact", "lo", "hi", "compare"],
+        ]
+        .concat(),
     )?;
     let coord = build_coordinator(a)?;
     let mat = matrix_from_args(a)?;
-    if a.has_flag("exact") {
-        let ai = mat.map(|x| x.round() as i64);
-        let (det, metrics) = coord.radic_det_exact_with_metrics(&ai)?;
-        println!("radic_det_exact = {det}");
-        println!("  {}", metrics.render());
-        return Ok(());
+    match scalar_from_args(a)? {
+        ScalarKind::I128 => {
+            let ai = exact_entries(&mat, a.get("csv").is_some())?;
+            let (det, metrics) = coord.radic_det_exact_with_metrics(&ai)?;
+            println!("radic_det_exact = {det}");
+            println!("  {}", metrics.render());
+            return Ok(());
+        }
+        ScalarKind::Big => {
+            let ai = exact_entries(&mat, a.get("csv").is_some())?;
+            let (det, metrics) = coord.radic_det_big_with_metrics(&ai)?;
+            println!("radic_det_big = {det}");
+            println!("  {}", metrics.render());
+            return Ok(());
+        }
+        ScalarKind::F64 => {}
     }
     let out = coord.radic_det(&mat)?;
     println!("radic_det = {:.12e}", out.det);
@@ -353,7 +425,7 @@ fn cmd_query(a: &Args) -> Result<()> {
     let mat = mio::read_csv_file(std::path::Path::new(path))?;
     let mut client = Client::connect(addr)?;
     if a.has_flag("exact") {
-        let ai = mat.map(|x| x.round() as i64);
+        let ai = exact_entries(&mat, true)?; // query input is always CSV
         println!("radic_det_exact = {}", client.det_exact(&ai)?);
     } else {
         let reply = client.det(&mat)?;
@@ -425,8 +497,8 @@ fn report_job_run(a: &Args, out: &crate::jobs::JobOutcome) {
 
 fn cmd_job_submit(a: &Args) -> Result<()> {
     a.check_known(&[
-        "rows", "cols", "csv", "seed", "lo", "hi", "exact", "engine", "jobs-dir", "chunks",
-        "batch", "job-workers", "max-chunks", "fleet", "addr", "wait-ms",
+        "rows", "cols", "csv", "seed", "lo", "hi", "scalar", "exact", "engine", "jobs-dir",
+        "chunks", "batch", "job-workers", "max-chunks", "fleet", "addr", "wait-ms",
     ])?;
     let engine = match a.get("engine").unwrap_or("prefix") {
         "cpu" => JobEngine::CpuLu,
@@ -438,10 +510,10 @@ fn cmd_job_submit(a: &Args) -> Result<()> {
         }
     };
     let mat = matrix_from_args(a)?;
-    let payload = if a.has_flag("exact") {
-        JobPayload::Exact(mat.map(|x| x.round() as i64))
-    } else {
-        JobPayload::F64(mat)
+    let payload = match scalar_from_args(a)? {
+        ScalarKind::F64 => JobPayload::F64(mat),
+        ScalarKind::I128 => JobPayload::Exact(exact_entries(&mat, a.get("csv").is_some())?),
+        ScalarKind::Big => JobPayload::Big(exact_entries(&mat, a.get("csv").is_some())?),
     };
     if a.has_flag("fleet") {
         // Fleet mode: hand the job to a running server; remote
@@ -592,6 +664,13 @@ fn cmd_job_export(a: &Args) -> Result<()> {
         }
         Some(JobValue::Exact(v)) => {
             // i128 exceeds JSON number range; export as strings.
+            fields.push(("det", format!("\"{v}\"")));
+            fields.push(("det_bits", format!("\"{v}\"")));
+        }
+        Some(JobValue::Big(v)) => {
+            // Unbounded integers only exist as strings in JSON; the
+            // decimal is exact, so it doubles as the determinism
+            // witness the way f64 bit patterns do.
             fields.push(("det", format!("\"{v}\"")));
             fields.push(("det_bits", format!("\"{v}\"")));
         }

@@ -1,24 +1,39 @@
-//! Chunk leases — one rank chunk evaluated to a *deterministic* partial.
+//! Chunk leases — one rank chunk evaluated to a *deterministic* partial,
+//! generic over the scalar tower.
 //!
 //! A lease is the unit of restartable work: given the same matrix, the
 //! same Pascal table and the same [`Chunk`], `run_chunk` always produces
-//! the bitwise-identical partial, because every accumulation inside a
-//! chunk happens in rank order on a single thread. The coordinator's
-//! worker loops execute leases back-to-back in-process; the durable jobs
+//! the identical partial (bit-identical for `f64`, equal exact values
+//! for the integer scalars), because every accumulation inside a chunk
+//! happens in rank order on a single thread. The coordinator's worker
+//! loops execute leases back-to-back in-process; the durable jobs
 //! subsystem ([`crate::jobs`]) executes exactly the same leases but
 //! journals each result, which is what makes an interrupted sweep
 //! resumable without changing the final bits.
 //!
-//! Two runners cover the engine matrix:
+//! One generic runner covers the whole engine matrix:
 //!
-//! * [`LeaseRunner`] — float path, wrapping either a lane engine
-//!   ([`DetEngine`]: `cpu-lu` batches, XLA handles) or the
-//!   prefix-factored Laplace engine ([`PrefixEngine`]).
-//! * [`ExactLeaseRunner`] — the `i128` twin (per-term Bareiss, or exact
-//!   prefix cofactors shared per sibling block).
+//! * [`LeaseRunner<S>`](LeaseRunner) — the lease executor for any
+//!   scalar `S` of the tower. Which machinery evaluates a chunk is the
+//!   scalar family's choice ([`ScalarExec`]): `f64` plugs in the
+//!   [`FloatEngine`] (lane batches over a [`DetEngine`], or the
+//!   prefix-factored Laplace engine); the exact scalars (`i128`,
+//!   [`BigInt`]) share one [`ExactEngine`] (per-term generic Bareiss,
+//!   or generic prefix cofactors per sibling block).
+//! * [`ChunkRunner`] — the dynamically-typed adapter over the three
+//!   instantiations, for executors that only learn the scalar from a
+//!   job spec's tags at runtime (the jobs runner, fleet workers).
 //!
-//! All scratch lives in the runner and is reused across leases, so the
-//! steady-state hot path allocates nothing per chunk.
+//! All scratch lives in the engine and is reused across leases, so the
+//! steady-state hot path allocates nothing per chunk (the `BigInt`
+//! scalar allocates per value by nature — that is the price of
+//! unboundedness, measured in `benches/bench_scalar.rs`).
+//!
+//! Overflow is a first-class outcome, not a wrong answer: a checked
+//! scalar op that exceeds its range surfaces as
+//! [`Error::ScalarOverflow`], and the runner stamps the failing chunk's
+//! start rank into the error so an operator can name the offending
+//! lease.
 //!
 //! Trade-off: lane batches flush at every chunk boundary (a chunk's
 //! partial must not depend on neighbouring chunks, or journaled
@@ -32,17 +47,139 @@ use super::batcher::BatchBuilder;
 use super::engine::{CpuEngine, DetEngine, PrefixEngine};
 use super::metrics::WorkerMetrics;
 use crate::combin::{radic_sign, Chunk, CombinationStream, PascalTable, PrefixBlockStream};
-use crate::linalg::{cofactors_exact, det_bareiss, NeumaierSum};
-use crate::matrix::{MatF64, MatI64};
+use crate::linalg::{cofactors_generic, det_bareiss_generic, NeumaierSum};
+use crate::matrix::{Mat, MatF64, MatI64};
+use crate::scalar::{BigInt, Scalar, ScalarKind};
 use crate::{Error, Result};
 use std::time::Instant;
 
-/// Reusable float-path lease executor.
-pub struct LeaseRunner {
-    inner: Inner,
+/// Per-scalar chunk evaluation: how a [`LeaseRunner`] turns one rank
+/// chunk into a partial. Implementations own all scratch and must be
+/// deterministic (rank-ordered accumulation, single thread).
+pub trait ChunkEngine<S: Scalar>: Send {
+    /// Engine label (metrics/CLI).
+    fn label(&self) -> &'static str;
+
+    /// Evaluate a non-empty chunk into its signed partial, metering
+    /// into `wm` (terms/blocks/timers; `chunks` is the runner's job).
+    fn run_chunk(
+        &mut self,
+        a: &Mat<S::Elem>,
+        table: &PascalTable,
+        chunk: Chunk,
+        wm: &mut WorkerMetrics,
+    ) -> Result<S>;
 }
 
-enum Inner {
+/// Wires a scalar to the engine family that evaluates its chunks —
+/// the one place the scalar → machinery choice lives.
+pub trait ScalarExec: Scalar {
+    /// The chunk engine this scalar family uses.
+    type Engine: ChunkEngine<Self>;
+
+    /// Build the engine for m-row jobs; `use_prefix` selects the
+    /// prefix-factored path, `batch` shapes float lane engines only.
+    fn engine(m: usize, use_prefix: bool, batch: usize) -> Self::Engine;
+}
+
+impl ScalarExec for f64 {
+    type Engine = FloatEngine;
+
+    fn engine(m: usize, use_prefix: bool, batch: usize) -> FloatEngine {
+        if use_prefix {
+            FloatEngine::prefix(m)
+        } else {
+            FloatEngine::cpu(m, batch)
+        }
+    }
+}
+
+impl ScalarExec for i128 {
+    type Engine = ExactEngine<i128>;
+
+    fn engine(m: usize, use_prefix: bool, _batch: usize) -> ExactEngine<i128> {
+        ExactEngine::new(m, use_prefix)
+    }
+}
+
+impl ScalarExec for BigInt {
+    type Engine = ExactEngine<BigInt>;
+
+    fn engine(m: usize, use_prefix: bool, _batch: usize) -> ExactEngine<BigInt> {
+        ExactEngine::new(m, use_prefix)
+    }
+}
+
+/// Reusable lease executor for scalar `S` — the one runner that
+/// replaced the float/exact twin stacks.
+pub struct LeaseRunner<S: ScalarExec> {
+    eng: S::Engine,
+}
+
+impl<S: ScalarExec> LeaseRunner<S> {
+    /// Runner for m-row jobs; `use_prefix` selects the prefix-factored
+    /// engine, `batch` shapes float lane engines (ignored by exact
+    /// scalars).
+    pub fn new(m: usize, use_prefix: bool, batch: usize) -> Self {
+        Self { eng: S::engine(m, use_prefix, batch) }
+    }
+
+    /// Engine label (metrics/CLI).
+    pub fn label(&self) -> &'static str {
+        self.eng.label()
+    }
+
+    /// Evaluate the rank chunk to its signed partial sum.
+    ///
+    /// Deterministic: terms are accumulated in rank order on this
+    /// thread only (Neumaier for `f64`, exact addition otherwise), so
+    /// equal inputs give equal partials. A scalar overflow inside the
+    /// chunk comes back stamped with the chunk's start rank.
+    pub fn run_chunk(
+        &mut self,
+        a: &Mat<S::Elem>,
+        table: &PascalTable,
+        chunk: Chunk,
+    ) -> Result<(S, WorkerMetrics)> {
+        let mut wm = WorkerMetrics::default();
+        if chunk.len == 0 {
+            return Ok((S::zero(), wm));
+        }
+        wm.chunks = 1;
+        match self.eng.run_chunk(a, table, chunk, &mut wm) {
+            Ok(value) => Ok((value, wm)),
+            Err(Error::ScalarOverflow { what, chunk: None }) => {
+                Err(Error::ScalarOverflow { what, chunk: Some(chunk.start) })
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+impl LeaseRunner<f64> {
+    /// Wrap an arbitrary lane engine (batch geometry taken from it).
+    pub fn lanes(eng: Box<dyn DetEngine + Send>) -> Self {
+        Self { eng: FloatEngine::lanes(eng) }
+    }
+
+    /// Pure-rust LU lane runner for `(m, batch)`.
+    pub fn cpu(m: usize, batch: usize) -> Self {
+        Self { eng: FloatEngine::cpu(m, batch) }
+    }
+
+    /// Prefix-factored runner for m-row jobs.
+    pub fn prefix(m: usize) -> Self {
+        Self { eng: FloatEngine::prefix(m) }
+    }
+}
+
+/// The float chunk engine: batched lane evaluation (cpu-lu or an XLA
+/// handle) or the prefix-factored Laplace engine.
+pub struct FloatEngine {
+    inner: FloatInner,
+}
+
+enum FloatInner {
     /// Batched lane engine (cpu-lu or an XLA handle).
     Lanes {
         eng: Box<dyn DetEngine + Send>,
@@ -52,53 +189,45 @@ enum Inner {
     Prefix { eng: PrefixEngine },
 }
 
-impl LeaseRunner {
+impl FloatEngine {
     /// Wrap an arbitrary lane engine (batch geometry taken from it).
     pub fn lanes(eng: Box<dyn DetEngine + Send>) -> Self {
         let builder = BatchBuilder::new(eng.m(), eng.batch());
-        Self { inner: Inner::Lanes { eng, builder } }
+        Self { inner: FloatInner::Lanes { eng, builder } }
     }
 
-    /// Pure-rust LU lane runner for `(m, batch)`.
+    /// Pure-rust LU lane engine for `(m, batch)`.
     pub fn cpu(m: usize, batch: usize) -> Self {
         Self::lanes(Box::new(CpuEngine::new(m, batch.max(1))))
     }
 
-    /// Prefix-factored runner for m-row jobs.
+    /// Prefix-factored engine for m-row jobs.
     pub fn prefix(m: usize) -> Self {
-        Self { inner: Inner::Prefix { eng: PrefixEngine::new(m) } }
+        Self { inner: FloatInner::Prefix { eng: PrefixEngine::new(m) } }
     }
+}
 
-    /// Engine label (metrics/CLI).
-    pub fn label(&self) -> &'static str {
+impl ChunkEngine<f64> for FloatEngine {
+    fn label(&self) -> &'static str {
         match &self.inner {
-            Inner::Lanes { eng, .. } => eng.label(),
-            Inner::Prefix { .. } => "prefix",
+            FloatInner::Lanes { eng, .. } => eng.label(),
+            FloatInner::Prefix { .. } => "prefix",
         }
     }
 
-    /// Evaluate the rank chunk to its signed partial sum.
-    ///
-    /// Deterministic: terms are accumulated in rank order (Neumaier) on
-    /// this thread only, so equal inputs give equal bits.
-    pub fn run_chunk(
+    fn run_chunk(
         &mut self,
         a: &MatF64,
         table: &PascalTable,
         chunk: Chunk,
-    ) -> Result<(f64, WorkerMetrics)> {
-        let mut wm = WorkerMetrics::default();
-        if chunk.len == 0 {
-            return Ok((0.0, wm));
-        }
-        wm.chunks = 1;
-        let value = match &mut self.inner {
-            Inner::Lanes { eng, builder } => {
-                run_chunk_lanes(eng, builder, a, table, chunk, &mut wm)?
+        wm: &mut WorkerMetrics,
+    ) -> Result<f64> {
+        match &mut self.inner {
+            FloatInner::Lanes { eng, builder } => {
+                run_chunk_lanes(eng, builder, a, table, chunk, wm)
             }
-            Inner::Prefix { eng } => run_chunk_prefix(eng, a, table, chunk, &mut wm)?,
-        };
-        Ok((value, wm))
+            FloatInner::Prefix { eng } => run_chunk_prefix(eng, a, table, chunk, wm),
+        }
     }
 }
 
@@ -176,8 +305,12 @@ fn run_chunk_prefix(
     Ok(acc.value())
 }
 
-/// Reusable exact-path (`i128`) lease executor.
-pub struct ExactLeaseRunner {
+/// The exact chunk engine, shared by every integer scalar of the
+/// tower: per-term generic Bareiss lanes, or generic prefix cofactors
+/// shared per sibling block. No rank fallback is needed on the prefix
+/// path — exact arithmetic makes singular-prefix cofactors exactly
+/// zero.
+pub struct ExactEngine<S: Scalar<Elem = i64>> {
     m: usize,
     use_prefix: bool,
     /// m×m gather scratch (per-term Bareiss path).
@@ -185,13 +318,13 @@ pub struct ExactLeaseRunner {
     /// m×(m−1) shared-prefix gather (prefix path).
     prefix_buf: Vec<i64>,
     /// Exact Laplace cofactors of the current prefix.
-    cof: Vec<i128>,
-    /// Minor scratch for [`cofactors_exact`].
+    cof: Vec<S>,
+    /// Minor scratch for [`cofactors_generic`].
     minor_buf: Vec<i64>,
 }
 
-impl ExactLeaseRunner {
-    /// New runner for m-row jobs; `use_prefix` selects the exact prefix
+impl<S: Scalar<Elem = i64>> ExactEngine<S> {
+    /// New engine for m-row jobs; `use_prefix` selects the prefix
     /// cofactor path over per-term Bareiss.
     pub fn new(m: usize, use_prefix: bool) -> Self {
         assert!(m >= 1);
@@ -200,40 +333,9 @@ impl ExactLeaseRunner {
             use_prefix,
             scratch: vec![0i64; m * m],
             prefix_buf: vec![0i64; m * (m - 1)],
-            cof: vec![0i128; m],
+            cof: vec![S::zero(); m],
             minor_buf: Vec::new(),
         }
-    }
-
-    /// Engine label (metrics/CLI).
-    pub fn label(&self) -> &'static str {
-        if self.use_prefix {
-            "exact-prefix"
-        } else {
-            "exact-bareiss"
-        }
-    }
-
-    /// Evaluate the rank chunk to its exact signed partial (overflow-
-    /// checked). Deterministic: integer addition is exact, so any
-    /// grouping gives the same value; terms still run in rank order.
-    pub fn run_chunk(
-        &mut self,
-        a: &MatI64,
-        table: &PascalTable,
-        chunk: Chunk,
-    ) -> Result<(i128, WorkerMetrics)> {
-        let mut wm = WorkerMetrics::default();
-        if chunk.len == 0 {
-            return Ok((0, wm));
-        }
-        wm.chunks = 1;
-        let value = if self.use_prefix {
-            self.run_chunk_prefix(a, table, chunk, &mut wm)?
-        } else {
-            self.run_chunk_bareiss(a, table, chunk, &mut wm)?
-        };
-        Ok((value, wm))
     }
 
     fn run_chunk_bareiss(
@@ -242,145 +344,179 @@ impl ExactLeaseRunner {
         table: &PascalTable,
         chunk: Chunk,
         wm: &mut WorkerMetrics,
-    ) -> Result<i128> {
+    ) -> Result<S> {
         let m = self.m;
-        let mut acc: i128 = 0;
+        let mut acc = S::accum_new();
         let mut stream = CombinationStream::new(table, chunk.start, chunk.len)?;
         let t0 = Instant::now();
         while let Some(cols) = stream.next_ref() {
             a.gather_cols_into(cols, &mut self.scratch);
-            let det = det_bareiss(&self.scratch, m)?;
-            let signed = if radic_sign(cols) > 0.0 { det } else { -det };
-            acc = acc
-                .checked_add(signed)
-                .ok_or(Error::ExactOverflow("radic sum"))?;
+            let det: S = det_bareiss_generic(&self.scratch, m)?;
+            let signed = if radic_sign(cols) > 0.0 {
+                det
+            } else {
+                det.neg_checked("radic sum")?
+            };
+            S::accum_add(&mut acc, &signed, "radic sum")?;
             wm.terms += 1;
         }
         wm.engine_time += t0.elapsed();
-        Ok(acc)
+        Ok(S::accum_value(&acc))
     }
 
-    /// Exact prefix path: Bareiss-style integer cofactors shared per
-    /// block, `i128` checked dot per sibling. No rank fallback is
-    /// needed — exact arithmetic makes singular-prefix cofactors
-    /// exactly zero.
+    /// Exact prefix path: integer cofactors shared per block, a checked
+    /// scalar dot per sibling.
     fn run_chunk_prefix(
         &mut self,
         a: &MatI64,
         table: &PascalTable,
         chunk: Chunk,
         wm: &mut WorkerMetrics,
-    ) -> Result<i128> {
+    ) -> Result<S> {
         let (m, n) = (self.m, a.cols());
         let r_const = (m as u64) * (m as u64 + 1) / 2;
-        let mut acc: i128 = 0;
+        let mut acc = S::accum_new();
         let mut stream = PrefixBlockStream::new(table, chunk.start, chunk.len)?;
         let t0 = Instant::now();
         while let Some(b) = stream.next_block() {
             a.gather_cols_into(b.prefix, &mut self.prefix_buf);
-            cofactors_exact(&self.prefix_buf, m, &mut self.minor_buf, &mut self.cof)?;
+            cofactors_generic(&self.prefix_buf, m, &mut self.minor_buf, &mut self.cof)?;
             let s_prefix: u64 = b.prefix.iter().map(|&c| c as u64).sum();
             let mut negative = (r_const + s_prefix + b.last_lo as u64) % 2 == 1;
             let data = a.data();
             for j in b.last_lo..=b.last_hi {
                 let col = (j - 1) as usize;
-                let mut det: i128 = 0;
-                for (i, &c) in self.cof.iter().enumerate() {
-                    let term = c
-                        .checked_mul(data[i * n + col] as i128)
-                        .ok_or(Error::ExactOverflow("prefix dot"))?;
-                    det = det
-                        .checked_add(term)
-                        .ok_or(Error::ExactOverflow("prefix dot"))?;
+                let mut det = S::zero();
+                for (i, c) in self.cof.iter().enumerate() {
+                    let term = c.mul_checked(&S::from_elem(data[i * n + col]), "prefix dot")?;
+                    det = det.add_checked(&term, "prefix dot")?;
                 }
-                let signed = if negative { -det } else { det };
-                acc = acc
-                    .checked_add(signed)
-                    .ok_or(Error::ExactOverflow("radic sum"))?;
+                let signed = if negative { det.neg_checked("radic sum")? } else { det };
+                S::accum_add(&mut acc, &signed, "radic sum")?;
                 negative = !negative;
                 wm.terms += 1;
             }
             wm.blocks += 1;
         }
         wm.engine_time += t0.elapsed();
-        Ok(acc)
+        Ok(S::accum_value(&acc))
     }
 }
 
-/// Borrowed lease input: the matrix plus (implicitly) the arithmetic
-/// path a chunk must be evaluated on.
+impl<S: Scalar<Elem = i64>> ChunkEngine<S> for ExactEngine<S> {
+    fn label(&self) -> &'static str {
+        match (S::KIND, self.use_prefix) {
+            (ScalarKind::Big, false) => "big-bareiss",
+            (ScalarKind::Big, true) => "big-prefix",
+            (_, false) => "exact-bareiss",
+            (_, true) => "exact-prefix",
+        }
+    }
+
+    fn run_chunk(
+        &mut self,
+        a: &MatI64,
+        table: &PascalTable,
+        chunk: Chunk,
+        wm: &mut WorkerMetrics,
+    ) -> Result<S> {
+        if self.use_prefix {
+            self.run_chunk_prefix(a, table, chunk, wm)
+        } else {
+            self.run_chunk_bareiss(a, table, chunk, wm)
+        }
+    }
+}
+
+/// Borrowed lease input: the matrix plus (implicitly) the element type
+/// a chunk must be evaluated on. Both integer scalars share the
+/// [`LeaseMatrix::Exact`] payload — the *scalar* arithmetic is the
+/// runner's axis, the *elements* are `i64` either way.
 #[derive(Clone, Copy, Debug)]
 pub enum LeaseMatrix<'a> {
     /// Float path.
     F64(&'a MatF64),
-    /// Exact `i128` path.
+    /// Integer payload (checked `i128` or `BigInt` arithmetic).
     Exact(&'a MatI64),
 }
 
-/// A chunk's deterministic partial from either arithmetic path — the
+/// A chunk's deterministic partial from any scalar of the tower — the
 /// coordinator-level twin of the jobs layer's `JobValue` (which adds
 /// the wire/journal encoding on top).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum LeasePartial {
     /// Float partial.
     F64(f64),
-    /// Exact partial.
+    /// Checked-`i128` partial.
     Exact(i128),
+    /// Big-integer partial.
+    Big(BigInt),
 }
 
-/// The remote-lease adapter: one reusable executor covering the whole
-/// engine matrix (float `cpu-lu`/`prefix`, exact Bareiss/prefix), so a
-/// lease executor — the in-process jobs runner or a fleet worker that
-/// only knows a job's spec tags — can run any chunk without matching on
-/// engine families itself.
-pub struct ChunkRunner {
-    inner: AnyRunner,
-}
-
-enum AnyRunner {
-    Float(LeaseRunner),
-    Exact(ExactLeaseRunner),
+/// The remote-lease adapter: the three [`LeaseRunner`] instantiations
+/// behind one dynamically-tagged face, so a lease executor — the
+/// in-process jobs runner or a fleet worker that only knows a job's
+/// spec tags — can run any chunk without matching on scalar families
+/// itself.
+pub enum ChunkRunner {
+    /// Float engines (`cpu-lu` lanes / `prefix`).
+    F64(LeaseRunner<f64>),
+    /// Checked `i128` engines (`exact-bareiss` / `exact-prefix`).
+    I128(LeaseRunner<i128>),
+    /// Big-integer engines (`big-bareiss` / `big-prefix`).
+    Big(LeaseRunner<BigInt>),
 }
 
 impl ChunkRunner {
-    /// Build the runner a job spec calls for: `exact` selects the
-    /// `i128` path, `prefix` the prefix-factored engine over per-term
-    /// lanes; `batch` only shapes the float lane engine.
-    pub fn new(exact: bool, prefix: bool, m: usize, batch: usize) -> Self {
-        let inner = if exact {
-            AnyRunner::Exact(ExactLeaseRunner::new(m, prefix))
-        } else if prefix {
-            AnyRunner::Float(LeaseRunner::prefix(m))
-        } else {
-            AnyRunner::Float(LeaseRunner::cpu(m, batch))
-        };
-        Self { inner }
+    /// Build the runner a job spec calls for: `scalar` picks the
+    /// arithmetic, `use_prefix` the prefix-factored engine over
+    /// per-term lanes; `batch` only shapes the float lane engine.
+    pub fn new(scalar: ScalarKind, use_prefix: bool, m: usize, batch: usize) -> Self {
+        match scalar {
+            ScalarKind::F64 => ChunkRunner::F64(LeaseRunner::new(m, use_prefix, batch)),
+            ScalarKind::I128 => ChunkRunner::I128(LeaseRunner::new(m, use_prefix, batch)),
+            ScalarKind::Big => ChunkRunner::Big(LeaseRunner::new(m, use_prefix, batch)),
+        }
     }
 
     /// Engine label (metrics/CLI).
     pub fn label(&self) -> &'static str {
-        match &self.inner {
-            AnyRunner::Float(r) => r.label(),
-            AnyRunner::Exact(r) => r.label(),
+        match self {
+            ChunkRunner::F64(r) => r.label(),
+            ChunkRunner::I128(r) => r.label(),
+            ChunkRunner::Big(r) => r.label(),
+        }
+    }
+
+    /// The scalar this runner evaluates in.
+    pub fn scalar(&self) -> ScalarKind {
+        match self {
+            ChunkRunner::F64(_) => ScalarKind::F64,
+            ChunkRunner::I128(_) => ScalarKind::I128,
+            ChunkRunner::Big(_) => ScalarKind::Big,
         }
     }
 
     /// Evaluate one rank chunk to its deterministic partial. Errors if
-    /// the matrix's arithmetic path does not match the runner's.
+    /// the matrix's element type does not match the runner's scalar.
     pub fn run_chunk(
         &mut self,
         a: LeaseMatrix<'_>,
         table: &PascalTable,
         chunk: Chunk,
     ) -> Result<(LeasePartial, WorkerMetrics)> {
-        match (&mut self.inner, a) {
-            (AnyRunner::Float(r), LeaseMatrix::F64(a)) => {
+        match (self, a) {
+            (ChunkRunner::F64(r), LeaseMatrix::F64(a)) => {
                 let (v, wm) = r.run_chunk(a, table, chunk)?;
                 Ok((LeasePartial::F64(v), wm))
             }
-            (AnyRunner::Exact(r), LeaseMatrix::Exact(a)) => {
+            (ChunkRunner::I128(r), LeaseMatrix::Exact(a)) => {
                 let (v, wm) = r.run_chunk(a, table, chunk)?;
                 Ok((LeasePartial::Exact(v), wm))
+            }
+            (ChunkRunner::Big(r), LeaseMatrix::Exact(a)) => {
+                let (v, wm) = r.run_chunk(a, table, chunk)?;
+                Ok((LeasePartial::Big(v), wm))
             }
             _ => Err(Error::Job("runner/payload mismatch".into())),
         }
@@ -391,7 +527,7 @@ impl ChunkRunner {
 mod tests {
     use super::*;
     use crate::combin::combination_count;
-    use crate::linalg::{radic_det_exact, radic_det_seq};
+    use crate::linalg::{radic_det_exact, radic_det_generic, radic_det_seq};
     use crate::matrix::gen;
     use crate::testkit::TestRng;
 
@@ -405,7 +541,7 @@ mod tests {
         let seq = radic_det_seq(&a).unwrap();
         let table = PascalTable::new(10, 3).unwrap();
         let total = combination_count(10, 3).unwrap();
-        let makers: [fn(usize) -> LeaseRunner; 2] =
+        let makers: [fn(usize) -> LeaseRunner<f64>; 2] =
             [|m| LeaseRunner::cpu(m, 16), LeaseRunner::prefix];
         for mk in makers {
             let mut runner = mk(3);
@@ -431,7 +567,7 @@ mod tests {
         let a = gen::uniform(&mut TestRng::from_seed(22), 4, 11, -1.0, 1.0);
         let table = PascalTable::new(11, 4).unwrap();
         let chunk = Chunk { start: 37, len: 101 };
-        let makers: [fn(usize) -> LeaseRunner; 2] =
+        let makers: [fn(usize) -> LeaseRunner<f64>; 2] =
             [|m| LeaseRunner::cpu(m, 8), LeaseRunner::prefix];
         for mk in makers {
             let (v1, _) = mk(4).run_chunk(&a, &table, chunk).unwrap();
@@ -454,13 +590,61 @@ mod tests {
         let table = PascalTable::new(9, 3).unwrap();
         let total = combination_count(9, 3).unwrap();
         for use_prefix in [false, true] {
-            let mut runner = ExactLeaseRunner::new(3, use_prefix);
+            let mut runner = LeaseRunner::<i128>::new(3, use_prefix, 0);
             let mut acc: i128 = 0;
             for c in chunks_of(total, 4) {
                 let (v, _) = runner.run_chunk(&a, &table, c).unwrap();
                 acc += v;
             }
             assert_eq!(acc, want, "use_prefix={use_prefix}");
+        }
+    }
+
+    #[test]
+    fn bigint_lease_partials_sum_to_reference() {
+        let a = gen::integer(&mut TestRng::from_seed(27), 3, 9, -6, 6);
+        let want: BigInt = radic_det_generic(&a).unwrap();
+        let table = PascalTable::new(9, 3).unwrap();
+        let total = combination_count(9, 3).unwrap();
+        for use_prefix in [false, true] {
+            let mut runner = LeaseRunner::<BigInt>::new(3, use_prefix, 0);
+            let mut acc = BigInt::zero();
+            let mut terms = 0u64;
+            for c in chunks_of(total, 4) {
+                let (v, wm) = runner.run_chunk(&a, &table, c).unwrap();
+                acc = acc.add_checked(&v, "test").unwrap();
+                terms += wm.terms;
+            }
+            assert_eq!(acc, want, "{}", runner.label());
+            assert_eq!(terms as u128, total);
+        }
+    }
+
+    #[test]
+    fn overflow_error_names_the_chunk() {
+        // Entries ~9e8 with m=6: any chunk's Bareiss intermediates
+        // blow past i128; the error must carry the chunk's start rank.
+        let a = gen::integer(
+            &mut TestRng::from_seed(28),
+            6,
+            8,
+            -900_000_000,
+            900_000_000,
+        );
+        let table = PascalTable::new(8, 6).unwrap();
+        for use_prefix in [false, true] {
+            let mut runner = LeaseRunner::<i128>::new(6, use_prefix, 0);
+            let err = runner
+                .run_chunk(&a, &table, Chunk { start: 7, len: 5 })
+                .unwrap_err();
+            match err {
+                Error::ScalarOverflow { chunk: Some(start), .. } => assert_eq!(start, 7),
+                other => panic!("expected chunk-stamped overflow, got {other}"),
+            }
+            // The identical chunk computes fine in BigInt.
+            let mut wide = LeaseRunner::<BigInt>::new(6, use_prefix, 0);
+            let (v, _) = wide.run_chunk(&a, &table, Chunk { start: 7, len: 5 }).unwrap();
+            assert!(!v.is_zero());
         }
     }
 
@@ -474,7 +658,7 @@ mod tests {
         let want = radic_det_exact(&ai).unwrap();
         for prefix in [false, true] {
             // Float family sums to the sequential reference.
-            let mut fr = ChunkRunner::new(false, prefix, 3, 16);
+            let mut fr = ChunkRunner::new(ScalarKind::F64, prefix, 3, 16);
             let mut sum = NeumaierSum::new();
             for c in chunks_of(total, 4) {
                 match fr.run_chunk(LeaseMatrix::F64(&af), &table, c).unwrap() {
@@ -487,8 +671,8 @@ mod tests {
                 "{}",
                 fr.label()
             );
-            // Exact family sums to the exact reference.
-            let mut er = ChunkRunner::new(true, prefix, 3, 16);
+            // Both exact families sum to the exact reference.
+            let mut er = ChunkRunner::new(ScalarKind::I128, prefix, 3, 16);
             let mut acc: i128 = 0;
             for c in chunks_of(total, 4) {
                 match er.run_chunk(LeaseMatrix::Exact(&ai), &table, c).unwrap() {
@@ -497,10 +681,22 @@ mod tests {
                 }
             }
             assert_eq!(acc, want, "{}", er.label());
+            let mut br = ChunkRunner::new(ScalarKind::Big, prefix, 3, 16);
+            let mut big_acc = BigInt::zero();
+            for c in chunks_of(total, 4) {
+                match br.run_chunk(LeaseMatrix::Exact(&ai), &table, c).unwrap() {
+                    (LeasePartial::Big(v), _) => {
+                        big_acc = big_acc.add_checked(&v, "test").unwrap()
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            assert_eq!(big_acc, BigInt::from_i128(want), "{}", br.label());
             // Path mismatch is an error, not a wrong answer.
             let c0 = Chunk { start: 0, len: 5 };
             assert!(fr.run_chunk(LeaseMatrix::Exact(&ai), &table, c0).is_err());
             assert!(er.run_chunk(LeaseMatrix::F64(&af), &table, c0).is_err());
+            assert!(br.run_chunk(LeaseMatrix::F64(&af), &table, c0).is_err());
         }
     }
 

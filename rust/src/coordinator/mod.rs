@@ -25,7 +25,10 @@ pub mod scheduler;
 
 pub use batcher::BatchBuilder;
 pub use engine::{BlockOutcome, CpuEngine, DetEngine, PrefixEngine};
-pub use lease::{ChunkRunner, ExactLeaseRunner, LeaseMatrix, LeasePartial, LeaseRunner};
+pub use lease::{
+    ChunkEngine, ChunkRunner, ExactEngine, FloatEngine, LeaseMatrix, LeasePartial, LeaseRunner,
+    ScalarExec,
+};
 pub use metrics::{JobMetrics, WorkerMetrics};
 pub use scheduler::{JobSchedule, Schedule};
 
@@ -33,11 +36,21 @@ use crate::combin::{combination_count, PascalTable};
 use crate::linalg::NeumaierSum;
 use crate::matrix::{MatF64, MatI64};
 use crate::runtime::{resolve_artifact_dir, Dtype, Manifest};
+use crate::scalar::{BigInt, Scalar};
 use crate::{Error, Result};
 use std::path::PathBuf;
 use std::time::Instant;
 
 /// Which determinant engine evaluates batches.
+///
+/// This is the *evaluation-family* axis of the engine matrix; the
+/// orthogonal *scalar* axis ([`crate::scalar::ScalarKind`] — `f64`,
+/// checked `i128`, `BigInt`) is chosen by which entry point runs the
+/// job: [`Coordinator::radic_det`] (f64),
+/// [`Coordinator::radic_det_scalar`] and its `exact`/`big` wrappers,
+/// or — for durable jobs — the payload tag a
+/// [`crate::jobs::JobSpec`] carries. Every family serves every scalar
+/// through the one generic [`LeaseRunner`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// XLA if an artifact bucket exists for `m`, else CPU.
@@ -294,24 +307,23 @@ impl Coordinator {
         Ok(RadicOutput { det: sum.value(), terms: total, engine: "prefix", metrics: jm })
     }
 
-    /// Parallel *exact* Radić determinant for integer matrices
-    /// (Bareiss inner engine, `i128` partials, overflow-checked).
+    /// Parallel exact Radić determinant in any integer scalar of the
+    /// tower — checked `i128` ([`Self::radic_det_exact`]) or unbounded
+    /// [`BigInt`] ([`Self::radic_det_big`]) — over the same worker
+    /// loops, schedules and chunk leases as the float path.
     ///
     /// With [`EngineKind::Prefix`] the inner engine switches to exact
-    /// Bareiss *prefix cofactors* shared across each sibling block —
-    /// the integer twin of the float prefix path (no rank fallback
-    /// needed: integer arithmetic is exact, singular prefixes simply
-    /// yield zero cofactors).
-    pub fn radic_det_exact(&self, a: &MatI64) -> Result<i128> {
-        Ok(self.radic_det_exact_with_metrics(a)?.0)
-    }
-
-    /// [`Self::radic_det_exact`] plus per-worker metrics — the exact
-    /// path reports terms/chunks/blocks like the float path.
-    pub fn radic_det_exact_with_metrics(&self, a: &MatI64) -> Result<(i128, JobMetrics)> {
+    /// *prefix cofactors* shared across each sibling block — the
+    /// integer twin of the float prefix path (no rank fallback needed:
+    /// integer arithmetic is exact, singular prefixes simply yield
+    /// zero cofactors).
+    pub fn radic_det_scalar<S>(&self, a: &MatI64) -> Result<(S, JobMetrics)>
+    where
+        S: ScalarExec + Scalar<Elem = i64>,
+    {
         let (m, n) = (a.rows(), a.cols());
         if m > n {
-            return Ok((0, JobMetrics::default()));
+            return Ok((S::zero(), JobMetrics::default()));
         }
         let total = combination_count(n as u64, m as u64)?;
         if total > self.cfg.term_cap {
@@ -331,29 +343,52 @@ impl Coordinator {
         } else {
             JobSchedule::new(self.cfg.schedule, total, workers)
         };
-        let partials: Vec<Result<(i128, WorkerMetrics)>> = std::thread::scope(|scope| {
+        let partials: Vec<Result<(S, WorkerMetrics)>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
                 let table = &table;
                 let job = &job;
-                handles.push(scope.spawn(move || exact_worker_loop(w, a, table, job, use_prefix)));
+                handles.push(
+                    scope.spawn(move || scalar_worker_loop::<S>(w, a, table, job, use_prefix)),
+                );
             }
             handles
                 .into_iter()
                 .map(|h| h.join().expect("worker panicked"))
                 .collect()
         });
-        let mut acc: i128 = 0;
+        let mut acc = S::accum_new();
         let mut jm = JobMetrics::default();
         for p in partials {
             let (partial, wm) = p?;
-            acc = acc
-                .checked_add(partial)
-                .ok_or(Error::ExactOverflow("radic sum"))?;
+            S::accum_add(&mut acc, &partial, "radic sum")?;
             jm.workers.push(wm);
         }
         jm.elapsed = started.elapsed();
-        Ok((acc, jm))
+        Ok((S::accum_value(&acc), jm))
+    }
+
+    /// Parallel exact Radić determinant over checked `i128` — overflow
+    /// surfaces as [`Error::ScalarOverflow`], never a wrapped value.
+    pub fn radic_det_exact(&self, a: &MatI64) -> Result<i128> {
+        Ok(self.radic_det_scalar::<i128>(a)?.0)
+    }
+
+    /// [`Self::radic_det_exact`] plus per-worker metrics — the exact
+    /// path reports terms/chunks/blocks like the float path.
+    pub fn radic_det_exact_with_metrics(&self, a: &MatI64) -> Result<(i128, JobMetrics)> {
+        self.radic_det_scalar::<i128>(a)
+    }
+
+    /// Parallel exact Radić determinant over unbounded big integers —
+    /// the overflow-proof path for workloads past `i128`.
+    pub fn radic_det_big(&self, a: &MatI64) -> Result<BigInt> {
+        Ok(self.radic_det_scalar::<BigInt>(a)?.0)
+    }
+
+    /// [`Self::radic_det_big`] plus per-worker metrics.
+    pub fn radic_det_big_with_metrics(&self, a: &MatI64) -> Result<(BigInt, JobMetrics)> {
+        self.radic_det_scalar::<BigInt>(a)
     }
 }
 
@@ -367,7 +402,7 @@ fn worker_loop(
     table: &PascalTable,
     job: &JobSchedule,
 ) -> Result<(NeumaierSum, WorkerMetrics)> {
-    let mut runner = LeaseRunner::lanes(eng);
+    let mut runner = LeaseRunner::<f64>::lanes(eng);
     let mut acc = NeumaierSum::new();
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
@@ -390,7 +425,7 @@ fn prefix_worker_loop(
     table: &PascalTable,
     job: &JobSchedule,
 ) -> Result<(NeumaierSum, WorkerMetrics)> {
-    let mut runner = LeaseRunner::prefix(a.rows());
+    let mut runner = LeaseRunner::<f64>::prefix(a.rows());
     let mut acc = NeumaierSum::new();
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
@@ -402,28 +437,29 @@ fn prefix_worker_loop(
     Ok((acc, wm))
 }
 
-/// Exact-path worker: chunk leases on the `i128` twin
-/// ([`ExactLeaseRunner`] — per-term Bareiss, or exact prefix cofactors
-/// shared per sibling block when `use_prefix`).
-fn exact_worker_loop(
+/// Exact-path worker for any integer scalar of the tower: chunk leases
+/// on the generic [`LeaseRunner`] (per-term Bareiss, or exact prefix
+/// cofactors shared per sibling block when `use_prefix`).
+fn scalar_worker_loop<S>(
     w: usize,
     a: &MatI64,
     table: &PascalTable,
     job: &JobSchedule,
     use_prefix: bool,
-) -> Result<(i128, WorkerMetrics)> {
-    let mut runner = ExactLeaseRunner::new(a.rows(), use_prefix);
-    let mut acc: i128 = 0;
+) -> Result<(S, WorkerMetrics)>
+where
+    S: ScalarExec + Scalar<Elem = i64>,
+{
+    let mut runner = LeaseRunner::<S>::new(a.rows(), use_prefix, 0);
+    let mut acc = S::accum_new();
     let mut wm = WorkerMetrics::default();
     let mut src = job.source(w);
     while let Some(chunk) = src.next_chunk() {
         let (partial, cm) = runner.run_chunk(a, table, chunk)?;
-        acc = acc
-            .checked_add(partial)
-            .ok_or(Error::ExactOverflow("radic sum"))?;
+        S::accum_add(&mut acc, &partial, "radic sum")?;
         wm.merge(&cm);
     }
-    Ok((acc, wm))
+    Ok((S::accum_value(&acc), wm))
 }
 
 #[cfg(test)]
@@ -552,6 +588,40 @@ mod tests {
             assert_eq!(jm.total().terms as u128, 120); // C(10,3)
             assert!(jm.total().blocks > 0);
         }
+    }
+
+    #[test]
+    fn big_scalar_matches_i128_and_survives_overflow() {
+        use crate::scalar::BigInt;
+        let a = gen::integer(&mut TestRng::from_seed(10), 3, 9, -7, 7);
+        let narrow = radic_det_exact(&a).unwrap();
+        for engine in [EngineKind::Cpu, EngineKind::Prefix] {
+            let coord = Coordinator::new(CoordinatorConfig {
+                workers: 3,
+                engine,
+                schedule: Schedule::Static,
+                ..Default::default()
+            })
+            .unwrap();
+            assert_eq!(coord.radic_det_big(&a).unwrap(), BigInt::from_i128(narrow));
+        }
+        // Past i128: the checked path refuses loudly, the big path
+        // computes.
+        let wide_in = gen::integer(
+            &mut TestRng::from_seed(11),
+            6,
+            8,
+            -900_000_000,
+            900_000_000,
+        );
+        let coord = cpu_coord(2, Schedule::Static);
+        assert!(matches!(
+            coord.radic_det_exact(&wide_in),
+            Err(Error::ScalarOverflow { .. })
+        ));
+        let (det, jm) = coord.radic_det_big_with_metrics(&wide_in).unwrap();
+        assert_eq!(det.to_i128(), None, "determinant exceeds i128");
+        assert_eq!(jm.total().terms as u128, 28); // C(8,6)
     }
 
     #[test]

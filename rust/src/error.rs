@@ -50,8 +50,16 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Xla(String),
 
-    /// Exact (integer) arithmetic overflow.
-    ExactOverflow(&'static str),
+    /// Scalar arithmetic exceeded its range (e.g. an `i128` Bareiss
+    /// intermediate): a typed refusal, never a silently wrapped wrong
+    /// determinant. `--scalar big` removes the range entirely.
+    ScalarOverflow {
+        /// The computation that overflowed (`bareiss`, `radic sum`, …).
+        what: &'static str,
+        /// First rank of the offending chunk, attached by the chunk
+        /// executor when the overflow happened inside a lease.
+        chunk: Option<u128>,
+    },
 
     /// Service protocol violation.
     Protocol(String),
@@ -85,7 +93,13 @@ impl std::fmt::Display for Error {
                 "no artifact for m={m} dtype={dtype}; available: {available}"
             ),
             Error::Xla(s) => write!(f, "xla: {s}"),
-            Error::ExactOverflow(what) => write!(f, "exact arithmetic overflow in {what}"),
+            Error::ScalarOverflow { what, chunk } => {
+                write!(f, "scalar overflow in {what}")?;
+                if let Some(start) = chunk {
+                    write!(f, " (chunk starting at rank {start})")?;
+                }
+                Ok(())
+            }
             Error::Protocol(s) => write!(f, "protocol: {s}"),
             Error::Job(s) => write!(f, "job: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),
@@ -133,8 +147,12 @@ mod tests {
             "binomial overflow: C(200,100) exceeds u128"
         );
         assert_eq!(
-            Error::ExactOverflow("bareiss").to_string(),
-            "exact arithmetic overflow in bareiss"
+            Error::ScalarOverflow { what: "bareiss", chunk: None }.to_string(),
+            "scalar overflow in bareiss"
+        );
+        assert_eq!(
+            Error::ScalarOverflow { what: "radic sum", chunk: Some(37) }.to_string(),
+            "scalar overflow in radic sum (chunk starting at rank 37)"
         );
     }
 

@@ -44,8 +44,8 @@
 use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::jobs::{
-    compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, JobValue,
-    Journal, LoadedJob, Record, RunLock,
+    compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, Journal,
+    LoadedJob, Record, RunLock,
 };
 use crate::{Error, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -501,16 +501,18 @@ impl LeaseTable {
                 rec.terms, oj.plan[chunk as usize].len
             )));
         }
-        let kind_ok = matches!(
-            (&oj.spec.payload, &rec.value),
-            (JobPayload::F64(_), JobValue::F64(_)) | (JobPayload::Exact(_), JobValue::Exact(_))
-        );
-        if !kind_ok {
+        // Scalar kinds must match exactly: an `i128:` partial delivered
+        // to a `big` job (or any other mix) is a protocol violation,
+        // not something to coerce — composition rules differ per
+        // scalar, so a mixed journal could change the result.
+        if rec.value.scalar_kind() != oj.spec.payload.scalar_kind() {
             return Err(Error::Job(format!(
-                "chunk {chunk} of job {id:?}: value kind does not match the job payload"
+                "chunk {chunk} of job {id:?}: {} value does not match the job's {} scalar",
+                rec.value.scalar_kind(),
+                oj.spec.payload.scalar_kind()
             )));
         }
-        oj.journal.append(&Record::Chunk { index: chunk, rec })?;
+        oj.journal.append(&Record::Chunk { index: chunk, rec: rec.clone() })?;
         oj.completed.insert(chunk, rec);
         oj.completed_by.insert(chunk, worker.to_string());
         oj.leases.remove(&chunk);
@@ -567,7 +569,7 @@ impl LeaseTable {
 mod tests {
     use super::*;
     use crate::clock::SimClock;
-    use crate::jobs::{JobRunner, RunnerConfig};
+    use crate::jobs::{JobRunner, JobValue, RunnerConfig};
     use crate::matrix::gen;
     use crate::testkit::TestRng;
 
@@ -647,6 +649,43 @@ mod tests {
     }
 
     #[test]
+    fn big_job_drains_to_the_inprocess_value() {
+        use crate::scalar::BigInt;
+        let (_clock, table) = tmp_table("big-drain", Duration::from_secs(10));
+        // Entries large enough that only the big scalar can finish.
+        let a = gen::integer(
+            &mut TestRng::from_seed(68),
+            6,
+            8,
+            -900_000_000,
+            900_000_000,
+        );
+        let want: BigInt = crate::linalg::radic_det_generic(&a).unwrap();
+        let id = table.submit(JobPayload::Big(a), JobEngine::Prefix).unwrap();
+        let mut spec: Option<JobSpec> = None;
+        loop {
+            let g = match table.grant("w1", Some(id.as_str()), |_| spec.is_none()).unwrap() {
+                GrantOutcome::Granted(g) => g,
+                GrantOutcome::Complete => break,
+                other => panic!("{other:?}"),
+            };
+            if let Some(s) = g.spec {
+                spec = Some(s);
+            }
+            let rec = compute(spec.as_ref().unwrap(), g.chunk);
+            assert!(matches!(&rec.value, JobValue::Big(_)), "{rec:?}");
+            table.complete("w1", &id, g.chunk_index, rec).unwrap();
+        }
+        match table.store().status(&id).unwrap().value.unwrap() {
+            JobValue::Big(v) => {
+                assert_eq!(v, want);
+                assert_eq!(v.to_i128(), None, "the sweep genuinely needed big");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn expired_lease_is_regranted_and_late_complete_rejected() {
         let (clock, table) = tmp_table("expiry", Duration::from_millis(20));
         let id = submit_f64(&table, 62);
@@ -664,12 +703,14 @@ mod tests {
         assert_eq!(gb.chunk_index, ga.chunk_index, "expired chunk reassigned first");
         let rec = compute(&spec, gb.chunk);
         assert!(matches!(
-            table.complete("wb", &id, gb.chunk_index, rec).unwrap(),
+            table.complete("wb", &id, gb.chunk_index, rec.clone()).unwrap(),
             CompleteOutcome::Accepted { .. }
         ));
         // wa's late duplicate is rejected and journals nothing…
         let before = table.store().status(&id).unwrap().chunks_done;
-        let err = table.complete("wa", &id, ga.chunk_index, rec).unwrap_err();
+        let err = table
+            .complete("wa", &id, ga.chunk_index, rec.clone())
+            .unwrap_err();
         assert!(err.to_string().contains("lease lost"), "{err}");
         assert_eq!(table.store().status(&id).unwrap().chunks_done, before);
         // …while wb's retry is acknowledged idempotently.
@@ -716,13 +757,19 @@ mod tests {
         };
         let good = compute(g.spec.as_ref().unwrap(), g.chunk);
         // Wrong term count.
-        let bad_terms = ChunkRecord { terms: good.terms + 1, ..good };
+        let bad_terms = ChunkRecord { terms: good.terms + 1, ..good.clone() };
         assert!(table.complete("wa", &id, g.chunk_index, bad_terms).is_err());
-        // Wrong value kind for an f64 job.
-        let bad_kind = ChunkRecord { value: JobValue::Exact(1), ..good };
-        assert!(table.complete("wa", &id, g.chunk_index, bad_kind).is_err());
+        // Wrong value scalar for an f64 job — either exact kind.
+        for wrong in [
+            JobValue::Exact(1),
+            JobValue::Big(crate::scalar::BigInt::from_i64(1)),
+        ] {
+            let bad_kind = ChunkRecord { value: wrong, ..good.clone() };
+            let err = table.complete("wa", &id, g.chunk_index, bad_kind).unwrap_err();
+            assert!(err.to_string().contains("scalar"), "{err}");
+        }
         // Out-of-plan index.
-        assert!(table.complete("wa", &id, 10_000, good).is_err());
+        assert!(table.complete("wa", &id, 10_000, good.clone()).is_err());
         // The lease survives the rejections and the real record lands.
         assert!(matches!(
             table.complete("wa", &id, g.chunk_index, good).unwrap(),

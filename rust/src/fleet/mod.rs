@@ -25,9 +25,9 @@
 //!   Claims leases, reconstructs the job's bit-exact matrix from the
 //!   grant's embedded spec, computes chunks on the engine the spec
 //!   names ([`crate::coordinator::ChunkRunner`] — `cpu-lu`, `prefix`,
-//!   or the exact Bareiss paths), renews held leases from a heartbeat
-//!   thread, and streams partials back in the journal's bit-pattern
-//!   encoding.
+//!   or the exact Bareiss paths in checked `i128` or unbounded
+//!   `BigInt`), renews held leases from a heartbeat thread, and
+//!   streams partials back in each scalar's canonical encoding.
 //!
 //! Because chunk partials are deterministic and composition is the
 //! fixed-order fold of [`crate::jobs::compose_partials`], a determinant

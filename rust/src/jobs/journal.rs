@@ -7,14 +7,18 @@
 //!
 //! ```text
 //! raddet-job-journal v1
-//! SPEC <f64|exact> <cpu|prefix> <batch> <chunks> <m> <n> <v1,v2,…> <crc>
+//! SPEC <f64|exact|big> <cpu|prefix> <batch> <chunks> <m> <n> <v1,v2,…> <crc>
 //! CHUNK <index> <terms> <micros> <value> <crc>
 //! DONE <terms> <value> <crc>
 //! ```
 //!
-//! Float values travel as 16-hex-digit IEEE-754 bit patterns, so a
-//! journaled partial replays to the *identical* f64 — the foundation of
-//! the subsystem's bitwise resume guarantee.
+//! The first SPEC field is the job's scalar tag
+//! ([`crate::scalar::ScalarKind`]): the i128 path is written with its
+//! pre-tower spelling `exact` (and `i128` is accepted on parse), so
+//! journals cross binary versions in both directions. Float values
+//! travel as 16-hex-digit IEEE-754 bit patterns, integer values as
+//! full decimals, so a journaled partial replays to the *identical*
+//! value — the foundation of the subsystem's bitwise resume guarantee.
 //!
 //! Crash safety: records are appended in one write and fsync'd
 //! (`sync_data`) before the runner considers the chunk durable. On
@@ -25,6 +29,7 @@
 
 use super::{ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::Mat;
+use crate::scalar::ScalarKind;
 use crate::{Error, Result};
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
@@ -79,7 +84,7 @@ pub fn encode_spec_body(spec: &JobSpec) -> String {
             .map(|v| format!("{:016x}", v.to_bits()))
             .collect::<Vec<_>>()
             .join(","),
-        JobPayload::Exact(a) => a
+        JobPayload::Exact(a) | JobPayload::Big(a) => a
             .data()
             .iter()
             .map(|v| v.to_string())
@@ -162,8 +167,10 @@ fn parse_record_body(body: &str) -> Result<Record> {
             if vtoks.len() != m * n {
                 return Err(bad("value count mismatch"));
             }
-            let payload = match kind.as_str() {
-                "f64" => {
+            let scalar =
+                ScalarKind::parse(&kind).map_err(|_| bad("unknown payload kind"))?;
+            let payload = match scalar {
+                ScalarKind::F64 => {
                     let data = vtoks
                         .iter()
                         .map(|t| {
@@ -174,14 +181,18 @@ fn parse_record_body(body: &str) -> Result<Record> {
                         .collect::<Result<Vec<f64>>>()?;
                     JobPayload::F64(Mat::from_vec(m, n, data)?)
                 }
-                "exact" => {
+                ScalarKind::I128 | ScalarKind::Big => {
                     let data = vtoks
                         .iter()
                         .map(|t| t.parse::<i64>().map_err(|_| bad("bad i64 value")))
                         .collect::<Result<Vec<i64>>>()?;
-                    JobPayload::Exact(Mat::from_vec(m, n, data)?)
+                    let mat = Mat::from_vec(m, n, data)?;
+                    if scalar == ScalarKind::Big {
+                        JobPayload::Big(mat)
+                    } else {
+                        JobPayload::Exact(mat)
+                    }
                 }
-                _ => return Err(bad("unknown payload kind")),
             };
             Ok(Record::Spec(JobSpec { payload, engine, chunks, batch }))
         }
@@ -211,8 +222,8 @@ fn parse_record_body(body: &str) -> Result<Record> {
 /// needs to reproduce the chunk plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpecMeta {
-    /// Exact (`i128`) payload vs float.
-    pub exact: bool,
+    /// The scalar arithmetic the job runs in.
+    pub scalar: ScalarKind,
     /// Engine family.
     pub engine: JobEngine,
     /// Lane batch size.
@@ -261,11 +272,7 @@ fn parse_record_meta(line: &str) -> Result<MetaRecord> {
     let mut toks = body.split(' ');
     let _tag = toks.next();
     let kind = toks.next().ok_or_else(|| bad("missing kind"))?;
-    let exact = match kind {
-        "f64" => false,
-        "exact" => true,
-        _ => return Err(bad("unknown payload kind")),
-    };
+    let scalar = ScalarKind::parse(kind).map_err(|_| bad("unknown payload kind"))?;
     let engine = JobEngine::parse(toks.next().ok_or_else(|| bad("missing engine"))?)?;
     let batch: usize = parse_u(toks.next(), "batch")?;
     let chunks: usize = parse_u(toks.next(), "chunks")?;
@@ -280,7 +287,7 @@ fn parse_record_meta(line: &str) -> Result<MetaRecord> {
     if toks.next().is_some() {
         return Err(bad("trailing SPEC tokens"));
     }
-    Ok(MetaRecord::Spec(SpecMeta { exact, engine, batch, chunks, m, n }))
+    Ok(MetaRecord::Spec(SpecMeta { scalar, engine, batch, chunks, m, n }))
 }
 
 /// Replay raw journal bytes through `parse` → `(records, valid_byte_len)`.
@@ -505,6 +512,52 @@ mod tests {
     }
 
     #[test]
+    fn big_spec_roundtrips() {
+        let path = tmp("big");
+        let spec = JobSpec {
+            payload: JobPayload::Big(gen::integer(
+                &mut TestRng::from_seed(7),
+                2,
+                6,
+                -9,
+                9,
+            )),
+            engine: JobEngine::Prefix,
+            chunks: 4,
+            batch: 8,
+        };
+        let body = encode_spec_body(&spec);
+        assert!(body.starts_with("SPEC big "), "{body}");
+        Journal::create(&path, &spec).unwrap();
+        assert_eq!(Journal::replay(&path).unwrap(), vec![Record::Spec(spec)]);
+        match &Journal::replay_meta(&path).unwrap()[0] {
+            MetaRecord::Spec(s) => assert_eq!(s.scalar, ScalarKind::Big),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_exact_tag_replays_as_i128() {
+        // A journal written before the scalar tower tags the i128 path
+        // "exact"; it must replay unchanged (same payload, i128 kind).
+        let path = tmp("legacy-exact");
+        let body = "SPEC exact cpu 8 3 1 2 3,-4";
+        let line = format!("{body} {:016x}", fnv1a64(body.as_bytes()));
+        std::fs::write(&path, format!("{MAGIC}\n{line}\n")).unwrap();
+        match &Journal::replay(&path).unwrap()[0] {
+            Record::Spec(spec) => {
+                assert!(matches!(&spec.payload, JobPayload::Exact(a) if a.data() == [3, -4]));
+                assert_eq!(spec.engine, JobEngine::CpuLu);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &Journal::replay_meta(&path).unwrap()[0] {
+            MetaRecord::Spec(s) => assert_eq!(s.scalar, ScalarKind::I128),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn meta_replay_matches_full_replay() {
         let path = tmp("meta");
         let spec = sample_spec();
@@ -520,7 +573,7 @@ mod tests {
         assert_eq!(meta.len(), 3);
         match &meta[0] {
             MetaRecord::Spec(s) => {
-                assert!(!s.exact);
+                assert_eq!(s.scalar, ScalarKind::F64);
                 assert_eq!(s.engine, JobEngine::Prefix);
                 assert_eq!((s.batch, s.chunks, s.m, s.n), (16, 4, 2, 5));
             }

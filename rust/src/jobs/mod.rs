@@ -10,11 +10,11 @@
 //!    chunks ([`crate::combin::partition_total_block_aligned`] — the
 //!    same shared geometry the prefix engine's scheduler uses), fixed
 //!    once at submit time and reproducible from the spec alone.
-//! 2. Chunks are executed as coordinator leases
-//!    ([`crate::coordinator::LeaseRunner`] /
-//!    [`crate::coordinator::ExactLeaseRunner`] — both the `cpu-lu` and
-//!    `prefix` engines plug in), each producing a *deterministic*
-//!    partial: ordered accumulation per chunk, single thread.
+//! 2. Chunks are executed as coordinator leases (the scalar-generic
+//!    [`crate::coordinator::LeaseRunner`] — both the `cpu-lu` and
+//!    `prefix` engine families plug in, for every scalar of
+//!    [`crate::scalar`]), each producing a *deterministic* partial:
+//!    ordered accumulation per chunk, single thread.
 //! 3. Every completed chunk is appended to a crash-safe [`journal`]
 //!    (append-only, fsync'd, checksummed records — no dependencies,
 //!    the crate stays dep-free).
@@ -22,7 +22,8 @@
 //!    composes the partials **associatively in chunk order**, so an
 //!    interrupted sweep finishes with a result bitwise-identical to an
 //!    uninterrupted run (Neumaier fold of chunk values for f64; exact
-//!    checked `i128` sums for [`JobPayload::Exact`]).
+//!    checked `i128` sums for [`JobPayload::Exact`]; exact big-integer
+//!    sums for [`JobPayload::Big`]).
 //!
 //! Layers: [`JobStore`] (journal directory, ids, status),
 //! [`JobRunner`] (bounded-concurrency execution with
@@ -44,16 +45,23 @@ pub use store::{valid_id, JobStatus, JobStore, LoadedJob, RunLock};
 use crate::combin::{combination_count, partition_total_block_aligned, Chunk, PascalTable};
 use crate::linalg::NeumaierSum;
 use crate::matrix::{MatF64, MatI64};
+use crate::scalar::{BigInt, Scalar, ScalarKind};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
-/// The matrix a job sweeps (selects the float or exact engine family).
+/// The matrix a job sweeps, tagged with the scalar arithmetic that
+/// evaluates it (the scalar axis of the engine matrix).
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobPayload {
     /// Float path (`cpu-lu` lanes or the prefix Laplace engine).
     F64(MatF64),
-    /// Exact `i128` path (Bareiss lanes or exact prefix cofactors).
+    /// Checked-`i128` exact path (Bareiss lanes or exact prefix
+    /// cofactors; overflow is a typed error).
     Exact(MatI64),
+    /// Big-integer exact path — the same integer payload as
+    /// [`JobPayload::Exact`], evaluated in unbounded
+    /// [`crate::scalar::BigInt`] arithmetic.
+    Big(MatI64),
 }
 
 impl JobPayload {
@@ -61,25 +69,37 @@ impl JobPayload {
     pub fn shape(&self) -> (usize, usize) {
         match self {
             JobPayload::F64(a) => (a.rows(), a.cols()),
-            JobPayload::Exact(a) => (a.rows(), a.cols()),
+            JobPayload::Exact(a) | JobPayload::Big(a) => (a.rows(), a.cols()),
         }
     }
 
     /// Borrow the payload as a [`crate::coordinator::LeaseMatrix`] for
-    /// a [`crate::coordinator::ChunkRunner`].
+    /// a [`crate::coordinator::ChunkRunner`] (both integer scalars
+    /// share the `Exact` matrix shape — the runner's scalar decides
+    /// the arithmetic).
     pub fn as_lease(&self) -> crate::coordinator::LeaseMatrix<'_> {
         match self {
             JobPayload::F64(a) => crate::coordinator::LeaseMatrix::F64(a),
-            JobPayload::Exact(a) => crate::coordinator::LeaseMatrix::Exact(a),
+            JobPayload::Exact(a) | JobPayload::Big(a) => {
+                crate::coordinator::LeaseMatrix::Exact(a)
+            }
         }
     }
 
-    /// Wire/journal tag: `f64` or `exact`.
-    pub fn kind_str(&self) -> &'static str {
+    /// The scalar arithmetic this payload runs in.
+    pub fn scalar_kind(&self) -> ScalarKind {
         match self {
-            JobPayload::F64(_) => "f64",
-            JobPayload::Exact(_) => "exact",
+            JobPayload::F64(_) => ScalarKind::F64,
+            JobPayload::Exact(_) => ScalarKind::I128,
+            JobPayload::Big(_) => ScalarKind::Big,
         }
+    }
+
+    /// Wire/journal tag as emitted: `f64`, `exact` (the i128 path's
+    /// compatible spelling — see [`ScalarKind::wire_str`]) or `big`;
+    /// parsers accept `i128` as a synonym for `exact`.
+    pub fn kind_str(&self) -> &'static str {
+        self.scalar_kind().wire_str()
     }
 }
 
@@ -142,7 +162,7 @@ impl JobSpec {
     pub fn runner(&self) -> crate::coordinator::ChunkRunner {
         let (m, _) = self.shape();
         crate::coordinator::ChunkRunner::new(
-            matches!(self.payload, JobPayload::Exact(_)),
+            self.payload.scalar_kind(),
             matches!(self.engine, JobEngine::Prefix),
             m,
             self.batch,
@@ -193,13 +213,16 @@ pub fn plan_dims(m: usize, n: usize, chunks: usize) -> Result<(Vec<Chunk>, u128)
     Ok((plan, total))
 }
 
-/// One journaled partial: the chunk's deterministic value.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// One journaled partial: the chunk's deterministic value, in the
+/// scalar the job's spec names.
+#[derive(Clone, Debug, PartialEq)]
 pub enum JobValue {
     /// Float partial (journaled as the exact bit pattern).
     F64(f64),
-    /// Exact partial.
+    /// Checked-`i128` partial.
     Exact(i128),
+    /// Big-integer partial (journaled as the full decimal).
+    Big(BigInt),
 }
 
 impl From<crate::coordinator::LeasePartial> for JobValue {
@@ -207,31 +230,41 @@ impl From<crate::coordinator::LeasePartial> for JobValue {
         match p {
             crate::coordinator::LeasePartial::F64(v) => JobValue::F64(v),
             crate::coordinator::LeasePartial::Exact(v) => JobValue::Exact(v),
+            crate::coordinator::LeasePartial::Big(v) => JobValue::Big(v),
         }
     }
 }
 
 impl JobValue {
-    /// Wire/journal encoding (`f64:<16 hex bits>` / `i128:<decimal>`)
-    /// — the f64 bit pattern round-trips exactly.
-    pub fn encode(&self) -> String {
+    /// The scalar arithmetic this value belongs to.
+    pub fn scalar_kind(&self) -> ScalarKind {
         match self {
-            JobValue::F64(v) => format!("f64:{:016x}", v.to_bits()),
-            JobValue::Exact(v) => format!("i128:{v}"),
+            JobValue::F64(_) => ScalarKind::F64,
+            JobValue::Exact(_) => ScalarKind::I128,
+            JobValue::Big(_) => ScalarKind::Big,
         }
     }
 
-    /// Decode the wire/journal encoding.
+    /// Canonical wire/journal encoding (`f64:<16 hex bits>` /
+    /// `i128:<decimal>` / `big:<decimal>`) — each scalar's
+    /// [`Scalar::encode`], so an f64 round-trips bit-exactly and the
+    /// exact values round-trip verbatim.
+    pub fn encode(&self) -> String {
+        match self {
+            JobValue::F64(v) => Scalar::encode(v),
+            JobValue::Exact(v) => Scalar::encode(v),
+            JobValue::Big(v) => Scalar::encode(v),
+        }
+    }
+
+    /// Decode the wire/journal encoding, dispatching on the scalar tag.
     pub fn decode(tok: &str) -> Result<JobValue> {
-        if let Some(hex) = tok.strip_prefix("f64:") {
-            let bits = u64::from_str_radix(hex, 16)
-                .map_err(|e| Error::Job(format!("bad f64 value {tok:?}: {e}")))?;
-            Ok(JobValue::F64(f64::from_bits(bits)))
-        } else if let Some(dec) = tok.strip_prefix("i128:") {
-            let v: i128 = dec
-                .parse()
-                .map_err(|e| Error::Job(format!("bad i128 value {tok:?}: {e}")))?;
-            Ok(JobValue::Exact(v))
+        if tok.starts_with("f64:") {
+            Ok(JobValue::F64(<f64 as Scalar>::decode(tok)?))
+        } else if tok.starts_with("i128:") {
+            Ok(JobValue::Exact(<i128 as Scalar>::decode(tok)?))
+        } else if tok.starts_with("big:") {
+            Ok(JobValue::Big(<BigInt as Scalar>::decode(tok)?))
         } else {
             Err(Error::Job(format!("bad job value {tok:?}")))
         }
@@ -242,12 +275,13 @@ impl JobValue {
         match self {
             JobValue::F64(v) => format!("{v:.12e}"),
             JobValue::Exact(v) => v.to_string(),
+            JobValue::Big(v) => v.to_string(),
         }
     }
 }
 
 /// One replayed CHUNK record.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChunkRecord {
     /// The chunk's deterministic partial.
     pub value: JobValue,
@@ -259,11 +293,12 @@ pub struct ChunkRecord {
 
 /// Compose completed chunk partials into the job result.
 ///
-/// Deterministic by construction: f64 partials are folded with one
-/// Neumaier accumulator **in chunk-index order** (the map is ordered),
-/// exact partials with checked `i128` addition — so any interleaving of
-/// runs that produced the same per-chunk values yields the same bits.
-/// Errors if the map's kinds are mixed or a chunk is missing
+/// Deterministic by construction: partials are folded **in chunk-index
+/// order** (the map is ordered) under the scalar's accumulation rule —
+/// one Neumaier accumulator for f64, checked `i128` addition, exact
+/// big-integer addition — so any interleaving of runs that produced
+/// the same per-chunk values yields the same bits. Errors if the map
+/// mixes scalar kinds or a chunk is missing
 /// (`completed.len() != plan_len`).
 pub fn compose_partials(
     plan_len: usize,
@@ -278,29 +313,30 @@ pub fn compose_partials(
     let mut terms: u128 = 0;
     let mut float = NeumaierSum::new();
     let mut exact: i128 = 0;
-    let mut saw_float = false;
-    let mut saw_exact = false;
+    let mut big = BigInt::zero();
+    let mut kind: Option<ScalarKind> = None;
     for rec in completed.values() {
         terms += rec.terms as u128;
-        match rec.value {
-            JobValue::F64(v) => {
-                saw_float = true;
-                float.add(v);
-            }
+        let this = rec.value.scalar_kind();
+        if *kind.get_or_insert(this) != this {
+            return Err(Error::Job("journal mixes scalar kinds".into()));
+        }
+        match &rec.value {
+            JobValue::F64(v) => float.add(*v),
             JobValue::Exact(v) => {
-                saw_exact = true;
                 exact = exact
-                    .checked_add(v)
-                    .ok_or(Error::ExactOverflow("job compose"))?;
+                    .checked_add(*v)
+                    .ok_or(Error::ScalarOverflow { what: "job compose", chunk: None })?;
             }
+            JobValue::Big(v) => big = big.add_checked(v, "job compose")?,
         }
     }
-    match (saw_float, saw_exact) {
-        (true, true) => Err(Error::Job("journal mixes f64 and exact chunks".into())),
-        (false, true) => Ok((JobValue::Exact(exact), terms)),
+    match kind {
+        Some(ScalarKind::I128) => Ok((JobValue::Exact(exact), terms)),
+        Some(ScalarKind::Big) => Ok((JobValue::Big(big), terms)),
         // An empty (plan_len == 0) job composes to the float identity;
         // callers never hit this (plans of m ≤ n are non-empty).
-        _ => Ok((JobValue::F64(float.value()), terms)),
+        Some(ScalarKind::F64) | None => Ok((JobValue::F64(float.value()), terms)),
     }
 }
 
@@ -325,7 +361,17 @@ mod tests {
                 JobValue::Exact(v)
             );
         }
+        // Big values round-trip verbatim, including past i128.
+        let wide = BigInt::from_i128(i128::MAX)
+            .mul_checked(&BigInt::from_i64(12345), "t")
+            .unwrap();
+        for v in [BigInt::zero(), BigInt::from_i64(-7), wide] {
+            let enc = JobValue::Big(v.clone()).encode();
+            assert!(enc.starts_with("big:"), "{enc}");
+            assert_eq!(JobValue::decode(&enc).unwrap(), JobValue::Big(v));
+        }
         assert!(JobValue::decode("f64:xyz").is_err());
+        assert!(JobValue::decode("big:1.5").is_err());
         assert!(JobValue::decode("nope").is_err());
     }
 
@@ -402,5 +448,48 @@ mod tests {
         completed.insert(0, ChunkRecord { value: JobValue::F64(1.0), terms: 1, micros: 0 });
         completed.insert(1, ChunkRecord { value: JobValue::Exact(1), terms: 1, micros: 0 });
         assert!(compose_partials(2, &completed).is_err());
+        // The two integer scalars are distinct kinds too: an i128
+        // partial must never be silently folded into a big job.
+        let mut mixed = BTreeMap::new();
+        mixed.insert(
+            0,
+            ChunkRecord { value: JobValue::Big(BigInt::from_i64(1)), terms: 1, micros: 0 },
+        );
+        mixed.insert(1, ChunkRecord { value: JobValue::Exact(1), terms: 1, micros: 0 });
+        assert!(compose_partials(2, &mixed).is_err());
+    }
+
+    #[test]
+    fn compose_big_sums_past_i128() {
+        // Two partials of i128::MAX each: their sum only exists in Big.
+        let half = BigInt::from_i128(i128::MAX);
+        let mut completed = BTreeMap::new();
+        for i in 0..2u64 {
+            completed.insert(
+                i,
+                ChunkRecord { value: JobValue::Big(half.clone()), terms: 1, micros: 0 },
+            );
+        }
+        let (v, terms) = compose_partials(2, &completed).unwrap();
+        assert_eq!(terms, 2);
+        match v {
+            JobValue::Big(b) => {
+                assert_eq!(b.to_i128(), None);
+                assert_eq!(b, half.add_checked(&half, "t").unwrap());
+            }
+            other => panic!("{other:?}"),
+        }
+        // The same pair as checked i128 partials is a loud overflow.
+        let mut narrow = BTreeMap::new();
+        for i in 0..2u64 {
+            narrow.insert(
+                i,
+                ChunkRecord { value: JobValue::Exact(i128::MAX), terms: 1, micros: 0 },
+            );
+        }
+        assert!(matches!(
+            compose_partials(2, &narrow),
+            Err(Error::ScalarOverflow { .. })
+        ));
     }
 }

@@ -195,7 +195,7 @@ impl JobRunner {
                 while let Ok((idx, res, micros)) = rx.recv() {
                     match res.and_then(|(value, wm)| {
                         let rec = ChunkRecord { value, terms: wm.terms, micros };
-                        journal.append(&Record::Chunk { index: idx, rec })?;
+                        journal.append(&Record::Chunk { index: idx, rec: rec.clone() })?;
                         Ok((rec, wm))
                     }) {
                         Ok((rec, wm)) => {
@@ -309,6 +309,52 @@ mod tests {
             (JobValue::F64(a), JobValue::F64(b)) => assert_eq!(a.to_bits(), b.to_bits()),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn big_job_completes_where_i128_job_overflows() {
+        use crate::linalg::radic_det_generic;
+        use crate::scalar::BigInt;
+        // Entries ~9e8 with m=6: every chunk overflows i128.
+        let a = gen::integer(
+            &mut TestRng::from_seed(33),
+            6,
+            8,
+            -900_000_000,
+            900_000_000,
+        );
+        let want: BigInt = radic_det_generic(&a).unwrap();
+        let store = tmp_store("big");
+        let spec = JobSpec {
+            payload: JobPayload::Big(a.clone()),
+            engine: JobEngine::Prefix,
+            chunks: 4,
+            batch: 16,
+        };
+        let id = store.create(&spec).unwrap();
+        let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+            .run(&store, &id)
+            .unwrap();
+        assert!(out.status.complete);
+        match out.status.value.unwrap() {
+            JobValue::Big(v) => assert_eq!(v, want),
+            other => panic!("{other:?}"),
+        }
+        // The identical matrix as a checked-i128 job refuses loudly.
+        let narrow = JobSpec {
+            payload: JobPayload::Exact(a),
+            engine: JobEngine::Prefix,
+            chunks: 4,
+            batch: 16,
+        };
+        let nid = store.create(&narrow).unwrap();
+        let err = JobRunner::new(RunnerConfig::default())
+            .run(&store, &nid)
+            .unwrap_err();
+        assert!(
+            matches!(&err, Error::ScalarOverflow { chunk: Some(_), .. }),
+            "{err}"
+        );
     }
 
     #[test]

@@ -148,7 +148,7 @@ impl LoadedJob {
             terms_done,
             terms_total: self.total_terms,
             complete: self.done.is_some(),
-            value: self.done.map(|(v, _)| v),
+            value: self.done.as_ref().map(|(v, _)| v.clone()),
         }
     }
 }

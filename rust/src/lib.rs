@@ -22,6 +22,11 @@
 //! * [`combin`] — the paper's §4/§5 algorithms: binomial tables, Pascal
 //!   weight tables (Table 1/3), unranking (Fig. 1), ranking, successor
 //!   generation, rank-range partitioning (granularity chunks).
+//! * [`scalar`] — the scalar tower: one sealed [`scalar::Scalar`]
+//!   trait (checked ring ops, Bareiss exact division, canonical wire
+//!   encoding, accumulation rules) with `f64`, checked-`i128` and
+//!   dependency-free big-integer implementations. Every engine,
+//!   journal record and wire value above is generic over it.
 //! * [`matrix`], [`linalg`] — substrates: dense matrices, deterministic
 //!   generators, LU / Bareiss / Laplace determinants, and the sequential
 //!   Radić reference implementation.
@@ -95,6 +100,7 @@ pub mod linalg;
 pub mod matrix;
 pub mod pram;
 pub mod runtime;
+pub mod scalar;
 pub mod service;
 pub mod testkit;
 pub mod xla;

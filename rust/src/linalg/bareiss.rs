@@ -1,54 +1,73 @@
-//! Bareiss fraction-free elimination — *exact* integer determinants.
+//! Bareiss fraction-free elimination — *exact* integer determinants,
+//! generic over the scalar tower.
 //!
 //! Every intermediate in the Bareiss recurrence is an integer (each
-//! division is exact), so for `i64`-entry matrices the result over
-//! `i128` is the true determinant — no rounding at all. This is the
-//! anchor the floating-point engines are audited against, and the
-//! `ExactEngine` backend for integer workloads.
+//! division is exact), so for `i64`-entry matrices the result is the
+//! true determinant — no rounding at all. [`det_bareiss_generic`] runs
+//! the recurrence in any exact [`Scalar`]: with [`I128Checked`] every
+//! add/sub/mul is overflow-checked (a typed [`Error::ScalarOverflow`],
+//! never release-mode wrapping); with [`crate::scalar::BigInt`] the
+//! recurrence simply cannot overflow. This is the anchor the
+//! floating-point engines are audited against, and the exact engines'
+//! inner loop.
+//!
+//! [`Error`]: crate::Error
+//! [`Error::ScalarOverflow`]: crate::Error::ScalarOverflow
+//! [`I128Checked`]: crate::scalar::I128Checked
 
-use crate::{Error, Result};
+use crate::scalar::Scalar;
+use crate::Result;
 
-/// Exact determinant of a row-major `m×m` integer matrix.
+/// Exact determinant of a row-major `m×m` integer matrix in scalar `S`.
 ///
-/// Fails with [`Error::ExactOverflow`] if an intermediate exceeds
-/// `i128` (entries up to ~1e3 and m ≤ 12 are comfortably safe).
-pub fn det_bareiss(a: &[i64], m: usize) -> Result<i128> {
+/// Fails with [`Error::ScalarOverflow`](crate::Error::ScalarOverflow)
+/// if an intermediate exceeds the scalar's range (unbounded scalars
+/// never fail). For `i128`, entries up to ~1e3 and m ≤ 12 are
+/// comfortably safe.
+pub fn det_bareiss_generic<S: Scalar<Elem = i64>>(a: &[i64], m: usize) -> Result<S> {
     assert_eq!(a.len(), m * m, "square row-major buffer expected");
     if m == 0 {
-        return Ok(1);
+        return Ok(S::one());
     }
-    let mut w: Vec<i128> = a.iter().map(|&x| x as i128).collect();
-    let mut sign: i128 = 1;
-    let mut prev: i128 = 1;
+    let mut w: Vec<S> = a.iter().map(|&x| S::from_elem(x)).collect();
+    let mut negated = false;
+    let mut prev = S::one();
     for k in 0..m - 1 {
         // Pivot: any non-zero entry in column k at row ≥ k.
-        if w[k * m + k] == 0 {
-            let Some(p) = (k + 1..m).find(|&r| w[r * m + k] != 0) else {
-                return Ok(0); // whole column zero ⇒ singular
+        if w[k * m + k].is_zero() {
+            let Some(p) = (k + 1..m).find(|&r| !w[r * m + k].is_zero()) else {
+                return Ok(S::zero()); // whole column zero ⇒ singular
             };
             for c in 0..m {
                 w.swap(k * m + c, p * m + c);
             }
-            sign = -sign;
+            negated = !negated;
         }
-        let pivot = w[k * m + k];
+        let pivot = w[k * m + k].clone();
         for r in k + 1..m {
             for c in k + 1..m {
-                let hi = pivot
-                    .checked_mul(w[r * m + c])
-                    .ok_or(Error::ExactOverflow("bareiss"))?;
-                let lo = w[r * m + k]
-                    .checked_mul(w[k * m + c])
-                    .ok_or(Error::ExactOverflow("bareiss"))?;
-                let num = hi.checked_sub(lo).ok_or(Error::ExactOverflow("bareiss"))?;
-                debug_assert_eq!(num % prev, 0, "Bareiss division must be exact");
-                w[r * m + c] = num / prev;
+                let hi = pivot.mul_checked(&w[r * m + c], "bareiss")?;
+                let lo = w[r * m + k].mul_checked(&w[k * m + c], "bareiss")?;
+                // The Bareiss division is exact by construction;
+                // div_exact asserts that in debug builds.
+                w[r * m + c] = hi.sub_checked(&lo, "bareiss")?.div_exact(&prev);
             }
-            w[r * m + k] = 0;
+            w[r * m + k] = S::zero();
         }
         prev = pivot;
     }
-    Ok(sign * w[(m - 1) * m + (m - 1)])
+    let det = w[(m - 1) * m + (m - 1)].clone();
+    if negated {
+        det.neg_checked("bareiss")
+    } else {
+        Ok(det)
+    }
+}
+
+/// [`det_bareiss_generic`] over checked `i128` — the historical exact
+/// path, and the overflow-*detecting* twin of `--scalar big`.
+pub fn det_bareiss(a: &[i64], m: usize) -> Result<i128> {
+    det_bareiss_generic::<i128>(a, m)
 }
 
 #[cfg(test)]
@@ -56,7 +75,9 @@ mod tests {
     use super::*;
     use crate::linalg::det_laplace;
     use crate::matrix::gen;
+    use crate::scalar::BigInt;
     use crate::testkit::{for_all, TestRng};
+    use crate::Error;
 
     #[test]
     fn known_values() {
@@ -89,16 +110,51 @@ mod tests {
     }
 
     #[test]
-    fn large_entries_overflow_detected() {
+    fn bigint_agrees_with_i128_randomized() {
+        for_all("Bareiss BigInt == i128 (m ≤ 6)", 150, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(6);
+            let a = gen::integer(rng, m, m, -9, 9);
+            let narrow = det_bareiss(a.data(), m).unwrap();
+            let wide: BigInt = det_bareiss_generic(a.data(), m).unwrap();
+            assert_eq!(wide, BigInt::from_i128(narrow), "m={m}");
+        });
+    }
+
+    #[test]
+    fn large_entries_overflow_detected_but_bigint_survives() {
         let big = i64::MAX / 2;
         let a = vec![big; 16];
-        // Singular in exact arithmetic, but intermediates blow up first —
-        // either outcome must be loud-or-correct, never silent wrap.
+        // Singular in exact arithmetic, but i128 intermediates blow up
+        // first — either outcome must be loud-or-correct, never a
+        // silent wrap.
         match det_bareiss(&a, 4) {
             Ok(v) => assert_eq!(v, 0),
-            Err(Error::ExactOverflow(_)) => {}
+            Err(Error::ScalarOverflow { .. }) => {}
             Err(e) => panic!("unexpected error {e}"),
         }
+        // The unbounded scalar computes right through it.
+        let wide: BigInt = det_bareiss_generic(&a, 4).unwrap();
+        assert!(wide.is_zero(), "identical rows ⇒ det 0");
+    }
+
+    #[test]
+    fn overflowing_nonsingular_matrix_needs_bigint() {
+        // Entries ~1e9, m = 6: the 6×6 determinant and its Bareiss
+        // intermediates run to ~1e55 ≫ i128::MAX ≈ 1.7e38.
+        let a = gen::integer(
+            &mut TestRng::from_seed(12),
+            6,
+            6,
+            -900_000_000,
+            900_000_000,
+        );
+        assert!(matches!(
+            det_bareiss(a.data(), 6),
+            Err(Error::ScalarOverflow { .. })
+        ));
+        let wide: BigInt = det_bareiss_generic(a.data(), 6).unwrap();
+        assert!(!wide.is_zero());
+        assert_eq!(wide.to_i128(), None, "the point: it does not fit i128");
     }
 
     #[test]
@@ -111,5 +167,7 @@ mod tests {
             1, -1, -1, 1,
         ];
         assert_eq!(det_bareiss(&h, 4).unwrap(), 16);
+        let wide: BigInt = det_bareiss_generic(&h, 4).unwrap();
+        assert_eq!(wide, BigInt::from_i64(16));
     }
 }

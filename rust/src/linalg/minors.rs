@@ -31,7 +31,8 @@
 //! accurate — so the engine must fall back loudly (metered as
 //! `fallback_blocks`), never answer silently from a bad factorization.
 
-use crate::linalg::det_bareiss;
+use crate::linalg::bareiss::det_bareiss_generic;
+use crate::scalar::Scalar;
 use crate::Result;
 
 /// Reusable scratch for [`MinorsWorkspace::cofactors`] — one per
@@ -147,24 +148,26 @@ impl MinorsWorkspace {
     }
 }
 
-/// Exact integer cofactors of a row-major m×(m−1) prefix: `out[i] =
-/// (−1)^(i+m)·det(prefix without row i)` over `i128` via Bareiss, so
-/// `det([prefix | v]) = Σᵢ out[i]·vᵢ` exactly.
+/// Exact integer cofactors of a row-major m×(m−1) prefix in any exact
+/// scalar: `out[i] = (−1)^(i+m)·det(prefix without row i)` via Bareiss,
+/// so `det([prefix | v]) = Σᵢ out[i]·vᵢ` exactly. With checked `i128`
+/// an over-range minor is a typed overflow error; with
+/// [`crate::scalar::BigInt`] there is no range at all.
 ///
 /// O(m⁴) per prefix — amortized over a width-`w` sibling block this
 /// beats per-sibling Bareiss (O(m³)) whenever `w > m`. `minor_buf` is
 /// caller-owned scratch (resized to (m−1)² as needed) so block loops
 /// stay allocation-free. A rank-deficient integer prefix needs no
-/// fallback: Bareiss is exact, the cofactors simply come out zero.
-pub fn cofactors_exact(
+/// fallback: exact arithmetic makes the cofactors exactly zero.
+pub fn cofactors_generic<S: Scalar<Elem = i64>>(
     prefix: &[i64],
     m: usize,
     minor_buf: &mut Vec<i64>,
-    out: &mut [i128],
+    out: &mut [S],
 ) -> Result<()> {
     debug_assert_eq!(out.len(), m);
     if m == 1 {
-        out[0] = 1;
+        out[0] = S::one();
         return Ok(());
     }
     let w = m - 1;
@@ -180,13 +183,28 @@ pub fn cofactors_exact(
             minor_buf[t * w..(t + 1) * w].copy_from_slice(&prefix[r * w..(r + 1) * w]);
             t += 1;
         }
-        let minor = det_bareiss(minor_buf, w)?;
+        let minor: S = det_bareiss_generic(minor_buf, w)?;
         // 1-based row i = skip+1, column m: (−1)^(i+m). Magnitude needs
         // no pre-guard here: the per-sibling dot product uses checked
         // ops on the actual entries, which is strictly more permissive.
-        out[skip] = if (skip + 1 + m) % 2 == 0 { minor } else { -minor };
+        out[skip] = if (skip + 1 + m) % 2 == 0 {
+            minor
+        } else {
+            minor.neg_checked("cofactor sign")?
+        };
     }
     Ok(())
+}
+
+/// [`cofactors_generic`] over checked `i128` — the historical exact
+/// cofactor path.
+pub fn cofactors_exact(
+    prefix: &[i64],
+    m: usize,
+    minor_buf: &mut Vec<i64>,
+    out: &mut [i128],
+) -> Result<()> {
+    cofactors_generic::<i128>(prefix, m, minor_buf, out)
 }
 
 #[cfg(test)]
@@ -310,5 +328,22 @@ mod tests {
         let mut out = [0i128];
         cofactors_exact(&[], 1, &mut Vec::new(), &mut out).unwrap();
         assert_eq!(out, [1]);
+    }
+
+    #[test]
+    fn bigint_cofactors_match_i128() {
+        use crate::scalar::BigInt;
+        for_all("BigInt cofactors == i128 (m ≤ 5)", 100, |rng: &mut TestRng| {
+            let m = 2 + rng.usize_below(4);
+            let prefix = gen::integer(rng, m, m - 1, -9, 9);
+            let mut narrow = vec![0i128; m];
+            let mut wide = vec![BigInt::zero(); m];
+            let mut buf = Vec::new();
+            cofactors_exact(prefix.data(), m, &mut buf, &mut narrow).unwrap();
+            cofactors_generic::<BigInt>(prefix.data(), m, &mut buf, &mut wide).unwrap();
+            for (w, &n) in wide.iter().zip(&narrow) {
+                assert_eq!(*w, BigInt::from_i128(n), "m={m}");
+            }
+        });
     }
 }

@@ -6,9 +6,10 @@
 //! * [`laplace`] — cofactor expansion, O(m!) — the tiny-m oracle.
 //! * [`lu`] — partial-pivot Gaussian elimination, O(m³) — the CPU
 //!   engine's hot path (same algorithm as the L1 Pallas kernel).
-//! * [`bareiss`] — fraction-free elimination over `i128` — *exact* for
-//!   integer matrices; anchors the floating-point paths against
-//!   cancellation artifacts.
+//! * [`bareiss`] — fraction-free elimination, generic over the exact
+//!   scalars of [`crate::scalar`] (checked `i128` or unbounded
+//!   `BigInt`) — *exact* for integer matrices; anchors the
+//!   floating-point paths against cancellation artifacts.
 //! * [`minors`] — prefix cofactors: the m signed minors of a shared
 //!   m×(m−1) column prefix in one elimination pass, the factorization
 //!   the prefix engine amortizes across sibling combination blocks.
@@ -28,8 +29,8 @@ pub mod radic;
 
 pub use accum::NeumaierSum;
 pub use altdef::{block_sum_det, cauchy_binet_sum, gram_det};
-pub use bareiss::det_bareiss;
+pub use bareiss::{det_bareiss, det_bareiss_generic};
 pub use laplace::det_laplace;
 pub use lu::{det_lu, det_lu_inplace};
-pub use minors::{cofactors_exact, MinorsWorkspace};
-pub use radic::{radic_det_exact, radic_det_seq, radic_terms, RadicTerm};
+pub use minors::{cofactors_exact, cofactors_generic, MinorsWorkspace};
+pub use radic::{radic_det_exact, radic_det_generic, radic_det_seq, radic_terms, RadicTerm};

@@ -6,10 +6,11 @@
 //! parallel run in `coordinator` is verified against this.
 
 use super::accum::NeumaierSum;
-use super::bareiss::det_bareiss;
+use super::bareiss::det_bareiss_generic;
 use super::lu::det_lu_inplace;
 use crate::combin::{combination_count, first_member, radic_sign, successor};
 use crate::matrix::{MatF64, MatI64};
+use crate::scalar::Scalar;
 use crate::{Error, Result};
 
 /// One term of the Radić sum (exposed for introspection / the service).
@@ -59,14 +60,18 @@ pub fn radic_det_seq(a: &MatF64) -> Result<f64> {
     Ok(acc.value())
 }
 
-/// Exact Radić determinant for integer matrices (Bareiss inner engine).
+/// Sequential exact Radić determinant in any integer scalar of the
+/// tower (Bareiss inner engine, scalar-accumulated sum).
 ///
-/// The rounding-free anchor: float paths are audited against this on
-/// integer workloads. Fails loudly on `i128` overflow (term or sum).
-pub fn radic_det_exact(a: &MatI64) -> Result<i128> {
+/// One implementation serves both exact arithmetics: with checked
+/// `i128` any over-range term or sum is a typed
+/// [`Error::ScalarOverflow`](crate::Error::ScalarOverflow); with
+/// [`crate::scalar::BigInt`] the sweep is overflow-proof. The parallel
+/// engines are audited against this on integer workloads.
+pub fn radic_det_generic<S: Scalar<Elem = i64>>(a: &MatI64) -> Result<S> {
     let (m, n) = (a.rows(), a.cols());
     if m > n {
-        return Ok(0);
+        return Ok(S::zero());
     }
     let total = combination_count(n as u64, m as u64)?;
     if total > SEQ_TERM_CAP {
@@ -79,19 +84,28 @@ pub fn radic_det_exact(a: &MatI64) -> Result<i128> {
     }
     let mut cols = first_member(m as u64);
     let mut scratch = vec![0i64; m * m];
-    let mut acc: i128 = 0;
+    let mut acc = S::accum_new();
     loop {
         a.gather_cols_into(&cols, &mut scratch);
-        let det = det_bareiss(&scratch, m)?;
-        let signed = if radic_sign(&cols) > 0.0 { det } else { -det };
-        acc = acc
-            .checked_add(signed)
-            .ok_or(Error::ExactOverflow("radic sum"))?;
+        let det: S = det_bareiss_generic(&scratch, m)?;
+        let signed = if radic_sign(&cols) > 0.0 {
+            det
+        } else {
+            det.neg_checked("radic sum")?
+        };
+        S::accum_add(&mut acc, &signed, "radic sum")?;
         if !successor(&mut cols, n as u64) {
             break;
         }
     }
-    Ok(acc)
+    Ok(S::accum_value(&acc))
+}
+
+/// Exact Radić determinant over checked `i128`
+/// ([`radic_det_generic`]) — the rounding-free anchor; fails loudly on
+/// overflow (term or sum) instead of wrapping.
+pub fn radic_det_exact(a: &MatI64) -> Result<i128> {
+    radic_det_generic::<i128>(a)
 }
 
 /// Enumerate every term (tiny problems only — introspection, tests).
@@ -171,6 +185,34 @@ mod tests {
             let tol = 1e-9 * exact.abs().max(100.0);
             assert!((float - exact).abs() < tol, "m={m} n={n}: {float} vs {exact}");
         });
+    }
+
+    #[test]
+    fn bigint_matches_i128_and_survives_overflow() {
+        use crate::scalar::BigInt;
+        // Agreement wherever i128 fits…
+        for_all("radic BigInt == i128", 60, |rng: &mut TestRng| {
+            let m = 1 + rng.usize_below(4);
+            let n = m + rng.usize_below(4);
+            let a = gen::integer(rng, m, n, -6, 6);
+            let narrow = radic_det_exact(&a).unwrap();
+            let wide: BigInt = radic_det_generic(&a).unwrap();
+            assert_eq!(wide, BigInt::from_i128(narrow), "m={m} n={n}");
+        });
+        // …and where i128 overflows, BigInt answers instead of erring.
+        let a = gen::integer(
+            &mut TestRng::from_seed(13),
+            6,
+            7,
+            -900_000_000,
+            900_000_000,
+        );
+        assert!(matches!(
+            radic_det_exact(&a),
+            Err(Error::ScalarOverflow { .. })
+        ));
+        let wide: BigInt = radic_det_generic(&a).unwrap();
+        assert_eq!(wide.to_i128(), None, "determinant exceeds i128");
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! The float scalar: plain IEEE-754 `f64` with Neumaier accumulation
+//! and the bit-pattern wire encoding (docs/PROTOCOL.md §1.3).
+//!
+//! Float arithmetic has no overflow *error* — it saturates to ±inf —
+//! so the checked ops are infallible; what the float path guarantees
+//! instead is **bit determinism**: rank-ordered compensated
+//! accumulation and a lossless encoding, which together make a resumed
+//! or fleet-sharded sweep land on the identical 64 bits.
+
+use super::{Scalar, ScalarKind};
+use crate::linalg::NeumaierSum;
+use crate::{Error, Result};
+
+impl Scalar for f64 {
+    type Elem = f64;
+    type Accum = NeumaierSum;
+
+    const KIND: ScalarKind = ScalarKind::F64;
+
+    fn from_elem(e: f64) -> f64 {
+        e
+    }
+
+    fn zero() -> f64 {
+        0.0
+    }
+
+    fn one() -> f64 {
+        1.0
+    }
+
+    fn is_zero(&self) -> bool {
+        *self == 0.0
+    }
+
+    fn neg_checked(&self, _what: &'static str) -> Result<f64> {
+        Ok(-*self)
+    }
+
+    fn add_checked(&self, rhs: &f64, _what: &'static str) -> Result<f64> {
+        Ok(*self + *rhs)
+    }
+
+    fn sub_checked(&self, rhs: &f64, _what: &'static str) -> Result<f64> {
+        Ok(*self - *rhs)
+    }
+
+    fn mul_checked(&self, rhs: &f64, _what: &'static str) -> Result<f64> {
+        Ok(*self * *rhs)
+    }
+
+    fn div_exact(&self, rhs: &f64) -> f64 {
+        *self / *rhs
+    }
+
+    fn accum_new() -> NeumaierSum {
+        NeumaierSum::new()
+    }
+
+    fn accum_add(acc: &mut NeumaierSum, x: &f64, _what: &'static str) -> Result<()> {
+        acc.add(*x);
+        Ok(())
+    }
+
+    fn accum_value(acc: &NeumaierSum) -> f64 {
+        acc.value()
+    }
+
+    fn encode(&self) -> String {
+        format!("f64:{:016x}", self.to_bits())
+    }
+
+    fn decode(tok: &str) -> Result<f64> {
+        let hex = tok
+            .strip_prefix("f64:")
+            .ok_or_else(|| Error::Job(format!("bad f64 value {tok:?}")))?;
+        let bits = u64::from_str_radix(hex, 16)
+            .map_err(|e| Error::Job(format!("bad f64 value {tok:?}: {e}")))?;
+        Ok(f64::from_bits(bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoding_is_bit_exact() {
+        for v in [0.0f64, -0.0, 1.5, -2.75e-300, f64::INFINITY, f64::NAN] {
+            let back = <f64 as Scalar>::decode(&v.encode()).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{}", v.encode());
+        }
+        assert!(<f64 as Scalar>::decode("f64:xyz").is_err());
+        assert!(<f64 as Scalar>::decode("i128:1").is_err());
+    }
+
+    #[test]
+    fn accumulation_is_neumaier() {
+        // The canonical compensation example a naïve sum gets wrong.
+        let mut acc = <f64 as Scalar>::accum_new();
+        for x in [1.0f64, 1e100, 1.0, -1e100] {
+            <f64 as Scalar>::accum_add(&mut acc, &x, "t").unwrap();
+        }
+        assert_eq!(<f64 as Scalar>::accum_value(&acc), 2.0);
+    }
+}

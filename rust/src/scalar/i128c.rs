@@ -1,0 +1,121 @@
+//! The fixed-width exact scalar: `i128` with every ring op checked.
+//!
+//! This is the pre-tower `exact` path, hardened: where the old twin
+//! stack could (in principle) wrap in release builds at any raw
+//! arithmetic site, every add/sub/mul here goes through the standard
+//! library's checked ops and surfaces [`crate::Error::ScalarOverflow`]
+//! — a loud, typed refusal instead of a silently wrong determinant.
+//! Workloads whose intermediates exceed `i128` belong on
+//! [`super::BigInt`] (`--scalar big`).
+
+use super::{overflow, Scalar, ScalarKind};
+use crate::{Error, Result};
+
+impl Scalar for i128 {
+    type Elem = i64;
+    /// Running checked sum (the value itself).
+    type Accum = i128;
+
+    const KIND: ScalarKind = ScalarKind::I128;
+
+    fn from_elem(e: i64) -> i128 {
+        e as i128
+    }
+
+    fn zero() -> i128 {
+        0
+    }
+
+    fn one() -> i128 {
+        1
+    }
+
+    fn is_zero(&self) -> bool {
+        *self == 0
+    }
+
+    fn neg_checked(&self, what: &'static str) -> Result<i128> {
+        // The one asymmetric edge of two's complement: −i128::MIN does
+        // not exist. A wrapped sign flip would be a *wrong journaled
+        // partial*, so this is checked like every other op.
+        i128::checked_neg(*self).ok_or_else(|| overflow(what))
+    }
+
+    fn add_checked(&self, rhs: &i128, what: &'static str) -> Result<i128> {
+        i128::checked_add(*self, *rhs).ok_or_else(|| overflow(what))
+    }
+
+    fn sub_checked(&self, rhs: &i128, what: &'static str) -> Result<i128> {
+        i128::checked_sub(*self, *rhs).ok_or_else(|| overflow(what))
+    }
+
+    fn mul_checked(&self, rhs: &i128, what: &'static str) -> Result<i128> {
+        i128::checked_mul(*self, *rhs).ok_or_else(|| overflow(what))
+    }
+
+    fn div_exact(&self, rhs: &i128) -> i128 {
+        debug_assert!(*rhs != 0 && *self % *rhs == 0, "inexact Bareiss division");
+        *self / *rhs
+    }
+
+    fn accum_new() -> i128 {
+        0
+    }
+
+    fn accum_add(acc: &mut i128, x: &i128, what: &'static str) -> Result<()> {
+        *acc = i128::checked_add(*acc, *x).ok_or_else(|| overflow(what))?;
+        Ok(())
+    }
+
+    fn accum_value(acc: &i128) -> i128 {
+        *acc
+    }
+
+    fn encode(&self) -> String {
+        format!("i128:{self}")
+    }
+
+    fn decode(tok: &str) -> Result<i128> {
+        let dec = tok
+            .strip_prefix("i128:")
+            .ok_or_else(|| Error::Job(format!("bad i128 value {tok:?}")))?;
+        dec.parse()
+            .map_err(|e| Error::Job(format!("bad i128 value {tok:?}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_is_a_typed_error_not_a_wrap() {
+        let max = i128::MAX;
+        assert!(matches!(
+            max.add_checked(&1, "t"),
+            Err(Error::ScalarOverflow { what: "t", .. })
+        ));
+        assert!(matches!(max.mul_checked(&2, "t"), Err(Error::ScalarOverflow { .. })));
+        assert!(matches!(
+            i128::MIN.sub_checked(&1, "t"),
+            Err(Error::ScalarOverflow { .. })
+        ));
+        let mut acc = i128::MAX;
+        assert!(<i128 as Scalar>::accum_add(&mut acc, &1, "t").is_err());
+        // Negation is checked too: −i128::MIN does not exist.
+        assert!(matches!(
+            i128::MIN.neg_checked("t"),
+            Err(Error::ScalarOverflow { .. })
+        ));
+        assert_eq!(i128::MAX.neg_checked("t").unwrap(), -i128::MAX);
+    }
+
+    #[test]
+    fn encoding_roundtrips_extremes() {
+        for v in [0i128, -1, 42, i128::MAX, i128::MIN] {
+            assert_eq!(<i128 as Scalar>::decode(&v.encode()).unwrap(), v);
+        }
+        assert!(<i128 as Scalar>::decode("i128:nope").is_err());
+        assert!(<i128 as Scalar>::decode("big:1").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! The scalar tower — one arithmetic abstraction under every engine.
+//!
+//! The Radić sweep is arithmetic-agnostic: the C(n,m) rank-space
+//! partition, prefix cofactor sharing and the chunk/lease fabric are
+//! identical whether a term is evaluated in `f64`, `i128` or arbitrary
+//! precision. This module is the one place that *difference* lives: a
+//! sealed [`Scalar`] trait (ring ops, exact division for Bareiss,
+//! canonical wire/journal encoding, accumulation rules) with three
+//! implementations:
+//!
+//! * [`F64`] (= `f64`) — the float path. Ops are plain IEEE-754 (they
+//!   saturate to ±inf rather than error); accumulation is
+//!   Neumaier-compensated ([`crate::linalg::NeumaierSum`]), and the
+//!   canonical encoding is the 16-hex-digit bit pattern of
+//!   docs/PROTOCOL.md §1.3, so values round-trip bit-exactly.
+//! * [`I128Checked`] (= `i128`) — the fixed-width exact path. Every
+//!   add/sub/mul is checked: overflow surfaces as
+//!   [`Error::ScalarOverflow`], never as a silently wrapped (wrong)
+//!   determinant.
+//! * [`BigInt`] — unbounded sign-and-magnitude integers (`Vec<u64>`
+//!   limbs, dependency-free — the crate keeps its offline, zero-dep
+//!   build). The overflow-proof scalar for production exact sweeps.
+//!
+//! Everything above — generic Bareiss and prefix cofactors
+//! ([`crate::linalg`]), the generic chunk engine
+//! ([`crate::coordinator::LeaseRunner`]), journal records, SPEC bodies
+//! and `LEASE COMPLETE` values — is written once against this trait.
+//! Adding a fourth scalar (rationals, f32 lanes, polynomial entries) is
+//! one new file here plus a [`ScalarKind`] tag.
+//!
+//! The trait is **sealed**: the engine matrix, the wire grammar and the
+//! journal format enumerate scalars by [`ScalarKind`], so out-of-crate
+//! implementations could not be routed anyway.
+
+mod bigint;
+mod f64s;
+mod i128c;
+
+pub use bigint::BigInt;
+
+use crate::{Error, Result};
+
+/// `f64` is the float scalar (see [`Scalar`] docs).
+pub type F64 = f64;
+/// `i128` with every ring op checked is the fixed-width exact scalar.
+pub type I128Checked = i128;
+
+mod private {
+    /// Seals [`super::Scalar`]: the scalar set is a closed enumeration
+    /// (see module docs).
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for i128 {}
+    impl Sealed for super::BigInt {}
+}
+
+/// The closed set of scalar arithmetics, as tagged on the wire and in
+/// job journals (`SPEC` kind field, value-encoding prefixes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScalarKind {
+    /// IEEE-754 double (compensated accumulation, bit-pattern encoding).
+    F64,
+    /// Checked 128-bit integers (overflow is a typed error).
+    I128,
+    /// Unbounded big integers (sign + `u64` limbs).
+    Big,
+}
+
+impl ScalarKind {
+    /// Canonical wire/journal tag: `f64`, `i128` or `big`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScalarKind::F64 => "f64",
+            ScalarKind::I128 => "i128",
+            ScalarKind::Big => "big",
+        }
+    }
+
+    /// Parse a wire/journal tag. `exact` is accepted as an alias for
+    /// `i128` — it is what pre-tower journals contain and what
+    /// [`Self::wire_str`] still emits for them.
+    pub fn parse(tok: &str) -> Result<ScalarKind> {
+        match tok {
+            "f64" => Ok(ScalarKind::F64),
+            "i128" | "exact" => Ok(ScalarKind::I128),
+            "big" => Ok(ScalarKind::Big),
+            other => Err(Error::Job(format!("unknown scalar kind {other:?}"))),
+        }
+    }
+
+    /// The tag *emitted* into SPEC records and `JOB SUBMIT` frames.
+    /// For `i128` this stays the pre-tower spelling `exact`, so
+    /// mixed-version fleets interoperate: an old worker can parse a
+    /// new server's grants, and journals written by the new binary for
+    /// i128 jobs replay on the old one. ([`Self::parse`] accepts both
+    /// spellings either way; `f64`/`big` have no legacy form.)
+    pub fn wire_str(&self) -> &'static str {
+        match self {
+            ScalarKind::I128 => "exact",
+            other => other.as_str(),
+        }
+    }
+
+}
+
+impl std::fmt::Display for ScalarKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One value in the Radić sum — the arithmetic a sweep runs in.
+///
+/// The checked ops (`add_checked` / `sub_checked` / `mul_checked`)
+/// return [`Error::ScalarOverflow`] when the scalar's range is
+/// exceeded; scalars without a range ([`F64`] saturates, [`BigInt`]
+/// grows) simply never fail them. `div_exact` is the Bareiss
+/// fraction-free division: callers guarantee the quotient is exact, so
+/// it is infallible (debug builds assert exactness).
+///
+/// Accumulation is part of the contract because it fixes the *bits* of
+/// a chunk partial: [`F64`] accumulates with Neumaier compensation in
+/// rank order, the exact scalars with (checked) integer addition. The
+/// journal's bitwise-resume guarantee rests on every executor using
+/// these rules and no others.
+pub trait Scalar:
+    private::Sealed + Clone + std::fmt::Debug + PartialEq + Send + Sync + 'static
+{
+    /// Matrix element type a job of this scalar carries (`f64` for the
+    /// float path, `i64` for both exact paths).
+    type Elem: Copy + std::fmt::Debug + PartialEq + Send + Sync + 'static;
+
+    /// Deterministic running-sum state (Neumaier for `f64`, a checked
+    /// running value for the exact scalars).
+    type Accum: Send;
+
+    /// The wire/journal tag this scalar answers to.
+    const KIND: ScalarKind;
+
+    /// Lift one matrix element into the scalar.
+    fn from_elem(e: Self::Elem) -> Self;
+
+    /// Additive identity.
+    fn zero() -> Self;
+
+    /// Multiplicative identity.
+    fn one() -> Self;
+
+    /// Is this the additive identity?
+    fn is_zero(&self) -> bool;
+
+    /// Checked negation — checked like every other ring op because it
+    /// is *not* total on two's-complement scalars (`-i128::MIN`
+    /// overflows; unbounded and float scalars never fail).
+    fn neg_checked(&self, what: &'static str) -> Result<Self>;
+
+    /// Checked addition; `what` names the computation for the error.
+    fn add_checked(&self, rhs: &Self, what: &'static str) -> Result<Self>;
+
+    /// Checked subtraction.
+    fn sub_checked(&self, rhs: &Self, what: &'static str) -> Result<Self>;
+
+    /// Checked multiplication.
+    fn mul_checked(&self, rhs: &Self, what: &'static str) -> Result<Self>;
+
+    /// Exact division (Bareiss: the division is guaranteed exact).
+    fn div_exact(&self, rhs: &Self) -> Self;
+
+    /// Fresh accumulator.
+    fn accum_new() -> Self::Accum;
+
+    /// Fold one term into the accumulator (checked for exact scalars).
+    fn accum_add(acc: &mut Self::Accum, x: &Self, what: &'static str) -> Result<()>;
+
+    /// The accumulated value.
+    fn accum_value(acc: &Self::Accum) -> Self;
+
+    /// Canonical tagged wire/journal encoding (`f64:<16 hex>`,
+    /// `i128:<decimal>`, `big:<decimal>`) — must round-trip exactly
+    /// through [`Scalar::decode`].
+    fn encode(&self) -> String;
+
+    /// Decode the canonical encoding (rejects other scalars' tags).
+    fn decode(tok: &str) -> Result<Self>;
+}
+
+/// The [`Error::ScalarOverflow`] constructor every checked op uses
+/// (chunk attribution is added higher up, where the chunk is known).
+pub(crate) fn overflow(what: &'static str) -> Error {
+    Error::ScalarOverflow { what, chunk: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tags_roundtrip_and_alias() {
+        for kind in [ScalarKind::F64, ScalarKind::I128, ScalarKind::Big] {
+            assert_eq!(ScalarKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        // Legacy journals tag the i128 path "exact".
+        assert_eq!(ScalarKind::parse("exact").unwrap(), ScalarKind::I128);
+        assert!(ScalarKind::parse("f32").is_err());
+        // The emitted tag stays wire-compatible with pre-tower peers,
+        // and round-trips through parse for every kind.
+        assert_eq!(ScalarKind::I128.wire_str(), "exact");
+        for kind in [ScalarKind::F64, ScalarKind::I128, ScalarKind::Big] {
+            assert_eq!(ScalarKind::parse(kind.wire_str()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn encodings_are_tag_disjoint() {
+        let f = 1.5f64.encode();
+        let i = 2i128.encode();
+        let b = BigInt::from_i64(3).encode();
+        assert!(f.starts_with("f64:"), "{f}");
+        assert!(i.starts_with("i128:"), "{i}");
+        assert!(b.starts_with("big:"), "{b}");
+        // Cross-decoding must fail: a big job cannot silently accept an
+        // i128-encoded partial and vice versa.
+        assert!(<f64 as Scalar>::decode(&i).is_err());
+        assert!(<i128 as Scalar>::decode(&b).is_err());
+        assert!(<BigInt as Scalar>::decode(&f).is_err());
+    }
+
+    #[test]
+    fn generic_ring_identities() {
+        fn check<S: Scalar>(x: S) {
+            assert_eq!(x.add_checked(&S::zero(), "t").unwrap(), x);
+            assert_eq!(x.mul_checked(&S::one(), "t").unwrap(), x);
+            assert_eq!(x.sub_checked(&x, "t").unwrap(), S::zero());
+            assert!(S::zero().is_zero());
+            let minus_x = x.neg_checked("t").unwrap();
+            assert_eq!(minus_x.neg_checked("t").unwrap(), x);
+            let mut acc = S::accum_new();
+            S::accum_add(&mut acc, &x, "t").unwrap();
+            S::accum_add(&mut acc, &minus_x, "t").unwrap();
+            assert_eq!(S::accum_value(&acc), S::zero());
+            assert_eq!(S::decode(&x.encode()).unwrap(), x);
+        }
+        check(-2.75f64);
+        check(-41i128);
+        check(BigInt::from_i128(-(1i128 << 100)));
+    }
+}

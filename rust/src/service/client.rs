@@ -87,9 +87,15 @@ impl Client {
         self.job_submit_payload(JobPayload::F64(a.clone()), engine, false)
     }
 
-    /// Submit a durable exact (integer) job.
+    /// Submit a durable exact (checked `i128`) job.
     pub fn job_submit_exact(&mut self, a: &MatI64, engine: JobEngine) -> Result<String> {
         self.job_submit_payload(JobPayload::Exact(a.clone()), engine, false)
+    }
+
+    /// Submit a durable big-integer job — the overflow-proof exact
+    /// path for sweeps whose determinant may exceed `i128`.
+    pub fn job_submit_big(&mut self, a: &MatI64, engine: JobEngine) -> Result<String> {
+        self.job_submit_payload(JobPayload::Big(a.clone()), engine, false)
     }
 
     /// Submit a durable job in **fleet mode**: the server opens it for

@@ -6,8 +6,9 @@
 //! ← OK <det> <terms> <micros>
 //! → EXACT <m> <n> <i11>,…                integer path (Bareiss)
 //! ← OK <det> <terms> <micros>
-//! → JOB SUBMIT [fleet] <cpu|prefix> <f64|exact> <m> <n> <v11>,…
+//! → JOB SUBMIT [fleet] <cpu|prefix> <f64|exact|big> <m> <n> <v11>,…
 //! ← OK JOB <id>                          durable job accepted
+//!                                        (`i128` accepted = `exact`)
 //! → JOB STATUS <id>
 //! ← OK JOBSTATUS <id> <state> <chunks_done> <chunks_total>
 //!                <terms_done> <terms_total> <value|->
@@ -39,8 +40,11 @@
 //! `docs/PROTOCOL.md`.
 //!
 //! Job values travel in the journal encoding (`f64:<16 hex bits>` /
-//! `i128:<decimal>`), so a completed determinant round-trips
-//! bit-exactly. Parsing is hardened against malformed input: truncated
+//! `i128:<decimal>` / `big:<decimal>` — each scalar's canonical
+//! encoding), so a completed determinant round-trips bit-exactly and
+//! big-integer partials shard across workers losslessly. The SUBMIT
+//! kind accepts the legacy `exact` alias for `i128`. Parsing is
+//! hardened against malformed input: truncated
 //! frames, oversized dimensions, non-finite floats and hostile job ids
 //! all yield a protocol error (the server answers `ERR …` and lives on)
 //! instead of panicking the connection handler.
@@ -306,7 +310,8 @@ fn parse_job(rest: &str) -> Result<Request> {
                 .ok_or_else(|| Error::Protocol("missing values".into()))?;
             let payload = match kind {
                 "f64" => JobPayload::F64(parse_f64_matrix(m, n, body)?),
-                "exact" => JobPayload::Exact(parse_i64_matrix(m, n, body)?),
+                "exact" | "i128" => JobPayload::Exact(parse_i64_matrix(m, n, body)?),
+                "big" => JobPayload::Big(parse_i64_matrix(m, n, body)?),
                 other => {
                     return Err(Error::Protocol(format!("bad job kind {other:?}")))
                 }
@@ -461,7 +466,7 @@ impl Request {
                 let (m, n) = payload.shape();
                 let body = match payload {
                     JobPayload::F64(a) => f64_body(a),
-                    JobPayload::Exact(a) => i64_body(a),
+                    JobPayload::Exact(a) | JobPayload::Big(a) => i64_body(a),
                 };
                 format!(
                     "JOB SUBMIT {}{} {} {m} {n} {body}\n",
@@ -677,7 +682,7 @@ impl Response {
                 terms_total,
                 value,
             } => {
-                let v = value.map_or_else(|| "-".to_string(), |v| v.encode());
+                let v = value.as_ref().map_or_else(|| "-".to_string(), |v| v.encode());
                 format!(
                     "OK JOBSTATUS {id} {state} {chunks_done} {chunks_total} {terms_done} {terms_total} {v}\n"
                 )
@@ -719,8 +724,13 @@ mod tests {
             },
             Request::JobSubmit {
                 engine: JobEngine::CpuLu,
-                payload: JobPayload::Exact(i),
+                payload: JobPayload::Exact(i.clone()),
                 fleet: false,
+            },
+            Request::JobSubmit {
+                engine: JobEngine::Prefix,
+                payload: JobPayload::Big(i),
+                fleet: true,
             },
             Request::JobSubmit {
                 engine: JobEngine::Prefix,
@@ -739,6 +749,20 @@ mod tests {
             Request::parse("JOB WAIT job-x").unwrap(),
             Request::JobWait { id: "job-x".into(), timeout_ms: 60_000 }
         );
+        // The legacy `exact` kind parses as the i128 scalar.
+        match Request::parse("JOB SUBMIT cpu exact 1 2 3,-4").unwrap() {
+            Request::JobSubmit { payload: JobPayload::Exact(a), .. } => {
+                assert_eq!(a.data(), &[3, -4])
+            }
+            other => panic!("{other:?}"),
+        }
+        // And `big` selects the big-integer scalar.
+        match Request::parse("JOB SUBMIT prefix big 1 2 3,-4").unwrap() {
+            Request::JobSubmit { payload: JobPayload::Big(a), .. } => {
+                assert_eq!(a.data(), &[3, -4])
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -773,6 +797,20 @@ mod tests {
                 terms_done: 56,
                 terms_total: 56,
                 value: Some(JobValue::Exact(-987654321)),
+            },
+            Response::JobStatus {
+                id: "job-w".into(),
+                state: "complete".into(),
+                chunks_done: 2,
+                chunks_total: 2,
+                terms_done: 56,
+                terms_total: 56,
+                value: Some(JobValue::Big(
+                    crate::scalar::BigInt::from_decimal(
+                        "170141183460469231731687303715884105728999",
+                    )
+                    .unwrap(),
+                )),
             },
             Response::Pong,
             Response::Err("boom".into()),
@@ -872,6 +910,20 @@ mod tests {
                 terms: 56,
                 micros: 9,
                 value: JobValue::Exact(-987654321),
+            },
+            Request::LeaseComplete {
+                worker: "w3".into(),
+                job: "job-z".into(),
+                chunk: 2,
+                terms: 8,
+                micros: 11,
+                // A partial only the big scalar can carry.
+                value: JobValue::Big(
+                    crate::scalar::BigInt::from_decimal(
+                        "-340282366920938463463374607431768211456123",
+                    )
+                    .unwrap(),
+                ),
             },
             Request::LeaseAbandon { worker: "w1".into(), job: "job-x".into(), chunk: 7 },
         ] {
@@ -984,6 +1036,9 @@ mod tests {
             "LEASE COMPLETE w1 job-x 1 2",       // truncated frame
             "LEASE COMPLETE w1 job-x 1 2 3 nope",  // bad value encoding
             "LEASE COMPLETE w1 job-x 1 2 3 f64:0 x", // trailing tokens
+            "LEASE COMPLETE w1 job-x 1 2 3 big:",    // empty big value
+            "LEASE COMPLETE w1 job-x 1 2 3 big:1.5", // non-integer big value
+            "LEASE COMPLETE w1 job-x 1 2 3 big:--1", // double sign
             "LEASE ABANDON w1",                  // missing job
         ] {
             assert!(Request::parse(bad).is_err(), "{bad:?} should fail");

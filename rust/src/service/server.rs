@@ -300,7 +300,7 @@ fn status_to_response(status: &JobStatus, running: bool) -> Response {
         chunks_total: status.chunks_total as u64,
         terms_done: status.terms_done,
         terms_total: status.terms_total,
-        value: status.value,
+        value: status.value.clone(),
     }
 }
 

@@ -6,22 +6,34 @@
 //! Bareiss — see `fixtures/gen_golden_vectors.py`). Every engine family
 //! must reproduce the committed values **bit-for-bit**:
 //!
-//! * `exact` rows — the exact `i128` engines: per-term Bareiss lanes
-//!   (`cpu-lu` tag) and exact prefix cofactors (`prefix` tag);
+//! * `exact` rows — the exact engines in both integer scalars: per-term
+//!   Bareiss lanes (`cpu-lu` tag) and exact prefix cofactors (`prefix`
+//!   tag), run as checked `i128` *and* as `BigInt` (agreement wherever
+//!   `i128` does not overflow is part of the scalar-tower contract);
 //! * `f64pm1` rows — entries restricted to {−1, 0, +1} with m ≤ 2, for
 //!   which *every* float operation in both float engines is exact in
 //!   IEEE-754 double (all pivots and multipliers are 0 or ±1, all sums
 //!   small integers), so the float result must be bit-for-bit
 //!   `float(exact_det)` — the committed `f64_bits`. The exact engines
-//!   must match `exact_det` on these rows too, tying all four engine
+//!   must match `exact_det` on these rows too, tying all engine
 //!   families to one fixture.
+//! * `bigexact` rows — determinants (and Bareiss intermediates) beyond
+//!   `i128::MAX`: the big-integer engines must reproduce the committed
+//!   decimal verbatim, and the checked-`i128` engines must answer
+//!   [`Error::ScalarOverflow`] — a typed refusal, never a silently
+//!   wrapped value. This pins the acceptance contract of the scalar
+//!   tower.
 //!
 //! When backends multiply (GPU lanes, XLA executors), their results
 //! belong in this table, not in per-test recomputation.
+//!
+//! [`Error::ScalarOverflow`]: raddet::Error::ScalarOverflow
 
 use raddet::combin::PascalTable;
 use raddet::jobs::{compose_partials, ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
 use raddet::matrix::Mat;
+use raddet::scalar::BigInt;
+use raddet::Error;
 use std::collections::BTreeMap;
 
 const FIXTURE: &str = include_str!("fixtures/golden_vectors.tsv");
@@ -31,8 +43,20 @@ struct Row {
     m: usize,
     n: usize,
     values: Vec<i64>,
-    exact_det: i128,
+    /// Committed exact determinant as the generator's decimal string
+    /// (parsed per kind: `i128` for rows that fit, `BigInt` always).
+    exact_det: String,
     f64_bits: Option<u64>,
+}
+
+impl Row {
+    fn exact_i128(&self) -> i128 {
+        self.exact_det.parse().expect("row fits i128")
+    }
+
+    fn exact_big(&self) -> BigInt {
+        BigInt::from_decimal(&self.exact_det).expect("valid decimal")
+    }
 }
 
 fn parse_fixture() -> Vec<Row> {
@@ -48,37 +72,45 @@ fn parse_fixture() -> Vec<Row> {
         let n: usize = cols[2].parse().unwrap();
         let values: Vec<i64> = cols[3].split(',').map(|t| t.parse().unwrap()).collect();
         assert_eq!(values.len(), m * n, "bad value count: {line:?}");
-        let exact_det: i128 = cols[4].parse().unwrap();
         let f64_bits = match cols[5] {
             "-" => None,
             hex => Some(u64::from_str_radix(hex, 16).unwrap()),
         };
-        rows.push(Row { kind: cols[0].to_string(), m, n, values, exact_det, f64_bits });
+        rows.push(Row {
+            kind: cols[0].to_string(),
+            m,
+            n,
+            values,
+            exact_det: cols[4].to_string(),
+            f64_bits,
+        });
     }
-    assert!(rows.len() >= 8, "fixture unexpectedly small");
+    assert!(rows.len() >= 11, "fixture unexpectedly small");
+    assert!(
+        rows.iter().any(|r| r.kind == "bigexact"),
+        "fixture must pin past-i128 determinants"
+    );
     rows
 }
 
 /// Run a spec chunk-by-chunk through the engine its tags select and
 /// compose the partials — the identical arithmetic path durable jobs
 /// and fleet workers execute.
-fn run_spec(spec: &JobSpec) -> JobValue {
+fn run_spec(spec: &JobSpec) -> Result<JobValue, Error> {
     let (plan, _total) = spec.plan().unwrap();
     let (m, n) = spec.shape();
     let table = PascalTable::new(n as u64, m as u64).unwrap();
     let mut runner = spec.runner();
     let mut completed = BTreeMap::new();
     for (i, chunk) in plan.iter().enumerate() {
-        let (partial, wm) = runner
-            .run_chunk(spec.payload.as_lease(), &table, *chunk)
-            .unwrap();
+        let (partial, wm) = runner.run_chunk(spec.payload.as_lease(), &table, *chunk)?;
         completed.insert(
             i as u64,
             ChunkRecord { value: partial.into(), terms: wm.terms, micros: 0 },
         );
     }
     let (value, _terms) = compose_partials(plan.len(), &completed).unwrap();
-    value
+    Ok(value)
 }
 
 fn spec(payload: JobPayload, engine: JobEngine, chunks: usize) -> JobSpec {
@@ -89,18 +121,33 @@ fn spec(payload: JobPayload, engine: JobEngine, chunks: usize) -> JobSpec {
 fn golden_vectors_reproduced_bit_for_bit_by_all_engines() {
     for row in parse_fixture() {
         let ai = Mat::from_vec(row.m, row.n, row.values.clone()).unwrap();
+        let big_rows = row.kind == "bigexact";
 
-        // Exact engines: Bareiss lanes (cpu-lu) and exact prefix.
         for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
             for chunks in [1usize, 3] {
-                let got = run_spec(&spec(JobPayload::Exact(ai.clone()), engine, chunks));
+                let ctx = format!(
+                    "{} {}×{} engine={engine:?} chunks={chunks}",
+                    row.kind, row.m, row.n
+                );
+                // Big-integer engines must reproduce every row.
+                let got = run_spec(&spec(JobPayload::Big(ai.clone()), engine, chunks)).unwrap();
                 match got {
-                    JobValue::Exact(v) => assert_eq!(
-                        v, row.exact_det,
-                        "{} {}×{} engine={engine:?} chunks={chunks}",
-                        row.kind, row.m, row.n
-                    ),
-                    other => panic!("{other:?}"),
+                    JobValue::Big(v) => assert_eq!(v, row.exact_big(), "{ctx}"),
+                    other => panic!("{ctx}: {other:?}"),
+                }
+                // Checked-i128 engines: verbatim where the value fits,
+                // a typed overflow where it does not.
+                let narrow = run_spec(&spec(JobPayload::Exact(ai.clone()), engine, chunks));
+                if big_rows {
+                    assert!(
+                        matches!(&narrow, Err(Error::ScalarOverflow { .. })),
+                        "{ctx}: i128 must refuse loudly, got {narrow:?}"
+                    );
+                } else {
+                    match narrow.unwrap() {
+                        JobValue::Exact(v) => assert_eq!(v, row.exact_i128(), "{ctx}"),
+                        other => panic!("{ctx}: {other:?}"),
+                    }
                 }
             }
         }
@@ -115,7 +162,8 @@ fn golden_vectors_reproduced_bit_for_bit_by_all_engines() {
             .unwrap();
             for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
                 for chunks in [1usize, 3] {
-                    let got = run_spec(&spec(JobPayload::F64(af.clone()), engine, chunks));
+                    let got =
+                        run_spec(&spec(JobPayload::F64(af.clone()), engine, chunks)).unwrap();
                     match got {
                         JobValue::F64(v) => assert_eq!(
                             v.to_bits(),
@@ -136,16 +184,16 @@ fn golden_vectors_reproduced_bit_for_bit_by_all_engines() {
     }
 }
 
-/// The committed `f64_bits` must themselves be `float(exact_det)` — a
-/// self-consistency guard on the fixture file (catches a hand-edited
-/// row drifting).
+/// The committed `f64_bits` must themselves be `float(exact_det)`, and
+/// the kinds must honour their own preconditions — a self-consistency
+/// guard on the fixture file (catches a hand-edited row drifting).
 #[test]
 fn golden_vector_fixture_is_self_consistent() {
     for row in parse_fixture() {
         if let Some(bits) = row.f64_bits {
             assert_eq!(
                 bits,
-                (row.exact_det as f64).to_bits(),
+                (row.exact_i128() as f64).to_bits(),
                 "{} {}×{}: f64_bits column disagrees with exact_det",
                 row.kind,
                 row.m,
@@ -153,13 +201,28 @@ fn golden_vector_fixture_is_self_consistent() {
             );
         }
         match row.kind.as_str() {
-            "exact" => assert!(row.f64_bits.is_none()),
+            "exact" => {
+                assert!(row.f64_bits.is_none());
+                assert!(
+                    row.exact_det.parse::<i128>().is_ok(),
+                    "exact rows must fit i128"
+                );
+            }
             "f64pm1" => {
                 assert!(row.m <= 2, "float-exactness argument needs m ≤ 2");
                 assert!(
                     row.values.iter().all(|v| (-1..=1).contains(v)),
                     "float-exactness argument needs entries in {{-1,0,1}}"
                 );
+            }
+            "bigexact" => {
+                assert!(row.f64_bits.is_none());
+                assert!(
+                    row.exact_det.parse::<i128>().is_err(),
+                    "bigexact rows must exceed i128 — that is their point"
+                );
+                // And the decimal must round-trip through BigInt.
+                assert_eq!(row.exact_big().to_string(), row.exact_det);
             }
             other => panic!("unknown fixture kind {other:?}"),
         }

@@ -67,7 +67,7 @@ fn xla_engine_without_artifacts_is_a_config_error() {
 #[test]
 fn coordinator_worker_errors_propagate() {
     // An integer job whose Bareiss terms overflow i128 must surface
-    // ExactOverflow from inside a worker thread, not panic.
+    // Error::ScalarOverflow from inside a worker thread, not panic.
     let coord = Coordinator::new(CoordinatorConfig {
         workers: 2,
         engine: EngineKind::Cpu,

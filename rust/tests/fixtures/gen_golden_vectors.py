@@ -14,6 +14,11 @@ Row kinds:
            multipliers are 0 or +-1, all sums are small integers), so
            the f64 result is bit-for-bit float(exact_det) — committed
            as `f64_bits`. The exact engines must match `exact_det` too.
+  bigexact — integer matrix whose exact determinant (and Bareiss
+           intermediates) exceed i128::MAX: the big-integer engines
+           must reproduce `exact_det` verbatim, while the checked-i128
+           engines must answer Error::ScalarOverflow — never a wrapped
+           value. The generator asserts |det| > i128::MAX for each row.
 
 Columns (tab-separated):
   kind  m  n  values(comma,row-major)  exact_det  f64_bits(hex or '-')
@@ -34,6 +39,15 @@ def lcg(seed):
 def gen_matrix(seed, m, n, lo, hi):
     g = lcg(seed)
     return [[lo + next(g) % (hi - lo + 1) for _ in range(n)] for _ in range(m)]
+
+def gen_matrix_wide(seed, m, n, lo, hi):
+    # lcg() yields 31-bit values (state >> 33), so for ranges wider than
+    # 2^31 a single draw would collapse the entries into a 2^31-wide
+    # band at `lo`. Combine two draws into 62 bits before the modulo.
+    g = lcg(seed)
+    def draw():
+        return (next(g) << 31) | next(g)
+    return [[lo + draw() % (hi - lo + 1) for _ in range(n)] for _ in range(m)]
 
 def minor_det(rows):
     k = len(rows)
@@ -92,6 +106,24 @@ def build_rows():
         d = radic_det(A, m, n)
         vals = ",".join(str(x) for r in A for x in r)
         rows.append(("f64pm1", m, n, vals, d, f64_bits(d)))
+
+    # Big-integer rows: entries ~1e9 and m = 6 push the determinant
+    # (and every Bareiss intermediate past the 3x3 stage) far beyond
+    # i128::MAX ~ 1.7e38 — only the big scalar can sweep these.
+    i128_max = (1 << 127) - 1
+    for seed, m, n, lo, hi in [
+        (301, 6, 8, -900_000_000, 900_000_000),
+        (302, 6, 7, -999_999_937, 999_999_937),
+        (303, 5, 9, -(10**12), 10**12),
+    ]:
+        A = gen_matrix_wide(seed, m, n, lo, hi)
+        d = radic_det(A, m, n)
+        assert abs(d) > i128_max, f"seed {seed}: det {d} unexpectedly fits i128"
+        assert any(x > 0 for r in A for x in r) and any(
+            x < 0 for r in A for x in r
+        ), f"seed {seed}: entries must be mixed-sign (range collapse?)"
+        vals = ",".join(str(x) for r in A for x in r)
+        rows.append(("bigexact", m, n, vals, d, "-"))
     return rows
 
 if __name__ == "__main__":

@@ -30,15 +30,15 @@ fn run_budgeted(store: &JobStore, id: &str, workers: usize, budget: u64) -> radd
 }
 
 fn f64_value(out: &raddet::jobs::JobOutcome) -> f64 {
-    match out.status.value.expect("complete job has a value") {
-        JobValue::F64(v) => v,
+    match out.status.value.as_ref().expect("complete job has a value") {
+        JobValue::F64(v) => *v,
         other => panic!("expected f64 value, got {other:?}"),
     }
 }
 
 fn exact_value(out: &raddet::jobs::JobOutcome) -> i128 {
-    match out.status.value.expect("complete job has a value") {
-        JobValue::Exact(v) => v,
+    match out.status.value.as_ref().expect("complete job has a value") {
+        JobValue::Exact(v) => *v,
         other => panic!("expected exact value, got {other:?}"),
     }
 }

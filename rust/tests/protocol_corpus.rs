@@ -15,8 +15,8 @@
 use raddet::clock;
 use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
 use raddet::fleet::{Worker, WorkerConfig, WorkerEvent};
-use raddet::jobs::{JobManager, JobStore};
-use raddet::service::{Server, ServerHandle, ScriptConn, ScriptTransport};
+use raddet::jobs::{JobEngine, JobManager, JobPayload, JobStore, JobValue};
+use raddet::service::{GrantReply, Server, ServerHandle, ScriptConn, ScriptTransport};
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
@@ -62,6 +62,14 @@ const HOSTILE_FRAMES: &[(&str, &str)] = &[
         "LEASE COMPLETE w1 job-x 184467440737095516199 1 1 f64:0",
         "chunk id overflows u64",
     ),
+    // --- scalar-tower value encodings ---
+    ("LEASE COMPLETE w1 job-x 0 1 1 big:", "empty big value"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 big:1.5", "non-integer big value"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 big:--12", "double-signed big value"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 big:+7", "plus-signed big value"),
+    ("LEASE COMPLETE w1 job-x 0 1 1 BIG:7", "case-sensitive scalar tag"),
+    ("JOB SUBMIT prefix bigint 2 2 1,2,3,4", "unknown scalar kind"),
+    ("JOB SUBMIT prefix big 2 2 1.5,2,3,4", "float entries in big path"),
 ];
 
 fn start_server_with_jobs(tag: &str) -> ServerHandle {
@@ -100,6 +108,37 @@ fn hostile_frame_corpus_is_soft() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert_eq!(line.trim(), "PONG");
+    handle.stop();
+}
+
+/// Mixed-scalar leases are rejected at the protocol/lease layer: a
+/// well-formed `LEASE COMPLETE` whose value carries the *wrong* scalar
+/// tag for the job (an `i128:` or `f64:` partial into a `big` job) is
+/// a typed refusal — nothing journaled, the connection and the lease
+/// both survive.
+#[test]
+fn mixed_scalar_lease_complete_is_rejected() {
+    let handle = start_server_with_jobs("mixed-scalar");
+    let addr = handle.addr().to_string();
+    let mut c = raddet::service::Client::connect(&addr).unwrap();
+    let a = raddet::matrix::Mat::from_vec(2, 4, vec![3i64, 1, -2, 5, 7, -1, 4, 2]).unwrap();
+    let id = c
+        .job_submit_fleet(JobPayload::Big(a), JobEngine::Prefix)
+        .unwrap();
+    let (chunk, terms) = match c.lease_grant("wmix", Some(&id)).unwrap() {
+        GrantReply::Lease { chunk, len, .. } => (chunk, len as u64),
+        other => panic!("{other:?}"),
+    };
+    for wrong in [JobValue::Exact(1), JobValue::F64(1.0)] {
+        let err = c
+            .lease_complete("wmix", &id, chunk, terms, 1, wrong)
+            .unwrap_err();
+        assert!(err.to_string().contains("scalar"), "{err}");
+    }
+    // Nothing was journaled by the rejections.
+    let st = c.job_status(&id).unwrap();
+    assert_eq!(st.chunks_done, 0, "{st:?}");
+    c.quit();
     handle.stop();
 }
 

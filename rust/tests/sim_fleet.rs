@@ -173,12 +173,16 @@ fn sim_lease_expiry_reassigns_and_rejects_late_duplicate() {
         .run_chunk(spec_a.payload.as_lease(), &table, Chunk { start: start_b, len: len_b })
         .unwrap();
     let value: JobValue = partial.into();
-    let ack = wb.lease_complete("wb", &id, chunk_b, wm.terms, 1, value).unwrap();
+    let ack = wb
+        .lease_complete("wb", &id, chunk_b, wm.terms, 1, value.clone())
+        .unwrap();
     assert!(!ack.duplicate);
     assert_eq!(ack.chunks_done, 1);
 
     // wa's late duplicate is rejected; the journal is untouched.
-    let err = wa.lease_complete("wa", &id, chunk_a, wm.terms, 1, value).unwrap_err();
+    let err = wa
+        .lease_complete("wa", &id, chunk_a, wm.terms, 1, value.clone())
+        .unwrap_err();
     assert!(err.to_string().contains("lease lost"), "{err}");
     assert_eq!(world.store().status(&id).unwrap().chunks_done, 1);
 
@@ -367,7 +371,7 @@ fn sim_fixed_seed_replays_identical_trace_and_bits() {
     let (trace_a, value_a) = run(0xDE7E12, "sim-replay-a");
     let (trace_b, value_b) = run(0xDE7E12, "sim-replay-b");
     assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
-    assert_bits_eq(value_a, value_b);
+    assert_bits_eq(value_a.clone(), value_b);
     assert!(!trace_a.is_empty());
 
     // A different seed is allowed to schedule differently — but must

@@ -24,7 +24,9 @@ use raddet::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
 use raddet::jobs::{
     ChunkRecord, JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
 };
+use raddet::linalg::{radic_det_exact, radic_det_generic};
 use raddet::matrix::gen;
+use raddet::scalar::BigInt;
 use raddet::testkit::sim::run_random_scenario;
 use raddet::testkit::TestRng;
 use std::time::Duration;
@@ -101,6 +103,86 @@ fn seed_sweep_random_interleavings_reproduce_reference_bits() {
             );
         }
         assert!(!out.trace.is_empty(), "seed {seed}: trace must be recorded");
+    }
+}
+
+/// Cross-scalar conformance, sequential layer: `I128Checked` and
+/// `BigInt` must agree on every matrix where `i128` does not overflow
+/// (the scalar tower's core contract — one algorithm, two ranges).
+#[test]
+fn i128_and_bigint_agree_wherever_i128_fits() {
+    let mut rng = TestRng::from_seed(0x5CA1A7);
+    for trial in 0..120 {
+        let m = 1 + rng.usize_below(4);
+        let n = m + rng.usize_below(4);
+        let a = gen::integer(&mut rng, m, n, -50, 50);
+        let narrow = radic_det_exact(&a).unwrap();
+        let wide: BigInt = radic_det_generic(&a).unwrap();
+        assert_eq!(wide, BigInt::from_i128(narrow), "trial {trial}: {m}×{n}");
+    }
+}
+
+/// Cross-scalar conformance under fleet interleavings: the same spec
+/// swept as an `i128` job and as a `big` job — through the seeded
+/// random scenario driver (crashes, partitions, restarts, drops) —
+/// must land on the same integer, and both must equal the
+/// single-process reference.
+#[test]
+fn seed_sweep_big_scalar_matches_i128_fleet_bits() {
+    let payload_i128 =
+        || JobPayload::Exact(gen::integer(&mut TestRng::from_seed(909), 3, 9, -40, 40));
+    let payload_big =
+        || JobPayload::Big(gen::integer(&mut TestRng::from_seed(909), 3, 9, -40, 40));
+    let want = match payload_i128() {
+        JobPayload::Exact(a) => radic_det_exact(&a).unwrap(),
+        _ => unreachable!(),
+    };
+    // A fixed slice of the interleaving space is enough here — the wide
+    // f64 sweep above explores scheduling; this pins scalar agreement.
+    for seed in 0..16u64 {
+        let dir = raddet::testkit::scratch_dir(&format!("sim-bigvs128-i-{seed}"));
+        let narrow = run_random_scenario(seed, payload_i128(), JobEngine::Prefix, fleet_cfg(), dir)
+            .unwrap_or_else(|e| panic!("seed {seed} (i128): {e}"));
+        let dir = raddet::testkit::scratch_dir(&format!("sim-bigvs128-b-{seed}"));
+        let wide = run_random_scenario(seed, payload_big(), JobEngine::Prefix, fleet_cfg(), dir)
+            .unwrap_or_else(|e| panic!("seed {seed} (big): {e}"));
+        match (&narrow.value, &wide.value) {
+            (JobValue::Exact(n), JobValue::Big(b)) => {
+                assert_eq!(*n, want, "seed {seed}: i128 fleet diverged");
+                assert_eq!(*b, BigInt::from_i128(want), "seed {seed}: big fleet diverged");
+            }
+            other => panic!("seed {seed}: {other:?}"),
+        }
+    }
+}
+
+/// A sweep that genuinely needs the big scalar (determinant beyond
+/// `i128::MAX`) survives the same seeded fleet faults and lands on the
+/// single-process value verbatim.
+#[test]
+fn seed_sweep_big_scalar_past_i128_is_fleet_stable() {
+    let payload = || {
+        JobPayload::Big(gen::integer(
+            &mut TestRng::from_seed(911),
+            6,
+            8,
+            -900_000_000,
+            900_000_000,
+        ))
+    };
+    let want = match payload() {
+        JobPayload::Big(a) => radic_det_generic::<BigInt>(&a).unwrap(),
+        _ => unreachable!(),
+    };
+    assert_eq!(want.to_i128(), None, "fixture must exceed i128");
+    for seed in 0..8u64 {
+        let dir = raddet::testkit::scratch_dir(&format!("sim-bigwide-{seed}"));
+        let out = run_random_scenario(seed, payload(), JobEngine::Prefix, fleet_cfg(), dir)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        match &out.value {
+            JobValue::Big(v) => assert_eq!(v, &want, "seed {seed}"),
+            other => panic!("seed {seed}: {other:?}"),
+        }
     }
 }
 
