@@ -64,9 +64,23 @@ pub enum Error {
     /// Service protocol violation.
     Protocol(String),
 
-    /// Durable job / journal problem (unknown id, corrupt journal,
-    /// concurrent-run conflict).
+    /// Durable job / journal problem (unknown id, concurrent-run
+    /// conflict, malformed spec).
     Job(String),
+
+    /// A job journal is damaged beyond the torn-tail tolerance: an
+    /// *interior* record failed its checksum or structural validation.
+    /// Typed (never a panic) so operators and the recovery invariant
+    /// can route it to `raddet job fsck --repair`, which salvages the
+    /// longest valid prefix and quarantines the rest.
+    JournalCorrupt {
+        /// 1-based record ordinal (the SPEC record is 1; the magic
+        /// header line is not a record).
+        record: usize,
+        /// What failed — checksum mismatch, unparseable body, duplicate
+        /// SPEC, out-of-plan chunk index, …
+        cause: String,
+    },
 
     /// I/O error.
     Io(std::io::Error),
@@ -102,6 +116,9 @@ impl std::fmt::Display for Error {
             }
             Error::Protocol(s) => write!(f, "protocol: {s}"),
             Error::Job(s) => write!(f, "job: {s}"),
+            Error::JournalCorrupt { record, cause } => {
+                write!(f, "journal corrupt at record {record}: {cause}")
+            }
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Config(s) => write!(f, "config: {s}"),
         }
@@ -153,6 +170,10 @@ mod tests {
         assert_eq!(
             Error::ScalarOverflow { what: "radic sum", chunk: Some(37) }.to_string(),
             "scalar overflow in radic sum (chunk starting at rank 37)"
+        );
+        assert_eq!(
+            Error::JournalCorrupt { record: 3, cause: "checksum mismatch".into() }.to_string(),
+            "journal corrupt at record 3: checksum mismatch"
         );
     }
 

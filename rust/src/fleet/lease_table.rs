@@ -257,7 +257,7 @@ impl LeaseTable {
                 // Lost a capacity/lock race after creating: the id never
                 // reached the caller, so remove the orphan journal.
                 if let Ok(path) = self.store.journal_path(&id) {
-                    let _ = std::fs::remove_file(path);
+                    let _ = self.store.fs().remove_file(&path);
                 }
                 Err(e)
             }
@@ -292,8 +292,7 @@ impl LeaseTable {
             )));
         }
         let lock = self.store.lock_job(id)?;
-        let path = self.store.journal_path(id)?;
-        let (mut journal, records) = Journal::open_append(&path)?;
+        let (mut journal, records) = self.store.open_append(id)?;
         let job = LoadedJob::from_records(id, records)?;
         if job.done.is_some() {
             self.clear_fleet_marker(id);
@@ -335,21 +334,25 @@ impl LeaseTable {
     /// Best-effort: a lost marker only costs restart adoption, never
     /// correctness (the journal stays the single source of truth).
     fn set_fleet_marker(&self, id: &str) {
-        let _ = std::fs::write(self.store.root().join(format!("{id}.fleet")), b"fleet\n");
+        let _ = self
+            .store
+            .fs()
+            .write(&self.store.root().join(format!("{id}.fleet")), b"fleet\n");
     }
 
     fn clear_fleet_marker(&self, id: &str) {
-        let _ = std::fs::remove_file(self.store.root().join(format!("{id}.fleet")));
+        let _ = self
+            .store
+            .fs()
+            .remove_file(&self.store.root().join(format!("{id}.fleet")));
     }
 
     /// Ids carrying a fleet marker (sorted) — candidates for lazy
     /// adoption by an unpinned grant.
     fn fleet_markers(&self) -> Vec<String> {
         let mut ids = Vec::new();
-        if let Ok(rd) = std::fs::read_dir(self.store.root()) {
-            for entry in rd.flatten() {
-                let name = entry.file_name();
-                let name = name.to_string_lossy();
+        if let Ok(names) = self.store.fs().read_dir_names(self.store.root()) {
+            for name in names {
                 if let Some(id) = name.strip_suffix(".fleet") {
                     if valid_id(id) {
                         ids.push(id.to_string());

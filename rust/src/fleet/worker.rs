@@ -30,13 +30,15 @@
 use crate::clock::{self, Clock};
 use crate::combin::{Chunk, PascalTable};
 use crate::coordinator::ChunkRunner;
+use crate::jobs::journal::fnv1a64;
 use crate::jobs::JobSpec;
+use crate::retry::{Backoff, RetryPolicy};
 use crate::service::{Client, GrantReply, TcpTransport, Transport};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Worker knobs.
 #[derive(Clone, Debug)]
@@ -368,16 +370,30 @@ fn spawn_heartbeat(
     worker: String,
     held: HeldLease,
     stop: Arc<AtomicBool>,
+    clock: Arc<dyn Clock>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
+        // The tick sleeps on *real* time so `stop` stays responsive
+        // even under a frozen SimClock (a virtual sleep with no
+        // advancer would hang shutdown); the renew *cadence* reads the
+        // clock seam, so under sim the heartbeat is idle by design —
+        // sim steps are atomic with respect to virtual time.
         let tick = Duration::from_millis(20);
         let mut client: Option<Client> = None;
-        let mut last = Instant::now();
+        let mut last = clock.now();
+        // Redials after a failed renew pace themselves with the seeded
+        // backoff (seed = worker id) instead of hammering every tick.
+        let mut backoff = Backoff::new(
+            RetryPolicy::for_poll(Duration::from_millis(100)),
+            fnv1a64(worker.as_bytes()) ^ 0x48_42, // "HB"
+        );
+        let mut retry_at: Option<Duration> = None;
         while !stop.load(Ordering::SeqCst) {
             std::thread::sleep(tick);
             let lease = held.lock().expect("held lease poisoned").clone();
             let Some((job, chunk, every)) = lease else { continue };
-            if last.elapsed() < every {
+            let now = clock.now();
+            if now.saturating_sub(last) < every || retry_at.is_some_and(|t| now < t) {
                 continue;
             }
             if client.is_none() {
@@ -386,10 +402,14 @@ fn spawn_heartbeat(
             let renewed = client
                 .as_mut()
                 .is_some_and(|c| c.lease_renew(&worker, &job, chunk).is_ok());
-            if !renewed {
+            if renewed {
+                backoff.reset();
+                retry_at = None;
+            } else {
                 client = None;
+                retry_at = backoff.next_delay(clock.as_ref()).map(|d| now + d);
             }
-            last = Instant::now();
+            last = now;
         }
     })
 }
@@ -404,10 +424,13 @@ pub fn run_worker(addr: &str, cfg: &WorkerConfig, stop: &AtomicBool) -> Result<W
 }
 
 /// [`run_worker`] over an explicit transport and clock — the seam the
-/// simulation fabric and transport tests use. Pacing (`cfg.poll`)
-/// sleeps on the given clock; the heartbeat thread is only spawned on
-/// real transports' behalf but is harmless (and idle) under sim, where
-/// steps are atomic with respect to virtual time.
+/// simulation fabric and transport tests use. Idle and reconnect pacing
+/// follow the seeded [`RetryPolicy::for_poll`] schedule derived from
+/// `cfg.poll` (seed = worker id, so a fleet's delays are decorrelated
+/// but each worker's are replayable), sleeping on the given clock; the
+/// heartbeat thread is only spawned on real transports' behalf but is
+/// harmless (and idle) under sim, where steps are atomic with respect
+/// to virtual time.
 pub fn run_worker_with(
     transport: Arc<dyn Transport>,
     addr: &str,
@@ -423,7 +446,15 @@ pub fn run_worker_with(
         cfg.id.clone(),
         worker.held_handle(),
         Arc::clone(&heartbeat_stop),
+        Arc::clone(&clock),
     );
+    let policy = RetryPolicy::for_poll(cfg.poll);
+    let seed = fnv1a64(cfg.id.as_bytes());
+    // Separate schedules: an idle server (no leasable work — the
+    // connection is fine) and a dead one (redialing) are different
+    // regimes; a completed chunk resets both.
+    let mut idle = Backoff::new(policy, seed);
+    let mut reconnect = Backoff::new(policy, seed ^ 1);
     let mut run_err: Option<Error> = None;
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -434,13 +465,20 @@ pub fn run_worker_with(
                 if cfg.exit_on_idle {
                     break;
                 }
-                clock.sleep(cfg.poll);
+                reconnect.reset(); // the server answered — link is up
+                idle.sleep(clock.as_ref());
             }
-            Ok(WorkerEvent::Disconnected) => clock.sleep(cfg.poll),
+            Ok(WorkerEvent::Disconnected) => {
+                idle.reset();
+                reconnect.sleep(clock.as_ref());
+            }
             Ok(WorkerEvent::JobComplete)
             | Ok(WorkerEvent::Crashed { .. })
             | Ok(WorkerEvent::BudgetExhausted) => break,
-            Ok(WorkerEvent::Completed { .. }) | Ok(WorkerEvent::Rejected { .. }) => {}
+            Ok(WorkerEvent::Completed { .. }) | Ok(WorkerEvent::Rejected { .. }) => {
+                idle.reset();
+                reconnect.reset();
+            }
             Err(e) => {
                 run_err = Some(e);
                 break;

@@ -1,0 +1,600 @@
+//! The storage seam: every filesystem call in the jobs subsystem goes
+//! through the [`Fs`] trait instead of `std::fs`, mirroring what
+//! [`crate::clock::Clock`] does for time. Production code runs on
+//! [`RealFs`] (a zero-cost passthrough); the deterministic simulation
+//! fabric substitutes [`FaultFs`], which injects the classic storage
+//! failure modes — short/torn writes, fsync failures, "fsync lies"
+//! (acknowledged syncs whose data vanishes on crash), `ENOSPC`, and
+//! read-side bitflips — as seeded, replayable functions of a
+//! [`TestRng`], so `tests/sim_seeds.rs` can fault disk, network and
+//! clock under one seed.
+//!
+//! Design notes:
+//!
+//! * Methods return `std::io::Result` so call sites keep their `?`
+//!   conversion into [`crate::Error::Io`] unchanged.
+//! * [`FaultFs`] writes **through** to the real directory. Several
+//!   components (store clones, the lease table, operator CLIs) open
+//!   independent views of one jobs dir; a shadow filesystem would make
+//!   them disagree. Fault state is carried per file as a *durable
+//!   watermark* — the byte length the file would have after a crash —
+//!   and [`FaultFs::crash`] truncates every tracked file back to its
+//!   watermark, which is how an acknowledged-but-lying fsync loses
+//!   data.
+//! * Read-side bitflips corrupt the returned buffer only, never the
+//!   disk — a retry reads clean bytes, which is what makes them
+//!   *transient* faults in the recovery-invariant sense.
+
+use crate::testkit::TestRng;
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// An open file handle behind the [`Fs`] seam (the journal's append
+/// handle). Only the operations the jobs subsystem actually uses.
+pub trait FsFile: Send + std::fmt::Debug {
+    /// Append/write `buf` at the current position in full.
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()>;
+    /// Flush file *data* to stable storage (`fdatasync`).
+    fn sync_data(&mut self) -> std::io::Result<()>;
+    /// Flush data + metadata to stable storage (`fsync`).
+    fn sync_all(&mut self) -> std::io::Result<()>;
+    /// Truncate (or extend) to `len` bytes.
+    fn set_len(&mut self, len: u64) -> std::io::Result<()>;
+    /// Reposition to absolute offset `pos`.
+    fn seek_start(&mut self, pos: u64) -> std::io::Result<()>;
+}
+
+/// The filesystem seam. Implementations must be shareable across
+/// threads ([`JobStore`](super::JobStore) clones are).
+pub trait Fs: Send + Sync + std::fmt::Debug {
+    /// Read a whole file.
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>>;
+    /// Read a file from byte `offset` to EOF (journal tail polling).
+    fn read_from(&self, path: &Path, offset: u64) -> std::io::Result<Vec<u8>>;
+    /// Read a whole file as UTF-8 (lock-file pids).
+    fn read_to_string(&self, path: &Path) -> std::io::Result<String>;
+    /// Create a file that must not already exist, open for writing.
+    fn create_new(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>>;
+    /// Open an existing file read+write (journal reopen-for-append).
+    fn open_rw(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>>;
+    /// Write a whole small file (lock temps, fleet markers).
+    fn write(&self, path: &Path, contents: &[u8]) -> std::io::Result<()>;
+    /// Hard-link `src` as `dst` (atomic lock acquisition).
+    fn hard_link(&self, src: &Path, dst: &Path) -> std::io::Result<()>;
+    /// Rename `from` to `to` (atomic stale-lock reclaim).
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()>;
+    /// Delete a file.
+    fn remove_file(&self, path: &Path) -> std::io::Result<()>;
+    /// Create a directory and its parents.
+    fn create_dir_all(&self, path: &Path) -> std::io::Result<()>;
+    /// File names (not paths) of a directory's entries.
+    fn read_dir_names(&self, path: &Path) -> std::io::Result<Vec<String>>;
+    /// Does `path` exist and name a regular file?
+    fn is_file(&self, path: &Path) -> bool;
+    /// Fsync a directory so a created/removed *name* survives power
+    /// loss (best-effort: some platforms cannot open directories).
+    fn sync_dir(&self, path: &Path) -> std::io::Result<()>;
+}
+
+/// The production filesystem: straight passthrough to `std::fs`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+/// Shared handle to the production filesystem.
+pub fn real() -> Arc<dyn Fs> {
+    Arc::new(RealFs)
+}
+
+#[derive(Debug)]
+struct RealFile(File);
+
+impl FsFile for RealFile {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        self.0.write_all(buf)
+    }
+    fn sync_data(&mut self) -> std::io::Result<()> {
+        self.0.sync_data()
+    }
+    fn sync_all(&mut self) -> std::io::Result<()> {
+        self.0.sync_all()
+    }
+    fn set_len(&mut self, len: u64) -> std::io::Result<()> {
+        self.0.set_len(len)
+    }
+    fn seek_start(&mut self, pos: u64) -> std::io::Result<()> {
+        self.0.seek(SeekFrom::Start(pos)).map(|_| ())
+    }
+}
+
+impl Fs for RealFs {
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn read_from(&self, path: &Path, offset: u64) -> std::io::Result<Vec<u8>> {
+        let mut file = File::open(path)?;
+        file.seek(SeekFrom::Start(offset))?;
+        let mut data = Vec::new();
+        file.read_to_end(&mut data)?;
+        Ok(data)
+    }
+
+    fn read_to_string(&self, path: &Path) -> std::io::Result<String> {
+        std::fs::read_to_string(path)
+    }
+
+    fn create_new(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        Ok(Box::new(RealFile(file)))
+    }
+
+    fn open_rw(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        Ok(Box::new(RealFile(file)))
+    }
+
+    fn write(&self, path: &Path, contents: &[u8]) -> std::io::Result<()> {
+        std::fs::write(path, contents)
+    }
+
+    fn hard_link(&self, src: &Path, dst: &Path) -> std::io::Result<()> {
+        std::fs::hard_link(src, dst)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(path)
+    }
+
+    fn read_dir_names(&self, path: &Path) -> std::io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(path)? {
+            names.push(entry?.file_name().to_string_lossy().into_owned());
+        }
+        Ok(names)
+    }
+
+    fn is_file(&self, path: &Path) -> bool {
+        path.is_file()
+    }
+
+    fn sync_dir(&self, path: &Path) -> std::io::Result<()> {
+        File::open(path)?.sync_all()
+    }
+}
+
+/// Fault probabilities in parts per 10 000, rolled independently per
+/// operation. All-zero means a transparent passthrough.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultConfig {
+    /// A `write_all` writes a strict prefix, then errors.
+    pub torn_write_per_10k: u32,
+    /// A sync returns an error; nothing becomes durable.
+    pub sync_fail_per_10k: u32,
+    /// A sync returns `Ok` but the data does **not** become durable —
+    /// it vanishes at the next [`FaultFs::crash`].
+    pub sync_lie_per_10k: u32,
+    /// A write fails up front with `ENOSPC` (nothing written).
+    pub enospc_per_10k: u32,
+    /// A read returns a buffer with one bit flipped (disk unharmed).
+    pub read_flip_per_10k: u32,
+}
+
+impl FaultConfig {
+    /// A moderately hostile disk — every fault class enabled at rates
+    /// that exercise recovery without drowning forward progress.
+    pub fn hostile() -> FaultConfig {
+        FaultConfig {
+            torn_write_per_10k: 200,
+            sync_fail_per_10k: 150,
+            sync_lie_per_10k: 150,
+            enospc_per_10k: 100,
+            read_flip_per_10k: 150,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct FaultState {
+    rng: TestRng,
+    cfg: FaultConfig,
+    /// Faults only fire while armed — scenario setup (submit) runs
+    /// clean, mirroring how the sim net keeps its bootstrap reliable.
+    armed: bool,
+    /// Durable byte length per tracked (journal) file: what survives a
+    /// [`FaultFs::crash`]. Advanced only by an honest, successful sync.
+    durable: HashMap<PathBuf, u64>,
+}
+
+impl FaultState {
+    fn roll(&mut self, per_10k: u32) -> bool {
+        self.armed && per_10k > 0 && self.rng.u64_below(10_000) < u64::from(per_10k)
+    }
+}
+
+/// A seeded fault-injecting filesystem wrapping [`RealFs`].
+///
+/// Writes go through to the real directory (other views of the jobs
+/// dir must see them); crash semantics live in the per-file durable
+/// watermark (see the module docs). Share one instance across a sim
+/// server's restarts so watermarks persist over [`FaultFs::crash`].
+#[derive(Debug)]
+pub struct FaultFs {
+    inner: RealFs,
+    state: Arc<Mutex<FaultState>>,
+}
+
+fn enospc() -> std::io::Error {
+    std::io::Error::other("injected fault: no space left on device")
+}
+
+fn injected(what: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected fault: {what}"))
+}
+
+impl FaultFs {
+    /// New fault filesystem with the given seed and fault rates,
+    /// starting **disarmed** (arm it once setup is done).
+    pub fn new(seed: u64, cfg: FaultConfig) -> Arc<FaultFs> {
+        Arc::new(FaultFs {
+            inner: RealFs,
+            state: Arc::new(Mutex::new(FaultState {
+                rng: TestRng::from_seed(seed ^ 0xD15C_FA17),
+                cfg,
+                armed: false,
+                durable: HashMap::new(),
+            })),
+        })
+    }
+
+    /// Enable or disable fault injection (watermarks keep accruing
+    /// either way, so a crash after disarming still only keeps what
+    /// was honestly synced).
+    pub fn arm(&self, armed: bool) {
+        self.state.lock().expect("faultfs poisoned").armed = armed;
+    }
+
+    /// Simulate a power loss: every tracked file is truncated back to
+    /// its durable watermark, dropping writes whose sync failed or
+    /// lied. Call on simulated server restart.
+    pub fn crash(&self) {
+        let durable: Vec<(PathBuf, u64)> = {
+            let st = self.state.lock().expect("faultfs poisoned");
+            st.durable.iter().map(|(p, &l)| (p.clone(), l)).collect()
+        };
+        for (path, len) in durable {
+            if let Ok(file) = OpenOptions::new().write(true).open(&path) {
+                let real_len = file.metadata().map(|m| m.len()).unwrap_or(0);
+                if real_len > len {
+                    let _ = file.set_len(len);
+                    let _ = file.sync_data();
+                }
+            }
+        }
+    }
+
+    fn tracked_file(&self, path: &Path, file: File) -> Box<dyn FsFile> {
+        let len = file.metadata().map(|m| m.len()).unwrap_or(0);
+        // A freshly opened file's on-disk bytes are assumed durable
+        // (they survived up to now); only new writes are at risk.
+        self.state
+            .lock()
+            .expect("faultfs poisoned")
+            .durable
+            .entry(path.to_path_buf())
+            .or_insert(len);
+        Box::new(FaultFile {
+            state: Arc::clone(&self.state),
+            path: path.to_path_buf(),
+            file,
+            len,
+        })
+    }
+
+    fn maybe_flip(&self, data: &mut [u8]) {
+        let mut st = self.state.lock().expect("faultfs poisoned");
+        let rate = st.cfg.read_flip_per_10k;
+        if !data.is_empty() && st.roll(rate) {
+            let byte = st.rng.u64_below(data.len() as u64) as usize;
+            let bit = st.rng.u64_below(8) as u8;
+            data[byte] ^= 1 << bit;
+        }
+    }
+}
+
+/// The fault-injecting file handle (journals only — small whole-file
+/// writes like locks and markers go through [`Fs::write`]).
+#[derive(Debug)]
+struct FaultFile {
+    state: Arc<Mutex<FaultState>>,
+    path: PathBuf,
+    file: File,
+    /// Real byte length as of the last complete operation (what
+    /// `set_len` must restore to after a torn write).
+    len: u64,
+}
+
+impl FaultFile {
+    fn mark_durable(&self) {
+        self.state
+            .lock()
+            .expect("faultfs poisoned")
+            .durable
+            .insert(self.path.clone(), self.len);
+    }
+}
+
+impl FsFile for FaultFile {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let (enospc_rate, torn_rate) = (st.cfg.enospc_per_10k, st.cfg.torn_write_per_10k);
+            if st.roll(enospc_rate) {
+                return Err(enospc());
+            }
+            if st.roll(torn_rate) && !buf.is_empty() {
+                let keep = st.rng.u64_below(buf.len() as u64) as usize;
+                drop(st);
+                self.file.write_all(&buf[..keep])?;
+                self.len += keep as u64;
+                return Err(injected("torn write"));
+            }
+        }
+        self.file.write_all(buf)?;
+        self.len += buf.len() as u64;
+        Ok(())
+    }
+
+    fn sync_data(&mut self) -> std::io::Result<()> {
+        let (fail, lie) = {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let (f, l) = (st.cfg.sync_fail_per_10k, st.cfg.sync_lie_per_10k);
+            (st.roll(f), st.roll(l))
+        };
+        if fail {
+            return Err(injected("fsync failed"));
+        }
+        self.file.sync_data()?;
+        if !lie {
+            self.mark_durable();
+        }
+        Ok(())
+    }
+
+    fn sync_all(&mut self) -> std::io::Result<()> {
+        let (fail, lie) = {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let (f, l) = (st.cfg.sync_fail_per_10k, st.cfg.sync_lie_per_10k);
+            (st.roll(f), st.roll(l))
+        };
+        if fail {
+            return Err(injected("fsync failed"));
+        }
+        self.file.sync_all()?;
+        if !lie {
+            self.mark_durable();
+        }
+        Ok(())
+    }
+
+    fn set_len(&mut self, len: u64) -> std::io::Result<()> {
+        // Truncation always lands (it is the *recovery* primitive —
+        // injecting faults here would model a disk no journal can
+        // survive); the durable watermark can only shrink with it.
+        self.file.set_len(len)?;
+        self.len = len;
+        let mut st = self.state.lock().expect("faultfs poisoned");
+        if let Some(d) = st.durable.get_mut(&self.path) {
+            *d = (*d).min(len);
+        }
+        Ok(())
+    }
+
+    fn seek_start(&mut self, pos: u64) -> std::io::Result<()> {
+        self.file.seek(SeekFrom::Start(pos)).map(|_| ())
+    }
+}
+
+impl Fs for FaultFs {
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        let mut data = self.inner.read(path)?;
+        self.maybe_flip(&mut data);
+        Ok(data)
+    }
+
+    fn read_from(&self, path: &Path, offset: u64) -> std::io::Result<Vec<u8>> {
+        let mut data = self.inner.read_from(path, offset)?;
+        self.maybe_flip(&mut data);
+        Ok(data)
+    }
+
+    fn read_to_string(&self, path: &Path) -> std::io::Result<String> {
+        // Lock pids stay un-flipped: a flipped pid models nothing a
+        // real kernel does to a 10-byte read, and the lock protocol is
+        // exercised by the process-kill scenarios instead.
+        self.inner.read_to_string(path)
+    }
+
+    fn create_new(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let rate = st.cfg.enospc_per_10k;
+            if st.roll(rate) {
+                return Err(enospc());
+            }
+        }
+        let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        Ok(self.tracked_file(path, file))
+    }
+
+    fn open_rw(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        Ok(self.tracked_file(path, file))
+    }
+
+    fn write(&self, path: &Path, contents: &[u8]) -> std::io::Result<()> {
+        {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let rate = st.cfg.enospc_per_10k;
+            if st.roll(rate) {
+                return Err(enospc());
+            }
+        }
+        self.inner.write(path, contents)
+    }
+
+    fn hard_link(&self, src: &Path, dst: &Path) -> std::io::Result<()> {
+        self.inner.hard_link(src, dst)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> std::io::Result<()> {
+        self.state
+            .lock()
+            .expect("faultfs poisoned")
+            .durable
+            .remove(path);
+        self.inner.remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.create_dir_all(path)
+    }
+
+    fn read_dir_names(&self, path: &Path) -> std::io::Result<Vec<String>> {
+        self.inner.read_dir_names(path)
+    }
+
+    fn is_file(&self, path: &Path) -> bool {
+        self.inner.is_file(path)
+    }
+
+    fn sync_dir(&self, path: &Path) -> std::io::Result<()> {
+        let fail = {
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            let rate = st.cfg.sync_fail_per_10k;
+            st.roll(rate)
+        };
+        if fail {
+            return Err(injected("directory fsync failed"));
+        }
+        self.inner.sync_dir(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::scratch_dir;
+
+    // Rates of 10_000 parts-per-10_000 make a fault fire on every roll,
+    // so these tests are deterministic without depending on the rng
+    // stream's exact values.
+    fn certain(field: fn(&mut FaultConfig) -> &mut u32) -> FaultConfig {
+        let mut cfg = FaultConfig::default();
+        *field(&mut cfg) = 10_000;
+        cfg
+    }
+
+    #[test]
+    fn disarmed_faultfs_is_transparent() {
+        let dir = scratch_dir("faultfs-disarmed");
+        let fs = FaultFs::new(7, FaultConfig::hostile());
+        let path = dir.join("j");
+        let mut f = fs.create_new(&path).unwrap();
+        f.write_all(b"hello\n").unwrap();
+        f.sync_data().unwrap();
+        assert_eq!(fs.read(&path).unwrap(), b"hello\n");
+        fs.crash();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello\n", "honest sync survives crash");
+    }
+
+    #[test]
+    fn enospc_fires_on_write() {
+        let dir = scratch_dir("faultfs-enospc");
+        let fs = FaultFs::new(7, certain(|c| &mut c.enospc_per_10k));
+        fs.arm(true);
+        let err = fs.write(&dir.join("marker"), b"x").unwrap_err();
+        assert!(err.to_string().contains("no space"), "{err}");
+    }
+
+    #[test]
+    fn torn_write_keeps_strict_prefix_and_errors() {
+        let dir = scratch_dir("faultfs-torn");
+        let fs = FaultFs::new(7, certain(|c| &mut c.torn_write_per_10k));
+        let path = dir.join("j");
+        let mut f = fs.create_new(&path).unwrap();
+        fs.arm(true);
+        let err = f.write_all(b"0123456789").unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        let on_disk = std::fs::read(&path).unwrap();
+        assert!(on_disk.len() < 10, "must be a strict prefix, got {}", on_disk.len());
+        assert_eq!(&on_disk[..], &b"0123456789"[..on_disk.len()]);
+    }
+
+    #[test]
+    fn fsync_lie_loses_bytes_at_crash() {
+        let dir = scratch_dir("faultfs-lie");
+        let fs = FaultFs::new(7, certain(|c| &mut c.sync_lie_per_10k));
+        let path = dir.join("j");
+        let mut f = fs.create_new(&path).unwrap();
+        fs.arm(true);
+        f.write_all(b"doomed").unwrap();
+        f.sync_data().unwrap(); // acks, but lies
+        assert_eq!(std::fs::read(&path).unwrap(), b"doomed", "visible before crash");
+        drop(f);
+        fs.crash();
+        assert_eq!(std::fs::read(&path).unwrap(), b"", "lied-about bytes vanish");
+    }
+
+    #[test]
+    fn read_flip_corrupts_buffer_not_disk() {
+        let dir = scratch_dir("faultfs-flip");
+        let path = dir.join("j");
+        std::fs::write(&path, b"stable bytes").unwrap();
+        let fs = FaultFs::new(7, certain(|c| &mut c.read_flip_per_10k));
+        fs.arm(true);
+        let seen = fs.read(&path).unwrap();
+        assert_ne!(seen, b"stable bytes", "flip must corrupt the buffer");
+        let diff: u32 = seen
+            .iter()
+            .zip(b"stable bytes")
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "exactly one bit flips");
+        assert_eq!(std::fs::read(&path).unwrap(), b"stable bytes", "disk unharmed");
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let trace = |seed: u64| {
+            let dir = scratch_dir(&format!("faultfs-det-{seed}"));
+            let fs = FaultFs::new(seed, FaultConfig::hostile());
+            let path = dir.join("j");
+            let mut f = fs.create_new(&path).unwrap();
+            fs.arm(true);
+            (0..64)
+                .map(|i| {
+                    let w = f.write_all(format!("rec {i}\n").as_bytes()).is_ok();
+                    let s = f.sync_data().is_ok();
+                    (w, s)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(trace(42), trace(42), "seeded faults replay identically");
+        assert_ne!(trace(42), trace(43), "different seeds diverge");
+    }
+}

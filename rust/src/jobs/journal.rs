@@ -25,15 +25,26 @@
 //! replay, a corrupt or incomplete **final** line is treated as a torn
 //! write — ignored, and truncated away when the journal is reopened for
 //! append. A corrupt *interior* record is real damage and fails the
-//! replay loudly.
+//! replay loudly with a typed [`Error::JournalCorrupt`]; the salvage
+//! path ([`Journal::fsck`] / `raddet job fsck --repair`) recovers the
+//! longest valid prefix and quarantines the rest, after which the job
+//! resumes bitwise-identically from the surviving records (chunks are
+//! deterministic, so anything lost is simply recomputed).
+//!
+//! Every filesystem call goes through the [`Fs`] storage seam — the
+//! `*_with` method variants take an explicit `&dyn Fs`; the plain names
+//! are [`RealFs`] conveniences — so the deterministic simulation fabric
+//! can inject torn writes, fsync failures/lies and read bitflips under
+//! a seed. A failed append *self-heals*: the journal truncates back to
+//! the pre-write length so a torn in-process write can never turn into
+//! interior corruption for a later successful append to land after.
 
+use super::fs::{Fs, FsFile, RealFs};
 use super::{ChunkRecord, JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::Mat;
 use crate::scalar::ScalarKind;
 use crate::{Error, Result};
-use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// First line of every journal file.
 pub const MAGIC: &str = "raddet-job-journal v1";
@@ -290,14 +301,27 @@ fn parse_record_meta(line: &str) -> Result<MetaRecord> {
     Ok(MetaRecord::Spec(SpecMeta { scalar, engine, batch, chunks, m, n }))
 }
 
+/// Strip the layered `job: journal:` prefixes off a record-parse error
+/// for use as a [`Error::JournalCorrupt`] / fsck cause string.
+fn cause_of(e: &Error) -> String {
+    match e {
+        Error::Job(s) => s.strip_prefix("journal: ").unwrap_or(s).to_string(),
+        other => other.to_string(),
+    }
+}
+
 /// Replay raw journal bytes through `parse` → `(records, valid_byte_len)`.
 ///
 /// `valid_byte_len` is where the last intact record ends; anything past
-/// it is a torn tail to be truncated before appending.
+/// it is a torn tail to be truncated before appending. `first_record`
+/// is the 1-based ordinal of the first record in `data` (1 for a full
+/// journal, 2 for a post-SPEC tail) so interior corruption is reported
+/// with its journal-wide record number.
 fn replay_bytes_with<R>(
     data: &[u8],
     parse: impl Fn(&str) -> Result<R>,
     expect_magic: bool,
+    first_record: usize,
 ) -> Result<(Vec<R>, u64)> {
     let mut records = Vec::new();
     let mut pos = 0usize;
@@ -309,11 +333,15 @@ fn replay_bytes_with<R>(
         };
         let end = pos + rel;
         let is_final = end + 1 >= data.len();
+        let ordinal = first_record + records.len();
         let Ok(line) = std::str::from_utf8(&data[pos..end]) else {
             if is_final {
                 break; // torn non-UTF8 tail
             }
-            return Err(bad(&format!("non-UTF8 record at byte {pos}")));
+            return Err(Error::JournalCorrupt {
+                record: ordinal,
+                cause: format!("non-UTF8 record at byte {pos}"),
+            });
         };
         if first {
             if line != MAGIC {
@@ -327,7 +355,10 @@ fn replay_bytes_with<R>(
                 // is real corruption.
                 Err(_) if is_final => break,
                 Err(e) => {
-                    return Err(bad(&format!("corrupt record at byte {pos}: {e}")));
+                    return Err(Error::JournalCorrupt {
+                        record: ordinal,
+                        cause: format!("{} (at byte {pos})", cause_of(&e)),
+                    });
                 }
             }
         }
@@ -341,38 +372,64 @@ fn replay_bytes_with<R>(
 }
 
 fn replay_bytes(data: &[u8]) -> Result<(Vec<Record>, u64)> {
-    replay_bytes_with(data, parse_record, true)
+    replay_bytes_with(data, parse_record, true, 1)
 }
 
 /// An open journal file positioned for appends.
 pub struct Journal {
-    file: File,
+    file: Box<dyn FsFile>,
+    /// Byte length of the valid journal — the position appends land at
+    /// and the truncation target when an append fails partway.
+    len: u64,
+    /// Set when a failed append could not be rolled back: further
+    /// appends are refused (reopen to recover) rather than risk
+    /// stacking records onto torn bytes.
+    poisoned: bool,
 }
 
 impl Journal {
+    /// [`Self::create_with`] on the real filesystem.
+    pub fn create(path: &Path, spec: &JobSpec) -> Result<Journal> {
+        Self::create_with(&RealFs, path, spec)
+    }
+
     /// Create a fresh journal at `path` (fails if it exists) and write
     /// the magic header plus the SPEC record, fsync'd. The parent
     /// directory is fsync'd too (best-effort on platforms where
     /// directories can't be opened), so the new *name* survives power
     /// loss along with the data — the returned job id must stay
-    /// resolvable after a crash.
-    pub fn create(path: &Path, spec: &JobSpec) -> Result<Journal> {
-        let mut file = OpenOptions::new().write(true).create_new(true).open(path)?;
-        file.write_all(format!("{MAGIC}\n").as_bytes())?;
-        let mut j = Journal { file };
-        j.append(&Record::Spec(spec.clone()))?;
-        j.file.sync_all()?;
+    /// resolvable after a crash. If any write after creation fails, the
+    /// half-created file is removed so it can never be mistaken for a
+    /// job.
+    pub fn create_with(fs: &dyn Fs, path: &Path, spec: &JobSpec) -> Result<Journal> {
+        let file = fs.create_new(path)?;
+        let mut j = Journal { file, len: 0, poisoned: false };
+        let init = (|| -> Result<()> {
+            let header = format!("{MAGIC}\n");
+            j.file.write_all(header.as_bytes())?;
+            j.len = header.len() as u64;
+            j.append(&Record::Spec(spec.clone()))?;
+            j.file.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = init {
+            let _ = fs.remove_file(path);
+            return Err(e);
+        }
         if let Some(parent) = path.parent() {
-            if let Ok(dir) = File::open(parent) {
-                let _ = dir.sync_all();
-            }
+            let _ = fs.sync_dir(parent);
         }
         Ok(j)
     }
 
     /// Replay a journal read-only.
     pub fn replay(path: &Path) -> Result<Vec<Record>> {
-        let data = std::fs::read(path)?;
+        Self::replay_with(&RealFs, path)
+    }
+
+    /// [`Self::replay`] through an explicit [`Fs`].
+    pub fn replay_with(fs: &dyn Fs, path: &Path) -> Result<Vec<Record>> {
+        let data = fs.read(path)?;
         Ok(replay_bytes(&data)?.0)
     }
 
@@ -380,8 +437,13 @@ impl Journal {
     /// matrix payload (megabytes on production-sized jobs) is
     /// checksummed without being decoded. Status polling uses this.
     pub fn replay_meta(path: &Path) -> Result<Vec<MetaRecord>> {
-        let data = std::fs::read(path)?;
-        Ok(replay_bytes_with(&data, parse_record_meta, true)?.0)
+        Self::replay_meta_with(&RealFs, path)
+    }
+
+    /// [`Self::replay_meta`] through an explicit [`Fs`].
+    pub fn replay_meta_with(fs: &dyn Fs, path: &Path) -> Result<Vec<MetaRecord>> {
+        let data = fs.read(path)?;
+        Ok(replay_bytes_with(&data, parse_record_meta, true, 1)?.0)
     }
 
     /// Read the journal's immutable head — magic line + SPEC record —
@@ -390,19 +452,27 @@ impl Journal {
     /// the result (the head never changes after create) and poll with
     /// [`Self::replay_tail`].
     pub fn read_spec_meta(path: &Path) -> Result<(SpecMeta, u64)> {
-        let mut reader = BufReader::new(File::open(path)?);
-        let mut magic = String::new();
-        let n1 = reader.read_line(&mut magic)?;
-        if magic.strip_suffix('\n') != Some(MAGIC) {
+        Self::read_spec_meta_with(&RealFs, path)
+    }
+
+    /// [`Self::read_spec_meta`] through an explicit [`Fs`].
+    pub fn read_spec_meta_with(fs: &dyn Fs, path: &Path) -> Result<(SpecMeta, u64)> {
+        let data = fs.read(path)?;
+        let Some(head_end) = data.iter().position(|&b| b == b'\n') else {
+            return Err(bad("missing or wrong magic header"));
+        };
+        if std::str::from_utf8(&data[..head_end]) != Ok(MAGIC) {
             return Err(bad("missing or wrong magic header"));
         }
-        let mut spec_line = String::new();
-        let n2 = reader.read_line(&mut spec_line)?;
-        let line = spec_line
-            .strip_suffix('\n')
-            .ok_or_else(|| bad("journal has no complete SPEC record"))?;
+        let spec_start = head_end + 1;
+        let Some(rel) = data[spec_start..].iter().position(|&b| b == b'\n') else {
+            return Err(bad("journal has no complete SPEC record"));
+        };
+        let spec_end = spec_start + rel;
+        let line = std::str::from_utf8(&data[spec_start..spec_end])
+            .map_err(|_| bad("journal has no complete SPEC record"))?;
         match parse_record_meta(line)? {
-            MetaRecord::Spec(meta) => Ok((meta, (n1 + n2) as u64)),
+            MetaRecord::Spec(meta) => Ok((meta, (spec_end + 1) as u64)),
             _ => Err(bad("first record is not SPEC")),
         }
     }
@@ -411,35 +481,355 @@ impl Journal {
     /// offset [`Self::read_spec_meta`] returned — without touching the
     /// head. Torn-tail semantics identical to the full replays.
     pub fn replay_tail(path: &Path, offset: u64) -> Result<Vec<MetaRecord>> {
-        let mut file = File::open(path)?;
-        file.seek(SeekFrom::Start(offset))?;
-        let mut data = Vec::new();
-        file.read_to_end(&mut data)?;
-        Ok(replay_bytes_with(&data, parse_record_meta, false)?.0)
+        Self::replay_tail_with(&RealFs, path, offset)
+    }
+
+    /// [`Self::replay_tail`] through an explicit [`Fs`].
+    pub fn replay_tail_with(fs: &dyn Fs, path: &Path, offset: u64) -> Result<Vec<MetaRecord>> {
+        let data = fs.read_from(path, offset)?;
+        Ok(replay_bytes_with(&data, parse_record_meta, false, 2)?.0)
     }
 
     /// Open for append: replay, truncate any torn tail, position at the
     /// end. Returns the journal plus the replayed records.
     pub fn open_append(path: &Path) -> Result<(Journal, Vec<Record>)> {
-        let data = std::fs::read(path)?;
+        Self::open_append_with(&RealFs, path)
+    }
+
+    /// [`Self::open_append`] through an explicit [`Fs`].
+    pub fn open_append_with(fs: &dyn Fs, path: &Path) -> Result<(Journal, Vec<Record>)> {
+        let data = fs.read(path)?;
         let (records, valid) = replay_bytes(&data)?;
-        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut file = fs.open_rw(path)?;
         if valid < data.len() as u64 {
             file.set_len(valid)?;
             file.sync_data()?;
         }
-        file.seek(SeekFrom::Start(valid))?;
-        Ok((Journal { file }, records))
+        file.seek_start(valid)?;
+        Ok((Journal { file, len: valid, poisoned: false }, records))
     }
 
     /// Append one record and fsync it. The record is durable when this
-    /// returns.
+    /// returns `Ok`.
+    ///
+    /// On failure the journal rolls itself back: any bytes of the torn
+    /// record are truncated away (restoring the append-only invariant)
+    /// so the *next* append cannot create interior corruption. If even
+    /// the rollback fails, the journal is poisoned — further appends
+    /// are refused until it is reopened, which re-runs the torn-tail
+    /// truncation from a clean replay.
     pub fn append(&mut self, rec: &Record) -> Result<()> {
+        if self.poisoned {
+            return Err(bad("poisoned by an earlier failed append; reopen to resume"));
+        }
         let body = encode_body(rec);
         let line = format!("{body} {:016x}\n", fnv1a64(body.as_bytes()));
-        self.file.write_all(line.as_bytes())?;
-        self.file.sync_data()?;
-        Ok(())
+        let pre = self.len;
+        let wrote = self
+            .file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.sync_data());
+        match wrote {
+            Ok(()) => {
+                self.len = pre + line.len() as u64;
+                Ok(())
+            }
+            Err(e) => {
+                let rolled_back = self
+                    .file
+                    .set_len(pre)
+                    .and_then(|()| self.file.seek_start(pre))
+                    .and_then(|()| self.file.sync_data());
+                if rolled_back.is_err() {
+                    self.poisoned = true;
+                }
+                Err(e.into())
+            }
+        }
+    }
+
+    /// [`Self::fsck_with`] on the real filesystem.
+    pub fn fsck(path: &Path) -> Result<FsckReport> {
+        Self::fsck_with(&RealFs, path)
+    }
+
+    /// Diagnose a journal without modifying it: walk **every** line
+    /// (never panicking, never stopping at the first problem the way
+    /// replay must), verify each record's checksum, structure and
+    /// plan-consistency, and report the longest valid prefix a repair
+    /// would salvage. I/O errors still surface as [`Error::Io`]; any
+    /// byte content, however hostile, yields a report.
+    pub fn fsck_with(fs: &dyn Fs, path: &Path) -> Result<FsckReport> {
+        let data = fs.read(path)?;
+        Ok(fsck_bytes(&data))
+    }
+
+    /// [`Self::fsck_repair_with`] on the real filesystem.
+    pub fn fsck_repair(path: &Path) -> Result<FsckReport> {
+        Self::fsck_repair_with(&RealFs, path)
+    }
+
+    /// Repair a damaged journal: quarantine everything past the longest
+    /// valid prefix into a `<journal>.corrupt` sidecar, then truncate
+    /// the journal to the prefix and fsync. A clean journal is left
+    /// untouched. Returns the (pre-repair) [`FsckReport`].
+    ///
+    /// The caller must hold the job's run lock (see
+    /// [`super::JobStore::fsck_repair`]) — truncating under a live
+    /// appender would corrupt, not repair. A journal whose magic header
+    /// is damaged is refused: there is no prefix to salvage, and
+    /// destroying the remaining bytes would help no one.
+    pub fn fsck_repair_with(fs: &dyn Fs, path: &Path) -> Result<FsckReport> {
+        let data = fs.read(path)?;
+        let report = fsck_bytes(&data);
+        match &report.damage {
+            None => return Ok(report),
+            Some(FsckDamage::Header) => {
+                return Err(Error::JournalCorrupt {
+                    record: 0,
+                    cause: "magic header damaged — nothing salvageable".into(),
+                })
+            }
+            Some(_) => {}
+        }
+        let cut = report.valid_bytes as usize;
+        let quarantine = quarantine_path(path);
+        fs.write(&quarantine, &data[cut.min(data.len())..])?;
+        let mut file = fs.open_rw(path)?;
+        file.set_len(report.valid_bytes)?;
+        file.sync_data()?;
+        if let Some(parent) = path.parent() {
+            let _ = fs.sync_dir(parent);
+        }
+        Ok(report)
+    }
+}
+
+/// Sidecar path the repair quarantines corrupt bytes into
+/// (`<id>.journal` → `<id>.journal.corrupt`).
+pub fn quarantine_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".corrupt");
+    path.with_file_name(name)
+}
+
+/// One line's diagnostic from [`Journal::fsck`].
+#[derive(Clone, Debug)]
+pub struct FsckRecord {
+    /// 1-based record ordinal (SPEC = 1; the magic header is line 0).
+    pub record: usize,
+    /// Byte offset of the record's first byte.
+    pub offset: u64,
+    /// Leading record tag (`SPEC`/`CHUNK`/`DONE`), or `?` when the line
+    /// is not even UTF-8.
+    pub tag: String,
+    /// `None` = intact and inside the salvageable prefix; `Some` = why
+    /// the record is damaged (or quarantined despite looking intact).
+    pub error: Option<String>,
+}
+
+/// Damage class of the first invalid line found by [`Journal::fsck`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FsckDamage {
+    /// Only the final record is damaged/unterminated — an ordinary torn
+    /// write that replay already tolerates; repair trims it.
+    TornTail,
+    /// An interior record is damaged: replay refuses the journal with
+    /// [`Error::JournalCorrupt`]; repair salvages the prefix.
+    Corrupt {
+        /// 1-based ordinal of the first damaged record.
+        record: usize,
+        /// Why it is damaged.
+        cause: String,
+    },
+    /// The magic header itself is wrong — nothing is salvageable.
+    Header,
+}
+
+/// What [`Journal::fsck`] found.
+#[derive(Clone, Debug)]
+pub struct FsckReport {
+    /// Per-record diagnostics in file order (magic header excluded).
+    pub records: Vec<FsckRecord>,
+    /// Magic header intact?
+    pub magic_ok: bool,
+    /// Records in the salvageable prefix.
+    pub valid_records: usize,
+    /// Byte length of the salvageable prefix (magic included).
+    pub valid_bytes: u64,
+    /// Total journal bytes on disk at scan time.
+    pub total_bytes: u64,
+    /// First damage found, if any.
+    pub damage: Option<FsckDamage>,
+}
+
+impl FsckReport {
+    /// No damage at all — replay and repair would both be no-ops.
+    pub fn is_clean(&self) -> bool {
+        self.damage.is_none()
+    }
+
+    /// The typed error replay would raise, if the damage is the kind
+    /// replay refuses (interior corruption / broken header). A torn
+    /// tail returns `None` — replay tolerates it.
+    pub fn error(&self) -> Option<Error> {
+        match &self.damage {
+            Some(FsckDamage::Corrupt { record, cause }) => Some(Error::JournalCorrupt {
+                record: *record,
+                cause: cause.clone(),
+            }),
+            Some(FsckDamage::Header) => Some(bad("missing or wrong magic header")),
+            Some(FsckDamage::TornTail) | None => None,
+        }
+    }
+
+    /// One human line per record (the CLI's per-record diagnostics).
+    pub fn render_records(&self) -> Vec<String> {
+        self.records
+            .iter()
+            .map(|r| match &r.error {
+                None => format!("record {:>3} @{:>6}  {:<5} ok", r.record, r.offset, r.tag),
+                Some(e) => {
+                    format!("record {:>3} @{:>6}  {:<5} BAD: {e}", r.record, r.offset, r.tag)
+                }
+            })
+            .collect()
+    }
+}
+
+/// The fsck scanner: pure function of the journal bytes; never panics.
+fn fsck_bytes(data: &[u8]) -> FsckReport {
+    let mut report = FsckReport {
+        records: Vec::new(),
+        magic_ok: false,
+        valid_records: 0,
+        valid_bytes: 0,
+        total_bytes: data.len() as u64,
+        damage: None,
+    };
+    let mut pos = 0usize;
+    let mut ordinal = 0usize;
+    let mut first = true;
+    let mut seen_spec = false;
+    let mut plan_len: Option<usize> = None;
+    while pos < data.len() {
+        let (end, terminated) = match data[pos..].iter().position(|&b| b == b'\n') {
+            Some(rel) => (pos + rel, true),
+            None => (data.len(), false),
+        };
+        let is_final = !terminated || end + 1 >= data.len();
+        let line = std::str::from_utf8(&data[pos..end]).ok();
+        if first {
+            first = false;
+            report.magic_ok = terminated && line == Some(MAGIC);
+            if !report.magic_ok {
+                report.damage = Some(FsckDamage::Header);
+                break;
+            }
+            report.valid_bytes = (end + 1) as u64;
+            pos = end + 1;
+            continue;
+        }
+        ordinal += 1;
+        let verdict: std::result::Result<(), String> = match line {
+            None => Err("non-UTF8 bytes".into()),
+            Some(_) if !terminated => Err("unterminated record (torn write)".into()),
+            Some(l) => parse_record(l)
+                .map_err(|e| cause_of(&e))
+                .and_then(|rec| check_structure(&rec, ordinal, &mut seen_spec, &mut plan_len)),
+        };
+        let tag = line
+            .map(|l| l.split(' ').next().unwrap_or("?"))
+            .filter(|t| matches!(*t, "SPEC" | "CHUNK" | "DONE"))
+            .unwrap_or("?")
+            .to_string();
+        match verdict {
+            Ok(()) if report.damage.is_none() => {
+                report.valid_records += 1;
+                report.valid_bytes = (end + 1) as u64;
+                report.records.push(FsckRecord {
+                    record: ordinal,
+                    offset: pos as u64,
+                    tag,
+                    error: None,
+                });
+            }
+            Ok(()) => report.records.push(FsckRecord {
+                record: ordinal,
+                offset: pos as u64,
+                tag,
+                error: Some("intact but beyond first damage (will be quarantined)".into()),
+            }),
+            Err(cause) => {
+                report.records.push(FsckRecord {
+                    record: ordinal,
+                    offset: pos as u64,
+                    tag,
+                    error: Some(cause.clone()),
+                });
+                if report.damage.is_none() {
+                    report.damage = Some(if is_final {
+                        FsckDamage::TornTail
+                    } else {
+                        FsckDamage::Corrupt { record: ordinal, cause }
+                    });
+                }
+            }
+        }
+        if !terminated {
+            break;
+        }
+        pos = end + 1;
+    }
+    if first {
+        // Empty file: no magic, nothing salvageable.
+        report.damage = Some(FsckDamage::Header);
+    }
+    report
+}
+
+/// Structural validity on top of per-record checksums: SPEC first and
+/// only once, chunk indices inside the spec's plan — the same rules the
+/// replay fold enforces, applied record-at-a-time so fsck can keep
+/// walking past the first violation.
+fn check_structure(
+    rec: &Record,
+    ordinal: usize,
+    seen_spec: &mut bool,
+    plan_len: &mut Option<usize>,
+) -> std::result::Result<(), String> {
+    match rec {
+        Record::Spec(spec) => {
+            if *seen_spec {
+                return Err("duplicate SPEC record".into());
+            }
+            if ordinal != 1 {
+                return Err("SPEC is not the first record".into());
+            }
+            *seen_spec = true;
+            match spec.plan() {
+                Ok((plan, _)) => *plan_len = Some(plan.len()),
+                Err(e) => return Err(format!("unplannable spec: {e}")),
+            }
+            Ok(())
+        }
+        Record::Chunk { index, .. } => {
+            if !*seen_spec {
+                return Err("record before SPEC".into());
+            }
+            match plan_len {
+                Some(pl) if *index as usize >= *pl => {
+                    Err(format!("chunk index {index} outside plan of {pl}"))
+                }
+                _ => Ok(()),
+            }
+        }
+        Record::Done { .. } => {
+            if !*seen_spec {
+                return Err("record before SPEC".into());
+            }
+            Ok(())
+        }
     }
 }
 
@@ -448,6 +838,8 @@ mod tests {
     use super::*;
     use crate::matrix::gen;
     use crate::testkit::TestRng;
+    use std::fs::OpenOptions;
+    use std::io::Write;
     use std::path::PathBuf;
 
     fn tmp(tag: &str) -> PathBuf {
@@ -709,5 +1101,158 @@ mod tests {
         let path = tmp("clobber");
         Journal::create(&path, &sample_spec()).unwrap();
         assert!(Journal::create(&path, &sample_spec()).is_err());
+    }
+
+    fn journal_with_chunks(tag: &str, chunks: u64) -> PathBuf {
+        let path = tmp(tag);
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        for i in 0..chunks {
+            j.append(&Record::Chunk {
+                index: i,
+                rec: ChunkRecord { value: JobValue::F64(i as f64), terms: 1, micros: 0 },
+            })
+            .unwrap();
+        }
+        path
+    }
+
+    #[test]
+    fn fsck_clean_journal_is_clean() {
+        let path = journal_with_chunks("fsck-clean", 2);
+        let report = Journal::fsck(&path).unwrap();
+        assert!(report.is_clean(), "{:?}", report.damage);
+        assert!(report.magic_ok);
+        assert_eq!(report.valid_records, 3);
+        assert_eq!(report.valid_bytes, report.total_bytes);
+        assert!(report.error().is_none());
+        assert!(report.render_records().iter().all(|l| l.ends_with("ok")));
+        // Repairing a clean journal is a no-op.
+        let before = std::fs::read(&path).unwrap();
+        Journal::fsck_repair(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), before);
+        assert!(!quarantine_path(&path).exists());
+    }
+
+    #[test]
+    fn fsck_flags_and_repairs_torn_tail() {
+        let path = journal_with_chunks("fsck-torn", 2);
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"CHUNK torn").unwrap();
+        }
+        let report = Journal::fsck(&path).unwrap();
+        assert_eq!(report.damage, Some(FsckDamage::TornTail));
+        assert_eq!(report.valid_records, 3);
+        assert!(report.error().is_none(), "replay tolerates a torn tail");
+        Journal::fsck_repair(&path).unwrap();
+        assert_eq!(std::fs::read(&quarantine_path(&path)).unwrap(), b"CHUNK torn");
+        assert!(Journal::fsck(&path).unwrap().is_clean());
+        assert_eq!(Journal::replay(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn fsck_salvages_longest_prefix_of_interior_corruption() {
+        let path = journal_with_chunks("fsck-interior", 3);
+        // Flip one byte inside the *second* chunk record (record 3).
+        let mut data = std::fs::read(&path).unwrap();
+        let text = String::from_utf8(data.clone()).unwrap();
+        let off = text.match_indices("CHUNK").nth(1).unwrap().0 + 6;
+        data[off] ^= 0x01;
+        std::fs::write(&path, &data).unwrap();
+
+        match Journal::replay(&path).unwrap_err() {
+            Error::JournalCorrupt { record, cause } => {
+                assert_eq!(record, 3);
+                assert!(cause.contains("checksum"), "{cause}");
+            }
+            other => panic!("want JournalCorrupt, got {other}"),
+        }
+        let report = Journal::fsck(&path).unwrap();
+        match &report.damage {
+            Some(FsckDamage::Corrupt { record: 3, cause }) => {
+                assert!(cause.contains("checksum"), "{cause}")
+            }
+            other => panic!("want Corrupt at record 3, got {other:?}"),
+        }
+        assert_eq!(report.valid_records, 2, "SPEC + first chunk salvageable");
+        assert!(matches!(report.error(), Some(Error::JournalCorrupt { record: 3, .. })));
+        // Record 4 is intact but beyond the damage: reported, quarantined.
+        let r4 = report.records.iter().find(|r| r.record == 4).unwrap();
+        assert!(r4.error.as_deref().unwrap_or("").contains("quarantined"), "{r4:?}");
+
+        let repaired = Journal::fsck_repair(&path).unwrap();
+        assert_eq!(repaired.valid_records, 2);
+        let salvaged = Journal::replay(&path).unwrap();
+        assert_eq!(salvaged.len(), 2, "SPEC + chunk 0 survive");
+        assert!(std::fs::read(&quarantine_path(&path)).unwrap().len() as u64
+            == report.total_bytes - report.valid_bytes);
+        // The salvaged journal resumes: reopen-for-append still works.
+        let (mut j, records) = Journal::open_append(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        j.append(&Record::Chunk {
+            index: 1,
+            rec: ChunkRecord { value: JobValue::F64(1.0), terms: 1, micros: 0 },
+        })
+        .unwrap();
+        assert_eq!(Journal::replay(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn fsck_flags_structural_damage() {
+        // A checksum-valid duplicate SPEC is damage replay's checksums
+        // cannot see; fsck's structural pass catches it.
+        let path = journal_with_chunks("fsck-dup-spec", 1);
+        let spec_line = {
+            let text = std::fs::read_to_string(&path).unwrap();
+            text.lines().nth(1).unwrap().to_string()
+        };
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{spec_line}").unwrap();
+        }
+        let report = Journal::fsck(&path).unwrap();
+        let bad = report.records.iter().find(|r| r.error.is_some()).unwrap();
+        assert_eq!(bad.record, 3);
+        assert!(bad.error.as_deref().unwrap().contains("duplicate SPEC"), "{bad:?}");
+        Journal::fsck_repair(&path).unwrap();
+        assert_eq!(Journal::replay(&path).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fsck_refuses_headerless_repair() {
+        let path = tmp("fsck-header");
+        std::fs::write(&path, b"not a journal\n").unwrap();
+        let report = Journal::fsck(&path).unwrap();
+        assert_eq!(report.damage, Some(FsckDamage::Header));
+        assert!(report.error().is_some());
+        match Journal::fsck_repair(&path).unwrap_err() {
+            Error::JournalCorrupt { record: 0, cause } => {
+                assert!(cause.contains("header"), "{cause}")
+            }
+            other => panic!("{other}"),
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), b"not a journal\n", "refusal touches nothing");
+    }
+
+    #[test]
+    fn append_rolls_back_a_torn_write() {
+        use super::super::fs::{FaultConfig, FaultFs};
+        let path = journal_with_chunks("rollback", 1);
+        let cfg = FaultConfig { torn_write_per_10k: 10_000, ..FaultConfig::default() };
+        let fs = FaultFs::new(3, cfg);
+        let (mut j, _) = Journal::open_append_with(fs.as_ref(), &path).unwrap();
+        fs.arm(true);
+        let rec = Record::Chunk {
+            index: 1,
+            rec: ChunkRecord { value: JobValue::F64(4.0), terms: 1, micros: 0 },
+        };
+        let err = j.append(&rec).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        // The rollback leaves a byte-clean journal: no torn tail at all.
+        assert!(Journal::fsck(&path).unwrap().is_clean());
+        // Retry once the fault passes: same handle, no reopen needed.
+        fs.arm(false);
+        j.append(&rec).unwrap();
+        assert_eq!(Journal::replay(&path).unwrap().len(), 3);
     }
 }

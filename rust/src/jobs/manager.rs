@@ -122,7 +122,7 @@ impl JobManager {
             // started and its id never reached the caller, so the
             // journal is an orphan — remove it.
             if let Ok(path) = self.store.journal_path(&id) {
-                let _ = std::fs::remove_file(path);
+                let _ = self.store.fs().remove_file(&path);
             }
             return Err(e);
         }

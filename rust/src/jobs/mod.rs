@@ -30,14 +30,22 @@
 //! [`crate::coordinator::WorkerMetrics`] progress counters),
 //! [`JobManager`] (background jobs behind the TCP service's
 //! `JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME` verbs), and the
-//! `raddet job submit|status|resume|list|export` CLI.
+//! `raddet job submit|status|resume|list|export|fsck` CLI. All of it
+//! does filesystem I/O through the [`fs::Fs`] storage seam, so the
+//! deterministic simulation fabric can fault the disk ([`FaultFs`])
+//! under the same seed that drives its network and clock.
 
+pub mod fs;
 pub mod journal;
 pub mod manager;
 pub mod runner;
 pub mod store;
 
-pub use journal::{encode_spec_body, parse_spec_body, Journal, MetaRecord, Record, SpecMeta};
+pub use fs::{FaultConfig, FaultFs, Fs, FsFile, RealFs};
+pub use journal::{
+    encode_spec_body, parse_spec_body, quarantine_path, FsckDamage, FsckRecord, FsckReport,
+    Journal, MetaRecord, Record, SpecMeta,
+};
 pub use manager::JobManager;
 pub use runner::{JobOutcome, JobRunner, RunnerConfig};
 pub use store::{valid_id, JobStatus, JobStore, LoadedJob, RunLock};

@@ -18,7 +18,7 @@
 //! and composition is a fixed-order fold ([`super::compose_partials`]),
 //! the final result is bitwise-identical to an uninterrupted sweep.
 
-use super::journal::{Journal, Record};
+use super::journal::Record;
 use super::store::{JobStatus, JobStore, LoadedJob};
 use super::{compose_partials, ChunkRecord, JobSpec, JobValue};
 use crate::combin::{Chunk, PascalTable};
@@ -108,11 +108,10 @@ impl JobRunner {
     ) -> Result<JobOutcome> {
         let _lock = lock; // held until return
         let started = Instant::now();
-        let path = store.journal_path(id)?;
-        if !path.is_file() {
+        if !store.exists(id) {
             return Err(Error::Job(format!("unknown job id {id:?}")));
         }
-        let (mut journal, records) = Journal::open_append(&path)?;
+        let (mut journal, records) = store.open_append(id)?;
         let job = LoadedJob::from_records(id, records)?;
         let mut jm = JobMetrics::default();
 

@@ -4,8 +4,14 @@
 //! on every call (journals are small — one line per chunk), so status is
 //! always consistent with what would survive a crash, and any process
 //! that can see the directory can inspect or resume a job.
+//!
+//! Every filesystem touch — journals, run locks, listings — goes
+//! through the store's [`Fs`] handle ([`JobStore::with_fs`]), so the
+//! deterministic simulation fabric can fault the disk under every store
+//! operation with one seed.
 
-use super::journal::{Journal, MetaRecord, Record};
+use super::fs::{self, Fs};
+use super::journal::{FsckReport, Journal, MetaRecord, Record};
 use super::{plan_dims, ChunkRecord, JobSpec, JobValue};
 use crate::clock::{self, Clock};
 use crate::combin::Chunk;
@@ -87,10 +93,13 @@ impl From<MetaRecord> for TailEvent {
 }
 
 /// Fold the post-SPEC tail: duplicate SPECs and out-of-plan chunk
-/// indices are corruption; a re-journaled chunk (a resume that re-ran a
-/// chunk whose record was torn away) is harmless — values are
-/// deterministic, so the rewrite is identical. Concurrent runners are
-/// excluded by [`JobStore::lock_job`].
+/// indices are corruption — reported as typed
+/// [`Error::JournalCorrupt`] carrying the 1-based record ordinal (tail
+/// events start at record 2, after the SPEC) so `job fsck` can point at
+/// the damaged line. A re-journaled chunk (a resume that re-ran a chunk
+/// whose record was torn away) is harmless — values are deterministic,
+/// so the rewrite is identical. Concurrent runners are excluded by
+/// [`JobStore::lock_job`].
 fn fold_tail(
     id: &str,
     plan_len: usize,
@@ -98,16 +107,23 @@ fn fold_tail(
 ) -> Result<(BTreeMap<u64, ChunkRecord>, Option<(JobValue, u128)>)> {
     let mut completed = BTreeMap::new();
     let mut done = None;
-    for ev in tail {
+    for (i, ev) in tail.enumerate() {
+        let record = i + 2;
         match ev {
             TailEvent::Spec => {
-                return Err(Error::Job(format!("job {id}: duplicate SPEC record")))
+                return Err(Error::JournalCorrupt {
+                    record,
+                    cause: format!("job {id}: duplicate SPEC record"),
+                })
             }
             TailEvent::Chunk(index, rec) => {
                 if index as usize >= plan_len {
-                    return Err(Error::Job(format!(
-                        "job {id}: chunk index {index} outside plan of {plan_len}"
-                    )));
+                    return Err(Error::JournalCorrupt {
+                        record,
+                        cause: format!(
+                            "job {id}: chunk index {index} outside plan of {plan_len}"
+                        ),
+                    });
                 }
                 completed.insert(index, rec);
             }
@@ -201,6 +217,7 @@ impl JobStatus {
 #[derive(Debug)]
 pub struct RunLock {
     path: PathBuf,
+    fs: Arc<dyn Fs>,
 }
 
 impl Drop for RunLock {
@@ -208,12 +225,14 @@ impl Drop for RunLock {
         // Release only if the file still carries *our* pid: if a racing
         // reclaim ever displaced this lock, deleting blindly would
         // remove someone else's — verify, never clobber.
-        let ours = std::fs::read_to_string(&self.path)
+        let ours = self
+            .fs
+            .read_to_string(&self.path)
             .ok()
             .and_then(|s| s.trim().parse::<u32>().ok())
             == Some(std::process::id());
         if ours {
-            let _ = std::fs::remove_file(&self.path);
+            let _ = self.fs.remove_file(&self.path);
         }
     }
 }
@@ -243,6 +262,8 @@ pub struct JobStore {
     /// Per-id SPEC head cache (shared across clones) so status polling
     /// never re-reads or re-hashes the matrix-sized SPEC line.
     spec_cache: Arc<Mutex<HashMap<String, SpecCacheEntry>>>,
+    /// The storage seam every journal/lock/listing call goes through.
+    fs: Arc<dyn Fs>,
 }
 
 impl JobStore {
@@ -258,6 +279,7 @@ impl JobStore {
             epoch_millis,
             clock: clock::wall(),
             spec_cache: Arc::new(Mutex::new(HashMap::new())),
+            fs: fs::real(),
         })
     }
 
@@ -269,6 +291,20 @@ impl JobStore {
         self.clock = clock;
         self.epoch_millis = 0;
         self
+    }
+
+    /// Replace the storage seam (deterministic-simulation hook): every
+    /// subsequent journal, lock and listing call goes through `fs`, so
+    /// a seeded [`super::fs::FaultFs`] faults them all.
+    pub fn with_fs(mut self, fs: Arc<dyn Fs>) -> Self {
+        self.fs = fs;
+        self
+    }
+
+    /// The store's storage seam (for components that touch files beside
+    /// the journals — fleet markers, orphan cleanup).
+    pub fn fs(&self) -> &Arc<dyn Fs> {
+        &self.fs
     }
 
     /// Store root directory.
@@ -289,21 +325,21 @@ impl JobStore {
     pub fn create(&self, spec: &JobSpec) -> Result<String> {
         spec.plan()?; // reject impossible jobs before touching disk
         let id = new_id(self.epoch_millis, self.clock.as_ref());
-        Journal::create(&self.journal_path(&id)?, spec)?;
+        Journal::create_with(self.fs.as_ref(), &self.journal_path(&id)?, spec)?;
         Ok(id)
     }
 
     /// Does a journal exist for `id`?
     pub fn exists(&self, id: &str) -> bool {
-        self.journal_path(id).map(|p| p.is_file()).unwrap_or(false)
+        self.journal_path(id)
+            .map(|p| self.fs.is_file(&p))
+            .unwrap_or(false)
     }
 
     /// All job ids in the store (sorted).
     pub fn list(&self) -> Result<Vec<String>> {
         let mut ids = Vec::new();
-        for entry in std::fs::read_dir(&self.root)? {
-            let name = entry?.file_name();
-            let name = name.to_string_lossy();
+        for name in self.fs.read_dir_names(&self.root)? {
             if let Some(id) = name.strip_suffix(".journal") {
                 ids.push(id.to_string());
             }
@@ -315,10 +351,40 @@ impl JobStore {
     /// Replay a job's journal.
     pub fn load(&self, id: &str) -> Result<LoadedJob> {
         let path = self.journal_path(id)?;
-        if !path.is_file() {
+        if !self.fs.is_file(&path) {
             return Err(Error::Job(format!("unknown job id {id:?}")));
         }
-        LoadedJob::from_records(id, Journal::replay(&path)?)
+        LoadedJob::from_records(id, Journal::replay_with(self.fs.as_ref(), &path)?)
+    }
+
+    /// Open a job's journal for append through the store's [`Fs`] seam
+    /// (the runner's resume path). The caller must hold the run lock.
+    pub fn open_append(&self, id: &str) -> Result<(Journal, Vec<Record>)> {
+        Journal::open_append_with(self.fs.as_ref(), &self.journal_path(id)?)
+    }
+
+    /// Diagnose a job's journal ([`Journal::fsck`]): read-only,
+    /// never panics, reports per-record damage and the salvageable
+    /// prefix.
+    pub fn fsck(&self, id: &str) -> Result<FsckReport> {
+        let path = self.journal_path(id)?;
+        if !self.fs.is_file(&path) {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        Journal::fsck_with(self.fs.as_ref(), &path)
+    }
+
+    /// Repair a job's journal ([`Journal::fsck_repair`]) under the run
+    /// lock — truncating a journal a live runner is appending to would
+    /// corrupt, not repair. The salvaged job resumes bitwise-identically
+    /// (chunks are deterministic; quarantined ones are recomputed).
+    pub fn fsck_repair(&self, id: &str) -> Result<FsckReport> {
+        let path = self.journal_path(id)?;
+        if !self.fs.is_file(&path) {
+            return Err(Error::Job(format!("unknown job id {id:?}")));
+        }
+        let _lock = self.lock_job(id)?;
+        Journal::fsck_repair_with(self.fs.as_ref(), &path)
     }
 
     /// Progress snapshot for a job, built for polling: the journal's
@@ -329,7 +395,7 @@ impl JobStore {
     /// `fold_tail` the resume path uses.
     pub fn status(&self, id: &str) -> Result<JobStatus> {
         let path = self.journal_path(id)?;
-        if !path.is_file() {
+        if !self.fs.is_file(&path) {
             return Err(Error::Job(format!("unknown job id {id:?}")));
         }
         let cached = {
@@ -339,7 +405,8 @@ impl JobStore {
         let entry = match cached {
             Some(e) => e,
             None => {
-                let (meta, tail_offset) = Journal::read_spec_meta(&path)?;
+                let (meta, tail_offset) =
+                    Journal::read_spec_meta_with(self.fs.as_ref(), &path)?;
                 let (plan, terms_total) = plan_dims(meta.m, meta.n, meta.chunks)?;
                 let e = SpecCacheEntry {
                     tail_offset,
@@ -353,7 +420,7 @@ impl JobStore {
                 e
             }
         };
-        let tail = Journal::replay_tail(&path, entry.tail_offset)?;
+        let tail = Journal::replay_tail_with(self.fs.as_ref(), &path, entry.tail_offset)?;
         let (completed, done) = fold_tail(id, entry.plan_len, tail.into_iter().map(TailEvent::from))?;
         let terms_done: u128 = completed.values().map(|r| r.terms as u128).sum();
         Ok(JobStatus {
@@ -383,16 +450,21 @@ impl JobStore {
         }
         let lock_path = self.root.join(format!("{id}.lock"));
         let tmp = self.root.join(format!("{id}.lock.{}", std::process::id()));
-        std::fs::write(&tmp, format!("{}\n", std::process::id()))?;
+        self.fs.write(&tmp, format!("{}\n", std::process::id()).as_bytes())?;
         let mut result = None;
         for attempt in 0..2 {
-            match std::fs::hard_link(&tmp, &lock_path) {
+            match self.fs.hard_link(&tmp, &lock_path) {
                 Ok(()) => {
-                    result = Some(Ok(RunLock { path: lock_path }));
+                    result = Some(Ok(RunLock {
+                        path: lock_path,
+                        fs: Arc::clone(&self.fs),
+                    }));
                     break;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let owner: Option<u32> = std::fs::read_to_string(&lock_path)
+                    let owner: Option<u32> = self
+                        .fs
+                        .read_to_string(&lock_path)
                         .ok()
                         .and_then(|s| s.trim().parse().ok());
                     let dead = owner.is_some_and(|pid| {
@@ -402,7 +474,7 @@ impl JobStore {
                     // A vanished lock (read failed, file gone) means a
                     // holder released between our link and read — just
                     // retry the link.
-                    let vanished = owner.is_none() && !lock_path.exists();
+                    let vanished = owner.is_none() && !self.fs.is_file(&lock_path);
                     if (dead || vanished) && attempt == 0 {
                         if dead {
                             self.reclaim_stale_lock(&lock_path, owner);
@@ -421,7 +493,7 @@ impl JobStore {
                 }
             }
         }
-        let _ = std::fs::remove_file(&tmp);
+        let _ = self.fs.remove_file(&tmp);
         result.unwrap_or_else(|| {
             Err(Error::Job(format!("job {id:?} is locked by another runner")))
         })
@@ -438,7 +510,9 @@ impl JobStore {
         if !valid_id(id) {
             return None;
         }
-        let pid: u32 = std::fs::read_to_string(self.root.join(format!("{id}.lock")))
+        let pid: u32 = self
+            .fs
+            .read_to_string(&self.root.join(format!("{id}.lock")))
             .ok()?
             .trim()
             .parse()
@@ -461,14 +535,16 @@ impl JobStore {
             .unwrap_or_default();
         grave_name.push(format!(".reclaim.{}", std::process::id()));
         let grave = self.root.join(grave_name);
-        if std::fs::rename(lock_path, &grave).is_err() {
+        if self.fs.rename(lock_path, &grave).is_err() {
             return; // another contender won the reclaim race
         }
-        let got: Option<u32> = std::fs::read_to_string(&grave)
+        let got: Option<u32> = self
+            .fs
+            .read_to_string(&grave)
             .ok()
             .and_then(|s| s.trim().parse().ok());
         if got == dead_owner {
-            let _ = std::fs::remove_file(&grave);
+            let _ = self.fs.remove_file(&grave);
         } else {
             // We renamed a *live* lock that replaced the stale one in
             // the inspection window — put it back via `hard_link`,
@@ -476,8 +552,8 @@ impl JobStore {
             // acquired the freed name meanwhile; pid-verified
             // [`RunLock::drop`] keeps even that residual three-way
             // race from deleting the wrong holder's lock.
-            if std::fs::hard_link(&grave, lock_path).is_ok() {
-                let _ = std::fs::remove_file(&grave);
+            if self.fs.hard_link(&grave, lock_path).is_ok() {
+                let _ = self.fs.remove_file(&grave);
             }
         }
     }
@@ -630,5 +706,59 @@ mod tests {
         let id = store.create(&sample_spec()).unwrap();
         let _lock = store.lock_job(&id).unwrap();
         assert_eq!(store.list().unwrap(), vec![id]);
+    }
+
+    #[test]
+    fn store_works_unchanged_behind_a_disarmed_faultfs() {
+        let root = crate::testkit::scratch_dir("store-faultfs");
+        let ffs = super::super::fs::FaultFs::new(11, super::super::fs::FaultConfig::hostile());
+        let store = JobStore::open(&root).unwrap().with_fs(ffs);
+        let id = store.create(&sample_spec()).unwrap();
+        assert!(store.exists(&id));
+        assert_eq!(store.list().unwrap(), vec![id.clone()]);
+        let _lock = store.lock_job(&id).unwrap();
+        assert!(store.status(&id).is_ok());
+    }
+
+    #[test]
+    fn corrupt_journal_fscks_repairs_and_resumes_identically() {
+        let store = tmp_store("fsck-resume");
+        let id = store.create(&sample_spec()).unwrap();
+        let runner = || crate::jobs::JobRunner::new(crate::jobs::RunnerConfig::default());
+        runner().run(&store, &id).unwrap();
+        let reference = store.load(&id).unwrap().done.unwrap();
+
+        // Corrupt one byte of an interior CHUNK record.
+        let path = store.journal_path(&id).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let text = String::from_utf8(data.clone()).unwrap();
+        let off = text.match_indices("CHUNK").nth(1).unwrap().0 + 6;
+        data[off] ^= 0x01;
+        std::fs::write(&path, &data).unwrap();
+
+        // Typed refusal, never a panic; fsck sees the damage.
+        assert!(matches!(store.load(&id), Err(Error::JournalCorrupt { .. })));
+        let report = store.fsck(&id).unwrap();
+        assert!(!report.is_clean());
+        assert!(report.valid_records >= 2, "SPEC + first chunk salvage");
+
+        // Repair quarantines the tail (DONE included), then a plain
+        // resume recomputes the lost chunks to the identical bits.
+        store.fsck_repair(&id).unwrap();
+        let salvaged = store.load(&id).unwrap();
+        assert!(salvaged.done.is_none(), "DONE was quarantined with the tail");
+        runner().run(&store, &id).unwrap();
+        let resumed = store.load(&id).unwrap().done.unwrap();
+        assert_eq!(reference.0.encode(), resumed.0.encode(), "bitwise-identical resume");
+        assert_eq!(reference.1, resumed.1);
+    }
+
+    #[test]
+    fn fsck_repair_respects_the_run_lock() {
+        let store = tmp_store("fsck-lock");
+        let id = store.create(&sample_spec()).unwrap();
+        let _lock = store.lock_job(&id).unwrap();
+        let err = store.fsck_repair(&id).unwrap_err();
+        assert!(err.to_string().contains("locked"), "{err}");
     }
 }

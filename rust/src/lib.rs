@@ -60,6 +60,10 @@
 //! * [`clock`] — the virtual-time seam: a [`clock::Clock`] trait with
 //!   the production [`clock::WallClock`] and the manually-advanced
 //!   [`clock::SimClock`] behind every TTL, heartbeat and wait deadline.
+//! * [`retry`] — the unified seeded retry policy (exponential backoff
+//!   with jitter over the [`clock`] seam) pacing every reconnect and
+//!   idle loop; [`jobs::fs`] is the matching storage seam whose
+//!   [`jobs::FaultFs`] faults the disk under the same scenario seed.
 //! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
 //!   criterion / proptest / clap (offline environment, see DESIGN.md §2);
 //!   [`testkit::sim`] is the deterministic simulation fabric (virtual
@@ -99,6 +103,7 @@ pub mod jobs;
 pub mod linalg;
 pub mod matrix;
 pub mod pram;
+pub mod retry;
 pub mod runtime;
 pub mod scalar;
 pub mod service;

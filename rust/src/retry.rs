@@ -1,0 +1,308 @@
+//! Unified seeded retry policy: exponential backoff with jitter,
+//! deadline-capped, driven by the [`Clock`] seam.
+//!
+//! Every transient-fault loop in the crate — fleet worker reconnect and
+//! idle polling, heartbeat redials, client verb calls — paces itself
+//! through one [`Backoff`] instead of ad-hoc fixed sleeps, so:
+//!
+//! * a flapping server sees exponentially *decaying* pressure instead
+//!   of a tight reconnect loop,
+//! * jitter decorrelates a fleet of workers that all lost the same
+//!   server at the same instant (no thundering herd on restart),
+//! * the schedule is a **seeded, replayable function** — under the
+//!   deterministic simulation fabric the same seed yields the same
+//!   delays, so fault scenarios replay exactly, and
+//! * time comes from the [`Clock`] seam, so simulated runs never
+//!   wall-sleep.
+//!
+//! The jitter is "equal jitter": each delay is drawn uniformly from
+//! `[d/2, d]` where `d` doubles per attempt up to the cap — bounded
+//! below (progress pressure never collapses to zero) and decorrelated
+//! above.
+
+use crate::clock::Clock;
+use crate::testkit::TestRng;
+use crate::{Error, Result};
+use std::time::Duration;
+
+/// Parameters of a retry schedule. All methods are pure; state lives in
+/// [`Backoff`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Nominal first delay (the attempt-0 draw is in `[base/2, base]`).
+    pub base: Duration,
+    /// Per-delay ceiling: the doubling stops here.
+    pub cap: Duration,
+    /// Total-elapsed budget measured from the first delay; when the
+    /// *next* delay would end past it, the schedule is exhausted.
+    /// `None` ⇒ retry forever (the caller's stop flag bounds the loop).
+    pub deadline: Option<Duration>,
+    /// Attempt-count budget. `None` ⇒ unbounded.
+    pub max_attempts: Option<u32>,
+}
+
+impl RetryPolicy {
+    /// A policy that starts at `base` and caps delays at `cap`, with no
+    /// deadline or attempt bound.
+    pub fn new(base: Duration, cap: Duration) -> RetryPolicy {
+        RetryPolicy { base, cap, deadline: None, max_attempts: None }
+    }
+
+    /// The schedule a configured poll interval turns into: start at a
+    /// quarter of `poll` (reacting *faster* than the old fixed sleep
+    /// when the outage is brief) and back off to eight times `poll`
+    /// (pressing *lighter* when it is not). Unbounded — worker loops
+    /// are bounded by their stop flags and failure caps instead.
+    pub fn for_poll(poll: Duration) -> RetryPolicy {
+        let base = (poll / 4).max(Duration::from_millis(1));
+        let cap = poll.saturating_mul(8).max(base);
+        RetryPolicy::new(base, cap)
+    }
+
+    /// Builder: give up once retries have consumed `deadline`.
+    pub fn with_deadline(mut self, deadline: Duration) -> RetryPolicy {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: give up after `n` delays.
+    pub fn with_max_attempts(mut self, n: u32) -> RetryPolicy {
+        self.max_attempts = Some(n);
+        self
+    }
+}
+
+/// The stateful side of a [`RetryPolicy`]: a seeded delay stream plus
+/// the attempt/elapsed bookkeeping.
+#[derive(Debug)]
+pub struct Backoff {
+    policy: RetryPolicy,
+    rng: TestRng,
+    attempt: u32,
+    /// Virtual instant of the first delay (deadline anchor).
+    started: Option<Duration>,
+}
+
+impl Backoff {
+    /// A backoff following `policy`, drawing jitter from `seed`.
+    pub fn new(policy: RetryPolicy, seed: u64) -> Backoff {
+        Backoff {
+            policy,
+            rng: TestRng::from_seed(seed ^ 0xBAC0_FF01),
+            attempt: 0,
+            started: None,
+        }
+    }
+
+    /// Attempts consumed since the last [`Self::reset`].
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Forget accumulated failures: the next delay starts back at
+    /// `base` and the deadline re-anchors. Call after any productive
+    /// event (a grant served, a verb answered).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+        self.started = None;
+    }
+
+    /// The next delay to wait before retrying, or `None` when the
+    /// policy's deadline/attempt budget is exhausted. Pure bookkeeping —
+    /// the caller sleeps (or schedules) the returned duration.
+    pub fn next_delay(&mut self, clock: &dyn Clock) -> Option<Duration> {
+        if self.policy.max_attempts.is_some_and(|cap| self.attempt >= cap) {
+            return None;
+        }
+        let now = clock.now();
+        let started = *self.started.get_or_insert(now);
+        // d = base·2^attempt, saturating, capped.
+        let nominal = self
+            .policy
+            .base
+            .saturating_mul(1u32.checked_shl(self.attempt).unwrap_or(u32::MAX))
+            .min(self.policy.cap);
+        // Equal jitter: uniform in [nominal/2, nominal].
+        let half = nominal / 2;
+        let span_nanos = (nominal - half).as_nanos() as u64;
+        let jittered = half
+            + Duration::from_nanos(if span_nanos == 0 {
+                0
+            } else {
+                self.rng.u64_below(span_nanos + 1)
+            });
+        if let Some(deadline) = self.policy.deadline {
+            let elapsed = now.saturating_sub(started);
+            if elapsed + jittered > deadline {
+                return None;
+            }
+        }
+        self.attempt += 1;
+        Some(jittered)
+    }
+
+    /// Sleep the next delay on `clock`. Returns `false` (without
+    /// sleeping) when the schedule is exhausted.
+    pub fn sleep(&mut self, clock: &dyn Clock) -> bool {
+        match self.next_delay(clock) {
+            Some(d) => {
+                clock.sleep(d);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Run `op` until it succeeds, the error stops being transient, or the
+/// backoff schedule is exhausted (then the last error is returned).
+/// `transient` decides which errors are worth retrying — see
+/// PROTOCOL.md §Retry-safe errors for the verb-level contract.
+pub fn with_retries<T>(
+    clock: &dyn Clock,
+    mut backoff: Backoff,
+    transient: impl Fn(&Error) -> bool,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if transient(&e) && backoff.sleep(clock) => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::SimClock;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy::new(Duration::from_millis(100), Duration::from_millis(800))
+    }
+
+    #[test]
+    fn delays_double_to_the_cap_with_equal_jitter() {
+        let clock = SimClock::new();
+        let mut b = Backoff::new(policy(), 1);
+        let mut prev_nominal = Duration::from_millis(100);
+        for i in 0..6 {
+            let d = b.next_delay(clock.as_ref() as &dyn Clock).unwrap();
+            let nominal = prev_nominal.min(Duration::from_millis(800));
+            assert!(d >= nominal / 2 && d <= nominal, "attempt {i}: {d:?} vs {nominal:?}");
+            prev_nominal = nominal.saturating_mul(2);
+        }
+    }
+
+    #[test]
+    fn seeded_schedules_replay() {
+        let clock = SimClock::new();
+        let draw = |seed: u64| {
+            let mut b = Backoff::new(policy(), seed);
+            (0..8)
+                .map(|_| b.next_delay(clock.as_ref() as &dyn Clock).unwrap())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw(5), draw(5));
+        assert_ne!(draw(5), draw(6));
+    }
+
+    #[test]
+    fn reset_restarts_at_base() {
+        let clock = SimClock::new();
+        let mut b = Backoff::new(policy(), 2);
+        for _ in 0..5 {
+            b.next_delay(clock.as_ref() as &dyn Clock).unwrap();
+        }
+        b.reset();
+        let d = b.next_delay(clock.as_ref() as &dyn Clock).unwrap();
+        assert!(d <= Duration::from_millis(100), "{d:?}");
+    }
+
+    #[test]
+    fn attempt_budget_exhausts() {
+        let clock = SimClock::new();
+        let mut b = Backoff::new(policy().with_max_attempts(3), 3);
+        for _ in 0..3 {
+            assert!(b.next_delay(clock.as_ref() as &dyn Clock).is_some());
+        }
+        assert!(b.next_delay(clock.as_ref() as &dyn Clock).is_none());
+    }
+
+    #[test]
+    fn deadline_exhausts_on_virtual_time() {
+        let clock = SimClock::new();
+        let mut b = Backoff::new(policy().with_deadline(Duration::from_millis(250)), 4);
+        let mut total = Duration::ZERO;
+        let mut n = 0;
+        while let Some(d) = b.next_delay(clock.as_ref() as &dyn Clock) {
+            total += d;
+            clock.advance(d);
+            n += 1;
+            assert!(n < 32, "deadline never enforced");
+        }
+        assert!(total <= Duration::from_millis(250), "{total:?}");
+        assert!(n >= 1, "a 250ms budget admits at least the first ~100ms delay");
+    }
+
+    #[test]
+    fn with_retries_returns_first_success() {
+        let clock = SimClock::new();
+        let calls = AtomicU32::new(0);
+        // SimClock sleeps park the thread until an advance; drive it
+        // from the jitterless knowledge that delays are finite — use a
+        // zero-delay policy instead so the test needs no second thread.
+        let instant = RetryPolicy::new(Duration::ZERO, Duration::ZERO);
+        let out = with_retries(
+            clock.as_ref() as &dyn Clock,
+            Backoff::new(instant, 7),
+            |_| true,
+            || {
+                if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err(Error::Protocol("transient".into()))
+                } else {
+                    Ok(42)
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(out, 42);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn with_retries_respects_transient_filter() {
+        let clock = SimClock::new();
+        let instant = RetryPolicy::new(Duration::ZERO, Duration::ZERO);
+        let err = with_retries::<()>(
+            clock.as_ref() as &dyn Clock,
+            Backoff::new(instant, 8),
+            |e| !matches!(e, Error::Job(_)),
+            || Err(Error::Job("fatal".into())),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fatal"));
+    }
+
+    #[test]
+    fn with_retries_surfaces_last_error_on_exhaustion() {
+        let clock = SimClock::new();
+        let instant =
+            RetryPolicy::new(Duration::ZERO, Duration::ZERO).with_max_attempts(2);
+        let calls = AtomicU32::new(0);
+        let err = with_retries::<()>(
+            clock.as_ref() as &dyn Clock,
+            Backoff::new(instant, 9),
+            |_| true,
+            || {
+                let n = calls.fetch_add(1, Ordering::SeqCst);
+                Err(Error::Protocol(format!("attempt {n}")))
+            },
+        )
+        .unwrap_err();
+        assert_eq!(calls.load(Ordering::SeqCst), 3, "initial try + 2 retries");
+        assert!(err.to_string().contains("attempt 2"), "{err}");
+    }
+}

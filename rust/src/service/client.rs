@@ -37,6 +37,22 @@ impl Client {
         Ok(Self::over(TcpTransport.connect(addr)?))
     }
 
+    /// Connect over any transport, retrying transient dial failures on
+    /// the seeded backoff schedule (see [`crate::retry`]) — the polite
+    /// way to wait out a server restart instead of tight-looping. Gives
+    /// up (with the last error) when the backoff's deadline/attempt
+    /// budget is exhausted.
+    pub fn connect_with_retry(
+        transport: &dyn Transport,
+        addr: &str,
+        clock: &dyn crate::clock::Clock,
+        backoff: crate::retry::Backoff,
+    ) -> Result<Self> {
+        crate::retry::with_retries(clock, backoff, |_| true, || {
+            Ok(Self::over(transport.connect(addr)?))
+        })
+    }
+
     /// Wrap an already-established connection (any transport).
     pub fn over(conn: Box<dyn Conn>) -> Self {
         Self { conn }

@@ -28,7 +28,9 @@
 use crate::clock::{Clock, SimClock};
 use crate::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
 use crate::fleet::{FleetConfig, LeaseTable, Worker, WorkerConfig, WorkerEvent};
-use crate::jobs::{JobEngine, JobManager, JobPayload, JobStore, JobValue};
+use crate::jobs::{
+    FaultConfig, FaultFs, JobEngine, JobManager, JobPayload, JobStore, JobValue,
+};
 use crate::service::{Client, Conn, ConnCtx, ServiceCore, Transport};
 use crate::testkit::TestRng;
 use crate::{Error, Result};
@@ -232,6 +234,12 @@ pub struct SimWorld {
     fleet_cfg: FleetConfig,
     rng: TestRng,
     workers: Vec<SimWorkerSlot>,
+    /// The seeded fault-injecting filesystem every *server-side* store
+    /// operation goes through when disk faults are enabled. One
+    /// instance survives server restarts, so per-file durability
+    /// watermarks carry across generations — a restart loses exactly
+    /// the bytes an "fsync lie" pretended to persist.
+    disk: Option<Arc<FaultFs>>,
     /// job id → stable alias (`job0`, `job1`, …) so traces compare
     /// equal across runs even though allocated ids differ.
     aliases: HashMap<String, String>,
@@ -244,6 +252,21 @@ impl SimWorld {
     /// A fresh world: server up, no workers, clock at zero. `seed`
     /// fixes every scheduling and fault decision.
     pub fn new(seed: u64, dir: impl Into<PathBuf>, fleet_cfg: FleetConfig) -> SimWorld {
+        SimWorld::new_with_disk(seed, dir, fleet_cfg, None)
+    }
+
+    /// Like [`SimWorld::new`], but when `disk` is `Some(cfg)` the
+    /// server's journal/lock I/O is routed through a [`FaultFs`] seeded
+    /// from the world seed. The fault dice start **disarmed** (fully
+    /// transparent, but durability watermarks are tracked from the
+    /// first byte) — call [`SimWorld::arm_disk`] once the scenario's
+    /// setup traffic (submit) is done.
+    pub fn new_with_disk(
+        seed: u64,
+        dir: impl Into<PathBuf>,
+        fleet_cfg: FleetConfig,
+        disk: Option<FaultConfig>,
+    ) -> SimWorld {
         let clock = SimClock::new();
         let inner = Arc::new(SimNetInner {
             clock: Arc::clone(&clock),
@@ -263,6 +286,7 @@ impl SimWorld {
             fleet_cfg,
             rng: TestRng::from_seed(seed),
             workers: Vec::new(),
+            disk: disk.map(|cfg| FaultFs::new(seed ^ 0xD15C, cfg)),
             aliases: HashMap::new(),
             idle_poll: Duration::from_millis(50),
         };
@@ -270,10 +294,23 @@ impl SimWorld {
         world
     }
 
+    /// Arm (or quiet) the disk fault dice. No-op without
+    /// [`SimWorld::new_with_disk`].
+    pub fn arm_disk(&mut self, armed: bool) {
+        if let Some(disk) = &self.disk {
+            disk.arm(armed);
+            self.record(format!("disk faults {}", if armed { "armed" } else { "disarmed" }));
+        }
+    }
+
     fn build_core(&self) -> ServiceCore {
-        let store = JobStore::open(&self.dir)
+        let mut store = JobStore::open(&self.dir)
             .expect("sim: open job store")
             .with_clock(self.clock.clone());
+        if let Some(disk) = &self.disk {
+            let fs: Arc<dyn crate::jobs::Fs> = Arc::clone(disk);
+            store = store.with_fs(fs);
+        }
         let manager = JobManager::new(store.clone(), 1).with_clock(self.clock.clone());
         let fleet = LeaseTable::with_clock(store, self.fleet_cfg, self.clock.clone());
         let coordinator = Coordinator::new(CoordinatorConfig {
@@ -359,12 +396,22 @@ impl SimWorld {
     }
 
     /// Kill the server process: every connection dies, all in-memory
-    /// lease state is lost; the journal (on disk) survives.
+    /// lease state is lost; the journal (on disk) survives. With disk
+    /// faults enabled this is a full **power loss**: tracked files are
+    /// truncated back to their last honestly-fsynced byte, so anything
+    /// an "fsync lie" pretended to persist is gone when the next server
+    /// generation replays the journal.
     pub fn stop_server(&mut self) {
         let mut st = self.net.inner.state.lock().expect("sim net poisoned");
         st.core = None;
         st.generation += 1;
         drop(st);
+        if let Some(disk) = &self.disk {
+            // The core (and with it every run-lock) dropped above, so
+            // the crash truncation races nothing.
+            disk.crash();
+            self.record("disk crash (truncate to durable watermark)".into());
+        }
         self.record("server stop".into());
     }
 
@@ -561,6 +608,17 @@ pub struct ScenarioOutcome {
     pub faulty: bool,
 }
 
+/// Extra scenario knobs for [`run_random_scenario_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScenarioOptions {
+    /// Route the server's journal/lock I/O through a seeded
+    /// [`FaultFs`] (the [`FaultConfig::hostile`] mix: torn writes,
+    /// fsync failures and lies, `ENOSPC`, read bitflips), armed after
+    /// the submit round-trip. Server stops become power losses that
+    /// drop un-fsynced bytes.
+    pub disk_faults: bool,
+}
+
 /// The canonical seeded random scenario, shared by the
 /// `tests/sim_seeds.rs` sweep and the `raddet sim` CLI so a failing
 /// sweep seed is reproduced (trace and all) by
@@ -577,7 +635,25 @@ pub fn run_random_scenario(
     cfg: FleetConfig,
     dir: impl Into<PathBuf>,
 ) -> Result<ScenarioOutcome> {
-    let mut world = SimWorld::new(seed, dir, cfg);
+    run_random_scenario_with(seed, payload, engine, cfg, dir, ScenarioOptions::default())
+}
+
+/// [`run_random_scenario`] with extra fault layers — disk + network +
+/// clock under the one seed. The recovery contract the disk-fault
+/// sweep asserts: every schedule either converges to the reference
+/// bits or returns a **typed error** after which `fsck --repair` plus
+/// a local resume still lands on the reference bits (never a panic,
+/// never silent corruption).
+pub fn run_random_scenario_with(
+    seed: u64,
+    payload: JobPayload,
+    engine: JobEngine,
+    cfg: FleetConfig,
+    dir: impl Into<PathBuf>,
+    options: ScenarioOptions,
+) -> Result<ScenarioOutcome> {
+    let disk = options.disk_faults.then(FaultConfig::hostile);
+    let mut world = SimWorld::new_with_disk(seed, dir, cfg, disk);
     let mut rng = TestRng::from_seed(seed ^ 0xA5A5_5A5A);
 
     let id = world.submit_fleet(payload, engine)?;
@@ -585,6 +661,8 @@ pub fn run_random_scenario(
     // chunk conservation can be asserted for them. Enabled only after
     // the submit round-trip: the scenario explores *fleet* fault
     // tolerance, not whether the control client retries a submit.
+    // Disk faults likewise arm only now, so the job exists on disk
+    // before the storage layer turns hostile.
     let faulty = seed % 2 == 1;
     if faulty {
         world.set_faults(FaultPlan {
@@ -592,6 +670,7 @@ pub fn run_random_scenario(
             drop_per_10k: 100 + rng.u64_below(200) as u32,
         });
     }
+    world.arm_disk(true);
     let n_workers = 2 + rng.u64_below(3); // 2..=4
     let crasher = rng.u64_below(2) == 0;
     for i in 0..n_workers {
@@ -677,7 +756,10 @@ pub fn run_random_scenario(
         value,
         trace: world.trace(),
         chunks_total,
+        // A lost completion ack (reply drop) or a journal append undone
+        // by a power loss after an fsync lie both break exact ack
+        // conservation, so disk faults mark the outcome faulty too.
         fleet_chunks: world.total_chunks_completed(),
-        faulty,
+        faulty: faulty || options.disk_faults,
     })
 }

@@ -27,8 +27,9 @@ use raddet::jobs::{
 use raddet::linalg::{radic_det_exact, radic_det_generic};
 use raddet::matrix::gen;
 use raddet::scalar::BigInt;
-use raddet::testkit::sim::run_random_scenario;
+use raddet::testkit::sim::{run_random_scenario, run_random_scenario_with, ScenarioOptions};
 use raddet::testkit::TestRng;
+use std::panic::AssertUnwindSafe;
 use std::time::Duration;
 
 const CHUNKS: usize = 6;
@@ -104,6 +105,89 @@ fn seed_sweep_random_interleavings_reproduce_reference_bits() {
         }
         assert!(!out.trace.is_empty(), "seed {seed}: trace must be recorded");
     }
+}
+
+/// The robustness sweep: the same random scenarios with the storage
+/// layer turned hostile too — torn writes, fsync failures and lies,
+/// `ENOSPC`, read bitflips (see [`raddet::jobs::FaultFs`]), with every
+/// server stop a power loss that drops un-fsynced bytes. Disk, network
+/// and clock all fault under the one seed.
+///
+/// The invariant: **every** fault schedule either converges to the
+/// reference bits, or surfaces a typed error after which an operator's
+/// `job fsck --repair` plus a local resume still lands on the
+/// reference bits. Never a panic, never silently wrong bits.
+#[test]
+fn seed_sweep_disk_faults_converge_or_salvage() {
+    let spec = JobSpec {
+        payload: sweep_payload(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_bits(&spec, "sim-disk-ref");
+    let bits_of = |value: &JobValue, seed: u64| match value {
+        JobValue::F64(v) => v.to_bits(),
+        other => panic!("seed {seed}: {other:?}"),
+    };
+    let seeds = sweep_seeds();
+    let mut salvaged = 0u64;
+    for seed in 0..seeds {
+        let dir = raddet::testkit::scratch_dir(&format!("sim-disk-{seed}"));
+        let run = {
+            let dir = dir.clone();
+            std::panic::catch_unwind(AssertUnwindSafe(move || {
+                run_random_scenario_with(
+                    seed,
+                    sweep_payload(),
+                    JobEngine::Prefix,
+                    fleet_cfg(),
+                    dir,
+                    ScenarioOptions { disk_faults: true },
+                )
+            }))
+        };
+        let outcome = run.unwrap_or_else(|_| panic!("seed {seed}: scenario panicked"));
+        match outcome {
+            Ok(out) => assert_eq!(
+                bits_of(&out.value, seed),
+                want,
+                "seed {seed}: fleet bits diverged under disk faults"
+            ),
+            Err(_typed) => {
+                // The scenario gave up (e.g. convergence cap under a
+                // brutal schedule). The journal on disk must still be
+                // salvageable: fsck, repair if damaged, resume
+                // locally, and land on the exact reference bits.
+                salvaged += 1;
+                let store = JobStore::open(&dir)
+                    .unwrap_or_else(|e| panic!("seed {seed}: reopen store: {e}"));
+                let ids = store.list().unwrap();
+                assert_eq!(ids.len(), 1, "seed {seed}: exactly the submitted job");
+                let id = &ids[0];
+                let report = store
+                    .fsck(id)
+                    .unwrap_or_else(|e| panic!("seed {seed}: fsck: {e}"));
+                if !report.is_clean() {
+                    store
+                        .fsck_repair(id)
+                        .unwrap_or_else(|e| panic!("seed {seed}: fsck --repair: {e}"));
+                }
+                let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+                    .run(&store, id)
+                    .unwrap_or_else(|e| panic!("seed {seed}: resume after repair: {e}"));
+                let value = out.status.value.expect("resumed job composes a value");
+                assert_eq!(
+                    bits_of(&value, seed),
+                    want,
+                    "seed {seed}: salvaged resume diverged from reference"
+                );
+            }
+        }
+    }
+    // Not an invariant, just visibility: how often the schedule was
+    // harsh enough to need the salvage path.
+    eprintln!("disk sweep: {salvaged}/{seeds} seeds took the fsck/resume path");
 }
 
 /// Cross-scalar conformance, sequential layer: `I128Checked` and
