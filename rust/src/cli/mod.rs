@@ -27,9 +27,10 @@
 //! raddet job list    [--jobs-dir D]
 //! raddet job export  --id ID [--jobs-dir D] [--out F]   # JSON
 //! raddet job fsck    --id ID [--jobs-dir D] [--repair]
+//! raddet job top     --id ID [--addr HOST:PORT] [--watch-ms N] [--json]
 //! raddet sim       --seed S [--seeds K] [--rows M --cols N]
 //!                  [--matrix-seed X] [--chunks C] [--ttl-ms T] [--trace]
-//!                  [--disk-faults]
+//!                  [--trace-json F] [--disk-faults]
 //! raddet help
 //! ```
 
@@ -96,7 +97,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
 fn dispatch_job(argv: &[String]) -> Result<()> {
     if argv.is_empty() {
         return Err(Error::Config(
-            "usage: raddet job <submit|status|resume|list|export|fsck> [--options]".into(),
+            "usage: raddet job <submit|status|resume|list|export|fsck|top> [--options]".into(),
         ));
     }
     let a = Args::parse(argv)?;
@@ -107,8 +108,9 @@ fn dispatch_job(argv: &[String]) -> Result<()> {
         "list" => cmd_job_list(&a),
         "export" => cmd_job_export(&a),
         "fsck" => cmd_job_fsck(&a),
+        "top" => cmd_job_top(&a),
         other => Err(Error::Config(format!(
-            "unknown job action {other:?} (submit|status|resume|list|export|fsck)"
+            "unknown job action {other:?} (submit|status|resume|list|export|fsck|top)"
         ))),
     }
 }
@@ -136,13 +138,17 @@ commands:\n\
             the bits against a single-process run (EXPERIMENTS.md\n\
             §Simulation); --disk-faults adds seeded storage faults\n\
             (torn writes, fsync lies, ENOSPC, bitflips) and checks\n\
-            the fsck-repair-resume recovery path too\n\
-  job       durable det-jobs: submit|status|resume|list|export|fsck\n\
+            the fsck-repair-resume recovery path too; --trace-json F\n\
+            exports the structured event trace as JSON Lines\n\
+  job       durable det-jobs: submit|status|resume|list|export|fsck|top\n\
             (journaled, resumable sweeps — kill-safe, bitwise-identical\n\
             results after resume; submit --fleet opens the job for\n\
             remote workers instead of running locally; fsck shows\n\
             per-record diagnostics and --repair salvages the longest\n\
-            valid prefix of a corrupted journal)\n\
+            valid prefix of a corrupted journal; top polls a running\n\
+            server's METRICS JOB verb for live fleet telemetry —\n\
+            per-worker throughput, lease counts, straggler-visible\n\
+            ETA — with --watch-ms to follow and --json for tooling)\n\
   help      this text\n";
 
 fn build_coordinator(a: &Args) -> Result<Coordinator> {
@@ -415,7 +421,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     println!("raddet service listening on {}", handle.addr());
     println!("jobs journal dir: {jobs_dir}");
     println!(
-        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | PING | QUIT (spec: docs/PROTOCOL.md)"
+        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | METRICS [JOB id] | PING | QUIT (spec: docs/PROTOCOL.md)"
     );
     println!("fleet: join workers with `raddet worker --connect {host}:{port}`");
     // Serve until killed.
@@ -494,6 +500,12 @@ fn report_job_run(a: &Args, out: &crate::jobs::JobOutcome) {
         out.metrics.elapsed,
         out.metrics.throughput()
     );
+    if t.blocks > 0 {
+        println!(
+            "  engine: {} sibling blocks ({} scalar fallbacks)",
+            t.blocks, t.fallback_blocks
+        );
+    }
     if out.interrupted {
         println!(
             "  interrupted — resume with: raddet job resume --id {} --jobs-dir {}",
@@ -559,6 +571,12 @@ fn cmd_job_submit(a: &Args) -> Result<()> {
                 st.value
                     .map_or_else(String::new, |v| format!("   det = {}", v.render()))
             );
+            if st.blocks > 0 {
+                println!(
+                    "  engine blocks (server-side runs): {} ({} fallback)",
+                    st.blocks, st.fallback_blocks
+                );
+            }
         }
         client.quit();
         return Ok(());
@@ -610,6 +628,107 @@ fn cmd_job_status(a: &Args) -> Result<()> {
     let id: String = a.require_parse("id")?;
     println!("{}", job_store(a)?.status(&id)?.render());
     Ok(())
+}
+
+/// `raddet job top` — live fleet telemetry for one job over the
+/// `METRICS JOB` wire verb: progress, aggregate throughput, the
+/// remaining-work ETA, and per-worker lease/throughput rows (the
+/// straggler-attribution view). `--watch-ms N` re-polls every N ms
+/// until the job leaves the `open` state; `--json` prints one JSON
+/// object per snapshot for tooling.
+fn cmd_job_top(a: &Args) -> Result<()> {
+    a.check_known(&["id", "addr", "watch-ms", "json"])?;
+    let id: String = a.require_parse("id")?;
+    let addr = a.get("addr").unwrap_or("127.0.0.1:7171");
+    let watch_ms: u64 = a.get_parse("watch-ms", 0u64)?;
+    let mut client = Client::connect(addr)?;
+    loop {
+        let t = client.job_metrics(&id)?;
+        if a.has_flag("json") {
+            println!("{}", render_job_top_json(&t));
+        } else {
+            print!("{}", render_job_top(&t));
+        }
+        if watch_ms == 0 || t.state != "open" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(watch_ms));
+    }
+    client.quit();
+    Ok(())
+}
+
+/// Human rendering of one `METRICS JOB` snapshot: a summary line plus
+/// one table row per worker.
+fn render_job_top(t: &crate::fleet::JobTelemetry) -> String {
+    let mut out = format!(
+        "job {}: {}   chunks {}/{}   terms {}/{}   throughput {:.1} terms/s   eta {}\n",
+        t.id,
+        t.state,
+        t.chunks_done,
+        t.chunks_total,
+        t.terms_done,
+        t.terms_total,
+        t.tps_milli as f64 / 1000.0,
+        t.eta_ms
+            .map_or_else(|| "-".to_string(), |ms| format!("{:.1}s", ms as f64 / 1000.0)),
+    );
+    if !t.workers.is_empty() {
+        let mut table = crate::bench::Table::new(&[
+            "worker", "held", "done", "abandoned", "expired", "dup", "terms/s",
+        ]);
+        for (name, w) in &t.workers {
+            table.row(&[
+                name.clone(),
+                w.held.to_string(),
+                w.completed.to_string(),
+                w.abandoned.to_string(),
+                w.expired.to_string(),
+                w.duplicates.to_string(),
+                format!("{:.1}", w.ewma_mtps as f64 / 1000.0),
+            ]);
+        }
+        out.push_str(&table.render());
+    }
+    out
+}
+
+/// JSON rendering of one `METRICS JOB` snapshot (`job top --json`):
+/// a single object per line, worker rows as an array sorted by name
+/// (the wire order). `eta_ms` is `null` while no throughput sample
+/// exists.
+fn render_job_top_json(t: &crate::fleet::JobTelemetry) -> String {
+    use crate::telemetry::json_escape;
+    let mut s = format!(
+        "{{\"id\":\"{}\",\"state\":\"{}\",\"chunks_done\":{},\"chunks_total\":{},\
+         \"terms_done\":{},\"terms_total\":{},\"tps_milli\":{},\"eta_ms\":{},\"workers\":[",
+        json_escape(&t.id),
+        json_escape(&t.state),
+        t.chunks_done,
+        t.chunks_total,
+        t.terms_done,
+        t.terms_total,
+        t.tps_milli,
+        t.eta_ms.map_or_else(|| "null".to_string(), |v| v.to_string()),
+    );
+    for (i, (name, w)) in t.workers.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"name\":\"{}\",\"held\":{},\"completed\":{},\"abandoned\":{},\
+             \"expired\":{},\"duplicates\":{},\"ewma_mtps\":{}}}",
+            json_escape(name),
+            w.held,
+            w.completed,
+            w.abandoned,
+            w.expired,
+            w.duplicates,
+            w.ewma_mtps
+        ));
+    }
+    s.push_str("]}");
+    s
 }
 
 fn cmd_job_resume(a: &Args) -> Result<()> {
@@ -760,7 +879,7 @@ fn cmd_job_export(a: &Args) -> Result<()> {
 fn cmd_sim(a: &Args) -> Result<()> {
     a.check_known(&[
         "seed", "seeds", "rows", "cols", "matrix-seed", "chunks", "batch", "ttl-ms", "trace",
-        "disk-faults",
+        "trace-json", "disk-faults",
     ])?;
     let disk_faults = a.has_flag("disk-faults");
     let seed0: u64 = a.get_parse("seed", 0u64)?;
@@ -797,6 +916,7 @@ fn cmd_sim(a: &Args) -> Result<()> {
         ..Default::default()
     };
     let mut failures = 0u64;
+    let mut trace_jsonl = String::new();
     for seed in seed0..seed0.saturating_add(count) {
         let dir = crate::testkit::scratch_dir(&format!("cli-sim-{seed}"));
         match crate::testkit::sim::run_random_scenario_with(
@@ -827,6 +947,7 @@ fn cmd_sim(a: &Args) -> Result<()> {
                         println!("  {line}");
                     }
                 }
+                trace_jsonl.push_str(&out.trace_jsonl);
                 if !ok {
                     failures += 1;
                 }
@@ -850,6 +971,12 @@ fn cmd_sim(a: &Args) -> Result<()> {
                 failures += 1;
             }
         }
+    }
+    if let Some(path) = a.get("trace-json") {
+        // Written before the failure gate on purpose: the structured
+        // trace of a failing seed is exactly what you want on disk.
+        std::fs::write(path, &trace_jsonl)?;
+        println!("wrote {path} (JSONL event trace of completed scenarios)");
     }
     if failures > 0 {
         return Err(Error::Job(format!("{failures} of {count} sim seed(s) failed")));
@@ -889,6 +1016,88 @@ fn salvage_and_resume(dir: &std::path::Path, want: &JobValue) -> Result<()> {
         Ok(())
     } else {
         Err(Error::Job("salvaged resume diverged from the reference bits".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{JobTelemetry, WorkerRow};
+    use crate::service::Response;
+
+    fn sample_telemetry() -> JobTelemetry {
+        JobTelemetry {
+            id: "job-7".into(),
+            state: "open".into(),
+            chunks_done: 3,
+            chunks_total: 6,
+            terms_done: 84,
+            terms_total: 168,
+            tps_milli: 5_500,
+            eta_ms: Some(15_273),
+            workers: vec![
+                (
+                    "w1".into(),
+                    WorkerRow {
+                        held: 1,
+                        completed: 2,
+                        abandoned: 0,
+                        expired: 1,
+                        duplicates: 0,
+                        ewma_mtps: 4_000,
+                    },
+                ),
+                (
+                    "w2".into(),
+                    WorkerRow {
+                        held: 0,
+                        completed: 1,
+                        abandoned: 1,
+                        expired: 0,
+                        duplicates: 1,
+                        ewma_mtps: 1_500,
+                    },
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn job_top_json_round_trips_through_the_wire_encoding() {
+        // `job top --json` renders what arrived over the wire; every
+        // field it prints must survive encode→parse bit-for-bit.
+        let t = sample_telemetry();
+        let wire = Response::JobMetrics(t.clone()).encode();
+        let parsed = Response::parse(wire.trim_end()).expect("wire form must parse");
+        let Response::JobMetrics(back) = parsed else {
+            panic!("expected OK JOBMETRICS, got {parsed:?}");
+        };
+        assert_eq!(back, t);
+        assert_eq!(render_job_top_json(&back), render_job_top_json(&t));
+    }
+
+    #[test]
+    fn job_top_json_shape_is_stable() {
+        let json = render_job_top_json(&sample_telemetry());
+        assert!(json.starts_with("{\"id\":\"job-7\",\"state\":\"open\""));
+        assert!(json.contains("\"chunks_done\":3,\"chunks_total\":6"));
+        assert!(json.contains("\"eta_ms\":15273"));
+        assert!(json.contains("\"workers\":[{\"name\":\"w1\""));
+        assert!(json.ends_with("}]}"));
+        // No throughput sample yet: eta must be JSON null, not 0.
+        let mut quiet = sample_telemetry();
+        quiet.tps_milli = 0;
+        quiet.eta_ms = None;
+        assert!(render_job_top_json(&quiet).contains("\"eta_ms\":null"));
+    }
+
+    #[test]
+    fn job_top_human_rendering_lists_workers() {
+        let text = render_job_top(&sample_telemetry());
+        assert!(text.starts_with("job job-7: open   chunks 3/6   terms 84/168"));
+        assert!(text.contains("eta 15.3s"));
+        assert!(text.contains("w1"));
+        assert!(text.contains("w2"));
     }
 }
 

@@ -45,12 +45,18 @@ use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::jobs::{
     compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, Journal,
-    LoadedJob, Record, RunLock,
+    LoadedJob, MeteredFs, Record, RunLock,
 };
+use crate::telemetry::{Counter, Registry};
 use crate::{Error, Result};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// How many finished/closed jobs keep their telemetry in memory.
+/// `METRICS JOB` on anything older falls back to the journal-derived
+/// status (state + chunk counts, no per-worker rows).
+const RECENT_TELEMETRY_CAP: usize = 16;
 
 /// Fleet knobs (server side).
 #[derive(Clone, Copy, Debug)]
@@ -80,6 +86,97 @@ impl Default for FleetConfig {
     }
 }
 
+/// Per-worker telemetry row within one fleet job, as surfaced by
+/// `METRICS JOB` and `raddet job top`. Counters are cumulative for the
+/// job; `held` is the live lease count at snapshot time.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerRow {
+    /// Leases currently held (0 in snapshots of finished jobs).
+    pub held: u64,
+    /// Chunks this worker completed (journaled partials).
+    pub completed: u64,
+    /// Leases this worker gave back via `LEASE ABANDON`.
+    pub abandoned: u64,
+    /// Leases lost to TTL expiry (the missed-heartbeat count).
+    pub expired: u64,
+    /// Duplicate `LEASE COMPLETE` re-deliveries acknowledged.
+    pub duplicates: u64,
+    /// Throughput EWMA in milli-terms/second. Fed by server-measured
+    /// grant→complete spans and by worker-reported `LEASE RENEW`
+    /// bodies; 0 until the first sample. Under the sim clock the spans
+    /// are pure virtual time, so this is replay-deterministic.
+    pub ewma_mtps: u64,
+}
+
+/// Point-in-time telemetry snapshot of one fleet job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobTelemetry {
+    /// The job id.
+    pub id: String,
+    /// `open` (leasing now), `done` (completed), or `closed` (paused /
+    /// cancelled with journaled progress).
+    pub state: String,
+    /// Chunks journaled.
+    pub chunks_done: u64,
+    /// Chunks in the plan.
+    pub chunks_total: u64,
+    /// Terms covered by journaled chunks.
+    pub terms_done: u128,
+    /// Terms in the whole job.
+    pub terms_total: u128,
+    /// Fleet-wide throughput in milli-terms/second (sum of worker
+    /// EWMAs); 0 when no worker has produced a sample yet.
+    pub tps_milli: u64,
+    /// Naive remaining-terms ÷ throughput estimate in milliseconds;
+    /// `None` when the throughput sum is 0.
+    pub eta_ms: Option<u64>,
+    /// Per-worker rows, sorted by worker name.
+    pub workers: Vec<(String, WorkerRow)>,
+}
+
+/// Registry counters for fleet lease traffic (the `fleet_*` family).
+#[derive(Clone, Debug)]
+struct FleetMetrics {
+    grants: Counter,
+    renews: Counter,
+    completes: Counter,
+    duplicates: Counter,
+    expiries: Counter,
+    abandons: Counter,
+}
+
+impl FleetMetrics {
+    fn register(reg: &Registry) -> FleetMetrics {
+        FleetMetrics {
+            grants: reg.counter("fleet_grants_total"),
+            renews: reg.counter("fleet_renews_total"),
+            completes: reg.counter("fleet_completes_total"),
+            duplicates: reg.counter("fleet_duplicates_total"),
+            expiries: reg.counter("fleet_expiries_total"),
+            abandons: reg.counter("fleet_abandons_total"),
+        }
+    }
+}
+
+/// Throughput sample in milli-terms/second: `terms` over `micros` of
+/// clock time. The 1 µs floor matters under sim, where a zero-latency
+/// exchange completes in zero virtual time — such workers saturate
+/// high rather than divide by zero, so a deliberately slow peer is
+/// always the *lowest* nonzero EWMA.
+fn sample_mtps(terms: u64, micros: u64) -> u64 {
+    let v = terms as u128 * 1_000_000_000 / micros.max(1) as u128;
+    v.min(u64::MAX as u128) as u64
+}
+
+/// Quarter-weight EWMA step; the first sample seeds the average.
+fn ewma_update(ewma: u64, sample: u64) -> u64 {
+    if ewma == 0 {
+        sample
+    } else {
+        ((3 * ewma as u128 + sample as u128) / 4) as u64
+    }
+}
+
 /// One open fleet job: plan + journal + lease bookkeeping.
 struct OpenJob {
     spec: JobSpec,
@@ -93,13 +190,34 @@ struct OpenJob {
     /// chunk → worker whose partial was journaled (idempotent re-acks
     /// for retried `LEASE COMPLETE`s).
     completed_by: HashMap<u64, String>,
+    /// chunk → grant timestamp of the *current* lease, for the
+    /// server-measured grant→complete throughput span.
+    grant_times: HashMap<u64, Duration>,
+    /// Per-worker telemetry rows (BTreeMap for sorted snapshots).
+    workers: BTreeMap<String, WorkerRow>,
+    /// worker → last cumulative `(terms, micros)` it reported in a
+    /// `LEASE RENEW` body, so the next report yields a delta sample.
+    last_report: HashMap<String, (u64, u64)>,
 }
 
 impl OpenJob {
     /// Drop leases whose deadline has passed; their chunks become
-    /// grantable again.
-    fn expire_leases(&mut self, now: Duration) {
-        self.leases.retain(|_, (_, deadline)| *deadline > now);
+    /// grantable again. Returns how many expired, after attributing
+    /// each to the worker that let it lapse.
+    fn expire_leases(&mut self, now: Duration) -> u64 {
+        let lapsed: Vec<u64> = self
+            .leases
+            .iter()
+            .filter(|(_, (_, deadline))| *deadline <= now)
+            .map(|(chunk, _)| *chunk)
+            .collect();
+        for chunk in &lapsed {
+            if let Some((worker, _)) = self.leases.remove(chunk) {
+                self.grant_times.remove(chunk);
+                self.workers.entry(worker).or_default().expired += 1;
+            }
+        }
+        lapsed.len() as u64
     }
 
     /// Lowest-index chunk that is neither journaled nor actively leased.
@@ -168,14 +286,16 @@ fn grant_from<F: Fn(&str) -> bool>(
     want_spec: &F,
     now: Duration,
     ttl: Duration,
+    expired: &mut u64,
 ) -> Option<Grant> {
     for (id, oj) in jobs.iter_mut() {
         if filter.is_some_and(|f| f != id.as_str()) {
             continue;
         }
-        oj.expire_leases(now);
+        *expired += oj.expire_leases(now);
         if let Some(idx) = oj.next_free_chunk() {
             oj.leases.insert(idx, (worker.to_string(), now.saturating_add(ttl)));
+            oj.grant_times.insert(idx, now);
             let spec = want_spec(id).then(|| oj.spec.clone());
             return Some(Grant {
                 job: id.clone(),
@@ -195,6 +315,12 @@ pub struct LeaseTable {
     cfg: FleetConfig,
     clock: Arc<dyn Clock>,
     jobs: Mutex<BTreeMap<String, OpenJob>>,
+    /// `fleet_*` registry counters; `None` until [`Self::with_registry`].
+    metrics: Option<FleetMetrics>,
+    /// Telemetry of recently finished/closed jobs, oldest first, capped
+    /// at [`RECENT_TELEMETRY_CAP`] — `METRICS JOB` keeps answering with
+    /// per-worker rows after the final chunk removed the [`OpenJob`].
+    recent: Mutex<VecDeque<(String, JobTelemetry)>>,
 }
 
 impl LeaseTable {
@@ -208,7 +334,40 @@ impl LeaseTable {
     /// [`crate::clock::SimClock`] makes lease expiry a pure function of
     /// explicit `advance` calls).
     pub fn with_clock(store: JobStore, cfg: FleetConfig, clock: Arc<dyn Clock>) -> Self {
-        Self { store, cfg, clock, jobs: Mutex::new(BTreeMap::new()) }
+        Self {
+            store,
+            cfg,
+            clock,
+            jobs: Mutex::new(BTreeMap::new()),
+            metrics: None,
+            recent: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Sink `fleet_*` counters into `registry` and re-wrap the store's
+    /// filesystem in a [`MeteredFs`] (journal append/fsync latency on
+    /// this table's clock). Called by `ServiceCore::new`, which owns
+    /// the one registry per service.
+    pub fn with_registry(mut self, registry: &Arc<Registry>) -> Self {
+        let fs = MeteredFs::new(
+            Arc::clone(self.store.fs()),
+            Arc::clone(&self.clock),
+            registry,
+        );
+        self.store = self.store.with_fs(fs);
+        self.metrics = Some(FleetMetrics::register(registry));
+        self
+    }
+
+    /// Sink `fleet_*` counters into `registry` without touching the
+    /// store's filesystem. For tables rebuilt from a store whose fs is
+    /// already metered (e.g. `Server::with_fleet_config` cloning the
+    /// manager's store after `ServiceCore::new`): the full
+    /// [`Self::with_registry`] there would wrap the fs twice and
+    /// double-count every append and fsync.
+    pub(crate) fn with_registry_counters(mut self, registry: &Arc<Registry>) -> Self {
+        self.metrics = Some(FleetMetrics::register(registry));
+        self
     }
 
     /// The underlying store.
@@ -323,6 +482,9 @@ impl LeaseTable {
                 completed: job.completed,
                 leases: HashMap::new(),
                 completed_by: HashMap::new(),
+                grant_times: HashMap::new(),
+                workers: BTreeMap::new(),
+                last_report: HashMap::new(),
             },
         );
         self.set_fleet_marker(id);
@@ -384,11 +546,10 @@ impl LeaseTable {
             }
         }
         let now = self.clock.now();
-        if let Some(g) = grant_from(&mut jobs, worker, filter, &want_spec, now, self.cfg.lease_ttl)
-        {
-            return Ok(GrantOutcome::Granted(g));
-        }
-        if filter.is_none() {
+        let mut expired = 0u64;
+        let mut granted =
+            grant_from(&mut jobs, worker, filter, &want_spec, now, self.cfg.lease_ttl, &mut expired);
+        if granted.is_none() && filter.is_none() {
             // Nothing leasable in memory: adopt fleet-marked jobs from
             // disk (interrupted sweeps from a previous server process).
             // Open errors are soft here — a job locked by another
@@ -410,20 +571,45 @@ impl LeaseTable {
                 }
             }
             if adopted {
-                if let Some(g) =
-                    grant_from(&mut jobs, worker, None, &want_spec, now, self.cfg.lease_ttl)
-                {
-                    return Ok(GrantOutcome::Granted(g));
-                }
+                granted = grant_from(
+                    &mut jobs,
+                    worker,
+                    None,
+                    &want_spec,
+                    now,
+                    self.cfg.lease_ttl,
+                    &mut expired,
+                );
             }
         }
-        Ok(GrantOutcome::Idle)
+        if let Some(m) = &self.metrics {
+            m.expiries.add(expired);
+            if granted.is_some() {
+                m.grants.inc();
+            }
+        }
+        Ok(match granted {
+            Some(g) => GrantOutcome::Granted(g),
+            None => GrantOutcome::Idle,
+        })
     }
 
     /// Extend `worker`'s lease on a chunk by one TTL window. An expired
     /// lease can be revived here as long as the chunk has not been
     /// swept and re-granted (expiry is lazy, at grant time).
-    pub fn renew(&self, worker: &str, id: &str, chunk: u64) -> Result<Duration> {
+    ///
+    /// `report` is the worker's cumulative `(terms, micros)` progress
+    /// counters, when its `LEASE RENEW` carried them; the table folds
+    /// the delta since the previous report into the worker's
+    /// throughput EWMA. Cumulative (not per-report) figures make lost
+    /// replies harmless — the next report's delta absorbs the gap.
+    pub fn renew(
+        &self,
+        worker: &str,
+        id: &str,
+        chunk: u64,
+        report: Option<(u64, u64)>,
+    ) -> Result<Duration> {
         let mut jobs = self.lock_jobs();
         let oj = jobs
             .get_mut(id)
@@ -431,6 +617,20 @@ impl LeaseTable {
         match oj.leases.get_mut(&chunk) {
             Some((w, deadline)) if w.as_str() == worker => {
                 *deadline = self.clock.deadline(self.cfg.lease_ttl);
+                if let Some((terms, micros)) = report {
+                    let (seen_t, seen_us) =
+                        oj.last_report.get(worker).copied().unwrap_or((0, 0));
+                    let dt = terms.saturating_sub(seen_t);
+                    let dus = micros.saturating_sub(seen_us);
+                    oj.last_report.insert(worker.to_string(), (terms, micros));
+                    if dt > 0 {
+                        let row = oj.workers.entry(worker.to_string()).or_default();
+                        row.ewma_mtps = ewma_update(row.ewma_mtps, sample_mtps(dt, dus));
+                    }
+                }
+                if let Some(m) = &self.metrics {
+                    m.renews.inc();
+                }
                 Ok(self.cfg.lease_ttl)
             }
             _ => Err(Error::Job(format!(
@@ -460,6 +660,25 @@ impl LeaseTable {
             drop(jobs);
             if let Ok(st) = self.store.status(id) {
                 if st.complete && (chunk as usize) < st.chunks_total {
+                    // Attribute the late duplicate in the retained
+                    // telemetry of the (now finished) job, if any.
+                    let mut recent =
+                        self.recent.lock().expect("recent telemetry poisoned");
+                    if let Some((_, snap)) =
+                        recent.iter_mut().find(|(rid, _)| rid == id)
+                    {
+                        match snap.workers.iter_mut().find(|(w, _)| w == worker) {
+                            Some((_, row)) => row.duplicates += 1,
+                            None => snap.workers.push((
+                                worker.to_string(),
+                                WorkerRow { duplicates: 1, ..WorkerRow::default() },
+                            )),
+                        }
+                        snap.workers.sort_by(|(a, _), (b, _)| a.cmp(b));
+                    }
+                    if let Some(m) = &self.metrics {
+                        m.duplicates.inc();
+                    }
                     return Ok(CompleteOutcome::Duplicate {
                         chunks_done: st.chunks_done as u64,
                         chunks_total: st.chunks_total as u64,
@@ -476,19 +695,19 @@ impl LeaseTable {
         }
         if oj.completed.contains_key(&chunk) {
             let done = oj.completed.len() as u64;
-            return match oj.completed_by.get(&chunk) {
-                Some(w) if w == worker => {
-                    Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total })
-                }
-                Some(_) => Err(Error::Job(format!(
+            if oj.completed_by.get(&chunk).is_some_and(|w| w != worker) {
+                return Err(Error::Job(format!(
                     "lease lost: chunk {chunk} of job {id:?} was completed by another worker"
-                ))),
-                // Journaled before this open of the job (completer
-                // identity is not persisted): treat a re-delivery as
-                // the idempotent retry the protocol promises — nothing
-                // is journaled either way.
-                None => Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total }),
-            };
+                )));
+            }
+            // Idempotent re-ack: the same worker retrying, or a chunk
+            // journaled before this open of the job (completer identity
+            // is not persisted) — nothing is journaled either way.
+            oj.workers.entry(worker.to_string()).or_default().duplicates += 1;
+            if let Some(m) = &self.metrics {
+                m.duplicates.inc();
+            }
+            return Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total });
         }
         if oj.leases.get(&chunk).is_some_and(|(w, _)| w != worker) {
             return Err(Error::Job(format!(
@@ -515,10 +734,26 @@ impl LeaseTable {
                 oj.spec.payload.scalar_kind()
             )));
         }
+        let delivered_terms = rec.terms;
         oj.journal.append(&Record::Chunk { index: chunk, rec: rec.clone() })?;
         oj.completed.insert(chunk, rec);
         oj.completed_by.insert(chunk, worker.to_string());
         oj.leases.remove(&chunk);
+        // Grant→complete span on the table's own clock: the
+        // sim-deterministic throughput signal (a straggling worker's
+        // exchanges advance more virtual time, so its samples are
+        // smaller). Absent when the lease expired before delivery —
+        // a span across an expiry would misstate throughput.
+        let row = oj.workers.entry(worker.to_string()).or_default();
+        row.completed += 1;
+        if let Some(t0) = oj.grant_times.remove(&chunk) {
+            let span = self.clock.now().saturating_sub(t0);
+            let span_us = span.as_micros().min(u64::MAX as u128) as u64;
+            row.ewma_mtps = ewma_update(row.ewma_mtps, sample_mtps(delivered_terms, span_us));
+        }
+        if let Some(m) = &self.metrics {
+            m.completes.inc();
+        }
         let done = oj.completed.len() as u64;
         let finished = done == total;
         if finished {
@@ -530,7 +765,10 @@ impl LeaseTable {
                 )));
             }
             oj.journal.append(&Record::Done { terms, value })?;
+            let snap = snapshot_open(id, oj, "done");
             jobs.remove(id); // drops the journal and releases the run lock
+            drop(jobs);
+            self.remember(snap);
             self.clear_fleet_marker(id);
         }
         Ok(CompleteOutcome::Accepted { chunks_done: done, chunks_total: total, finished })
@@ -545,12 +783,68 @@ impl LeaseTable {
         match oj.leases.get(&chunk) {
             Some((w, _)) if w == worker => {
                 oj.leases.remove(&chunk);
+                oj.grant_times.remove(&chunk);
+                oj.workers.entry(worker.to_string()).or_default().abandoned += 1;
+                if let Some(m) = &self.metrics {
+                    m.abandons.inc();
+                }
                 Ok(())
             }
             _ => Err(Error::Job(format!(
                 "lease lost: worker {worker:?} does not hold chunk {chunk} of job {id:?}"
             ))),
         }
+    }
+
+    /// Telemetry snapshot of job `id`: live rows for an open job, the
+    /// retained final rows for a recently finished/closed one, and a
+    /// bare journal-derived snapshot (no worker rows — that state died
+    /// with the process that held it) for anything older.
+    pub fn job_metrics(&self, id: &str) -> Result<JobTelemetry> {
+        {
+            let mut jobs = self.lock_jobs();
+            if let Some(oj) = jobs.get_mut(id) {
+                // Sweep expiries first so `held` and the per-worker
+                // expired counts are current as of this snapshot.
+                let expired = oj.expire_leases(self.clock.now());
+                if let Some(m) = &self.metrics {
+                    m.expiries.add(expired);
+                }
+                return Ok(snapshot_open(id, oj, "open"));
+            }
+        }
+        if let Some(snap) = self
+            .recent
+            .lock()
+            .expect("recent telemetry poisoned")
+            .iter()
+            .find(|(rid, _)| rid == id)
+            .map(|(_, snap)| snap.clone())
+        {
+            return Ok(snap);
+        }
+        let st = self.store.status(id)?;
+        Ok(JobTelemetry {
+            id: id.to_string(),
+            state: if st.complete { "done" } else { "closed" }.to_string(),
+            chunks_done: st.chunks_done as u64,
+            chunks_total: st.chunks_total as u64,
+            terms_done: st.terms_done,
+            terms_total: st.terms_total,
+            tps_milli: 0,
+            eta_ms: None,
+            workers: Vec::new(),
+        })
+    }
+
+    /// Retain a finished/closed job's final telemetry (bounded ring).
+    fn remember(&self, snap: JobTelemetry) {
+        let mut recent = self.recent.lock().expect("recent telemetry poisoned");
+        recent.retain(|(id, _)| id != &snap.id);
+        if recent.len() == RECENT_TELEMETRY_CAP {
+            recent.pop_front();
+        }
+        recent.push_back((snap.id.clone(), snap));
     }
 
     /// Close an open fleet job (cooperative pause): stop granting,
@@ -560,11 +854,45 @@ impl LeaseTable {
     /// `raddet job resume` picks the sweep up from the journal.
     /// Returns whether the job was open.
     pub fn close(&self, id: &str) -> bool {
-        let closed = self.lock_jobs().remove(id).is_some();
-        if closed {
-            self.clear_fleet_marker(id);
+        let snap = self.lock_jobs().remove(id).map(|oj| snapshot_open(id, &oj, "closed"));
+        match snap {
+            Some(snap) => {
+                self.remember(snap);
+                self.clear_fleet_marker(id);
+                true
+            }
+            None => false,
         }
-        closed
+    }
+}
+
+/// Build a [`JobTelemetry`] snapshot from an in-memory [`OpenJob`].
+/// `held` lease counts are only meaningful while the job is `open`.
+fn snapshot_open(id: &str, oj: &OpenJob, state: &str) -> JobTelemetry {
+    let terms_done: u128 = oj.completed.values().map(|r| r.terms as u128).sum();
+    let mut workers = oj.workers.clone();
+    if state == "open" {
+        for (worker, _) in oj.leases.values() {
+            workers.entry(worker.clone()).or_default().held += 1;
+        }
+    }
+    let tps_milli = workers
+        .values()
+        .fold(0u64, |acc, row| acc.saturating_add(row.ewma_mtps));
+    let eta_ms = (tps_milli > 0).then(|| {
+        let remaining = oj.total_terms.saturating_sub(terms_done);
+        (remaining.saturating_mul(1_000_000) / tps_milli as u128).min(u64::MAX as u128) as u64
+    });
+    JobTelemetry {
+        id: id.to_string(),
+        state: state.to_string(),
+        chunks_done: oj.completed.len() as u64,
+        chunks_total: oj.plan.len() as u64,
+        terms_done,
+        terms_total: oj.total_terms,
+        tps_milli,
+        eta_ms,
+        workers: workers.into_iter().collect(),
     }
 }
 
@@ -734,7 +1062,7 @@ mod tests {
         };
         for _ in 0..3 {
             clock.advance(Duration::from_millis(60));
-            table.renew("wa", &id, g.chunk_index).unwrap();
+            table.renew("wa", &id, g.chunk_index, None).unwrap();
         }
         // t = 180 ms with the last renewal reaching to 380 ms: advance
         // well past the *original* 200 ms TTL — the chunk is still
@@ -746,7 +1074,7 @@ mod tests {
         };
         assert_ne!(gb.chunk_index, g.chunk_index);
         // A stranger cannot renew or abandon wa's lease.
-        assert!(table.renew("wb", &id, g.chunk_index).is_err());
+        assert!(table.renew("wb", &id, g.chunk_index, None).is_err());
         assert!(table.abandon("wb", &id, g.chunk_index).is_err());
     }
 
@@ -784,12 +1112,12 @@ mod tests {
     fn unknown_and_closed_jobs_are_errors() {
         let (_clock, table) = tmp_table("unknown", Duration::from_secs(10));
         assert!(table.grant("wa", Some("job-nope"), |_| true).is_err());
-        assert!(table.renew("wa", "job-nope", 0).is_err());
+        assert!(table.renew("wa", "job-nope", 0, None).is_err());
         let id = submit_f64(&table, 65);
         assert!(table.close(&id));
         assert!(!table.close(&id), "close is not idempotent-true");
         // Closed ⇒ leasing verbs on it fail until re-opened…
-        assert!(table.renew("wa", &id, 0).is_err());
+        assert!(table.renew("wa", &id, 0, None).is_err());
         // …and a grant lazily re-opens it.
         assert!(matches!(
             table.grant("wa", Some(id.as_str()), |_| true).unwrap(),
@@ -851,5 +1179,174 @@ mod tests {
             table.grant("wa", Some(id.as_str()), |_| true).unwrap(),
             GrantOutcome::Complete
         ));
+    }
+
+    fn row(snap: &JobTelemetry, worker: &str) -> WorkerRow {
+        snap.workers
+            .iter()
+            .find(|(w, _)| w == worker)
+            .unwrap_or_else(|| panic!("no row for {worker} in {snap:?}"))
+            .1
+            .clone()
+    }
+
+    #[test]
+    fn telemetry_attributes_expiry_duplicates_and_throughput_per_worker() {
+        let (clock, table) = tmp_table("telemetry", Duration::from_millis(20));
+        let id = submit_f64(&table, 71);
+        let ga = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        let spec = ga.spec.clone().unwrap();
+        // wa goes silent; past the TTL its chunk is re-granted to wb
+        // and the expiry is attributed to wa.
+        clock.advance(Duration::from_millis(60));
+        let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(gb.chunk_index, ga.chunk_index);
+        // 5 ms of (virtual) compute before delivery: wb's grant→complete
+        // span is pure clock arithmetic, so its EWMA is deterministic.
+        clock.advance(Duration::from_millis(5));
+        let rec = compute(&spec, gb.chunk);
+        assert!(matches!(
+            table.complete("wb", &id, gb.chunk_index, rec.clone()).unwrap(),
+            CompleteOutcome::Accepted { .. }
+        ));
+        assert!(matches!(
+            table.complete("wb", &id, gb.chunk_index, rec).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+        let snap = table.job_metrics(&id).unwrap();
+        assert_eq!(snap.state, "open");
+        assert_eq!(snap.chunks_done, 1);
+        assert_eq!(snap.chunks_total, 6);
+        let wa = row(&snap, "wa");
+        assert_eq!((wa.held, wa.expired, wa.completed, wa.ewma_mtps), (0, 1, 0, 0));
+        let wb = row(&snap, "wb");
+        assert_eq!((wb.held, wb.completed, wb.duplicates, wb.expired), (0, 1, 1, 0));
+        // terms over 5000 µs, in milli-terms/sec.
+        let expected = snap.terms_done as u64 * 1_000_000_000 / 5_000;
+        assert_eq!(wb.ewma_mtps, expected);
+        assert_eq!(snap.tps_milli, expected);
+        let eta = snap.eta_ms.unwrap();
+        let remaining = (snap.terms_total - snap.terms_done) as u64;
+        assert_eq!(eta, remaining * 1_000_000 / expected);
+    }
+
+    #[test]
+    fn job_metrics_retains_finished_jobs_and_falls_back_after_restart() {
+        let (_clock, table) = tmp_table("telemetry-done", Duration::from_secs(10));
+        let id = submit_f64(&table, 72);
+        let mut spec: Option<JobSpec> = None;
+        loop {
+            let g = match table.grant("w1", Some(id.as_str()), |_| spec.is_none()).unwrap() {
+                GrantOutcome::Granted(g) => g,
+                GrantOutcome::Complete => break,
+                other => panic!("{other:?}"),
+            };
+            if let Some(s) = g.spec {
+                spec = Some(s);
+            }
+            let rec = compute(spec.as_ref().unwrap(), g.chunk);
+            table.complete("w1", &id, g.chunk_index, rec).unwrap();
+        }
+        // The OpenJob is gone (journal closed, lock released), but the
+        // final telemetry is retained for METRICS JOB.
+        let snap = table.job_metrics(&id).unwrap();
+        assert_eq!(snap.state, "done");
+        assert_eq!(snap.chunks_done, snap.chunks_total);
+        assert_eq!(snap.terms_done, snap.terms_total);
+        let w1 = row(&snap, "w1");
+        assert_eq!(w1.completed, snap.chunks_total);
+        assert_eq!(w1.held, 0);
+        // A fresh table over the same store (server restart) lost the
+        // rows; the journal-derived fallback still answers.
+        let t2 = LeaseTable::new(table.store().clone(), FleetConfig::default());
+        let bare = t2.job_metrics(&id).unwrap();
+        assert_eq!(bare.state, "done");
+        assert_eq!(bare.chunks_done, bare.chunks_total);
+        assert!(bare.workers.is_empty());
+        assert_eq!(bare.eta_ms, None);
+        // Unknown ids stay errors.
+        assert!(table.job_metrics("job-nope").is_err());
+    }
+
+    #[test]
+    fn renew_reports_feed_the_throughput_ewma() {
+        let (_clock, table) = tmp_table("telemetry-renew", Duration::from_secs(10));
+        let id = submit_f64(&table, 73);
+        let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        // 1000 terms in 1000 µs = 1e6 terms/sec = 1e9 milli-terms/sec.
+        table.renew("wa", &id, g.chunk_index, Some((1_000, 1_000))).unwrap();
+        assert_eq!(row(&table.job_metrics(&id).unwrap(), "wa").ewma_mtps, 1_000_000_000);
+        // Reports are cumulative: this one contributes its delta
+        // (1000 terms over 2000 µs = 5e8), EWMA-blended 3:1.
+        table.renew("wa", &id, g.chunk_index, Some((2_000, 3_000))).unwrap();
+        assert_eq!(row(&table.job_metrics(&id).unwrap(), "wa").ewma_mtps, 875_000_000);
+        // A regressing report (worker restarted its counters) is
+        // absorbed by the saturating delta — no panic, no update.
+        table.renew("wa", &id, g.chunk_index, Some((1, 1))).unwrap();
+        assert_eq!(row(&table.job_metrics(&id).unwrap(), "wa").ewma_mtps, 875_000_000);
+    }
+
+    #[test]
+    fn fleet_counters_land_in_the_registry() {
+        let store =
+            JobStore::open(crate::testkit::scratch_dir("fleet-registry")).unwrap();
+        let clock = SimClock::new();
+        let registry = Arc::new(Registry::new());
+        let table = LeaseTable::with_clock(
+            store,
+            FleetConfig {
+                lease_ttl: Duration::from_millis(20),
+                default_chunks: 6,
+                ..Default::default()
+            },
+            clock.clone(),
+        )
+        .with_registry(&registry);
+        let id = submit_f64(&table, 74);
+        let g = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        let spec = g.spec.clone().unwrap();
+        table.renew("wa", &id, g.chunk_index, None).unwrap();
+        let rec = compute(&spec, g.chunk);
+        table.complete("wa", &id, g.chunk_index, rec.clone()).unwrap();
+        table.complete("wa", &id, g.chunk_index, rec).unwrap(); // duplicate
+        let g2 = match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        table.abandon("wa", &id, g2.chunk_index).unwrap();
+        let g3 = match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        clock.advance(Duration::from_millis(60));
+        // g3's lease lapses during this grant's sweep.
+        let g4 = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g4.chunk_index, g3.chunk_index);
+        let snap = registry.snapshot();
+        assert_eq!(snap.get("fleet_grants_total"), Some("4"));
+        assert_eq!(snap.get("fleet_renews_total"), Some("1"));
+        assert_eq!(snap.get("fleet_completes_total"), Some("1"));
+        assert_eq!(snap.get("fleet_duplicates_total"), Some("1"));
+        assert_eq!(snap.get("fleet_abandons_total"), Some("1"));
+        assert_eq!(snap.get("fleet_expiries_total"), Some("1"));
+        // The store's fs was rewrapped in MeteredFs on the table's sim
+        // clock: journal appends are counted, with zero virtual latency.
+        assert!(snap.get("fs_append_us_count").is_some_and(|v| v != "0"));
+        assert_eq!(snap.get("fs_append_us_sum"), Some("0"));
     }
 }

@@ -157,6 +157,14 @@ impl CachedJob {
 /// shared with the heartbeat thread on the production path.
 type HeldLease = Arc<Mutex<Option<(String, u64, Duration)>>>;
 
+/// Cumulative `(terms, micros)` computed by this worker across all
+/// chunks — shared with the heartbeat thread, which piggybacks the
+/// running total onto each `LEASE RENEW` so the server can derive
+/// per-worker throughput. Cumulative (not per-interval) on purpose: a
+/// lost renew frame merely delays the next delta instead of losing work
+/// from the server's tally.
+type WorkTally = Arc<Mutex<(u64, u64)>>;
+
 /// A step-wise fleet worker over any transport and clock.
 pub struct Worker {
     cfg: WorkerConfig,
@@ -169,6 +177,7 @@ pub struct Worker {
     grants: u64,
     grant_errors: u32,
     held: HeldLease,
+    work: WorkTally,
 }
 
 impl Worker {
@@ -194,6 +203,7 @@ impl Worker {
             grants: 0,
             grant_errors: 0,
             held: Arc::new(Mutex::new(None)),
+            work: Arc::new(Mutex::new((0, 0))),
         })
     }
 
@@ -205,6 +215,11 @@ impl Worker {
     /// Handle to the held-lease slot for a heartbeat loop.
     fn held_handle(&self) -> HeldLease {
         Arc::clone(&self.held)
+    }
+
+    /// Handle to the cumulative work tally for a heartbeat loop.
+    fn work_handle(&self) -> WorkTally {
+        Arc::clone(&self.work)
     }
 
     /// A grant/connect failure: drop the connection (also resetting the
@@ -307,6 +322,14 @@ impl Worker {
         *self.held.lock().expect("held lease poisoned") = None;
         match outcome {
             Ok((partial, wm)) => {
+                {
+                    // Tally the compute whether or not the delivery is
+                    // accepted — the throughput report measures work this
+                    // worker *did*, and a duplicate ack still cost it.
+                    let mut work = self.work.lock().expect("work tally poisoned");
+                    work.0 += wm.terms;
+                    work.1 += micros;
+                }
                 let client = self.client.as_mut().expect("client ensured above");
                 match client.lease_complete(
                     &self.cfg.id,
@@ -369,6 +392,7 @@ fn spawn_heartbeat(
     addr: String,
     worker: String,
     held: HeldLease,
+    work: WorkTally,
     stop: Arc<AtomicBool>,
     clock: Arc<dyn Clock>,
 ) -> std::thread::JoinHandle<()> {
@@ -399,9 +423,10 @@ fn spawn_heartbeat(
             if client.is_none() {
                 client = transport.connect(&addr).ok().map(Client::over);
             }
+            let tally = *work.lock().expect("work tally poisoned");
             let renewed = client
                 .as_mut()
-                .is_some_and(|c| c.lease_renew(&worker, &job, chunk).is_ok());
+                .is_some_and(|c| c.lease_renew(&worker, &job, chunk, Some(tally)).is_ok());
             if renewed {
                 backoff.reset();
                 retry_at = None;
@@ -445,6 +470,7 @@ pub fn run_worker_with(
         addr.to_string(),
         cfg.id.clone(),
         worker.held_handle(),
+        worker.work_handle(),
         Arc::clone(&heartbeat_stop),
         Arc::clone(&clock),
     );

@@ -25,6 +25,8 @@
 //!   disk — a retry reads clean bytes, which is what makes them
 //!   *transient* faults in the recovery-invariant sense.
 
+use crate::clock::Clock;
+use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BUCKETS_US};
 use crate::testkit::TestRng;
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -173,6 +175,181 @@ impl Fs for RealFs {
     }
 }
 
+/// Shared handles into a [`Registry`] for one metered filesystem (the
+/// `fs_*` metric family).
+#[derive(Clone, Debug)]
+struct FsMetrics {
+    append_us: Histogram,
+    fsync_us: Histogram,
+    append_errors: Counter,
+    fsync_errors: Counter,
+    reads: Counter,
+    writes: Counter,
+}
+
+impl FsMetrics {
+    fn register(registry: &Registry) -> FsMetrics {
+        FsMetrics {
+            append_us: registry.histogram("fs_append_us", &LATENCY_BUCKETS_US),
+            fsync_us: registry.histogram("fs_fsync_us", &LATENCY_BUCKETS_US),
+            append_errors: registry.counter("fs_append_errors"),
+            fsync_errors: registry.counter("fs_fsync_errors"),
+            reads: registry.counter("fs_reads"),
+            writes: registry.counter("fs_writes"),
+        }
+    }
+}
+
+/// An instrumenting [`Fs`] wrapper: counts reads/writes and measures
+/// journal append + fsync latency into a shared [`Registry`], without
+/// changing any storage semantics.
+///
+/// Latency is measured through the [`Clock`] seam: in production the
+/// histograms hold real microseconds; under the deterministic
+/// simulation fabric the [`crate::clock::SimClock`] never advances
+/// *during* an I/O call, so every simulated latency sample is exactly
+/// zero — which is what keeps metric snapshots bit-identical across
+/// replays of one seed.
+#[derive(Debug)]
+pub struct MeteredFs {
+    inner: Arc<dyn Fs>,
+    clock: Arc<dyn Clock>,
+    metrics: FsMetrics,
+}
+
+impl MeteredFs {
+    /// Wrap `inner`, registering the `fs_*` metric family in
+    /// `registry` (shared cells: wrapping two stores with one registry
+    /// accumulates into the same series).
+    pub fn new(inner: Arc<dyn Fs>, clock: Arc<dyn Clock>, registry: &Registry) -> Arc<MeteredFs> {
+        Arc::new(MeteredFs {
+            inner,
+            clock,
+            metrics: FsMetrics::register(registry),
+        })
+    }
+}
+
+impl Fs for MeteredFs {
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        self.metrics.reads.inc();
+        self.inner.read(path)
+    }
+
+    fn read_from(&self, path: &Path, offset: u64) -> std::io::Result<Vec<u8>> {
+        self.metrics.reads.inc();
+        self.inner.read_from(path, offset)
+    }
+
+    fn read_to_string(&self, path: &Path) -> std::io::Result<String> {
+        self.metrics.reads.inc();
+        self.inner.read_to_string(path)
+    }
+
+    fn create_new(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        let file = self.inner.create_new(path)?;
+        Ok(Box::new(MeteredFile {
+            inner: file,
+            clock: Arc::clone(&self.clock),
+            metrics: self.metrics.clone(),
+        }))
+    }
+
+    fn open_rw(&self, path: &Path) -> std::io::Result<Box<dyn FsFile>> {
+        let file = self.inner.open_rw(path)?;
+        Ok(Box::new(MeteredFile {
+            inner: file,
+            clock: Arc::clone(&self.clock),
+            metrics: self.metrics.clone(),
+        }))
+    }
+
+    fn write(&self, path: &Path, contents: &[u8]) -> std::io::Result<()> {
+        self.metrics.writes.inc();
+        self.inner.write(path, contents)
+    }
+
+    fn hard_link(&self, src: &Path, dst: &Path) -> std::io::Result<()> {
+        self.inner.hard_link(src, dst)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.create_dir_all(path)
+    }
+
+    fn read_dir_names(&self, path: &Path) -> std::io::Result<Vec<String>> {
+        self.inner.read_dir_names(path)
+    }
+
+    fn is_file(&self, path: &Path) -> bool {
+        self.inner.is_file(path)
+    }
+
+    fn sync_dir(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.sync_dir(path)
+    }
+}
+
+/// The instrumenting file handle behind [`MeteredFs`] (journals are
+/// the only long-lived handles, so `write_all` ≈ journal append and
+/// `sync_*` ≈ journal fsync).
+#[derive(Debug)]
+struct MeteredFile {
+    inner: Box<dyn FsFile>,
+    clock: Arc<dyn Clock>,
+    metrics: FsMetrics,
+}
+
+impl MeteredFile {
+    fn timed<T>(
+        &mut self,
+        hist: Histogram,
+        errors: Counter,
+        op: impl FnOnce(&mut Box<dyn FsFile>) -> std::io::Result<T>,
+    ) -> std::io::Result<T> {
+        let t0 = self.clock.now();
+        let out = op(&mut self.inner);
+        hist.record(self.clock.now().saturating_sub(t0).as_micros() as u64);
+        if out.is_err() {
+            errors.inc();
+        }
+        out
+    }
+}
+
+impl FsFile for MeteredFile {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        let (hist, errors) = (self.metrics.append_us.clone(), self.metrics.append_errors.clone());
+        self.timed(hist, errors, |f| f.write_all(buf))
+    }
+
+    fn sync_data(&mut self) -> std::io::Result<()> {
+        let (hist, errors) = (self.metrics.fsync_us.clone(), self.metrics.fsync_errors.clone());
+        self.timed(hist, errors, |f| f.sync_data())
+    }
+
+    fn sync_all(&mut self) -> std::io::Result<()> {
+        let (hist, errors) = (self.metrics.fsync_us.clone(), self.metrics.fsync_errors.clone());
+        self.timed(hist, errors, |f| f.sync_all())
+    }
+
+    fn set_len(&mut self, len: u64) -> std::io::Result<()> {
+        self.inner.set_len(len)
+    }
+
+    fn seek_start(&mut self, pos: u64) -> std::io::Result<()> {
+        self.inner.seek_start(pos)
+    }
+}
+
 /// Fault probabilities in parts per 10 000, rolled independently per
 /// operation. All-zero means a transparent passthrough.
 #[derive(Clone, Copy, Debug, Default)]
@@ -204,6 +381,35 @@ impl FaultConfig {
     }
 }
 
+/// How many faults of each class a [`FaultFs`] actually injected —
+/// the ground truth a fault-sweep's telemetry assertions compare
+/// against (error counters in a [`Registry`] see only the errors that
+/// *surfaced*; these tallies also count silent faults like fsync lies
+/// and read bitflips).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultTallies {
+    /// Writes cut to a strict prefix.
+    pub torn_writes: u64,
+    /// Syncs that returned an error.
+    pub sync_fails: u64,
+    /// Syncs that acked but left the data non-durable.
+    pub sync_lies: u64,
+    /// Writes/creates refused with `ENOSPC`.
+    pub enospc: u64,
+    /// Reads returned with one bit flipped.
+    pub read_flips: u64,
+    /// [`FaultFs::crash`] invocations (power losses).
+    pub crashes: u64,
+}
+
+impl FaultTallies {
+    /// Total injected faults (crashes excluded — they are scenario
+    /// steps, not dice rolls).
+    pub fn total(&self) -> u64 {
+        self.torn_writes + self.sync_fails + self.sync_lies + self.enospc + self.read_flips
+    }
+}
+
 #[derive(Debug)]
 struct FaultState {
     rng: TestRng,
@@ -214,6 +420,8 @@ struct FaultState {
     /// Durable byte length per tracked (journal) file: what survives a
     /// [`FaultFs::crash`]. Advanced only by an honest, successful sync.
     durable: HashMap<PathBuf, u64>,
+    /// Injection tallies (see [`FaultTallies`]).
+    tallies: FaultTallies,
 }
 
 impl FaultState {
@@ -253,6 +461,7 @@ impl FaultFs {
                 cfg,
                 armed: false,
                 durable: HashMap::new(),
+                tallies: FaultTallies::default(),
             })),
         })
     }
@@ -264,12 +473,18 @@ impl FaultFs {
         self.state.lock().expect("faultfs poisoned").armed = armed;
     }
 
+    /// Snapshot of how many faults each class actually injected.
+    pub fn tallies(&self) -> FaultTallies {
+        self.state.lock().expect("faultfs poisoned").tallies
+    }
+
     /// Simulate a power loss: every tracked file is truncated back to
     /// its durable watermark, dropping writes whose sync failed or
     /// lied. Call on simulated server restart.
     pub fn crash(&self) {
         let durable: Vec<(PathBuf, u64)> = {
-            let st = self.state.lock().expect("faultfs poisoned");
+            let mut st = self.state.lock().expect("faultfs poisoned");
+            st.tallies.crashes += 1;
             st.durable.iter().map(|(p, &l)| (p.clone(), l)).collect()
         };
         for (path, len) in durable {
@@ -305,6 +520,7 @@ impl FaultFs {
         let mut st = self.state.lock().expect("faultfs poisoned");
         let rate = st.cfg.read_flip_per_10k;
         if !data.is_empty() && st.roll(rate) {
+            st.tallies.read_flips += 1;
             let byte = st.rng.u64_below(data.len() as u64) as usize;
             let bit = st.rng.u64_below(8) as u8;
             data[byte] ^= 1 << bit;
@@ -340,9 +556,11 @@ impl FsFile for FaultFile {
             let mut st = self.state.lock().expect("faultfs poisoned");
             let (enospc_rate, torn_rate) = (st.cfg.enospc_per_10k, st.cfg.torn_write_per_10k);
             if st.roll(enospc_rate) {
+                st.tallies.enospc += 1;
                 return Err(enospc());
             }
             if st.roll(torn_rate) && !buf.is_empty() {
+                st.tallies.torn_writes += 1;
                 let keep = st.rng.u64_below(buf.len() as u64) as usize;
                 drop(st);
                 self.file.write_all(&buf[..keep])?;
@@ -362,10 +580,13 @@ impl FsFile for FaultFile {
             (st.roll(f), st.roll(l))
         };
         if fail {
+            self.state.lock().expect("faultfs poisoned").tallies.sync_fails += 1;
             return Err(injected("fsync failed"));
         }
         self.file.sync_data()?;
-        if !lie {
+        if lie {
+            self.state.lock().expect("faultfs poisoned").tallies.sync_lies += 1;
+        } else {
             self.mark_durable();
         }
         Ok(())
@@ -378,10 +599,13 @@ impl FsFile for FaultFile {
             (st.roll(f), st.roll(l))
         };
         if fail {
+            self.state.lock().expect("faultfs poisoned").tallies.sync_fails += 1;
             return Err(injected("fsync failed"));
         }
         self.file.sync_all()?;
-        if !lie {
+        if lie {
+            self.state.lock().expect("faultfs poisoned").tallies.sync_lies += 1;
+        } else {
             self.mark_durable();
         }
         Ok(())
@@ -430,6 +654,7 @@ impl Fs for FaultFs {
             let mut st = self.state.lock().expect("faultfs poisoned");
             let rate = st.cfg.enospc_per_10k;
             if st.roll(rate) {
+                st.tallies.enospc += 1;
                 return Err(enospc());
             }
         }
@@ -447,6 +672,7 @@ impl Fs for FaultFs {
             let mut st = self.state.lock().expect("faultfs poisoned");
             let rate = st.cfg.enospc_per_10k;
             if st.roll(rate) {
+                st.tallies.enospc += 1;
                 return Err(enospc());
             }
         }
@@ -576,6 +802,49 @@ mod tests {
             .sum();
         assert_eq!(diff, 1, "exactly one bit flips");
         assert_eq!(std::fs::read(&path).unwrap(), b"stable bytes", "disk unharmed");
+    }
+
+    #[test]
+    fn fault_tallies_count_injections() {
+        let dir = scratch_dir("faultfs-tallies");
+        let fs = FaultFs::new(7, certain(|c| &mut c.sync_lie_per_10k));
+        let path = dir.join("j");
+        let mut f = fs.create_new(&path).unwrap();
+        assert_eq!(fs.tallies(), FaultTallies::default(), "disarmed ⇒ no injections");
+        fs.arm(true);
+        f.write_all(b"x").unwrap();
+        f.sync_data().unwrap();
+        f.sync_data().unwrap();
+        assert_eq!(fs.tallies().sync_lies, 2);
+        fs.crash();
+        let t = fs.tallies();
+        assert_eq!(t.crashes, 1);
+        assert_eq!(t.total(), 2, "crashes are not dice-roll injections");
+    }
+
+    #[test]
+    fn metered_fs_counts_io_and_keeps_sim_latency_at_zero() {
+        use crate::clock::SimClock;
+        use crate::telemetry::Registry;
+        let dir = scratch_dir("metered-fs");
+        let registry = Registry::new();
+        let fs = MeteredFs::new(super::real(), SimClock::new(), &registry);
+        let path = dir.join("j");
+        let mut f = fs.create_new(&path).unwrap();
+        f.write_all(b"rec\n").unwrap();
+        f.sync_data().unwrap();
+        assert_eq!(fs.read(&path).unwrap(), b"rec\n");
+        fs.write(&dir.join("marker"), b"m").unwrap();
+        let snap = registry.snapshot();
+        assert_eq!(snap.get("fs_append_us_count"), Some("1"));
+        assert_eq!(snap.get("fs_fsync_us_count"), Some("1"));
+        assert_eq!(snap.get("fs_reads"), Some("1"));
+        assert_eq!(snap.get("fs_writes"), Some("1"));
+        assert_eq!(snap.get("fs_append_errors"), Some("0"));
+        // The SimClock never advanced during the ops, so every sample
+        // lands in the lowest bucket — the sim-determinism invariant.
+        assert_eq!(snap.get("fs_append_us_sum"), Some("0"));
+        assert_eq!(snap.get("fs_fsync_us_sum"), Some("0"));
     }
 
     #[test]

@@ -8,10 +8,12 @@
 //! cooperative: a cancelled job finishes its in-flight chunks, journals
 //! them, and can be resumed later.
 
+use super::fs::MeteredFs;
 use super::runner::{JobRunner, RunnerConfig};
 use super::store::{JobStatus, JobStore};
 use super::{JobEngine, JobPayload, JobSpec};
 use crate::clock::{self, Clock, Notify};
+use crate::telemetry::Registry;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -40,6 +42,13 @@ struct Handle {
     /// Terminal runner error, if the thread failed (surfaced by the
     /// next status/wait call).
     error: Arc<Mutex<Option<String>>>,
+    /// Accumulated engine counters across this handle's runs:
+    /// `(blocks, fallback_blocks)` — what `JOB STATUS` surfaces so the
+    /// coordinator boundary stops dropping [`WorkerMetrics`] (the
+    /// journal never records them).
+    ///
+    /// [`WorkerMetrics`]: crate::coordinator::WorkerMetrics
+    run_metrics: Arc<Mutex<(u64, u64)>>,
 }
 
 /// Background job execution over a shared [`JobStore`].
@@ -61,6 +70,10 @@ pub struct JobManager {
     /// the moment one of *our* jobs completes or pauses instead of
     /// discovering it a poll interval later.
     done_signal: Arc<Notify>,
+    /// Engine-counter sink (`engine_blocks_<kind>` /
+    /// `engine_fallback_blocks_<kind>` per scalar kind), when attached
+    /// via [`Self::with_registry`].
+    registry: Option<Arc<Registry>>,
     jobs: Mutex<HashMap<String, Handle>>,
 }
 
@@ -78,8 +91,25 @@ impl JobManager {
             max_concurrent: 8,
             clock: clock::wall(),
             done_signal: Arc::new(Notify::new()),
+            registry: None,
             jobs: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Attach a telemetry registry: per-scalar-kind engine counters
+    /// accumulate there after every background run, and this manager's
+    /// journal I/O is rewrapped in a [`MeteredFs`] (append/fsync
+    /// latency + error counters). Call after [`Self::with_clock`] so
+    /// sim latency samples stay virtual.
+    pub fn with_registry(mut self, registry: &Arc<Registry>) -> Self {
+        let fs = MeteredFs::new(
+            Arc::clone(self.store.fs()),
+            Arc::clone(&self.clock),
+            registry,
+        );
+        self.store = self.store.with_fs(fs);
+        self.registry = Some(Arc::clone(registry));
+        self
     }
 
     /// Override the cap on simultaneously running jobs (0 ⇒ reject all
@@ -181,15 +211,18 @@ impl JobManager {
         let stop = Arc::new(AtomicBool::new(false));
         let done = Arc::new(AtomicBool::new(false));
         let error = Arc::new(Mutex::new(None));
+        let run_metrics = Arc::new(Mutex::new((0u64, 0u64)));
         let handle = Handle {
             stop: Arc::clone(&stop),
             done: Arc::clone(&done),
             error: Arc::clone(&error),
+            run_metrics: Arc::clone(&run_metrics),
         };
         let store = self.store.clone();
         let runner_cfg = self.runner;
         let id_owned = id.to_string();
         let signal = Arc::clone(&self.done_signal);
+        let registry = self.registry.clone();
         std::thread::spawn(move || {
             // catch_unwind: a panic anywhere in the run must still set
             // `done` (and leave a diagnosis), or the job would read as
@@ -198,11 +231,38 @@ impl JobManager {
                 JobRunner::new(runner_cfg).run_locked(&store, &id_owned, &stop, file_lock)
             }));
             match outcome {
-                Ok(Ok(_)) => {}
+                Ok(Ok(out)) => {
+                    // The runner's metrics used to die here with the
+                    // thread — retain the engine counters so `JOB
+                    // STATUS` (and the registry) can surface them.
+                    let totals = out.metrics.total();
+                    {
+                        let mut slot =
+                            run_metrics.lock().expect("run metrics slot poisoned");
+                        slot.0 += totals.blocks;
+                        slot.1 += totals.fallback_blocks;
+                    }
+                    if let Some(reg) = &registry {
+                        reg.counter(&format!("engine_blocks_{}", out.scalar_kind))
+                            .add(totals.blocks);
+                        reg.counter(&format!(
+                            "engine_fallback_blocks_{}",
+                            out.scalar_kind
+                        ))
+                        .add(totals.fallback_blocks);
+                        reg.counter("jobs_runs_total").inc();
+                    }
+                }
                 Ok(Err(e)) => {
+                    if let Some(reg) = &registry {
+                        reg.counter("jobs_failed_runs_total").inc();
+                    }
                     *error.lock().expect("job error slot poisoned") = Some(e.to_string());
                 }
                 Err(_) => {
+                    if let Some(reg) = &registry {
+                        reg.counter("jobs_failed_runs_total").inc();
+                    }
                     *error.lock().expect("job error slot poisoned") =
                         Some("runner thread panicked".into());
                 }
@@ -251,6 +311,17 @@ impl JobManager {
             return Err(Error::Job(format!("job {id:?} failed: {msg}")));
         }
         Ok((self.store.status(id)?, self.is_running(id)))
+    }
+
+    /// Engine counters `(blocks, fallback_blocks)` accumulated across
+    /// this manager's runs of `id`. Zeros when the job never ran here
+    /// or its finished handle was pruned — callers treat the pair as
+    /// "best effort", never as ground truth (the journal is that).
+    pub fn run_metrics(&self, id: &str) -> (u64, u64) {
+        let jobs = self.jobs.lock().expect("job map poisoned");
+        jobs.get(id)
+            .map(|h| *h.run_metrics.lock().expect("run metrics slot poisoned"))
+            .unwrap_or((0, 0))
     }
 
     fn take_error(&self, id: &str) -> Option<String> {

@@ -41,7 +41,7 @@ pub mod manager;
 pub mod runner;
 pub mod store;
 
-pub use fs::{FaultConfig, FaultFs, Fs, FsFile, RealFs};
+pub use fs::{FaultConfig, FaultFs, FaultTallies, Fs, FsFile, MeteredFs, RealFs};
 pub use journal::{
     encode_spec_body, parse_spec_body, quarantine_path, FsckDamage, FsckRecord, FsckReport,
     Journal, MetaRecord, Record, SpecMeta,

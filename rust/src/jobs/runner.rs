@@ -51,6 +51,9 @@ pub struct JobOutcome {
     /// True when the run stopped before the sweep finished (budget or
     /// stop flag).
     pub interrupted: bool,
+    /// Wire tag of the job's scalar arithmetic (`f64` / `exact` /
+    /// `big`) — the telemetry key engine counters aggregate under.
+    pub scalar_kind: &'static str,
 }
 
 /// Executes (and resumes) durable jobs against a [`JobStore`].
@@ -118,7 +121,12 @@ impl JobRunner {
         // Already finished: resume is a no-op reporting the same value.
         if job.done.is_some() {
             jm.elapsed = started.elapsed();
-            return Ok(JobOutcome { status: job.status(), metrics: jm, interrupted: false });
+            return Ok(JobOutcome {
+                status: job.status(),
+                metrics: jm,
+                interrupted: false,
+                scalar_kind: job.spec.payload.kind_str(),
+            });
         }
 
         let pending: Vec<(u64, Chunk)> = job
@@ -240,7 +248,12 @@ impl JobRunner {
             value: done_value,
         };
         let interrupted = !status.complete;
-        Ok(JobOutcome { status, metrics: jm, interrupted })
+        Ok(JobOutcome {
+            status,
+            metrics: jm,
+            interrupted,
+            scalar_kind: job.spec.payload.kind_str(),
+        })
     }
 }
 

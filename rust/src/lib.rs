@@ -64,6 +64,11 @@
 //!   with jitter over the [`clock`] seam) pacing every reconnect and
 //!   idle loop; [`jobs::fs`] is the matching storage seam whose
 //!   [`jobs::FaultFs`] faults the disk under the same scenario seed.
+//! * [`telemetry`] — the observability layer: a dependency-free metrics
+//!   registry (counters, gauges, fixed-bucket histograms) with a
+//!   canonical text snapshot, plus a structured event log on the
+//!   [`clock`] seam. Every server owns one registry; the `METRICS` /
+//!   `METRICS JOB` wire verbs and `raddet job top` read it.
 //! * [`mod@bench`], [`testkit`], [`cli`] — in-crate substrates replacing
 //!   criterion / proptest / clap (offline environment, see DESIGN.md §2);
 //!   [`testkit::sim`] is the deterministic simulation fabric (virtual
@@ -107,6 +112,7 @@ pub mod retry;
 pub mod runtime;
 pub mod scalar;
 pub mod service;
+pub mod telemetry;
 pub mod testkit;
 pub mod xla;
 

@@ -4,8 +4,10 @@
 
 use super::protocol::{Request, Response};
 use super::transport::{Conn, TcpTransport, Transport};
+use crate::fleet::JobTelemetry;
 use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{MatF64, MatI64};
+use crate::telemetry::Snapshot;
 use crate::{Error, Result};
 use std::time::{Duration, Instant};
 
@@ -144,6 +146,8 @@ impl Client {
                 terms_done,
                 terms_total,
                 value,
+                blocks,
+                fallback_blocks,
             } => Ok(JobStatusReply {
                 id,
                 state,
@@ -152,7 +156,28 @@ impl Client {
                 terms_done,
                 terms_total,
                 value,
+                blocks,
+                fallback_blocks,
             }),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Snapshot the server's full metrics registry (`METRICS`).
+    pub fn metrics(&mut self) -> Result<Snapshot> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::Metrics(snap) => Ok(snap),
+            Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Per-job fleet telemetry (`METRICS JOB <id>`): progress,
+    /// aggregate throughput, ETA, and per-worker rows.
+    pub fn job_metrics(&mut self, id: &str) -> Result<JobTelemetry> {
+        match self.roundtrip(&Request::JobMetrics(id.to_string()))? {
+            Response::JobMetrics(t) => Ok(t),
             Response::Err(e) => Err(Error::Protocol(format!("server: {e}"))),
             other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
         }
@@ -201,12 +226,22 @@ impl Client {
     }
 
     /// Extend a held lease (`LEASE RENEW`); returns the renewed TTL in
-    /// milliseconds.
-    pub fn lease_renew(&mut self, worker: &str, job: &str, chunk: u64) -> Result<u64> {
+    /// milliseconds. `report` piggybacks this worker's **cumulative**
+    /// `(terms, micros)` work tally onto the heartbeat — the server
+    /// turns consecutive reports into throughput deltas, so a lost
+    /// frame merely delays the next sample.
+    pub fn lease_renew(
+        &mut self,
+        worker: &str,
+        job: &str,
+        chunk: u64,
+        report: Option<(u64, u64)>,
+    ) -> Result<u64> {
         let req = Request::LeaseRenew {
             worker: worker.to_string(),
             job: job.to_string(),
             chunk,
+            report,
         };
         match self.roundtrip(&req)? {
             Response::Renewed { ttl_ms } => Ok(ttl_ms),
@@ -319,4 +354,9 @@ pub struct JobStatusReply {
     pub terms_total: u128,
     /// Composed determinant (complete jobs only) — bit-exact for f64.
     pub value: Option<JobValue>,
+    /// Engine blocks evaluated by this server's in-process runs of the
+    /// job (zero for fleet jobs — the blocks run on the workers).
+    pub blocks: u64,
+    /// Blocks that fell back to the scalar path (prefix engine only).
+    pub fallback_blocks: u64,
 }

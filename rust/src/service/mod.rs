@@ -14,8 +14,10 @@
 //! bit-exact results. The same servers speak the fleet `LEASE` verbs
 //! (`GRANT / RENEW / COMPLETE / ABANDON`) over a
 //! [`crate::fleet::LeaseTable`], distributing a durable job's chunks
-//! across remote `raddet worker` processes. The full wire contract is
-//! specified in `docs/PROTOCOL.md`.
+//! across remote `raddet worker` processes, and the observability verbs
+//! (`METRICS`, `METRICS JOB <id>`) over the per-server
+//! [`crate::telemetry::Registry`]. The full wire contract is specified
+//! in `docs/PROTOCOL.md`.
 
 pub mod client;
 pub mod protocol;

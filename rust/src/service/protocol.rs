@@ -12,6 +12,7 @@
 //! → JOB STATUS <id>
 //! ← OK JOBSTATUS <id> <state> <chunks_done> <chunks_total>
 //!                <terms_done> <terms_total> <value|->
+//!                <blocks> <fallback_blocks>
 //! → JOB WAIT <id> [timeout_ms]           block until done/paused (0 ⇒
 //!                                        immediate status snapshot)
 //! → JOB CANCEL <id>                      cooperative pause (resumable)
@@ -19,12 +20,19 @@
 //! → LEASE GRANT <worker> [<job>]         claim a chunk lease
 //! ← OK LEASE <job> <chunk> <start> <len> <ttl_ms> <SPEC …|CACHED>
 //! ← OK NOLEASE <idle|complete>           nothing to lease right now
-//! → LEASE RENEW <worker> <job> <chunk>   extend a held lease
+//! → LEASE RENEW <worker> <job> <chunk> [<terms> <micros>]
 //! ← OK RENEWED <ttl_ms>
 //! → LEASE COMPLETE <worker> <job> <chunk> <terms> <micros> <value>
 //! ← OK COMPLETED <chunks_done> <chunks_total> <new|dup>
 //! → LEASE ABANDON <worker> <job> <chunk> give a lease back
 //! ← OK ABANDONED
+//! → METRICS                              global telemetry snapshot
+//! ← OK METRICS <n> <name=value …>        n canonical name=value pairs
+//! → METRICS JOB <id>                     per-job fleet telemetry
+//! ← OK JOBMETRICS <id> <open|done|closed> <chunks_done> <chunks_total>
+//!                <terms_done> <terms_total> <tps_milli> <eta_ms|->
+//!                [<worker>:<held>:<completed>:<abandoned>:<expired>
+//!                 :<dup>:<ewma_mtps> …]
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
@@ -49,9 +57,11 @@
 //! all yield a protocol error (the server answers `ERR …` and lives on)
 //! instead of panicking the connection handler.
 
+use crate::fleet::{JobTelemetry, WorkerRow};
 use crate::jobs::{encode_spec_body, parse_spec_body, valid_id};
 use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{Mat, MatF64, MatI64};
+use crate::telemetry::Snapshot;
 use crate::{Error, Result};
 
 /// A parsed client request.
@@ -99,6 +109,10 @@ pub enum Request {
         job: String,
         /// Chunk index within the job's plan.
         chunk: u64,
+        /// Optional cumulative `(terms, micros)` progress counters from
+        /// the worker; the server folds the delta since the previous
+        /// report into the worker's throughput EWMA.
+        report: Option<(u64, u64)>,
     },
     /// Fleet worker: deliver a computed chunk partial.
     LeaseComplete {
@@ -124,6 +138,10 @@ pub enum Request {
         /// Chunk index within the job's plan.
         chunk: u64,
     },
+    /// Global telemetry snapshot (the service's metrics registry).
+    Metrics,
+    /// Per-job fleet telemetry snapshot.
+    JobMetrics(String),
     /// Liveness probe.
     Ping,
     /// Close the connection.
@@ -158,6 +176,12 @@ pub enum Response {
         terms_total: u128,
         /// Composed determinant (complete jobs only), bit-exact.
         value: Option<JobValue>,
+        /// Engine blocks dispatched by this server's runs of the job
+        /// (0 when unknown: fleet-computed chunks, a pruned handle, or
+        /// a pre-restart run).
+        blocks: u64,
+        /// Blocks that fell back to the scalar path.
+        fallback_blocks: u64,
     },
     /// A granted chunk lease.
     Lease {
@@ -198,6 +222,11 @@ pub enum Response {
     },
     /// Lease returned to the free pool.
     Abandoned,
+    /// Global telemetry snapshot: the registry's canonical name-ordered
+    /// `name=value` pairs.
+    Metrics(Snapshot),
+    /// Per-job fleet telemetry snapshot.
+    JobMetrics(JobTelemetry),
     /// Liveness answer.
     Pong,
     /// Failure.
@@ -364,11 +393,34 @@ fn parse_lease(rest: &str) -> Result<Request> {
                 .ok_or_else(|| Error::Protocol("missing chunk index".into()))?
                 .parse()
                 .map_err(|e| Error::Protocol(format!("bad chunk index: {e}")))?;
+            // RENEW may carry a cumulative progress report; both fields
+            // must be plain u64 decimals — signs, exponents, and
+            // overlong digit strings all fail the parse (hostile
+            // throughput figures never reach the EWMA).
+            let report = if v == "RENEW" {
+                match t.next() {
+                    None => None,
+                    Some(tok) => {
+                        let terms: u64 = tok.parse().map_err(|e| {
+                            Error::Protocol(format!("bad renew terms {tok:?}: {e}"))
+                        })?;
+                        let mtok = t
+                            .next()
+                            .ok_or_else(|| Error::Protocol("missing renew micros".into()))?;
+                        let micros: u64 = mtok.parse().map_err(|e| {
+                            Error::Protocol(format!("bad renew micros {mtok:?}: {e}"))
+                        })?;
+                        Some((terms, micros))
+                    }
+                }
+            } else {
+                None
+            };
             if t.next().is_some() {
                 return Err(Error::Protocol(format!("trailing LEASE {v} tokens")));
             }
             if v == "RENEW" {
-                Ok(Request::LeaseRenew { worker, job, chunk })
+                Ok(Request::LeaseRenew { worker, job, chunk, report })
             } else {
                 Ok(Request::LeaseAbandon { worker, job, chunk })
             }
@@ -413,6 +465,20 @@ impl Request {
         }
         if let Some(rest) = line.strip_prefix("LEASE ") {
             return parse_lease(rest);
+        }
+        if line == "METRICS" {
+            return Ok(Request::Metrics);
+        }
+        if let Some(rest) = line.strip_prefix("METRICS ") {
+            let mut t = rest.split(' ');
+            if t.next() != Some("JOB") {
+                return Err(Error::Protocol(format!("unknown METRICS form {rest:?}")));
+            }
+            let id = parse_job_id(t.next().unwrap_or(""))?;
+            if t.next().is_some() {
+                return Err(Error::Protocol("trailing METRICS JOB tokens".into()));
+            }
+            return Ok(Request::JobMetrics(id));
         }
         let mut parts = line.splitn(4, ' ');
         match parts.next() {
@@ -483,9 +549,12 @@ impl Request {
                 Some(j) => format!("LEASE GRANT {worker} {j}\n"),
                 None => format!("LEASE GRANT {worker}\n"),
             },
-            Request::LeaseRenew { worker, job, chunk } => {
-                format!("LEASE RENEW {worker} {job} {chunk}\n")
-            }
+            Request::LeaseRenew { worker, job, chunk, report } => match report {
+                Some((terms, micros)) => {
+                    format!("LEASE RENEW {worker} {job} {chunk} {terms} {micros}\n")
+                }
+                None => format!("LEASE RENEW {worker} {job} {chunk}\n"),
+            },
             Request::LeaseComplete { worker, job, chunk, terms, micros, value } => {
                 format!(
                     "LEASE COMPLETE {worker} {job} {chunk} {terms} {micros} {}\n",
@@ -495,6 +564,8 @@ impl Request {
             Request::LeaseAbandon { worker, job, chunk } => {
                 format!("LEASE ABANDON {worker} {job} {chunk}\n")
             }
+            Request::Metrics => "METRICS\n".into(),
+            Request::JobMetrics(id) => format!("METRICS JOB {id}\n"),
         }
     }
 }
@@ -581,7 +652,7 @@ impl Response {
         }
         if let Some(rest) = line.strip_prefix("OK JOBSTATUS ") {
             let toks: Vec<&str> = rest.split(' ').collect();
-            if toks.len() != 7 {
+            if toks.len() != 9 {
                 return Err(Error::Protocol(format!("bad JOBSTATUS line {line:?}")));
             }
             let id = parse_job_id(toks[0])?;
@@ -606,6 +677,12 @@ impl Response {
                         .map_err(|e| Error::Protocol(e.to_string()))?,
                 )
             };
+            let blocks: u64 = toks[7]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad blocks: {e}")))?;
+            let fallback_blocks: u64 = toks[8]
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad fallback_blocks: {e}")))?;
             return Ok(Response::JobStatus {
                 id,
                 state,
@@ -614,7 +691,93 @@ impl Response {
                 terms_done,
                 terms_total,
                 value,
+                blocks,
+                fallback_blocks,
             });
+        }
+        if let Some(rest) = line.strip_prefix("OK METRICS ") {
+            let mut t = rest.split(' ');
+            let ntok = t.next().unwrap_or("");
+            let n: usize = ntok
+                .parse()
+                .map_err(|e| Error::Protocol(format!("bad METRICS count {ntok:?}: {e}")))?;
+            let mut pairs = Vec::new();
+            for tok in t {
+                let (name, value) = tok.split_once('=').ok_or_else(|| {
+                    Error::Protocol(format!("bad METRICS pair {tok:?}"))
+                })?;
+                let valid = !name.is_empty()
+                    && name
+                        .bytes()
+                        .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+                if !valid {
+                    return Err(Error::Protocol(format!("bad metric name {name:?}")));
+                }
+                pairs.push((name.to_string(), value.to_string()));
+            }
+            if pairs.len() != n {
+                return Err(Error::Protocol(format!(
+                    "METRICS count {n} does not match {} pairs",
+                    pairs.len()
+                )));
+            }
+            return Ok(Response::Metrics(Snapshot::from_pairs(pairs)));
+        }
+        if let Some(rest) = line.strip_prefix("OK JOBMETRICS ") {
+            let toks: Vec<&str> = rest.split(' ').collect();
+            if toks.len() < 8 {
+                return Err(Error::Protocol(format!("bad JOBMETRICS line {line:?}")));
+            }
+            let id = parse_job_id(toks[0])?;
+            let state = toks[1];
+            if !matches!(state, "open" | "done" | "closed") {
+                return Err(Error::Protocol(format!("bad JOBMETRICS state {state:?}")));
+            }
+            let num = |tok: &str, what: &str| -> Result<u64> {
+                tok.parse()
+                    .map_err(|e| Error::Protocol(format!("bad {what} {tok:?}: {e}")))
+            };
+            let wide = |tok: &str, what: &str| -> Result<u128> {
+                tok.parse()
+                    .map_err(|e| Error::Protocol(format!("bad {what} {tok:?}: {e}")))
+            };
+            let eta_ms = if toks[7] == "-" {
+                None
+            } else {
+                Some(num(toks[7], "eta_ms")?)
+            };
+            let mut workers = Vec::new();
+            for tok in &toks[8..] {
+                let fields: Vec<&str> = tok.split(':').collect();
+                if fields.len() != 7 {
+                    return Err(Error::Protocol(format!("bad worker row {tok:?}")));
+                }
+                if !valid_id(fields[0]) {
+                    return Err(Error::Protocol(format!("bad worker id {:?}", fields[0])));
+                }
+                workers.push((
+                    fields[0].to_string(),
+                    WorkerRow {
+                        held: num(fields[1], "held")?,
+                        completed: num(fields[2], "completed")?,
+                        abandoned: num(fields[3], "abandoned")?,
+                        expired: num(fields[4], "expired")?,
+                        duplicates: num(fields[5], "duplicates")?,
+                        ewma_mtps: num(fields[6], "ewma_mtps")?,
+                    },
+                ));
+            }
+            return Ok(Response::JobMetrics(JobTelemetry {
+                id,
+                state: state.to_string(),
+                chunks_done: num(toks[2], "chunks_done")?,
+                chunks_total: num(toks[3], "chunks_total")?,
+                terms_done: wide(toks[4], "terms_done")?,
+                terms_total: wide(toks[5], "terms_total")?,
+                tps_milli: num(toks[6], "tps_milli")?,
+                eta_ms,
+                workers,
+            }));
         }
         if let Some(id) = line.strip_prefix("OK JOB ") {
             return Ok(Response::Job { id: parse_job_id(id)? });
@@ -681,11 +844,47 @@ impl Response {
                 terms_done,
                 terms_total,
                 value,
+                blocks,
+                fallback_blocks,
             } => {
                 let v = value.as_ref().map_or_else(|| "-".to_string(), |v| v.encode());
                 format!(
-                    "OK JOBSTATUS {id} {state} {chunks_done} {chunks_total} {terms_done} {terms_total} {v}\n"
+                    "OK JOBSTATUS {id} {state} {chunks_done} {chunks_total} {terms_done} {terms_total} {v} {blocks} {fallback_blocks}\n"
                 )
+            }
+            Response::Metrics(snap) => {
+                let pairs = snap.pairs();
+                if pairs.is_empty() {
+                    "OK METRICS 0\n".into()
+                } else {
+                    format!("OK METRICS {} {}\n", pairs.len(), snap.encode())
+                }
+            }
+            Response::JobMetrics(t) => {
+                let eta = t.eta_ms.map_or_else(|| "-".to_string(), |v| v.to_string());
+                let mut line = format!(
+                    "OK JOBMETRICS {} {} {} {} {} {} {} {eta}",
+                    t.id,
+                    t.state,
+                    t.chunks_done,
+                    t.chunks_total,
+                    t.terms_done,
+                    t.terms_total,
+                    t.tps_milli
+                );
+                for (worker, row) in &t.workers {
+                    line.push_str(&format!(
+                        " {worker}:{}:{}:{}:{}:{}:{}",
+                        row.held,
+                        row.completed,
+                        row.abandoned,
+                        row.expired,
+                        row.duplicates,
+                        row.ewma_mtps
+                    ));
+                }
+                line.push('\n');
+                line
             }
         }
     }
@@ -779,6 +978,8 @@ mod tests {
                 terms_done: 120,
                 terms_total: 495,
                 value: None,
+                blocks: 0,
+                fallback_blocks: 0,
             },
             Response::JobStatus {
                 id: "job-x".into(),
@@ -788,6 +989,8 @@ mod tests {
                 terms_done: 495,
                 terms_total: 495,
                 value: Some(JobValue::F64(-0.12345)),
+                blocks: 48,
+                fallback_blocks: 3,
             },
             Response::JobStatus {
                 id: "job-y".into(),
@@ -797,6 +1000,8 @@ mod tests {
                 terms_done: 56,
                 terms_total: 56,
                 value: Some(JobValue::Exact(-987654321)),
+                blocks: 8,
+                fallback_blocks: 0,
             },
             Response::JobStatus {
                 id: "job-w".into(),
@@ -811,6 +1016,8 @@ mod tests {
                     )
                     .unwrap(),
                 )),
+                blocks: 0,
+                fallback_blocks: 0,
             },
             Response::Pong,
             Response::Err("boom".into()),
@@ -830,6 +1037,8 @@ mod tests {
             terms_done: 1,
             terms_total: 1,
             value: Some(JobValue::F64(v)),
+            blocks: 1,
+            fallback_blocks: 0,
         };
         match Response::parse(&r.encode()).unwrap() {
             Response::JobStatus { value: Some(JobValue::F64(back)), .. } => {
@@ -894,7 +1103,18 @@ mod tests {
         for req in [
             Request::LeaseGrant { worker: "w1".into(), job: None },
             Request::LeaseGrant { worker: "w1".into(), job: Some("job-x".into()) },
-            Request::LeaseRenew { worker: "w1".into(), job: "job-x".into(), chunk: 7 },
+            Request::LeaseRenew {
+                worker: "w1".into(),
+                job: "job-x".into(),
+                chunk: 7,
+                report: None,
+            },
+            Request::LeaseRenew {
+                worker: "w1".into(),
+                job: "job-x".into(),
+                chunk: 7,
+                report: Some((123_456, 78_900)),
+            },
             Request::LeaseComplete {
                 worker: "w1".into(),
                 job: "job-x".into(),
@@ -1032,7 +1252,15 @@ mod tests {
             "LEASE GRANT w1 job-x extra",        // trailing tokens
             "LEASE RENEW w1 job-x",              // missing chunk
             "LEASE RENEW w1 job-x 1x",           // bad chunk
-            "LEASE RENEW w1 job-x 1 extra",      // trailing tokens
+            "LEASE RENEW w1 job-x 1 extra",      // non-numeric report terms
+            "LEASE RENEW w1 job-x 1 100",        // report missing micros
+            "LEASE RENEW w1 job-x 1 -5 9",       // negative terms
+            "LEASE RENEW w1 job-x 1 5 -9",       // negative micros
+            "LEASE RENEW w1 job-x 1 1e9 9",      // exponent is not a u64
+            "LEASE RENEW w1 job-x 1 NaN 9",      // non-finite nonsense
+            "LEASE RENEW w1 job-x 1 5.5 9",      // fractional terms
+            "LEASE RENEW w1 job-x 1 99999999999999999999999999 9", // overlong
+            "LEASE RENEW w1 job-x 1 5 9 extra",  // trailing tokens
             "LEASE COMPLETE w1 job-x 1 2",       // truncated frame
             "LEASE COMPLETE w1 job-x 1 2 3 nope",  // bad value encoding
             "LEASE COMPLETE w1 job-x 1 2 3 f64:0 x", // trailing tokens
@@ -1073,5 +1301,103 @@ mod tests {
         }
         // `fleet` alone is not an engine.
         assert!(Request::parse("JOB SUBMIT fleet").is_err());
+    }
+
+    #[test]
+    fn metrics_request_roundtrips() {
+        for req in [Request::Metrics, Request::JobMetrics("job-x".into())] {
+            assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
+        }
+        for bad in [
+            "METRICS NOPE",              // unknown form
+            "METRICS JOB",               // missing id
+            "METRICS JOB ../etc",        // hostile id
+            "METRICS JOB job-x extra",   // trailing tokens
+        ] {
+            assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn metrics_response_roundtrips() {
+        let empty = Response::Metrics(Snapshot::default());
+        assert_eq!(empty.encode(), "OK METRICS 0\n");
+        assert_eq!(Response::parse("OK METRICS 0").unwrap(), empty);
+        let snap = Snapshot::from_pairs(vec![
+            ("fleet_grants_total".into(), "12".into()),
+            ("service_requests_total".into(), "99".into()),
+        ]);
+        let r = Response::Metrics(snap);
+        assert_eq!(
+            r.encode(),
+            "OK METRICS 2 fleet_grants_total=12 service_requests_total=99\n"
+        );
+        assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn jobmetrics_response_roundtrips() {
+        for r in [
+            Response::JobMetrics(JobTelemetry {
+                id: "job-x".into(),
+                state: "open".into(),
+                chunks_done: 3,
+                chunks_total: 12,
+                terms_done: 120,
+                terms_total: 495,
+                tps_milli: 250_000,
+                eta_ms: Some(1_500),
+                workers: vec![
+                    (
+                        "w1".into(),
+                        WorkerRow {
+                            held: 1,
+                            completed: 2,
+                            abandoned: 0,
+                            expired: 1,
+                            duplicates: 0,
+                            ewma_mtps: 200_000,
+                        },
+                    ),
+                    (
+                        "w2".into(),
+                        WorkerRow { completed: 1, ewma_mtps: 50_000, ..WorkerRow::default() },
+                    ),
+                ],
+            }),
+            Response::JobMetrics(JobTelemetry {
+                id: "job-y".into(),
+                state: "done".into(),
+                chunks_done: 12,
+                chunks_total: 12,
+                terms_done: 495,
+                terms_total: 495,
+                tps_milli: 0,
+                eta_ms: None,
+                workers: Vec::new(),
+            }),
+        ] {
+            assert_eq!(Response::parse(&r.encode()).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_metrics_responses_rejected() {
+        for bad in [
+            "OK METRICS",                       // bare, no count
+            "OK METRICS x",                     // non-numeric count
+            "OK METRICS 2 a=1",                 // count mismatch
+            "OK METRICS 1 noequals",            // not a pair
+            "OK METRICS 1 UPPER=1",             // invalid metric name
+            "OK METRICS 1 =1",                  // empty name
+            "OK JOBMETRICS job-x open 1 2",     // truncated
+            "OK JOBMETRICS job-x limbo 1 2 3 4 5 -", // unknown state
+            "OK JOBMETRICS job-x open 1 2 3 4 5 x",  // bad eta
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - w1:1:2",      // short row
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - w1:1:2:3:4:5:x", // bad row field
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - ../e:1:2:3:4:5:6", // hostile worker
+        ] {
+            assert!(Response::parse(bad).is_err(), "{bad:?} should fail");
+        }
     }
 }

@@ -14,6 +14,7 @@ use super::protocol::{Request, Response};
 use crate::coordinator::Coordinator;
 use crate::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
 use crate::jobs::{ChunkRecord, JobManager, JobStatus};
+use crate::telemetry::{Counter, Registry};
 use crate::Result;
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
@@ -42,6 +43,42 @@ pub struct ConnCtx {
     sent_specs: HashSet<String>,
 }
 
+/// Per-verb request counters plus error tallies (`service_*` family).
+#[derive(Clone, Debug)]
+struct CoreCounters {
+    /// Every frame served, including QUIT and unparseable garbage.
+    requests: Counter,
+    det: Counter,
+    exact: Counter,
+    job: Counter,
+    lease: Counter,
+    metrics: Counter,
+    ping: Counter,
+    /// Frames answered with `ERR …` (parse failures included).
+    errors: Counter,
+    /// The subset of errors that never parsed into a request.
+    parse_errors: Counter,
+    /// Frames rejected before parsing (over [`MAX_LINE_BYTES`]).
+    frame_rejects: Counter,
+}
+
+impl CoreCounters {
+    fn register(reg: &Registry) -> CoreCounters {
+        CoreCounters {
+            requests: reg.counter("service_requests_total"),
+            det: reg.counter("service_det_total"),
+            exact: reg.counter("service_exact_total"),
+            job: reg.counter("service_job_total"),
+            lease: reg.counter("service_lease_total"),
+            metrics: reg.counter("service_metrics_total"),
+            ping: reg.counter("service_ping_total"),
+            errors: reg.counter("service_errors_total"),
+            parse_errors: reg.counter("service_parse_errors_total"),
+            frame_rejects: reg.counter("service_frame_rejects_total"),
+        }
+    }
+}
+
 /// The transport-independent request brain: one shared coordinator
 /// plus (optionally) the durable-jobs manager and the fleet lease
 /// table. Every connection handler — TCP thread or simulated link —
@@ -50,21 +87,36 @@ pub struct ServiceCore {
     coordinator: Arc<Coordinator>,
     jobs: Option<Arc<JobManager>>,
     fleet: Option<Arc<LeaseTable>>,
+    /// The one metrics registry for this service. Created here — never
+    /// process-global — and threaded into the jobs manager and lease
+    /// table before they are shared, so `METRICS` snapshots one
+    /// coherent namespace per server.
+    registry: Arc<Registry>,
+    counters: CoreCounters,
 }
 
 impl ServiceCore {
     /// Assemble a core from its parts (`None` disables the `JOB` /
     /// `LEASE` verb families with a soft error, exactly like a server
-    /// started without a jobs dir).
+    /// started without a jobs dir). Creates the service's metrics
+    /// registry and wires it through both subsystems (engine counters
+    /// and metered journal IO in the manager, `fleet_*` counters and
+    /// metered journal IO in the lease table).
     pub fn new(
         coordinator: Coordinator,
         jobs: Option<JobManager>,
         fleet: Option<LeaseTable>,
     ) -> Self {
+        let registry = Arc::new(Registry::new());
+        let jobs = jobs.map(|j| j.with_registry(&registry));
+        let fleet = fleet.map(|f| f.with_registry(&registry));
+        let counters = CoreCounters::register(&registry);
         Self {
             coordinator: Arc::new(coordinator),
             jobs: jobs.map(Arc::new),
             fleet: fleet.map(Arc::new),
+            registry,
+            counters,
         }
     }
 
@@ -78,15 +130,34 @@ impl ServiceCore {
         self.jobs.as_deref()
     }
 
+    /// This service's metrics registry (what `METRICS` snapshots).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Count an oversized frame rejected before parsing. The frame is
+    /// still a served request (it gets an `ERR` reply), so it lands in
+    /// all three of requests / errors / frame_rejects.
+    pub(crate) fn count_frame_reject(&self) {
+        self.counters.requests.inc();
+        self.counters.frame_rejects.inc();
+        self.counters.errors.inc();
+    }
+
     /// Serve one request frame. `None` means the client said `QUIT`
     /// (close the connection without replying); parse failures and verb
     /// errors come back as `Some(Response::Err)` — the connection
     /// survives.
     pub fn handle_line(&self, line: &str, ctx: &mut ConnCtx) -> Option<Response> {
+        self.counters.requests.inc();
         let response = match Request::parse(line) {
             Ok(Request::Quit) => return None,
-            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Ping) => {
+                self.counters.ping.inc();
+                Response::Pong
+            }
             Ok(Request::Det(a)) => {
+                self.counters.det.inc();
                 let t0 = Instant::now();
                 match self.coordinator.radic_det(&a) {
                     Ok(out) => Response::Ok {
@@ -98,6 +169,7 @@ impl ServiceCore {
                 }
             }
             Ok(Request::Exact(a)) => {
+                self.counters.exact.inc();
                 let t0 = Instant::now();
                 let terms = crate::combin::combination_count(
                     a.cols() as u64,
@@ -113,17 +185,43 @@ impl ServiceCore {
                     Err(e) => Response::Err(e.to_string()),
                 }
             }
+            Ok(Request::Metrics) => {
+                self.counters.metrics.inc();
+                Response::Metrics(self.registry.snapshot())
+            }
+            Ok(Request::JobMetrics(id)) => {
+                self.counters.metrics.inc();
+                match self.fleet.as_deref() {
+                    Some(fleet) => match fleet.job_metrics(&id) {
+                        Ok(t) => Response::JobMetrics(t),
+                        Err(e) => Response::Err(e.to_string()),
+                    },
+                    None => Response::Err(
+                        "fleet disabled on this server (start with a jobs dir)".into(),
+                    ),
+                }
+            }
             Ok(
                 lease_req @ (Request::LeaseGrant { .. }
                 | Request::LeaseRenew { .. }
                 | Request::LeaseComplete { .. }
                 | Request::LeaseAbandon { .. }),
-            ) => handle_lease_request(self.fleet.as_deref(), lease_req, &mut ctx.sent_specs),
+            ) => {
+                self.counters.lease.inc();
+                handle_lease_request(self.fleet.as_deref(), lease_req, &mut ctx.sent_specs)
+            }
             Ok(job_req) => {
+                self.counters.job.inc();
                 handle_job_request(self.jobs.as_deref(), self.fleet.as_deref(), job_req)
             }
-            Err(e) => Response::Err(e.to_string()),
+            Err(e) => {
+                self.counters.parse_errors.inc();
+                Response::Err(e.to_string())
+            }
         };
+        if matches!(response, Response::Err(_)) {
+            self.counters.errors.inc();
+        }
         Some(response)
     }
 }
@@ -165,8 +263,14 @@ impl Server {
     /// server without jobs support.
     pub fn with_fleet_config(mut self, cfg: FleetConfig) -> Self {
         if let Some(jobs) = &self.core.jobs {
-            self.core.fleet =
-                Some(Arc::new(LeaseTable::new(jobs.store().clone(), cfg)));
+            // Counters only: the manager's store already journals
+            // through a MeteredFs (wired in ServiceCore::new), so the
+            // full `with_registry` here would wrap it twice and
+            // double-count every append and fsync.
+            self.core.fleet = Some(Arc::new(
+                LeaseTable::new(jobs.store().clone(), cfg)
+                    .with_registry_counters(&self.core.registry),
+            ));
         }
         self
     }
@@ -280,12 +384,12 @@ pub(crate) fn read_line_capped<R: BufRead>(
 
 fn job_status_response(jobs: &JobManager, id: &str) -> Response {
     match jobs.status(id) {
-        Ok((status, running)) => status_to_response(&status, running),
+        Ok((status, running)) => status_to_response(&status, running, jobs.run_metrics(id)),
         Err(e) => Response::Err(e.to_string()),
     }
 }
 
-fn status_to_response(status: &JobStatus, running: bool) -> Response {
+fn status_to_response(status: &JobStatus, running: bool, engine: (u64, u64)) -> Response {
     let state = if status.complete {
         "complete"
     } else if running {
@@ -301,6 +405,8 @@ fn status_to_response(status: &JobStatus, running: bool) -> Response {
         terms_done: status.terms_done,
         terms_total: status.terms_total,
         value: status.value.clone(),
+        blocks: engine.0,
+        fallback_blocks: engine.1,
     }
 }
 
@@ -332,7 +438,9 @@ fn handle_job_request(
         Request::JobWait { id, timeout_ms } => {
             let timeout = Duration::from_millis(timeout_ms).min(MAX_WAIT);
             match jobs.wait(&id, timeout) {
-                Ok((status, running)) => status_to_response(&status, running),
+                Ok((status, running)) => {
+                    status_to_response(&status, running, jobs.run_metrics(&id))
+                }
                 Err(e) => Response::Err(e.to_string()),
             }
         }
@@ -397,8 +505,8 @@ fn handle_lease_request(
                 Err(e) => Response::Err(e.to_string()),
             }
         }
-        Request::LeaseRenew { worker, job, chunk } => {
-            match fleet.renew(&worker, &job, chunk) {
+        Request::LeaseRenew { worker, job, chunk, report } => {
+            match fleet.renew(&worker, &job, chunk, report) {
                 Ok(ttl) => Response::Renewed { ttl_ms: ttl.as_millis() as u64 },
                 Err(e) => Response::Err(e.to_string()),
             }
@@ -441,6 +549,7 @@ fn handle_connection(
             Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
                 // Oversized frame: answer once, then hang up — the rest
                 // of the stream is this same runaway line.
+                core.count_frame_reject();
                 requests.fetch_add(1, Ordering::SeqCst);
                 let _ = writer
                     .write_all(Response::Err("request line too long".into()).encode().as_bytes());
@@ -516,5 +625,38 @@ mod tests {
             Some(Response::Err(_)) // fleet disabled
         ));
         assert_eq!(core.handle_line("QUIT", &mut ctx), None);
+    }
+
+    #[test]
+    fn metrics_verb_reports_service_counters() {
+        let coord = crate::coordinator::Coordinator::new(
+            crate::coordinator::CoordinatorConfig {
+                workers: 1,
+                engine: crate::coordinator::EngineKind::Cpu,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let core = ServiceCore::new(coord, None, None);
+        let mut ctx = ConnCtx::default();
+        assert_eq!(core.handle_line("PING", &mut ctx), Some(Response::Pong));
+        assert!(matches!(
+            core.handle_line("GARBAGE", &mut ctx),
+            Some(Response::Err(_))
+        ));
+        let Some(Response::Metrics(snap)) = core.handle_line("METRICS", &mut ctx) else {
+            panic!("METRICS must answer OK METRICS");
+        };
+        assert_eq!(snap.get("service_ping_total"), Some("1"));
+        assert_eq!(snap.get("service_parse_errors_total"), Some("1"));
+        assert_eq!(snap.get("service_errors_total"), Some("1"));
+        // PING + GARBAGE + this METRICS frame itself.
+        assert_eq!(snap.get("service_requests_total"), Some("3"));
+        assert_eq!(snap.get("service_metrics_total"), Some("1"));
+        // Per-job metrics need the fleet subsystem.
+        assert!(matches!(
+            core.handle_line("METRICS JOB job-x", &mut ctx),
+            Some(Response::Err(_))
+        ));
     }
 }

@@ -1,0 +1,146 @@
+//! The structured event layer: a bounded ring of `(timestamp, kind,
+//! detail)` events read through the [`Clock`] seam.
+//!
+//! Under the deterministic simulation fabric the clock is a
+//! [`crate::clock::SimClock`], so event timestamps are **virtual** —
+//! two replays of one seed produce byte-identical event streams. In
+//! production the clock is the wall and the ring is a cheap flight
+//! recorder (`raddet serve` keeps the last few hundred protocol-level
+//! events for post-mortems).
+//!
+//! Events render to JSONL (one `{"t_ms":…,"kind":…,"detail":…}` object
+//! per line) with the same dependency-free [`json_escape`] the
+//! `raddet sim --trace-json` exporter uses.
+
+use crate::clock::Clock;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One recorded event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Timestamp on the log's clock (virtual under sim).
+    pub at: Duration,
+    /// Short machine-readable kind tag (`grant`, `complete`, …).
+    pub kind: String,
+    /// Free-form human detail.
+    pub detail: String,
+}
+
+/// A bounded ring of [`Event`]s stamped through a shared [`Clock`].
+#[derive(Debug)]
+pub struct EventLog {
+    clock: Arc<dyn Clock>,
+    cap: usize,
+    events: Mutex<VecDeque<Event>>,
+}
+
+impl EventLog {
+    /// A fresh log holding at most `cap` events (oldest evicted first).
+    pub fn new(clock: Arc<dyn Clock>, cap: usize) -> EventLog {
+        EventLog {
+            clock,
+            cap: cap.max(1),
+            events: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Record an event stamped with the clock's current time.
+    pub fn record(&self, kind: &str, detail: impl Into<String>) {
+        let event = Event {
+            at: self.clock.now(),
+            kind: kind.to_string(),
+            detail: detail.into(),
+        };
+        let mut events = self.events.lock().expect("event log poisoned");
+        if events.len() == self.cap {
+            events.pop_front();
+        }
+        events.push_back(event);
+    }
+
+    /// The retained events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        self.events
+            .lock()
+            .expect("event log poisoned")
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Render the retained events as JSONL.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&format!(
+                "{{\"t_ms\":{},\"kind\":\"{}\",\"detail\":\"{}\"}}\n",
+                e.at.as_millis(),
+                json_escape(&e.kind),
+                json_escape(&e.detail)
+            ));
+        }
+        out
+    }
+}
+
+/// Escape `s` for embedding in a JSON string literal (quotes,
+/// backslashes, control characters).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::SimClock;
+
+    #[test]
+    fn events_carry_virtual_timestamps_under_sim() {
+        let clock = SimClock::new();
+        let log = EventLog::new(clock.clone(), 16);
+        log.record("grant", "w1 takes job0#0");
+        clock.advance(Duration::from_millis(250));
+        log.record("complete", "w1 lands job0#0");
+        let events = log.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].at, Duration::ZERO);
+        assert_eq!(events[1].at, Duration::from_millis(250));
+        assert_eq!(
+            log.render_jsonl(),
+            "{\"t_ms\":0,\"kind\":\"grant\",\"detail\":\"w1 takes job0#0\"}\n\
+             {\"t_ms\":250,\"kind\":\"complete\",\"detail\":\"w1 lands job0#0\"}\n"
+        );
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let log = EventLog::new(SimClock::new(), 2);
+        log.record("a", "");
+        log.record("b", "");
+        log.record("c", "");
+        let kinds: Vec<String> = log.events().into_iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, ["b", "c"]);
+    }
+
+    #[test]
+    fn json_escaping_covers_the_hostile_cases() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

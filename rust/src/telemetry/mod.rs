@@ -1,0 +1,52 @@
+//! Fleet telemetry — the observability layer the self-managing fleet
+//! is built on.
+//!
+//! The paper's O(n²) bound assumes perfectly balanced parallel sweeps
+//! over the `C(n,m)` term space; in practice a fleet is only as fast as
+//! its slowest worker. Before the lease table can *react* to a
+//! straggler (adaptive chunking, speculative re-lease — see
+//! ROADMAP.md), it has to *see* one. This module is the eyes:
+//!
+//! * [`Registry`] — a lock-cheap metrics registry of monotonic
+//!   [`Counter`]s, [`Gauge`]s and fixed-bucket [`Histogram`]s.
+//!   Handles are `Arc`'d atomics: registration takes a mutex once,
+//!   increments are a single relaxed atomic op, so counters can sit on
+//!   hot paths (per-request, per-append). [`Registry::snapshot`]
+//!   renders every metric into one canonical, name-ordered `key=value`
+//!   text encoding — the body of the wire `METRICS` verb, pinned by a
+//!   golden test.
+//! * [`EventLog`] — a bounded ring of structured events stamped through
+//!   the [`crate::clock::Clock`] seam, so events carry **virtual**
+//!   timestamps under the deterministic simulation fabric
+//!   ([`crate::testkit::sim`]) and wall timestamps in production. The
+//!   same rule makes every latency measurement in the crate
+//!   deterministic under sim: nothing advances a
+//!   [`crate::clock::SimClock`] while a measured operation runs, so
+//!   simulated latencies are exact functions of the scenario script,
+//!   never of host scheduling.
+//!
+//! Ownership: registries are **explicit instances** (one per
+//! [`crate::service::ServiceCore`]), never process globals — tests and
+//! sim worlds each get an isolated registry, which is what lets the
+//! seeded-replay suites assert snapshot equality across runs.
+//!
+//! What is counted where:
+//!
+//! * service core — per-verb request counters, error replies, rejected
+//!   frames (`service_*`);
+//! * lease table — grants, renews, completes, duplicate completes,
+//!   expiries, abandons (`fleet_*`), plus per-job per-worker rows
+//!   (EWMA throughput, held/completed/abandoned/expired/duplicate
+//!   counts) surfaced by the `METRICS JOB` verb;
+//! * jobs/storage — journal append/fsync latency histograms and error
+//!   counters via [`crate::jobs::MeteredFs`] (`fs_*`), fault-injection
+//!   tallies via [`crate::jobs::FaultFs::tallies`];
+//! * engine — blocks vs fallback blocks per scalar kind, captured from
+//!   each background run's [`crate::coordinator::JobMetrics`]
+//!   (`engine_*`).
+
+pub mod events;
+pub mod registry;
+
+pub use events::{json_escape, Event, EventLog};
+pub use registry::{Counter, Gauge, Histogram, Registry, Snapshot, LATENCY_BUCKETS_US};

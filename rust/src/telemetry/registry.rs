@@ -1,0 +1,371 @@
+//! The metrics registry: monotonic counters, gauges and fixed-bucket
+//! histograms behind `Arc`'d atomic handles, snapshot-able to one
+//! canonical text encoding.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Lock-cheap.** A handle, once registered, is an `Arc<AtomicU64>`
+//!    (or a few of them): incrementing from a hot path is one relaxed
+//!    atomic add, no mutex. The registry's mutex is taken only at
+//!    registration and snapshot time.
+//! 2. **Canonical encoding.** [`Registry::snapshot`] emits
+//!    `name=value` pairs ordered by metric name (histograms expand
+//!    into `_count` / `_le_<bound>` / `_le_inf` / `_sum` series in
+//!    ascending-bound order), so two snapshots of equal state encode
+//!    to equal bytes — the property the wire `METRICS` verb and the
+//!    seeded-replay tests lean on.
+//! 3. **Dependency-free.** Plain std; values are integers only, so the
+//!    encoding never meets float formatting.
+//!
+//! Metric names are lowercase `[a-z0-9_]+` — they travel on a
+//! space-separated wire line, so the charset is locked down at
+//! registration.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default latency bucket upper bounds, in microseconds — spans one
+/// journal fsync (~100µs–10ms) through a slow chunk (~100ms+).
+pub const LATENCY_BUCKETS_US: [u64; 8] =
+    [100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000];
+
+/// Is `name` a valid metric name (lowercase `[a-z0-9_]+`)?
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+}
+
+/// A monotonic counter. Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    value: Arc<AtomicU64>,
+}
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable signed gauge. Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    value: Arc<AtomicI64>,
+}
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `d` (may be negative).
+    pub fn add(&self, d: i64) {
+        self.value.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    /// Ascending bucket upper bounds (inclusive). One extra implicit
+    /// `+inf` bucket catches the overflow.
+    bounds: Vec<u64>,
+    /// Cumulative-style per-bucket hit counts, one per bound plus the
+    /// overflow slot (stored non-cumulative; the snapshot accumulates).
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A fixed-bucket histogram of `u64` samples (latencies in µs,
+/// throughputs in milli-terms/sec). Cloning shares the buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    inner: Arc<HistogramInner>,
+}
+
+impl Histogram {
+    fn new(bounds: &[u64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            inner: Arc::new(HistogramInner {
+                bounds: bounds.to_vec(),
+                counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                sum: AtomicU64::new(0),
+                count: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&self, value: u64) {
+        let idx = self
+            .inner
+            .bounds
+            .iter()
+            .position(|&b| value <= b)
+            .unwrap_or(self.inner.bounds.len());
+        self.inner.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.inner.sum.fetch_add(value, Ordering::Relaxed);
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.inner.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> u64 {
+        self.inner.sum.load(Ordering::Relaxed)
+    }
+
+    /// Expand into the snapshot series for metric `name`, buckets
+    /// cumulative (`_le_*` counts samples at or below the bound).
+    fn expand(&self, name: &str, out: &mut Vec<(String, String)>) {
+        out.push((format!("{name}_count"), self.count().to_string()));
+        let mut cum = 0u64;
+        for (i, bound) in self.inner.bounds.iter().enumerate() {
+            cum += self.inner.counts[i].load(Ordering::Relaxed);
+            out.push((format!("{name}_le_{bound}"), cum.to_string()));
+        }
+        cum += self.inner.counts[self.inner.bounds.len()].load(Ordering::Relaxed);
+        out.push((format!("{name}_le_inf"), cum.to_string()));
+        out.push((format!("{name}_sum"), self.sum().to_string()));
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// The registry: a name → metric map handing out shared atomic handles.
+///
+/// One registry per server core (see the module docs in
+/// [`crate::telemetry`]) — never a process global, so tests and sim
+/// worlds stay isolated.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// A fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register the counter `name`.
+    ///
+    /// # Panics
+    /// If `name` is not lowercase `[a-z0-9_]+`, or is already
+    /// registered as a different metric kind — both are programming
+    /// errors, not runtime conditions.
+    pub fn counter(&self, name: &str) -> Counter {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut metrics = self.metrics.lock().expect("metric registry poisoned");
+        match metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter::default()))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Get-or-register the gauge `name` (same rules as
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut metrics = self.metrics.lock().expect("metric registry poisoned");
+        match metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge::default()))
+        {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Get-or-register the histogram `name` with the given ascending
+    /// bucket bounds (ignored if the name is already registered — the
+    /// first registration wins the geometry).
+    pub fn histogram(&self, name: &str, bounds: &[u64]) -> Histogram {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut metrics = self.metrics.lock().expect("metric registry poisoned");
+        match metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::new(bounds)))
+        {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}"),
+        }
+    }
+
+    /// Snapshot every registered metric into the canonical encoding.
+    pub fn snapshot(&self) -> Snapshot {
+        let metrics = self.metrics.lock().expect("metric registry poisoned");
+        let mut pairs = Vec::with_capacity(metrics.len());
+        for (name, metric) in metrics.iter() {
+            match metric {
+                Metric::Counter(c) => pairs.push((name.clone(), c.get().to_string())),
+                Metric::Gauge(g) => pairs.push((name.clone(), g.get().to_string())),
+                Metric::Histogram(h) => h.expand(name, &mut pairs),
+            }
+        }
+        Snapshot { pairs }
+    }
+}
+
+/// A point-in-time rendering of a [`Registry`]: name-ordered
+/// `(name, integer-value)` pairs (histogram series expand under their
+/// metric's name, buckets ascending).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pairs: Vec<(String, String)>,
+}
+
+impl Snapshot {
+    /// Build a snapshot directly from pairs (the client-side decode of
+    /// a wire `OK METRICS` reply).
+    pub fn from_pairs(pairs: Vec<(String, String)>) -> Snapshot {
+        Snapshot { pairs }
+    }
+
+    /// The ordered pairs.
+    pub fn pairs(&self) -> &[(String, String)] {
+        &self.pairs
+    }
+
+    /// Value of `name`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The canonical single-line text encoding: `name=value` pairs
+    /// joined by single spaces, in snapshot order.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        for (i, (name, value)) in self.pairs.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(name);
+            out.push('=');
+            out.push_str(value);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_share_state_across_clones() {
+        let reg = Registry::new();
+        let c = reg.counter("requests_total");
+        c.inc();
+        reg.counter("requests_total").add(4);
+        assert_eq!(c.get(), 5, "same name ⇒ same cell");
+        let g = reg.gauge("open_jobs");
+        g.set(3);
+        g.add(-1);
+        assert_eq!(reg.gauge("open_jobs").get(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_accumulate() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat_us", &[10, 100]);
+        for v in [5, 7, 50, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 5062);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("lat_us_count"), Some("4"));
+        assert_eq!(snap.get("lat_us_le_10"), Some("2"));
+        assert_eq!(snap.get("lat_us_le_100"), Some("3"));
+        assert_eq!(snap.get("lat_us_le_inf"), Some("4"));
+        assert_eq!(snap.get("lat_us_sum"), Some("5062"));
+    }
+
+    /// The golden test pinning the canonical METRICS text encoding —
+    /// if this changes, docs/PROTOCOL.md and every consumer of the
+    /// `METRICS` verb change with it.
+    #[test]
+    fn snapshot_encoding_is_canonical() {
+        let reg = Registry::new();
+        reg.counter("zz_last").add(7);
+        reg.gauge("balance").set(-2);
+        let h = reg.histogram("append_us", &[100, 500]);
+        h.record(40);
+        h.record(400);
+        reg.counter("aa_first").inc();
+        let got = reg.snapshot().encode();
+        assert_eq!(
+            got,
+            "aa_first=1 append_us_count=2 append_us_le_100=1 append_us_le_500=2 \
+             append_us_le_inf=2 append_us_sum=440 balance=-2 zz_last=7"
+        );
+        // Equal state ⇒ equal bytes, independent of registration order.
+        let reg2 = Registry::new();
+        reg2.gauge("balance").set(-2);
+        reg2.counter("aa_first").inc();
+        let h2 = reg2.histogram("append_us", &[100, 500]);
+        h2.record(400);
+        h2.record(40);
+        reg2.counter("zz_last").add(7);
+        assert_eq!(reg2.snapshot().encode(), got);
+    }
+
+    #[test]
+    fn empty_registry_encodes_empty() {
+        assert_eq!(Registry::new().snapshot().encode(), "");
+        assert_eq!(Registry::new().snapshot().pairs().len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn names_with_spaces_are_rejected() {
+        Registry::new().counter("has space");
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_clash_panics() {
+        let reg = Registry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+}

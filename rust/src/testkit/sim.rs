@@ -60,6 +60,10 @@ struct NetState {
     /// Peers currently cut off from the server.
     partitioned: HashSet<String>,
     plan: FaultPlan,
+    /// Extra virtual latency charged per exchange for specific peers,
+    /// on top of [`FaultPlan::latency`] — the "slow worker" knob the
+    /// straggler-attribution scenarios turn.
+    peer_latency: HashMap<String, Duration>,
     /// Fault dice, seeded separately from the scheduler's RNG so
     /// enabling faults does not reshuffle scheduling decisions.
     rng: TestRng,
@@ -75,7 +79,10 @@ impl NetState {
 struct SimNetInner {
     clock: Arc<SimClock>,
     state: Mutex<NetState>,
-    trace: Mutex<Vec<String>>,
+    /// `(virtual ms, event)` pairs — kept structured so the trace can
+    /// render both as the human `t=…ms …` lines and as JSONL
+    /// (`raddet sim --trace-json`).
+    trace: Mutex<Vec<(u128, String)>>,
 }
 
 impl SimNetInner {
@@ -83,7 +90,7 @@ impl SimNetInner {
         self.trace
             .lock()
             .expect("sim trace poisoned")
-            .push(format!("t={clock_ms}ms {line}"));
+            .push((clock_ms, line));
     }
 }
 
@@ -175,7 +182,15 @@ impl Conn for SimConn {
                     .record(ms, format!("net dropped request from {}", self.peer));
                 return Err(Error::Protocol("sim: request lost".into()));
             }
-            (Arc::clone(st.core.as_ref().expect("checked above")), st.plan.latency)
+            let extra = st
+                .peer_latency
+                .get(&self.peer)
+                .copied()
+                .unwrap_or(Duration::ZERO);
+            (
+                Arc::clone(st.core.as_ref().expect("checked above")),
+                st.plan.latency + extra,
+            )
         };
         if !latency.is_zero() {
             self.inner.clock.advance(latency);
@@ -275,6 +290,7 @@ impl SimWorld {
                 generation: 0,
                 partitioned: HashSet::new(),
                 plan: FaultPlan::default(),
+                peer_latency: HashMap::new(),
                 rng: TestRng::from_seed(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1)),
             }),
             trace: Mutex::new(Vec::new()),
@@ -337,7 +353,30 @@ impl SimWorld {
     /// faults), each line stamped with virtual time. Identical for
     /// identical seeds — the replay witness.
     pub fn trace(&self) -> Vec<String> {
-        self.net.inner.trace.lock().expect("sim trace poisoned").clone()
+        self.net
+            .inner
+            .trace
+            .lock()
+            .expect("sim trace poisoned")
+            .iter()
+            .map(|(ms, line)| format!("t={ms}ms {line}"))
+            .collect()
+    }
+
+    /// The same trace as JSON Lines — one
+    /// `{"t_ms":<n>,"event":"<text>"}` object per line, for
+    /// `raddet sim --trace-json` and any downstream tooling. Identical
+    /// bytes for identical seeds.
+    pub fn trace_jsonl(&self) -> String {
+        let trace = self.net.inner.trace.lock().expect("sim trace poisoned");
+        let mut out = String::new();
+        for (ms, line) in trace.iter() {
+            out.push_str(&format!(
+                "{{\"t_ms\":{ms},\"event\":\"{}\"}}\n",
+                crate::telemetry::json_escape(line)
+            ));
+        }
+        out
     }
 
     /// Set message-fault knobs (latency, drop rate).
@@ -348,6 +387,22 @@ impl SimWorld {
             plan.latency.as_millis(),
             plan.drop_per_10k
         ));
+    }
+
+    /// Charge `peer` an extra `latency` of virtual time per exchange on
+    /// top of the global [`FaultPlan::latency`] — the deterministic
+    /// "slow worker". Because the lease table measures grant→complete
+    /// spans on the same virtual clock, this is exactly what
+    /// `METRICS JOB` straggler attribution sees.
+    pub fn set_peer_latency(&mut self, peer: &str, latency: Duration) {
+        self.net
+            .inner
+            .state
+            .lock()
+            .expect("sim net poisoned")
+            .peer_latency
+            .insert(peer.to_string(), latency);
+        self.record(format!("peer {peer} latency={}ms", latency.as_millis()));
     }
 
     /// A fresh job-store view over the world's journal directory (what
@@ -597,6 +652,9 @@ pub struct ScenarioOutcome {
     pub value: JobValue,
     /// The full replayable event trace.
     pub trace: Vec<String>,
+    /// The same trace as JSON Lines (see [`SimWorld::trace_jsonl`]) —
+    /// what `raddet sim --trace-json <path>` writes.
+    pub trace_jsonl: String,
     /// Chunks in the job's plan.
     pub chunks_total: u64,
     /// Chunks accepted (non-duplicate) across all workers.
@@ -755,6 +813,7 @@ pub fn run_random_scenario_with(
     Ok(ScenarioOutcome {
         value,
         trace: world.trace(),
+        trace_jsonl: world.trace_jsonl(),
         chunks_total,
         // A lost completion ack (reply drop) or a journal append undone
         // by a power loss after an fsync lie both break exact ack

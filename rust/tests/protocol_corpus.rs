@@ -49,6 +49,16 @@ const HOSTILE_FRAMES: &[(&str, &str)] = &[
         "LEASE RENEW w1 job-x 99999999999999999999999",
         "chunk id overflows u64",
     ),
+    // --- RENEW throughput-report malformations ---
+    ("LEASE RENEW w1 job-x 0 5", "report needs both terms AND micros"),
+    ("LEASE RENEW w1 job-x 0 5 7 9", "trailing tokens after report"),
+    ("LEASE RENEW w1 job-x 0 -5 7", "negative terms in report"),
+    ("LEASE RENEW w1 job-x 0 5 7.5", "float micros in report"),
+    ("LEASE RENEW w1 job-x 0 nan inf", "non-numeric report fields"),
+    (
+        "LEASE RENEW w1 job-x 0 99999999999999999999999 1",
+        "report terms overflow u64",
+    ),
     ("LEASE ABANDON w1 job-x notachunk", "bad chunk id"),
     ("LEASE COMPLETE w1 job-x 0 1 1 zz", "bad value encoding"),
     ("LEASE COMPLETE w1 job-x 0 1 1 f64:xyz", "bad f64 bit pattern"),
@@ -70,6 +80,13 @@ const HOSTILE_FRAMES: &[(&str, &str)] = &[
     ("LEASE COMPLETE w1 job-x 0 1 1 BIG:7", "case-sensitive scalar tag"),
     ("JOB SUBMIT prefix bigint 2 2 1,2,3,4", "unknown scalar kind"),
     ("JOB SUBMIT prefix big 2 2 1.5,2,3,4", "float entries in big path"),
+    // --- METRICS verbs ---
+    ("METRICS JOB", "missing job id"),
+    ("METRICS JOB ../../etc/passwd", "hostile job id"),
+    ("METRICS JOB job-x extra", "trailing tokens"),
+    ("METRICS JOB job-does-not-exist", "unknown job"),
+    ("METRICS NOPE", "unknown METRICS subverb"),
+    ("METRICS JOB job-x JOB job-y", "doubled subverb"),
 ];
 
 fn start_server_with_jobs(tag: &str) -> ServerHandle {

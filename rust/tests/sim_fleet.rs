@@ -336,6 +336,79 @@ fn sim_partition_heals_and_job_finishes() {
     assert_eq!(world.total_chunks_completed(), st.chunks_total as u64);
 }
 
+/// The observability contract: a fleet with one deliberately slow
+/// worker (per-peer virtual latency) must let `METRICS JOB` attribute
+/// the straggling to that worker — and because every span is measured
+/// on the virtual clock, two replays of the same seed must produce
+/// **bit-identical** telemetry snapshots.
+///
+/// Why "lowest nonzero EWMA" finds the straggler: under sim, a fast
+/// worker's grant→complete span is exactly zero virtual time, so its
+/// throughput sample saturates high (the table floors the span at
+/// 1 µs); only the slow worker accumulates real virtual latency and
+/// lands on a finite, lower EWMA.
+#[test]
+fn sim_metrics_attribute_the_straggler_deterministically() {
+    fn run(tag: &str) -> (raddet::fleet::JobTelemetry, Vec<String>, String) {
+        let dir = raddet::testkit::scratch_dir(tag);
+        let mut world = SimWorld::new(0x7050, dir, fleet_cfg());
+        let id = world.submit_fleet(f64_payload(77), JobEngine::Prefix).unwrap();
+        // w-slow pays 40 ms of virtual latency per exchange; the TTL is
+        // 200 ms, so it straggles without ever losing a lease.
+        world.set_peer_latency("w-slow", Duration::from_millis(40));
+        for w in ["w-fast1", "w-fast2", "w-slow"] {
+            world
+                .add_worker(w, |cfg| {
+                    cfg.job = Some(id.clone());
+                })
+                .unwrap();
+        }
+        // One hand-driven step each, so every worker completes at least
+        // one chunk (and therefore owns a throughput sample) regardless
+        // of how the seeded drain below interleaves.
+        for w in ["w-fast1", "w-fast2", "w-slow"] {
+            match world.step_worker(w).unwrap() {
+                WorkerEvent::Completed { duplicate, .. } => assert!(!duplicate),
+                other => panic!("{other:?}"),
+            }
+        }
+        world.run_until_complete(&id, 2_000).unwrap();
+        let mut ctl = world.client("ctl").unwrap();
+        let telemetry = ctl.job_metrics(&id).unwrap();
+        ctl.quit();
+        (telemetry, world.trace(), world.trace_jsonl())
+    }
+
+    let (t, trace_a, jsonl_a) = run("sim-straggler-a");
+    assert_eq!(t.state, "done");
+    assert_eq!(t.chunks_done, t.chunks_total);
+    assert_eq!(t.workers.len(), 3, "all three workers left telemetry rows");
+    for (name, row) in &t.workers {
+        assert!(row.completed >= 1, "{name} must have completed a chunk");
+        assert!(row.ewma_mtps > 0, "{name} must own a throughput sample");
+        assert_eq!(row.held, 0, "finished jobs hold no leases");
+    }
+    let straggler = t
+        .workers
+        .iter()
+        .min_by_key(|(_, row)| row.ewma_mtps)
+        .map(|(name, _)| name.clone())
+        .unwrap();
+    assert_eq!(straggler, "w-slow", "lowest nonzero EWMA names the slow worker");
+    // Aggregate view: throughput sums the rows; the finished job has no ETA
+    // to estimate but keeps reporting the final rate.
+    let sum: u64 = t.workers.iter().map(|(_, row)| row.ewma_mtps).sum();
+    assert_eq!(t.tps_milli, sum);
+
+    // Replay: identical seed ⇒ identical trace AND identical telemetry
+    // bits (the snapshot is pure virtual-clock arithmetic).
+    let (t2, trace_b, jsonl_b) = run("sim-straggler-b");
+    assert_eq!(t, t2, "telemetry snapshots must replay bit-identically");
+    assert_eq!(trace_a, trace_b);
+    assert_eq!(jsonl_a, jsonl_b, "JSONL export must replay byte-identically");
+    assert!(jsonl_a.contains("\"event\":\"peer w-slow latency=40ms\""));
+}
+
 /// The replay contract: a fixed seed reproduces the identical event
 /// trace and determinant bits across independent runs of a scenario
 /// that mixes a crash, an expiry wait, and a server restart.
