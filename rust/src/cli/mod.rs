@@ -13,9 +13,11 @@
 //! raddet scaling   --rows M --cols N [--max-workers K] [--engine …]
 //! raddet serve     --port P [--workers K] [--engine …] [--jobs-dir D]
 //!                  [--fleet-chunks C] [--fleet-ttl-ms T]
+//!                  [--speculate [--speculate-factor F]]
+//!                  [--calib-chunks K [--calib-target-ms T]]
 //! raddet query     --addr HOST:PORT --csv F [--exact]
 //! raddet worker    --connect HOST:PORT [--id W] [--job ID] [--poll-ms P]
-//!                  [--max-chunks N] [--exit-on-idle]
+//!                  [--max-chunks N] [--exit-on-idle] [--throttle-ms T]
 //! raddet retrieve  [--images K] [--query I] [--noise E]
 //! raddet job submit  --rows M --cols N [--seed S | --csv F]
 //!                    [--scalar f64|i128|big] [--exact]
@@ -126,7 +128,12 @@ commands:\n\
   pram      §6 PRAM complexity table for --n/--m\n\
   scaling   strong-scaling study on this machine\n\
   serve     TCP determinant service; JOB verbs are always on and\n\
-            journal to --jobs-dir (default ./raddet-jobs)\n\
+            journal to --jobs-dir (default ./raddet-jobs);\n\
+            --speculate re-leases straggler chunks to faster workers\n\
+            (first COMPLETE wins; --speculate-factor tunes the median-\n\
+            EWMA trigger) and --calib-chunks K measures throughput on\n\
+            the first K chunks then re-chunks the remainder (journaled\n\
+            as GEOM so resume/replay stay deterministic)\n\
   query     send a --csv matrix to a running service (--addr)\n\
   worker    join a running service as a fleet worker: lease chunks of\n\
             durable jobs over LEASE GRANT/RENEW/COMPLETE/ABANDON and\n\
@@ -395,24 +402,54 @@ fn cmd_scaling(a: &Args) -> Result<()> {
 
 fn cmd_serve(a: &Args) -> Result<()> {
     a.check_known(
-        &[&COORD_OPTS[..], &["port", "host", "jobs-dir", "fleet-chunks", "fleet-ttl-ms"]]
-            .concat(),
+        &[
+            &COORD_OPTS[..],
+            &[
+                "port",
+                "host",
+                "jobs-dir",
+                "fleet-chunks",
+                "fleet-ttl-ms",
+                "speculate",
+                "speculate-factor",
+                "calib-chunks",
+                "calib-target-ms",
+            ],
+        ]
+        .concat(),
     )?;
     let port: u16 = a.get_parse("port", 7171u16)?;
     let host = a.get("host").unwrap_or("127.0.0.1");
     let jobs_dir = a.get("jobs-dir").unwrap_or("raddet-jobs");
     let coord = build_coordinator(a)?;
     let manager = JobManager::new(JobStore::open(jobs_dir)?, a.get_parse("workers", 0usize)?);
+    // Straggler speculation: `--speculate` turns duplicate re-lease on;
+    // the factor (median-EWMA multiple below which a holder counts as
+    // straggling) is bounded so one typo cannot make every chunk race.
+    let spec_factor: u32 = a.get_parse("speculate-factor", 3u32)?;
+    if !(1..=100).contains(&spec_factor) {
+        return Err(Error::Config(format!(
+            "--speculate-factor {spec_factor} out of range (1..=100)"
+        )));
+    }
+    let speculate =
+        (a.has_flag("speculate") || a.get("speculate-factor").is_some()).then_some(spec_factor);
     // Fleet knobs: chunk count is part of a job's spec (it fixes the
     // f64 composition grouping), so submitting the same matrix with the
     // same --fleet-chunks as a local `job submit --chunks` reproduces
-    // the identical bits.
+    // the identical bits. Calibration deliberately changes that
+    // geometry (journaled as GEOM, so resume/replay still agree) —
+    // leave --calib-chunks at 0 when bit-comparability against local
+    // runs of the same spec matters.
     let fleet_cfg = crate::fleet::FleetConfig {
         lease_ttl: std::time::Duration::from_millis(a.get_parse("fleet-ttl-ms", 30_000u64)?),
         // Default matches `raddet job submit --chunks` so default fleet
         // and local runs of one matrix stay bit-comparable.
         default_chunks: a.get_parse("fleet-chunks", 32usize)?,
         default_batch: a.get_parse("batch", 256usize)?,
+        speculate,
+        calib_chunks: a.get_parse("calib-chunks", 0usize)?,
+        calib_target_ms: a.get_parse("calib-target-ms", 500u64)?,
         ..Default::default()
     };
     let handle = Server::with_jobs(coord, manager)
@@ -424,6 +461,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | METRICS [JOB id] | PING | QUIT (spec: docs/PROTOCOL.md)"
     );
     println!("fleet: join workers with `raddet worker --connect {host}:{port}`");
+    if let Some(f) = speculate {
+        println!("fleet: speculative straggler re-lease on (factor x{f})");
+    }
+    if fleet_cfg.calib_chunks > 0 {
+        println!(
+            "fleet: calibrating chunk geometry on the first {} chunk(s) (target {} ms/chunk)",
+            fleet_cfg.calib_chunks, fleet_cfg.calib_target_ms
+        );
+    }
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -596,7 +642,15 @@ fn cmd_job_submit(a: &Args) -> Result<()> {
 }
 
 fn cmd_worker(a: &Args) -> Result<()> {
-    a.check_known(&["connect", "id", "job", "poll-ms", "max-chunks", "exit-on-idle"])?;
+    a.check_known(&[
+        "connect",
+        "id",
+        "job",
+        "poll-ms",
+        "max-chunks",
+        "exit-on-idle",
+        "throttle-ms",
+    ])?;
     let addr = a
         .get("connect")
         .ok_or_else(|| Error::Config("missing --connect HOST:PORT".into()))?;
@@ -613,6 +667,11 @@ fn cmd_worker(a: &Args) -> Result<()> {
             Error::Config(format!("bad value for --max-chunks: {v:?}"))
         })?),
     };
+    // Straggler drills: make this worker deliberately slow per chunk so
+    // `serve --speculate` has something to re-lease around.
+    let throttle_ms: u64 = a.get_parse("throttle-ms", 0u64)?;
+    cfg.throttle =
+        (throttle_ms > 0).then(|| std::time::Duration::from_millis(throttle_ms));
     println!("worker {} joining {addr} …", cfg.id);
     let stop = std::sync::atomic::AtomicBool::new(false);
     let report = crate::fleet::run_worker(addr, &cfg, &stop)?;
@@ -661,8 +720,9 @@ fn cmd_job_top(a: &Args) -> Result<()> {
 /// Human rendering of one `METRICS JOB` snapshot: a summary line plus
 /// one table row per worker.
 fn render_job_top(t: &crate::fleet::JobTelemetry) -> String {
+    use crate::fleet::CalibState;
     let mut out = format!(
-        "job {}: {}   chunks {}/{}   terms {}/{}   throughput {:.1} terms/s   eta {}\n",
+        "job {}: {}   chunks {}/{}   terms {}/{}   throughput {:.1} terms/s   eta {}",
         t.id,
         t.state,
         t.chunks_done,
@@ -673,6 +733,19 @@ fn render_job_top(t: &crate::fleet::JobTelemetry) -> String {
         t.eta_ms
             .map_or_else(|| "-".to_string(), |ms| format!("{:.1}s", ms as f64 / 1000.0)),
     );
+    if let Some(f) = t.speculate {
+        out.push_str(&format!("   speculate x{f}"));
+    }
+    match t.calib {
+        CalibState::Off => {}
+        CalibState::Measuring { done, want } => {
+            out.push_str(&format!("   calibrating {done}/{want}"));
+        }
+        CalibState::Chosen { chunks } => {
+            out.push_str(&format!("   geom {chunks} chunk(s)"));
+        }
+    }
+    out.push('\n');
     if !t.workers.is_empty() {
         let mut table = crate::bench::Table::new(&[
             "worker", "held", "done", "abandoned", "expired", "dup", "terms/s",
@@ -698,10 +771,19 @@ fn render_job_top(t: &crate::fleet::JobTelemetry) -> String {
 /// (the wire order). `eta_ms` is `null` while no throughput sample
 /// exists.
 fn render_job_top_json(t: &crate::fleet::JobTelemetry) -> String {
+    use crate::fleet::CalibState;
     use crate::telemetry::json_escape;
+    // `calib` is exported as the wire token (`-`, `c<done>/<want>`,
+    // `g<chunks>`) so tooling sees exactly what the protocol carries.
+    let calib = match t.calib {
+        CalibState::Off => "-".to_string(),
+        CalibState::Measuring { done, want } => format!("c{done}/{want}"),
+        CalibState::Chosen { chunks } => format!("g{chunks}"),
+    };
     let mut s = format!(
         "{{\"id\":\"{}\",\"state\":\"{}\",\"chunks_done\":{},\"chunks_total\":{},\
-         \"terms_done\":{},\"terms_total\":{},\"tps_milli\":{},\"eta_ms\":{},\"workers\":[",
+         \"terms_done\":{},\"terms_total\":{},\"tps_milli\":{},\"eta_ms\":{},\
+         \"speculate\":{},\"calib\":\"{calib}\",\"workers\":[",
         json_escape(&t.id),
         json_escape(&t.state),
         t.chunks_done,
@@ -710,6 +792,7 @@ fn render_job_top_json(t: &crate::fleet::JobTelemetry) -> String {
         t.terms_total,
         t.tps_milli,
         t.eta_ms.map_or_else(|| "null".to_string(), |v| v.to_string()),
+        t.speculate.map_or_else(|| "null".to_string(), |v| v.to_string()),
     );
     for (i, (name, w)) in t.workers.iter().enumerate() {
         if i > 0 {
@@ -1022,7 +1105,7 @@ fn salvage_and_resume(dir: &std::path::Path, want: &JobValue) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::{JobTelemetry, WorkerRow};
+    use crate::fleet::{CalibState, JobTelemetry, WorkerRow};
     use crate::service::Response;
 
     fn sample_telemetry() -> JobTelemetry {
@@ -1035,6 +1118,8 @@ mod tests {
             terms_total: 168,
             tps_milli: 5_500,
             eta_ms: Some(15_273),
+            speculate: Some(2),
+            calib: CalibState::Chosen { chunks: 4 },
             workers: vec![
                 (
                     "w1".into(),
@@ -1082,13 +1167,18 @@ mod tests {
         assert!(json.starts_with("{\"id\":\"job-7\",\"state\":\"open\""));
         assert!(json.contains("\"chunks_done\":3,\"chunks_total\":6"));
         assert!(json.contains("\"eta_ms\":15273"));
+        assert!(json.contains("\"speculate\":2,\"calib\":\"g4\""));
         assert!(json.contains("\"workers\":[{\"name\":\"w1\""));
         assert!(json.ends_with("}]}"));
         // No throughput sample yet: eta must be JSON null, not 0.
         let mut quiet = sample_telemetry();
         quiet.tps_milli = 0;
         quiet.eta_ms = None;
-        assert!(render_job_top_json(&quiet).contains("\"eta_ms\":null"));
+        quiet.speculate = None;
+        quiet.calib = CalibState::Measuring { done: 1, want: 2 };
+        let qjson = render_job_top_json(&quiet);
+        assert!(qjson.contains("\"eta_ms\":null"));
+        assert!(qjson.contains("\"speculate\":null,\"calib\":\"c1/2\""));
     }
 
     #[test]
@@ -1096,6 +1186,8 @@ mod tests {
         let text = render_job_top(&sample_telemetry());
         assert!(text.starts_with("job job-7: open   chunks 3/6   terms 84/168"));
         assert!(text.contains("eta 15.3s"));
+        assert!(text.contains("speculate x2"));
+        assert!(text.contains("geom 4 chunk(s)"));
         assert!(text.contains("w1"));
         assert!(text.contains("w2"));
     }

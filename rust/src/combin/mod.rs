@@ -34,7 +34,10 @@ pub mod successor;
 pub mod unrank;
 
 pub use binomial::{binom, binom_checked, PascalWeights};
-pub use partition::{partition_ranks, partition_total, partition_total_block_aligned, Chunk};
+pub use partition::{
+    partition_range_block_aligned, partition_ranks, partition_total,
+    partition_total_block_aligned, Chunk,
+};
 pub use pascal::PascalTable;
 pub use prefix::{
     align_chunks_to_blocks, block_aligned_grain, block_start, max_block_len, PrefixBlock,

@@ -52,6 +52,45 @@ pub fn partition_total_block_aligned(
     super::prefix::align_chunks_to_blocks(table, &partition_total(total, k))
 }
 
+/// Partition the sub-range `[start, end)` into `k` block-aligned chunks.
+///
+/// The remainder-geometry half of fleet calibration: the first few
+/// chunks of a job run on the submit-time plan, and once their measured
+/// throughput picks a better chunk count the *rest* of the rank space is
+/// re-partitioned with this helper. Interior boundaries are snapped down
+/// to sibling-block starts (like [`partition_total_block_aligned`]) but
+/// never below `start`, so the calibration prefix is untouched; the
+/// cover of `[start, end)` stays exact and in rank order. Chunks may
+/// shrink to empty, never overlap.
+pub fn partition_range_block_aligned(
+    start: u128,
+    end: u128,
+    k: usize,
+    table: &PascalTable,
+) -> Result<Vec<Chunk>> {
+    assert!(start <= end, "range must be ascending");
+    let relative = partition_total(end - start, k);
+    // Aligned absolute boundary list: fixed `start` at the front, `end`
+    // at the back; interior bounds floor to block starts, clamped so the
+    // alignment can neither cross `start` nor regress.
+    let mut bounds = Vec::with_capacity(relative.len() + 1);
+    bounds.push(start);
+    for c in &relative[1..] {
+        let absolute = start + c.start;
+        let b = if absolute >= end {
+            end
+        } else {
+            super::prefix::block_start(table, absolute)?.max(start)
+        };
+        bounds.push(b.max(*bounds.last().expect("non-empty")));
+    }
+    bounds.push(end);
+    Ok(bounds
+        .windows(2)
+        .map(|w| Chunk { start: w[0], len: w[1] - w[0] })
+        .collect())
+}
+
 /// Partition an explicit total (used by the coordinator once it has
 /// validated the job).
 pub fn partition_total(total: u128, k: usize) -> Vec<Chunk> {
@@ -134,6 +173,47 @@ mod tests {
             .unwrap();
             assert_eq!(shared, manual, "k={k}");
             assert_exact_cover(total, &shared);
+        }
+    }
+
+    #[test]
+    fn range_partition_covers_and_respects_block_floors() {
+        let (n, m) = (10u64, 4u64);
+        let table = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap(); // 210
+        for (start, k) in [(0u128, 4usize), (17, 3), (50, 7), (209, 5), (210, 2)] {
+            let chunks = partition_range_block_aligned(start, total, k, &table).unwrap();
+            assert_eq!(chunks.len(), k, "start={start} k={k}");
+            let mut cursor = start;
+            for c in &chunks {
+                assert_eq!(c.start, cursor, "start={start} k={k}: gap/overlap");
+                cursor = c.end();
+                // Interior boundaries past the range start sit on block starts
+                // unless the clamp to `start` kicked in.
+                if c.start > start && c.start < total {
+                    assert_eq!(
+                        crate::combin::block_start(&table, c.start).unwrap().max(start),
+                        c.start,
+                        "start={start} k={k}: boundary {} not block-aligned",
+                        c.start
+                    );
+                }
+            }
+            assert_eq!(cursor, total, "start={start} k={k}");
+        }
+    }
+
+    #[test]
+    fn range_partition_from_zero_matches_total_partition() {
+        let (n, m) = (9u64, 4u64);
+        let table = PascalTable::new(n, m).unwrap();
+        let total = combination_count(n, m).unwrap();
+        for k in [1usize, 3, 5, 11] {
+            assert_eq!(
+                partition_range_block_aligned(0, total, k, &table).unwrap(),
+                partition_total_block_aligned(total, k, &table).unwrap(),
+                "k={k}"
+            );
         }
     }
 

@@ -44,10 +44,10 @@
 use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::jobs::{
-    compose_partials, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec, JobStore, Journal,
-    LoadedJob, MeteredFs, Record, RunLock,
+    compose_partials, plan_dims_geom, valid_id, ChunkRecord, JobEngine, JobPayload, JobSpec,
+    JobStore, Journal, LoadedJob, MeteredFs, Record, RunLock, GEOM_MAX_CHUNKS,
 };
-use crate::telemetry::{Counter, Registry};
+use crate::telemetry::{Counter, Event, EventLog, Registry};
 use crate::{Error, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -57,6 +57,10 @@ use std::time::Duration;
 /// `METRICS JOB` on anything older falls back to the journal-derived
 /// status (state + chunk counts, no per-worker rows).
 const RECENT_TELEMETRY_CAP: usize = 16;
+
+/// How many calibration / re-lease lifecycle events the table's
+/// [`EventLog`] ring retains.
+const FLEET_EVENT_CAP: usize = 128;
 
 /// Fleet knobs (server side).
 #[derive(Clone, Copy, Debug)]
@@ -73,6 +77,22 @@ pub struct FleetConfig {
     /// Cap on simultaneously open fleet jobs (each pins a run lock and
     /// an open journal).
     pub max_open: usize,
+    /// Speculative straggler re-lease factor. `Some(f)` re-leases a
+    /// held chunk to an idle worker when the fleet's median throughput
+    /// is at least `f×` the holder's EWMA (or the holder has produced
+    /// no sample for half a TTL); `None` disables speculation. First
+    /// `LEASE COMPLETE` wins — losers are rejected, never journaled.
+    pub speculate: Option<u32>,
+    /// Calibration prefix length: how many of a job's SPEC-plan chunks
+    /// to grant as a measurement pass before re-partitioning the
+    /// remainder from the observed terms/sec (journaled as a `GEOM`
+    /// record, so resume and replay see the same geometry). `0`
+    /// disables calibration.
+    pub calib_chunks: usize,
+    /// Target wall-clock per re-partitioned remainder chunk, in
+    /// milliseconds; the calibration pass sizes chunks so one takes
+    /// roughly this long at the measured rate.
+    pub calib_target_ms: u64,
 }
 
 impl Default for FleetConfig {
@@ -82,6 +102,9 @@ impl Default for FleetConfig {
             default_chunks: 32,
             default_batch: 256,
             max_open: 8,
+            speculate: None,
+            calib_chunks: 0,
+            calib_target_ms: 500,
         }
     }
 }
@@ -130,8 +153,34 @@ pub struct JobTelemetry {
     /// Naive remaining-terms ÷ throughput estimate in milliseconds;
     /// `None` when the throughput sum is 0.
     pub eta_ms: Option<u64>,
+    /// The table's speculative re-lease factor, when enabled.
+    pub speculate: Option<u32>,
+    /// Where the job stands in the adaptive-chunking lifecycle.
+    pub calib: CalibState,
     /// Per-worker rows, sorted by worker name.
     pub workers: Vec<(String, WorkerRow)>,
+}
+
+/// Adaptive-chunking lifecycle of one fleet job, as surfaced by
+/// `METRICS JOB`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibState {
+    /// No calibration configured (and no GEOM record journaled).
+    Off,
+    /// Measuring: `done` of the `want` calibration-prefix chunks are
+    /// journaled; grants stay inside the prefix until all land.
+    Measuring {
+        /// Prefix chunks journaled so far.
+        done: u64,
+        /// Prefix length being measured.
+        want: u64,
+    },
+    /// Geometry chosen (journaled as a GEOM record): the remainder was
+    /// re-partitioned into `chunks` block-aligned chunks.
+    Chosen {
+        /// Remainder chunk count the calibration pass picked.
+        chunks: u64,
+    },
 }
 
 /// Registry counters for fleet lease traffic (the `fleet_*` family).
@@ -143,6 +192,12 @@ struct FleetMetrics {
     duplicates: Counter,
     expiries: Counter,
     abandons: Counter,
+    /// Speculative re-leases granted (`fleet_release_grants_total`).
+    release_grants: Counter,
+    /// Raced chunks won by a first COMPLETE (`fleet_release_wins_total`).
+    release_wins: Counter,
+    /// Lease entries evicted by a rival's win (`fleet_release_losses_total`).
+    release_losses: Counter,
 }
 
 impl FleetMetrics {
@@ -154,6 +209,9 @@ impl FleetMetrics {
             duplicates: reg.counter("fleet_duplicates_total"),
             expiries: reg.counter("fleet_expiries_total"),
             abandons: reg.counter("fleet_abandons_total"),
+            release_grants: reg.counter("fleet_release_grants_total"),
+            release_wins: reg.counter("fleet_release_wins_total"),
+            release_losses: reg.counter("fleet_release_losses_total"),
         }
     }
 }
@@ -177,6 +235,21 @@ fn ewma_update(ewma: u64, sample: u64) -> u64 {
     }
 }
 
+/// One active lease on a chunk. A chunk normally carries one entry;
+/// a speculative re-lease adds a second and the entries race — first
+/// `LEASE COMPLETE` wins, the rest are evicted.
+#[derive(Clone, Debug)]
+struct LeaseEntry {
+    worker: String,
+    /// Lease deadline on the table's [`Clock`].
+    deadline: Duration,
+    /// Grant timestamp, for the server-measured grant→complete
+    /// throughput span (and the no-sample straggler age test).
+    granted: Duration,
+    /// Whether this entry was granted as a straggler re-lease.
+    speculative: bool,
+}
+
 /// One open fleet job: plan + journal + lease bookkeeping.
 struct OpenJob {
     spec: JobSpec,
@@ -185,14 +258,19 @@ struct OpenJob {
     journal: Journal,
     _lock: RunLock,
     completed: BTreeMap<u64, ChunkRecord>,
-    /// chunk → (worker, lease deadline on the table's [`Clock`]).
-    leases: HashMap<u64, (String, Duration)>,
+    /// chunk → active lease entries (never empty; the key is removed
+    /// with the last entry). More than one entry only while a
+    /// speculative re-lease races the original holder.
+    leases: HashMap<u64, Vec<LeaseEntry>>,
     /// chunk → worker whose partial was journaled (idempotent re-acks
     /// for retried `LEASE COMPLETE`s).
     completed_by: HashMap<u64, String>,
-    /// chunk → grant timestamp of the *current* lease, for the
-    /// server-measured grant→complete throughput span.
-    grant_times: HashMap<u64, Duration>,
+    /// Journaled GEOM geometry `(calibration prefix, remainder
+    /// chunks)`, whether chosen by this table or replayed at open.
+    geom: Option<(u64, u64)>,
+    /// Active calibration: grants stay below this prefix length until
+    /// all prefix chunks are journaled and a GEOM record is chosen.
+    calib: Option<u64>,
     /// Per-worker telemetry rows (BTreeMap for sorted snapshots).
     workers: BTreeMap<String, WorkerRow>,
     /// worker → last cumulative `(terms, micros)` it reported in a
@@ -201,28 +279,33 @@ struct OpenJob {
 }
 
 impl OpenJob {
-    /// Drop leases whose deadline has passed; their chunks become
-    /// grantable again. Returns how many expired, after attributing
-    /// each to the worker that let it lapse.
+    /// Drop lease entries whose deadline has passed; a chunk with no
+    /// surviving entry becomes grantable again. Returns how many
+    /// entries expired, after attributing each to the worker that let
+    /// it lapse.
     fn expire_leases(&mut self, now: Duration) -> u64 {
-        let lapsed: Vec<u64> = self
-            .leases
-            .iter()
-            .filter(|(_, (_, deadline))| *deadline <= now)
-            .map(|(chunk, _)| *chunk)
-            .collect();
-        for chunk in &lapsed {
-            if let Some((worker, _)) = self.leases.remove(chunk) {
-                self.grant_times.remove(chunk);
-                self.workers.entry(worker).or_default().expired += 1;
-            }
-        }
-        lapsed.len() as u64
+        let mut expired = 0u64;
+        let workers = &mut self.workers;
+        self.leases.retain(|_, entries| {
+            entries.retain(|e| {
+                if e.deadline <= now {
+                    workers.entry(e.worker.clone()).or_default().expired += 1;
+                    expired += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            !entries.is_empty()
+        });
+        expired
     }
 
-    /// Lowest-index chunk that is neither journaled nor actively leased.
-    fn next_free_chunk(&self) -> Option<u64> {
-        (0..self.plan.len() as u64)
+    /// Lowest-index chunk below `bound` that is neither journaled nor
+    /// actively leased. `bound` is the calibration prefix while a
+    /// measurement pass is running, the plan length otherwise.
+    fn next_free_chunk(&self, bound: u64) -> Option<u64> {
+        (0..bound.min(self.plan.len() as u64))
             .find(|i| !self.completed.contains_key(i) && !self.leases.contains_key(i))
     }
 }
@@ -277,36 +360,58 @@ pub enum CompleteOutcome {
     },
 }
 
-/// Scan the open-job map for the lowest grantable chunk (lowest job id
-/// first), honouring `filter`, and lease it to `worker`.
-fn grant_from<F: Fn(&str) -> bool>(
-    jobs: &mut BTreeMap<String, OpenJob>,
+/// Median of the positive throughput EWMAs across a job's worker rows
+/// (`None` until some worker has produced a sample).
+fn median_ewma(workers: &BTreeMap<String, WorkerRow>) -> Option<u64> {
+    let mut v: Vec<u64> = workers
+        .values()
+        .map(|r| r.ewma_mtps)
+        .filter(|&e| e > 0)
+        .collect();
+    v.sort_unstable();
+    v.get(v.len() / 2).copied()
+}
+
+/// Pick a straggling chunk to re-lease speculatively to `worker`, or
+/// `None` if no held chunk qualifies. A chunk qualifies when it has
+/// exactly one active lease, held by someone else, whose holder is a
+/// straggler — EWMA at least `factor×` below the fleet median, or no
+/// sample at all half a TTL after the grant — and `worker` is at least
+/// as fast as the holder. Among qualifiers the slowest holder wins,
+/// ties broken by lowest chunk index, so the choice is deterministic
+/// despite the `HashMap` iteration order.
+fn speculative_candidate(
+    oj: &OpenJob,
     worker: &str,
-    filter: Option<&str>,
-    want_spec: &F,
     now: Duration,
     ttl: Duration,
-    expired: &mut u64,
-) -> Option<Grant> {
-    for (id, oj) in jobs.iter_mut() {
-        if filter.is_some_and(|f| f != id.as_str()) {
+    factor: u32,
+) -> Option<u64> {
+    let median = median_ewma(&oj.workers);
+    let requester = oj.workers.get(worker).map_or(0, |r| r.ewma_mtps);
+    let mut best: Option<(u64, u64)> = None;
+    for (&chunk, entries) in &oj.leases {
+        if entries.len() != 1 || oj.completed.contains_key(&chunk) {
             continue;
         }
-        *expired += oj.expire_leases(now);
-        if let Some(idx) = oj.next_free_chunk() {
-            oj.leases.insert(idx, (worker.to_string(), now.saturating_add(ttl)));
-            oj.grant_times.insert(idx, now);
-            let spec = want_spec(id).then(|| oj.spec.clone());
-            return Some(Grant {
-                job: id.clone(),
-                chunk_index: idx,
-                chunk: oj.plan[idx as usize],
-                ttl,
-                spec,
-            });
+        let e = &entries[0];
+        if e.worker == worker {
+            continue;
+        }
+        let holder = oj.workers.get(&e.worker).map_or(0, |r| r.ewma_mtps);
+        let straggling = if holder == 0 {
+            now.saturating_sub(e.granted) > ttl / 2
+        } else {
+            median.is_some_and(|med| med as u128 >= factor as u128 * holder as u128)
+        };
+        if !straggling || requester < holder {
+            continue;
+        }
+        if best.map_or(true, |b| (holder, chunk) < b) {
+            best = Some((holder, chunk));
         }
     }
-    None
+    best.map(|(_, chunk)| chunk)
 }
 
 /// The lease authority over one [`JobStore`].
@@ -321,6 +426,9 @@ pub struct LeaseTable {
     /// at [`RECENT_TELEMETRY_CAP`] — `METRICS JOB` keeps answering with
     /// per-worker rows after the final chunk removed the [`OpenJob`].
     recent: Mutex<VecDeque<(String, JobTelemetry)>>,
+    /// Calibration / re-lease lifecycle events, stamped on this table's
+    /// clock (virtual under sim ⇒ replay-identical streams).
+    events: EventLog,
 }
 
 impl LeaseTable {
@@ -334,6 +442,7 @@ impl LeaseTable {
     /// [`crate::clock::SimClock`] makes lease expiry a pure function of
     /// explicit `advance` calls).
     pub fn with_clock(store: JobStore, cfg: FleetConfig, clock: Arc<dyn Clock>) -> Self {
+        let events = EventLog::new(Arc::clone(&clock), FLEET_EVENT_CAP);
         Self {
             store,
             cfg,
@@ -341,6 +450,7 @@ impl LeaseTable {
             jobs: Mutex::new(BTreeMap::new()),
             metrics: None,
             recent: Mutex::new(VecDeque::new()),
+            events,
         }
     }
 
@@ -378,6 +488,14 @@ impl LeaseTable {
     /// The configured lease TTL.
     pub fn lease_ttl(&self) -> Duration {
         self.cfg.lease_ttl
+    }
+
+    /// The retained calibration / re-lease lifecycle events, oldest
+    /// first. Kinds: `calibrate` (GEOM chosen), `release_grant`
+    /// (speculative re-lease granted), `release_win` (a raced chunk's
+    /// first COMPLETE landed).
+    pub fn events(&self) -> Vec<Event> {
+        self.events.events()
     }
 
     /// Ids of currently open fleet jobs (sorted).
@@ -471,6 +589,19 @@ impl LeaseTable {
             self.clear_fleet_marker(id);
             return Ok(false);
         }
+        // Calibration is only meaningful for a job whose geometry is
+        // still undecided: no journaled GEOM, a prefix strictly shorter
+        // than the plan, and no chunk journaled beyond the prefix (a
+        // resumed sweep that already ran past it keeps the SPEC plan —
+        // the GEOM structural rule requires every pre-GEOM chunk to sit
+        // inside the calibration prefix).
+        let calib = if self.cfg.calib_chunks == 0 || job.geom.is_some() {
+            None
+        } else {
+            let want = (self.cfg.calib_chunks as u64).min(job.plan.len() as u64);
+            ((want as usize) < job.plan.len() && job.completed.keys().all(|&i| i < want))
+                .then_some(want)
+        };
         jobs.insert(
             id.to_string(),
             OpenJob {
@@ -482,7 +613,8 @@ impl LeaseTable {
                 completed: job.completed,
                 leases: HashMap::new(),
                 completed_by: HashMap::new(),
-                grant_times: HashMap::new(),
+                geom: job.geom,
+                calib,
                 workers: BTreeMap::new(),
                 last_report: HashMap::new(),
             },
@@ -548,7 +680,7 @@ impl LeaseTable {
         let now = self.clock.now();
         let mut expired = 0u64;
         let mut granted =
-            grant_from(&mut jobs, worker, filter, &want_spec, now, self.cfg.lease_ttl, &mut expired);
+            self.grant_from(&mut jobs, worker, filter, &want_spec, now, &mut expired)?;
         if granted.is_none() && filter.is_none() {
             // Nothing leasable in memory: adopt fleet-marked jobs from
             // disk (interrupted sweeps from a previous server process).
@@ -571,15 +703,8 @@ impl LeaseTable {
                 }
             }
             if adopted {
-                granted = grant_from(
-                    &mut jobs,
-                    worker,
-                    None,
-                    &want_spec,
-                    now,
-                    self.cfg.lease_ttl,
-                    &mut expired,
-                );
+                granted =
+                    self.grant_from(&mut jobs, worker, None, &want_spec, now, &mut expired)?;
             }
         }
         if let Some(m) = &self.metrics {
@@ -592,6 +717,105 @@ impl LeaseTable {
             Some(g) => GrantOutcome::Granted(g),
             None => GrantOutcome::Idle,
         })
+    }
+
+    /// Scan the open-job map for the lowest grantable chunk (lowest job
+    /// id first), honouring `filter`, and lease it to `worker`. When a
+    /// job has no free chunk and speculation is configured, a held
+    /// straggler chunk may be re-leased instead. Fallible because an
+    /// exhausted calibration prefix chooses and journals the GEOM
+    /// record here, on the granting path.
+    fn grant_from<F: Fn(&str) -> bool>(
+        &self,
+        jobs: &mut BTreeMap<String, OpenJob>,
+        worker: &str,
+        filter: Option<&str>,
+        want_spec: &F,
+        now: Duration,
+        expired: &mut u64,
+    ) -> Result<Option<Grant>> {
+        let ttl = self.cfg.lease_ttl;
+        for (id, oj) in jobs.iter_mut() {
+            if filter.is_some_and(|f| f != id.as_str()) {
+                continue;
+            }
+            *expired += oj.expire_leases(now);
+            self.finish_calibration(id, oj)?;
+            let bound = oj.calib.unwrap_or(oj.plan.len() as u64);
+            let (idx, speculative) = match oj.next_free_chunk(bound) {
+                Some(idx) => (idx, false),
+                None => match self
+                    .cfg
+                    .speculate
+                    .and_then(|f| speculative_candidate(oj, worker, now, ttl, f))
+                {
+                    Some(idx) => (idx, true),
+                    None => continue,
+                },
+            };
+            oj.leases.entry(idx).or_default().push(LeaseEntry {
+                worker: worker.to_string(),
+                deadline: now.saturating_add(ttl),
+                granted: now,
+                speculative,
+            });
+            if speculative {
+                if let Some(m) = &self.metrics {
+                    m.release_grants.inc();
+                }
+                self.events
+                    .record("release_grant", format!("job={id} chunk={idx} to={worker}"));
+            }
+            let spec = want_spec(id).then(|| oj.spec.clone());
+            return Ok(Some(Grant {
+                job: id.clone(),
+                chunk_index: idx,
+                chunk: oj.plan[idx as usize],
+                ttl,
+                spec,
+            }));
+        }
+        Ok(None)
+    }
+
+    /// If `oj`'s calibration prefix is fully journaled, choose the
+    /// remainder geometry from the measured rate, journal it as a GEOM
+    /// record, and re-partition the plan. The rate comes from the
+    /// journaled chunk records (worker-measured terms and micros), not
+    /// in-memory state, so a restarted server that replays the journal
+    /// *before* choosing would measure the same figures. A failed GEOM
+    /// append leaves calibration active — the next grant retries.
+    fn finish_calibration(&self, id: &str, oj: &mut OpenJob) -> Result<()> {
+        let Some(want) = oj.calib else { return Ok(()) };
+        if !(0..want).all(|i| oj.completed.contains_key(&i)) {
+            return Ok(());
+        }
+        let mut terms: u128 = 0;
+        let mut micros: u128 = 0;
+        for i in 0..want {
+            let rec = &oj.completed[&i];
+            terms += rec.terms as u128;
+            micros += rec.micros as u128;
+        }
+        // Terms one remainder chunk should carry to take ~target_ms at
+        // the measured rate: terms/µs × target_ms×1000 µs.
+        let target_ms = self.cfg.calib_target_ms.max(1) as u128;
+        let target_terms = (terms.saturating_mul(1_000).saturating_mul(target_ms)
+            / micros.max(1))
+        .max(1);
+        let prefix_end = oj.plan[want as usize - 1].end();
+        let remaining = oj.total_terms.saturating_sub(prefix_end);
+        let rechunks = ((remaining + target_terms - 1) / target_terms)
+            .clamp(1, GEOM_MAX_CHUNKS as u128) as u64;
+        oj.journal.append(&Record::Geom { calib: want, chunks: rechunks })?;
+        let (m, n) = oj.spec.shape();
+        let (plan, _) = plan_dims_geom(m, n, oj.spec.chunks, Some((want, rechunks)))?;
+        oj.plan = plan;
+        oj.geom = Some((want, rechunks));
+        oj.calib = None;
+        self.events
+            .record("calibrate", format!("job={id} calib={want} chunks={rechunks}"));
+        Ok(())
     }
 
     /// Extend `worker`'s lease on a chunk by one TTL window. An expired
@@ -614,9 +838,13 @@ impl LeaseTable {
         let oj = jobs
             .get_mut(id)
             .ok_or_else(|| Error::Job(format!("job {id:?} is not open for fleet leasing")))?;
-        match oj.leases.get_mut(&chunk) {
-            Some((w, deadline)) if w.as_str() == worker => {
-                *deadline = self.clock.deadline(self.cfg.lease_ttl);
+        let entry = oj
+            .leases
+            .get_mut(&chunk)
+            .and_then(|entries| entries.iter_mut().find(|e| e.worker == worker));
+        match entry {
+            Some(e) => {
+                e.deadline = self.clock.deadline(self.cfg.lease_ttl);
                 if let Some((terms, micros)) = report {
                     let (seen_t, seen_us) =
                         oj.last_report.get(worker).copied().unwrap_or((0, 0));
@@ -633,7 +861,7 @@ impl LeaseTable {
                 }
                 Ok(self.cfg.lease_ttl)
             }
-            _ => Err(Error::Job(format!(
+            None => Err(Error::Job(format!(
                 "lease lost: worker {worker:?} does not hold chunk {chunk} of job {id:?}"
             ))),
         }
@@ -661,20 +889,22 @@ impl LeaseTable {
             if let Ok(st) = self.store.status(id) {
                 if st.complete && (chunk as usize) < st.chunks_total {
                     // Attribute the late duplicate in the retained
-                    // telemetry of the (now finished) job, if any.
+                    // telemetry of the (now finished) job, if any —
+                    // but only to a worker that actually participated.
+                    // A sender with no row never held a lease here;
+                    // acknowledging its duplicate is enough, inventing
+                    // a row would credit participation that never
+                    // happened.
                     let mut recent =
                         self.recent.lock().expect("recent telemetry poisoned");
                     if let Some((_, snap)) =
                         recent.iter_mut().find(|(rid, _)| rid == id)
                     {
-                        match snap.workers.iter_mut().find(|(w, _)| w == worker) {
-                            Some((_, row)) => row.duplicates += 1,
-                            None => snap.workers.push((
-                                worker.to_string(),
-                                WorkerRow { duplicates: 1, ..WorkerRow::default() },
-                            )),
+                        if let Some((_, row)) =
+                            snap.workers.iter_mut().find(|(w, _)| w == worker)
+                        {
+                            row.duplicates += 1;
                         }
-                        snap.workers.sort_by(|(a, _), (b, _)| a.cmp(b));
                     }
                     if let Some(m) = &self.metrics {
                         m.duplicates.inc();
@@ -695,21 +925,33 @@ impl LeaseTable {
         }
         if oj.completed.contains_key(&chunk) {
             let done = oj.completed.len() as u64;
-            if oj.completed_by.get(&chunk).is_some_and(|w| w != worker) {
-                return Err(Error::Job(format!(
-                    "lease lost: chunk {chunk} of job {id:?} was completed by another worker"
-                )));
+            match oj.completed_by.get(&chunk) {
+                Some(w) if w != worker => {
+                    return Err(Error::Job(format!(
+                        "lease lost: chunk {chunk} of job {id:?} was completed by another worker"
+                    )));
+                }
+                // Idempotent re-ack: the same worker retrying —
+                // nothing is journaled, the retry is attributed.
+                Some(_) => {
+                    oj.workers.entry(worker.to_string()).or_default().duplicates += 1;
+                }
+                // A chunk journaled before this open of the job: the
+                // completer identity was not persisted, so acknowledge
+                // without attributing a duplicate to a worker that may
+                // never have held the lease.
+                None => {}
             }
-            // Idempotent re-ack: the same worker retrying, or a chunk
-            // journaled before this open of the job (completer identity
-            // is not persisted) — nothing is journaled either way.
-            oj.workers.entry(worker.to_string()).or_default().duplicates += 1;
             if let Some(m) = &self.metrics {
                 m.duplicates.inc();
             }
             return Ok(CompleteOutcome::Duplicate { chunks_done: done, chunks_total: total });
         }
-        if oj.leases.get(&chunk).is_some_and(|(w, _)| w != worker) {
+        if oj
+            .leases
+            .get(&chunk)
+            .is_some_and(|entries| !entries.iter().any(|e| e.worker == worker))
+        {
             return Err(Error::Job(format!(
                 "lease lost: chunk {chunk} of job {id:?} is leased to another worker"
             )));
@@ -738,7 +980,15 @@ impl LeaseTable {
         oj.journal.append(&Record::Chunk { index: chunk, rec: rec.clone() })?;
         oj.completed.insert(chunk, rec);
         oj.completed_by.insert(chunk, worker.to_string());
-        oj.leases.remove(&chunk);
+        // First COMPLETE wins the chunk outright: every other lease
+        // entry — the original holder still racing a speculative
+        // duplicate, or vice versa — is evicted here. A loser's later
+        // delivery hits the completed-by-another-worker rejection
+        // above, which is benign (nothing journaled).
+        let entries = oj.leases.remove(&chunk).unwrap_or_default();
+        let raced = entries.iter().any(|e| e.speculative);
+        let losses = entries.iter().filter(|e| e.worker != worker).count() as u64;
+        let t0 = entries.iter().find(|e| e.worker == worker).map(|e| e.granted);
         // Grant→complete span on the table's own clock: the
         // sim-deterministic throughput signal (a straggling worker's
         // exchanges advance more virtual time, so its samples are
@@ -746,10 +996,20 @@ impl LeaseTable {
         // a span across an expiry would misstate throughput.
         let row = oj.workers.entry(worker.to_string()).or_default();
         row.completed += 1;
-        if let Some(t0) = oj.grant_times.remove(&chunk) {
+        if let Some(t0) = t0 {
             let span = self.clock.now().saturating_sub(t0);
             let span_us = span.as_micros().min(u64::MAX as u128) as u64;
             row.ewma_mtps = ewma_update(row.ewma_mtps, sample_mtps(delivered_terms, span_us));
+        }
+        if raced {
+            if let Some(m) = &self.metrics {
+                m.release_wins.inc();
+                m.release_losses.add(losses);
+            }
+            self.events.record(
+                "release_win",
+                format!("job={id} chunk={chunk} winner={worker} evicted={losses}"),
+            );
         }
         if let Some(m) = &self.metrics {
             m.completes.inc();
@@ -765,7 +1025,7 @@ impl LeaseTable {
                 )));
             }
             oj.journal.append(&Record::Done { terms, value })?;
-            let snap = snapshot_open(id, oj, "done");
+            let snap = snapshot_open(id, oj, "done", self.cfg.speculate);
             jobs.remove(id); // drops the journal and releases the run lock
             drop(jobs);
             self.remember(snap);
@@ -780,17 +1040,24 @@ impl LeaseTable {
         let oj = jobs
             .get_mut(id)
             .ok_or_else(|| Error::Job(format!("job {id:?} is not open for fleet leasing")))?;
-        match oj.leases.get(&chunk) {
-            Some((w, _)) if w == worker => {
-                oj.leases.remove(&chunk);
-                oj.grant_times.remove(&chunk);
+        let pos = oj
+            .leases
+            .get(&chunk)
+            .and_then(|entries| entries.iter().position(|e| e.worker == worker));
+        match pos {
+            Some(pos) => {
+                let entries = oj.leases.get_mut(&chunk).expect("entry vec vanished");
+                entries.remove(pos);
+                if entries.is_empty() {
+                    oj.leases.remove(&chunk);
+                }
                 oj.workers.entry(worker.to_string()).or_default().abandoned += 1;
                 if let Some(m) = &self.metrics {
                     m.abandons.inc();
                 }
                 Ok(())
             }
-            _ => Err(Error::Job(format!(
+            None => Err(Error::Job(format!(
                 "lease lost: worker {worker:?} does not hold chunk {chunk} of job {id:?}"
             ))),
         }
@@ -810,7 +1077,7 @@ impl LeaseTable {
                 if let Some(m) = &self.metrics {
                     m.expiries.add(expired);
                 }
-                return Ok(snapshot_open(id, oj, "open"));
+                return Ok(snapshot_open(id, oj, "open", self.cfg.speculate));
             }
         }
         if let Some(snap) = self
@@ -833,6 +1100,10 @@ impl LeaseTable {
             terms_total: st.terms_total,
             tps_milli: 0,
             eta_ms: None,
+            speculate: self.cfg.speculate,
+            calib: st
+                .geom
+                .map_or(CalibState::Off, |(_, chunks)| CalibState::Chosen { chunks }),
             workers: Vec::new(),
         })
     }
@@ -854,7 +1125,10 @@ impl LeaseTable {
     /// `raddet job resume` picks the sweep up from the journal.
     /// Returns whether the job was open.
     pub fn close(&self, id: &str) -> bool {
-        let snap = self.lock_jobs().remove(id).map(|oj| snapshot_open(id, &oj, "closed"));
+        let snap = self
+            .lock_jobs()
+            .remove(id)
+            .map(|oj| snapshot_open(id, &oj, "closed", self.cfg.speculate));
         match snap {
             Some(snap) => {
                 self.remember(snap);
@@ -868,14 +1142,24 @@ impl LeaseTable {
 
 /// Build a [`JobTelemetry`] snapshot from an in-memory [`OpenJob`].
 /// `held` lease counts are only meaningful while the job is `open`.
-fn snapshot_open(id: &str, oj: &OpenJob, state: &str) -> JobTelemetry {
+fn snapshot_open(id: &str, oj: &OpenJob, state: &str, speculate: Option<u32>) -> JobTelemetry {
     let terms_done: u128 = oj.completed.values().map(|r| r.terms as u128).sum();
     let mut workers = oj.workers.clone();
     if state == "open" {
-        for (worker, _) in oj.leases.values() {
-            workers.entry(worker.clone()).or_default().held += 1;
+        for entries in oj.leases.values() {
+            for e in entries {
+                workers.entry(e.worker.clone()).or_default().held += 1;
+            }
         }
     }
+    let calib = match (oj.geom, oj.calib) {
+        (Some((_, chunks)), _) => CalibState::Chosen { chunks },
+        (None, Some(want)) => CalibState::Measuring {
+            done: (0..want).filter(|i| oj.completed.contains_key(i)).count() as u64,
+            want,
+        },
+        (None, None) => CalibState::Off,
+    };
     let tps_milli = workers
         .values()
         .fold(0u64, |acc, row| acc.saturating_add(row.ewma_mtps));
@@ -892,6 +1176,8 @@ fn snapshot_open(id: &str, oj: &OpenJob, state: &str) -> JobTelemetry {
         terms_total: oj.total_terms,
         tps_milli,
         eta_ms,
+        speculate,
+        calib,
         workers: workers.into_iter().collect(),
     }
 }
@@ -916,6 +1202,18 @@ mod tests {
             clock.clone(),
         );
         (clock, table)
+    }
+
+    /// Like [`tmp_table`] but with the caller's full [`FleetConfig`]
+    /// and a registry, for the speculation / calibration tests.
+    fn tmp_table_cfg(tag: &str, cfg: FleetConfig) -> (Arc<SimClock>, Arc<Registry>, LeaseTable) {
+        let store =
+            JobStore::open(crate::testkit::scratch_dir(&format!("fleet-{tag}"))).unwrap();
+        let clock = SimClock::new();
+        let registry = Arc::new(Registry::new());
+        let table =
+            LeaseTable::with_clock(store, cfg, clock.clone()).with_registry(&registry);
+        (clock, registry, table)
     }
 
     fn submit_f64(table: &LeaseTable, seed: u64) -> String {
@@ -1348,5 +1646,208 @@ mod tests {
         // clock: journal appends are counted, with zero virtual latency.
         assert!(snap.get("fs_append_us_count").is_some_and(|v| v != "0"));
         assert_eq!(snap.get("fs_append_us_sum"), Some("0"));
+    }
+
+    #[test]
+    fn calibration_journals_geom_and_replans_the_remainder() {
+        let cfg = FleetConfig {
+            lease_ttl: Duration::from_secs(10),
+            default_chunks: 6,
+            calib_chunks: 2,
+            calib_target_ms: 500,
+            ..Default::default()
+        };
+        let (_clock, _registry, table) = tmp_table_cfg("calib", cfg);
+        let a = gen::integer(&mut TestRng::from_seed(81), 3, 9, -3, 3);
+        let id = table.submit(JobPayload::Exact(a), JobEngine::Prefix).unwrap();
+
+        // Measuring: grants stay inside the 2-chunk calibration prefix.
+        let g0 = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g0.chunk_index, 0);
+        let spec = g0.spec.clone().unwrap();
+        let snap = table.job_metrics(&id).unwrap();
+        assert_eq!(snap.calib, CalibState::Measuring { done: 0, want: 2 });
+        assert_eq!(snap.chunks_total, 6, "SPEC geometry until calibration ends");
+
+        // Reference: the identical spec swept on the base geometry in
+        // one process (integer composition is associative, so the
+        // re-chunked remainder cannot change the value).
+        let ref_store =
+            JobStore::open(crate::testkit::scratch_dir("fleet-calib-ref")).unwrap();
+        let rid = ref_store.create(&spec).unwrap();
+        JobRunner::new(RunnerConfig::default()).run(&ref_store, &rid).unwrap();
+        let reference = ref_store.load(&rid).unwrap().done.unwrap();
+
+        table.complete("wa", &id, 0, compute(&spec, g0.chunk)).unwrap();
+        let g1 = match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g1.chunk_index, 1, "measurement pass fills the prefix in order");
+        table.complete("wa", &id, 1, compute(&spec, g1.chunk)).unwrap();
+
+        // The next grant finishes calibration: the GEOM record lands
+        // and the remainder is re-partitioned. `compute` stamps 1 µs
+        // per chunk, so the measured rate is absurdly fast and the
+        // whole remainder collapses into one chunk.
+        let g2 = match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g2.chunk_index, 2);
+        let snap = table.job_metrics(&id).unwrap();
+        assert_eq!(snap.calib, CalibState::Chosen { chunks: 1 });
+        assert_eq!(snap.chunks_total, 3, "2 calibration chunks + 1 remainder");
+        assert!(table.events().iter().any(|e| e.kind == "calibrate"), "{:?}", table.events());
+
+        table.complete("wa", &id, 2, compute(&spec, g2.chunk)).unwrap();
+        let st = table.store().status(&id).unwrap();
+        assert!(st.complete);
+        assert_eq!(st.geom, Some((2, 1)));
+        assert_eq!(st.value.unwrap().encode(), reference.0.encode());
+
+        // The journal carries the chosen geometry and exactly one
+        // record per (re-chunked) plan index.
+        let records = Journal::replay(&table.store().journal_path(&id).unwrap()).unwrap();
+        assert!(records
+            .iter()
+            .any(|r| matches!(r, Record::Geom { calib: 2, chunks: 1 })));
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &records {
+            if let Record::Chunk { index, .. } = r {
+                assert!(seen.insert(*index), "chunk {index} journaled twice");
+            }
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn speculative_release_races_and_first_complete_wins() {
+        let cfg = FleetConfig {
+            lease_ttl: Duration::from_secs(10),
+            default_chunks: 2,
+            speculate: Some(2),
+            ..Default::default()
+        };
+        let (clock, registry, table) = tmp_table_cfg("speculate", cfg);
+        let id = submit_f64(&table, 82);
+        let ga = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ga.chunk_index, 0);
+        let spec = ga.spec.clone().unwrap();
+        let gb = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(gb.chunk_index, 1);
+        clock.advance(Duration::from_millis(5));
+        assert!(matches!(
+            table.complete("wb", &id, 1, compute(&spec, gb.chunk)).unwrap(),
+            CompleteOutcome::Accepted { finished: false, .. }
+        ));
+        // wa has produced no sample and its lease is young: nothing to
+        // speculate on yet.
+        assert!(matches!(
+            table.grant("wb", Some(id.as_str()), |_| false).unwrap(),
+            GrantOutcome::Idle
+        ));
+        // wa's renew reports a crawl — 10 terms in a full second — so
+        // the fleet median (wb's EWMA) is far beyond 2× wa's.
+        table.renew("wa", &id, 0, Some((10, 1_000_000))).unwrap();
+        let gs = match table.grant("wb", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(gs.chunk_index, 0, "straggler chunk re-leased speculatively");
+        let rec0 = compute(&spec, gs.chunk);
+        assert!(matches!(
+            table.complete("wb", &id, 0, rec0.clone()).unwrap(),
+            CompleteOutcome::Accepted { finished: true, .. }
+        ));
+        // The original holder's late delivery is a harmless duplicate
+        // of the finished job — nothing journaled.
+        assert!(matches!(
+            table.complete("wa", &id, 0, rec0).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+
+        let snap = registry.snapshot();
+        assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+        assert_eq!(snap.get("fleet_release_wins_total"), Some("1"));
+        assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+        let kinds: Vec<String> = table.events().into_iter().map(|e| e.kind).collect();
+        assert!(kinds.iter().any(|k| k == "release_grant"), "{kinds:?}");
+        assert!(kinds.iter().any(|k| k == "release_win"), "{kinds:?}");
+        assert_eq!(table.job_metrics(&id).unwrap().speculate, Some(2));
+
+        // Chunk conservation despite the double grant: one journaled
+        // record per plan index.
+        let records = Journal::replay(&table.store().journal_path(&id).unwrap()).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &records {
+            if let Record::Chunk { index, .. } = r {
+                assert!(seen.insert(*index), "chunk {index} journaled twice");
+            }
+        }
+        assert_eq!(seen.len(), 2);
+        assert!(table.store().status(&id).unwrap().complete);
+    }
+
+    #[test]
+    fn duplicate_attribution_requires_participation() {
+        let (_clock, table) = tmp_table("dup-attrib", Duration::from_secs(10));
+        let id = submit_f64(&table, 83);
+        let mut spec: Option<JobSpec> = None;
+        let mut rec0: Option<ChunkRecord> = None;
+        loop {
+            let g = match table.grant("wa", Some(id.as_str()), |_| spec.is_none()).unwrap() {
+                GrantOutcome::Granted(g) => g,
+                GrantOutcome::Complete => break,
+                other => panic!("{other:?}"),
+            };
+            if let Some(s) = g.spec {
+                spec = Some(s);
+            }
+            let rec = compute(spec.as_ref().unwrap(), g.chunk);
+            rec0.get_or_insert_with(|| rec.clone());
+            table.complete("wa", &id, g.chunk_index, rec).unwrap();
+        }
+        let rec0 = rec0.unwrap();
+        // A sender that never participated retries against the finished
+        // job: acknowledged idempotently, but no telemetry row is
+        // invented for it.
+        assert!(matches!(
+            table.complete("wz", &id, 0, rec0.clone()).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+        let snap = table.job_metrics(&id).unwrap();
+        assert!(snap.workers.iter().all(|(w, _)| w != "wz"), "{snap:?}");
+        // The actual participant's retry *is* attributed.
+        assert!(matches!(
+            table.complete("wa", &id, 0, rec0.clone()).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+        assert_eq!(row(&table.job_metrics(&id).unwrap(), "wa").duplicates, 1);
+
+        // Same rule inside an open job whose chunk was journaled before
+        // this table opened it (completer identity not persisted): the
+        // duplicate is acknowledged without attributing anyone.
+        let store = table.store().clone();
+        let id2 = store.create(spec.as_ref().unwrap()).unwrap();
+        JobRunner::new(RunnerConfig { workers: 1, chunk_budget: Some(1) })
+            .run(&store, &id2)
+            .unwrap();
+        assert!(table.open(&id2).unwrap());
+        assert!(matches!(
+            table.complete("wz", &id2, 0, rec0).unwrap(),
+            CompleteOutcome::Duplicate { .. }
+        ));
+        let snap2 = table.job_metrics(&id2).unwrap();
+        assert!(snap2.workers.is_empty(), "{snap2:?}");
     }
 }

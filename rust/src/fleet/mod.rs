@@ -41,6 +41,7 @@ pub mod lease_table;
 pub mod worker;
 
 pub use lease_table::{
-    CompleteOutcome, FleetConfig, Grant, GrantOutcome, JobTelemetry, LeaseTable, WorkerRow,
+    CalibState, CompleteOutcome, FleetConfig, Grant, GrantOutcome, JobTelemetry, LeaseTable,
+    WorkerRow,
 };
 pub use worker::{run_worker, run_worker_with, Worker, WorkerConfig, WorkerEvent, WorkerReport};

@@ -66,6 +66,12 @@ pub struct WorkerConfig {
     /// completed, nor abandoned, exactly like a worker crash. The
     /// server must recover it by TTL expiry.
     pub crash_after_grants: Option<u64>,
+    /// Slowness injection for straggler drills (`--throttle-ms`): sleep
+    /// this long on the worker's clock inside every chunk's compute
+    /// span, so the server-side throughput EWMA attributes the slowness
+    /// to this worker and speculative re-lease can single it out. The
+    /// deterministic sim injects slowness via network latency instead.
+    pub throttle: Option<Duration>,
 }
 
 impl WorkerConfig {
@@ -80,6 +86,7 @@ impl WorkerConfig {
             max_chunks: None,
             renew_every: Duration::from_secs(5),
             crash_after_grants: None,
+            throttle: None,
         }
     }
 }
@@ -318,6 +325,11 @@ impl Worker {
         let outcome =
             cj.runner
                 .run_chunk(cj.spec.payload.as_lease(), &cj.table, Chunk { start, len });
+        if let Some(d) = self.cfg.throttle {
+            // Inside the compute span on purpose: the slowness must be
+            // visible in this chunk's reported micros.
+            self.clock.sleep(d);
+        }
         let micros = self.clock.now().saturating_sub(t0).as_micros() as u64;
         *self.held.lock().expect("held lease poisoned") = None;
         match outcome {

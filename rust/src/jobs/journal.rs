@@ -8,9 +8,18 @@
 //! ```text
 //! raddet-job-journal v1
 //! SPEC <f64|exact|big> <cpu|prefix> <batch> <chunks> <m> <n> <v1,v2,…> <crc>
+//! GEOM <calib> <chunks> <crc>
 //! CHUNK <index> <terms> <micros> <value> <crc>
 //! DONE <terms> <value> <crc>
 //! ```
+//!
+//! GEOM is optional (at most one, only after SPEC): it records the
+//! chunk geometry the fleet's calibration pass chose — keep the first
+//! `<calib>` chunks of the SPEC-derived plan, re-partition the rest of
+//! the rank space into `<chunks>` block-aligned pieces
+//! ([`crate::jobs::plan_dims_geom`]). Because the decision is journaled
+//! rather than recomputed from timing, resume and replay reproduce the
+//! adapted geometry (and therefore the composed bits) exactly.
 //!
 //! The first SPEC field is the job's scalar tag
 //! ([`crate::scalar::ScalarKind`]): the i128 path is written with its
@@ -49,6 +58,11 @@ use std::path::{Path, PathBuf};
 /// First line of every journal file.
 pub const MAGIC: &str = "raddet-job-journal v1";
 
+/// Upper bound on a GEOM record's remainder chunk count — an absurdity
+/// guard (the fleet never runs thousands of workers) that also bounds
+/// the plan a hostile journal/wire GEOM can make a reader allocate.
+pub const GEOM_MAX_CHUNKS: u64 = 4096;
+
 /// FNV-1a 64-bit — tiny, dependency-free record checksum.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -64,6 +78,17 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 pub enum Record {
     /// The job spec (always the first record; written once at create).
     Spec(JobSpec),
+    /// Calibrated chunk geometry (at most one, only after SPEC): the
+    /// final plan keeps the first `calib` chunks of the SPEC-derived
+    /// plan and re-partitions the remaining rank space into `chunks`
+    /// block-aligned pieces ([`crate::jobs::plan_dims_geom`]).
+    Geom {
+        /// SPEC-plan chunks kept as the calibration prefix (every
+        /// chunk journaled before GEOM has index below this).
+        calib: u64,
+        /// Target chunk count for the re-partitioned remainder.
+        chunks: u64,
+    },
     /// A completed chunk lease.
     Chunk {
         /// Index into the spec's deterministic chunk plan.
@@ -122,6 +147,7 @@ pub fn parse_spec_body(body: &str) -> Result<JobSpec> {
 fn encode_body(rec: &Record) -> String {
     match rec {
         Record::Spec(spec) => encode_spec_body(spec),
+        Record::Geom { calib, chunks } => format!("GEOM {calib} {chunks}"),
         Record::Chunk { index, rec } => format!(
             "CHUNK {index} {} {} {}",
             rec.terms,
@@ -207,6 +233,20 @@ fn parse_record_body(body: &str) -> Result<Record> {
             };
             Ok(Record::Spec(JobSpec { payload, engine, chunks, batch }))
         }
+        Some("GEOM") => {
+            let calib: u64 = parse_u(toks.next(), "geom calib")?;
+            let chunks: u64 = parse_u(toks.next(), "geom chunks")?;
+            if toks.next().is_some() {
+                return Err(bad("trailing GEOM tokens"));
+            }
+            if calib == 0 {
+                return Err(bad("geom calib must be ≥ 1"));
+            }
+            if chunks == 0 || chunks > GEOM_MAX_CHUNKS {
+                return Err(bad("geom chunk count out of range"));
+            }
+            Ok(Record::Geom { calib, chunks })
+        }
         Some("CHUNK") => {
             let index: u64 = parse_u(toks.next(), "chunk index")?;
             let terms: u64 = parse_u(toks.next(), "chunk terms")?;
@@ -253,6 +293,13 @@ pub struct SpecMeta {
 pub enum MetaRecord {
     /// SPEC header.
     Spec(SpecMeta),
+    /// Calibrated chunk geometry (parsed in full).
+    Geom {
+        /// SPEC-plan chunks kept as the calibration prefix.
+        calib: u64,
+        /// Target chunk count for the re-partitioned remainder.
+        chunks: u64,
+    },
     /// A completed chunk lease (parsed in full).
     Chunk {
         /// Index into the chunk plan.
@@ -275,6 +322,7 @@ fn parse_record_meta(line: &str) -> Result<MetaRecord> {
         // CHUNK/DONE are cheap — parse them in full via the one shared
         // body parser so the two replay modes cannot drift.
         return match parse_record_body(body)? {
+            Record::Geom { calib, chunks } => Ok(MetaRecord::Geom { calib, chunks }),
             Record::Chunk { index, rec } => Ok(MetaRecord::Chunk { index, rec }),
             Record::Done { terms, value } => Ok(MetaRecord::Done { terms, value }),
             Record::Spec(_) => unreachable!("body does not start with SPEC"),
@@ -710,8 +758,7 @@ fn fsck_bytes(data: &[u8]) -> FsckReport {
     let mut pos = 0usize;
     let mut ordinal = 0usize;
     let mut first = true;
-    let mut seen_spec = false;
-    let mut plan_len: Option<usize> = None;
+    let mut state = StructureState::default();
     while pos < data.len() {
         let (end, terminated) = match data[pos..].iter().position(|&b| b == b'\n') {
             Some(rel) => (pos + rel, true),
@@ -736,11 +783,11 @@ fn fsck_bytes(data: &[u8]) -> FsckReport {
             Some(_) if !terminated => Err("unterminated record (torn write)".into()),
             Some(l) => parse_record(l)
                 .map_err(|e| cause_of(&e))
-                .and_then(|rec| check_structure(&rec, ordinal, &mut seen_spec, &mut plan_len)),
+                .and_then(|rec| check_structure(&rec, ordinal, &mut state)),
         };
         let tag = line
             .map(|l| l.split(' ').next().unwrap_or("?"))
-            .filter(|t| matches!(*t, "SPEC" | "CHUNK" | "DONE"))
+            .filter(|t| matches!(*t, "SPEC" | "GEOM" | "CHUNK" | "DONE"))
             .unwrap_or("?")
             .to_string();
         match verdict {
@@ -788,44 +835,81 @@ fn fsck_bytes(data: &[u8]) -> FsckReport {
     report
 }
 
+/// Structural state the fsck walk threads record to record.
+#[derive(Default)]
+struct StructureState {
+    /// `(m, n, target chunks)` from the SPEC — enough to re-derive the
+    /// plan when a GEOM record changes the geometry mid-journal.
+    dims: Option<(usize, usize, usize)>,
+    /// Chunk count of the current plan (SPEC-derived, then GEOM'd).
+    plan_len: Option<usize>,
+    /// A GEOM record was seen (at most one is legal).
+    geom_seen: bool,
+    /// Highest chunk index journaled so far — a later GEOM must keep
+    /// every one of them inside its calibration prefix.
+    max_chunk: Option<u64>,
+}
+
 /// Structural validity on top of per-record checksums: SPEC first and
-/// only once, chunk indices inside the spec's plan — the same rules the
-/// replay fold enforces, applied record-at-a-time so fsck can keep
-/// walking past the first violation.
+/// only once, at most one GEOM whose calibration prefix covers every
+/// chunk already journaled, chunk indices inside the current plan —
+/// the same rules the replay fold enforces, applied record-at-a-time
+/// so fsck can keep walking past the first violation.
 fn check_structure(
     rec: &Record,
     ordinal: usize,
-    seen_spec: &mut bool,
-    plan_len: &mut Option<usize>,
+    state: &mut StructureState,
 ) -> std::result::Result<(), String> {
     match rec {
         Record::Spec(spec) => {
-            if *seen_spec {
+            if state.dims.is_some() {
                 return Err("duplicate SPEC record".into());
             }
             if ordinal != 1 {
                 return Err("SPEC is not the first record".into());
             }
-            *seen_spec = true;
+            let (m, n) = spec.shape();
+            state.dims = Some((m, n, spec.chunks));
             match spec.plan() {
-                Ok((plan, _)) => *plan_len = Some(plan.len()),
+                Ok((plan, _)) => state.plan_len = Some(plan.len()),
                 Err(e) => return Err(format!("unplannable spec: {e}")),
             }
             Ok(())
         }
+        Record::Geom { calib, chunks } => {
+            let Some((m, n, base_chunks)) = state.dims else {
+                return Err("record before SPEC".into());
+            };
+            if state.geom_seen {
+                return Err("duplicate GEOM record".into());
+            }
+            if state.max_chunk.is_some_and(|mx| mx >= *calib) {
+                return Err(format!(
+                    "chunk index {} outside GEOM calibration prefix of {calib}",
+                    state.max_chunk.unwrap_or(0)
+                ));
+            }
+            match super::plan_dims_geom(m, n, base_chunks, Some((*calib, *chunks))) {
+                Ok((plan, _)) => state.plan_len = Some(plan.len()),
+                Err(e) => return Err(format!("bad GEOM geometry: {e}")),
+            }
+            state.geom_seen = true;
+            Ok(())
+        }
         Record::Chunk { index, .. } => {
-            if !*seen_spec {
+            if state.dims.is_none() {
                 return Err("record before SPEC".into());
             }
-            match plan_len {
-                Some(pl) if *index as usize >= *pl => {
+            state.max_chunk = Some(state.max_chunk.map_or(*index, |mx| mx.max(*index)));
+            match state.plan_len {
+                Some(pl) if *index as usize >= pl => {
                     Err(format!("chunk index {index} outside plan of {pl}"))
                 }
                 _ => Ok(()),
             }
         }
         Record::Done { .. } => {
-            if !*seen_spec {
+            if state.dims.is_none() {
                 return Err("record before SPEC".into());
             }
             Ok(())
@@ -947,6 +1031,101 @@ mod tests {
             MetaRecord::Spec(s) => assert_eq!(s.scalar, ScalarKind::I128),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn geom_record_roundtrips_and_meta_matches() {
+        // sample_spec is 2×5 (10 terms), chunks 4 → block-aligned base
+        // plan of 3 chunks; GEOM keeps chunk 0 and re-splits the rest.
+        let path = tmp("geom");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        j.append(&Record::Chunk {
+            index: 0,
+            rec: ChunkRecord { value: JobValue::F64(1.0), terms: 4, micros: 2 },
+        })
+        .unwrap();
+        j.append(&Record::Geom { calib: 1, chunks: 2 }).unwrap();
+        let records = Journal::replay(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[2], Record::Geom { calib: 1, chunks: 2 });
+        let meta = Journal::replay_meta(&path).unwrap();
+        assert_eq!(meta[2], MetaRecord::Geom { calib: 1, chunks: 2 });
+    }
+
+    #[test]
+    fn hostile_geom_lines_fail_loudly() {
+        // Each malformed GEOM sits *interior* (a DONE follows) so the
+        // replay can't write it off as a torn tail.
+        let spec_body = encode_spec_body(&sample_spec());
+        let done_body = "DONE 10 f64:0000000000000000";
+        for (geom_body, why) in [
+            ("GEOM 0 4", "calib 0"),
+            ("GEOM 1 0", "chunks 0"),
+            ("GEOM 1 5000", "chunks past cap"),
+            ("GEOM 1", "missing chunks"),
+            ("GEOM 1 2 junk", "trailing tokens"),
+            ("GEOM x 2", "non-numeric calib"),
+        ] {
+            let path = tmp(&format!("geom-hostile-{}", fnv1a64(geom_body.as_bytes())));
+            let mut text = format!("{MAGIC}\n");
+            for body in [spec_body.as_str(), geom_body, done_body] {
+                text.push_str(&format!("{body} {:016x}\n", fnv1a64(body.as_bytes())));
+            }
+            std::fs::write(&path, text).unwrap();
+            match Journal::replay(&path).unwrap_err() {
+                Error::JournalCorrupt { record: 2, .. } => {}
+                other => panic!("{why}: want corrupt record 2, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fsck_flags_geom_structural_damage() {
+        // Duplicate GEOM.
+        let path = tmp("fsck-geom-dup");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        j.append(&Record::Geom { calib: 1, chunks: 2 }).unwrap();
+        j.append(&Record::Geom { calib: 1, chunks: 2 }).unwrap();
+        drop(j);
+        let report = Journal::fsck(&path).unwrap();
+        match &report.damage {
+            Some(FsckDamage::Corrupt { record: 3, cause }) => {
+                assert!(cause.contains("duplicate GEOM"), "{cause}")
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // A chunk journaled outside the later GEOM's calibration prefix.
+        let path = tmp("fsck-geom-prefix");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        j.append(&Record::Chunk {
+            index: 2,
+            rec: ChunkRecord { value: JobValue::F64(1.0), terms: 3, micros: 1 },
+        })
+        .unwrap();
+        j.append(&Record::Geom { calib: 1, chunks: 2 }).unwrap();
+        drop(j);
+        let report = Journal::fsck(&path).unwrap();
+        match &report.damage {
+            Some(FsckDamage::Corrupt { record: 3, cause }) => {
+                assert!(cause.contains("calibration prefix"), "{cause}")
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // A calibration prefix larger than the base plan (3 chunks).
+        let path = tmp("fsck-geom-calib");
+        let mut j = Journal::create(&path, &sample_spec()).unwrap();
+        j.append(&Record::Geom { calib: 9, chunks: 2 }).unwrap();
+        drop(j);
+        let report = Journal::fsck(&path).unwrap();
+        match &report.damage {
+            Some(FsckDamage::Corrupt { record: 2, cause }) => {
+                assert!(cause.contains("bad GEOM geometry"), "{cause}")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(report.records.iter().any(|r| r.tag == "GEOM"));
     }
 
     #[test]

@@ -44,13 +44,16 @@ pub mod store;
 pub use fs::{FaultConfig, FaultFs, FaultTallies, Fs, FsFile, MeteredFs, RealFs};
 pub use journal::{
     encode_spec_body, parse_spec_body, quarantine_path, FsckDamage, FsckRecord, FsckReport,
-    Journal, MetaRecord, Record, SpecMeta,
+    Journal, MetaRecord, Record, SpecMeta, GEOM_MAX_CHUNKS,
 };
 pub use manager::JobManager;
 pub use runner::{JobOutcome, JobRunner, RunnerConfig};
 pub use store::{valid_id, JobStatus, JobStore, LoadedJob, RunLock};
 
-use crate::combin::{combination_count, partition_total_block_aligned, Chunk, PascalTable};
+use crate::combin::{
+    combination_count, partition_range_block_aligned, partition_total_block_aligned, Chunk,
+    PascalTable,
+};
 use crate::linalg::NeumaierSum;
 use crate::matrix::{MatF64, MatI64};
 use crate::scalar::{BigInt, Scalar, ScalarKind};
@@ -218,6 +221,47 @@ pub fn plan_dims(m: usize, n: usize, chunks: usize) -> Result<(Vec<Chunk>, u128)
     let table = PascalTable::new(n as u64, m as u64)?;
     let aligned = partition_total_block_aligned(total, chunks.max(1), &table)?;
     let plan: Vec<Chunk> = aligned.into_iter().filter(|c| c.len > 0).collect();
+    Ok((plan, total))
+}
+
+/// Deterministic chunk plan for an `(m, n)` job whose journal carries a
+/// GEOM record `(calib, rechunks)`: the first `calib` chunks of the
+/// SPEC-derived [`plan_dims`] plan are kept verbatim (their journaled
+/// partials stay valid) and the remaining rank space is re-partitioned
+/// into `rechunks` block-aligned pieces
+/// ([`crate::combin::partition_range_block_aligned`], empty pieces
+/// dropped). `geom == None` is exactly [`plan_dims`].
+///
+/// This is the **one** geometry resolver: resume, status, fsck and the
+/// fleet's lease table all derive their plans here, so a journaled
+/// chunk index always denotes the same rank range everywhere.
+pub fn plan_dims_geom(
+    m: usize,
+    n: usize,
+    chunks: usize,
+    geom: Option<(u64, u64)>,
+) -> Result<(Vec<Chunk>, u128)> {
+    let (base, total) = plan_dims(m, n, chunks)?;
+    let Some((calib, rechunks)) = geom else {
+        return Ok((base, total));
+    };
+    if calib == 0 || calib as usize > base.len() {
+        return Err(Error::Job(format!(
+            "geometry: calibration prefix {calib} outside plan of {}",
+            base.len()
+        )));
+    }
+    if rechunks == 0 || rechunks > GEOM_MAX_CHUNKS {
+        return Err(Error::Job(format!(
+            "geometry: remainder chunk count {rechunks} out of range (1..={GEOM_MAX_CHUNKS})"
+        )));
+    }
+    let mut plan: Vec<Chunk> = base[..calib as usize].to_vec();
+    let prefix_end = plan.last().map_or(0, |c| c.end());
+    let table = PascalTable::new(n as u64, m as u64)?;
+    let rest =
+        partition_range_block_aligned(prefix_end, total, rechunks as usize, &table)?;
+    plan.extend(rest.into_iter().filter(|c| c.len > 0));
     Ok((plan, total))
 }
 
@@ -402,6 +446,56 @@ mod tests {
         let table = PascalTable::new(12, 4).unwrap();
         for c in &p1 {
             assert_eq!(crate::combin::block_start(&table, c.start).unwrap(), c.start);
+        }
+    }
+
+    #[test]
+    fn geom_plan_keeps_prefix_and_covers_exactly() {
+        let (m, n) = (4usize, 12usize);
+        let (base, total) = plan_dims(m, n, 10).unwrap();
+        assert_eq!(plan_dims_geom(m, n, 10, None).unwrap().0, base);
+        let table = PascalTable::new(n as u64, m as u64).unwrap();
+        for calib in 1..=base.len() as u64 {
+            for rechunks in [1u64, 4, 16] {
+                let (plan, t) =
+                    plan_dims_geom(m, n, 10, Some((calib, rechunks))).unwrap();
+                assert_eq!(t, total);
+                assert_eq!(&plan[..calib as usize], &base[..calib as usize]);
+                let mut cursor = 0u128;
+                for c in &plan {
+                    assert_eq!(c.start, cursor, "calib={calib} rechunks={rechunks}");
+                    assert!(c.len > 0);
+                    cursor = c.end();
+                }
+                assert_eq!(cursor, total, "calib={calib} rechunks={rechunks}");
+                // Remainder boundaries sit on block starts (or the
+                // calibration prefix edge).
+                let prefix_end = base[calib as usize - 1].end();
+                for c in &plan[calib as usize..] {
+                    if c.start > prefix_end {
+                        assert_eq!(
+                            crate::combin::block_start(&table, c.start).unwrap(),
+                            c.start
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn geom_plan_rejects_out_of_range_geometry() {
+        let (base, _) = plan_dims(4, 12, 10).unwrap();
+        for geom in [
+            (0u64, 4u64),
+            (base.len() as u64 + 1, 4),
+            (1, 0),
+            (1, GEOM_MAX_CHUNKS + 1),
+        ] {
+            assert!(
+                plan_dims_geom(4, 12, 10, Some(geom)).is_err(),
+                "{geom:?} must be rejected"
+            );
         }
     }
 

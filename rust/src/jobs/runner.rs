@@ -246,6 +246,7 @@ impl JobRunner {
             terms_total: job.total_terms,
             complete: done_value.is_some(),
             value: done_value,
+            geom: job.geom,
         };
         let interrupted = !status.complete;
         Ok(JobOutcome {

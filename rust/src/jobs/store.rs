@@ -12,7 +12,7 @@
 
 use super::fs::{self, Fs};
 use super::journal::{FsckReport, Journal, MetaRecord, Record};
-use super::{plan_dims, ChunkRecord, JobSpec, JobValue};
+use super::{plan_dims, plan_dims_geom, ChunkRecord, JobSpec, JobValue};
 use crate::clock::{self, Clock};
 use crate::combin::Chunk;
 use crate::{Error, Result};
@@ -52,11 +52,15 @@ pub struct LoadedJob {
     pub id: String,
     /// The spec as journaled at create time.
     pub spec: JobSpec,
-    /// Deterministic chunk plan (derived from the spec; indices match
-    /// journaled CHUNK records).
+    /// Deterministic chunk plan (derived from the spec, re-shaped by
+    /// the GEOM record when one is journaled; indices match journaled
+    /// CHUNK records).
     pub plan: Vec<Chunk>,
     /// Total Radić terms `C(n,m)`.
     pub total_terms: u128,
+    /// The journaled GEOM geometry `(calib, rechunks)`, if the fleet's
+    /// calibration pass re-chunked this job.
+    pub geom: Option<(u64, u64)>,
     /// Journaled chunk partials, keyed by plan index.
     pub completed: BTreeMap<u64, ChunkRecord>,
     /// The DONE record, if the job finished.
@@ -68,6 +72,7 @@ pub struct LoadedJob {
 /// fold and cannot drift.
 enum TailEvent {
     Spec,
+    Geom(u64, u64),
     Chunk(u64, ChunkRecord),
     Done(JobValue, u128),
 }
@@ -76,6 +81,7 @@ impl From<Record> for TailEvent {
     fn from(r: Record) -> TailEvent {
         match r {
             Record::Spec(_) => TailEvent::Spec,
+            Record::Geom { calib, chunks } => TailEvent::Geom(calib, chunks),
             Record::Chunk { index, rec } => TailEvent::Chunk(index, rec),
             Record::Done { terms, value } => TailEvent::Done(value, terms),
         }
@@ -86,27 +92,45 @@ impl From<MetaRecord> for TailEvent {
     fn from(r: MetaRecord) -> TailEvent {
         match r {
             MetaRecord::Spec(_) => TailEvent::Spec,
+            MetaRecord::Geom { calib, chunks } => TailEvent::Geom(calib, chunks),
             MetaRecord::Chunk { index, rec } => TailEvent::Chunk(index, rec),
             MetaRecord::Done { terms, value } => TailEvent::Done(value, terms),
         }
     }
 }
 
-/// Fold the post-SPEC tail: duplicate SPECs and out-of-plan chunk
-/// indices are corruption — reported as typed
+/// What [`fold_tail`] reduced the post-SPEC records to.
+struct FoldedTail {
+    completed: BTreeMap<u64, ChunkRecord>,
+    done: Option<(JobValue, u128)>,
+    geom: Option<(u64, u64)>,
+    /// Plan length after any GEOM re-chunking (the SPEC-derived length
+    /// when no GEOM was journaled).
+    plan_len: usize,
+}
+
+/// Fold the post-SPEC tail: duplicate SPECs, out-of-plan chunk indices
+/// and invalid GEOM records are corruption — reported as typed
 /// [`Error::JournalCorrupt`] carrying the 1-based record ordinal (tail
 /// events start at record 2, after the SPEC) so `job fsck` can point at
-/// the damaged line. A re-journaled chunk (a resume that re-ran a chunk
-/// whose record was torn away) is harmless — values are deterministic,
-/// so the rewrite is identical. Concurrent runners are excluded by
-/// [`JobStore::lock_job`].
+/// the damaged line. A GEOM record switches the plan from the
+/// SPEC-derived geometry to [`plan_dims_geom`]'s mid-fold — every chunk
+/// journaled before it must sit inside its calibration prefix, where
+/// the two plans agree. A re-journaled chunk (a resume that re-ran a
+/// chunk whose record was torn away) is harmless — values are
+/// deterministic, so the rewrite is identical. Concurrent runners are
+/// excluded by [`JobStore::lock_job`].
 fn fold_tail(
     id: &str,
-    plan_len: usize,
+    dims: (usize, usize, usize),
+    base_plan_len: usize,
     tail: impl Iterator<Item = TailEvent>,
-) -> Result<(BTreeMap<u64, ChunkRecord>, Option<(JobValue, u128)>)> {
-    let mut completed = BTreeMap::new();
+) -> Result<FoldedTail> {
+    let (m, n, base_chunks) = dims;
+    let mut completed: BTreeMap<u64, ChunkRecord> = BTreeMap::new();
     let mut done = None;
+    let mut geom = None;
+    let mut plan_len = base_plan_len;
     for (i, ev) in tail.enumerate() {
         let record = i + 2;
         match ev {
@@ -115,6 +139,31 @@ fn fold_tail(
                     record,
                     cause: format!("job {id}: duplicate SPEC record"),
                 })
+            }
+            TailEvent::Geom(calib, rechunks) => {
+                if geom.is_some() {
+                    return Err(Error::JournalCorrupt {
+                        record,
+                        cause: format!("job {id}: duplicate GEOM record"),
+                    });
+                }
+                if let Some((&mx, _)) = completed.last_key_value() {
+                    if mx >= calib {
+                        return Err(Error::JournalCorrupt {
+                            record,
+                            cause: format!(
+                                "job {id}: chunk index {mx} outside GEOM calibration prefix of {calib}"
+                            ),
+                        });
+                    }
+                }
+                let (plan, _) = plan_dims_geom(m, n, base_chunks, Some((calib, rechunks)))
+                    .map_err(|e| Error::JournalCorrupt {
+                        record,
+                        cause: format!("job {id}: bad GEOM geometry: {e}"),
+                    })?;
+                plan_len = plan.len();
+                geom = Some((calib, rechunks));
             }
             TailEvent::Chunk(index, rec) => {
                 if index as usize >= plan_len {
@@ -130,7 +179,7 @@ fn fold_tail(
             TailEvent::Done(value, terms) => done = Some((value, terms)),
         }
     }
-    Ok((completed, done))
+    Ok(FoldedTail { completed, done, geom, plan_len })
 }
 
 impl LoadedJob {
@@ -143,14 +192,23 @@ impl LoadedJob {
             _ => return Err(Error::Job(format!("job {id}: journal has no SPEC record"))),
         };
         let (plan, total_terms) = spec.plan()?;
-        let (completed, done) = fold_tail(id, plan.len(), it.map(TailEvent::from))?;
+        let (m, n) = spec.shape();
+        let folded =
+            fold_tail(id, (m, n, spec.chunks), plan.len(), it.map(TailEvent::from))?;
+        // A journaled GEOM re-shapes the plan; fold_tail already
+        // validated the geometry and the calibration prefix.
+        let plan = match folded.geom {
+            Some(g) => plan_dims_geom(m, n, spec.chunks, Some(g))?.0,
+            None => plan,
+        };
         Ok(LoadedJob {
             id: id.to_string(),
             spec,
             plan,
             total_terms,
-            completed,
-            done,
+            geom: folded.geom,
+            completed: folded.completed,
+            done: folded.done,
         })
     }
 
@@ -165,6 +223,7 @@ impl LoadedJob {
             terms_total: self.total_terms,
             complete: self.done.is_some(),
             value: self.done.as_ref().map(|(v, _)| v.clone()),
+            geom: self.geom,
         }
     }
 }
@@ -187,6 +246,8 @@ pub struct JobStatus {
     pub complete: bool,
     /// Composed determinant (when complete).
     pub value: Option<JobValue>,
+    /// Journaled GEOM geometry `(calib, rechunks)`, if calibrated.
+    pub geom: Option<(u64, u64)>,
 }
 
 impl JobStatus {
@@ -242,8 +303,12 @@ impl Drop for RunLock {
 /// the SPEC record never changes after create.
 #[derive(Clone, Copy, Debug)]
 struct SpecCacheEntry {
-    /// Byte offset where tail (CHUNK/DONE) records begin.
+    /// Byte offset where tail (GEOM/CHUNK/DONE) records begin.
     tail_offset: u64,
+    /// `(m, n, target chunks)` — the tail fold re-derives the plan from
+    /// these when a GEOM record re-chunks the job.
+    dims: (usize, usize, usize),
+    /// SPEC-derived plan length (before any GEOM).
     plan_len: usize,
     terms_total: u128,
 }
@@ -410,6 +475,7 @@ impl JobStore {
                 let (plan, terms_total) = plan_dims(meta.m, meta.n, meta.chunks)?;
                 let e = SpecCacheEntry {
                     tail_offset,
+                    dims: (meta.m, meta.n, meta.chunks),
                     plan_len: plan.len(),
                     terms_total,
                 };
@@ -421,16 +487,22 @@ impl JobStore {
             }
         };
         let tail = Journal::replay_tail_with(self.fs.as_ref(), &path, entry.tail_offset)?;
-        let (completed, done) = fold_tail(id, entry.plan_len, tail.into_iter().map(TailEvent::from))?;
-        let terms_done: u128 = completed.values().map(|r| r.terms as u128).sum();
+        let folded = fold_tail(
+            id,
+            entry.dims,
+            entry.plan_len,
+            tail.into_iter().map(TailEvent::from),
+        )?;
+        let terms_done: u128 = folded.completed.values().map(|r| r.terms as u128).sum();
         Ok(JobStatus {
             id: id.to_string(),
-            chunks_done: completed.len(),
-            chunks_total: entry.plan_len,
+            chunks_done: folded.completed.len(),
+            chunks_total: folded.plan_len,
             terms_done,
             terms_total: entry.terms_total,
-            complete: done.is_some(),
-            value: done.map(|(v, _)| v),
+            complete: folded.done.is_some(),
+            value: folded.done.map(|(v, _)| v),
+            geom: folded.geom,
         })
     }
 
@@ -635,6 +707,70 @@ mod tests {
         let cold = JobStore::open(store.root()).unwrap();
         assert_matches_full(&cold);
         assert!(cold.status(&id).unwrap().complete);
+    }
+
+    #[test]
+    fn geom_journal_agrees_across_load_status_and_resume() {
+        let exact_spec = JobSpec {
+            payload: JobPayload::Exact(gen::integer(
+                &mut TestRng::from_seed(9),
+                3,
+                9,
+                -9,
+                9,
+            )),
+            engine: JobEngine::Prefix,
+            chunks: 6,
+            batch: 32,
+        };
+        // Reference: the same job swept on the base geometry (integer
+        // composition is associative, so geometry can't change the value).
+        let ref_store = tmp_store("geom-ref");
+        let rid = ref_store.create(&exact_spec).unwrap();
+        crate::jobs::JobRunner::new(crate::jobs::RunnerConfig::default())
+            .run(&ref_store, &rid)
+            .unwrap();
+        let reference = ref_store.load(&rid).unwrap().done.unwrap();
+
+        // Live job: one calibration chunk, then a GEOM re-chunk.
+        let store = tmp_store("geom-live");
+        let id = store.create(&exact_spec).unwrap();
+        crate::jobs::JobRunner::new(crate::jobs::RunnerConfig {
+            workers: 1,
+            chunk_budget: Some(1),
+        })
+        .run(&store, &id)
+        .unwrap();
+        {
+            let (mut j, _) = store.open_append(&id).unwrap();
+            j.append(&Record::Geom { calib: 1, chunks: 3 }).unwrap();
+        }
+        let job = store.load(&id).unwrap();
+        assert_eq!(job.geom, Some((1, 3)));
+        let base_plan = exact_spec.plan().unwrap().0;
+        assert_eq!(job.plan[0], base_plan[0], "calibration prefix untouched");
+        let light = store.status(&id).unwrap();
+        assert_eq!(light.chunks_total, job.plan.len());
+        assert_eq!(light.geom, Some((1, 3)));
+
+        // Resume honors the journaled geometry; value matches the
+        // base-geometry reference.
+        crate::jobs::JobRunner::new(crate::jobs::RunnerConfig::default())
+            .run(&store, &id)
+            .unwrap();
+        let done = store.load(&id).unwrap().done.unwrap();
+        assert_eq!(done.0.encode(), reference.0.encode());
+        assert_eq!(done.1, reference.1);
+
+        // Chunk conservation: every plan index journaled exactly once.
+        let records = Journal::replay(&store.journal_path(&id).unwrap()).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &records {
+            if let Record::Chunk { index, .. } = r {
+                assert!(seen.insert(*index), "chunk {index} journaled twice");
+            }
+        }
+        assert_eq!(seen.len(), job.plan.len());
     }
 
     #[test]

@@ -31,8 +31,12 @@
 //! → METRICS JOB <id>                     per-job fleet telemetry
 //! ← OK JOBMETRICS <id> <open|done|closed> <chunks_done> <chunks_total>
 //!                <terms_done> <terms_total> <tps_milli> <eta_ms|->
+//!                <speculate> <calib>
 //!                [<worker>:<held>:<completed>:<abandoned>:<expired>
 //!                 :<dup>:<ewma_mtps> …]
+//!   speculate: `-` (off) or `x<factor>` (factor in 1..=100)
+//!   calib:     `-` (off), `c<done>/<want>` (measuring the prefix),
+//!              or `g<chunks>` (GEOM chosen: remainder chunk count)
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
@@ -57,7 +61,7 @@
 //! all yield a protocol error (the server answers `ERR …` and lives on)
 //! instead of panicking the connection handler.
 
-use crate::fleet::{JobTelemetry, WorkerRow};
+use crate::fleet::{CalibState, JobTelemetry, WorkerRow};
 use crate::jobs::{encode_spec_body, parse_spec_body, valid_id};
 use crate::jobs::{JobEngine, JobPayload, JobSpec, JobValue};
 use crate::matrix::{Mat, MatF64, MatI64};
@@ -725,7 +729,7 @@ impl Response {
         }
         if let Some(rest) = line.strip_prefix("OK JOBMETRICS ") {
             let toks: Vec<&str> = rest.split(' ').collect();
-            if toks.len() < 8 {
+            if toks.len() < 10 {
                 return Err(Error::Protocol(format!("bad JOBMETRICS line {line:?}")));
             }
             let id = parse_job_id(toks[0])?;
@@ -746,8 +750,53 @@ impl Response {
             } else {
                 Some(num(toks[7], "eta_ms")?)
             };
+            let speculate = match toks[8] {
+                "-" => None,
+                tok => {
+                    let f = tok.strip_prefix('x').ok_or_else(|| {
+                        Error::Protocol(format!("bad speculate token {tok:?}"))
+                    })?;
+                    let f: u32 = f.parse().map_err(|e| {
+                        Error::Protocol(format!("bad speculate factor {tok:?}: {e}"))
+                    })?;
+                    if !(1..=100).contains(&f) {
+                        return Err(Error::Protocol(format!(
+                            "speculate factor {f} out of range (1..=100)"
+                        )));
+                    }
+                    Some(f)
+                }
+            };
+            let calib = match toks[9] {
+                "-" => CalibState::Off,
+                tok => {
+                    if let Some(rest) = tok.strip_prefix('c') {
+                        let (d, w) = rest.split_once('/').ok_or_else(|| {
+                            Error::Protocol(format!("bad calib token {tok:?}"))
+                        })?;
+                        let done = num(d, "calib done")?;
+                        let want = num(w, "calib want")?;
+                        if want == 0 || done > want {
+                            return Err(Error::Protocol(format!(
+                                "bad calib progress {tok:?}"
+                            )));
+                        }
+                        CalibState::Measuring { done, want }
+                    } else if let Some(rest) = tok.strip_prefix('g') {
+                        let chunks = num(rest, "calib chunks")?;
+                        if chunks == 0 {
+                            return Err(Error::Protocol(format!(
+                                "bad calib geometry {tok:?}"
+                            )));
+                        }
+                        CalibState::Chosen { chunks }
+                    } else {
+                        return Err(Error::Protocol(format!("bad calib token {tok:?}")));
+                    }
+                }
+            };
             let mut workers = Vec::new();
-            for tok in &toks[8..] {
+            for tok in &toks[10..] {
                 let fields: Vec<&str> = tok.split(':').collect();
                 if fields.len() != 7 {
                     return Err(Error::Protocol(format!("bad worker row {tok:?}")));
@@ -776,6 +825,8 @@ impl Response {
                 terms_total: wide(toks[5], "terms_total")?,
                 tps_milli: num(toks[6], "tps_milli")?,
                 eta_ms,
+                speculate,
+                calib,
                 workers,
             }));
         }
@@ -862,8 +913,16 @@ impl Response {
             }
             Response::JobMetrics(t) => {
                 let eta = t.eta_ms.map_or_else(|| "-".to_string(), |v| v.to_string());
+                let spec = t
+                    .speculate
+                    .map_or_else(|| "-".to_string(), |f| format!("x{f}"));
+                let calib = match t.calib {
+                    CalibState::Off => "-".to_string(),
+                    CalibState::Measuring { done, want } => format!("c{done}/{want}"),
+                    CalibState::Chosen { chunks } => format!("g{chunks}"),
+                };
                 let mut line = format!(
-                    "OK JOBMETRICS {} {} {} {} {} {} {} {eta}",
+                    "OK JOBMETRICS {} {} {} {} {} {} {} {eta} {spec} {calib}",
                     t.id,
                     t.state,
                     t.chunks_done,
@@ -1347,6 +1406,8 @@ mod tests {
                 terms_total: 495,
                 tps_milli: 250_000,
                 eta_ms: Some(1_500),
+                speculate: Some(3),
+                calib: CalibState::Measuring { done: 1, want: 2 },
                 workers: vec![
                     (
                         "w1".into(),
@@ -1374,6 +1435,21 @@ mod tests {
                 terms_total: 495,
                 tps_milli: 0,
                 eta_ms: None,
+                speculate: None,
+                calib: CalibState::Off,
+                workers: Vec::new(),
+            }),
+            Response::JobMetrics(JobTelemetry {
+                id: "job-z".into(),
+                state: "open".into(),
+                chunks_done: 2,
+                chunks_total: 9,
+                terms_done: 110,
+                terms_total: 495,
+                tps_milli: 42_000,
+                eta_ms: Some(9_000),
+                speculate: Some(100),
+                calib: CalibState::Chosen { chunks: 7 },
                 workers: Vec::new(),
             }),
         ] {
@@ -1391,11 +1467,21 @@ mod tests {
             "OK METRICS 1 UPPER=1",             // invalid metric name
             "OK METRICS 1 =1",                  // empty name
             "OK JOBMETRICS job-x open 1 2",     // truncated
-            "OK JOBMETRICS job-x limbo 1 2 3 4 5 -", // unknown state
-            "OK JOBMETRICS job-x open 1 2 3 4 5 x",  // bad eta
-            "OK JOBMETRICS job-x open 1 2 3 4 5 - w1:1:2",      // short row
-            "OK JOBMETRICS job-x open 1 2 3 4 5 - w1:1:2:3:4:5:x", // bad row field
-            "OK JOBMETRICS job-x open 1 2 3 4 5 - ../e:1:2:3:4:5:6", // hostile worker
+            "OK JOBMETRICS job-x open 1 2 3 4 5 -", // pre-speculation grammar, too short
+            "OK JOBMETRICS job-x limbo 1 2 3 4 5 - - -", // unknown state
+            "OK JOBMETRICS job-x open 1 2 3 4 5 x - -",  // bad eta
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - x0 -",   // speculate factor below range
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - x101 -", // speculate factor above range
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - xy -",   // non-numeric speculate factor
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - 3 -",    // missing x prefix
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - c3/2", // calib done > want
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - c1/0", // calib want zero
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - c1",   // calib missing slash
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - g0",   // zero-chunk geometry
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - q7",   // unknown calib tag
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - - w1:1:2",      // short row
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - - w1:1:2:3:4:5:x", // bad row field
+            "OK JOBMETRICS job-x open 1 2 3 4 5 - - - ../e:1:2:3:4:5:6", // hostile worker
         ] {
             assert!(Response::parse(bad).is_err(), "{bad:?} should fail");
         }

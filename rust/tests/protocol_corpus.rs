@@ -13,10 +13,14 @@
 //!   compute blind or crash.
 
 use raddet::clock;
+use raddet::combin::{Chunk, PascalTable};
 use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
-use raddet::fleet::{Worker, WorkerConfig, WorkerEvent};
+use raddet::fleet::{
+    CalibState, FleetConfig, JobTelemetry, Worker, WorkerConfig, WorkerEvent, WorkerRow,
+};
 use raddet::jobs::{JobEngine, JobManager, JobPayload, JobStore, JobValue};
-use raddet::service::{GrantReply, Server, ServerHandle, ScriptConn, ScriptTransport};
+use raddet::service::{GrantReply, Response, Server, ServerHandle, ScriptConn, ScriptTransport};
+use raddet::telemetry::Snapshot;
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
@@ -215,4 +219,175 @@ fn garbage_grant_reply_disconnects_the_worker() {
 fn nolease_complete_unpinned_is_idle() {
     let (mut worker, _log) = script_worker(&["OK NOLEASE complete"]);
     assert_eq!(worker.step().unwrap(), WorkerEvent::Idle);
+}
+
+/// Golden wire encodings for the speculation/calibration grammar: the
+/// `fleet_release_*` counter names (dashboards and the CI smoke grep
+/// for these exact strings) and the `JOBMETRICS` speculate/calib
+/// tokens. A renamed counter or re-ordered token is a breaking wire
+/// change and must show up here as a failing literal.
+#[test]
+fn release_counters_and_speculation_tokens_have_golden_encodings() {
+    let snap = Snapshot::from_pairs(vec![
+        ("fleet_release_grants_total".into(), "3".into()),
+        ("fleet_release_losses_total".into(), "2".into()),
+        ("fleet_release_wins_total".into(), "3".into()),
+    ]);
+    let r = Response::Metrics(snap);
+    assert_eq!(
+        r.encode(),
+        "OK METRICS 3 fleet_release_grants_total=3 \
+         fleet_release_losses_total=2 fleet_release_wins_total=3\n"
+    );
+    assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+
+    let mut t = JobTelemetry {
+        id: "job-r".into(),
+        state: "open".into(),
+        chunks_done: 2,
+        chunks_total: 3,
+        terms_done: 64,
+        terms_total: 84,
+        tps_milli: 42_000,
+        eta_ms: Some(9),
+        speculate: Some(2),
+        calib: CalibState::Chosen { chunks: 1 },
+        workers: vec![(
+            "w1".into(),
+            WorkerRow {
+                held: 1,
+                completed: 2,
+                duplicates: 1,
+                ewma_mtps: 42_000,
+                ..Default::default()
+            },
+        )],
+    };
+    let r = Response::JobMetrics(t.clone());
+    assert_eq!(
+        r.encode(),
+        "OK JOBMETRICS job-r open 2 3 64 84 42000 9 x2 g1 w1:1:2:0:0:1:42000\n"
+    );
+    assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+
+    // Every calibration lifecycle state has a pinned token.
+    for (calib, token) in [
+        (CalibState::Off, "-"),
+        (CalibState::Measuring { done: 1, want: 2 }, "c1/2"),
+        (CalibState::Chosen { chunks: 7 }, "g7"),
+    ] {
+        t.calib = calib;
+        let line = Response::JobMetrics(t.clone()).encode();
+        let toks: Vec<&str> = line.trim_end().split(' ').collect();
+        assert_eq!(toks[11], token, "{line:?}");
+        assert_eq!(Response::parse(&line).unwrap(), Response::JobMetrics(t.clone()));
+    }
+}
+
+/// The re-lease race on real sockets: a speculative duplicate loses to
+/// the original holder's first COMPLETE and gets a *hard* `ERR … was
+/// completed by another worker` on the wire — a typed refusal, not a
+/// duplicate ack, because the job is still open. The connection stays
+/// serviceable, nothing extra reaches the journal, and the release
+/// counters read 1/1/1 over `METRICS`.
+#[test]
+fn evicted_speculative_holder_complete_is_rejected_on_wire() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let dir = raddet::testkit::scratch_dir("corpus-release-race");
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    let handle = Server::with_jobs(coord, manager)
+        .with_fleet_config(FleetConfig {
+            default_chunks: 3,
+            default_batch: 32,
+            speculate: Some(2),
+            ..Default::default()
+        })
+        .start("127.0.0.1:0")
+        .unwrap();
+    let mut c = raddet::service::Client::connect(&handle.addr().to_string()).unwrap();
+
+    let a = raddet::matrix::gen::uniform(
+        &mut raddet::testkit::TestRng::from_seed(86),
+        3,
+        9,
+        -1.0,
+        1.0,
+    );
+    let id = c.job_submit_fleet(JobPayload::F64(a), JobEngine::Prefix).unwrap();
+
+    // Three worker identities over one connection: wa holds chunk 0,
+    // wb takes chunk 1, wc parks on the bystander chunk 2.
+    let mut grants = Vec::new();
+    let mut spec = None;
+    for w in ["wa", "wb", "wc"] {
+        match c.lease_grant(w, Some(&id)).unwrap() {
+            GrantReply::Lease { chunk, start, len, spec: s, .. } => {
+                spec = spec.or(s);
+                grants.push((chunk, start, len));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    let spec = spec.expect("first grant carries the spec");
+    assert_eq!(
+        grants.iter().map(|g| g.0).collect::<Vec<_>>(),
+        vec![0, 1, 2]
+    );
+    let (m, n) = spec.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let compute = |start, len| {
+        let (partial, wm) = spec
+            .runner()
+            .run_chunk(spec.payload.as_lease(), &table, Chunk { start, len })
+            .unwrap();
+        (wm.terms, JobValue::from(partial))
+    };
+
+    // wb finishes its chunk; wa heartbeats a glacial report (1 term in
+    // 10 s) — far enough below the fleet median that any realistic
+    // wall-clock span keeps wb the faster worker.
+    let (t1, v1) = compute(grants[1].1, grants[1].2);
+    c.lease_complete("wb", &id, 1, t1, 1, v1).unwrap();
+    c.lease_renew("wa", &id, 0, Some((1, 10_000_000))).unwrap();
+
+    // No free chunk (wc parks on 2) ⇒ wb's grant re-leases chunk 0.
+    match c.lease_grant("wb", Some(&id)).unwrap() {
+        GrantReply::Lease { chunk, .. } => assert_eq!(chunk, 0, "straggler chunk re-leased"),
+        other => panic!("{other:?}"),
+    }
+
+    // First COMPLETE wins: the slow original holder delivers first…
+    let (t0, v0) = compute(grants[0].1, grants[0].2);
+    let ack = c.lease_complete("wa", &id, 0, t0, 1, v0.clone()).unwrap();
+    assert!(!ack.duplicate);
+
+    // …and the evicted speculative holder gets the typed refusal.
+    let err = c.lease_complete("wb", &id, 0, t0, 1, v0).unwrap_err();
+    assert!(err.to_string().contains("was completed by another worker"), "{err}");
+    c.ping().expect("connection survives the rejection");
+
+    // The rejection journaled nothing: chunk 2 is still the only gap.
+    let st = c.job_status(&id).unwrap();
+    assert_eq!(st.chunks_done, 2, "{st:?}");
+
+    let (t2, v2) = compute(grants[2].1, grants[2].2);
+    let ack = c.lease_complete("wc", &id, 2, t2, 1, v2).unwrap();
+    assert_eq!(ack.chunks_done, ack.chunks_total);
+
+    let telemetry = c.job_metrics(&id).unwrap();
+    assert_eq!(telemetry.state, "done");
+    assert_eq!(telemetry.speculate, Some(2));
+    let snap = c.metrics().unwrap();
+    assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_wins_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+    c.quit();
+    handle.stop();
 }

@@ -22,7 +22,8 @@ use raddet::clock::SimClock;
 use raddet::combin::{Chunk, PascalTable};
 use raddet::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
 use raddet::jobs::{
-    ChunkRecord, JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, RunnerConfig,
+    ChunkRecord, JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, Journal, Record,
+    RunnerConfig,
 };
 use raddet::linalg::{radic_det_exact, radic_det_generic};
 use raddet::matrix::gen;
@@ -104,6 +105,61 @@ fn seed_sweep_random_interleavings_reproduce_reference_bits() {
             );
         }
         assert!(!out.trace.is_empty(), "seed {seed}: trace must be recorded");
+    }
+}
+
+/// The speculation sweep: the same seeded random scenarios with
+/// speculative straggler re-lease armed (`speculate: Some(2)`).
+/// Duplicate *grants* are part of the design now, so chunk conservation
+/// is asserted where it actually lives — the journal: every chunk index
+/// appears exactly once even when two workers raced on it, and the
+/// composed value stays bit-identical to the single-process reference
+/// (speculation changes who computes a chunk, never the chunk geometry;
+/// calibration stays off here precisely because f64 composition is
+/// geometry-sensitive).
+#[test]
+fn seed_sweep_speculation_conserves_chunks_and_bits() {
+    let spec = JobSpec {
+        payload: sweep_payload(),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_bits(&spec, "sim-spec-ref");
+    let cfg = FleetConfig { speculate: Some(2), ..fleet_cfg() };
+    let seeds = sweep_seeds();
+    for seed in 0..seeds {
+        let dir = raddet::testkit::scratch_dir(&format!("sim-spec-{seed}"));
+        let out =
+            run_random_scenario(seed, sweep_payload(), JobEngine::Prefix, cfg, dir.clone())
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        match out.value {
+            JobValue::F64(v) => assert_eq!(
+                v.to_bits(),
+                want,
+                "seed {seed}: speculation changed the composed bits"
+            ),
+            other => panic!("seed {seed}: {other:?}"),
+        }
+        let store = JobStore::open(&dir).unwrap();
+        let ids = store.list().unwrap();
+        assert_eq!(ids.len(), 1, "seed {seed}: exactly the submitted job");
+        let records = Journal::replay(&store.journal_path(&ids[0]).unwrap())
+            .unwrap_or_else(|e| panic!("seed {seed}: journal replay: {e}"));
+        let mut seen = std::collections::BTreeMap::new();
+        for rec in &records {
+            if let Record::Chunk { index, .. } = rec {
+                *seen.entry(*index).or_insert(0u32) += 1;
+            }
+        }
+        assert_eq!(
+            seen.len() as u64, out.chunks_total,
+            "seed {seed}: every chunk must reach the journal"
+        );
+        assert!(
+            seen.values().all(|&c| c == 1),
+            "seed {seed}: a raced chunk was journaled more than once: {seen:?}"
+        );
     }
 }
 
@@ -367,7 +423,7 @@ fn lease_interleavings_conserve_chunks_and_bits() {
                 // it expired and was re-granted).
                 8 => {
                     if let Some(&(w, idx, _)) = held.first() {
-                        let _ = table.renew(workers[w], &id, idx);
+                        let _ = table.renew(workers[w], &id, idx, None);
                     }
                 }
                 // Abandon, or let time pass so leases expire.

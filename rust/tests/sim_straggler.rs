@@ -1,0 +1,493 @@
+//! Deterministic straggler drills for speculative re-lease.
+//!
+//! PR 7 gave the fleet eyes (`METRICS JOB` attributes the slow worker);
+//! this suite proves the control half: with `speculate` configured, a
+//! straggling holder's chunk is duplicated onto the fastest idle worker
+//! and the **first `LEASE COMPLETE` wins** — the loser's delivery is
+//! rejected (open job) or idempotently re-acked (closed job), and the
+//! journal never records a chunk twice. Every scenario runs on the
+//! simulation fabric (virtual clock, seeded scheduler, in-memory
+//! transport feeding the real `ServiceCore`), is executed **twice**,
+//! and must replay an identical event trace, identical telemetry, and
+//! identical determinant bits; each result is also compared bit-for-bit
+//! against an uninterrupted single-process run of the same spec.
+//!
+//! The hand-driven grants mirror `tests/sim_fleet.rs`: raw `LEASE`
+//! verbs over sim clients, so the exact interleaving of the race is a
+//! script, not a scheduler accident.
+
+use raddet::combin::{Chunk, PascalTable};
+use raddet::fleet::{CalibState, FleetConfig, JobTelemetry};
+use raddet::jobs::{
+    JobEngine, JobPayload, JobRunner, JobSpec, JobStore, JobValue, Journal, Record,
+    RunnerConfig,
+};
+use raddet::matrix::gen;
+use raddet::service::GrantReply;
+use raddet::testkit::sim::SimWorld;
+use raddet::testkit::TestRng;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const BATCH: usize = 32;
+const TTL_MS: u64 = 200;
+
+/// Fleet config for the race drills: speculation at factor 2, no
+/// calibration (geometry must stay fixed for the f64 bit comparison).
+fn race_cfg(chunks: usize) -> FleetConfig {
+    FleetConfig {
+        lease_ttl: Duration::from_millis(TTL_MS),
+        default_chunks: chunks,
+        default_batch: BATCH,
+        speculate: Some(2),
+        ..Default::default()
+    }
+}
+
+fn f64_payload(seed: u64) -> JobPayload {
+    JobPayload::F64(gen::uniform(&mut TestRng::from_seed(seed), 3, 9, -1.0, 1.0))
+}
+
+fn spec_for(payload: &JobPayload, chunks: usize) -> JobSpec {
+    JobSpec { payload: payload.clone(), engine: JobEngine::Prefix, chunks, batch: BATCH }
+}
+
+/// Run the identical spec to completion in a single process and return
+/// its composed value — the bits every fleet interleaving must hit.
+fn reference_value(spec: &JobSpec, tag: &str) -> JobValue {
+    let store = JobStore::open(raddet::testkit::scratch_dir(tag)).unwrap();
+    let id = store.create(spec).unwrap();
+    let out = JobRunner::new(RunnerConfig { workers: 2, chunk_budget: None })
+        .run(&store, &id)
+        .unwrap();
+    assert!(out.status.complete);
+    out.status.value.unwrap()
+}
+
+fn assert_bits_eq(got: JobValue, want: JobValue) {
+    match (got, want) {
+        (JobValue::F64(a), JobValue::F64(b)) => {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a:e} vs {b:e}")
+        }
+        (JobValue::Exact(a), JobValue::Exact(b)) => assert_eq!(a, b),
+        other => panic!("mismatched value kinds: {other:?}"),
+    }
+}
+
+/// Compute one chunk exactly as a worker would, from the grant's spec.
+fn compute(spec: &JobSpec, start: u128, len: u128) -> (u64, JobValue) {
+    let (m, n) = spec.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let mut runner = spec.runner();
+    let (partial, wm) = runner
+        .run_chunk(spec.payload.as_lease(), &table, Chunk { start, len })
+        .unwrap();
+    (wm.terms, partial.into())
+}
+
+/// Chunk conservation, read off the journal itself: every chunk of the
+/// final plan has exactly one CHUNK record, even when the chunk was
+/// granted twice. The duplicate COMPLETE must never reach the journal.
+fn assert_chunks_journaled_once(world: &SimWorld, id: &str) {
+    let path = world.store().journal_path(id).unwrap();
+    let mut seen: BTreeMap<u64, u32> = BTreeMap::new();
+    for rec in Journal::replay(&path).unwrap() {
+        if let Record::Chunk { index, .. } = rec {
+            *seen.entry(index).or_insert(0) += 1;
+        }
+    }
+    let st = world.store().status(id).unwrap();
+    assert_eq!(seen.len(), st.chunks_total, "every plan chunk journaled exactly once");
+    assert!(
+        seen.values().all(|&c| c == 1),
+        "a raced chunk leaked a second CHUNK record: {seen:?}"
+    );
+}
+
+/// The fast worker wins: wb finishes its own chunk instantly (zero
+/// virtual time ⇒ saturated-high EWMA), wa heartbeats a painfully slow
+/// cumulative report, wb's next grant re-leases wa's chunk
+/// speculatively, and wb's COMPLETE lands first. wa's late delivery
+/// arrives after the job closed and is re-acked idempotently.
+fn run_fast_wins(tag: &str) -> (JobTelemetry, Vec<String>, String, JobValue) {
+    let payload = f64_payload(81);
+    let dir = raddet::testkit::scratch_dir(tag);
+    let mut world = SimWorld::new(0x57A1, dir, race_cfg(2));
+    let id = world.submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    let mut wa = world.client("wa").unwrap();
+    let (c0, s0, l0, spec) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            (chunk, start, len, spec.expect("first grant carries the spec"))
+        }
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(c0, 0);
+
+    let mut wb = world.client("wb").unwrap();
+    let (c1, s1, l1) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, .. } => (chunk, start, len),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(c1, 1);
+
+    // wb completes its chunk in zero virtual time — a saturated EWMA.
+    let (t1, v1) = compute(&spec, s1, l1);
+    let ack = wb.lease_complete("wb", &id, c1, t1, 1, v1).unwrap();
+    assert!(!ack.duplicate);
+
+    // wa's heartbeat reports 10 terms in a full second: EWMA 10 t/s.
+    wa.lease_renew("wa", &id, c0, Some((10, 1_000_000))).unwrap();
+
+    // No free chunk left ⇒ wb's grant is a speculative re-lease of
+    // wa's straggling chunk, with the identical rank range.
+    let (cr, sr, lr) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            assert!(spec.is_none(), "same connection: spec is cached");
+            (chunk, start, len)
+        }
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(cr, c0, "the straggler's chunk is the one re-leased");
+    assert_eq!((sr, lr), (s0, l0));
+
+    // wb wins the race; the job finishes.
+    let (t0, v0) = compute(&spec, s0, l0);
+    let ack = wb.lease_complete("wb", &id, c0, t0, 1, v0.clone()).unwrap();
+    assert!(!ack.duplicate);
+    assert_eq!(ack.chunks_done, ack.chunks_total);
+
+    // wa's late delivery hits the closed job: idempotent re-ack,
+    // nothing journaled (conservation is asserted below).
+    let late = wa.lease_complete("wa", &id, c0, t0, 1_000_000, v0).unwrap();
+    assert!(late.duplicate, "loser on a closed job gets a duplicate ack");
+
+    let mut ctl = world.client("ctl").unwrap();
+    let t = ctl.job_metrics(&id).unwrap();
+    assert_eq!(t.state, "done");
+    assert_eq!(t.speculate, Some(2), "telemetry surfaces the speculation factor");
+    assert_eq!(t.calib, CalibState::Off);
+    let rows: BTreeMap<_, _> = t.workers.iter().cloned().collect();
+    assert_eq!(rows["wb"].completed, 2, "the winner owns both chunks");
+    assert_eq!(rows["wa"].completed, 0);
+    assert_eq!(rows["wa"].duplicates, 1, "the late delivery was attributed");
+
+    let snap = ctl.metrics().unwrap();
+    assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_wins_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+    ctl.quit();
+
+    assert_chunks_journaled_once(&world, &id);
+    let st = world.store().status(&id).unwrap();
+    assert!(st.complete);
+    (t, world.trace(), world.trace_jsonl(), st.value.unwrap())
+}
+
+#[test]
+fn sim_speculation_fast_worker_wins_race() {
+    let want = reference_value(&spec_for(&f64_payload(81), 2), "sim-strag-fast-ref");
+    let (t_a, trace_a, jsonl_a, v_a) = run_fast_wins("sim-strag-fast-a");
+    assert_bits_eq(v_a.clone(), want);
+
+    let (t_b, trace_b, jsonl_b, v_b) = run_fast_wins("sim-strag-fast-b");
+    assert_eq!(t_a, t_b, "telemetry must replay bit-identically");
+    assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
+    assert_eq!(jsonl_a, jsonl_b);
+    assert_bits_eq(v_b, v_a);
+}
+
+/// The slow worker wins: the original holder delivers *first*, so the
+/// speculative duplicate is the race's loser. Because the job is still
+/// open (a bystander chunk remains), the loser's delivery is a hard
+/// `lease lost … completed by another worker` rejection — not a
+/// duplicate ack — and nothing reaches the journal.
+fn run_slow_wins(tag: &str) -> (Vec<String>, JobValue) {
+    let payload = f64_payload(82);
+    let dir = raddet::testkit::scratch_dir(tag);
+    let mut world = SimWorld::new(0x57A2, dir, race_cfg(3));
+    let id = world.submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    let mut wa = world.client("wa").unwrap();
+    let (c0, s0, l0, spec) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            (chunk, start, len, spec.expect("first grant carries the spec"))
+        }
+        other => panic!("{other:?}"),
+    };
+    let mut wb = world.client("wb").unwrap();
+    let (c1, s1, l1) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, .. } => (chunk, start, len),
+        other => panic!("{other:?}"),
+    };
+    // wc holds the bystander chunk: recently granted, no sample yet —
+    // NOT a straggler (the no-sample rule needs half a TTL of silence),
+    // so speculation must leave it alone.
+    let mut wc = world.client("wc").unwrap();
+    let (c2, s2, l2) = match wc.lease_grant("wc", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, .. } => (chunk, start, len),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!((c0, c1, c2), (0, 1, 2));
+
+    let (t1, v1) = compute(&spec, s1, l1);
+    let ack = wb.lease_complete("wb", &id, c1, t1, 1, v1).unwrap();
+    assert!(!ack.duplicate);
+    wa.lease_renew("wa", &id, c0, Some((10, 1_000_000))).unwrap();
+
+    // wb speculates on wa's chunk — and only wa's: the bystander does
+    // not qualify.
+    match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, .. } => assert_eq!(chunk, c0),
+        other => panic!("{other:?}"),
+    }
+
+    // The slow holder delivers FIRST — first COMPLETE wins, full stop.
+    let (t0, v0) = compute(&spec, s0, l0);
+    let ack = wa.lease_complete("wa", &id, c0, t0, 2_000_000, v0.clone()).unwrap();
+    assert!(!ack.duplicate, "the original holder's first delivery is accepted");
+
+    // The speculative duplicate loses on a still-open job: hard error.
+    let err = wb.lease_complete("wb", &id, c0, t0, 1, v0).unwrap_err();
+    assert!(
+        err.to_string().contains("was completed by another worker"),
+        "{err}"
+    );
+
+    // The bystander drains the job.
+    let (t2, v2) = compute(&spec, s2, l2);
+    let ack = wc.lease_complete("wc", &id, c2, t2, 1, v2).unwrap();
+    assert_eq!(ack.chunks_done, ack.chunks_total);
+
+    let mut ctl = world.client("ctl").unwrap();
+    let snap = ctl.metrics().unwrap();
+    assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_wins_total"), Some("1"), "the slow holder's win counts");
+    assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+    ctl.quit();
+
+    assert_chunks_journaled_once(&world, &id);
+    let st = world.store().status(&id).unwrap();
+    assert!(st.complete);
+    (world.trace(), st.value.unwrap())
+}
+
+#[test]
+fn sim_speculation_slow_worker_wins_race() {
+    let want = reference_value(&spec_for(&f64_payload(82), 3), "sim-strag-slow-ref");
+    let (trace_a, v_a) = run_slow_wins("sim-strag-slow-a");
+    assert_bits_eq(v_a.clone(), want);
+
+    let (trace_b, v_b) = run_slow_wins("sim-strag-slow-b");
+    assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
+    assert_bits_eq(v_b, v_a);
+}
+
+/// Re-lease during a partition: the holder is dark (no renew, no
+/// sample) for more than half a TTL but *less* than a full TTL — too
+/// soon for ordinary expiry, late enough for the no-sample straggler
+/// rule. The survivor inherits the chunk speculatively, finishes the
+/// job, and the healed holder's late delivery is re-acked idempotently.
+fn run_partition_release(tag: &str) -> (Vec<String>, JobValue) {
+    let payload = f64_payload(83);
+    let dir = raddet::testkit::scratch_dir(tag);
+    let mut world = SimWorld::new(0x57A3, dir, race_cfg(2));
+    let id = world.submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    let mut wa = world.client("wa").unwrap();
+    let (c0, s0, l0, spec) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            (chunk, start, len, spec.expect("first grant carries the spec"))
+        }
+        other => panic!("{other:?}"),
+    };
+    world.partition("wa");
+
+    let mut wb = world.client("wb").unwrap();
+    let (c1, s1, l1) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, .. } => (chunk, start, len),
+        other => panic!("{other:?}"),
+    };
+    let (t1, v1) = compute(&spec, s1, l1);
+    wb.lease_complete("wb", &id, c1, t1, 1, v1).unwrap();
+
+    // 120 ms of silence: past ttl/2 (straggler) but short of the
+    // 200 ms TTL (no ordinary expiry — the lease is still live).
+    world.advance(Duration::from_millis(120));
+    match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, .. } => assert_eq!(chunk, c0, "dark holder's chunk re-leased"),
+        other => panic!("{other:?}"),
+    }
+    let (t0, v0) = compute(&spec, s0, l0);
+    let ack = wb.lease_complete("wb", &id, c0, t0, 1, v0.clone()).unwrap();
+    assert_eq!(ack.chunks_done, ack.chunks_total);
+
+    // The partition heals; the old holder's delivery finds the job
+    // closed and is acknowledged as a duplicate.
+    world.heal("wa");
+    let late = wa.lease_complete("wa", &id, c0, t0, 1, v0).unwrap();
+    assert!(late.duplicate);
+
+    let mut ctl = world.client("ctl").unwrap();
+    let snap = ctl.metrics().unwrap();
+    assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_wins_total"), Some("1"));
+    assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+    ctl.quit();
+
+    assert_chunks_journaled_once(&world, &id);
+    let st = world.store().status(&id).unwrap();
+    assert!(st.complete);
+    (world.trace(), st.value.unwrap())
+}
+
+#[test]
+fn sim_speculation_releases_partitioned_holder() {
+    let want = reference_value(&spec_for(&f64_payload(83), 2), "sim-strag-part-ref");
+    let (trace_a, v_a) = run_partition_release("sim-strag-part-a");
+    assert_bits_eq(v_a.clone(), want);
+
+    let (trace_b, v_b) = run_partition_release("sim-strag-part-b");
+    assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
+    assert_bits_eq(v_b, v_a);
+}
+
+/// Both racers crash: the straggling holder AND its speculative rival
+/// go silent, both lease entries expire at the TTL, and a third worker
+/// inherits the chunk through the ordinary free-pool path (the expired
+/// race never produces a win or a loss). The job still converges to
+/// the reference bits with every chunk journaled once.
+fn run_both_holders_crash(tag: &str) -> (Vec<String>, JobValue) {
+    let payload = f64_payload(84);
+    let dir = raddet::testkit::scratch_dir(tag);
+    let mut world = SimWorld::new(0x57A4, dir, race_cfg(2));
+    let id = world.submit_fleet(payload, JobEngine::Prefix).unwrap();
+
+    let mut wa = world.client("wa").unwrap();
+    let (c0, s0, l0, spec) = match wa.lease_grant("wa", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            (chunk, start, len, spec.expect("first grant carries the spec"))
+        }
+        other => panic!("{other:?}"),
+    };
+    let mut wb = world.client("wb").unwrap();
+    let (c1, s1, l1) = match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, .. } => (chunk, start, len),
+        other => panic!("{other:?}"),
+    };
+    let (t1, v1) = compute(&spec, s1, l1);
+    wb.lease_complete("wb", &id, c1, t1, 1, v1).unwrap();
+    wa.lease_renew("wa", &id, c0, Some((10, 1_000_000))).unwrap();
+    match wb.lease_grant("wb", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, .. } => assert_eq!(chunk, c0, "speculative duplicate granted"),
+        other => panic!("{other:?}"),
+    }
+
+    // …and then neither racer is heard from again. Past the TTL both
+    // entries expire and the chunk returns to the free pool.
+    world.advance(Duration::from_millis(TTL_MS + 1));
+    let mut wc = world.client("wc").unwrap();
+    match wc.lease_grant("wc", Some(id.as_str())).unwrap() {
+        GrantReply::Lease { chunk, start, len, spec, .. } => {
+            assert_eq!(chunk, c0, "expired chunk re-granted normally");
+            assert_eq!((start, len), (s0, l0));
+            assert!(spec.is_some(), "fresh connection gets the spec again");
+        }
+        other => panic!("{other:?}"),
+    }
+    let (t0, v0) = compute(&spec, s0, l0);
+    let ack = wc.lease_complete("wc", &id, c0, t0, 1, v0).unwrap();
+    assert_eq!(ack.chunks_done, ack.chunks_total);
+
+    let mut ctl = world.client("ctl").unwrap();
+    let snap = ctl.metrics().unwrap();
+    assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
+    assert_eq!(
+        snap.get("fleet_release_wins_total"),
+        Some("0"),
+        "an expired race has no winner"
+    );
+    assert_eq!(snap.get("fleet_release_losses_total"), Some("0"));
+    assert_eq!(snap.get("fleet_expiries_total"), Some("2"), "both racers' entries expired");
+    ctl.quit();
+
+    assert_chunks_journaled_once(&world, &id);
+    let st = world.store().status(&id).unwrap();
+    assert!(st.complete);
+    (world.trace(), st.value.unwrap())
+}
+
+#[test]
+fn sim_speculation_survives_crash_of_both_holders() {
+    let want = reference_value(&spec_for(&f64_payload(84), 2), "sim-strag-crash-ref");
+    let (trace_a, v_a) = run_both_holders_crash("sim-strag-crash-a");
+    assert_bits_eq(v_a.clone(), want);
+
+    let (trace_b, v_b) = run_both_holders_crash("sim-strag-crash-b");
+    assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
+    assert_bits_eq(v_b, v_a);
+}
+
+/// Calibration under sim: an exact (integer) job measures a 2-chunk
+/// prefix, journals a GEOM record, and re-partitions the remainder.
+/// Exact composition is associative, so the re-chunked fleet value
+/// must equal the fixed-geometry single-process reference — and the
+/// whole lifecycle must replay identically per seed. (The f64 engine
+/// is geometry-sensitive by design, which is exactly why the race
+/// drills above keep calibration off.)
+fn run_calibrated(tag: &str) -> (JobTelemetry, Vec<String>, JobValue) {
+    let payload = JobPayload::Exact(gen::integer(&mut TestRng::from_seed(85), 3, 9, -6, 6));
+    let cfg = FleetConfig {
+        lease_ttl: Duration::from_millis(TTL_MS),
+        default_chunks: 6,
+        default_batch: BATCH,
+        calib_chunks: 2,
+        ..Default::default()
+    };
+    let dir = raddet::testkit::scratch_dir(tag);
+    let mut world = SimWorld::new(0x57A5, dir, cfg);
+    let id = world.submit_fleet(payload, JobEngine::Prefix).unwrap();
+    for w in ["w1", "w2"] {
+        world
+            .add_worker(w, |cfg| {
+                cfg.job = Some(id.clone());
+            })
+            .unwrap();
+    }
+    let got = world.run_until_complete(&id, 2_000).unwrap();
+
+    let st = world.store().status(&id).unwrap();
+    assert!(st.complete);
+    let (calib, rechunks) = st.geom.expect("calibration journaled a GEOM record");
+    assert_eq!(calib, 2, "the configured 2-chunk measurement prefix");
+    assert!(rechunks >= 1);
+    assert_eq!(st.chunks_total as u64, calib + rechunks, "prefix + re-partitioned remainder");
+    assert_eq!(
+        world.total_chunks_completed(),
+        st.chunks_total as u64,
+        "chunk conservation across the geometry change"
+    );
+
+    let mut ctl = world.client("ctl").unwrap();
+    let t = ctl.job_metrics(&id).unwrap();
+    assert_eq!(t.calib, CalibState::Chosen { chunks: rechunks });
+    assert_eq!(t.speculate, None, "speculation not configured here");
+    ctl.quit();
+    (t, world.trace(), got)
+}
+
+#[test]
+fn sim_calibration_rechunks_and_replays_identically() {
+    let payload = JobPayload::Exact(gen::integer(&mut TestRng::from_seed(85), 3, 9, -6, 6));
+    // Reference on the *uncalibrated* 6-chunk spec: exact scalars make
+    // the value geometry-independent, which is the invariant that lets
+    // calibration re-partition mid-job at all.
+    let want = reference_value(&spec_for(&payload, 6), "sim-strag-calib-ref");
+    let (t_a, trace_a, v_a) = run_calibrated("sim-strag-calib-a");
+    assert_bits_eq(v_a.clone(), want);
+
+    let (t_b, trace_b, v_b) = run_calibrated("sim-strag-calib-b");
+    assert_eq!(t_a, t_b, "telemetry must replay identically");
+    assert_eq!(trace_a, trace_b, "same seed ⇒ same event trace");
+    assert_bits_eq(v_b, v_a);
+}
