@@ -400,6 +400,38 @@ fn cmd_scaling(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Straggler speculation config from the `serve` flags: `--speculate`
+/// turns duplicate re-lease on; the factor (median-EWMA multiple below
+/// which a holder counts as straggling) is bounded so one typo cannot
+/// make every chunk race. The factor is a sub-option of `--speculate`
+/// (the usage text says so): on its own it must not silently switch
+/// speculation on — an operator pinning the factor in a wrapper script
+/// would enable the feature by accident — so that combination is
+/// rejected loudly instead.
+fn resolve_speculate(a: &Args) -> Result<Option<u32>> {
+    // `--speculate 3` parses as an option, not a flag; without this
+    // guard it would silently leave speculation off AND drop the 3.
+    if let Some(v) = a.get("speculate") {
+        return Err(Error::Config(format!(
+            "--speculate takes no value (got {v:?}); use --speculate --speculate-factor F"
+        )));
+    }
+    let factor: u32 = a.get_parse("speculate-factor", 3u32)?;
+    if !(1..=100).contains(&factor) {
+        return Err(Error::Config(format!(
+            "--speculate-factor {factor} out of range (1..=100)"
+        )));
+    }
+    if a.get("speculate-factor").is_some() && !a.has_flag("speculate") {
+        return Err(Error::Config(
+            "--speculate-factor requires --speculate (the factor tunes the straggler \
+             trigger; it does not enable speculation by itself)"
+                .into(),
+        ));
+    }
+    Ok(a.has_flag("speculate").then_some(factor))
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     a.check_known(
         &[
@@ -423,17 +455,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let jobs_dir = a.get("jobs-dir").unwrap_or("raddet-jobs");
     let coord = build_coordinator(a)?;
     let manager = JobManager::new(JobStore::open(jobs_dir)?, a.get_parse("workers", 0usize)?);
-    // Straggler speculation: `--speculate` turns duplicate re-lease on;
-    // the factor (median-EWMA multiple below which a holder counts as
-    // straggling) is bounded so one typo cannot make every chunk race.
-    let spec_factor: u32 = a.get_parse("speculate-factor", 3u32)?;
-    if !(1..=100).contains(&spec_factor) {
-        return Err(Error::Config(format!(
-            "--speculate-factor {spec_factor} out of range (1..=100)"
-        )));
-    }
-    let speculate =
-        (a.has_flag("speculate") || a.get("speculate-factor").is_some()).then_some(spec_factor);
+    let speculate = resolve_speculate(a)?;
     // Fleet knobs: chunk count is part of a job's spec (it fixes the
     // f64 composition grouping), so submitting the same matrix with the
     // same --fleet-chunks as a local `job submit --chunks` reproduces
@@ -1145,6 +1167,38 @@ mod tests {
                 ),
             ],
         }
+    }
+
+    #[test]
+    fn speculate_factor_alone_does_not_enable_speculation() {
+        let sv = |parts: &[&str]| -> Vec<String> {
+            parts.iter().map(|s| s.to_string()).collect()
+        };
+        let parse = |parts: &[&str]| Args::parse(&sv(parts)).unwrap();
+        assert_eq!(resolve_speculate(&parse(&["serve"])).unwrap(), None);
+        assert_eq!(resolve_speculate(&parse(&["serve", "--speculate"])).unwrap(), Some(3));
+        assert_eq!(
+            resolve_speculate(&parse(&["serve", "--speculate", "--speculate-factor", "7"]))
+                .unwrap(),
+            Some(7)
+        );
+        // The factor without the flag is a loud config error, not a
+        // silent enable.
+        let err = resolve_speculate(&parse(&["serve", "--speculate-factor", "7"])).unwrap_err();
+        assert!(err.to_string().contains("requires --speculate"), "{err}");
+        // A value on the flag itself is a config error, not a silent off.
+        let err = resolve_speculate(&parse(&["serve", "--speculate", "3"])).unwrap_err();
+        assert!(err.to_string().contains("takes no value"), "{err}");
+        // Out-of-range factors stay rejected.
+        assert!(resolve_speculate(&parse(&["serve", "--speculate", "--speculate-factor", "0"]))
+            .is_err());
+        assert!(resolve_speculate(&parse(&[
+            "serve",
+            "--speculate",
+            "--speculate-factor",
+            "101"
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -491,9 +491,10 @@ impl LeaseTable {
     }
 
     /// The retained calibration / re-lease lifecycle events, oldest
-    /// first. Kinds: `calibrate` (GEOM chosen), `release_grant`
-    /// (speculative re-lease granted), `release_win` (a raced chunk's
-    /// first COMPLETE landed).
+    /// first. Kinds: `calibrate` (GEOM chosen), `calibrate_abandon`
+    /// (calibration dropped — a journaled chunk outside the prefix
+    /// forecloses a GEOM), `release_grant` (speculative re-lease
+    /// granted), `release_win` (a raced chunk's first COMPLETE landed).
     pub fn events(&self) -> Vec<Event> {
         self.events.events()
     }
@@ -787,6 +788,22 @@ impl LeaseTable {
     /// append leaves calibration active — the next grant retries.
     fn finish_calibration(&self, id: &str, oj: &mut OpenJob) -> Result<()> {
         let Some(want) = oj.calib else { return Ok(()) };
+        // A chunk journaled past the prefix makes a GEOM append
+        // structurally invalid — replay rejects any pre-GEOM chunk
+        // outside the calibration prefix, so appending one here would
+        // corrupt the journal for every later load. `complete` bounds
+        // indices while calibration is active, so this is
+        // defence-in-depth (a journal inherited from before that bound
+        // existed); abandon calibration and keep the SPEC plan, exactly
+        // like the resumed-sweep case in `open_entry`.
+        if oj.completed.keys().any(|&i| i >= want) {
+            oj.calib = None;
+            self.events.record(
+                "calibrate_abandon",
+                format!("job={id} calib={want} reason=chunk-outside-prefix"),
+            );
+            return Ok(());
+        }
         if !(0..want).all(|i| oj.completed.contains_key(&i)) {
             return Ok(());
         }
@@ -805,7 +822,12 @@ impl LeaseTable {
         .max(1);
         let prefix_end = oj.plan[want as usize - 1].end();
         let remaining = oj.total_terms.saturating_sub(prefix_end);
-        let rechunks = ((remaining + target_terms - 1) / target_terms)
+        // div_ceil, not `(remaining + target_terms - 1) / target_terms`:
+        // target_terms saturates near u128::MAX for huge term counts ×
+        // a huge --calib-target-ms, where the naive ceiling's addition
+        // would overflow.
+        let rechunks = remaining
+            .div_ceil(target_terms)
             .clamp(1, GEOM_MAX_CHUNKS as u128) as u64;
         oj.journal.append(&Record::Geom { calib: want, chunks: rechunks })?;
         let (m, n) = oj.spec.shape();
@@ -922,6 +944,21 @@ impl LeaseTable {
             return Err(Error::Job(format!(
                 "chunk index {chunk} outside plan of {total} for job {id:?}"
             )));
+        }
+        // While calibration is active, grants stay inside the prefix
+        // and the remainder geometry is still undecided: journaling a
+        // chunk past the bound (a grant from before calibration was
+        // enabled, or a fabricated index — per-chunk term counts are
+        // derivable from the spec) would put a CHUNK record before the
+        // GEOM that structurally forbids it, corrupting the journal for
+        // every later load. Reject it; the re-partitioned remainder is
+        // recomputed under the chosen geometry anyway.
+        if let Some(want) = oj.calib {
+            if chunk >= want {
+                return Err(Error::Job(format!(
+                    "chunk index {chunk} outside the active calibration prefix of {want} for job {id:?}"
+                )));
+            }
         }
         if oj.completed.contains_key(&chunk) {
             let done = oj.completed.len() as u64;
@@ -1722,6 +1759,132 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 3);
+    }
+
+    /// The stale-worker / hostile-client hole: while calibration is
+    /// active, a COMPLETE for a chunk past the prefix (a grant issued
+    /// before `--calib-chunks` was enabled, or a fabricated index)
+    /// must be rejected *before* anything reaches the journal — a
+    /// CHUNK record outside the prefix lands before the GEOM and
+    /// violates the journal's structural rule, turning every later
+    /// load of the job into `JournalCorrupt`.
+    #[test]
+    fn complete_outside_calibration_prefix_is_rejected() {
+        let cfg = FleetConfig {
+            lease_ttl: Duration::from_secs(10),
+            default_chunks: 6,
+            calib_chunks: 2,
+            calib_target_ms: 500,
+            ..Default::default()
+        };
+        let (_clock, _registry, table) = tmp_table_cfg("calib-bound", cfg);
+        let a = gen::integer(&mut TestRng::from_seed(83), 3, 9, -3, 3);
+        let id = table.submit(JobPayload::Exact(a), JobEngine::Prefix).unwrap();
+        let g0 = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g0.chunk_index, 0);
+        let spec = g0.spec.clone().unwrap();
+
+        // The out-of-prefix delivery bounces with a calibration error
+        // and leaves no trace in the journal. (Pre-fix it was accepted
+        // via the expired-lease path: chunk 3 has no active lease and
+        // sits inside the 6-chunk SPEC plan.)
+        let rec0 = compute(&spec, g0.chunk);
+        let err = table.complete("wz", &id, 3, rec0.clone()).unwrap_err();
+        assert!(err.to_string().contains("calibration prefix"), "{err}");
+        let records = Journal::replay(&table.store().journal_path(&id).unwrap()).unwrap();
+        assert!(
+            !records.iter().any(|r| matches!(r, Record::Chunk { index: 3, .. })),
+            "rejected delivery must not be journaled"
+        );
+
+        // Calibration then finishes undisturbed and the sweep drains to
+        // a loadable, complete journal with the chosen geometry.
+        table.complete("wa", &id, 0, rec0).unwrap();
+        loop {
+            match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+                GrantOutcome::Granted(g) => {
+                    table.complete("wa", &id, g.chunk_index, compute(&spec, g.chunk)).unwrap();
+                }
+                GrantOutcome::Complete => break,
+                other => panic!("{other:?}"),
+            }
+        }
+        let st = table.store().status(&id).unwrap();
+        assert!(st.complete);
+        assert_eq!(st.geom, Some((2, 1)));
+    }
+
+    /// Defence-in-depth behind the COMPLETE bound: a journal that
+    /// *already* holds a chunk outside the calibration prefix (written
+    /// by a server from before the bound existed) must make the table
+    /// abandon calibration — keeping the SPEC plan, like the resumed
+    /// sweep case in `open_entry` — rather than append a GEOM record
+    /// the structural rule forbids and self-corrupt the journal.
+    #[test]
+    fn calibration_abandons_when_journal_already_ran_past_the_prefix() {
+        let cfg = FleetConfig {
+            lease_ttl: Duration::from_secs(10),
+            default_chunks: 6,
+            calib_chunks: 2,
+            calib_target_ms: 500,
+            ..Default::default()
+        };
+        let (_clock, _registry, table) = tmp_table_cfg("calib-abandon", cfg);
+        let a = gen::integer(&mut TestRng::from_seed(84), 3, 9, -3, 3);
+        let id = table.submit(JobPayload::Exact(a), JobEngine::Prefix).unwrap();
+        let g0 = match table.grant("wa", Some(id.as_str()), |_| true).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        let spec = g0.spec.clone().unwrap();
+        table.complete("wa", &id, 0, compute(&spec, g0.chunk)).unwrap();
+
+        // Inject a journaled out-of-prefix chunk directly, the way an
+        // older (pre-bound) server would have left it.
+        {
+            let mut jobs = table.lock_jobs();
+            let oj = jobs.get_mut(&id).unwrap();
+            let rec = compute(&spec, oj.plan[3]);
+            oj.journal.append(&Record::Chunk { index: 3, rec: rec.clone() }).unwrap();
+            oj.completed.insert(3, rec);
+        }
+
+        // The next grant would have been the GEOM append point; instead
+        // calibration is abandoned and the full SPEC plan opens up.
+        let g1 = match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+            GrantOutcome::Granted(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g1.chunk_index, 1, "bound lifted, lowest free SPEC chunk granted");
+        let snap = table.job_metrics(&id).unwrap();
+        assert_eq!(snap.calib, CalibState::Off);
+        assert_eq!(snap.chunks_total, 6, "SPEC geometry kept");
+        assert!(
+            table.events().iter().any(|e| e.kind == "calibrate_abandon"),
+            "{:?}",
+            table.events()
+        );
+
+        // Drain the remaining SPEC chunks: the journal stays loadable
+        // (no GEOM record ever lands) and the job completes.
+        table.complete("wa", &id, 1, compute(&spec, g1.chunk)).unwrap();
+        loop {
+            match table.grant("wa", Some(id.as_str()), |_| false).unwrap() {
+                GrantOutcome::Granted(g) => {
+                    table.complete("wa", &id, g.chunk_index, compute(&spec, g.chunk)).unwrap();
+                }
+                GrantOutcome::Complete => break,
+                other => panic!("{other:?}"),
+            }
+        }
+        let records = Journal::replay(&table.store().journal_path(&id).unwrap()).unwrap();
+        assert!(!records.iter().any(|r| matches!(r, Record::Geom { .. })));
+        let st = table.store().status(&id).unwrap();
+        assert!(st.complete);
+        assert_eq!(st.geom, None);
     }
 
     #[test]

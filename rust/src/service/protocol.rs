@@ -37,6 +37,8 @@
 //!   speculate: `-` (off) or `x<factor>` (factor in 1..=100)
 //!   calib:     `-` (off), `c<done>/<want>` (measuring the prefix),
 //!              or `g<chunks>` (GEOM chosen: remainder chunk count)
+//!   (both optional on parse — absent in a pre-speculation server's
+//!    reply, which degrades to off rather than a protocol error)
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
@@ -729,7 +731,7 @@ impl Response {
         }
         if let Some(rest) = line.strip_prefix("OK JOBMETRICS ") {
             let toks: Vec<&str> = rest.split(' ').collect();
-            if toks.len() < 10 {
+            if toks.len() < 8 {
                 return Err(Error::Protocol(format!("bad JOBMETRICS line {line:?}")));
             }
             let id = parse_job_id(toks[0])?;
@@ -750,9 +752,22 @@ impl Response {
             } else {
                 Some(num(toks[7], "eta_ms")?)
             };
-            let speculate = match toks[8] {
-                "-" => None,
-                tok => {
+            // The speculate and calib tokens postdate the first
+            // JOBMETRICS grammar. A pre-speculation server's reply
+            // simply lacks them — its worker rows (always
+            // colon-separated) start right after eta — so both are
+            // optional on parse and degrade to "off", letting a newer
+            // client read an older server instead of hard-failing on
+            // token count. When present, each must still parse exactly.
+            let mut idx = 8;
+            let speculate = match toks.get(idx).filter(|t| !t.contains(':')) {
+                None => None,
+                Some(&"-") => {
+                    idx += 1;
+                    None
+                }
+                Some(&tok) => {
+                    idx += 1;
                     let f = tok.strip_prefix('x').ok_or_else(|| {
                         Error::Protocol(format!("bad speculate token {tok:?}"))
                     })?;
@@ -767,9 +782,14 @@ impl Response {
                     Some(f)
                 }
             };
-            let calib = match toks[9] {
-                "-" => CalibState::Off,
-                tok => {
+            let calib = match toks.get(idx).filter(|t| !t.contains(':')) {
+                None => CalibState::Off,
+                Some(&"-") => {
+                    idx += 1;
+                    CalibState::Off
+                }
+                Some(&tok) => {
+                    idx += 1;
                     if let Some(rest) = tok.strip_prefix('c') {
                         let (d, w) = rest.split_once('/').ok_or_else(|| {
                             Error::Protocol(format!("bad calib token {tok:?}"))
@@ -796,7 +816,7 @@ impl Response {
                 }
             };
             let mut workers = Vec::new();
-            for tok in &toks[10..] {
+            for tok in &toks[idx..] {
                 let fields: Vec<&str> = tok.split(':').collect();
                 if fields.len() != 7 {
                     return Err(Error::Protocol(format!("bad worker row {tok:?}")));
@@ -1457,6 +1477,29 @@ mod tests {
         }
     }
 
+    /// A pre-speculation server's JOBMETRICS reply lacks the speculate
+    /// and calib tokens entirely (worker rows follow eta directly): a
+    /// newer client degrades both to "off" instead of hard-failing on
+    /// token count, so version skew across the grammar growth is
+    /// readable, not fatal.
+    #[test]
+    fn jobmetrics_pre_speculation_grammar_degrades_to_off() {
+        for (line, nworkers) in [
+            ("OK JOBMETRICS job-x open 1 2 3 4 5 -", 0),
+            ("OK JOBMETRICS job-x open 1 2 3 4 5 9 w1:1:2:3:4:5:6", 1),
+            // Mixed skew: speculate present, calib absent.
+            ("OK JOBMETRICS job-x open 1 2 3 4 5 - x3 w1:1:2:3:4:5:6", 1),
+        ] {
+            match Response::parse(line).unwrap() {
+                Response::JobMetrics(t) => {
+                    assert_eq!(t.calib, CalibState::Off, "{line:?}");
+                    assert_eq!(t.workers.len(), nworkers, "{line:?}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
     #[test]
     fn malformed_metrics_responses_rejected() {
         for bad in [
@@ -1467,7 +1510,6 @@ mod tests {
             "OK METRICS 1 UPPER=1",             // invalid metric name
             "OK METRICS 1 =1",                  // empty name
             "OK JOBMETRICS job-x open 1 2",     // truncated
-            "OK JOBMETRICS job-x open 1 2 3 4 5 -", // pre-speculation grammar, too short
             "OK JOBMETRICS job-x limbo 1 2 3 4 5 - - -", // unknown state
             "OK JOBMETRICS job-x open 1 2 3 4 5 x - -",  // bad eta
             "OK JOBMETRICS job-x open 1 2 3 4 5 - x0 -",   // speculate factor below range
