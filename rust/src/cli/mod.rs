@@ -15,6 +15,8 @@
 //!                  [--fleet-chunks C] [--fleet-ttl-ms T]
 //!                  [--speculate [--speculate-factor F]]
 //!                  [--calib-chunks K [--calib-target-ms T]]
+//!                  [--reactor [--max-conns N]] [--tenant-file F]
+//!                  [--cache-entries N]
 //! raddet query     --addr HOST:PORT --csv F [--exact]
 //! raddet worker    --connect HOST:PORT [--id W] [--job ID] [--poll-ms P]
 //!                  [--max-chunks N] [--exit-on-idle] [--throttle-ms T]
@@ -49,7 +51,7 @@ use crate::jobs::{
 use crate::matrix::{gen, io as mio, MatF64};
 use crate::pram::{analysis, section6_table};
 use crate::scalar::ScalarKind;
-use crate::service::{Client, Server};
+use crate::service::{Client, ReactorConfig, Server, TenantTable};
 use crate::testkit::TestRng;
 use crate::{Error, Result};
 use args::Args;
@@ -133,7 +135,11 @@ commands:\n\
             (first COMPLETE wins; --speculate-factor tunes the median-\n\
             EWMA trigger) and --calib-chunks K measures throughput on\n\
             the first K chunks then re-chunks the remainder (journaled\n\
-            as GEOM so resume/replay stay deterministic)\n\
+            as GEOM so resume/replay stay deterministic);\n\
+            --reactor serves via the event-loop shell (--max-conns N),\n\
+            --tenant-file F enables AUTH + per-tenant token-bucket\n\
+            quotas, --cache-entries N sizes the content-addressed\n\
+            result cache (0 disables)\n\
   query     send a --csv matrix to a running service (--addr)\n\
   worker    join a running service as a fleet worker: lease chunks of\n\
             durable jobs over LEASE GRANT/RENEW/COMPLETE/ABANDON and\n\
@@ -446,6 +452,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 "speculate-factor",
                 "calib-chunks",
                 "calib-target-ms",
+                "reactor",
+                "max-conns",
+                "tenant-file",
+                "cache-entries",
             ],
         ]
         .concat(),
@@ -474,13 +484,52 @@ fn cmd_serve(a: &Args) -> Result<()> {
         calib_target_ms: a.get_parse("calib-target-ms", 500u64)?,
         ..Default::default()
     };
-    let handle = Server::with_jobs(coord, manager)
+    let cache_entries: usize = a.get_parse(
+        "cache-entries",
+        crate::service::cache::DEFAULT_CACHE_ENTRIES,
+    )?;
+    let mut server = Server::with_jobs(coord, manager)
         .with_fleet_config(fleet_cfg)
-        .start(&format!("{host}:{port}"))?;
-    println!("raddet service listening on {}", handle.addr());
+        .with_cache_entries(cache_entries);
+    let tenant_file = a.get("tenant-file");
+    if let Some(path) = tenant_file {
+        let tenants = TenantTable::load(std::path::Path::new(path))?;
+        println!(
+            "tenants: {} loaded from {path} (metered verbs require AUTH)",
+            tenants.len()
+        );
+        server = server.with_tenants(tenants);
+    }
+    let use_reactor = a.has_flag("reactor");
+    let addr = format!("{host}:{port}");
+    let bound = if use_reactor {
+        let cfg = ReactorConfig {
+            max_conns: a.get_parse("max-conns", ReactorConfig::default().max_conns)?,
+            ..Default::default()
+        };
+        let handle = server.start_reactor(&addr, cfg)?;
+        let bound = handle.addr();
+        // Keep the reactor alive for the life of the process.
+        std::mem::forget(handle);
+        bound
+    } else {
+        let handle = server.start(&addr)?;
+        let bound = handle.addr();
+        std::mem::forget(handle);
+        bound
+    };
+    println!("raddet service listening on {bound}");
+    if use_reactor {
+        println!("shell: event-loop reactor (single accept loop + bounded compute pool)");
+    }
     println!("jobs journal dir: {jobs_dir}");
+    if cache_entries > 0 {
+        println!("result cache: {cache_entries} entries (content-addressed; --cache-entries 0 disables)");
+    } else {
+        println!("result cache: disabled");
+    }
     println!(
-        "protocol: DET m n v1,v2,… | EXACT m n i1,… | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | METRICS [JOB id] | PING | QUIT (spec: docs/PROTOCOL.md)"
+        "protocol: DET m n v1,v2,… | EXACT m n i1,… | AUTH tenant key | JOB SUBMIT/STATUS/WAIT/CANCEL/RESUME | LEASE GRANT/RENEW/COMPLETE/ABANDON | METRICS [JOB id] | PING | QUIT (spec: docs/PROTOCOL.md)"
     );
     println!("fleet: join workers with `raddet worker --connect {host}:{port}`");
     if let Some(f) = speculate {

@@ -134,6 +134,45 @@ impl JobManager {
         &self.store
     }
 
+    /// Default chunk count new submits get (part of the spec, hence of
+    /// a job's content address).
+    pub fn default_chunks(&self) -> usize {
+        self.default_chunks
+    }
+
+    /// Default lane batch new submits get (also spec-identity: batching
+    /// fixes the float accumulation order).
+    pub fn default_batch(&self) -> usize {
+        self.default_batch
+    }
+
+    /// Current epoch of the completion signal. A reactor polling
+    /// [`Self::wait_probe`] can skip re-probing until this changes (or
+    /// its own deadline cadence fires — fleet-drained jobs complete via
+    /// `LEASE COMPLETE` without bumping this manager's signal).
+    pub fn done_epoch(&self) -> u64 {
+        self.done_signal.epoch()
+    }
+
+    /// Non-blocking `JOB WAIT` probe: one iteration of the checks
+    /// [`Self::wait`] loops over, without parking the calling thread.
+    /// Returns `None` while the job is still running, `Some(snapshot)`
+    /// once it completed or paused, and `Some(Err(..))` for unknown
+    /// ids or a pending runner failure. The event-loop reactor turns
+    /// `JOB WAIT` into a deadline-registered wakeup with this.
+    pub fn wait_probe(&self, id: &str) -> Option<Result<(JobStatus, bool)>> {
+        if !self.store.exists(id) {
+            return Some(Err(Error::Job(format!("unknown job id {id:?}"))));
+        }
+        if let Some(msg) = self.take_error(id) {
+            return Some(Err(Error::Job(format!("job {id:?} failed: {msg}"))));
+        }
+        if self.is_running(id) {
+            return None;
+        }
+        Some(self.status(id))
+    }
+
     /// Create a durable job from a payload and start it in the
     /// background. Returns the job id immediately.
     pub fn submit(&self, payload: JobPayload, engine: JobEngine) -> Result<String> {

@@ -1,0 +1,214 @@
+//! Content-addressed result cache for determinant queries.
+//!
+//! Keys are the *canonical encodings* the wire and journal already
+//! use (PROTOCOL.md §1.3): IEEE-754 bit patterns for f64 entries,
+//! exact decimals for the integer scalars — prefixed with the scalar
+//! tag, engine kind, and (for durable jobs) the chunk geometry, since
+//! grouping is part of the f64 result's identity. The full key string
+//! is stored, so a hit is an exact content match — there is no hash
+//! to collide.
+//!
+//! Entries are LRU-bounded and metered via the per-server telemetry
+//! [`Registry`] as `cache_hits_total` / `cache_misses_total` /
+//! `cache_evictions_total`. Eviction order is deterministic: the
+//! recency tick is a plain counter bumped on every cache operation,
+//! so the same operation sequence always evicts the same entry.
+
+use crate::jobs::JobValue;
+use crate::matrix::{MatF64, MatI64};
+use crate::telemetry::{Counter, Registry};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Default LRU capacity when `serve` is not told otherwise.
+pub const DEFAULT_CACHE_ENTRIES: usize = 256;
+
+/// One cached determinant: the value bits plus the term/chunk totals
+/// needed to replay a complete status or `OK` reply.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    /// Determinant in the payload's scalar (bit-exact for f64).
+    pub value: JobValue,
+    /// Total Laplace terms the cold compute expanded.
+    pub terms_total: u128,
+    /// Chunk count of the cold compute (1 for direct `DET`/`EXACT`).
+    pub chunks_total: u64,
+}
+
+#[derive(Debug)]
+struct Slot {
+    entry: CacheEntry,
+    last_used: u64,
+}
+
+#[derive(Debug, Default)]
+struct CacheState {
+    slots: HashMap<String, Slot>,
+    tick: u64,
+}
+
+/// LRU-bounded, mutex-guarded content-addressed cache.
+#[derive(Debug)]
+pub struct ResultCache {
+    cap: usize,
+    state: Mutex<CacheState>,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+}
+
+impl ResultCache {
+    /// Build a cache holding at most `cap` entries (must be > 0 —
+    /// callers model "cache disabled" by not constructing one), with
+    /// counters registered on `registry`.
+    pub fn new(cap: usize, registry: &Registry) -> Self {
+        assert!(cap > 0, "cache capacity must be positive");
+        Self {
+            cap,
+            state: Mutex::new(CacheState::default()),
+            hits: registry.counter("cache_hits_total"),
+            misses: registry.counter("cache_misses_total"),
+            evictions: registry.counter("cache_evictions_total"),
+        }
+    }
+
+    /// Look up `key`, bumping the hit/miss counters and the entry's
+    /// recency on a hit.
+    pub fn get(&self, key: &str) -> Option<CacheEntry> {
+        let mut st = self.state.lock().expect("result cache poisoned");
+        st.tick += 1;
+        let tick = st.tick;
+        match st.slots.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                self.hits.inc();
+                Some(slot.entry.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`. When the cache is full the
+    /// least-recently-used entry is evicted first; recency ties are
+    /// impossible because the tick is strictly monotonic.
+    pub fn insert(&self, key: String, entry: CacheEntry) {
+        let mut st = self.state.lock().expect("result cache poisoned");
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(slot) = st.slots.get_mut(&key) {
+            slot.entry = entry;
+            slot.last_used = tick;
+            return;
+        }
+        if st.slots.len() >= self.cap {
+            // Deterministic LRU scan: capacities are small (hundreds),
+            // and `last_used` is unique, so min() picks one victim.
+            if let Some(victim) = st
+                .slots
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                st.slots.remove(&victim);
+                self.evictions.inc();
+            }
+        }
+        st.slots.insert(key, Slot { entry, last_used: tick });
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("result cache poisoned").slots.len()
+    }
+
+    /// True when nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Canonical cache key for a wire `DET` query: scalar tag `f64`, the
+/// shape, then each entry's 16-hex-digit IEEE-754 bit pattern.
+pub fn det_cache_key(a: &MatF64) -> String {
+    let mut key = format!("det f64 {} {}", a.rows(), a.cols());
+    for v in a.data() {
+        let _ = write!(key, " {:016x}", v.to_bits());
+    }
+    key
+}
+
+/// Canonical cache key for a wire `EXACT` query: scalar tag `i128`
+/// and the exact decimal entries.
+pub fn exact_cache_key(a: &MatI64) -> String {
+    let mut key = format!("exact i128 {} {}", a.rows(), a.cols());
+    for v in a.data() {
+        let _ = write!(key, " {v}");
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Mat;
+
+    fn entry(v: f64) -> CacheEntry {
+        CacheEntry { value: JobValue::F64(v), terms_total: 3, chunks_total: 1 }
+    }
+
+    #[test]
+    fn hit_returns_inserted_entry_and_counts() {
+        let reg = Registry::new();
+        let cache = ResultCache::new(4, &reg);
+        assert!(cache.get("k").is_none());
+        cache.insert("k".into(), entry(2.5));
+        let got = cache.get("k").expect("hit");
+        assert!(matches!(got.value, JobValue::F64(v) if v == 2.5));
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("cache_hits_total"), Some("1"));
+        assert_eq!(snap.get("cache_misses_total"), Some("1"));
+        assert_eq!(snap.get("cache_evictions_total"), Some("0"));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let reg = Registry::new();
+        let cache = ResultCache::new(2, &reg);
+        cache.insert("a".into(), entry(1.0));
+        cache.insert("b".into(), entry(2.0));
+        // Touch `a` so `b` is the LRU victim.
+        assert!(cache.get("a").is_some());
+        cache.insert("c".into(), entry(3.0));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get("a").is_some());
+        assert!(cache.get("b").is_none());
+        assert!(cache.get("c").is_some());
+        assert_eq!(reg.snapshot().get("cache_evictions_total"), Some("1"));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let reg = Registry::new();
+        let cache = ResultCache::new(1, &reg);
+        cache.insert("a".into(), entry(1.0));
+        cache.insert("a".into(), entry(4.0));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(reg.snapshot().get("cache_evictions_total"), Some("0"));
+        let got = cache.get("a").unwrap();
+        assert!(matches!(got.value, JobValue::F64(v) if v == 4.0));
+    }
+
+    #[test]
+    fn keys_are_bit_pattern_canonical() {
+        let a = Mat::from_rows(&[vec![1.5f64, -0.0], vec![2.0, 3.0]]);
+        let b = Mat::from_rows(&[vec![1.5f64, 0.0], vec![2.0, 3.0]]);
+        // -0.0 and 0.0 are distinct bit patterns, hence distinct keys.
+        assert_ne!(det_cache_key(&a), det_cache_key(&b));
+        let ia = Mat::from_rows(&[vec![1i64, 2], vec![3, 4]]);
+        assert_eq!(exact_cache_key(&ia), "exact i128 2 2 1 2 3 4");
+    }
+}

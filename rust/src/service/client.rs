@@ -76,6 +76,18 @@ impl Client {
         }
     }
 
+    /// Bind this connection to `tenant` for quota accounting (`AUTH`
+    /// verb). Server-side refusals (`auth-failed`, `reauth-denied`,
+    /// `auth-disabled`) surface as protocol errors.
+    pub fn auth(&mut self, tenant: &str, key: &str) -> Result<()> {
+        let req = Request::Auth { tenant: tenant.to_string(), key: key.to_string() };
+        match self.roundtrip(&req)? {
+            Response::Authed { .. } => Ok(()),
+            Response::Err(m) => Err(Error::Protocol(format!("server: {m}"))),
+            other => Err(Error::Protocol(format!("expected OK AUTH, got {other:?}"))),
+        }
+    }
+
     /// Float Radić determinant with latency breakdown.
     pub fn det(&mut self, a: &MatF64) -> Result<DetReply> {
         let t0 = Instant::now();

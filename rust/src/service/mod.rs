@@ -19,12 +19,26 @@
 //! [`crate::telemetry::Registry`]. The full wire contract is specified
 //! in `docs/PROTOCOL.md`.
 
+//! Two serving shells share the same [`ServiceCore`]: the original
+//! thread-per-connection TCP loop ([`Server::start`]) and the
+//! dependency-free event-loop reactor ([`reactor`], `serve --reactor`)
+//! that multiplexes thousands of non-blocking connections over a small
+//! bounded worker pool. Per-tenant identity and token-bucket quotas
+//! live in [`tenant`]; the content-addressed determinant cache in
+//! [`cache`].
+
+pub mod cache;
 pub mod client;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
+pub mod tenant;
 pub mod transport;
 
+pub use cache::{CacheEntry, ResultCache};
 pub use client::{Client, CompleteReply, GrantReply, JobStatusReply};
 pub use protocol::{Request, Response};
+pub use reactor::{NbListener, NbStream, Reactor, ReactorConfig, ReactorHandle};
 pub use server::{ConnCtx, Server, ServerHandle, ServiceCore};
+pub use tenant::{Draw, TenantConfig, TenantTable};
 pub use transport::{Conn, ScriptConn, ScriptTransport, TcpTransport, Transport};

@@ -39,6 +39,11 @@
 //!              or `g<chunks>` (GEOM chosen: remainder chunk count)
 //!   (both optional on parse — absent in a pre-speculation server's
 //!    reply, which degrades to off rather than a protocol error)
+//! → AUTH <tenant> <key>                  bind this connection to a
+//! ← OK AUTH <tenant>                     tenant (quota accounting);
+//!                                        re-AUTH as the same tenant is
+//!                                        idempotent, as another tenant
+//!                                        is refused (`reauth-denied`)
 //! → PING                                 liveness
 //! ← PONG
 //! → QUIT                                 close the connection
@@ -148,6 +153,13 @@ pub enum Request {
     Metrics,
     /// Per-job fleet telemetry snapshot.
     JobMetrics(String),
+    /// Bind this connection to a tenant for quota accounting.
+    Auth {
+        /// Tenant id (same charset as job ids).
+        tenant: String,
+        /// Shared-secret key.
+        key: String,
+    },
     /// Liveness probe.
     Ping,
     /// Close the connection.
@@ -165,6 +177,11 @@ pub enum Response {
     Job {
         /// The job id.
         id: String,
+    },
+    /// Connection bound to a tenant (`AUTH` accepted).
+    Authed {
+        /// The tenant id the connection is now accounted under.
+        tenant: String,
     },
     /// Durable job progress snapshot.
     JobStatus {
@@ -486,6 +503,25 @@ impl Request {
             }
             return Ok(Request::JobMetrics(id));
         }
+        if let Some(rest) = line.strip_prefix("AUTH ") {
+            let mut t = rest.split(' ');
+            let tenant = t.next().unwrap_or("");
+            if !valid_id(tenant) {
+                return Err(Error::Protocol(format!("bad tenant id {tenant:?}")));
+            }
+            let key = t
+                .next()
+                .ok_or_else(|| Error::Protocol("missing auth key".into()))?;
+            // Deliberately NOT echoed back: keys never belong in error
+            // replies (they would land in client logs and traces).
+            if !valid_id(key) {
+                return Err(Error::Protocol("bad auth key".into()));
+            }
+            if t.next().is_some() {
+                return Err(Error::Protocol("trailing AUTH tokens".into()));
+            }
+            return Ok(Request::Auth { tenant: tenant.to_string(), key: key.to_string() });
+        }
         let mut parts = line.splitn(4, ' ');
         match parts.next() {
             Some("PING") => Ok(Request::Ping),
@@ -572,6 +608,7 @@ impl Request {
             }
             Request::Metrics => "METRICS\n".into(),
             Request::JobMetrics(id) => format!("METRICS JOB {id}\n"),
+            Request::Auth { tenant, key } => format!("AUTH {tenant} {key}\n"),
         }
     }
 }
@@ -585,6 +622,13 @@ impl Response {
         }
         if line == "OK ABANDONED" {
             return Ok(Response::Abandoned);
+        }
+        // Must precede the generic `OK <det> <terms> <micros>` branch.
+        if let Some(tenant) = line.strip_prefix("OK AUTH ") {
+            if !valid_id(tenant) {
+                return Err(Error::Protocol(format!("bad tenant id {tenant:?}")));
+            }
+            return Ok(Response::Authed { tenant: tenant.to_string() });
         }
         if let Some(msg) = line.strip_prefix("ERR ") {
             return Ok(Response::Err(msg.to_string()));
@@ -907,6 +951,7 @@ impl Response {
                 format!("OK {det} {terms} {micros}\n")
             }
             Response::Job { id } => format!("OK JOB {id}\n"),
+            Response::Authed { tenant } => format!("OK AUTH {tenant}\n"),
             Response::JobStatus {
                 id,
                 state,
@@ -988,6 +1033,39 @@ mod tests {
         let a = Mat::from_vec(2, 3, vec![1i64, -2, 3, 4, 5, -6]).unwrap();
         let line = Request::Exact(a.clone()).encode();
         assert_eq!(Request::parse(&line).unwrap(), Request::Exact(a));
+    }
+
+    #[test]
+    fn auth_roundtrips() {
+        let req = Request::Auth { tenant: "acme-1".into(), key: "s3cret_k".into() };
+        assert_eq!(req.encode(), "AUTH acme-1 s3cret_k\n");
+        assert_eq!(Request::parse(&req.encode()).unwrap(), req);
+        let resp = Response::Authed { tenant: "acme-1".into() };
+        assert_eq!(resp.encode(), "OK AUTH acme-1\n");
+        assert_eq!(Response::parse(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn hostile_auth_frames_are_protocol_errors() {
+        let long = "x".repeat(97);
+        for bad in [
+            "AUTH".to_string(),                      // bare verb
+            "AUTH acme".into(),                      // missing key
+            "AUTH acme key extra".into(),            // trailing tokens
+            "AUTH bad!id key".into(),                // invalid tenant charset
+            "AUTH acme bad key".into(),              // space splits into 3 tokens
+            "AUTH acme b\u{7f}d".into(),             // invalid key charset
+            format!("AUTH {long} key"),              // oversized tenant id
+            format!("AUTH acme {long}"),             // oversized key
+            "AUTH  acme key".into(),                 // empty tenant token
+        ] {
+            assert!(Request::parse(&bad).is_err(), "accepted {bad:?}");
+        }
+        // The key never leaks into the error text.
+        let err = Request::parse("AUTH acme b\u{7f}d").unwrap_err().to_string();
+        assert!(!err.contains('\u{7f}'), "key echoed in {err:?}");
+        // A bad tenant in the reply direction is rejected too.
+        assert!(Response::parse("OK AUTH bad!tenant").is_err());
     }
 
     #[test]

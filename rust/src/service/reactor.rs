@@ -1,0 +1,890 @@
+//! Dependency-free event-loop reactor: thousands of concurrent
+//! connections over a handful of threads.
+//!
+//! The thread-per-connection shell in [`super::server`] is simple but
+//! tops out at a few hundred clients (one parked OS thread each). The
+//! reactor serves the same [`ServiceCore`] behind non-blocking IO:
+//!
+//! * **One event-loop thread** owns every connection: non-blocking
+//!   accept, per-connection read buffers (capped at the same frame
+//!   limit as the threaded path), and write backpressure (replies are
+//!   buffered and flushed as the socket drains; a reader that stops
+//!   draining stops being read from, and is dropped past a hard cap).
+//! * **A bounded worker pool** runs the compute verbs (`DET`, `EXACT`,
+//!   `JOB SUBMIT`) off the loop, fed by per-tenant FIFO queues drained
+//!   round-robin so one flooding tenant cannot starve the rest. With
+//!   `pool_workers == 0` compute runs inline on the loop — the fully
+//!   deterministic mode `testkit::sim` drives.
+//! * **`JOB WAIT` never parks a thread**: the reactor registers a
+//!   deadline and re-probes [`ServiceCore::poll_job_wait`] when the
+//!   manager's completion epoch moves, on a coarse cadence (fleet
+//!   completions don't bump the epoch), or at the deadline.
+//! * **Idle and slowloris timeouts** ride the [`Clock`] seam, so
+//!   `testkit::sim` storms replay them deterministically with a
+//!   virtual clock.
+//!
+//! Everything is `std`-only: readiness is discovered by polling
+//! non-blocking sockets from the loop (no `epoll` FFI — the crate has
+//! no dependencies, libc included), with a short sleep when a pass
+//! finds no work. The [`NbStream`]/[`NbListener`] seams are what let
+//! the simulation fabric drive the identical loop over in-memory
+//! pipes, one `step()` at a time.
+
+use super::protocol::{Request, Response};
+use super::server::{ConnCtx, ServiceCore, MAX_LINE_BYTES, MAX_WAIT};
+use crate::clock::Clock;
+use crate::telemetry::{Counter, Gauge};
+use crate::Result;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Retry hint (ms) in the `backpressure` refusal: roughly how fast the
+/// pool drains a queue slot, not a guarantee.
+pub const BACKPRESSURE_RETRY_MS: u64 = 50;
+
+/// Cadence for re-probing parked `JOB WAIT`s when the completion epoch
+/// has not moved (fleet-drained jobs complete without bumping it).
+const WAIT_POLL_CADENCE: Duration = Duration::from_millis(50);
+
+/// Per-pass read chunk. Small enough to interleave fairly, large
+/// enough that a matrix-sized frame needs few passes.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// A non-blocking byte stream the reactor can poll.
+///
+/// Both methods distinguish "no progress right now" (`Ok(None)`) from
+/// EOF (`Ok(Some(0))` on read) and fatal errors (`Err`). Real TCP maps
+/// `WouldBlock`/`Interrupted` to `Ok(None)`; the simulation fabric
+/// implements the same contract over in-memory pipes.
+pub trait NbStream: Send {
+    /// Read into `buf`: `Ok(Some(0))` EOF, `Ok(Some(n))` bytes read,
+    /// `Ok(None)` would-block.
+    fn read_nb(&mut self, buf: &mut [u8]) -> std::io::Result<Option<usize>>;
+    /// Write from `buf`: `Ok(Some(n))` bytes written, `Ok(None)`
+    /// would-block.
+    fn write_nb(&mut self, buf: &[u8]) -> std::io::Result<Option<usize>>;
+}
+
+/// A non-blocking accept source feeding the reactor new connections.
+pub trait NbListener: Send {
+    /// `Ok(Some(stream))` when a connection is ready, `Ok(None)` when
+    /// none is pending.
+    fn accept_nb(&mut self) -> std::io::Result<Option<Box<dyn NbStream>>>;
+}
+
+/// [`NbStream`] over a real non-blocking [`TcpStream`].
+pub struct TcpNbStream {
+    stream: TcpStream,
+}
+
+impl NbStream for TcpNbStream {
+    fn read_nb(&mut self, buf: &mut [u8]) -> std::io::Result<Option<usize>> {
+        match self.stream.read(buf) {
+            Ok(n) => Ok(Some(n)),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn write_nb(&mut self, buf: &[u8]) -> std::io::Result<Option<usize>> {
+        match self.stream.write(buf) {
+            Ok(n) => Ok(Some(n)),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// [`NbListener`] over a real non-blocking [`TcpListener`].
+pub struct TcpNbListener {
+    listener: TcpListener,
+}
+
+impl TcpNbListener {
+    /// Bind `addr` in non-blocking mode.
+    pub fn bind(addr: &str) -> Result<(Self, std::net::SocketAddr)> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok((Self { listener }, local))
+    }
+}
+
+impl NbListener for TcpNbListener {
+    fn accept_nb(&mut self) -> std::io::Result<Option<Box<dyn NbStream>>> {
+        match self.listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(true)?;
+                let _ = stream.set_nodelay(true);
+                Ok(Some(Box::new(TcpNbStream { stream })))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Reactor tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Connection cap; excess accepts are refused with `ERR
+    /// server-busy …` and closed.
+    pub max_conns: usize,
+    /// Close connections with no completed frame for this long
+    /// (connections parked in `JOB WAIT` or awaiting a compute reply
+    /// are exempt — they have their own bounds).
+    pub idle_timeout: Duration,
+    /// Slowloris bound: a *partial* frame older than this is refused
+    /// (`ERR slow-frame …`) and the connection closed.
+    pub frame_timeout: Duration,
+    /// Soft write-buffer cap: past it the connection is not read from
+    /// until the peer drains replies. The hard cap (4×) drops the
+    /// connection.
+    pub max_wbuf: usize,
+    /// Compute-pool threads. `0` runs compute inline on the loop —
+    /// deterministic, the mode the simulation fabric uses.
+    pub pool_workers: usize,
+    /// Cap on queued compute tasks; past it `DET`/`EXACT`/`JOB
+    /// SUBMIT` are refused with the retryable `ERR backpressure …`.
+    pub submit_queue_cap: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 1024,
+            idle_timeout: Duration::from_secs(60),
+            frame_timeout: Duration::from_secs(10),
+            max_wbuf: 8 << 20,
+            pool_workers: 4,
+            submit_queue_cap: 128,
+        }
+    }
+}
+
+/// A compute task queued for the pool (or the inline drain).
+struct Task {
+    slot: usize,
+    gen: u64,
+    line: String,
+    tenant: Option<String>,
+}
+
+/// Per-tenant FIFO queues drained round-robin. Unauthenticated
+/// connections share the `""` queue.
+#[derive(Default)]
+struct SchedState {
+    queues: Vec<(String, VecDeque<Task>)>,
+    cursor: usize,
+    queued: usize,
+    stop: bool,
+}
+
+fn push_task(st: &mut SchedState, task: Task) {
+    let key = task.tenant.clone().unwrap_or_default();
+    match st.queues.iter_mut().find(|(t, _)| *t == key) {
+        Some((_, q)) => q.push_back(task),
+        None => st.queues.push((key, VecDeque::from([task]))),
+    }
+    st.queued += 1;
+}
+
+fn pop_fair(st: &mut SchedState) -> Option<Task> {
+    let len = st.queues.len();
+    for k in 0..len {
+        let idx = (st.cursor + k) % len;
+        if let Some(task) = st.queues[idx].1.pop_front() {
+            st.queued -= 1;
+            if st.queues[idx].1.is_empty() {
+                st.queues.remove(idx);
+                st.cursor = if st.queues.is_empty() { 0 } else { idx % st.queues.len() };
+            } else {
+                st.cursor = (idx + 1) % len;
+            }
+            return Some(task);
+        }
+    }
+    None
+}
+
+/// State shared between the loop and the pool threads.
+struct Shared {
+    sched: Mutex<SchedState>,
+    work_cv: Condvar,
+    done: Mutex<Vec<(usize, u64, Response)>>,
+}
+
+/// A parked `JOB WAIT` (satellite of the no-blocked-threads rule).
+struct PendingWait {
+    id: String,
+    deadline: Duration,
+    seen_epoch: Option<u64>,
+    next_poll: Duration,
+}
+
+/// One live connection's reactor-side state.
+struct RConn {
+    io: Box<dyn NbStream>,
+    ctx: ConnCtx,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Timestamp of the last read progress (idle reaping).
+    last_activity: Duration,
+    /// Set while `rbuf` holds a partial frame (slowloris reaping).
+    frame_since: Option<Duration>,
+    /// A compute task is in flight; frames buffer but don't dispatch.
+    busy: bool,
+    wait: Option<PendingWait>,
+    /// Flush remaining replies, then close.
+    closing: bool,
+    /// Peer hit EOF; drain buffered complete frames, then close.
+    eof: bool,
+}
+
+struct Slot {
+    conn: Option<RConn>,
+    gen: u64,
+}
+
+/// The event loop. Owns the listener, the connection table, and the
+/// compute pool; [`Reactor::step`] is one deterministic pass (what the
+/// simulation drives), [`Reactor::serve`] wraps it in a background
+/// thread over real TCP.
+pub struct Reactor {
+    core: Arc<ServiceCore>,
+    cfg: ReactorConfig,
+    clock: Arc<dyn Clock>,
+    listener: Box<dyn NbListener>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    live: usize,
+    shared: Arc<Shared>,
+    pool: Vec<std::thread::JoinHandle<()>>,
+    trace: Option<Vec<(u128, String)>>,
+    accepts: Counter,
+    conns_gauge: Gauge,
+    timeouts: Counter,
+    busy_rejects: Counter,
+    backpressure: Counter,
+    waits_parked: Counter,
+}
+
+/// What a parsed frame needs from the loop.
+enum Route {
+    /// Serve on the loop via [`ServiceCore::handle_line`].
+    Inline,
+    /// Queue for the compute pool (fair per-tenant scheduling).
+    Compute,
+    /// Park as a deadline-registered wait.
+    Wait { id: String, timeout_ms: u64 },
+}
+
+fn classify(line: &str) -> Route {
+    match Request::parse(line) {
+        Ok(Request::Det(_) | Request::Exact(_) | Request::JobSubmit { .. }) => Route::Compute,
+        Ok(Request::JobWait { id, timeout_ms }) if timeout_ms > 0 => {
+            Route::Wait { id, timeout_ms }
+        }
+        _ => Route::Inline,
+    }
+}
+
+fn record(trace: &mut Option<Vec<(u128, String)>>, now: Duration, msg: String) {
+    if let Some(tr) = trace.as_mut() {
+        tr.push((now.as_millis(), msg));
+    }
+}
+
+/// First whitespace token of a frame/reply — trace label, never data.
+fn head(line: &str) -> &str {
+    line.split_whitespace().next().unwrap_or("")
+}
+
+impl Reactor {
+    /// Build a reactor over any accept source. `clock` drives the
+    /// idle/slowloris/wait deadlines (a `SimClock` makes every timeout
+    /// deterministic); `cfg.pool_workers` threads are spawned now.
+    pub fn new(
+        core: Arc<ServiceCore>,
+        listener: Box<dyn NbListener>,
+        cfg: ReactorConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            sched: Mutex::new(SchedState::default()),
+            work_cv: Condvar::new(),
+            done: Mutex::new(Vec::new()),
+        });
+        let mut pool = Vec::new();
+        for _ in 0..cfg.pool_workers {
+            let core = Arc::clone(&core);
+            let shared = Arc::clone(&shared);
+            pool.push(std::thread::spawn(move || pool_worker(&core, &shared)));
+        }
+        let registry = Arc::clone(core.registry());
+        Self {
+            cfg,
+            clock,
+            listener,
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            shared,
+            pool,
+            trace: None,
+            accepts: registry.counter("reactor_accepts_total"),
+            conns_gauge: registry.gauge("reactor_conns"),
+            timeouts: registry.counter("reactor_timeouts_total"),
+            busy_rejects: registry.counter("reactor_busy_rejects_total"),
+            backpressure: registry.counter("reactor_backpressure_total"),
+            waits_parked: registry.counter("reactor_waits_parked_total"),
+            core,
+        }
+    }
+
+    /// Bind `addr` and serve in a background thread over real TCP.
+    pub fn serve(
+        core: Arc<ServiceCore>,
+        addr: &str,
+        cfg: ReactorConfig,
+    ) -> Result<ReactorHandle> {
+        let (listener, local) = TcpNbListener::bind(addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let loop_stop = Arc::clone(&stop);
+        let mut reactor = Reactor::new(core, Box::new(listener), cfg, crate::clock::wall());
+        let thread = std::thread::spawn(move || {
+            while !loop_stop.load(Ordering::SeqCst) {
+                if reactor.step() == 0 {
+                    // No readiness API without FFI: nap briefly instead
+                    // of spinning. 1 ms keeps tail latency low while an
+                    // idle reactor costs ~nothing.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        });
+        Ok(ReactorHandle { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// Record an event trace (accepts, frames, replies, closes —
+    /// verb heads only, never payloads). Sim storms enable this and
+    /// assert a fixed seed replays the identical trace run-twice.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Drain the recorded trace as `t=<ms>ms <event>` lines.
+    pub fn take_trace(&mut self) -> Vec<String> {
+        self.trace
+            .replace(Vec::new())
+            .unwrap_or_default()
+            .into_iter()
+            .map(|(ms, msg)| format!("t={ms}ms {msg}"))
+            .collect()
+    }
+
+    /// Live connection count (storm tests assert return-to-baseline).
+    pub fn conn_count(&self) -> usize {
+        self.live
+    }
+
+    /// One deterministic pass: accept, deliver pool completions, per
+    /// connection flush/read/dispatch, drain inline compute, resolve
+    /// waits and timeouts. Returns the number of units of work done —
+    /// `0` means a real-TCP loop may nap.
+    pub fn step(&mut self) -> u64 {
+        let now = self.clock.now();
+        let mut work = 0u64;
+
+        // New connections.
+        loop {
+            match self.listener.accept_nb() {
+                Ok(Some(io)) => {
+                    work += 1;
+                    self.admit(io, now);
+                }
+                Ok(None) => break,
+                Err(_) => break,
+            }
+        }
+
+        // Compute replies from the pool.
+        let done = std::mem::take(&mut *self.shared.done.lock().expect("done lock poisoned"));
+        for (slot, gen, resp) in done {
+            work += self.deliver(slot, gen, resp, now);
+        }
+
+        // Per-connection IO.
+        for i in 0..self.slots.len() {
+            work += self.service_slot(i, now);
+        }
+
+        // Inline compute (pool_workers == 0): drain fairly, then flush
+        // the replies this pass so sim steps see them immediately.
+        if self.cfg.pool_workers == 0 {
+            loop {
+                let task = pop_fair(&mut self.shared.sched.lock().expect("sched poisoned"));
+                let Some(task) = task else { break };
+                work += 1;
+                let mut ctx = ConnCtx::for_tenant(task.tenant);
+                let resp = self
+                    .core
+                    .handle_line(&task.line, &mut ctx)
+                    .unwrap_or_else(|| Response::Err("unexpected QUIT in compute queue".into()));
+                work += self.deliver(task.slot, task.gen, resp, now);
+            }
+            for i in 0..self.slots.len() {
+                work += self.flush_slot(i, now);
+            }
+        }
+
+        work
+    }
+
+    fn admit(&mut self, mut io: Box<dyn NbStream>, now: Duration) {
+        self.accepts.inc();
+        if self.live >= self.cfg.max_conns {
+            // Refuse over-limit connections with one best-effort reply
+            // so the client learns why — no slot is ever occupied.
+            self.busy_rejects.inc();
+            let reply = Response::Err(
+                "server-busy (connection limit reached; retry later)".into(),
+            )
+            .encode();
+            let _ = io.write_nb(reply.as_bytes());
+            record(&mut self.trace, now, "reject reason=server-busy".into());
+            return;
+        }
+        let conn = RConn {
+            io,
+            ctx: ConnCtx::default(),
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            last_activity: now,
+            frame_since: None,
+            busy: false,
+            wait: None,
+            closing: false,
+            eof: false,
+        };
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.slots[i].gen += 1;
+                self.slots[i].conn = Some(conn);
+                i
+            }
+            None => {
+                self.slots.push(Slot { conn: Some(conn), gen: 0 });
+                self.slots.len() - 1
+            }
+        };
+        self.live += 1;
+        self.conns_gauge.set(self.live as i64);
+        record(&mut self.trace, now, format!("accept slot={slot}"));
+    }
+
+    fn drop_slot(&mut self, i: usize, now: Duration, reason: &str) {
+        if self.slots[i].conn.take().is_some() {
+            self.free.push(i);
+            self.live -= 1;
+            self.conns_gauge.set(self.live as i64);
+            record(&mut self.trace, now, format!("close slot={i} reason={reason}"));
+        }
+    }
+
+    /// Deliver a compute reply to its connection (dropped or recycled
+    /// slots discard it via the generation fence).
+    fn deliver(&mut self, slot: usize, gen: u64, resp: Response, now: Duration) -> u64 {
+        let Some(s) = self.slots.get_mut(slot) else { return 0 };
+        if s.gen != gen {
+            return 0;
+        }
+        let Some(conn) = s.conn.as_mut() else { return 0 };
+        conn.busy = false;
+        let encoded = resp.encode();
+        record(
+            &mut self.trace,
+            now,
+            format!("reply slot={slot} head={}", head(&encoded)),
+        );
+        conn.wbuf.extend_from_slice(encoded.as_bytes());
+        1
+    }
+
+    /// Flush pending replies only (used after the inline drain).
+    fn flush_slot(&mut self, i: usize, now: Duration) -> u64 {
+        let Some(mut conn) = self.slots[i].conn.take() else { return 0 };
+        let (work, fatal) = flush(&mut conn);
+        if fatal {
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "write-error");
+            return work;
+        }
+        if conn.closing && conn.wbuf.len() == conn.wpos {
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "done");
+            return work + 1;
+        }
+        self.slots[i].conn = Some(conn);
+        work
+    }
+
+    /// Full service pass for one connection.
+    fn service_slot(&mut self, i: usize, now: Duration) -> u64 {
+        let Some(mut conn) = self.slots[i].conn.take() else { return 0 };
+        let mut work = 0u64;
+
+        // 1. Flush pending replies.
+        let (w, fatal) = flush(&mut conn);
+        work += w;
+        if fatal {
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "write-error");
+            return work;
+        }
+        let pending_out = conn.wbuf.len() - conn.wpos;
+        if pending_out > 4 * self.cfg.max_wbuf {
+            // The peer stopped reading long ago; cut it loose.
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "write-overflow");
+            return work;
+        }
+        if conn.closing {
+            if pending_out == 0 {
+                self.slots[i].conn = Some(conn);
+                self.drop_slot(i, now, "done");
+                return work + 1;
+            }
+            self.slots[i].conn = Some(conn);
+            return work;
+        }
+
+        // 2. Read what the socket has (backpressure: stop reading while
+        // the peer owes us a drain).
+        if !conn.eof && pending_out < self.cfg.max_wbuf {
+            let mut tmp = [0u8; READ_CHUNK];
+            loop {
+                if conn.rbuf.len() > MAX_LINE_BYTES {
+                    break; // handled below as an oversized frame
+                }
+                match conn.io.read_nb(&mut tmp) {
+                    Ok(Some(0)) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(Some(n)) => {
+                        conn.rbuf.extend_from_slice(&tmp[..n]);
+                        conn.last_activity = now;
+                        work += 1;
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        self.slots[i].conn = Some(conn);
+                        self.drop_slot(i, now, "read-error");
+                        return work;
+                    }
+                }
+            }
+        }
+
+        // 3. Oversized frame: same contract as the threaded path — one
+        // ERR, then hang up (the rest of the stream is the same line).
+        let first_line_over = match conn.rbuf.iter().position(|&b| b == b'\n') {
+            Some(pos) => pos > MAX_LINE_BYTES,
+            None => conn.rbuf.len() > MAX_LINE_BYTES,
+        };
+        if first_line_over {
+            self.core.count_frame_reject();
+            let reply = Response::Err("request line too long".into()).encode();
+            record(&mut self.trace, now, format!("reply slot={i} head=ERR"));
+            conn.wbuf.extend_from_slice(reply.as_bytes());
+            conn.rbuf.clear();
+            conn.closing = true;
+            self.slots[i].conn = Some(conn);
+            return work + 1;
+        }
+        let _ = has_newline;
+
+        // 4. Dispatch complete frames (one at a time: strict
+        // request/response, so a busy or waiting connection buffers).
+        while !conn.busy && conn.wait.is_none() && !conn.closing {
+            let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') else { break };
+            let raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw[..pos]).into_owned();
+            conn.last_activity = now;
+            work += self.dispatch(i, &mut conn, line, now);
+        }
+
+        // 5. Partial-frame (slowloris) bookkeeping + idle reaping.
+        conn.frame_since = if conn.rbuf.is_empty() {
+            None
+        } else {
+            conn.frame_since.or(Some(now))
+        };
+        if conn.eof && !conn.rbuf.contains(&b'\n') {
+            // Peer is gone and nothing complete remains: a trailing
+            // half-frame is discarded, like the threaded path does.
+            conn.closing = true;
+            if conn.wbuf.len() == conn.wpos {
+                self.slots[i].conn = Some(conn);
+                self.drop_slot(i, now, "eof");
+                return work + 1;
+            }
+        }
+        if let Some(since) = conn.frame_since {
+            if !conn.busy && now.saturating_sub(since) > self.cfg.frame_timeout {
+                self.timeouts.inc();
+                let reply = Response::Err(
+                    "slow-frame (partial request older than the frame timeout)".into(),
+                )
+                .encode();
+                conn.wbuf.extend_from_slice(reply.as_bytes());
+                conn.rbuf.clear();
+                conn.closing = true;
+                record(&mut self.trace, now, format!("timeout slot={i} kind=slow-frame"));
+                self.slots[i].conn = Some(conn);
+                return work + 1;
+            }
+        } else if !conn.busy
+            && conn.wait.is_none()
+            && !conn.closing
+            && now.saturating_sub(conn.last_activity) > self.cfg.idle_timeout
+        {
+            self.timeouts.inc();
+            record(&mut self.trace, now, format!("timeout slot={i} kind=idle"));
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "idle");
+            return work + 1;
+        }
+
+        // 6. Parked JOB WAIT: resolve on epoch movement, cadence, or
+        // deadline — never by blocking.
+        if conn.wait.is_some() {
+            let (id, deadline, seen_epoch, next_poll) = {
+                let w = conn.wait.as_ref().expect("checked above");
+                (w.id.clone(), w.deadline, w.seen_epoch, w.next_poll)
+            };
+            let expired = self.clock.expired(deadline);
+            let epoch = self.core.jobs_done_epoch();
+            if expired || epoch != seen_epoch || now >= next_poll {
+                match self.core.poll_job_wait(&id, expired) {
+                    Some(resp) => {
+                        conn.wait = None;
+                        let encoded = resp.encode();
+                        record(
+                            &mut self.trace,
+                            now,
+                            format!("wait-wake slot={i} head={}", head(&encoded)),
+                        );
+                        conn.wbuf.extend_from_slice(encoded.as_bytes());
+                        work += 1;
+                    }
+                    None => {
+                        let w = conn.wait.as_mut().expect("checked above");
+                        w.seen_epoch = epoch;
+                        w.next_poll = now + WAIT_POLL_CADENCE;
+                    }
+                }
+            }
+        }
+
+        // 7. Final flush so replies queued this pass land this pass.
+        let (w, fatal) = flush(&mut conn);
+        work += w;
+        if fatal {
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "write-error");
+            return work;
+        }
+        if conn.closing && conn.wbuf.len() == conn.wpos {
+            self.slots[i].conn = Some(conn);
+            self.drop_slot(i, now, "done");
+            return work + 1;
+        }
+        self.slots[i].conn = Some(conn);
+        work
+    }
+
+    /// Route one complete frame.
+    fn dispatch(&mut self, i: usize, conn: &mut RConn, line: String, now: Duration) -> u64 {
+        record(&mut self.trace, now, format!("frame slot={i} head={}", head(&line)));
+        match classify(&line) {
+            Route::Compute => {
+                let gen = self.slots[i].gen;
+                let mut st = self.shared.sched.lock().expect("sched poisoned");
+                if st.queued >= self.cfg.submit_queue_cap {
+                    drop(st);
+                    self.backpressure.inc();
+                    let reply = Response::Err(format!(
+                        "backpressure retry-ms={BACKPRESSURE_RETRY_MS}"
+                    ))
+                    .encode();
+                    record(&mut self.trace, now, format!("backpressure slot={i}"));
+                    conn.wbuf.extend_from_slice(reply.as_bytes());
+                } else {
+                    conn.busy = true;
+                    push_task(
+                        &mut st,
+                        Task { slot: i, gen, line, tenant: conn.ctx.tenant.clone() },
+                    );
+                    drop(st);
+                    self.shared.work_cv.notify_one();
+                }
+            }
+            Route::Wait { id, timeout_ms } => {
+                self.core.count_wait_frame();
+                match self.core.poll_job_wait(&id, false) {
+                    Some(resp) => {
+                        let encoded = resp.encode();
+                        record(
+                            &mut self.trace,
+                            now,
+                            format!("reply slot={i} head={}", head(&encoded)),
+                        );
+                        conn.wbuf.extend_from_slice(encoded.as_bytes());
+                    }
+                    None => {
+                        self.waits_parked.inc();
+                        let timeout = Duration::from_millis(timeout_ms).min(MAX_WAIT);
+                        record(&mut self.trace, now, format!("wait-park slot={i}"));
+                        conn.wait = Some(PendingWait {
+                            id,
+                            deadline: self.clock.deadline(timeout),
+                            seen_epoch: self.core.jobs_done_epoch(),
+                            next_poll: now + WAIT_POLL_CADENCE,
+                        });
+                    }
+                }
+            }
+            Route::Inline => match self.core.handle_line(&line, &mut conn.ctx) {
+                Some(resp) => {
+                    let encoded = resp.encode();
+                    record(
+                        &mut self.trace,
+                        now,
+                        format!("reply slot={i} head={}", head(&encoded)),
+                    );
+                    conn.wbuf.extend_from_slice(encoded.as_bytes());
+                }
+                None => {
+                    record(&mut self.trace, now, format!("quit slot={i}"));
+                    conn.closing = true;
+                }
+            },
+        }
+        1
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.sched.lock().expect("sched poisoned");
+            st.stop = true;
+        }
+        self.shared.work_cv.notify_all();
+        for t in self.pool.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Flush as much of `wbuf` as the socket takes. Returns `(work,
+/// fatal)`.
+fn flush(conn: &mut RConn) -> (u64, bool) {
+    let mut work = 0u64;
+    while conn.wpos < conn.wbuf.len() {
+        match conn.io.write_nb(&conn.wbuf[conn.wpos..]) {
+            Ok(Some(0)) => return (work, true),
+            Ok(Some(n)) => {
+                conn.wpos += n;
+                work += 1;
+            }
+            Ok(None) => break,
+            Err(_) => return (work, true),
+        }
+    }
+    if conn.wpos >= conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    (work, false)
+}
+
+/// Compute-pool worker: pop fairly, serve through the core with a
+/// context carrying the connection's tenant, push the reply back.
+fn pool_worker(core: &ServiceCore, shared: &Shared) {
+    loop {
+        let task = {
+            let mut st = shared.sched.lock().expect("sched poisoned");
+            loop {
+                if st.stop {
+                    return;
+                }
+                if let Some(t) = pop_fair(&mut st) {
+                    break t;
+                }
+                let (guard, _) = shared
+                    .work_cv
+                    .wait_timeout(st, Duration::from_millis(100))
+                    .expect("sched poisoned");
+                st = guard;
+            }
+        };
+        let mut ctx = ConnCtx::for_tenant(task.tenant.clone());
+        let resp = core
+            .handle_line(&task.line, &mut ctx)
+            .unwrap_or_else(|| Response::Err("unexpected QUIT in compute queue".into()));
+        shared
+            .done
+            .lock()
+            .expect("done lock poisoned")
+            .push((task.slot, task.gen, resp));
+    }
+}
+
+/// Handle to a reactor serving real TCP in a background thread.
+pub struct ReactorHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    /// Bound address (ephemeral-port tests).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop the loop and join it. Live connections are dropped.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReactorHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

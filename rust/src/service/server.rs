@@ -10,37 +10,52 @@
 //! every protocol behaviour tested under simulation is byte-for-byte
 //! the behaviour a real socket would see.
 
+use super::cache::{det_cache_key, exact_cache_key, CacheEntry, ResultCache, DEFAULT_CACHE_ENTRIES};
 use super::protocol::{Request, Response};
+use super::tenant::{Draw, TenantTable};
+use crate::clock::{self, Clock};
 use crate::coordinator::Coordinator;
 use crate::fleet::{CompleteOutcome, FleetConfig, GrantOutcome, LeaseTable};
-use crate::jobs::{ChunkRecord, JobManager, JobStatus};
+use crate::jobs::{encode_spec_body, ChunkRecord, JobManager, JobSpec, JobStatus};
 use crate::telemetry::{Counter, Registry};
 use crate::Result;
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Hard cap on one request line. Generous for the largest legal matrix
 /// (64×10 000 values) but bounds memory against a hostile client that
 /// streams an endless line.
-const MAX_LINE_BYTES: usize = 32 << 20;
+pub(crate) const MAX_LINE_BYTES: usize = 32 << 20;
 
 /// Server-side bound on `JOB WAIT` so a client cannot pin a handler
 /// thread forever.
-const MAX_WAIT: Duration = Duration::from_secs(600);
+pub(crate) const MAX_WAIT: Duration = Duration::from_secs(600);
 
 /// Per-connection protocol state.
 ///
 /// Job specs already shipped on this connection: grants for these jobs
-/// reply `CACHED` instead of re-sending a matrix-sized spec. Lives and
-/// dies with the connection on both transports, which is what keeps the
-/// two sides' spec caches consistent across reconnects.
+/// reply `CACHED` instead of re-sending a matrix-sized spec. The tenant
+/// binding is the `AUTH` outcome. Lives and dies with the connection on
+/// both transports, which is what keeps the two sides' spec caches (and
+/// the quota identity) consistent across reconnects.
 #[derive(Debug, Default)]
 pub struct ConnCtx {
     sent_specs: HashSet<String>,
+    /// Tenant this connection authenticated as (`AUTH` verb).
+    pub(crate) tenant: Option<String>,
+}
+
+impl ConnCtx {
+    /// A context pre-bound to `tenant` — the reactor's worker pool uses
+    /// this to carry a connection's quota identity into a compute task
+    /// without sharing the connection's own context across threads.
+    pub(crate) fn for_tenant(tenant: Option<String>) -> Self {
+        Self { sent_specs: HashSet::new(), tenant }
+    }
 }
 
 /// Per-verb request counters plus error tallies (`service_*` family).
@@ -60,6 +75,10 @@ struct CoreCounters {
     parse_errors: Counter,
     /// Frames rejected before parsing (over [`MAX_LINE_BYTES`]).
     frame_rejects: Counter,
+    /// `AUTH` frames (accepted or refused).
+    auth: Counter,
+    /// Metered verbs refused because a tenant bucket was empty.
+    quota_rejects: Counter,
 }
 
 impl CoreCounters {
@@ -75,14 +94,34 @@ impl CoreCounters {
             errors: reg.counter("service_errors_total"),
             parse_errors: reg.counter("service_parse_errors_total"),
             frame_rejects: reg.counter("service_frame_rejects_total"),
+            auth: reg.counter("service_auth_total"),
+            quota_rejects: reg.counter("service_quota_rejects_total"),
         }
     }
 }
 
+/// In-memory table of "cached jobs": synthetic job ids minted when a
+/// `JOB SUBMIT` hits the result cache. They answer `STATUS`/`WAIT`/
+/// `CANCEL`/`RESUME` as instantly-complete jobs but are deliberately
+/// ephemeral (never journaled): a restart forgets them, and the client
+/// re-submitting simply hits the cache again. FIFO-bounded so a
+/// hot-cache client cannot grow server memory without bound.
+#[derive(Debug, Default)]
+struct CachedJobs {
+    map: HashMap<String, CacheEntry>,
+    order: VecDeque<String>,
+    seq: u64,
+}
+
+/// Cap on live cached-job ids (FIFO eviction; see [`CachedJobs`]).
+const MAX_CACHED_JOB_IDS: usize = 1024;
+
 /// The transport-independent request brain: one shared coordinator
-/// plus (optionally) the durable-jobs manager and the fleet lease
-/// table. Every connection handler — TCP thread or simulated link —
-/// owns a [`ConnCtx`] and calls [`ServiceCore::handle_line`] per frame.
+/// plus (optionally) the durable-jobs manager, the fleet lease
+/// table, the tenant quota table and the content-addressed result
+/// cache. Every connection handler — TCP thread, reactor slot or
+/// simulated link — owns a [`ConnCtx`] and calls
+/// [`ServiceCore::handle_line`] per frame.
 pub struct ServiceCore {
     coordinator: Arc<Coordinator>,
     jobs: Option<Arc<JobManager>>,
@@ -93,6 +132,17 @@ pub struct ServiceCore {
     /// coherent namespace per server.
     registry: Arc<Registry>,
     counters: CoreCounters,
+    /// Per-tenant identity + quotas (`None` ⇒ `AUTH` answers a soft
+    /// error and nothing is metered — the pre-tenant behaviour).
+    tenants: Option<TenantTable>,
+    /// Content-addressed determinant cache (`None` ⇒ disabled).
+    cache: Option<ResultCache>,
+    cached_jobs: Mutex<CachedJobs>,
+    /// Real job id → cache key, for jobs whose result we want to
+    /// capture once a complete status flows back through us.
+    pending_cache: Mutex<HashMap<String, String>>,
+    /// Timestamp source for quota refill (virtual under `testkit::sim`).
+    clock: Arc<dyn Clock>,
 }
 
 impl ServiceCore {
@@ -101,7 +151,8 @@ impl ServiceCore {
     /// started without a jobs dir). Creates the service's metrics
     /// registry and wires it through both subsystems (engine counters
     /// and metered journal IO in the manager, `fleet_*` counters and
-    /// metered journal IO in the lease table).
+    /// metered journal IO in the lease table). The result cache starts
+    /// enabled at [`DEFAULT_CACHE_ENTRIES`]; tenants start disabled.
     pub fn new(
         coordinator: Coordinator,
         jobs: Option<JobManager>,
@@ -111,13 +162,44 @@ impl ServiceCore {
         let jobs = jobs.map(|j| j.with_registry(&registry));
         let fleet = fleet.map(|f| f.with_registry(&registry));
         let counters = CoreCounters::register(&registry);
+        let cache = Some(ResultCache::new(DEFAULT_CACHE_ENTRIES, &registry));
         Self {
             coordinator: Arc::new(coordinator),
             jobs: jobs.map(Arc::new),
             fleet: fleet.map(Arc::new),
             registry,
             counters,
+            tenants: None,
+            cache,
+            cached_jobs: Mutex::new(CachedJobs::default()),
+            pending_cache: Mutex::new(HashMap::new()),
+            clock: clock::wall(),
         }
+    }
+
+    /// Replace the quota/refill timestamp source (tests pass a
+    /// `SimClock` so rejection patterns are seed-deterministic).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Enable per-tenant identity + token-bucket quotas. Once set,
+    /// the metered verbs (`DET`, `EXACT`, `JOB SUBMIT`) require a
+    /// prior `AUTH` on the connection.
+    pub fn with_tenants(mut self, tenants: TenantTable) -> Self {
+        self.tenants = Some(tenants);
+        self
+    }
+
+    /// Resize the result cache (`0` disables caching entirely).
+    pub fn with_cache_entries(mut self, entries: usize) -> Self {
+        self.cache = if entries == 0 {
+            None
+        } else {
+            Some(ResultCache::new(entries, &self.registry))
+        };
+        self
     }
 
     /// The fleet lease table, when enabled.
@@ -156,33 +238,22 @@ impl ServiceCore {
                 self.counters.ping.inc();
                 Response::Pong
             }
+            Ok(Request::Auth { tenant, key }) => {
+                self.counters.auth.inc();
+                self.handle_auth(&tenant, &key, ctx)
+            }
             Ok(Request::Det(a)) => {
                 self.counters.det.inc();
-                let t0 = Instant::now();
-                match self.coordinator.radic_det(&a) {
-                    Ok(out) => Response::Ok {
-                        det: out.det,
-                        terms: out.terms,
-                        micros: t0.elapsed().as_micros(),
-                    },
-                    Err(e) => Response::Err(e.to_string()),
+                match self.quota_gate(ctx) {
+                    Some(deny) => deny,
+                    None => self.handle_det(&a),
                 }
             }
             Ok(Request::Exact(a)) => {
                 self.counters.exact.inc();
-                let t0 = Instant::now();
-                let terms = crate::combin::combination_count(
-                    a.cols() as u64,
-                    a.rows().min(a.cols()) as u64,
-                )
-                .unwrap_or(0);
-                match self.coordinator.radic_det_exact(&a) {
-                    Ok(det) => Response::OkExact {
-                        det,
-                        terms,
-                        micros: t0.elapsed().as_micros(),
-                    },
-                    Err(e) => Response::Err(e.to_string()),
+                match self.quota_gate(ctx) {
+                    Some(deny) => deny,
+                    None => self.handle_exact(&a),
                 }
             }
             Ok(Request::Metrics) => {
@@ -212,7 +283,15 @@ impl ServiceCore {
             }
             Ok(job_req) => {
                 self.counters.job.inc();
-                handle_job_request(self.jobs.as_deref(), self.fleet.as_deref(), job_req)
+                let gate = if matches!(job_req, Request::JobSubmit { .. }) {
+                    self.quota_gate(ctx)
+                } else {
+                    None
+                };
+                match gate {
+                    Some(deny) => deny,
+                    None => self.handle_job(job_req, ctx),
+                }
             }
             Err(e) => {
                 self.counters.parse_errors.inc();
@@ -223,6 +302,325 @@ impl ServiceCore {
             self.counters.errors.inc();
         }
         Some(response)
+    }
+
+    /// `AUTH` verb: bind the connection to a tenant. Idempotent for the
+    /// same tenant; refused for a different one (a re-AUTH must not let
+    /// a drained tenant hop buckets mid-connection).
+    fn handle_auth(&self, tenant: &str, key: &str, ctx: &mut ConnCtx) -> Response {
+        let Some(table) = &self.tenants else {
+            return Response::Err(
+                "auth-disabled (this server was started without a tenant table)".into(),
+            );
+        };
+        if let Some(bound) = &ctx.tenant {
+            if bound != tenant {
+                return Response::Err(format!(
+                    "reauth-denied (connection is bound to tenant {bound})"
+                ));
+            }
+        }
+        if !table.authenticate(tenant, key) {
+            // Unknown tenant and wrong key are deliberately the same
+            // reply: the error must not probe the tenant namespace.
+            return Response::Err("auth-failed".into());
+        }
+        ctx.tenant = Some(tenant.to_string());
+        Response::Authed { tenant: tenant.to_string() }
+    }
+
+    /// Quota gate for the metered verbs (`DET`, `EXACT`, `JOB
+    /// SUBMIT`): `None` lets the request through; `Some` is the
+    /// refusal to send instead. No-op unless tenants are enabled.
+    fn quota_gate(&self, ctx: &ConnCtx) -> Option<Response> {
+        let table = self.tenants.as_ref()?;
+        let Some(tenant) = &ctx.tenant else {
+            return Some(Response::Err(
+                "auth-required (this server enforces per-tenant quotas; send AUTH first)"
+                    .into(),
+            ));
+        };
+        self.tenant_counter(tenant, "requests_total").inc();
+        match table.try_draw(tenant, self.clock.now()) {
+            Draw::Ok => None,
+            Draw::Denied { retry_ms } => {
+                self.counters.quota_rejects.inc();
+                self.tenant_counter(tenant, "quota_rejects_total").inc();
+                Some(Response::Err(match retry_ms {
+                    Some(ms) => format!("quota-exceeded retry-ms={ms}"),
+                    None => "quota-exceeded".into(),
+                }))
+            }
+        }
+    }
+
+    /// Per-tenant counter handle, with the tenant id sanitized into the
+    /// registry's `[a-z0-9_]` charset (ids allow `-` and uppercase).
+    fn tenant_counter(&self, tenant: &str, suffix: &str) -> Counter {
+        let mut name = String::with_capacity(tenant.len() + suffix.len() + 8);
+        name.push_str("tenant_");
+        for b in tenant.bytes() {
+            let c = b.to_ascii_lowercase();
+            if c.is_ascii_lowercase() || c.is_ascii_digit() {
+                name.push(c as char);
+            } else {
+                name.push('_');
+            }
+        }
+        name.push('_');
+        name.push_str(suffix);
+        self.registry.counter(&name)
+    }
+
+    /// `DET`, through the result cache when one is enabled. A hit
+    /// replays the cold compute's exact bits and term count with
+    /// `micros` = 0 (the documented "served from cache" marker).
+    fn handle_det(&self, a: &crate::matrix::MatF64) -> Response {
+        let key = self.cache.is_some().then(|| det_cache_key(a));
+        if let (Some(cache), Some(key)) = (&self.cache, &key) {
+            if let Some(e) = cache.get(key) {
+                if let crate::jobs::JobValue::F64(det) = e.value {
+                    return Response::Ok { det, terms: e.terms_total, micros: 0 };
+                }
+            }
+        }
+        let t0 = Instant::now();
+        match self.coordinator.radic_det(a) {
+            Ok(out) => {
+                if let (Some(cache), Some(key)) = (&self.cache, key) {
+                    cache.insert(
+                        key,
+                        CacheEntry {
+                            value: crate::jobs::JobValue::F64(out.det),
+                            terms_total: out.terms,
+                            chunks_total: 1,
+                        },
+                    );
+                }
+                Response::Ok { det: out.det, terms: out.terms, micros: t0.elapsed().as_micros() }
+            }
+            Err(e) => Response::Err(e.to_string()),
+        }
+    }
+
+    /// `EXACT`, through the result cache when one is enabled.
+    fn handle_exact(&self, a: &crate::matrix::MatI64) -> Response {
+        let terms = crate::combin::combination_count(
+            a.cols() as u64,
+            a.rows().min(a.cols()) as u64,
+        )
+        .unwrap_or(0);
+        let key = self.cache.is_some().then(|| exact_cache_key(a));
+        if let (Some(cache), Some(key)) = (&self.cache, &key) {
+            if let Some(e) = cache.get(key) {
+                if let crate::jobs::JobValue::Exact(det) = e.value {
+                    return Response::OkExact { det, terms: e.terms_total, micros: 0 };
+                }
+            }
+        }
+        let t0 = Instant::now();
+        match self.coordinator.radic_det_exact(a) {
+            Ok(det) => {
+                if let (Some(cache), Some(key)) = (&self.cache, key) {
+                    cache.insert(
+                        key,
+                        CacheEntry {
+                            value: crate::jobs::JobValue::Exact(det),
+                            terms_total: terms,
+                            chunks_total: 1,
+                        },
+                    );
+                }
+                Response::OkExact { det, terms, micros: t0.elapsed().as_micros() }
+            }
+            Err(e) => Response::Err(e.to_string()),
+        }
+    }
+
+    /// The `JOB` verb family, wrapped in the cached-job fast path:
+    /// cache-hit submits answer with a synthetic instantly-complete
+    /// job, and complete statuses flowing back through us populate the
+    /// cache for the next identical submit.
+    fn handle_job(&self, req: Request, ctx: &mut ConnCtx) -> Response {
+        // Cached-job verbs are answered from the in-memory table first.
+        match &req {
+            Request::JobStatus(id) | Request::JobWait { id, .. } | Request::JobCancel(id) => {
+                if let Some(resp) = self.cached_job_status(id) {
+                    return resp;
+                }
+            }
+            Request::JobResume(id) => {
+                if self.cached_job_status(id).is_some() {
+                    return Response::Job { id: id.clone() };
+                }
+            }
+            _ => {}
+        }
+        if let Request::JobSubmit { engine, payload, fleet: false } = req {
+            return self.submit_with_cache(engine, payload, ctx);
+        }
+        let response = handle_job_request(self.jobs.as_deref(), self.fleet.as_deref(), req);
+        self.intercept_complete(&response);
+        response
+    }
+
+    /// Non-fleet `JOB SUBMIT`: consult the cache under the job's full
+    /// content address (spec body: engine, scalar kind, chunk geometry,
+    /// batch, shape, canonical value bits — geometry included because
+    /// chunk grouping fixes the f64 composition order).
+    fn submit_with_cache(
+        &self,
+        engine: crate::jobs::JobEngine,
+        payload: crate::jobs::JobPayload,
+        ctx: &ConnCtx,
+    ) -> Response {
+        let Some(jobs) = self.jobs.as_deref() else {
+            return Response::Err(
+                "jobs disabled on this server (start with a jobs dir)".into(),
+            );
+        };
+        let Some(cache) = &self.cache else {
+            return match jobs.submit(payload, engine) {
+                Ok(id) => Response::Job { id },
+                Err(e) => Response::Err(e.to_string()),
+            };
+        };
+        let spec = JobSpec {
+            payload,
+            engine,
+            chunks: jobs.default_chunks(),
+            batch: jobs.default_batch(),
+        };
+        let key = encode_spec_body(&spec);
+        if let Some(entry) = cache.get(&key) {
+            if self.tenants.is_some() {
+                if let Some(tenant) = &ctx.tenant {
+                    self.tenant_counter(tenant, "cache_hits_total").inc();
+                }
+            }
+            return Response::Job { id: self.mint_cached_job(entry) };
+        }
+        match jobs.submit(spec.payload, engine) {
+            Ok(id) => {
+                self.pending_cache
+                    .lock()
+                    .expect("pending cache poisoned")
+                    .insert(id.clone(), key);
+                Response::Job { id }
+            }
+            Err(e) => Response::Err(e.to_string()),
+        }
+    }
+
+    /// Mint a synthetic `cache-<n>` job id for a cache hit and record
+    /// it in the FIFO-bounded cached-job table.
+    fn mint_cached_job(&self, entry: CacheEntry) -> String {
+        let mut cached = self.cached_jobs.lock().expect("cached jobs poisoned");
+        cached.seq += 1;
+        let id = format!("cache-{}", cached.seq);
+        cached.map.insert(id.clone(), entry);
+        cached.order.push_back(id.clone());
+        while cached.order.len() > MAX_CACHED_JOB_IDS {
+            if let Some(old) = cached.order.pop_front() {
+                cached.map.remove(&old);
+            }
+        }
+        id
+    }
+
+    /// Complete-status snapshot for a cached job id, if it is (still)
+    /// known. `None` falls through to the real jobs path, which
+    /// answers `unknown job id` for forgotten/foreign `cache-*` ids.
+    fn cached_job_status(&self, id: &str) -> Option<Response> {
+        let cached = self.cached_jobs.lock().expect("cached jobs poisoned");
+        let entry = cached.map.get(id)?;
+        Some(Response::JobStatus {
+            id: id.to_string(),
+            state: "complete".into(),
+            chunks_done: entry.chunks_total,
+            chunks_total: entry.chunks_total,
+            terms_done: entry.terms_total,
+            terms_total: entry.terms_total,
+            value: Some(entry.value.clone()),
+            blocks: 0,
+            fallback_blocks: 0,
+        })
+    }
+
+    /// Capture a completed job's value into the result cache when the
+    /// job was submitted (non-fleet) through this core.
+    fn intercept_complete(&self, response: &Response) {
+        let Some(cache) = &self.cache else { return };
+        if let Response::JobStatus { id, state, value: Some(v), terms_total, chunks_total, .. } =
+            response
+        {
+            if state != "complete" {
+                return;
+            }
+            let key = self.pending_cache.lock().expect("pending cache poisoned").remove(id);
+            if let Some(key) = key {
+                cache.insert(
+                    key,
+                    CacheEntry {
+                        value: v.clone(),
+                        terms_total: *terms_total,
+                        chunks_total: *chunks_total,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Non-blocking `JOB WAIT` resolution for the event-loop reactor:
+    /// `Some(response)` resolves the wait now (cached job, jobs
+    /// disabled, unknown id, runner error, job done/paused — or the
+    /// registered deadline `expired`, which answers with the current
+    /// snapshot exactly like a timed-out blocking wait); `None` keeps
+    /// the connection parked with no thread blocked.
+    pub fn poll_job_wait(&self, id: &str, expired: bool) -> Option<Response> {
+        if let Some(resp) = self.cached_job_status(id) {
+            return Some(resp);
+        }
+        let Some(jobs) = self.jobs.as_deref() else {
+            return Some(Response::Err(
+                "jobs disabled on this server (start with a jobs dir)".into(),
+            ));
+        };
+        let resolved = match jobs.wait_probe(id) {
+            Some(Ok((status, running))) => {
+                Some(status_to_response(&status, running, jobs.run_metrics(id)))
+            }
+            Some(Err(e)) => Some(Response::Err(e.to_string())),
+            None if expired => Some(match jobs.status(id) {
+                Ok((status, running)) => {
+                    status_to_response(&status, running, jobs.run_metrics(id))
+                }
+                Err(e) => Response::Err(e.to_string()),
+            }),
+            None => None,
+        };
+        if let Some(resp) = &resolved {
+            self.intercept_complete(resp);
+            if matches!(resp, Response::Err(_)) {
+                self.counters.errors.inc();
+            }
+        }
+        resolved
+    }
+
+    /// Completion-signal epoch of the jobs manager, if jobs are
+    /// enabled — the reactor's cheap "anything finished?" probe.
+    pub fn jobs_done_epoch(&self) -> Option<u64> {
+        self.jobs.as_deref().map(|j| j.done_epoch())
+    }
+
+    /// Count a `JOB WAIT` frame the reactor consumed into a registered
+    /// wakeup instead of routing through [`Self::handle_line`] — keeps
+    /// the `service_requests_total` / `service_job_total` families
+    /// coherent across both serving paths.
+    pub(crate) fn count_wait_frame(&self) {
+        self.counters.requests.inc();
+        self.counters.job.inc();
     }
 }
 
@@ -273,6 +671,38 @@ impl Server {
             ));
         }
         self
+    }
+
+    /// Enable per-tenant quotas: metered verbs require `AUTH` against
+    /// `tenants` and draw from its token buckets.
+    pub fn with_tenants(mut self, tenants: TenantTable) -> Self {
+        self.core = self.core.with_tenants(tenants);
+        self
+    }
+
+    /// Resize (or with `0`, disable) the content-addressed result
+    /// cache. The default is [`DEFAULT_CACHE_ENTRIES`] entries.
+    pub fn with_cache_entries(mut self, entries: usize) -> Self {
+        self.core = self.core.with_cache_entries(entries);
+        self
+    }
+
+    /// Replace the clock behind quotas and reactor timeouts (tests
+    /// inject a `SimClock`).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.core = self.core.with_clock(clock);
+        self
+    }
+
+    /// Bind `addr` and serve through the event-loop reactor instead of
+    /// a thread per connection (`raddet serve --reactor`). The same
+    /// core, verbs, and wire contract — just a different shell.
+    pub fn start_reactor(
+        self,
+        addr: &str,
+        cfg: super::reactor::ReactorConfig,
+    ) -> Result<super::reactor::ReactorHandle> {
+        super::reactor::Reactor::serve(Arc::new(self.core), addr, cfg)
     }
 
     /// Bind `addr` (use port 0 for ephemeral) and start serving in

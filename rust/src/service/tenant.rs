@@ -1,0 +1,300 @@
+//! Per-tenant identity and token-bucket quotas for the service layer.
+//!
+//! A [`TenantTable`] maps tenant ids to a shared-secret key plus a
+//! token-bucket quota (capacity + refill rate). Connections bind to a
+//! tenant with the `AUTH <tenant> <key>` verb (see `docs/PROTOCOL.md`
+//! §2.5); every *metered* verb (`DET`, `EXACT`, `JOB SUBMIT`) then
+//! draws one token from that tenant's bucket and is refused with the
+//! retryable `ERR quota-exceeded retry-ms=<n>` reply when the bucket
+//! is empty.
+//!
+//! Buckets are refilled lazily from timestamps supplied by the caller
+//! (the server passes its [`crate::clock::Clock`] readings), so quota
+//! behaviour is fully deterministic under `testkit::sim`'s `SimClock`:
+//! the same seed produces the same accept/reject pattern run-twice.
+//! All arithmetic is integer (milli-tokens), never floating point.
+
+use crate::jobs::valid_id;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Milli-tokens per token: buckets meter in 1/1000ths of a request so
+/// sub-second refill rates stay exact in integer arithmetic.
+const MILLI: u64 = 1000;
+
+/// Quota configuration for one tenant: the shared secret plus the
+/// token-bucket shape.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Shared-secret key presented in the `AUTH` verb. Same charset
+    /// as job ids (ASCII alphanumeric plus `-` and `_`, ≤ 96 bytes).
+    pub key: String,
+    /// Bucket capacity in whole requests (burst size). A capacity of
+    /// zero refuses every metered verb.
+    pub capacity: u64,
+    /// Refill rate in requests per second. Zero means the bucket
+    /// never refills: once drained, further metered verbs are refused
+    /// without a retry hint.
+    pub refill_per_s: u64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self { key: String::new(), capacity: 60, refill_per_s: 10 }
+    }
+}
+
+/// Outcome of a quota draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Draw {
+    /// One token was drawn; the request may proceed.
+    Ok,
+    /// The bucket is empty. `retry_ms` is how long until one token
+    /// accrues (`None` when the bucket never refills).
+    Denied {
+        /// Milliseconds until a retry can succeed, if ever.
+        retry_ms: Option<u64>,
+    },
+}
+
+/// Lazily-refilled token bucket. Tokens are stored in milli-tokens;
+/// `refill_per_s` requests/second is exactly `refill_per_s`
+/// milli-tokens per millisecond.
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens_m: u64,
+    last_ms: u128,
+}
+
+/// Tenant registry: authentication plus per-tenant token buckets.
+///
+/// The config map is immutable after construction; bucket state lives
+/// behind one mutex (draws are cheap integer updates).
+#[derive(Debug, Default)]
+pub struct TenantTable {
+    tenants: HashMap<String, TenantConfig>,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TenantTable {
+    /// Empty table (useful as a builder seed in tests).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add (or replace) one tenant. Panics on an invalid tenant id or
+    /// key so misconfigured tests fail loudly; file-based loading goes
+    /// through [`TenantTable::from_lines`], which reports typed errors
+    /// instead.
+    pub fn insert(&mut self, tenant: &str, cfg: TenantConfig) {
+        assert!(valid_id(tenant), "invalid tenant id {tenant:?}");
+        assert!(valid_id(&cfg.key), "invalid key for tenant {tenant:?}");
+        self.tenants.insert(tenant.to_string(), cfg);
+    }
+
+    /// Parse a tenant file: one `<tenant> <key> [capacity]
+    /// [refill_per_s]` entry per line, `#` comments and blank lines
+    /// ignored. Missing fields take the [`TenantConfig`] defaults
+    /// (capacity 60, refill 10/s).
+    pub fn from_lines(text: &str) -> Result<Self> {
+        let mut table = Self::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() < 2 || toks.len() > 4 {
+                return Err(Error::Config(format!(
+                    "tenant file line {}: want `<tenant> <key> [capacity] [refill_per_s]`, got {raw:?}",
+                    lineno + 1
+                )));
+            }
+            if !valid_id(toks[0]) {
+                return Err(Error::Config(format!(
+                    "tenant file line {}: bad tenant id {:?}",
+                    lineno + 1,
+                    toks[0]
+                )));
+            }
+            if !valid_id(toks[1]) {
+                return Err(Error::Config(format!(
+                    "tenant file line {}: bad key for tenant {:?}",
+                    lineno + 1,
+                    toks[0]
+                )));
+            }
+            let mut cfg = TenantConfig { key: toks[1].to_string(), ..TenantConfig::default() };
+            if let Some(cap) = toks.get(2) {
+                cfg.capacity = cap.parse().map_err(|_| {
+                    Error::Config(format!("tenant file line {}: bad capacity {cap:?}", lineno + 1))
+                })?;
+            }
+            if let Some(rate) = toks.get(3) {
+                cfg.refill_per_s = rate.parse().map_err(|_| {
+                    Error::Config(format!("tenant file line {}: bad refill rate {rate:?}", lineno + 1))
+                })?;
+            }
+            table.tenants.insert(toks[0].to_string(), cfg);
+        }
+        if table.tenants.is_empty() {
+            return Err(Error::Config("tenant file defines no tenants".into()));
+        }
+        Ok(table)
+    }
+
+    /// Load a tenant file from disk (see [`TenantTable::from_lines`]
+    /// for the format).
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("tenant file {}: {e}", path.display())))?;
+        Self::from_lines(&text)
+    }
+
+    /// Number of configured tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// True when no tenants are configured.
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Constant-shape credential check: true iff `tenant` exists and
+    /// `key` matches. Unknown tenant and wrong key are deliberately
+    /// indistinguishable to the caller (one `auth-failed` reply).
+    pub fn authenticate(&self, tenant: &str, key: &str) -> bool {
+        match self.tenants.get(tenant) {
+            Some(cfg) => cfg.key == key,
+            None => false,
+        }
+    }
+
+    /// Draw one token from `tenant`'s bucket at time `now` (a
+    /// [`crate::clock::Clock::now`] reading). Unknown tenants are
+    /// denied outright — callers authenticate first.
+    pub fn try_draw(&self, tenant: &str, now: Duration) -> Draw {
+        let Some(cfg) = self.tenants.get(tenant) else {
+            return Draw::Denied { retry_ms: None };
+        };
+        let cap_m = cfg.capacity.saturating_mul(MILLI);
+        let now_ms = now.as_millis();
+        let mut buckets = self.buckets.lock().expect("tenant buckets poisoned");
+        let bucket = buckets
+            .entry(tenant.to_string())
+            .or_insert(Bucket { tokens_m: cap_m, last_ms: now_ms });
+        // Lazy refill: rate is exactly `refill_per_s` milli-tokens/ms.
+        let elapsed_ms = now_ms.saturating_sub(bucket.last_ms);
+        let refill_m = elapsed_ms.saturating_mul(u128::from(cfg.refill_per_s));
+        bucket.tokens_m = u64::try_from(u128::from(bucket.tokens_m).saturating_add(refill_m))
+            .unwrap_or(u64::MAX)
+            .min(cap_m);
+        bucket.last_ms = now_ms;
+        if bucket.tokens_m >= MILLI {
+            bucket.tokens_m -= MILLI;
+            return Draw::Ok;
+        }
+        // No hint when waiting can never help: a bucket that never
+        // refills, or one whose capacity can never hold a whole token.
+        if cfg.refill_per_s == 0 || cap_m < MILLI {
+            return Draw::Denied { retry_ms: None };
+        }
+        let needed_m = MILLI - bucket.tokens_m;
+        let retry_ms = needed_m.div_ceil(cfg.refill_per_s);
+        Draw::Denied { retry_ms: Some(retry_ms) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn bucket_drains_and_refills_deterministically() {
+        let mut t = TenantTable::new();
+        t.insert("acme", TenantConfig { key: "k1".into(), capacity: 2, refill_per_s: 10 });
+        // Burst of 2 allowed, third denied with an exact retry hint:
+        // 10 tokens/s = 1 token per 100 ms.
+        assert_eq!(t.try_draw("acme", ms(0)), Draw::Ok);
+        assert_eq!(t.try_draw("acme", ms(0)), Draw::Ok);
+        assert_eq!(t.try_draw("acme", ms(0)), Draw::Denied { retry_ms: Some(100) });
+        // 50 ms later half a token has accrued; retry hint halves.
+        assert_eq!(t.try_draw("acme", ms(50)), Draw::Denied { retry_ms: Some(50) });
+        // At 100 ms the token is whole again.
+        assert_eq!(t.try_draw("acme", ms(100)), Draw::Ok);
+        // Refill clamps at capacity: a long gap allows exactly 2.
+        assert_eq!(t.try_draw("acme", ms(100_000)), Draw::Ok);
+        assert_eq!(t.try_draw("acme", ms(100_000)), Draw::Ok);
+        assert_eq!(t.try_draw("acme", ms(100_000)), Draw::Denied { retry_ms: Some(100) });
+    }
+
+    #[test]
+    fn zero_refill_is_a_hard_cap() {
+        let mut t = TenantTable::new();
+        t.insert("once", TenantConfig { key: "k".into(), capacity: 1, refill_per_s: 0 });
+        assert_eq!(t.try_draw("once", ms(0)), Draw::Ok);
+        assert_eq!(t.try_draw("once", ms(1_000_000)), Draw::Denied { retry_ms: None });
+    }
+
+    #[test]
+    fn zero_capacity_never_promises_a_retry() {
+        // A retry hint must be honest: capacity 0 can never hold a
+        // whole token, so the refusal is the permanent (hint-free)
+        // form even though the refill rate is positive.
+        let mut t = TenantTable::new();
+        t.insert("none", TenantConfig { key: "k".into(), capacity: 0, refill_per_s: 50 });
+        assert_eq!(t.try_draw("none", ms(0)), Draw::Denied { retry_ms: None });
+        assert_eq!(t.try_draw("none", ms(10_000)), Draw::Denied { retry_ms: None });
+    }
+
+    #[test]
+    fn authenticate_rejects_unknown_and_mismatched() {
+        let mut t = TenantTable::new();
+        t.insert("acme", TenantConfig { key: "secret".into(), ..TenantConfig::default() });
+        assert!(t.authenticate("acme", "secret"));
+        assert!(!t.authenticate("acme", "wrong"));
+        assert!(!t.authenticate("ghost", "secret"));
+    }
+
+    #[test]
+    fn tenant_file_parses_defaults_and_rejects_garbage() {
+        let t = TenantTable::from_lines(
+            "# comment\n\nacme secret1 5 2\nbeta key2\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t.authenticate("acme", "secret1"));
+        assert!(t.authenticate("beta", "key2"));
+        // beta got the defaults: burst of 60 is plenty for one draw.
+        assert_eq!(t.try_draw("beta", ms(0)), Draw::Ok);
+
+        for bad in [
+            "acme",                    // missing key
+            "acme key extra f g",      // too many fields
+            "bad!id key",              // invalid tenant id
+            "acme bad key\u{7f}",      // invalid key charset (also 3 fields w/ bad cap)
+            "acme key notanum",        // bad capacity
+            "acme key 5 notanum",      // bad refill
+            "",                        // no tenants at all
+        ] {
+            assert!(TenantTable::from_lines(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn draws_are_per_tenant() {
+        let mut t = TenantTable::new();
+        t.insert("a", TenantConfig { key: "k".into(), capacity: 1, refill_per_s: 0 });
+        t.insert("b", TenantConfig { key: "k".into(), capacity: 1, refill_per_s: 0 });
+        assert_eq!(t.try_draw("a", ms(0)), Draw::Ok);
+        assert_eq!(t.try_draw("b", ms(0)), Draw::Ok);
+        assert_eq!(t.try_draw("a", ms(0)), Draw::Denied { retry_ms: None });
+    }
+}

@@ -6,8 +6,10 @@
 //! replayed with `TestRng::from_seed`.
 
 mod rng;
+pub mod reactor_sim;
 pub mod sim;
 
+pub use reactor_sim::{ReactorSim, SimSocket};
 pub use rng::TestRng;
 
 /// Run `prop` over `cases` generated inputs; panic with a replayable

@@ -1,0 +1,214 @@
+//! Deterministic reactor harness: drives the *production*
+//! [`Reactor`] event loop over in-memory byte pipes, one `step()` at a
+//! time, on a [`SimClock`].
+//!
+//! Where [`super::sim`] dispatches frames synchronously into the
+//! [`ServiceCore`] (bypassing any serving shell), this harness runs the
+//! actual reactor: non-blocking accept, read buffering, write
+//! backpressure, slowloris/idle reaping and `JOB WAIT` parking all
+//! execute the same code real TCP exercises — but single-threaded
+//! (`pool_workers` is forced to `0`) and on virtual time, so a storm
+//! scripted from a seed replays its event trace bit-identically.
+//!
+//! The pipes implement the [`NbStream`] contract exactly as TCP does:
+//! reads return `Ok(None)` when the peer hasn't written, `Ok(Some(0))`
+//! at half-close, and writes land in a buffer the test side drains with
+//! [`SimSocket::try_recv_line`].
+
+use crate::clock::SimClock;
+use crate::service::reactor::NbListener;
+use crate::service::{NbStream, Reactor, ReactorConfig, ServiceCore};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// One direction of a duplex pipe.
+#[derive(Default)]
+struct PipeBuf {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+/// A duplex in-memory connection: client writes into `to_server`,
+/// reactor replies into `to_client`.
+#[derive(Default)]
+struct PipePair {
+    to_server: Mutex<PipeBuf>,
+    to_client: Mutex<PipeBuf>,
+}
+
+/// Test-side endpoint of a simulated connection.
+pub struct SimSocket {
+    pair: Arc<PipePair>,
+}
+
+impl SimSocket {
+    /// Queue raw bytes for the reactor to read on a future step. No
+    /// newline is appended — partial frames (slowloris) are a feature.
+    pub fn send_raw(&self, bytes: &[u8]) {
+        let mut p = self.pair.to_server.lock().expect("pipe poisoned");
+        if !p.closed {
+            p.buf.extend(bytes.iter().copied());
+        }
+    }
+
+    /// Queue one protocol frame (newline appended).
+    pub fn send_line(&self, frame: &str) {
+        self.send_raw(frame.as_bytes());
+        self.send_raw(b"\n");
+    }
+
+    /// Pop one complete reply line, if the reactor has flushed one.
+    pub fn try_recv_line(&self) -> Option<String> {
+        let mut p = self.pair.to_client.lock().expect("pipe poisoned");
+        let pos = p.buf.iter().position(|&b| b == b'\n')?;
+        let raw: Vec<u8> = p.buf.drain(..=pos).collect();
+        Some(String::from_utf8_lossy(&raw[..pos]).into_owned())
+    }
+
+    /// Half-close the client→server direction (the reactor sees EOF).
+    pub fn close(&self) {
+        self.pair.to_server.lock().expect("pipe poisoned").closed = true;
+    }
+
+    /// Has the reactor dropped its side of the connection?
+    pub fn server_closed(&self) -> bool {
+        self.pair.to_client.lock().expect("pipe poisoned").closed
+    }
+
+    /// Bytes of reply data not yet drained by the test.
+    pub fn pending_bytes(&self) -> usize {
+        self.pair.to_client.lock().expect("pipe poisoned").buf.len()
+    }
+}
+
+/// Reactor-side endpoint: implements the non-blocking stream contract
+/// over the shared pipes. Dropping it (the reactor closing the
+/// connection) marks the reply pipe closed so the test can observe it.
+struct SimNbStream {
+    pair: Arc<PipePair>,
+    /// Per-step write budget used to exercise partial writes: `None`
+    /// writes everything offered, `Some(n)` takes at most `n` bytes per
+    /// `write_nb` call.
+    write_budget: Option<usize>,
+}
+
+impl NbStream for SimNbStream {
+    fn read_nb(&mut self, buf: &mut [u8]) -> std::io::Result<Option<usize>> {
+        let mut p = self.pair.to_server.lock().expect("pipe poisoned");
+        if p.buf.is_empty() {
+            return if p.closed { Ok(Some(0)) } else { Ok(None) };
+        }
+        let n = buf.len().min(p.buf.len());
+        for (i, b) in p.buf.drain(..n).enumerate() {
+            buf[i] = b;
+        }
+        Ok(Some(n))
+    }
+
+    fn write_nb(&mut self, buf: &[u8]) -> std::io::Result<Option<usize>> {
+        let mut p = self.pair.to_client.lock().expect("pipe poisoned");
+        if p.closed {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "sim peer closed",
+            ));
+        }
+        let n = match self.write_budget {
+            Some(cap) => buf.len().min(cap),
+            None => buf.len(),
+        };
+        if n == 0 && !buf.is_empty() {
+            return Ok(None);
+        }
+        p.buf.extend(buf[..n].iter().copied());
+        Ok(Some(n))
+    }
+}
+
+impl Drop for SimNbStream {
+    fn drop(&mut self) {
+        self.pair.to_client.lock().expect("pipe poisoned").closed = true;
+    }
+}
+
+/// Accept source fed by [`ReactorSim::connect`].
+struct QueueListener {
+    queue: Arc<Mutex<VecDeque<Box<dyn NbStream>>>>,
+}
+
+impl NbListener for QueueListener {
+    fn accept_nb(&mut self) -> std::io::Result<Option<Box<dyn NbStream>>> {
+        Ok(self.queue.lock().expect("accept queue poisoned").pop_front())
+    }
+}
+
+/// The harness: a production [`Reactor`] in deterministic inline mode
+/// plus an injection queue of simulated connections.
+pub struct ReactorSim {
+    reactor: Reactor,
+    queue: Arc<Mutex<VecDeque<Box<dyn NbStream>>>>,
+}
+
+impl ReactorSim {
+    /// Build a reactor over `core` on the virtual `clock`.
+    /// `cfg.pool_workers` is forced to `0` (inline compute) — the only
+    /// deterministic mode — and event tracing is enabled.
+    pub fn new(core: Arc<ServiceCore>, mut cfg: ReactorConfig, clock: Arc<SimClock>) -> Self {
+        cfg.pool_workers = 0;
+        let queue: Arc<Mutex<VecDeque<Box<dyn NbStream>>>> =
+            Arc::new(Mutex::new(VecDeque::new()));
+        let listener = QueueListener { queue: Arc::clone(&queue) };
+        let mut reactor = Reactor::new(core, Box::new(listener), cfg, clock);
+        reactor.enable_trace();
+        Self { reactor, queue }
+    }
+
+    /// Dial a new connection; the reactor accepts it on its next step.
+    pub fn connect(&self) -> SimSocket {
+        self.connect_throttled(None)
+    }
+
+    /// Like [`ReactorSim::connect`] but the reactor can write at most
+    /// `budget` bytes per write call — a slow reader, for backpressure
+    /// tests.
+    pub fn connect_throttled(&self, budget: Option<usize>) -> SimSocket {
+        let pair = Arc::new(PipePair::default());
+        self.queue
+            .lock()
+            .expect("accept queue poisoned")
+            .push_back(Box::new(SimNbStream {
+                pair: Arc::clone(&pair),
+                write_budget: budget,
+            }));
+        SimSocket { pair }
+    }
+
+    /// One reactor pass; returns its work count.
+    pub fn step(&mut self) -> u64 {
+        self.reactor.step()
+    }
+
+    /// Step until a pass does no work (or `max` passes). Returns total
+    /// work done.
+    pub fn settle(&mut self, max: u64) -> u64 {
+        let mut total = 0;
+        for _ in 0..max {
+            let w = self.reactor.step();
+            if w == 0 {
+                break;
+            }
+            total += w;
+        }
+        total
+    }
+
+    /// Live connections in the reactor's table.
+    pub fn conns(&self) -> usize {
+        self.reactor.conn_count()
+    }
+
+    /// Drain the reactor's deterministic event trace.
+    pub fn take_trace(&mut self) -> Vec<String> {
+        self.reactor.take_trace()
+    }
+}

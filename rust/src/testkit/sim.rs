@@ -337,7 +337,10 @@ impl SimWorld {
             ..Default::default()
         })
         .expect("sim: build coordinator");
+        // The core reads the same virtual clock as everything else, so
+        // tenant token buckets refill on sim time, not wall time.
         ServiceCore::new(coordinator, Some(manager), Some(fleet))
+            .with_clock(self.clock.clone())
     }
 
     /// Virtual now, for assertions.

@@ -84,6 +84,15 @@ const HOSTILE_FRAMES: &[(&str, &str)] = &[
     ("LEASE COMPLETE w1 job-x 0 1 1 BIG:7", "case-sensitive scalar tag"),
     ("JOB SUBMIT prefix bigint 2 2 1,2,3,4", "unknown scalar kind"),
     ("JOB SUBMIT prefix big 2 2 1.5,2,3,4", "float entries in big path"),
+    // --- AUTH verb (parse layer; quota behaviour is golden-tested
+    // below and swept deterministically in sim_storm.rs) ---
+    ("AUTH", "missing tenant"),
+    ("AUTH acme", "missing auth key"),
+    ("AUTH acme key extra", "trailing AUTH tokens"),
+    ("AUTH ../etc key", "hostile tenant id"),
+    ("AUTH bad!tenant key", "invalid tenant charset"),
+    ("AUTH acme bad\u{7f}key", "invalid key charset"),
+    ("AUTH acme secret", "auth against a server with no tenant table"),
     // --- METRICS verbs ---
     ("METRICS JOB", "missing job id"),
     ("METRICS JOB ../../etc/passwd", "hostile job id"),
@@ -388,6 +397,155 @@ fn evicted_speculative_holder_complete_is_rejected_on_wire() {
     assert_eq!(snap.get("fleet_release_grants_total"), Some("1"));
     assert_eq!(snap.get("fleet_release_wins_total"), Some("1"));
     assert_eq!(snap.get("fleet_release_losses_total"), Some("1"));
+    c.quit();
+    handle.stop();
+}
+
+/// Golden ERR encodings for the AUTH/quota surface: the first token of
+/// each refusal is a machine-parseable code (PROTOCOL.md §2.5/§1.4) —
+/// clients branch on it, so a reworded code is a breaking wire change
+/// and must show up here as a failing literal.
+#[test]
+fn auth_and_quota_refusals_have_golden_encodings() {
+    use raddet::service::{TenantConfig, TenantTable};
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let dir = raddet::testkit::scratch_dir("corpus-auth-golden");
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    let mut tenants = TenantTable::new();
+    // refill 0 ⇒ the quota refusal is the stable bare form (no
+    // wall-clock-dependent retry hint; the hinted form is pinned
+    // deterministically in sim_storm.rs).
+    tenants.insert("t1", TenantConfig { key: "k1".into(), capacity: 1, refill_per_s: 0 });
+    let handle = Server::with_jobs(coord, manager)
+        .with_tenants(tenants)
+        .start("127.0.0.1:0")
+        .unwrap();
+
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut ask = |frame: &str| -> String {
+        s.write_all(frame.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    };
+
+    // Metered verb before AUTH.
+    assert_eq!(
+        ask("DET 2 4 1,2,3,4,5,6,7,8"),
+        "ERR auth-required (this server enforces per-tenant quotas; send AUTH first)"
+    );
+    // Wrong key and unknown tenant: byte-identical refusals (the error
+    // must not probe the tenant namespace), and the key never echoes.
+    assert_eq!(ask("AUTH t1 wrongkey"), "ERR auth-failed");
+    assert_eq!(ask("AUTH ghost k1"), "ERR auth-failed");
+    // Successful bind.
+    assert_eq!(ask("AUTH t1 k1"), "OK AUTH t1");
+    // Re-AUTH: idempotent for the same tenant, refused for another.
+    assert_eq!(ask("AUTH t1 k1"), "OK AUTH t1");
+    assert_eq!(
+        ask("AUTH other k1"),
+        "ERR reauth-denied (connection is bound to tenant t1)"
+    );
+    // Capacity 1, refill 0: one metered verb succeeds, the next is the
+    // bare (unhinted) quota refusal; unmetered verbs stay unmetered.
+    assert!(ask("DET 2 4 1,2,3,4,5,6,7,8").starts_with("OK "));
+    assert_eq!(ask("DET 2 4 1,2,3,4,5,6,7,8"), "ERR quota-exceeded");
+    assert_eq!(ask("PING"), "PONG");
+    assert!(ask("METRICS").starts_with("OK METRICS"));
+    handle.stop();
+}
+
+/// Ids at and past the 96-byte limit: the boundary id parses, the
+/// 97-byte one is refused, for both the tenant and the key position —
+/// and the connection survives.
+#[test]
+fn oversized_auth_ids_are_soft_parse_errors() {
+    let handle = start_server_with_jobs("auth-oversize");
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut ask = |frame: &str| -> String {
+        s.write_all(frame.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    };
+    let edge = "a".repeat(96);
+    let over = "a".repeat(97);
+    // 96 bytes parses (this server has no tenant table, so a valid
+    // parse reaches the auth-disabled refusal — proof it got past the
+    // parser).
+    assert_eq!(
+        ask(&format!("AUTH {edge} key")),
+        "ERR auth-disabled (this server was started without a tenant table)"
+    );
+    // 97 bytes is a parse error in either position; the key must not
+    // be echoed back in the error.
+    let e1 = ask(&format!("AUTH {over} key"));
+    assert!(e1.starts_with("ERR ") && e1.contains("bad tenant id"), "{e1}");
+    let e2 = ask(&format!("AUTH tenant {over}"));
+    assert_eq!(e2, "ERR bad auth key");
+    assert_eq!(ask("PING"), "PONG");
+    handle.stop();
+}
+
+/// Malformed compute frames must never touch the result cache — a
+/// parse reject can neither populate nor hit an entry, so the miss/hit
+/// meters only ever count well-formed frames.
+#[test]
+fn malformed_frames_bypass_the_cache() {
+    let handle = start_server_with_jobs("cache-bypass");
+    let addr = handle.addr().to_string();
+    let mut c = raddet::service::Client::connect(&addr).unwrap();
+    let before = c.metrics().unwrap();
+    assert_eq!(before.get("cache_misses_total"), Some("0"));
+
+    // A barrage of malformed DET/EXACT frames on a raw socket.
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    for frame in [
+        "DET 2 2 1,2,3",
+        "DET 2 2 inf,1,2,3",
+        "EXACT 1 2 1.5,2",
+        "DET x y 1,2",
+    ] {
+        s.write_all(frame.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{frame:?} → {line:?}");
+    }
+
+    // The cache saw none of it.
+    let mid = c.metrics().unwrap();
+    assert_eq!(mid.get("cache_misses_total"), Some("0"));
+    assert_eq!(mid.get("cache_hits_total"), Some("0"));
+
+    // A well-formed pair still behaves: one miss, then one hit with
+    // identical bits.
+    let a = raddet::matrix::gen::uniform(
+        &mut raddet::testkit::TestRng::from_seed(87),
+        3,
+        8,
+        -1.0,
+        1.0,
+    );
+    let cold = c.det(&a).unwrap();
+    let warm = c.det(&a).unwrap();
+    assert_eq!(cold.det.to_bits(), warm.det.to_bits());
+    assert_eq!(warm.server_micros, 0, "hit must carry the micros=0 marker");
+    let after = c.metrics().unwrap();
+    assert_eq!(after.get("cache_misses_total"), Some("1"));
+    assert_eq!(after.get("cache_hits_total"), Some("1"));
     c.quit();
     handle.stop();
 }

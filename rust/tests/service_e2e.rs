@@ -192,6 +192,191 @@ fn job_verbs_disabled_without_manager() {
 // are now the data-driven corpus in `tests/protocol_corpus.rs`
 // (extended with the LEASE-verb malformations).
 
+// ---------------------------------------------------------------------
+// Event-loop reactor shell (`serve --reactor`): same verbs, same wire
+// contract, different concurrency model.
+// ---------------------------------------------------------------------
+
+fn start_reactor_with_jobs(tag: &str) -> raddet::service::ReactorHandle {
+    let dir = raddet::testkit::scratch_dir(&format!("reactor-{tag}"));
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    Server::with_jobs(test_coordinator(), manager)
+        .start_reactor("127.0.0.1:0", raddet::service::ReactorConfig::default())
+        .unwrap()
+}
+
+#[test]
+fn reactor_serves_the_full_verb_set() {
+    let handle = start_reactor_with_jobs("verbs");
+    let addr = handle.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+
+    let a = gen::uniform(&mut TestRng::from_seed(61), 3, 9, -1.0, 1.0);
+    let want = radic_det_seq(&a).unwrap();
+    let reply = c.det(&a).unwrap();
+    assert!((reply.det - want).abs() < 1e-9 * want.abs().max(1.0));
+
+    let ai = gen::integer(&mut TestRng::from_seed(62), 2, 7, -5, 5);
+    assert_eq!(c.det_exact(&ai).unwrap(), radic_det_exact(&ai).unwrap());
+
+    // Durable job through the reactor's parked-wait path.
+    let id = c.job_submit(&a, JobEngine::Prefix).unwrap();
+    let st = c.job_wait(&id, 30_000).unwrap();
+    assert_eq!(st.state, "complete", "{st:?}");
+    match st.value.unwrap() {
+        JobValue::F64(v) => {
+            assert!((v - want).abs() < 1e-9 * want.abs().max(1.0))
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // Soft errors leave the connection usable, like the threaded shell.
+    assert!(c.job_status("job-does-not-exist").is_err());
+    c.ping().unwrap();
+    c.quit();
+    handle.stop();
+}
+
+#[test]
+fn reactor_results_match_threaded_shell_bit_for_bit() {
+    let reactor = start_reactor_with_jobs("parity");
+    let threaded = start_server();
+    let mut rc = Client::connect(&reactor.addr().to_string()).unwrap();
+    let mut tc = Client::connect(&threaded.addr().to_string()).unwrap();
+    for seed in 70..75u64 {
+        let a = gen::uniform(&mut TestRng::from_seed(seed), 3, 9, -1.0, 1.0);
+        let r = rc.det(&a).unwrap().det;
+        let t = tc.det(&a).unwrap().det;
+        assert_eq!(r.to_bits(), t.to_bits(), "seed {seed}");
+    }
+    rc.quit();
+    tc.quit();
+    reactor.stop();
+    threaded.stop();
+}
+
+#[test]
+fn reactor_sixty_four_concurrent_clients() {
+    let handle = start_reactor_with_jobs("storm64");
+    let addr = handle.addr().to_string();
+    let mut threads = Vec::new();
+    for t in 0..64u64 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let a = gen::uniform(&mut TestRng::from_seed(200 + t), 3, 8, -1.0, 1.0);
+            let want = radic_det_seq(&a).unwrap();
+            for _ in 0..3 {
+                let got = c.det(&a).unwrap();
+                assert_eq!(got.det.to_bits(), want.to_bits());
+            }
+            c.quit();
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    handle.stop();
+}
+
+#[test]
+fn reactor_waiters_do_not_starve_the_accept_loop() {
+    let handle = start_reactor_with_jobs("no-starve");
+    let addr = handle.addr().to_string();
+
+    // A fleet-opened job with no workers attached never completes, so
+    // these clients all park in JOB WAIT inside the reactor.
+    let mut submitter = Client::connect(&addr).unwrap();
+    let ai = gen::integer(&mut TestRng::from_seed(63), 3, 9, -4, 4);
+    let id = submitter
+        .job_submit_fleet(raddet::jobs::JobPayload::Exact(ai), JobEngine::CpuLu)
+        .unwrap();
+    let mut waiters = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.clone();
+        let id = id.clone();
+        waiters.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            // Times out (job never completes) but must return the
+            // job's current snapshot, not an error.
+            let st = c.job_wait(&id, 3_000).unwrap();
+            assert_ne!(st.state, "complete");
+            c.quit();
+        }));
+    }
+    // While 8 connections are parked, fresh connections must still be
+    // accepted and served promptly: waits park, they don't block.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let t0 = std::time::Instant::now();
+    let mut probe = Client::connect(&addr).unwrap();
+    probe.ping().unwrap();
+    let a = gen::uniform(&mut TestRng::from_seed(64), 2, 6, -1.0, 1.0);
+    probe.det(&a).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(2),
+        "probe starved for {:?} behind parked waiters",
+        t0.elapsed()
+    );
+    probe.quit();
+    for w in waiters {
+        w.join().unwrap();
+    }
+    submitter.job_cancel(&id).unwrap();
+    submitter.quit();
+    handle.stop();
+}
+
+#[test]
+fn reactor_auth_quota_and_cache_round_trip() {
+    use raddet::service::{TenantConfig, TenantTable};
+    let dir = raddet::testkit::scratch_dir("reactor-auth");
+    let manager = JobManager::new(JobStore::open(dir).unwrap(), 2);
+    let mut tenants = TenantTable::new();
+    tenants.insert(
+        "acme",
+        TenantConfig { key: "sesame".into(), capacity: 3, refill_per_s: 1 },
+    );
+    let handle = Server::with_jobs(test_coordinator(), manager)
+        .with_tenants(tenants)
+        .start_reactor("127.0.0.1:0", raddet::service::ReactorConfig::default())
+        .unwrap();
+    let addr = handle.addr().to_string();
+
+    let a = gen::uniform(&mut TestRng::from_seed(65), 3, 8, -1.0, 1.0);
+
+    // Metered verbs require AUTH once quotas are enabled.
+    let mut anon = Client::connect(&addr).unwrap();
+    let err = anon.det(&a).unwrap_err();
+    assert!(err.to_string().contains("auth-required"), "{err}");
+    anon.quit();
+
+    // Bad key and unknown tenant are indistinguishable refusals.
+    let mut bad = Client::connect(&addr).unwrap();
+    let e1 = bad.auth("acme", "wrong").unwrap_err().to_string();
+    let e2 = bad.auth("nobody", "sesame").unwrap_err().to_string();
+    assert!(e1.contains("auth-failed"), "{e1}");
+    assert!(e2.contains("auth-failed"), "{e2}");
+    bad.quit();
+
+    // Authenticated: capacity 3 serves three, the fourth is refused
+    // with a retry hint; the cold and cached replies carry equal bits.
+    let mut c = Client::connect(&addr).unwrap();
+    c.auth("acme", "sesame").unwrap();
+    let cold = c.det(&a).unwrap().det;
+    let warm = c.det(&a).unwrap().det;
+    assert_eq!(cold.to_bits(), warm.to_bits());
+    let _ = c.det(&a).unwrap();
+    let err = c.det(&a).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("quota-exceeded"), "{msg}");
+    assert!(msg.contains("retry-ms="), "{msg}");
+    // The refusal is soft: unmetered verbs still work.
+    c.ping().unwrap();
+    c.quit();
+    handle.stop();
+}
+
 #[test]
 fn oversized_job_reported_not_crashed() {
     let handle = start_server();

@@ -326,6 +326,229 @@ fn seed_sweep_big_scalar_past_i128_is_fleet_stable() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Content-addressed result cache: correctness properties against the
+// ServiceCore (the layer both serving shells share).
+// ---------------------------------------------------------------------
+
+/// Drive one frame through the core the way both shells do.
+fn ask(core: &raddet::service::ServiceCore, ctx: &mut raddet::service::ConnCtx, frame: &str) -> raddet::service::Response {
+    core.handle_line(frame.trim_end(), ctx).expect("frame is not QUIT")
+}
+
+fn cache_core(tag: &str, cache_entries: usize) -> raddet::service::ServiceCore {
+    use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+    let store = JobStore::open(raddet::testkit::scratch_dir(tag)).unwrap();
+    let manager = raddet::jobs::JobManager::new(store, 2);
+    let coordinator = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    raddet::service::ServiceCore::new(coordinator, Some(manager), None)
+        .with_cache_entries(cache_entries)
+}
+
+/// Submit the same job spec twice and return (cold bits, hit bits,
+/// hit job id). The second submit must be answered from the cache.
+fn submit_twice(
+    core: &raddet::service::ServiceCore,
+    payload: JobPayload,
+    engine: JobEngine,
+) -> (JobValue, JobValue, String) {
+    use raddet::service::{Request, Response};
+    let mut ctx = raddet::service::ConnCtx::default();
+    let frame = Request::JobSubmit { engine, payload, fleet: false }.encode();
+    let cold_id = match ask(core, &mut ctx, &frame) {
+        Response::Job { id } => id,
+        other => panic!("cold submit: {other:?}"),
+    };
+    // Drain the cold run; the complete status flowing back through the
+    // core is what populates the cache.
+    let cold_value = match ask(core, &mut ctx, &format!("JOB WAIT {cold_id} 30000")) {
+        Response::JobStatus { state, value, .. } => {
+            assert_eq!(state, "complete");
+            value.expect("complete job carries its value")
+        }
+        other => panic!("cold wait: {other:?}"),
+    };
+    let hit_id = match ask(core, &mut ctx, &frame) {
+        Response::Job { id } => id,
+        other => panic!("second submit: {other:?}"),
+    };
+    // Cache-served jobs answer the whole JOB surface instantly.
+    let hit_value = match ask(core, &mut ctx, &format!("JOB STATUS {hit_id}")) {
+        Response::JobStatus { state, value, chunks_done, chunks_total, .. } => {
+            assert_eq!(state, "complete", "cached job must be complete at birth");
+            assert_eq!(chunks_done, chunks_total);
+            value.expect("cached job carries its value")
+        }
+        other => panic!("hit status: {other:?}"),
+    };
+    (cold_value, hit_value, hit_id)
+}
+
+fn assert_same_bits(cold: &JobValue, hit: &JobValue, tag: &str) {
+    match (cold, hit) {
+        (JobValue::F64(a), JobValue::F64(b)) => {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: f64 bits diverged")
+        }
+        (JobValue::Exact(a), JobValue::Exact(b)) => assert_eq!(a, b, "{tag}"),
+        (JobValue::Big(a), JobValue::Big(b)) => assert_eq!(a, b, "{tag}"),
+        other => panic!("{tag}: scalar kind changed through the cache: {other:?}"),
+    }
+}
+
+/// Cache hits replay the cold submit's exact bits for every scalar ×
+/// engine combination, and the synthetic cache job id answers the full
+/// JOB verb surface.
+#[test]
+fn cache_hit_equals_cold_bits_across_scalars_and_engines() {
+    let f64_payload = || JobPayload::F64(gen::uniform(&mut TestRng::from_seed(77), 3, 8, -1.0, 1.0));
+    let exact_payload = || JobPayload::Exact(gen::integer(&mut TestRng::from_seed(78), 3, 8, -9, 9));
+    let big_payload = || JobPayload::Big(gen::integer(&mut TestRng::from_seed(79), 3, 8, -9, 9));
+    let mut combo = 0;
+    for engine in [JobEngine::CpuLu, JobEngine::Prefix] {
+        for payload in [f64_payload(), exact_payload(), big_payload()] {
+            combo += 1;
+            let core = cache_core(&format!("cache-combo-{combo}"), 64);
+            let tag = format!("combo {combo} ({engine:?})");
+            let (cold, hit, hit_id) = submit_twice(&core, payload, engine);
+            assert_same_bits(&cold, &hit, &tag);
+            assert!(hit_id.starts_with("cache-"), "{tag}: {hit_id}");
+            let snap = core.registry().snapshot();
+            assert_eq!(snap.get("cache_hits_total"), Some("1"), "{tag}");
+            assert_eq!(snap.get("cache_misses_total"), Some("1"), "{tag}");
+        }
+    }
+}
+
+/// Eviction changes *capacity*, never *answers*: a key pushed out by
+/// LRU pressure recomputes to the identical bits, and survivors still
+/// hit.
+#[test]
+fn cache_eviction_never_changes_results() {
+    use raddet::service::{Request, Response};
+    let core = cache_core("cache-evict", 2);
+    let mut ctx = raddet::service::ConnCtx::default();
+    let frame = |seed: u64| {
+        Request::Det(gen::uniform(&mut TestRng::from_seed(seed), 3, 8, -1.0, 1.0)).encode()
+    };
+    let det_bits = |r: Response| match r {
+        Response::Ok { det, micros, .. } => (det.to_bits(), micros),
+        other => panic!("{other:?}"),
+    };
+    let (a_cold, _) = det_bits(ask(&core, &mut ctx, &frame(1)));
+    let (b_cold, _) = det_bits(ask(&core, &mut ctx, &frame(2)));
+    // Third distinct key evicts the LRU entry (A).
+    let (c_cold, _) = det_bits(ask(&core, &mut ctx, &frame(3)));
+    // A recomputes cold — same bits as before the eviction.
+    let (a_again, _) = det_bits(ask(&core, &mut ctx, &frame(1)));
+    assert_eq!(a_again, a_cold, "eviction changed recomputed bits");
+    // B was evicted when A was re-inserted; C is still resident and
+    // replays from cache (micros == 0 is the documented hit marker).
+    let (c_hit, c_micros) = det_bits(ask(&core, &mut ctx, &frame(3)));
+    assert_eq!(c_hit, c_cold);
+    assert_eq!(c_micros, 0, "resident entry must be served from cache");
+    let (b_again, _) = det_bits(ask(&core, &mut ctx, &frame(2)));
+    assert_eq!(b_again, b_cold);
+    let snap = core.registry().snapshot();
+    let evictions: u64 = snap.get("cache_evictions_total").unwrap().parse().unwrap();
+    assert!(evictions >= 2, "expected LRU evictions, saw {evictions}");
+}
+
+/// Two tenants share one cache entry (content addressing is
+/// tenant-blind) while the per-tenant meters stay strictly separate.
+#[test]
+fn cache_entries_are_shared_across_tenants_without_metric_leaks() {
+    use raddet::service::{Request, Response, TenantConfig, TenantTable};
+    let mut tenants = TenantTable::new();
+    tenants.insert("alpha", TenantConfig { key: "ka".into(), ..TenantConfig::default() });
+    tenants.insert("beta", TenantConfig { key: "kb".into(), ..TenantConfig::default() });
+    let core = cache_core("cache-tenants", 64).with_tenants(tenants);
+
+    let mut alpha = raddet::service::ConnCtx::default();
+    let mut beta = raddet::service::ConnCtx::default();
+    assert!(matches!(
+        ask(&core, &mut alpha, "AUTH alpha ka"),
+        Response::Authed { .. }
+    ));
+    assert!(matches!(
+        ask(&core, &mut beta, "AUTH beta kb"),
+        Response::Authed { .. }
+    ));
+
+    let frame = Request::Det(gen::uniform(&mut TestRng::from_seed(88), 3, 8, -1.0, 1.0)).encode();
+    let bits = |r: Response| match r {
+        Response::Ok { det, micros, .. } => (det.to_bits(), micros),
+        other => panic!("{other:?}"),
+    };
+    let (cold, cold_micros) = bits(ask(&core, &mut alpha, &frame));
+    let (hit, hit_micros) = bits(ask(&core, &mut beta, &frame));
+    assert_eq!(cold, hit, "beta must see alpha's exact bits");
+    let _ = cold_micros;
+    assert_eq!(hit_micros, 0, "beta's request must be a cache hit");
+
+    let snap = core.registry().snapshot();
+    // One shared entry: one miss (alpha), one hit (beta).
+    assert_eq!(snap.get("cache_misses_total"), Some("1"));
+    assert_eq!(snap.get("cache_hits_total"), Some("1"));
+    // Each tenant is metered for exactly its own request — sharing the
+    // entry must not leak one tenant's traffic into the other's meters.
+    assert_eq!(snap.get("tenant_alpha_requests_total"), Some("1"));
+    assert_eq!(snap.get("tenant_beta_requests_total"), Some("1"));
+    assert_eq!(snap.get("tenant_alpha_quota_rejects_total"), None);
+    assert_eq!(snap.get("tenant_beta_quota_rejects_total"), None);
+}
+
+/// Fleet-opened submits bypass the cache entirely (workers must be able
+/// to lease real chunks), even when an identical non-fleet spec is
+/// already resident.
+#[test]
+fn fleet_submits_bypass_the_cache() {
+    use raddet::fleet::LeaseTable;
+    use raddet::service::{Request, Response};
+    let store = JobStore::open(raddet::testkit::scratch_dir("cache-fleet-bypass")).unwrap();
+    let manager = raddet::jobs::JobManager::new(store.clone(), 2);
+    let coordinator = raddet::coordinator::Coordinator::new(raddet::coordinator::CoordinatorConfig {
+        workers: 2,
+        engine: raddet::coordinator::EngineKind::Cpu,
+        schedule: raddet::coordinator::Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let fleet = LeaseTable::new(store, FleetConfig::default());
+    let core = raddet::service::ServiceCore::new(coordinator, Some(manager), Some(fleet));
+    let payload = || JobPayload::Exact(gen::integer(&mut TestRng::from_seed(91), 3, 8, -5, 5));
+
+    // Warm the cache with a non-fleet run of the spec. Chunk geometry
+    // differs between the manager default and the fleet default, but
+    // even an identical-geometry fleet submit must not be cache-served.
+    let (_cold, _hit, hit_id) = submit_twice(&core, payload(), JobEngine::CpuLu);
+    assert!(hit_id.starts_with("cache-"));
+
+    let mut ctx = raddet::service::ConnCtx::default();
+    let fleet_frame = Request::JobSubmit {
+        engine: JobEngine::CpuLu,
+        payload: payload(),
+        fleet: true,
+    }
+    .encode();
+    match ask(&core, &mut ctx, &fleet_frame) {
+        Response::Job { id } => {
+            assert!(
+                !id.starts_with("cache-"),
+                "fleet submit was served from the cache: {id}"
+            );
+        }
+        other => panic!("fleet submit: {other:?}"),
+    }
+}
+
 /// Compute a granted chunk the way a worker would.
 fn compute(spec: &JobSpec, chunk: Chunk) -> ChunkRecord {
     let (m, n) = spec.shape();

@@ -1,0 +1,483 @@
+//! Reactor storm tests: seeded connection chaos against the
+//! *production* event loop, driven deterministically over in-memory
+//! pipes on a virtual clock (`testkit::reactor_sim`).
+//!
+//! Each storm is a pure function of its seed: connects, floods,
+//! slowloris drips, hard drops and clock advances are all drawn from a
+//! `TestRng`. Run-twice assertions hold the whole observable surface
+//! fixed — the reactor's event trace, every reply byte (modulo the
+//! timing token of `OK` compute replies, normalized to determinant
+//! *bits*, and job ids, which embed a process-global sequence), and
+//! the quota accept/reject pattern.
+
+use raddet::clock::SimClock;
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::fleet::{FleetConfig, LeaseTable};
+use raddet::jobs::{JobEngine, JobManager, JobPayload, JobStore};
+use raddet::matrix::gen;
+use raddet::service::{
+    ReactorConfig, Request, Response, ServiceCore, TenantConfig, TenantTable,
+};
+use raddet::testkit::{scratch_dir, ReactorSim, SimSocket, TestRng};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build_core(tag: &str, clock: &Arc<SimClock>, tenants: Option<TenantTable>) -> Arc<ServiceCore> {
+    let dir = scratch_dir(tag);
+    let store = JobStore::open(&dir).unwrap().with_clock(clock.clone());
+    let manager = JobManager::new(store.clone(), 1).with_clock(clock.clone());
+    let fleet = LeaseTable::with_clock(store, FleetConfig::default(), clock.clone());
+    let coordinator = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        engine: EngineKind::Cpu,
+        schedule: Schedule::Static,
+        batch: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut core = ServiceCore::new(coordinator, Some(manager), Some(fleet))
+        .with_clock(clock.clone());
+    if let Some(t) = tenants {
+        core = core.with_tenants(t);
+    }
+    Arc::new(core)
+}
+
+fn two_tenants() -> TenantTable {
+    let mut t = TenantTable::new();
+    t.insert("alpha", TenantConfig { key: "ka".into(), capacity: 5, refill_per_s: 2 });
+    t.insert("beta", TenantConfig { key: "kb".into(), capacity: 3, refill_per_s: 1 });
+    t
+}
+
+/// A protocol frame for a small deterministic DET request.
+fn det_frame(seed: u64) -> String {
+    let a = gen::uniform(&mut TestRng::from_seed(seed), 2, 5, -1.0, 1.0);
+    Request::Det(a).encode().trim_end().to_string()
+}
+
+/// A fleet-opened JOB SUBMIT frame (no workers attached in these
+/// storms, so the job just sits durably — exactly what the lost-state
+/// assertion wants).
+fn fleet_submit_frame(seed: u64) -> String {
+    let a = gen::integer(&mut TestRng::from_seed(seed), 2, 6, -3, 3);
+    Request::JobSubmit {
+        engine: JobEngine::CpuLu,
+        payload: JobPayload::Exact(a),
+        fleet: true,
+    }
+    .encode()
+    .trim_end()
+    .to_string()
+}
+
+/// Replies normalized for run-twice comparison: compute replies carry
+/// a wall-time micros token, so they are rewritten to the exact result
+/// *bits* (which MUST be identical) with the timing dropped.
+fn normalize(line: &str) -> String {
+    match Response::parse(line) {
+        Ok(Response::Ok { det, terms, .. }) => {
+            format!("OK-F64 {:016x} {terms}", det.to_bits())
+        }
+        Ok(Response::OkExact { det, terms, .. }) => format!("OK-EXACT {det} {terms}"),
+        // Job ids carry a process-global sequence number, so a second
+        // run in the same process allocates different ids; acceptance
+        // itself is the deterministic part.
+        Ok(Response::Job { .. }) => "OK-JOB".to_string(),
+        _ => line.to_string(),
+    }
+}
+
+fn drain(sock: &SimSocket, into: &mut Vec<String>) {
+    while let Some(line) = sock.try_recv_line() {
+        into.push(normalize(&line));
+    }
+}
+
+struct StormOutcome {
+    trace: Vec<String>,
+    replies: Vec<String>,
+    end_conns: usize,
+}
+
+/// One seeded storm: a few hundred scripted operations mixing
+/// connects, AUTH, compute floods, garbage, slowloris drips, hard
+/// closes and virtual-time advances.
+fn run_storm(seed: u64) -> StormOutcome {
+    let clock = SimClock::new();
+    let core = build_core(&format!("storm-{seed}"), &clock, Some(two_tenants()));
+    let cfg = ReactorConfig {
+        max_conns: 24,
+        idle_timeout: Duration::from_secs(60),
+        frame_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let mut sim = ReactorSim::new(core, cfg, clock.clone());
+    let mut rng = TestRng::from_seed(seed);
+    let mut live: Vec<SimSocket> = Vec::new();
+    let mut replies = Vec::new();
+
+    for opno in 0..400u64 {
+        match rng.u64_below(10) {
+            0 | 1 => {
+                let s = sim.connect();
+                // Most new connections authenticate as one of the two
+                // tenants; the rest stay anonymous (and get refused on
+                // metered verbs).
+                match rng.u64_below(3) {
+                    0 => s.send_line("AUTH alpha ka"),
+                    1 => s.send_line("AUTH beta kb"),
+                    _ => {}
+                }
+                live.push(s);
+            }
+            2 | 3 => {
+                if let Some(s) = pick(&live, &mut rng) {
+                    s.send_line(&det_frame(1000 + rng.u64_below(4)));
+                }
+            }
+            4 => {
+                if let Some(s) = pick(&live, &mut rng) {
+                    s.send_line("PING");
+                }
+            }
+            5 => {
+                if let Some(s) = pick(&live, &mut rng) {
+                    s.send_line("THIS IS NOT A VERB");
+                }
+            }
+            6 => {
+                // Slowloris drip: half a frame, never finished.
+                if let Some(s) = pick(&live, &mut rng) {
+                    s.send_raw(b"DET 2 5 0.1,0.2");
+                }
+            }
+            7 => {
+                if !live.is_empty() {
+                    let i = rng.u64_below(live.len() as u64) as usize;
+                    let s = live.swap_remove(i);
+                    drain(&s, &mut replies);
+                    s.close();
+                }
+            }
+            8 => {
+                clock.advance(Duration::from_millis(rng.u64_below(500)));
+            }
+            _ => {
+                if let Some(s) = pick(&live, &mut rng) {
+                    s.send_line(&fleet_submit_frame(2000 + opno));
+                }
+            }
+        }
+        sim.step();
+        for s in &live {
+            drain(s, &mut replies);
+        }
+    }
+
+    // Teardown: close everything and let the reactor reap.
+    for s in &live {
+        drain(s, &mut replies);
+        s.close();
+    }
+    sim.settle(64);
+    for s in &live {
+        drain(s, &mut replies);
+    }
+    let end_conns = sim.conns();
+    StormOutcome { trace: sim.take_trace(), replies, end_conns }
+}
+
+fn pick<'a>(live: &'a [SimSocket], rng: &mut TestRng) -> Option<&'a SimSocket> {
+    if live.is_empty() {
+        None
+    } else {
+        Some(&live[rng.u64_below(live.len() as u64) as usize])
+    }
+}
+
+#[test]
+fn storms_replay_bit_identically_run_twice() {
+    for seed in [7u64, 42, 1337] {
+        let first = run_storm(seed);
+        let second = run_storm(seed);
+        assert_eq!(first.trace, second.trace, "trace diverged for seed {seed}");
+        assert_eq!(
+            first.replies, second.replies,
+            "reply transcript diverged for seed {seed}"
+        );
+        assert_eq!(first.end_conns, 0, "seed {seed} leaked connections");
+        assert_eq!(second.end_conns, 0);
+        // A storm that never exercised the interesting paths proves
+        // nothing — require some traffic of each kind.
+        assert!(
+            first.replies.iter().any(|r| r.starts_with("OK-F64")),
+            "seed {seed}: no compute traffic"
+        );
+        assert!(
+            first.replies.iter().any(|r| r.starts_with("ERR")),
+            "seed {seed}: no refusals"
+        );
+    }
+}
+
+#[test]
+fn thousands_of_short_lived_connections_return_to_baseline() {
+    let clock = SimClock::new();
+    let core = build_core("churn", &clock, None);
+    let mut sim = ReactorSim::new(core, ReactorConfig::default(), clock.clone());
+    let mut served = 0u64;
+    for i in 0..1500u64 {
+        let s = sim.connect();
+        if i % 3 == 0 {
+            s.send_line(&det_frame(i));
+        } else {
+            s.send_line("PING");
+        }
+        sim.step();
+        sim.step();
+        let reply = s.try_recv_line().unwrap_or_else(|| panic!("conn {i}: no reply"));
+        assert!(
+            reply == "PONG" || reply.starts_with("OK "),
+            "conn {i}: {reply}"
+        );
+        served += 1;
+        s.close();
+        sim.step();
+    }
+    sim.settle(64);
+    assert_eq!(served, 1500);
+    assert_eq!(sim.conns(), 0, "connection table did not return to baseline");
+}
+
+#[test]
+fn no_job_state_is_lost_in_a_storm() {
+    let clock = SimClock::new();
+    let core = build_core("jobsafe", &clock, None);
+    let mut sim = ReactorSim::new(core, ReactorConfig::default(), clock.clone());
+    let mut ids = Vec::new();
+
+    // Submit 20 fleet jobs from short-lived connections interleaved
+    // with junk traffic and drops.
+    for i in 0..20u64 {
+        let s = sim.connect();
+        s.send_line(&fleet_submit_frame(5000 + i));
+        let junk = sim.connect();
+        junk.send_raw(b"DET 9 9 partial");
+        sim.step();
+        sim.step();
+        let reply = s.try_recv_line().expect("submit reply");
+        match Response::parse(&reply) {
+            Ok(Response::Job { id }) => ids.push(id),
+            other => panic!("submit {i}: {reply} ({other:?})"),
+        }
+        s.close();
+        junk.close();
+        sim.step();
+    }
+    sim.settle(64);
+    assert_eq!(ids.len(), 20);
+    assert_eq!(sim.conns(), 0);
+
+    // Every submitted job is still addressable with full state.
+    let s = sim.connect();
+    for id in &ids {
+        s.send_line(&format!("JOB STATUS {id}"));
+        sim.step();
+        sim.step();
+        let reply = s.try_recv_line().expect("status reply");
+        match Response::parse(&reply) {
+            Ok(Response::JobStatus { id: got, state, .. }) => {
+                assert_eq!(&got, id);
+                assert_ne!(state, "complete"); // no workers attached
+            }
+            other => panic!("status {id}: {reply} ({other:?})"),
+        }
+    }
+    s.close();
+    sim.settle(64);
+}
+
+#[test]
+fn quota_rejection_pattern_is_deterministic_and_exact() {
+    let run = || {
+        let clock = SimClock::new();
+        let core = build_core("quota", &clock, Some(two_tenants()));
+        let mut sim = ReactorSim::new(core, ReactorConfig::default(), clock.clone());
+        let s = sim.connect();
+        s.send_line("AUTH beta kb"); // capacity 3, refill 1/s
+        sim.step();
+        assert_eq!(s.try_recv_line().as_deref(), Some("OK AUTH beta"));
+        let mut pattern = String::new();
+        for i in 0..6 {
+            s.send_line(&det_frame(1));
+            sim.step();
+            let reply = s.try_recv_line().unwrap();
+            pattern.push(if reply.starts_with("OK") { 'A' } else { 'R' });
+            if i == 3 {
+                // One full second refills exactly one token.
+                clock.advance(Duration::from_secs(1));
+            }
+        }
+        s.close();
+        sim.settle(64);
+        pattern
+    };
+    let first = run();
+    // Burst of 3 accepted, 4th refused, refill admits exactly one
+    // more, then refused again.
+    assert_eq!(first, "AAARAR");
+    assert_eq!(first, run(), "quota pattern diverged run-twice");
+}
+
+#[test]
+fn quota_refusal_carries_exact_retry_hint() {
+    let clock = SimClock::new();
+    let core = build_core("quota-hint", &clock, Some(two_tenants()));
+    let mut sim = ReactorSim::new(core, ReactorConfig::default(), clock.clone());
+    let s = sim.connect();
+    s.send_line("AUTH beta kb"); // capacity 3, refill 1/s
+    for _ in 0..4 {
+        s.send_line(&det_frame(1));
+    }
+    sim.settle(64);
+    let mut last = String::new();
+    while let Some(line) = s.try_recv_line() {
+        last = line;
+    }
+    // 1 token/s ⇒ exactly 1000 ms until the next token accrues.
+    assert_eq!(last, "ERR quota-exceeded retry-ms=1000");
+}
+
+#[test]
+fn slowloris_and_oversized_frames_are_reaped() {
+    let clock = SimClock::new();
+    let core = build_core("loris", &clock, None);
+    let cfg = ReactorConfig {
+        frame_timeout: Duration::from_secs(5),
+        idle_timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let mut sim = ReactorSim::new(core, cfg, clock.clone());
+
+    // A half-frame that outstays the frame timeout is refused.
+    let loris = sim.connect();
+    loris.send_raw(b"DET 3 7 0.5,0.5");
+    sim.step();
+    clock.advance(Duration::from_secs(6));
+    sim.settle(16);
+    assert_eq!(
+        loris.try_recv_line().as_deref(),
+        Some("ERR slow-frame (partial request older than the frame timeout)")
+    );
+    assert!(loris.server_closed());
+
+    // An idle (empty-buffer) connection is reaped silently.
+    let idle = sim.connect();
+    sim.step();
+    clock.advance(Duration::from_secs(31));
+    sim.settle(16);
+    assert!(idle.server_closed());
+
+    // A newline-free flood past the frame cap gets one ERR, then cut.
+    let flood = sim.connect();
+    let chunk = vec![b'x'; 1 << 20];
+    for _ in 0..40 {
+        flood.send_raw(&chunk);
+        sim.step();
+    }
+    sim.settle(64);
+    assert_eq!(flood.try_recv_line().as_deref(), Some("ERR request line too long"));
+    assert!(flood.server_closed());
+    assert_eq!(sim.conns(), 0);
+}
+
+#[test]
+fn connection_limit_refuses_with_server_busy() {
+    let clock = SimClock::new();
+    let core = build_core("busy", &clock, None);
+    let cfg = ReactorConfig { max_conns: 4, ..Default::default() };
+    let mut sim = ReactorSim::new(core, cfg, clock.clone());
+    let admitted: Vec<_> = (0..4).map(|_| sim.connect()).collect();
+    sim.step();
+    assert_eq!(sim.conns(), 4);
+    let refused = sim.connect();
+    let refused2 = sim.connect();
+    sim.step();
+    for r in [&refused, &refused2] {
+        assert_eq!(
+            r.try_recv_line().as_deref(),
+            Some("ERR server-busy (connection limit reached; retry later)")
+        );
+        assert!(r.server_closed());
+    }
+    assert_eq!(sim.conns(), 4);
+    // Draining the admitted ones frees capacity again.
+    for s in &admitted {
+        s.close();
+    }
+    sim.settle(16);
+    assert_eq!(sim.conns(), 0);
+    let back = sim.connect();
+    back.send_line("PING");
+    sim.settle(16);
+    assert_eq!(back.try_recv_line().as_deref(), Some("PONG"));
+}
+
+#[test]
+fn compute_queue_backpressure_is_deterministic() {
+    let clock = SimClock::new();
+    let core = build_core("bp", &clock, None);
+    let cfg = ReactorConfig { submit_queue_cap: 2, ..Default::default() };
+    let mut sim = ReactorSim::new(core, cfg, clock.clone());
+    // Five connections each put one compute frame on the same pass:
+    // slots are served in order, so exactly the first two enqueue and
+    // the last three are refused with the retryable hint.
+    let socks: Vec<_> = (0..5).map(|_| sim.connect()).collect();
+    sim.step(); // accept all five
+    for s in &socks {
+        s.send_line(&det_frame(2));
+    }
+    sim.step();
+    let mut oks = 0;
+    let mut refused = 0;
+    for s in &socks {
+        let line = s.try_recv_line().unwrap();
+        if line.starts_with("OK ") {
+            oks += 1;
+        } else {
+            assert_eq!(line, "ERR backpressure retry-ms=50");
+            refused += 1;
+        }
+    }
+    assert_eq!((oks, refused), (2, 3));
+    // Refused clients retry after backing off (one at a time here, so
+    // the queue has drained) and succeed.
+    for s in &socks {
+        s.send_line(&det_frame(2));
+        sim.settle(16);
+        let mut got_ok = false;
+        while let Some(line) = s.try_recv_line() {
+            got_ok |= line.starts_with("OK ");
+        }
+        assert!(got_ok, "retry after backpressure failed");
+    }
+}
+
+#[test]
+fn reauth_is_refused_but_connection_survives() {
+    let clock = SimClock::new();
+    let core = build_core("reauth", &clock, Some(two_tenants()));
+    let mut sim = ReactorSim::new(core, ReactorConfig::default(), clock.clone());
+    let s = sim.connect();
+    s.send_line("AUTH alpha ka");
+    s.send_line("AUTH alpha ka"); // same tenant: idempotent OK
+    s.send_line("AUTH beta kb"); // rebind attempt: refused
+    s.send_line("PING");
+    sim.settle(32);
+    assert_eq!(s.try_recv_line().as_deref(), Some("OK AUTH alpha"));
+    assert_eq!(s.try_recv_line().as_deref(), Some("OK AUTH alpha"));
+    let deny = s.try_recv_line().unwrap();
+    assert!(deny.starts_with("ERR reauth-denied"), "{deny}");
+    assert_eq!(s.try_recv_line().as_deref(), Some("PONG"));
+}
