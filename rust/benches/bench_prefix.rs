@@ -12,8 +12,9 @@
 
 use raddet::bench::stats::{json_f64, json_object};
 use raddet::bench::{bench, fmt_time, BenchConfig, Table};
-use raddet::combin::combination_count;
-use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, Schedule};
+use raddet::combin::{combination_count, Chunk, PascalTable};
+use raddet::coordinator::{Coordinator, CoordinatorConfig, EngineKind, LeaseRunner, Schedule};
+use raddet::linalg::KernelKind;
 use raddet::matrix::gen;
 use raddet::testkit::TestRng;
 
@@ -90,6 +91,137 @@ fn main() {
         }
     }
     print!("{}", table.render());
+
+    // ── Dot kernel in isolation ─────────────────────────────────────
+    // The dispatched dot on the widest sibling block of each shape
+    // (width = n−m+1, i.e. prefix = columns 1…m−1): this is the unit
+    // the SIMD layer vectorizes, and where the ≥ 1.5× acceptance gate
+    // of EXPERIMENTS.md §Perf iteration 7 is measured. Per-lane det
+    // bits must agree across kernels before any timing counts.
+    //
+    // The end-to-end sweep below is necessarily flatter: a full (m,n)
+    // sweep averages block width n/m, so the O(m³) cofactor
+    // factorization — identical across kernels — takes a growing share
+    // of per-block time as m rises.
+    let kernels = KernelKind::available_kernels();
+    let names: Vec<&str> = kernels.iter().map(|k| k.as_str()).collect();
+    const DOT_REPS: usize = 4096;
+    println!(
+        "\n## dot kernel in isolation ({DOT_REPS}× widest block per sample, kernels: {})\n",
+        names.join("/")
+    );
+    let mut dt = Table::new(&["m", "n", "width", "kernel", "per block", "Mterms/s", "vs scalar"]);
+    for m in [4usize, 6, 8, 10] {
+        for n in [m + 12, m + 20] {
+            let w = n - m + 1;
+            let a = gen::uniform(&mut TestRng::from_seed((m * 37 + n) as u64), m, n, -1.0, 1.0);
+            let cof: Vec<f64> = (0..m).map(|i| (0.3 + 0.37 * i as f64).sin()).collect();
+            let c0 = m - 1; // widest block's first sibling column (0-based)
+            let mut dets = vec![0.0; w];
+            let mut scalar_median = None;
+            let mut want_bits: Option<Vec<u64>> = None;
+            for &k in &kernels {
+                k.dot_block(a.data(), n, c0, &cof, &mut dets);
+                let bits: Vec<u64> = dets.iter().map(|d| d.to_bits()).collect();
+                match &want_bits {
+                    None => want_bits = Some(bits),
+                    Some(wb) => assert_eq!(&bits, wb, "kernel {k} lane bits (m={m} n={n})"),
+                }
+                let s = bench(&cfg, || {
+                    for _ in 0..DOT_REPS {
+                        k.dot_block(a.data(), n, c0, &cof, &mut dets);
+                    }
+                    std::hint::black_box(&dets);
+                });
+                let per_block = s.median / DOT_REPS as f64;
+                if k == KernelKind::Scalar {
+                    scalar_median = Some(s.median);
+                }
+                let speedup = scalar_median.expect("scalar runs first") / s.median;
+                dt.row(&[
+                    m.to_string(),
+                    n.to_string(),
+                    w.to_string(),
+                    k.as_str().to_string(),
+                    fmt_time(per_block),
+                    format!("{:.1}", w as f64 / per_block / 1e6),
+                    format!("{speedup:.2}×"),
+                ]);
+                json_rows.push(json_object(&[
+                    ("bench", "\"prefix_kernels\"".into()),
+                    ("m", m.to_string()),
+                    ("n", n.to_string()),
+                    ("width", w.to_string()),
+                    ("kernel", format!("\"{k}\"")),
+                    ("stats", s.to_json()),
+                    ("reps", DOT_REPS.to_string()),
+                    ("speedup_vs_scalar", json_f64(speedup)),
+                ]));
+            }
+        }
+    }
+    print!("{}", dt.render());
+
+    // ── Per-kernel end-to-end sweep ─────────────────────────────────
+    // One single-chunk LeaseRunner per kernel (scheduling out of the
+    // picture): the whole prefix engine — block enumeration, cofactor
+    // LU, dispatched dots, Neumaier — under each kernel. Partials must
+    // be bit-identical across kernels before any timing counts.
+    println!("\n## prefix engine per kernel (single chunk, end to end)\n");
+    let mut kt = Table::new(&["m", "n", "terms", "kernel", "median", "Mterms/s", "vs scalar"]);
+    for m in [4usize, 6, 8, 10] {
+        for n in [m + 12, m + 20] {
+            let terms = combination_count(n as u64, m as u64).unwrap();
+            if terms > TERM_BUDGET {
+                eprintln!("(skip kernels m={m} n={n}: {terms} terms over budget)");
+                continue;
+            }
+            let a = gen::uniform(&mut TestRng::from_seed((m * 1000 + n) as u64), m, n, -1.0, 1.0);
+            let ptable = PascalTable::new(n as u64, m as u64).unwrap();
+            let chunk = Chunk { start: 0, len: terms };
+            let mut scalar_median = None;
+            let mut want_bits = None;
+            for &k in &kernels {
+                let mut runner = LeaseRunner::<f64>::prefix_with_kernel(m, k);
+                let (v, _) = runner.run_chunk(&a, &ptable, chunk).unwrap();
+                match want_bits {
+                    None => want_bits = Some(v.to_bits()),
+                    Some(w) => assert_eq!(
+                        v.to_bits(),
+                        w,
+                        "kernel {k} diverged from scalar bits (m={m} n={n})"
+                    ),
+                }
+                let s = bench(&cfg, || {
+                    let (v, _) = runner.run_chunk(&a, &ptable, chunk).unwrap();
+                    v
+                });
+                if k == KernelKind::Scalar {
+                    scalar_median = Some(s.median);
+                }
+                let speedup = scalar_median.expect("scalar runs first") / s.median;
+                kt.row(&[
+                    m.to_string(),
+                    n.to_string(),
+                    terms.to_string(),
+                    k.as_str().to_string(),
+                    fmt_time(s.median),
+                    format!("{:.2}", terms as f64 / s.median / 1e6),
+                    format!("{speedup:.2}×"),
+                ]);
+                json_rows.push(json_object(&[
+                    ("bench", "\"prefix_kernels_e2e\"".into()),
+                    ("m", m.to_string()),
+                    ("n", n.to_string()),
+                    ("terms", terms.to_string()),
+                    ("kernel", format!("\"{k}\"")),
+                    ("stats", s.to_json()),
+                    ("speedup_vs_scalar", json_f64(speedup)),
+                ]));
+            }
+        }
+    }
+    print!("{}", kt.render());
 
     let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
     match std::env::var("RADDET_BENCH_JSON") {

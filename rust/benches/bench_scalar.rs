@@ -129,6 +129,64 @@ fn main() {
     }
     print!("{}", t2.render());
 
+    // ── Scratch reuse in the exact cofactor pass ────────────────────
+    // The exact engines' per-block hot path is cofactors: m Bareiss
+    // minors per sibling block. The allocating form builds a fresh
+    // scalar working copy per minor (for BigInt, a limb vector per
+    // element); the scratch form recycles one CofactorScratch across
+    // blocks via Scalar::assign_elem. This is the win the engines now
+    // take by default (EXPERIMENTS.md §Scalars).
+    println!("\n## exact scratch reuse (one cofactor pass per iteration)\n");
+    use raddet::linalg::{cofactors_generic, cofactors_into, CofactorScratch};
+    use raddet::scalar::BigInt;
+    let mut t3 = Table::new(&["m", "scalar", "alloc", "scratch", "speedup"]);
+    for m in [4usize, 5, 6] {
+        let prefix = gen::integer(&mut TestRng::from_seed(m as u64 * 7 + 1), m, m - 1, -60, 60);
+        // BigInt: the scalar the hoist exists for.
+        let mut out_b = vec![BigInt::default(); m];
+        let mut minor_buf = Vec::new();
+        let s_alloc_b = bench(&cfg, || {
+            cofactors_generic::<BigInt>(prefix.data(), m, &mut minor_buf, &mut out_b).unwrap();
+            std::hint::black_box(&out_b);
+        });
+        let mut scratch_b: CofactorScratch<BigInt> = CofactorScratch::new();
+        let s_scr_b = bench(&cfg, || {
+            cofactors_into(prefix.data(), m, &mut scratch_b, &mut out_b).unwrap();
+            std::hint::black_box(&out_b);
+        });
+        // i128: Copy scalar — measures pure buffer-reuse overhead.
+        let mut out_i = vec![0i128; m];
+        let s_alloc_i = bench(&cfg, || {
+            cofactors_generic::<i128>(prefix.data(), m, &mut minor_buf, &mut out_i).unwrap();
+            std::hint::black_box(&out_i);
+        });
+        let mut scratch_i: CofactorScratch<i128> = CofactorScratch::new();
+        let s_scr_i = bench(&cfg, || {
+            cofactors_into(prefix.data(), m, &mut scratch_i, &mut out_i).unwrap();
+            std::hint::black_box(&out_i);
+        });
+        for (kind, s_alloc, s_scr) in
+            [("big", &s_alloc_b, &s_scr_b), ("i128", &s_alloc_i, &s_scr_i)]
+        {
+            t3.row(&[
+                m.to_string(),
+                kind.to_string(),
+                fmt_time(s_alloc.median),
+                fmt_time(s_scr.median),
+                format!("{:.2}×", s_alloc.median / s_scr.median),
+            ]);
+            json_rows.push(json_object(&[
+                ("bench", "\"scalar_scratch\"".into()),
+                ("m", m.to_string()),
+                ("scalar", format!("\"{kind}\"")),
+                ("alloc", s_alloc.to_json()),
+                ("scratch", s_scr.to_json()),
+                ("speedup", json_f64(s_alloc.median / s_scr.median)),
+            ]));
+        }
+    }
+    print!("{}", t3.render());
+
     let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
     match std::env::var("RADDET_BENCH_JSON") {
         Ok(path) if !path.is_empty() => {

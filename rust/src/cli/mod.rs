@@ -162,7 +162,15 @@ commands:\n\
             server's METRICS JOB verb for live fleet telemetry —\n\
             per-worker throughput, lease counts, straggler-visible\n\
             ETA — with --watch-ms to follow and --json for tooling)\n\
-  help      this text\n";
+  help      this text\n\n\
+environment:\n\
+  RADDET_KERNEL=scalar|unrolled|avx2|neon\n\
+            force the float prefix engine's SIMD dot kernel (default:\n\
+            widest the CPU supports — avx2 on x86-64, neon on aarch64).\n\
+            All kernels are bit-identical; this changes speed, never\n\
+            bits. Unknown/unsupported names abort loudly. The active\n\
+            kernel is shown by det/serve and exported in METRICS as\n\
+            kernel_<name>_active / kernel_<name>_blocks_total.\n";
 
 fn build_coordinator(a: &Args) -> Result<Coordinator> {
     let engine = match a.get("engine").unwrap_or("auto") {
@@ -276,8 +284,15 @@ fn cmd_det(a: &Args) -> Result<()> {
     }
     let out = coord.radic_det(&mat)?;
     println!("radic_det = {:.12e}", out.det);
+    // Only the prefix engine dispatches SIMD dot kernels; other
+    // engines would report a kernel they never ran.
+    let kernel = if out.engine == "prefix" {
+        format!("   kernel = {}", crate::linalg::KernelKind::active())
+    } else {
+        String::new()
+    };
     println!(
-        "  shape = {}×{}   terms = {}   engine = {}",
+        "  shape = {}×{}   terms = {}   engine = {}{kernel}",
         mat.rows(),
         mat.cols(),
         out.terms,
@@ -522,6 +537,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
     if use_reactor {
         println!("shell: event-loop reactor (single accept loop + bounded compute pool)");
     }
+    println!(
+        "float kernel: {} (prefix-engine dot; RADDET_KERNEL=scalar|unrolled|avx2|neon \
+         forces one — bit-identical either way)",
+        crate::linalg::KernelKind::active()
+    );
     println!("jobs journal dir: {jobs_dir}");
     if cache_entries > 0 {
         println!("result cache: {cache_entries} entries (content-addressed; --cache-entries 0 disables)");
@@ -772,11 +792,29 @@ fn cmd_job_top(a: &Args) -> Result<()> {
     let addr = a.get("addr").unwrap_or("127.0.0.1:7171");
     let watch_ms: u64 = a.get_parse("watch-ms", 0u64)?;
     let mut client = Client::connect(addr)?;
+    // One-shot: which float kernel the *server* process dispatches
+    // (`kernel_<name>_active` gauge). Human mode only — the JSON shape
+    // is pinned by tests and mirrors `METRICS JOB` exactly.
+    let server_kernel = if a.has_flag("json") {
+        None
+    } else {
+        client.metrics().ok().and_then(|snap| {
+            snap.pairs().iter().find_map(|(name, value)| {
+                name.strip_prefix("kernel_")
+                    .and_then(|rest| rest.strip_suffix("_active"))
+                    .filter(|_| value == "1")
+                    .map(str::to_string)
+            })
+        })
+    };
     loop {
         let t = client.job_metrics(&id)?;
         if a.has_flag("json") {
             println!("{}", render_job_top_json(&t));
         } else {
+            if let Some(k) = &server_kernel {
+                println!("server float kernel: {k}");
+            }
             print!("{}", render_job_top(&t));
         }
         if watch_ms == 0 || t.state != "open" {

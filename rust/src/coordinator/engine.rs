@@ -15,7 +15,7 @@
 //! the per-term O(m³) of the LU lane engines.
 
 use crate::combin::radic_sign;
-use crate::linalg::{det_lu_inplace, MinorsWorkspace, NeumaierSum};
+use crate::linalg::{det_lu_inplace, KernelKind, LaneBuffer, MinorsWorkspace, NeumaierSum};
 use crate::matrix::MatF64;
 use crate::Result;
 
@@ -112,14 +112,24 @@ pub struct BlockOutcome {
 /// Laplace cofactors in one pivoted elimination
 /// ([`MinorsWorkspace::cofactors`]), then each sibling determinant is
 /// `Σᵢ cᵢ·A[i, j]` — O(m) instead of the O(m³) gather+LU of the lane
-/// engines. Rank-deficient prefixes fall back to the exact same
-/// per-sibling LU the [`CpuEngine`] runs (metered, never silent).
+/// engines. The per-sibling dots are evaluated by a runtime-dispatched
+/// SIMD kernel ([`KernelKind`], `RADDET_KERNEL` to force one) that is
+/// bit-identical to the scalar loop by construction (see
+/// [`crate::linalg::simd`]); sign application and the Neumaier
+/// accumulation over the block stay in shared scalar code either way.
+/// Rank-deficient prefixes fall back to the exact same per-sibling LU
+/// the [`CpuEngine`] runs (metered, never silent).
 ///
 /// All scratch is owned by the engine and reused across blocks — the
 /// steady-state hot path performs zero allocations.
 pub struct PrefixEngine {
     m: usize,
     ws: MinorsWorkspace,
+    /// Dot kernel evaluating the sibling lanes (captured at
+    /// construction — [`KernelKind::active`] by default).
+    kernel: KernelKind,
+    /// Per-lane determinants of the current block.
+    lanes: LaneBuffer,
     /// Gathered m×(m−1) prefix.
     prefix_buf: Vec<f64>,
     /// Laplace cofactors of the current prefix.
@@ -131,12 +141,22 @@ pub struct PrefixEngine {
 }
 
 impl PrefixEngine {
-    /// New engine for m-row jobs.
+    /// New engine for m-row jobs, on the process-wide active kernel.
     pub fn new(m: usize) -> Self {
+        Self::with_kernel(m, KernelKind::active())
+    }
+
+    /// New engine on an explicit kernel — for tests and benches that
+    /// compare kernels in one process (the environment override is
+    /// read once; this bypasses it). Refuses kernels the CPU lacks.
+    pub fn with_kernel(m: usize, kernel: KernelKind) -> Self {
         assert!(m >= 1);
+        assert!(kernel.available(), "kernel {kernel} not supported by this CPU");
         Self {
             m,
             ws: MinorsWorkspace::new(m),
+            kernel,
+            lanes: LaneBuffer::new(),
             prefix_buf: vec![0.0; m * (m - 1)],
             cof: vec![0.0; m],
             cols_buf: vec![0; m],
@@ -147,6 +167,11 @@ impl PrefixEngine {
     /// Submatrix order.
     pub fn m(&self) -> usize {
         self.m
+    }
+
+    /// The dot kernel this engine runs.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// Engine label for metrics/CLI output.
@@ -179,18 +204,19 @@ impl PrefixEngine {
             };
         }
 
+        // The sibling lanes are contiguous inside each row (columns
+        // last_lo..=last_hi), so the kernel reads the matrix directly;
+        // only the per-lane determinants are written to scratch.
+        let dets = self.lanes.lanes(terms as usize);
+        self.kernel
+            .dot_block(a.data(), a.cols(), (last_lo - 1) as usize, &self.cof, dets);
+
         // Radić sign (−1)^(r+s) with s = Σ prefix + j: alternates as j
-        // sweeps the block.
+        // sweeps the block. Sign + accumulation stay scalar and
+        // kernel-independent — only the dots above are dispatched.
         let mut sign = block_sign(prefix, last_lo);
-        let data = a.data();
-        let n = a.cols();
         let mut acc = NeumaierSum::new();
-        for j in last_lo..=last_hi {
-            let col = (j - 1) as usize;
-            let mut det = 0.0;
-            for (i, c) in self.cof.iter().enumerate() {
-                det += c * data[i * n + col];
-            }
+        for &det in dets.iter() {
             acc.add(sign * det);
             sign = -sign;
         }
@@ -339,6 +365,26 @@ mod tests {
         // A full-rank prefix on the same matrix still takes the fast path.
         let ok = eng.run_block(&a, &[1, 3], 4, 7);
         assert!(!ok.fell_back);
+    }
+
+    #[test]
+    fn prefix_engine_kernels_bit_identical() {
+        // The determinism invariant at engine level: every available
+        // kernel produces the same partial bits on the same block.
+        let a = gen::uniform(&mut TestRng::from_seed(11), 6, 24, -2.0, 2.0);
+        let mut want = None;
+        for k in KernelKind::available_kernels() {
+            let mut eng = PrefixEngine::with_kernel(6, k);
+            assert_eq!(eng.kernel(), k);
+            // Width 18 exercises the 8/4-lane bodies plus the tail.
+            let out = eng.run_block(&a, &[1, 2, 3, 4, 6], 7, 24);
+            assert!(!out.fell_back);
+            let bits = out.partial.to_bits();
+            match want {
+                None => want = Some(bits),
+                Some(w) => assert_eq!(bits, w, "kernel {k} diverged"),
+            }
+        }
     }
 
     #[test]

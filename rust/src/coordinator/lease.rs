@@ -25,9 +25,13 @@
 //!   job spec's tags at runtime (the jobs runner, fleet workers).
 //!
 //! All scratch lives in the engine and is reused across leases, so the
-//! steady-state hot path allocates nothing per chunk (the `BigInt`
-//! scalar allocates per value by nature — that is the price of
-//! unboundedness, measured in `benches/bench_scalar.rs`).
+//! steady-state hot path allocates nothing per chunk. That includes
+//! the exact engines' elimination buffers: Bareiss working copies and
+//! cofactor minors are hoisted per lease ([`CofactorScratch`],
+//! `det_bareiss_in`) and recycled via `Scalar::assign_elem`, so even
+//! `BigInt` limb vectors are reused across blocks and only *results*
+//! still allocate (the price of unboundedness, measured in
+//! `benches/bench_scalar.rs` §scratch).
 //!
 //! Overflow is a first-class outcome, not a wrong answer: a checked
 //! scalar op that exceeds its range surfaces as
@@ -47,7 +51,9 @@ use super::batcher::BatchBuilder;
 use super::engine::{CpuEngine, DetEngine, PrefixEngine};
 use super::metrics::WorkerMetrics;
 use crate::combin::{radic_sign, Chunk, CombinationStream, PascalTable, PrefixBlockStream};
-use crate::linalg::{cofactors_generic, det_bareiss_generic, NeumaierSum};
+use crate::linalg::{
+    cofactors_into, det_bareiss_in, CofactorScratch, KernelKind, NeumaierSum,
+};
 use crate::matrix::{Mat, MatF64, MatI64};
 use crate::scalar::{BigInt, Scalar, ScalarKind};
 use crate::{Error, Result};
@@ -167,9 +173,21 @@ impl LeaseRunner<f64> {
         Self { eng: FloatEngine::cpu(m, batch) }
     }
 
-    /// Prefix-factored runner for m-row jobs.
+    /// Prefix-factored runner for m-row jobs (process-wide kernel).
     pub fn prefix(m: usize) -> Self {
         Self { eng: FloatEngine::prefix(m) }
+    }
+
+    /// Prefix-factored runner on an explicit dot kernel — the
+    /// in-process escape hatch the kernel-equivalence and mixed-kernel
+    /// fleet suites use (`RADDET_KERNEL` is read once per process).
+    pub fn prefix_with_kernel(m: usize, kernel: KernelKind) -> Self {
+        Self { eng: FloatEngine::prefix_with_kernel(m, kernel) }
+    }
+
+    /// The dot kernel of the prefix path (`None` for lane engines).
+    pub fn float_kernel(&self) -> Option<KernelKind> {
+        self.eng.float_kernel()
     }
 }
 
@@ -201,9 +219,25 @@ impl FloatEngine {
         Self::lanes(Box::new(CpuEngine::new(m, batch.max(1))))
     }
 
-    /// Prefix-factored engine for m-row jobs.
+    /// Prefix-factored engine for m-row jobs (process-wide kernel).
     pub fn prefix(m: usize) -> Self {
         Self { inner: FloatInner::Prefix { eng: PrefixEngine::new(m) } }
+    }
+
+    /// Prefix-factored engine on an explicit dot kernel.
+    pub fn prefix_with_kernel(m: usize, kernel: KernelKind) -> Self {
+        Self {
+            inner: FloatInner::Prefix { eng: PrefixEngine::with_kernel(m, kernel) },
+        }
+    }
+
+    /// The dot kernel of the prefix path (`None` for lane engines,
+    /// whose hot loop is the per-lane LU, not the dispatched dot).
+    pub fn float_kernel(&self) -> Option<KernelKind> {
+        match &self.inner {
+            FloatInner::Lanes { .. } => None,
+            FloatInner::Prefix { eng } => Some(eng.kernel()),
+        }
     }
 }
 
@@ -319,8 +353,15 @@ pub struct ExactEngine<S: Scalar<Elem = i64>> {
     prefix_buf: Vec<i64>,
     /// Exact Laplace cofactors of the current prefix.
     cof: Vec<S>,
-    /// Minor scratch for [`cofactors_generic`].
-    minor_buf: Vec<i64>,
+    /// Cofactor scratch (minor gather + Bareiss elimination copy),
+    /// hoisted per lease so `BigInt` limb buffers survive across
+    /// blocks instead of being reallocated per minor.
+    cof_scratch: CofactorScratch<S>,
+    /// Bareiss elimination copy for the per-term path, same rationale.
+    elim_buf: Vec<S>,
+    /// One reused element lift for the prefix dot (`assign_elem`
+    /// instead of a fresh `from_elem` per matrix entry).
+    elem_buf: S,
 }
 
 impl<S: Scalar<Elem = i64>> ExactEngine<S> {
@@ -334,7 +375,9 @@ impl<S: Scalar<Elem = i64>> ExactEngine<S> {
             scratch: vec![0i64; m * m],
             prefix_buf: vec![0i64; m * (m - 1)],
             cof: vec![S::zero(); m],
-            minor_buf: Vec::new(),
+            cof_scratch: CofactorScratch::new(),
+            elim_buf: Vec::new(),
+            elem_buf: S::zero(),
         }
     }
 
@@ -351,7 +394,7 @@ impl<S: Scalar<Elem = i64>> ExactEngine<S> {
         let t0 = Instant::now();
         while let Some(cols) = stream.next_ref() {
             a.gather_cols_into(cols, &mut self.scratch);
-            let det: S = det_bareiss_generic(&self.scratch, m)?;
+            let det: S = det_bareiss_in(&self.scratch, m, &mut self.elim_buf)?;
             let signed = if radic_sign(cols) > 0.0 {
                 det
             } else {
@@ -380,7 +423,7 @@ impl<S: Scalar<Elem = i64>> ExactEngine<S> {
         let t0 = Instant::now();
         while let Some(b) = stream.next_block() {
             a.gather_cols_into(b.prefix, &mut self.prefix_buf);
-            cofactors_generic(&self.prefix_buf, m, &mut self.minor_buf, &mut self.cof)?;
+            cofactors_into(&self.prefix_buf, m, &mut self.cof_scratch, &mut self.cof)?;
             let s_prefix: u64 = b.prefix.iter().map(|&c| c as u64).sum();
             let mut negative = (r_const + s_prefix + b.last_lo as u64) % 2 == 1;
             let data = a.data();
@@ -388,7 +431,8 @@ impl<S: Scalar<Elem = i64>> ExactEngine<S> {
                 let col = (j - 1) as usize;
                 let mut det = S::zero();
                 for (i, c) in self.cof.iter().enumerate() {
-                    let term = c.mul_checked(&S::from_elem(data[i * n + col]), "prefix dot")?;
+                    self.elem_buf.assign_elem(data[i * n + col]);
+                    let term = c.mul_checked(&self.elem_buf, "prefix dot")?;
                     det = det.add_checked(&term, "prefix dot")?;
                 }
                 let signed = if negative { det.neg_checked("radic sum")? } else { det };
@@ -479,12 +523,40 @@ impl ChunkRunner {
         }
     }
 
+    /// [`ChunkRunner::new`] with an explicit float dot kernel. Only
+    /// the f64 prefix engine dispatches kernels; every other
+    /// scalar/engine combination ignores the hint (their hot loops are
+    /// exact arithmetic or per-lane LU).
+    pub fn with_kernel(
+        scalar: ScalarKind,
+        use_prefix: bool,
+        m: usize,
+        batch: usize,
+        kernel: KernelKind,
+    ) -> Self {
+        if scalar == ScalarKind::F64 && use_prefix {
+            ChunkRunner::F64(LeaseRunner::prefix_with_kernel(m, kernel))
+        } else {
+            Self::new(scalar, use_prefix, m, batch)
+        }
+    }
+
     /// Engine label (metrics/CLI).
     pub fn label(&self) -> &'static str {
         match self {
             ChunkRunner::F64(r) => r.label(),
             ChunkRunner::I128(r) => r.label(),
             ChunkRunner::Big(r) => r.label(),
+        }
+    }
+
+    /// The active float dot kernel, when this runner has one (f64
+    /// prefix engine only) — what the jobs manager meters as
+    /// `kernel_<name>_blocks_total`.
+    pub fn float_kernel(&self) -> Option<KernelKind> {
+        match self {
+            ChunkRunner::F64(r) => r.float_kernel(),
+            _ => None,
         }
     }
 

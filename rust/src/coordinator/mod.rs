@@ -62,7 +62,11 @@ pub enum EngineKind {
     /// Prefix-factored Laplace engine: factorize each sibling block's
     /// shared m×(m−1) prefix once, O(m) per term thereafter
     /// ([`PrefixEngine`]). Block-aligned scheduling, explicit LU
-    /// fallback on rank-deficient prefixes.
+    /// fallback on rank-deficient prefixes. On the float path the
+    /// per-sibling dots run on a runtime-dispatched SIMD kernel
+    /// ([`crate::linalg::KernelKind`]; force one with
+    /// `RADDET_KERNEL=scalar|unrolled|avx2|neon`) — all kernels are
+    /// bit-identical, so this changes speed, never bits.
     Prefix,
 }
 

@@ -289,6 +289,12 @@ impl JobManager {
                             out.scalar_kind
                         ))
                         .add(totals.fallback_blocks);
+                        // Per-kernel attribution of the float prefix
+                        // dot — which SIMD variant did the blocks.
+                        if let Some(kernel) = out.float_kernel {
+                            reg.counter(&format!("kernel_{kernel}_blocks_total"))
+                                .add(totals.blocks);
+                        }
                         reg.counter("jobs_runs_total").inc();
                     }
                 }

@@ -180,6 +180,19 @@ impl JobSpec {
         )
     }
 
+    /// The float dot kernel the spec's runner will dispatch
+    /// ([`crate::linalg::KernelKind::active`]), when it has one — only
+    /// the f64 prefix engine does. This is what the jobs manager
+    /// meters as `kernel_<name>_blocks_total`.
+    pub fn float_kernel(&self) -> Option<crate::linalg::KernelKind> {
+        match (self.payload.scalar_kind(), self.engine) {
+            (ScalarKind::F64, JobEngine::Prefix) => {
+                Some(crate::linalg::KernelKind::active())
+            }
+            _ => None,
+        }
+    }
+
     /// The job's deterministic chunk plan plus the total term count.
     ///
     /// Chunk indices returned here are the indices journaled in CHUNK

@@ -54,6 +54,9 @@ pub struct JobOutcome {
     /// Wire tag of the job's scalar arithmetic (`f64` / `exact` /
     /// `big`) — the telemetry key engine counters aggregate under.
     pub scalar_kind: &'static str,
+    /// Name of the float dot kernel the run dispatched (f64 prefix
+    /// jobs only) — the `kernel_<name>_blocks_total` telemetry key.
+    pub float_kernel: Option<&'static str>,
 }
 
 /// Executes (and resumes) durable jobs against a [`JobStore`].
@@ -126,6 +129,7 @@ impl JobRunner {
                 metrics: jm,
                 interrupted: false,
                 scalar_kind: job.spec.payload.kind_str(),
+                float_kernel: job.spec.float_kernel().map(|k| k.as_str()),
             });
         }
 
@@ -254,6 +258,7 @@ impl JobRunner {
             metrics: jm,
             interrupted,
             scalar_kind: job.spec.payload.kind_str(),
+            float_kernel: job.spec.float_kernel().map(|k| k.as_str()),
         })
     }
 }

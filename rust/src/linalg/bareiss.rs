@@ -25,11 +25,38 @@ use crate::Result;
 /// never fail). For `i128`, entries up to ~1e3 and m ≤ 12 are
 /// comfortably safe.
 pub fn det_bareiss_generic<S: Scalar<Elem = i64>>(a: &[i64], m: usize) -> Result<S> {
+    det_bareiss_in(a, m, &mut Vec::new())
+}
+
+/// [`det_bareiss_generic`] with caller-owned elimination scratch.
+///
+/// The recurrence needs an m×m working copy of `a` in `S`; the
+/// allocating entry point builds it fresh per call, which is the exact
+/// engines' dominant allocation (m calls per sibling block via the
+/// cofactor path — for `BigInt`, m³ limb-vector allocations per
+/// block). Passing `scratch` keeps those buffers alive across calls:
+/// existing slots are overwritten via [`Scalar::assign_elem`] (which
+/// `BigInt` implements allocation-free for `i64` elements), so the
+/// steady state allocates only when an intermediate genuinely outgrows
+/// its limb capacity. Metered in `benches/bench_scalar.rs` §scratch.
+pub fn det_bareiss_in<S: Scalar<Elem = i64>>(
+    a: &[i64],
+    m: usize,
+    scratch: &mut Vec<S>,
+) -> Result<S> {
     assert_eq!(a.len(), m * m, "square row-major buffer expected");
     if m == 0 {
         return Ok(S::one());
     }
-    let mut w: Vec<S> = a.iter().map(|&x| S::from_elem(x)).collect();
+    // Reuse scratch slots in place; only grow (never shrink) so limb
+    // capacity survives across calls.
+    if scratch.len() < a.len() {
+        scratch.resize(a.len(), S::zero());
+    }
+    let w = &mut scratch[..a.len()];
+    for (slot, &x) in w.iter_mut().zip(a) {
+        slot.assign_elem(x);
+    }
     let mut negated = false;
     let mut prev = S::one();
     for k in 0..m - 1 {
@@ -155,6 +182,24 @@ mod tests {
         let wide: BigInt = det_bareiss_generic(a.data(), 6).unwrap();
         assert!(!wide.is_zero());
         assert_eq!(wide.to_i128(), None, "the point: it does not fit i128");
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_form() {
+        // One scratch reused across shapes and scalars-worth of calls
+        // must give the same value as a fresh elimination every time.
+        let mut big_scratch: Vec<BigInt> = Vec::new();
+        let mut i128_scratch: Vec<i128> = Vec::new();
+        for seed in 0..30u64 {
+            let m = 1 + (seed as usize % 6);
+            let a = gen::integer(&mut TestRng::from_seed(400 + seed), m, m, -9, 9);
+            let fresh: BigInt = det_bareiss_generic(a.data(), m).unwrap();
+            let reused: BigInt = det_bareiss_in(a.data(), m, &mut big_scratch).unwrap();
+            assert_eq!(fresh, reused, "BigInt m={m}");
+            let narrow = det_bareiss(a.data(), m).unwrap();
+            let reused_n: i128 = det_bareiss_in(a.data(), m, &mut i128_scratch).unwrap();
+            assert_eq!(narrow, reused_n, "i128 m={m}");
+        }
     }
 
     #[test]

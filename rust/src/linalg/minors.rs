@@ -31,7 +31,7 @@
 //! accurate — so the engine must fall back loudly (metered as
 //! `fallback_blocks`), never answer silently from a bad factorization.
 
-use crate::linalg::bareiss::det_bareiss_generic;
+use crate::linalg::bareiss::det_bareiss_in;
 use crate::scalar::Scalar;
 use crate::Result;
 
@@ -165,6 +165,49 @@ pub fn cofactors_generic<S: Scalar<Elem = i64>>(
     minor_buf: &mut Vec<i64>,
     out: &mut [S],
 ) -> Result<()> {
+    cofactors_inner(prefix, m, minor_buf, &mut Vec::new(), out)
+}
+
+/// All exact-cofactor scratch in one reusable bundle, for engines that
+/// hold it across blocks: the (m−1)² minor gather plus the Bareiss
+/// elimination copy in `S`. The elimination copy is the expensive half
+/// for `BigInt` — without it every cofactor pass performs (m−1)² limb
+/// allocations per minor ([`det_bareiss_in`] reuses them instead;
+/// metered in `benches/bench_scalar.rs` §scratch).
+#[derive(Debug, Default)]
+pub struct CofactorScratch<S: Scalar<Elem = i64>> {
+    /// (m−1)×(m−1) minor gather buffer.
+    minor: Vec<i64>,
+    /// Bareiss working copy, slots recycled via [`Scalar::assign_elem`].
+    elim: Vec<S>,
+}
+
+impl<S: Scalar<Elem = i64>> CofactorScratch<S> {
+    /// Empty scratch; first block sizes it.
+    pub fn new() -> Self {
+        Self { minor: Vec::new(), elim: Vec::new() }
+    }
+}
+
+/// [`cofactors_generic`] with fully caller-owned scratch
+/// ([`CofactorScratch`]) — the allocation-free form the exact engines
+/// run per sibling block.
+pub fn cofactors_into<S: Scalar<Elem = i64>>(
+    prefix: &[i64],
+    m: usize,
+    scratch: &mut CofactorScratch<S>,
+    out: &mut [S],
+) -> Result<()> {
+    cofactors_inner(prefix, m, &mut scratch.minor, &mut scratch.elim, out)
+}
+
+fn cofactors_inner<S: Scalar<Elem = i64>>(
+    prefix: &[i64],
+    m: usize,
+    minor_buf: &mut Vec<i64>,
+    elim: &mut Vec<S>,
+    out: &mut [S],
+) -> Result<()> {
     debug_assert_eq!(out.len(), m);
     if m == 1 {
         out[0] = S::one();
@@ -183,7 +226,7 @@ pub fn cofactors_generic<S: Scalar<Elem = i64>>(
             minor_buf[t * w..(t + 1) * w].copy_from_slice(&prefix[r * w..(r + 1) * w]);
             t += 1;
         }
-        let minor: S = det_bareiss_generic(minor_buf, w)?;
+        let minor: S = det_bareiss_in(minor_buf, w, elim)?;
         // 1-based row i = skip+1, column m: (−1)^(i+m). Magnitude needs
         // no pre-guard here: the per-sibling dot product uses checked
         // ops on the actual entries, which is strictly more permissive.
@@ -328,6 +371,22 @@ mod tests {
         let mut out = [0i128];
         cofactors_exact(&[], 1, &mut Vec::new(), &mut out).unwrap();
         assert_eq!(out, [1]);
+    }
+
+    #[test]
+    fn scratch_bundle_matches_allocating_form() {
+        use crate::scalar::BigInt;
+        let mut scratch: CofactorScratch<BigInt> = CofactorScratch::new();
+        for seed in 0..25u64 {
+            let m = 2 + (seed as usize % 4);
+            let prefix = gen::integer(&mut TestRng::from_seed(500 + seed), m, m - 1, -9, 9);
+            let mut fresh = vec![BigInt::zero(); m];
+            let mut reused = vec![BigInt::zero(); m];
+            let mut buf = Vec::new();
+            cofactors_generic::<BigInt>(prefix.data(), m, &mut buf, &mut fresh).unwrap();
+            cofactors_into(prefix.data(), m, &mut scratch, &mut reused).unwrap();
+            assert_eq!(fresh, reused, "m={m}");
+        }
     }
 
     #[test]

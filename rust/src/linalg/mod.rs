@@ -13,6 +13,10 @@
 //! * [`minors`] — prefix cofactors: the m signed minors of a shared
 //!   m×(m−1) column prefix in one elimination pass, the factorization
 //!   the prefix engine amortizes across sibling combination blocks.
+//! * [`simd`] — the dot kernels behind the float prefix engine's
+//!   sibling lanes: runtime-dispatched scalar/unrolled/AVX2/NEON
+//!   variants sharing one fixed reduction shape, so every kernel is
+//!   bit-identical to the scalar reference.
 //!
 //! [`radic`] evaluates Definition 3 sequentially on top of any of them —
 //! the single-processor baseline every parallel run is checked against.
@@ -26,11 +30,15 @@ pub mod laplace;
 pub mod lu;
 pub mod minors;
 pub mod radic;
+pub mod simd;
 
 pub use accum::NeumaierSum;
 pub use altdef::{block_sum_det, cauchy_binet_sum, gram_det};
-pub use bareiss::{det_bareiss, det_bareiss_generic};
+pub use bareiss::{det_bareiss, det_bareiss_generic, det_bareiss_in};
 pub use laplace::det_laplace;
 pub use lu::{det_lu, det_lu_inplace};
-pub use minors::{cofactors_exact, cofactors_generic, MinorsWorkspace};
+pub use minors::{
+    cofactors_exact, cofactors_generic, cofactors_into, CofactorScratch, MinorsWorkspace,
+};
+pub use simd::{KernelKind, LaneBuffer};
 pub use radic::{radic_det_exact, radic_det_generic, radic_det_seq, radic_terms, RadicTerm};

@@ -1,0 +1,462 @@
+//! SIMD dot kernels for the prefix engine's float hot path.
+//!
+//! The prefix-factored Laplace engine reduces every sibling term to one
+//! O(m) dot product `det_t = Σᵢ cᵢ·A[i, c₀+t]` against the block's
+//! shared cofactor vector (see [`crate::linalg::minors`]). Because the
+//! matrix is row-major, the sibling lanes `t = 0..w` of a block are
+//! *already contiguous inside each row* — `A[i, c₀..c₀+w]` is the
+//! stride-1 span `data[i·n + c₀ ..]` — so the structure-of-arrays lane
+//! layout needs no packing copy at all: kernels read the matrix rows
+//! directly and only the per-lane determinant output ([`LaneBuffer`])
+//! is owned scratch.
+//!
+//! # The determinism rule (non-negotiable)
+//!
+//! The fleet's invariant is that every execution — any kernel, any
+//! chunk geometry, any worker mix — produces **bit-identical**
+//! `det_bits`. All kernels therefore compute each lane's determinant
+//! with the *identical fixed-shape reduction*: a sequential left-fold
+//! over `i` of the unfused `acc ← acc + cᵢ·xᵢ` (one IEEE-754 multiply,
+//! one add, in that order). Vectorization happens only **across
+//! lanes** — w independent per-lane chains evaluated side by side —
+//! never across the `i` reduction, and never with fused multiply-add
+//! (`vfmadd` rounds once where `mul`+`add` round twice, which would
+//! change bits). IEEE-754 ops are deterministic per element, so the
+//! wide kernels are bitwise equal to the scalar loop by construction;
+//! `tests/kernel_equiv.rs` and the conformance goldens pin it.
+//!
+//! # Dispatch ladder
+//!
+//! [`KernelKind::active`] picks once per process (cached):
+//!
+//! 1. `RADDET_KERNEL=scalar|unrolled|avx2|neon` forces a kernel — an
+//!    unavailable or unknown name aborts loudly (CI/bisection must
+//!    never fall back silently).
+//! 2. x86_64 with AVX2 detected at runtime
+//!    (`is_x86_feature_detected!`) → [`KernelKind::Avx2`].
+//! 3. aarch64 → [`KernelKind::Neon`] (NEON is baseline, no detection
+//!    needed).
+//! 4. everywhere else → [`KernelKind::Unrolled`], the portable
+//!    chunks-of-4 form the autovectorizer can widen.
+//!
+//! # Adding a target
+//!
+//! Implement `dot_block` for the new ISA with the same across-lanes
+//! shape (broadcast `cᵢ`, unfused mul+add per lane, scalar tail via
+//! [`dot_tail`]), add a [`KernelKind`] variant gated on
+//! `target_arch`, teach `parse`/`available`/`detect` about it, and add
+//! the name to the CI kernel matrix. The equivalence suite picks new
+//! variants up automatically via [`KernelKind::available_kernels`].
+
+use std::sync::OnceLock;
+
+/// Which dot kernel evaluates the prefix engine's sibling lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The reference loop: one lane at a time, no unrolling. This is
+    /// bit-for-bit the code every other kernel must agree with.
+    Scalar,
+    /// Portable chunks-of-4 across lanes (plain Rust, any target).
+    Unrolled,
+    /// AVX2 `f64×4`/`f64×8` across lanes (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON `f64×2`(×2) across lanes (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl KernelKind {
+    /// Kernel name as used by `RADDET_KERNEL`, telemetry counters and
+    /// the serve banner.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Unrolled => "unrolled",
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a `RADDET_KERNEL` value. `None` for names this build does
+    /// not even compile (e.g. `avx2` on aarch64) or has never heard of
+    /// — the caller decides how loudly to fail.
+    pub fn parse(name: &str) -> Option<KernelKind> {
+        match name {
+            "scalar" => Some(KernelKind::Scalar),
+            "unrolled" => Some(KernelKind::Unrolled),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" => Some(KernelKind::Avx2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this kernel run on the current CPU? (Compile-time variants
+    /// still need their runtime feature check on x86_64.)
+    pub fn available(self) -> bool {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            _ => true,
+        }
+    }
+
+    /// Every kernel the current process can actually run — what the
+    /// equivalence suite and the per-kernel bench sweep iterate.
+    pub fn available_kernels() -> Vec<KernelKind> {
+        let mut all = vec![KernelKind::Scalar, KernelKind::Unrolled];
+        #[cfg(target_arch = "x86_64")]
+        if KernelKind::Avx2.available() {
+            all.push(KernelKind::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        all.push(KernelKind::Neon);
+        all
+    }
+
+    /// The widest kernel the CPU supports (ignoring `RADDET_KERNEL`).
+    pub fn detect() -> KernelKind {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if KernelKind::Avx2.available() {
+                KernelKind::Avx2
+            } else {
+                KernelKind::Unrolled
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            KernelKind::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            KernelKind::Unrolled
+        }
+    }
+
+    /// The process-wide active kernel: `RADDET_KERNEL` override if set
+    /// (unknown or unavailable names abort — a forced kernel must never
+    /// degrade silently), otherwise [`KernelKind::detect`]. Resolved
+    /// once and cached; engines capture it at construction, so tests
+    /// that need a *different* kernel in-process use
+    /// [`with_kernel`](crate::coordinator::PrefixEngine::with_kernel)
+    /// constructors instead of the environment.
+    pub fn active() -> KernelKind {
+        static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+        *ACTIVE.get_or_init(|| match std::env::var("RADDET_KERNEL") {
+            Ok(name) => {
+                let k = KernelKind::parse(&name).unwrap_or_else(|| {
+                    panic!(
+                        "RADDET_KERNEL={name}: unknown kernel for this build \
+                         (expected scalar|unrolled|avx2|neon)"
+                    )
+                });
+                assert!(
+                    k.available(),
+                    "RADDET_KERNEL={name}: kernel not supported by this CPU"
+                );
+                k
+            }
+            Err(_) => KernelKind::detect(),
+        })
+    }
+
+    /// Evaluate the sibling lanes of one block: `out[t] = Σᵢ
+    /// cof[i]·data[i·n + c0 + t]` for `t < out.len()`, each lane
+    /// folded sequentially over `i` with unfused mul+add — the fixed
+    /// reduction shape every kernel shares (see module docs).
+    ///
+    /// `data` is the row-major m×n matrix, `c0` the 0-based first lane
+    /// column. Bounds are asserted here so the vector paths can use
+    /// raw loads.
+    pub fn dot_block(self, data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64]) {
+        let (m, w) = (cof.len(), out.len());
+        if w == 0 {
+            return;
+        }
+        assert!(m >= 1 && c0 + w <= n, "lane span exceeds the matrix row");
+        assert!(data.len() >= (m - 1) * n + c0 + w, "matrix buffer too short");
+        match self {
+            KernelKind::Scalar => dot_scalar(data, n, c0, cof, out),
+            KernelKind::Unrolled => dot_unrolled(data, n, c0, cof, out),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => {
+                debug_assert!(self.available());
+                // SAFETY: bounds asserted above; AVX2 availability is
+                // guaranteed by construction (active()/with_kernel both
+                // refuse unavailable kernels) and debug-asserted here.
+                unsafe { dot_avx2(data, n, c0, cof, out) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => {
+                // SAFETY: bounds asserted above; NEON is baseline on
+                // aarch64.
+                unsafe { dot_neon(data, n, c0, cof, out) }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-lane determinant output buffer — the only scratch the SIMD layer
+/// owns (the lane *inputs* are the matrix rows themselves, already
+/// contiguous; see module docs). Grows to the widest block seen and is
+/// reused, so steady-state blocks allocate nothing.
+#[derive(Debug, Default)]
+pub struct LaneBuffer {
+    dets: Vec<f64>,
+}
+
+impl LaneBuffer {
+    /// Empty buffer; first use sizes it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A `w`-lane output slice (contents unspecified until a kernel
+    /// fills it). Never shrinks, so reuse never reallocates.
+    pub fn lanes(&mut self, w: usize) -> &mut [f64] {
+        if self.dets.len() < w {
+            self.dets.resize(w, 0.0);
+        }
+        &mut self.dets[..w]
+    }
+}
+
+/// The reference kernel: lane-at-a-time, the exact loop the prefix
+/// engine ran before dispatch existed. Everything else must match its
+/// bits.
+fn dot_scalar(data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64]) {
+    for (t, o) in out.iter_mut().enumerate() {
+        let col = c0 + t;
+        let mut det = 0.0;
+        for (i, c) in cof.iter().enumerate() {
+            det += c * data[i * n + col];
+        }
+        *o = det;
+    }
+}
+
+/// Scalar finish for lanes `t0..` — every wide kernel funnels its
+/// remainder here so tails share the reference loop verbatim.
+fn dot_tail(data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64], t0: usize) {
+    if t0 < out.len() {
+        dot_scalar(data, n, c0 + t0, cof, &mut out[t0..]);
+    }
+}
+
+/// Portable chunks-of-4: four independent lane chains per iteration,
+/// each the same sequential fold as [`dot_scalar`] — bit-identical,
+/// and shaped so the autovectorizer can widen it on any target.
+fn dot_unrolled(data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64]) {
+    let w = out.len();
+    let mut t = 0;
+    while t + 4 <= w {
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for (i, c) in cof.iter().enumerate() {
+            let row = &data[i * n + c0 + t..i * n + c0 + t + 4];
+            a0 += c * row[0];
+            a1 += c * row[1];
+            a2 += c * row[2];
+            a3 += c * row[3];
+        }
+        out[t] = a0;
+        out[t + 1] = a1;
+        out[t + 2] = a2;
+        out[t + 3] = a3;
+        t += 4;
+    }
+    dot_tail(data, n, c0, cof, out, t);
+}
+
+/// AVX2 kernel: 8 lanes (2×`__m256d`) then 4 then the scalar tail.
+///
+/// Deliberately **no `vfmadd`** even though the `fma` feature is
+/// enabled alongside `avx2`: fused multiply-add rounds once where the
+/// scalar kernel's mul-then-add rounds twice, which would break the
+/// bit-identity invariant. The feature is enabled only so LLVM may
+/// schedule the loop for FMA-era cores, not to fuse the arithmetic.
+///
+/// # Safety
+///
+/// Caller must guarantee AVX2 is available and
+/// `data[(m−1)·n + c0 + out.len() − 1]` is in bounds.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let w = out.len();
+    let base = data.as_ptr().add(c0);
+    let mut t = 0;
+    while t + 8 <= w {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        for (i, c) in cof.iter().enumerate() {
+            let cv = _mm256_set1_pd(*c);
+            let p = base.add(i * n + t);
+            let x0 = _mm256_loadu_pd(p);
+            let x1 = _mm256_loadu_pd(p.add(4));
+            // mul then add, never fmadd — see the fn docs.
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(cv, x0));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(cv, x1));
+        }
+        _mm256_storeu_pd(out.as_mut_ptr().add(t), acc0);
+        _mm256_storeu_pd(out.as_mut_ptr().add(t + 4), acc1);
+        t += 8;
+    }
+    if t + 4 <= w {
+        let mut acc = _mm256_setzero_pd();
+        for (i, c) in cof.iter().enumerate() {
+            let cv = _mm256_set1_pd(*c);
+            let x = _mm256_loadu_pd(base.add(i * n + t));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(cv, x));
+        }
+        _mm256_storeu_pd(out.as_mut_ptr().add(t), acc);
+        t += 4;
+    }
+    dot_tail(data, n, c0, cof, out, t);
+}
+
+/// NEON kernel: 4 lanes as 2×`float64x2_t`, then the scalar tail. Same
+/// unfused mul+add shape as the x86 kernel (no `vfma`).
+///
+/// # Safety
+///
+/// Caller must guarantee `data[(m−1)·n + c0 + out.len() − 1]` is in
+/// bounds (NEON itself is aarch64 baseline).
+#[cfg(target_arch = "aarch64")]
+unsafe fn dot_neon(data: &[f64], n: usize, c0: usize, cof: &[f64], out: &mut [f64]) {
+    use std::arch::aarch64::*;
+    let w = out.len();
+    let base = data.as_ptr().add(c0);
+    let mut t = 0;
+    while t + 4 <= w {
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        for (i, c) in cof.iter().enumerate() {
+            let cv = vdupq_n_f64(*c);
+            let p = base.add(i * n + t);
+            let x0 = vld1q_f64(p);
+            let x1 = vld1q_f64(p.add(2));
+            // mul then add, never vfma — bit-identity with dot_scalar.
+            acc0 = vaddq_f64(acc0, vmulq_f64(cv, x0));
+            acc1 = vaddq_f64(acc1, vmulq_f64(cv, x1));
+        }
+        vst1q_f64(out.as_mut_ptr().add(t), acc0);
+        vst1q_f64(out.as_mut_ptr().add(t + 2), acc1);
+        t += 4;
+    }
+    if t + 2 <= w {
+        let mut acc = vdupq_n_f64(0.0);
+        for (i, c) in cof.iter().enumerate() {
+            let cv = vdupq_n_f64(*c);
+            let x = vld1q_f64(base.add(i * n + t));
+            acc = vaddq_f64(acc, vmulq_f64(cv, x));
+        }
+        vst1q_f64(out.as_mut_ptr().add(t), acc);
+        t += 2;
+    }
+    dot_tail(data, n, c0, cof, out, t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{for_all, TestRng};
+
+    fn random_case(rng: &mut TestRng) -> (usize, usize, usize, Vec<f64>, Vec<f64>, usize) {
+        let m = 1 + rng.usize_below(10);
+        let w = 1 + rng.usize_below(19); // covers 8/4/2 bodies + tails
+        let n = w + rng.usize_below(8);
+        let c0 = rng.usize_below(n - w + 1);
+        let data: Vec<f64> = (0..m * n).map(|_| rng.f64_range(-3.0, 3.0)).collect();
+        let cof: Vec<f64> = (0..m).map(|_| rng.f64_range(-3.0, 3.0)).collect();
+        (m, n, c0, data, cof, w)
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_bits() {
+        let kernels = KernelKind::available_kernels();
+        assert!(kernels.contains(&KernelKind::Scalar));
+        for_all("kernels bit-equal scalar", 300, |rng: &mut TestRng| {
+            let (_m, n, c0, data, cof, w) = random_case(rng);
+            let mut want = vec![0.0; w];
+            KernelKind::Scalar.dot_block(&data, n, c0, &cof, &mut want);
+            for &k in &kernels {
+                let mut got = vec![f64::NAN; w];
+                k.dot_block(&data, n, c0, &cof, &mut got);
+                for (t, (g, e)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), e.to_bits(), "{k} lane {t} of {w}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn exact_tail_widths_are_covered() {
+        // Every remainder class of the widest kernel body (8 on
+        // x86_64) must hit the 4-lane and scalar tails.
+        let data: Vec<f64> = (0..3 * 32).map(|i| (i as f64).sin()).collect();
+        let cof = [1.5, -2.25, 0.5];
+        for w in 1..=17 {
+            let mut want = vec![0.0; w];
+            KernelKind::Scalar.dot_block(&data, 32, 9, &cof, &mut want);
+            for k in KernelKind::available_kernels() {
+                let mut got = vec![0.0; w];
+                k.dot_block(&data, 32, 9, &cof, &mut got);
+                let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "{k} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn m_one_and_zero_width_edges() {
+        let data = [3.0, 5.0, 7.0, 11.0];
+        for k in KernelKind::available_kernels() {
+            let mut out = vec![0.0; 4];
+            k.dot_block(&data, 4, 0, &[2.0], &mut out);
+            assert_eq!(out, [6.0, 10.0, 14.0, 22.0], "{k}");
+            k.dot_block(&data, 4, 0, &[2.0], &mut []);
+        }
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in KernelKind::available_kernels() {
+            assert_eq!(KernelKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("sse9000"), None);
+        // Names this build does not compile must not parse either.
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(KernelKind::parse("avx2"), None);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(KernelKind::parse("neon"), None);
+    }
+
+    #[test]
+    fn detect_is_available_and_active_is_cached() {
+        let d = KernelKind::detect();
+        assert!(d.available());
+        assert!(KernelKind::available_kernels().contains(&d));
+        assert_eq!(KernelKind::active(), KernelKind::active());
+    }
+
+    #[test]
+    fn lane_buffer_reuses_without_shrinking() {
+        let mut b = LaneBuffer::new();
+        let p = b.lanes(16).as_ptr();
+        assert_eq!(b.lanes(7).len(), 7);
+        assert_eq!(b.lanes(16).as_ptr(), p, "shrink then regrow must not realloc");
+    }
+}

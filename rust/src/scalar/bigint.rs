@@ -300,6 +300,18 @@ impl Scalar for BigInt {
         BigInt::from_i64(e)
     }
 
+    /// Reuses the existing limb buffer (an `i64` needs at most one
+    /// limb), so engine scratch that is assigned in place stops paying
+    /// one heap allocation per element per block.
+    fn assign_elem(&mut self, e: i64) {
+        self.negative = e < 0;
+        self.mag.clear();
+        let u = e.unsigned_abs();
+        if u != 0 {
+            self.mag.push(u);
+        }
+    }
+
     fn zero() -> BigInt {
         BigInt::default()
     }

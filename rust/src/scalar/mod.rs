@@ -140,6 +140,15 @@ pub trait Scalar:
     /// Lift one matrix element into the scalar.
     fn from_elem(e: Self::Elem) -> Self;
 
+    /// Overwrite `self` with one matrix element, reusing any owned
+    /// allocation. The default just rebuilds; [`BigInt`] overrides it
+    /// to keep its limb buffer's capacity — the lever that lets the
+    /// exact engines' elimination scratch stop allocating per block
+    /// (see `benches/bench_scalar.rs` §scratch).
+    fn assign_elem(&mut self, e: Self::Elem) {
+        *self = Self::from_elem(e);
+    }
+
     /// Additive identity.
     fn zero() -> Self;
 

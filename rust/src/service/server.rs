@@ -162,6 +162,15 @@ impl ServiceCore {
         let jobs = jobs.map(|j| j.with_registry(&registry));
         let fleet = fleet.map(|f| f.with_registry(&registry));
         let counters = CoreCounters::register(&registry);
+        // Which float dot kernel this process dispatches — exported so
+        // `raddet job top` (and any METRICS reader) can attribute
+        // throughput to the SIMD variant actually running.
+        registry
+            .gauge(&format!(
+                "kernel_{}_active",
+                crate::linalg::KernelKind::active()
+            ))
+            .set(1);
         let cache = Some(ResultCache::new(DEFAULT_CACHE_ENTRIES, &registry));
         Self {
             coordinator: Arc::new(coordinator),

@@ -184,6 +184,66 @@ fn golden_vectors_reproduced_bit_for_bit_by_all_engines() {
     }
 }
 
+/// The float golden rows again, once per dot kernel this build can run
+/// (forced in-process — the analogue of `RADDET_KERNEL`): the committed
+/// bit pattern must survive every kernel, at more than one chunk
+/// geometry. The CI kernel matrix re-runs the whole suite under the
+/// env forcing in separate processes; this leg pins the invariant even
+/// on a single-leg run.
+#[test]
+fn float_golden_rows_survive_every_kernel() {
+    use raddet::coordinator::ChunkRunner;
+    use raddet::linalg::KernelKind;
+    use raddet::scalar::ScalarKind;
+
+    let mut float_rows = 0usize;
+    for row in parse_fixture() {
+        let Some(want_bits) = row.f64_bits else { continue };
+        float_rows += 1;
+        let af = Mat::from_vec(
+            row.m,
+            row.n,
+            row.values.iter().map(|&x| x as f64).collect(),
+        )
+        .unwrap();
+        for kernel in KernelKind::available_kernels() {
+            for chunks in [1usize, 3] {
+                let spec = spec(JobPayload::F64(af.clone()), JobEngine::Prefix, chunks);
+                let (plan, _total) = spec.plan().unwrap();
+                let (m, n) = spec.shape();
+                let table = PascalTable::new(n as u64, m as u64).unwrap();
+                let mut runner =
+                    ChunkRunner::with_kernel(ScalarKind::F64, true, m, spec.batch, kernel);
+                let mut completed = BTreeMap::new();
+                for (i, chunk) in plan.iter().enumerate() {
+                    let (partial, wm) = runner
+                        .run_chunk(spec.payload.as_lease(), &table, *chunk)
+                        .unwrap();
+                    completed.insert(
+                        i as u64,
+                        ChunkRecord { value: partial.into(), terms: wm.terms, micros: 0 },
+                    );
+                }
+                let (value, _terms) = compose_partials(plan.len(), &completed).unwrap();
+                match value {
+                    JobValue::F64(v) => assert_eq!(
+                        v.to_bits(),
+                        want_bits,
+                        "{} {}×{} kernel={kernel} chunks={chunks}: {v:e} ({:016x}) \
+                         vs committed {want_bits:016x}",
+                        row.kind,
+                        row.m,
+                        row.n,
+                        v.to_bits()
+                    ),
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+    }
+    assert!(float_rows > 0, "fixture must pin float rows for this leg to bite");
+}
+
 /// The committed `f64_bits` must themselves be `float(exact_det)`, and
 /// the kinds must honour their own preconditions — a self-consistency
 /// guard on the fixture file (catches a hand-edited row drifting).

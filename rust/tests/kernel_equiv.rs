@@ -1,0 +1,163 @@
+//! Kernel-equivalence property suite.
+//!
+//! The SIMD layer's one non-negotiable contract (ARCHITECTURE.md §SIMD
+//! kernels): every dot kernel this build can run — scalar reference,
+//! unrolled, AVX2, NEON — produces **bit-identical** chunk partials.
+//! Vectorization is allowed to change speed, never bits, because every
+//! kernel evaluates the identical per-lane sequential fold; lanes are
+//! the only axis of parallelism and per-lane determinants are
+//! independent chains.
+//!
+//! Three layers of proof here, on top of the unit tests in
+//! `linalg::simd` (raw `dot_block` outputs) and the golden-vector leg
+//! in `conformance.rs` (committed bit patterns per kernel):
+//!
+//! * random-shape full sweeps — whole term space, one chunk, wide
+//!   sibling blocks so the 8-, 4- and tail-lane kernel bodies all run;
+//! * random chunk geometries — every chunk's partial matches scalar's
+//!   for that chunk, and the fixed-order composition fold lands on the
+//!   same bits (the fleet's composition is kernel-blind);
+//! * kernel self-reporting — the runner surfaces the kernel it was
+//!   built on (what telemetry's `kernel_<name>_blocks_total` and the
+//!   serve banner attribute work to).
+//!
+//! Forcing here is in-process (`prefix_with_kernel`); the CI kernel
+//! matrix re-runs whole suites under `RADDET_KERNEL=` to cover the
+//! once-per-process env dispatch path too.
+
+use raddet::combin::{combination_count, Chunk, PascalTable};
+use raddet::coordinator::LeaseRunner;
+use raddet::linalg::KernelKind;
+use raddet::matrix::MatF64;
+use raddet::testkit::{for_all, TestRng};
+
+/// One chunk's partial under an explicitly forced kernel.
+fn partial_bits(m: usize, kernel: KernelKind, a: &MatF64, table: &PascalTable, chunk: Chunk) -> u64 {
+    let mut runner = LeaseRunner::<f64>::prefix_with_kernel(m, kernel);
+    let (v, _) = runner.run_chunk(a, table, chunk).unwrap();
+    v.to_bits()
+}
+
+/// Random shape with n pushed wide relative to m (sibling-block width
+/// is what exercises the 8/4/tail kernel bodies), clamped to a term
+/// budget so the property stays fast.
+fn random_shape(rng: &mut TestRng) -> (usize, usize) {
+    let m = 1 + rng.usize_below(6);
+    let mut n = m + rng.usize_below(21);
+    while combination_count(n as u64, m as u64).unwrap() > 60_000 {
+        n -= 1;
+    }
+    (m, n)
+}
+
+#[test]
+fn every_kernel_matches_scalar_on_random_full_sweeps() {
+    let kernels = KernelKind::available_kernels();
+    assert!(kernels.contains(&KernelKind::Scalar));
+    for_all("kernel bits == scalar bits (full sweep)", 40, |rng: &mut TestRng| {
+        let (m, n) = random_shape(rng);
+        let a = raddet::matrix::gen::uniform(rng, m, n, -2.0, 2.0);
+        let table = PascalTable::new(n as u64, m as u64).unwrap();
+        let total = combination_count(n as u64, m as u64).unwrap();
+        let chunk = Chunk { start: 0, len: total };
+        let want = partial_bits(m, KernelKind::Scalar, &a, &table, chunk);
+        for &k in &kernels {
+            let got = partial_bits(m, k, &a, &table, chunk);
+            assert_eq!(
+                got, want,
+                "m={m} n={n} kernel={k}: {got:016x} vs scalar {want:016x}"
+            );
+        }
+    });
+}
+
+#[test]
+fn every_kernel_matches_scalar_on_random_chunk_geometries() {
+    let kernels = KernelKind::available_kernels();
+    for_all("kernel bits == scalar bits (per chunk + composed)", 25, |rng: &mut TestRng| {
+        let (m, n) = random_shape(rng);
+        let a = raddet::matrix::gen::uniform(rng, m, n, -2.0, 2.0);
+        let table = PascalTable::new(n as u64, m as u64).unwrap();
+        let total = combination_count(n as u64, m as u64).unwrap();
+
+        // A random ordered partition of [0, total) into 1..=7 chunks.
+        let pieces = 1 + rng.usize_below(7.min(total as usize));
+        let mut cuts: Vec<u128> = (0..pieces - 1)
+            .map(|_| 1 + rng.usize_below(total as usize - 1) as u128)
+            .collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut plan = Vec::new();
+        let mut lo = 0u128;
+        for &hi in cuts.iter().chain(std::iter::once(&total)) {
+            if hi > lo {
+                plan.push(Chunk { start: lo, len: hi - lo });
+                lo = hi;
+            }
+        }
+
+        // Per-kernel: every chunk bit-equal to scalar's, and the
+        // fixed-order fold (what `jobs::compose_partials` does for
+        // f64) bit-equal too.
+        let fold = |k: KernelKind| -> (Vec<u64>, u64) {
+            let mut runner = LeaseRunner::<f64>::prefix_with_kernel(m, k);
+            let mut bits = Vec::new();
+            let mut sum = 0.0f64;
+            for &chunk in &plan {
+                let (v, _) = runner.run_chunk(&a, &table, chunk).unwrap();
+                bits.push(v.to_bits());
+                sum += v;
+            }
+            (bits, sum.to_bits())
+        };
+        let (want_chunks, want_sum) = fold(KernelKind::Scalar);
+        for &k in &kernels {
+            let (got_chunks, got_sum) = fold(k);
+            assert_eq!(
+                got_chunks, want_chunks,
+                "m={m} n={n} kernel={k}: some chunk diverged ({} chunks)",
+                plan.len()
+            );
+            assert_eq!(got_sum, want_sum, "m={m} n={n} kernel={k}: composed bits");
+        }
+    });
+}
+
+/// A runner re-used across leases (the worker loop's actual pattern —
+/// one `ChunkRunner` per worker thread, many chunks) must stay
+/// bit-stable: scratch reuse inside the engine cannot leak state
+/// between chunks for any kernel.
+#[test]
+fn runner_reuse_across_chunks_is_bit_stable() {
+    let m = 5;
+    let n = 16;
+    let a = raddet::matrix::gen::uniform(&mut TestRng::from_seed(99), m, n, -1.0, 1.0);
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let total = combination_count(n as u64, m as u64).unwrap();
+    let chunk = Chunk { start: total / 3, len: total / 2 };
+    for k in KernelKind::available_kernels() {
+        let mut runner = LeaseRunner::<f64>::prefix_with_kernel(m, k);
+        let (first, _) = runner.run_chunk(&a, &table, chunk).unwrap();
+        for pass in 0..5 {
+            let (again, _) = runner.run_chunk(&a, &table, chunk).unwrap();
+            assert_eq!(
+                again.to_bits(),
+                first.to_bits(),
+                "kernel={k} pass={pass}: reused runner drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn runners_report_the_kernel_they_were_built_on() {
+    for k in KernelKind::available_kernels() {
+        let runner = LeaseRunner::<f64>::prefix_with_kernel(4, k);
+        assert_eq!(runner.float_kernel(), Some(k));
+    }
+    // The default constructor runs on the process-wide dispatch choice.
+    assert_eq!(
+        LeaseRunner::<f64>::prefix(4).float_kernel(),
+        Some(KernelKind::active())
+    );
+}

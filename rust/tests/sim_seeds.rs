@@ -246,6 +246,68 @@ fn seed_sweep_disk_faults_converge_or_salvage() {
     eprintln!("disk sweep: {salvaged}/{seeds} seeds took the fsck/resume path");
 }
 
+/// Mixed-kernel fleet leg: chunk partials computed by workers running
+/// *different* dot kernels — scalar, unrolled, AVX2/NEON where the
+/// host has them — must compose to the same bits as the all-scalar
+/// assignment and as the single-process [`JobRunner`] reference. The
+/// SIMD layer changes speed, never bits, even in a heterogeneous
+/// fleet; composition stays kernel-blind.
+#[test]
+fn mixed_kernel_fleet_composes_reference_bits() {
+    use raddet::coordinator::LeaseRunner;
+    use raddet::jobs::compose_partials;
+    use raddet::linalg::KernelKind;
+    use std::collections::BTreeMap;
+
+    // Wide n relative to m so sibling blocks span the 8-, 4- and
+    // tail-lane kernel bodies.
+    let a = gen::uniform(&mut TestRng::from_seed(4242), 4, 18, -1.0, 1.0);
+    let spec = JobSpec {
+        payload: JobPayload::F64(a.clone()),
+        engine: JobEngine::Prefix,
+        chunks: CHUNKS,
+        batch: BATCH,
+    };
+    let want = reference_bits(&spec, "sim-kernel-ref");
+    let (plan, _total) = spec.plan().unwrap();
+    let (m, n) = spec.shape();
+    let table = PascalTable::new(n as u64, m as u64).unwrap();
+    let kernels = KernelKind::available_kernels();
+
+    let compose_with = |assignment: &[KernelKind]| -> u64 {
+        let mut completed = BTreeMap::new();
+        for (i, chunk) in plan.iter().enumerate() {
+            // A fresh runner per chunk: each lease may land on a
+            // different worker, each worker on a different kernel.
+            let mut runner = LeaseRunner::<f64>::prefix_with_kernel(m, assignment[i]);
+            let (v, wm) = runner.run_chunk(&a, &table, *chunk).unwrap();
+            completed.insert(
+                i as u64,
+                ChunkRecord { value: JobValue::F64(v), terms: wm.terms, micros: 0 },
+            );
+        }
+        match compose_partials(plan.len(), &completed).unwrap().0 {
+            JobValue::F64(v) => v.to_bits(),
+            other => panic!("{other:?}"),
+        }
+    };
+
+    let all_scalar = vec![KernelKind::Scalar; plan.len()];
+    assert_eq!(compose_with(&all_scalar), want, "all-scalar fleet vs JobRunner");
+    let mut rng = TestRng::from_seed(7);
+    for trial in 0..16 {
+        let assignment: Vec<KernelKind> = plan
+            .iter()
+            .map(|_| kernels[rng.usize_below(kernels.len())])
+            .collect();
+        assert_eq!(
+            compose_with(&assignment),
+            want,
+            "trial {trial}: mixed kernels {assignment:?} diverged from reference"
+        );
+    }
+}
+
 /// Cross-scalar conformance, sequential layer: `I128Checked` and
 /// `BigInt` must agree on every matrix where `i128` does not overflow
 /// (the scalar tower's core contract — one algorithm, two ranges).

@@ -1,0 +1,562 @@
+/* kernel_bench — C transliteration of the raddet prefix-dot SIMD
+ * kernels and their bench harness, for machines with a C compiler but
+ * no Rust toolchain (the authoring container). It exists to produce
+ * *measured* numbers for the perf trajectory when `cargo bench` cannot
+ * run locally; CI's `Perf benches` step regenerates the native numbers
+ * and uploads them as the BENCH_PR10 artifact (the ground truth).
+ *
+ * What is transliterated (kept line-for-line close to
+ * rust/src/linalg/simd.rs and rust/src/coordinator/engine.rs — if you
+ * change a kernel there, change it here):
+ *
+ *   dot_scalar / dot_unrolled / dot_avx2   the three x86 dot kernels,
+ *       including the determinism rule: identical per-lane sequential
+ *       fold, mul then add, never fmadd (compiled with -ffp-contract=off
+ *       so the C compiler cannot fuse behind our back);
+ *   cofactors()                            MinorsWorkspace's packed-LU
+ *       Laplace cofactors;
+ *   full-sweep "engine" loop               prefix enumeration + gather
+ *       + cofactors + dispatched dot + alternating sign + Neumaier;
+ *   det_bareiss_i128                       the exact path's fraction-
+ *       free elimination, timed alloc-per-call vs reused scratch.
+ *
+ * Three measurements, mirroring rust/benches/bench_prefix.rs and
+ * bench_scalar.rs:
+ *   1. dot kernel in isolation (widest block of each (m,n)) — the
+ *      vectorization gate;
+ *   2. full-sweep per kernel — end-to-end speedup with the cofactor
+ *      LU (kernel-independent) included;
+ *   3. i128 Bareiss cofactor pass, alloc vs scratch.
+ *
+ * Bit-identity across kernels is asserted before any timing counts,
+ * both on random geometries and on every full sweep.
+ *
+ * Build & run:   ./run.sh     (gcc -O3 -mavx2 -ffp-contract=off …)
+ */
+
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#ifdef __AVX2__
+#include <immintrin.h>
+#endif
+
+/* ── deterministic fill (splitmix64) ─────────────────────────────── */
+
+static uint64_t rng_state;
+
+static uint64_t rng_next(void) {
+    uint64_t z = (rng_state += 0x9e3779b97f4a7c15ULL);
+    z = (z ^ (z >> 30)) * 0xbf58476d1ce4e5b9ULL;
+    z = (z ^ (z >> 27)) * 0x94d049bb133111ebULL;
+    return z ^ (z >> 31);
+}
+
+static double rng_uniform(double lo, double hi) {
+    double u = (double)(rng_next() >> 11) / 9007199254740992.0; /* [0,1) */
+    return lo + u * (hi - lo);
+}
+
+static int64_t rng_int(int64_t lo, int64_t hi) {
+    return lo + (int64_t)(rng_next() % (uint64_t)(hi - lo + 1));
+}
+
+/* ── the dot kernels (transliterated from linalg/simd.rs) ────────── */
+
+static void dot_scalar(const double *data, size_t n, size_t c0,
+                       const double *cof, size_t m, double *out, size_t w) {
+    for (size_t t = 0; t < w; t++) {
+        size_t col = c0 + t;
+        double det = 0.0;
+        for (size_t i = 0; i < m; i++)
+            det += cof[i] * data[i * n + col];
+        out[t] = det;
+    }
+}
+
+static void dot_tail(const double *data, size_t n, size_t c0,
+                     const double *cof, size_t m, double *out, size_t w,
+                     size_t t0) {
+    if (t0 < w)
+        dot_scalar(data, n, c0 + t0, cof, m, out + t0, w - t0);
+}
+
+static void dot_unrolled(const double *data, size_t n, size_t c0,
+                         const double *cof, size_t m, double *out, size_t w) {
+    size_t t = 0;
+    while (t + 4 <= w) {
+        double a0 = 0.0, a1 = 0.0, a2 = 0.0, a3 = 0.0;
+        for (size_t i = 0; i < m; i++) {
+            const double *row = data + i * n + c0 + t;
+            double c = cof[i];
+            a0 += c * row[0];
+            a1 += c * row[1];
+            a2 += c * row[2];
+            a3 += c * row[3];
+        }
+        out[t] = a0;
+        out[t + 1] = a1;
+        out[t + 2] = a2;
+        out[t + 3] = a3;
+        t += 4;
+    }
+    dot_tail(data, n, c0, cof, m, out, w, t);
+}
+
+#ifdef __AVX2__
+static void dot_avx2(const double *data, size_t n, size_t c0,
+                     const double *cof, size_t m, double *out, size_t w) {
+    const double *base = data + c0;
+    size_t t = 0;
+    while (t + 8 <= w) {
+        __m256d acc0 = _mm256_setzero_pd();
+        __m256d acc1 = _mm256_setzero_pd();
+        for (size_t i = 0; i < m; i++) {
+            __m256d cv = _mm256_set1_pd(cof[i]);
+            const double *p = base + i * n + t;
+            /* mul then add, never fmadd — the determinism rule. */
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(cv, _mm256_loadu_pd(p)));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(cv, _mm256_loadu_pd(p + 4)));
+        }
+        _mm256_storeu_pd(out + t, acc0);
+        _mm256_storeu_pd(out + t + 4, acc1);
+        t += 8;
+    }
+    if (t + 4 <= w) {
+        __m256d acc = _mm256_setzero_pd();
+        for (size_t i = 0; i < m; i++) {
+            __m256d cv = _mm256_set1_pd(cof[i]);
+            acc = _mm256_add_pd(acc,
+                                _mm256_mul_pd(cv, _mm256_loadu_pd(base + i * n + t)));
+        }
+        _mm256_storeu_pd(out + t, acc);
+        t += 4;
+    }
+    dot_tail(data, n, c0, cof, m, out, w, t);
+}
+#endif
+
+typedef void (*dot_fn)(const double *, size_t, size_t, const double *, size_t,
+                       double *, size_t);
+
+static const char *KERNEL_NAMES[] = {"scalar", "unrolled",
+#ifdef __AVX2__
+                                     "avx2"
+#endif
+};
+static const dot_fn KERNELS[] = {dot_scalar, dot_unrolled,
+#ifdef __AVX2__
+                                 dot_avx2
+#endif
+};
+static const size_t NKERNELS = sizeof(KERNELS) / sizeof(KERNELS[0]);
+
+/* ── Neumaier sum (linalg/accum.rs) ──────────────────────────────── */
+
+typedef struct {
+    double sum, comp;
+} neumaier;
+
+static void neu_add(neumaier *s, double x) {
+    double t = s->sum + x;
+    if (fabs(s->sum) >= fabs(x))
+        s->comp += (s->sum - t) + x;
+    else
+        s->comp += (x - t) + s->sum;
+    s->sum = t;
+}
+
+static double neu_value(const neumaier *s) { return s->sum + s->comp; }
+
+/* ── MinorsWorkspace::cofactors (linalg/minors.rs) ───────────────── */
+
+/* Laplace cofactors of the row-major m×(m−1) prefix; returns 0 on a
+ * rank-deficient prefix (caller would fall back — the random data here
+ * never triggers it, and the harness asserts so). */
+static int cofactors(const double *prefix, size_t m, double *lu, double *y,
+                     size_t *perm, double *out) {
+    if (m == 1) {
+        out[0] = 1.0;
+        return 1;
+    }
+    size_t w = m - 1;
+    memcpy(lu, prefix, m * w * sizeof(double));
+    for (size_t j = 0; j < m; j++)
+        perm[j] = j;
+    double maxabs = 0.0;
+    for (size_t i = 0; i < m * w; i++) {
+        double a = fabs(prefix[i]);
+        if (a > maxabs) maxabs = a;
+    }
+    double tiny = maxabs * (double)m * 2.220446049250313e-16 * 16.0;
+
+    double sign = 1.0, prod = 1.0;
+    for (size_t k = 0; k < w; k++) {
+        size_t p = k;
+        double best = fabs(lu[k * w + k]);
+        for (size_t r = k + 1; r < m; r++) {
+            double mag = fabs(lu[r * w + k]);
+            if (mag > best) { best = mag; p = r; }
+        }
+        if (best <= tiny) return 0;
+        if (p != k) {
+            for (size_t c = 0; c < w; c++) {
+                double tmp = lu[k * w + c];
+                lu[k * w + c] = lu[p * w + c];
+                lu[p * w + c] = tmp;
+            }
+            size_t tp = perm[k];
+            perm[k] = perm[p];
+            perm[p] = tp;
+            sign = -sign;
+        }
+        double pivot = lu[k * w + k];
+        prod *= pivot;
+        double inv = 1.0 / pivot;
+        for (size_t r = k + 1; r < m; r++) {
+            double f = lu[r * w + k] * inv;
+            lu[r * w + k] = f;
+            if (f != 0.0)
+                for (size_t c = k + 1; c < w; c++)
+                    lu[r * w + c] -= f * lu[k * w + c];
+        }
+    }
+    y[m - 1] = 1.0;
+    for (size_t r = m - 1; r-- > 0;) {
+        double s = 0.0;
+        for (size_t q = r + 1; q < m; q++)
+            s += y[q] * lu[q * w + r];
+        y[r] = -s;
+    }
+    double scale = sign * prod;
+    for (size_t j = 0; j < m; j++)
+        out[perm[j]] = scale * y[j];
+    return 1;
+}
+
+/* ── timing ──────────────────────────────────────────────────────── */
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+static int cmp_double(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+#define SAMPLES 31
+
+/* median wall time of fn() over SAMPLES runs (3 warmups) */
+#define MEDIAN_OF(out_med, body)                                              \
+    do {                                                                      \
+        double samples_[SAMPLES];                                             \
+        for (int s_ = -3; s_ < SAMPLES; s_++) {                               \
+            double t0_ = now_s();                                             \
+            body;                                                             \
+            double dt_ = now_s() - t0_;                                       \
+            if (s_ >= 0) samples_[s_] = dt_;                                  \
+        }                                                                     \
+        qsort(samples_, SAMPLES, sizeof(double), cmp_double);                 \
+        (out_med) = samples_[SAMPLES / 2];                                    \
+    } while (0)
+
+static volatile double sink; /* defeats dead-code elimination */
+
+/* ── 1. bit-identity sweep ───────────────────────────────────────── */
+
+static void check_bit_identity(void) {
+    rng_state = 0x5EED;
+    double data[12 * 64], cof[12], ref[40], got[40];
+    for (int trial = 0; trial < 5000; trial++) {
+        size_t m = 1 + rng_next() % 10;
+        size_t w = 1 + rng_next() % 24;
+        size_t n = w + rng_next() % 24;
+        size_t c0 = rng_next() % (n - w + 1);
+        for (size_t i = 0; i < m * n; i++) data[i] = rng_uniform(-2.0, 2.0);
+        for (size_t i = 0; i < m; i++) cof[i] = rng_uniform(-2.0, 2.0);
+        dot_scalar(data, n, c0, cof, m, ref, w);
+        for (size_t k = 1; k < NKERNELS; k++) {
+            KERNELS[k](data, n, c0, cof, m, got, w);
+            if (memcmp(ref, got, w * sizeof(double)) != 0) {
+                fprintf(stderr, "BIT MISMATCH kernel=%s m=%zu w=%zu n=%zu c0=%zu\n",
+                        KERNEL_NAMES[k], m, w, n, c0);
+                exit(1);
+            }
+        }
+    }
+    fprintf(stderr, "bit-identity: 5000 random geometries OK (%zu kernels)\n",
+            NKERNELS);
+}
+
+/* ── 2. dot kernel in isolation ──────────────────────────────────── */
+
+#define DOT_REPS 4096
+
+static void bench_dot_isolated(void) {
+    printf("## dot kernel in isolation (%d x widest block per sample)\n", DOT_REPS);
+    printf("%-3s %-3s %-6s %-9s %12s %10s %10s\n", "m", "n", "width", "kernel",
+           "per block", "Mterms/s", "vs scalar");
+    static const size_t MS[] = {4, 6, 8, 10};
+    for (size_t mi = 0; mi < 4; mi++) {
+        size_t m = MS[mi];
+        size_t ns[2] = {m + 12, m + 20};
+        for (int nj = 0; nj < 2; nj++) {
+            size_t n = ns[nj], w = n - m + 1, c0 = m - 1;
+            double *data = malloc(m * n * sizeof(double));
+            double cof[16], dets[40];
+            rng_state = m * 37 + n;
+            for (size_t i = 0; i < m * n; i++) data[i] = rng_uniform(-1.0, 1.0);
+            for (size_t i = 0; i < m; i++) cof[i] = sin(0.3 + 0.37 * (double)i);
+            double scalar_med = 0.0;
+            for (size_t k = 0; k < NKERNELS; k++) {
+                double med;
+                MEDIAN_OF(med, {
+                    for (int r = 0; r < DOT_REPS; r++)
+                        KERNELS[k](data, n, c0, cof, m, dets, w);
+                    sink = dets[0];
+                });
+                if (k == 0) scalar_med = med;
+                double per_block = med / DOT_REPS;
+                printf("%-3zu %-3zu %-6zu %-9s %10.1f ns %10.1f %9.2fx\n", m, n, w,
+                       KERNEL_NAMES[k], per_block * 1e9,
+                       (double)w / per_block / 1e6, scalar_med / med);
+                printf("JSON {\"bench\":\"prefix_kernels\",\"m\":%zu,\"n\":%zu,"
+                       "\"width\":%zu,\"kernel\":\"%s\",\"per_block_ns\":%.1f,"
+                       "\"mterms_per_s\":%.1f,\"speedup_vs_scalar\":%.2f}\n",
+                       m, n, w, KERNEL_NAMES[k], per_block * 1e9,
+                       (double)w / per_block / 1e6, scalar_med / med);
+            }
+            free(data);
+        }
+    }
+}
+
+/* ── 3. full-sweep "engine" per kernel ───────────────────────────── */
+
+/* One full C(n,m) sweep with the prefix engine's structure: enumerate
+ * (m−1)-column prefixes (1-based, strictly increasing), per block
+ * gather the prefix, LU its cofactors, dot-dispatch the sibling lanes,
+ * alternate the Radić sign, Neumaier-accumulate. Returns the det. */
+static double full_sweep(const double *a, size_t m, size_t n, dot_fn kernel,
+                         uint64_t *terms_out) {
+    double prefix_buf[16 * 15], lu[16 * 15], yv[16], cof[16], dets[64];
+    size_t perm[16];
+    uint32_t c[16]; /* 1-based prefix columns */
+    neumaier acc = {0.0, 0.0};
+    uint64_t terms = 0;
+    uint64_t r = m * (m + 1) / 2;
+
+    if (m == 1) {
+        cof[0] = 1.0;
+        kernel(a, n, 0, cof, 1, dets, n);
+        double sign = (r + 1) % 2 == 0 ? 1.0 : -1.0;
+        for (size_t t = 0; t < n; t++, sign = -sign)
+            neu_add(&acc, sign * dets[t]);
+        *terms_out = n;
+        return neu_value(&acc);
+    }
+
+    for (size_t i = 0; i < m - 1; i++) c[i] = (uint32_t)(i + 1);
+    for (;;) {
+        uint32_t last_lo = c[m - 2] + 1;
+        if (last_lo <= n) {
+            size_t w = n - last_lo + 1;
+            /* gather m×(m−1) prefix */
+            for (size_t i = 0; i < m; i++)
+                for (size_t j = 0; j < m - 1; j++)
+                    prefix_buf[i * (m - 1) + j] = a[i * n + (c[j] - 1)];
+            if (!cofactors(prefix_buf, m, lu, yv, perm, cof)) {
+                fprintf(stderr, "unexpected rank-deficient prefix\n");
+                exit(1);
+            }
+            kernel(a, n, last_lo - 1, cof, m, dets, w);
+            uint64_t s = last_lo;
+            for (size_t i = 0; i < m - 1; i++) s += c[i];
+            double sign = (r + s) % 2 == 0 ? 1.0 : -1.0;
+            for (size_t t = 0; t < w; t++, sign = -sign)
+                neu_add(&acc, sign * dets[t]);
+            terms += w;
+        }
+        /* next (m−1)-combination of {1..n−1} */
+        size_t i = m - 1;
+        while (i-- > 0) {
+            if (c[i] < n - 1 - (m - 2 - i)) {
+                c[i]++;
+                for (size_t j = i + 1; j < m - 1; j++) c[j] = c[j - 1] + 1;
+                break;
+            }
+            if (i == 0) goto done;
+        }
+    }
+done:
+    *terms_out = terms;
+    return neu_value(&acc);
+}
+
+static void bench_full_sweep(void) {
+    printf("\n## full prefix sweep per kernel (engine structure end to end)\n");
+    printf("%-3s %-3s %9s %-9s %12s %10s %10s\n", "m", "n", "terms", "kernel",
+           "median", "Mterms/s", "vs scalar");
+    static const size_t MS[] = {4, 6, 8, 10};
+    for (size_t mi = 0; mi < 4; mi++) {
+        size_t m = MS[mi];
+        size_t ns[2] = {m + 12, m + 20};
+        for (int nj = 0; nj < 2; nj++) {
+            size_t n = ns[nj];
+            /* term budget: skip > 4M (mirrors bench_prefix) */
+            double lt = lgamma((double)n + 1) - lgamma((double)m + 1) -
+                        lgamma((double)(n - m) + 1);
+            if (lt > log(4e6)) {
+                fprintf(stderr, "(skip m=%zu n=%zu: over term budget)\n", m, n);
+                continue;
+            }
+            double *a = malloc(m * n * sizeof(double));
+            rng_state = m * 1000 + n;
+            for (size_t i = 0; i < m * n; i++) a[i] = rng_uniform(-1.0, 1.0);
+            uint64_t terms = 0, ref_bits = 0;
+            double scalar_med = 0.0;
+            for (size_t k = 0; k < NKERNELS; k++) {
+                double det = full_sweep(a, m, n, KERNELS[k], &terms);
+                uint64_t bits;
+                memcpy(&bits, &det, 8);
+                if (k == 0)
+                    ref_bits = bits;
+                else if (bits != ref_bits) {
+                    fprintf(stderr, "FULL-SWEEP BIT MISMATCH kernel=%s m=%zu n=%zu\n",
+                            KERNEL_NAMES[k], m, n);
+                    exit(1);
+                }
+                double med;
+                MEDIAN_OF(med, {
+                    uint64_t t_;
+                    sink = full_sweep(a, m, n, KERNELS[k], &t_);
+                });
+                if (k == 0) scalar_med = med;
+                printf("%-3zu %-3zu %9llu %-9s %10.2f ms %10.2f %9.2fx\n", m, n,
+                       (unsigned long long)terms, KERNEL_NAMES[k], med * 1e3,
+                       (double)terms / med / 1e6, scalar_med / med);
+                printf("JSON {\"bench\":\"prefix_kernels_e2e\",\"m\":%zu,\"n\":%zu,"
+                       "\"terms\":%llu,\"kernel\":\"%s\",\"median_ms\":%.3f,"
+                       "\"mterms_per_s\":%.2f,\"speedup_vs_scalar\":%.2f}\n",
+                       m, n, (unsigned long long)terms, KERNEL_NAMES[k], med * 1e3,
+                       (double)terms / med / 1e6, scalar_med / med);
+            }
+            free(a);
+        }
+    }
+}
+
+/* ── 4. i128 Bareiss cofactor pass: alloc vs scratch ─────────────── */
+
+/* Fraction-free Bareiss determinant of an w×w i64 matrix in __int128,
+ * eliminating inside `elim` (caller-provided, length ≥ w²). */
+static __int128 det_bareiss_i128(const int64_t *a, size_t w, __int128 *elim) {
+    if (w == 0) return 1;
+    for (size_t i = 0; i < w * w; i++) elim[i] = a[i];
+    int sign = 1;
+    __int128 prev = 1;
+    for (size_t k = 0; k + 1 < w; k++) {
+        if (elim[k * w + k] == 0) {
+            size_t p = k + 1;
+            while (p < w && elim[p * w + k] == 0) p++;
+            if (p == w) return 0;
+            for (size_t cc = 0; cc < w; cc++) {
+                __int128 tmp = elim[k * w + cc];
+                elim[k * w + cc] = elim[p * w + cc];
+                elim[p * w + cc] = tmp;
+            }
+            sign = -sign;
+        }
+        for (size_t i = k + 1; i < w; i++)
+            for (size_t j = k + 1; j < w; j++)
+                elim[i * w + j] =
+                    (elim[i * w + j] * elim[k * w + k] - elim[i * w + k] * elim[k * w + j]) / prev;
+        prev = elim[k * w + k];
+    }
+    return sign > 0 ? elim[(w - 1) * w + (w - 1)] : -elim[(w - 1) * w + (w - 1)];
+}
+
+/* One cofactor pass: m minors of the m×(m−1) integer prefix. The alloc
+ * arm mallocs the elimination buffer per pass (what cofactors_generic
+ * did before the scratch hoist); the scratch arm reuses one buffer
+ * (cofactors_into). minor_buf is shared by both arms, as in Rust. */
+static __int128 cofactor_pass(const int64_t *prefix, size_t m, int64_t *minor_buf,
+                              __int128 *elim_or_null) {
+    size_t w = m - 1;
+    __int128 *elim = elim_or_null ? elim_or_null
+                                  : malloc((w ? w * w : 1) * sizeof(__int128));
+    __int128 check = 0;
+    for (size_t skip = 0; skip < m; skip++) {
+        size_t r = 0;
+        for (size_t i = 0; i < m; i++) {
+            if (i == skip) continue;
+            memcpy(minor_buf + r * w, prefix + i * w, w * sizeof(int64_t));
+            r++;
+        }
+        __int128 d = det_bareiss_i128(minor_buf, w, elim);
+        check += (skip % 2 == 0) ? d : -d;
+    }
+    if (!elim_or_null) free(elim);
+    return check;
+}
+
+static void bench_scratch(void) {
+    printf("\n## i128 Bareiss cofactor pass: alloc per call vs reused scratch\n");
+    printf("%-3s %12s %12s %10s\n", "m", "alloc", "scratch", "speedup");
+    static const size_t MS[] = {4, 5, 6};
+    for (size_t mi = 0; mi < 3; mi++) {
+        size_t m = MS[mi];
+        size_t w = m - 1;
+        int64_t prefix[6 * 5], minor_buf[5 * 5];
+        rng_state = m * 7 + 1;
+        for (size_t i = 0; i < m * w; i++) prefix[i] = rng_int(-60, 60);
+        __int128 *scratch = malloc(w * w * sizeof(__int128));
+        /* same arithmetic both arms — sanity first */
+        if (cofactor_pass(prefix, m, minor_buf, NULL) !=
+            cofactor_pass(prefix, m, minor_buf, scratch)) {
+            fprintf(stderr, "scratch arm changed the cofactor sum\n");
+            exit(1);
+        }
+        enum { REPS = 20000 };
+        double med_alloc, med_scratch;
+        MEDIAN_OF(med_alloc, {
+            __int128 acc = 0;
+            for (int r = 0; r < REPS; r++)
+                acc += cofactor_pass(prefix, m, minor_buf, NULL);
+            sink = (double)(int64_t)acc;
+        });
+        MEDIAN_OF(med_scratch, {
+            __int128 acc = 0;
+            for (int r = 0; r < REPS; r++)
+                acc += cofactor_pass(prefix, m, minor_buf, scratch);
+            sink = (double)(int64_t)acc;
+        });
+        printf("%-3zu %10.1f ns %10.1f ns %9.2fx\n", m,
+               med_alloc / REPS * 1e9, med_scratch / REPS * 1e9,
+               med_alloc / med_scratch);
+        printf("JSON {\"bench\":\"scalar_scratch\",\"m\":%zu,\"scalar\":\"i128\","
+               "\"alloc_ns\":%.1f,\"scratch_ns\":%.1f,\"speedup\":%.2f}\n",
+               m, med_alloc / REPS * 1e9, med_scratch / REPS * 1e9,
+               med_alloc / med_scratch);
+        free(scratch);
+    }
+}
+
+int main(void) {
+    fprintf(stderr, "kernels: ");
+    for (size_t k = 0; k < NKERNELS; k++)
+        fprintf(stderr, "%s ", KERNEL_NAMES[k]);
+    fprintf(stderr, "\n");
+    check_bit_identity();
+    bench_dot_isolated();
+    bench_full_sweep();
+    bench_scratch();
+    return 0;
+}

@@ -1,0 +1,15 @@
+#!/bin/sh
+# Build and run the kernel-bench C harness.
+#
+# -ffp-contract=off is load-bearing: the determinism rule of the Rust
+# kernels (mul then add, never fused) must hold here too, or the C
+# numbers would time different arithmetic than the Rust kernels run.
+# -mavx2/-mfma are only requested when the host has them.
+set -eu
+cd "$(dirname "$0")"
+SIMD=""
+if grep -qw avx2 /proc/cpuinfo 2>/dev/null; then
+    SIMD="-mavx2 -mfma"
+fi
+gcc -O3 -ffp-contract=off $SIMD -o kernel_bench kernel_bench.c -lm
+exec ./kernel_bench "$@"
